@@ -1,0 +1,94 @@
+//! Energy study (paper §VI-B, Figs. 8–9): frequency sweeps through the
+//! jpwr-like launcher, injected via the CI platform configuration —
+//! *without modifying the benchmarks*.
+//!
+//! Two applications with different memory-boundedness are swept over the
+//! GPU frequency range on simulated JEDI; per-GPU power traces are
+//! sampled, measurement scopes placed, energy integrated, and sweet
+//! spots identified.
+//!
+//! Run with: `cargo run --release --example energy_study`
+
+use exacb::analysis::{EnergySweep, ReportSet};
+use exacb::ci::Trigger;
+use exacb::coordinator::{BenchmarkRepo, World};
+use exacb::util::table::Table;
+
+fn repo_for(name: &str, membound: f64) -> BenchmarkRepo {
+    let jube = format!(
+        "name: {name}\nparametersets:\n  - name: run\n    parameters:\n      - name: nodes\n        value: 1\nsteps:\n  - name: execute\n    use: [run]\n    remote: true\n    do:\n      - simapp --name {name} --flops 250000 --membound {membound} --comm-mb 16 --steps 40\n"
+    );
+    let ci = format!(
+        r#"
+include:
+  - component: jureap/energy@v3
+    inputs:
+      prefix: "jedi.{name}"
+      machine: "jedi"
+      queue: "all"
+      project: "cjsc"
+      budget: "zam"
+      jube_file: "benchmark/jube/app.yml"
+      frequencies: []
+"#
+    );
+    BenchmarkRepo::new(name)
+        .with_file("benchmark/jube/app.yml", &jube)
+        .with_file(".gitlab-ci.yml", &ci)
+}
+
+fn main() {
+    let mut world = World::new(99);
+    world.add_repo(repo_for("compute-bound-app", 0.15));
+    world.add_repo(repo_for("memory-bound-app", 0.85));
+
+    let mut sweeps = Vec::new();
+    for name in ["compute-bound-app", "memory-bound-app"] {
+        let pid = world.run_pipeline(name, Trigger::Manual).unwrap();
+        let pipeline = world.pipeline(pid).unwrap();
+        let analysis = pipeline
+            .jobs
+            .iter()
+            .find(|j| j.name.ends_with("energy-analysis"))
+            .expect("energy analysis job");
+        println!("pipeline {pid} [{name}]:");
+        for l in &analysis.log {
+            println!("  {l}");
+        }
+        let repo = world.repo(name).unwrap();
+        let (set, _) = ReportSet::load(&repo.store, "exacb.data", "");
+        sweeps.push(EnergySweep::from_set(&set, name).expect("sweep"));
+    }
+
+    println!("\nenergy vs frequency (Fig. 9 series):");
+    let mut t = Table::new(&["freq_mhz", "compute-bound [J]", "memory-bound [J]"]);
+    for (i, &(f, e)) in sweeps[0].points.iter().enumerate() {
+        t.push_row(vec![
+            format!("{f:.0}"),
+            format!("{e:.0}"),
+            format!("{:.0}", sweeps[1].points[i].1),
+        ]);
+    }
+    print!("{}", t.render());
+
+    for s in &sweeps {
+        println!(
+            "{}: sweet spot {:.0} MHz, {:.1}% energy saving vs nominal",
+            s.app,
+            s.sweet_spot_mhz,
+            s.saving_vs_nominal * 100.0
+        );
+    }
+    assert!(
+        sweeps[1].sweet_spot_mhz < sweeps[0].sweet_spot_mhz,
+        "memory-bound app throttles lower"
+    );
+    // write the Fig. 9 plot
+    std::fs::create_dir_all("out").ok();
+    std::fs::write(
+        "out/energy_study.svg",
+        exacb::analysis::energy_sweep_plot(&sweeps).render_svg(),
+    )
+    .ok();
+    println!("\nplot written to out/energy_study.svg\nenergy study OK");
+}

@@ -1,0 +1,18 @@
+//! Regenerate every paper table and figure to `out/` (CSV + SVG) and
+//! print the series. Thin wrapper over [`exacb::experiments`]; see
+//! EXPERIMENTS.md for the paper-vs-measured comparison.
+//!
+//! Run with: `cargo run --release --example figures [-- days]`
+
+fn main() {
+    let days = std::env::args()
+        .nth(1)
+        .and_then(|a| a.parse().ok())
+        .unwrap_or(90);
+    let out = std::path::Path::new("out");
+    for result in exacb::experiments::run_all(days, 2026) {
+        result.print();
+        result.save(out).expect("write artifacts");
+    }
+    println!("\nall figures regenerated under out/");
+}

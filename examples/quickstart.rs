@@ -1,0 +1,67 @@
+//! Quickstart: the paper's §II walk-through.
+//!
+//! Onboards the `logmap` benchmark repository (JUBE-style script + CI
+//! config), runs one CI pipeline on the simulated JEDI system — setup →
+//! execute (through the batch scheduler, with real PJRT kernel execution
+//! when artifacts are built) → record — and prints the Table-I
+//! `results.csv` plus the protocol report.
+//!
+//! Run with: `cargo run --example quickstart`
+
+use exacb::ci::Trigger;
+use exacb::coordinator::{BenchmarkRepo, World};
+use exacb::util::table::Table;
+
+fn main() {
+    let mut world = World::new(42);
+    if world.try_attach_engine() {
+        println!("PJRT engine attached: kernels execute for real\n");
+    } else {
+        println!("artifacts not built (`make artifacts`): analytic models only\n");
+    }
+
+    // --- onboard the §II logmap benchmark repository -------------------
+    let repo = BenchmarkRepo::logmap_example("jedi", "all");
+    println!("repository 'logmap' files:");
+    for (path, _) in &repo.files {
+        println!("  {path}");
+    }
+    world.add_repo(repo);
+
+    // --- run the CI pipeline --------------------------------------------
+    let pid = world
+        .run_pipeline("logmap", Trigger::Manual)
+        .expect("pipeline runs");
+    let pipeline = world.pipeline(pid).unwrap();
+    println!("\npipeline {pid}: succeeded={}", pipeline.succeeded());
+    for job in &pipeline.jobs {
+        println!("  CI job {:>6} {}", job.id, job.name);
+        for line in &job.log {
+            println!("           | {line}");
+        }
+    }
+
+    // --- Table I ---------------------------------------------------------
+    let execute = pipeline.job("jedi.logmap.execute").unwrap();
+    let csv = execute.artifact("results.csv").unwrap();
+    println!("\nresults.csv (Table I contract):");
+    print!("{}", Table::from_csv(csv).unwrap().render());
+
+    // --- the protocol report on the data branch --------------------------
+    let repo = world.repo("logmap").unwrap();
+    let paths = repo.store.list("exacb.data", "jedi.logmap/");
+    println!("\nexacb.data branch contents: {paths:?}");
+    let report_path = paths.iter().find(|p| p.ends_with("report.json")).unwrap();
+    let doc = repo.store.read("exacb.data", report_path).unwrap();
+    let report = exacb::protocol::Report::parse(doc).expect("protocol-valid");
+    println!(
+        "protocol report: tool={} v{} pipeline={} system={} entries={}",
+        report.reporter.tool,
+        report.reporter.tool_version,
+        report.reporter.pipeline_id,
+        report.experiment.system,
+        report.data.len()
+    );
+    assert!(pipeline.succeeded());
+    println!("\nquickstart OK");
+}

@@ -1,0 +1,138 @@
+"""AOT compile path: lower L2 models (with embedded L1 Pallas kernels) to
+HLO *text* artifacts for the Rust PJRT runtime.
+
+Interchange format is HLO text, NOT ``lowered.compile().serialize()`` and
+NOT a serialized HloModuleProto: jax >= 0.5 emits protos with 64-bit
+instruction ids which xla_extension 0.5.1 (the version the published
+``xla`` crate binds) rejects via ``proto.id() <= INT_MAX``. The HLO text
+parser reassigns ids, so text round-trips cleanly — see
+/opt/xla-example/README.md and gen_hlo.py there.
+
+Outputs (under --out-dir, default ../artifacts):
+  logmap_i{I}_n{N}.hlo.txt    logistic-map variants (intensity x workload)
+  stream_n{N}.hlo.txt         BabelStream checksum model
+  manifest.json               machine-readable index consumed by
+                              rust/src/runtime/manifest.rs
+
+Run via ``make artifacts`` (no-op when inputs are unchanged). Python never
+runs on the Rust request path.
+"""
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+from compile.kernels import logmap as lk
+from compile.kernels import stream as sk
+
+# Variant grid. Intensity maps the paper's continuous --intensity knob to
+# static loop trip counts (fori_loop bounds must be static to lower).
+LOGMAP_ITERS = [128, 512, 2048]
+LOGMAP_SIZES = [16384, 65536]
+STREAM_SIZES = [262144]
+MANIFEST_VERSION = 1
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_logmap(n: int, iters: int) -> str:
+    spec = jax.ShapeDtypeStruct((n,), jnp.float32)
+    fn = functools.partial(model.logmap_model, iters=iters)
+    return to_hlo_text(jax.jit(fn).lower(spec, spec))
+
+
+def lower_stream(n: int) -> str:
+    spec = jax.ShapeDtypeStruct((n,), jnp.float32)
+    return to_hlo_text(jax.jit(model.stream_model).lower(spec))
+
+
+def logmap_entry(n: int, iters: int, fname: str) -> dict:
+    return {
+        "name": f"logmap_i{iters}_n{n}",
+        "file": fname,
+        "kind": "logmap",
+        "params": {"n": n, "iters": iters, "block": lk.DEFAULT_BLOCK},
+        "inputs": [
+            {"name": "x", "shape": [n], "dtype": "f32"},
+            {"name": "r", "shape": [n], "dtype": "f32"},
+        ],
+        "outputs": [
+            {"name": "out", "shape": [n], "dtype": "f32"},
+            {"name": "summary", "shape": [4], "dtype": "f32"},
+        ],
+        "flops": lk.logmap_flops(n, iters),
+        "bytes": lk.logmap_bytes(n),
+    }
+
+
+def stream_entry(n: int, fname: str) -> dict:
+    return {
+        "name": f"stream_n{n}",
+        "file": fname,
+        "kind": "stream",
+        "params": {"n": n, "scalar": 0.4, "block": sk.DEFAULT_BLOCK},
+        "inputs": [{"name": "a", "shape": [n], "dtype": "f32"}],
+        "outputs": [{"name": "checksums", "shape": [5], "dtype": "f32"}],
+        # Total traffic for the 5-kernel sequence (BabelStream accounting).
+        "bytes": sum(sk.stream_bytes(n, k)
+                     for k in ("copy", "mul", "add", "triad", "dot")),
+        "flops": 4 * n,  # mul + add + triad(2) per element, dot counted in bytes
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default=os.path.join("..", "artifacts"))
+    # Back-compat with the original Makefile single-file interface.
+    ap.add_argument("--out", default=None, help=argparse.SUPPRESS)
+    args = ap.parse_args()
+    out_dir = os.path.dirname(args.out) if args.out else args.out_dir
+    os.makedirs(out_dir, exist_ok=True)
+
+    entries = []
+    for n in LOGMAP_SIZES:
+        for iters in LOGMAP_ITERS:
+            fname = f"logmap_i{iters}_n{n}.hlo.txt"
+            text = lower_logmap(n, iters)
+            with open(os.path.join(out_dir, fname), "w") as f:
+                f.write(text)
+            entries.append(logmap_entry(n, iters, fname))
+            print(f"wrote {fname} ({len(text)} chars)")
+
+    for n in STREAM_SIZES:
+        fname = f"stream_n{n}.hlo.txt"
+        text = lower_stream(n)
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        entries.append(stream_entry(n, fname))
+        print(f"wrote {fname} ({len(text)} chars)")
+
+    manifest = {"version": MANIFEST_VERSION, "artifacts": entries}
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote manifest.json ({len(entries)} artifacts)")
+
+    if args.out:
+        # Legacy sentinel target: symlink the first logmap variant.
+        first = os.path.join(out_dir, entries[0]["file"])
+        if os.path.abspath(first) != os.path.abspath(args.out):
+            if os.path.lexists(args.out):
+                os.remove(args.out)
+            os.symlink(os.path.basename(first), args.out)
+
+
+if __name__ == "__main__":
+    main()

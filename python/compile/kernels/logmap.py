@@ -1,0 +1,79 @@
+"""L1 Pallas kernel: the logistic-map benchmark kernel (paper §II-A).
+
+The paper's running example application ``logmap`` computes the logistic
+map x_{n+1} = r * x_n * (1 - x_n) over a vector of inputs, with
+
+* ``--workload``  -> vector length N (bytes streamed through HBM), and
+* ``--intensity`` -> iterations per element (arithmetic per byte).
+
+GPU original: one thread per element, an arithmetic-heavy inner loop.
+TPU/Pallas adaptation (DESIGN.md §Hardware-Adaptation): a 1-D grid over
+VMEM-resident blocks; each block is loaded HBM->VMEM once via BlockSpec,
+iterated ``iters`` times entirely in VMEM/registers, and written back
+once. Intensity therefore scales FLOPs without scaling memory traffic --
+the same roofline knob as the CUDA version, expressed as a block schedule
+instead of a thread grid.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret mode lowers the kernel to plain HLO so the same
+artifact runs on the Rust runtime.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default block: 16384 f32 = 64 KiB in, 64 KiB out — comfortably inside a
+# TPU core's ~16 MiB VMEM even with double-buffering (DESIGN.md §Perf).
+DEFAULT_BLOCK = 16384
+
+
+def _logmap_block_kernel(x_ref, r_ref, o_ref, *, iters: int):
+    """One grid step: iterate the logistic map ``iters`` times in VMEM."""
+    x = x_ref[...]
+    r = r_ref[...]
+
+    def body(_, x):
+        # 2 FLOPs (mul, fused mul-sub) per element per iteration.
+        return r * x * (1.0 - x)
+
+    o_ref[...] = jax.lax.fori_loop(0, iters, body, x)
+
+
+def logmap(x, r, *, iters: int, block: int = DEFAULT_BLOCK):
+    """Apply ``iters`` logistic-map steps elementwise.
+
+    Args:
+      x: f32[N] initial values in (0, 1). N must be a multiple of ``block``.
+      r: f32[N] per-element map parameter (classically in [0, 4]).
+      iters: static iteration count (the --intensity knob).
+      block: VMEM block length.
+
+    Returns:
+      f32[N] final values.
+    """
+    n = x.shape[0]
+    if n % block != 0:
+        raise ValueError(f"N={n} not a multiple of block={block}")
+    grid = (n // block,)
+    spec = pl.BlockSpec((block,), lambda i: (i,))
+    return pl.pallas_call(
+        partial(_logmap_block_kernel, iters=iters),
+        grid=grid,
+        in_specs=[spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((n,), x.dtype),
+        interpret=True,
+    )(x, r)
+
+
+def logmap_flops(n: int, iters: int) -> int:
+    """FLOP count for one logmap invocation (3 flops/elem/iter)."""
+    return 3 * n * iters
+
+
+def logmap_bytes(n: int, dtype_bytes: int = 4) -> int:
+    """HBM traffic: read x, read r, write out — once each regardless of iters."""
+    return 3 * n * dtype_bytes

@@ -1,0 +1,45 @@
+"""Pure-jnp oracles for the Pallas kernels (the CORE correctness signal).
+
+Every kernel in this package has a reference here written with plain
+jax.numpy only — no Pallas, no custom control flow beyond fori_loop.
+pytest (python/tests/test_kernel.py) asserts allclose between kernel and
+oracle across a hypothesis-driven sweep of shapes, seeds, and parameters.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def logmap_ref(x, r, *, iters: int):
+    """Reference logistic map: iterate x <- r*x*(1-x) ``iters`` times."""
+
+    def body(_, x):
+        return r * x * (1.0 - x)
+
+    return jax.lax.fori_loop(0, iters, body, x)
+
+
+def stream_copy_ref(a):
+    return jnp.asarray(a).copy()
+
+
+def stream_mul_ref(c, scalar: float = 0.4):
+    return scalar * c
+
+
+def stream_add_ref(a, b):
+    return a + b
+
+
+def stream_triad_ref(b, c, scalar: float = 0.4):
+    return b + scalar * c
+
+
+def stream_dot_ref(a, b):
+    return jnp.sum(a * b)
+
+
+def stream_dot_partials_ref(a, b, *, block: int):
+    """Per-block partial dot products, matching stream.stream_dot_partials."""
+    n = a.shape[0]
+    return jnp.sum((a * b).reshape(n // block, block), axis=1)

@@ -1,0 +1,105 @@
+"""L1 Pallas kernels: BabelStream-style memory-bandwidth kernels.
+
+The paper's Fig. 3 tracks the five BabelStream kernels (Copy, Mul, Add,
+Triad, Dot) on JUPITER over time. GPU BabelStream saturates HBM with
+coalesced warps; the Pallas adaptation expresses the same streaming
+schedule as a 1-D grid of VMEM blocks (DESIGN.md §Hardware-Adaptation):
+each block is one HBM->VMEM->HBM pass, so measured bytes/time is the
+attainable bandwidth on the executing backend.
+
+Dot is the interesting one: a grid-wide reduction. We emit per-block
+partial sums (the Pallas analogue of BabelStream's per-threadblock
+reduction buffer) and the L2 model finishes with a jnp.sum — mirroring
+the GPU's second reduction kernel.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK = 16384
+
+
+def _copy_kernel(a_ref, c_ref):
+    c_ref[...] = a_ref[...]
+
+
+def _mul_kernel(c_ref, b_ref, *, scalar: float):
+    b_ref[...] = scalar * c_ref[...]
+
+
+def _add_kernel(a_ref, b_ref, c_ref):
+    c_ref[...] = a_ref[...] + b_ref[...]
+
+
+def _triad_kernel(b_ref, c_ref, a_ref, *, scalar: float):
+    a_ref[...] = b_ref[...] + scalar * c_ref[...]
+
+
+def _dot_kernel(a_ref, b_ref, o_ref):
+    # Per-block partial sum; the final cross-block reduction happens in L2.
+    o_ref[0] = jnp.sum(a_ref[...] * b_ref[...])
+
+
+def _grid_and_spec(n: int, block: int):
+    if n % block != 0:
+        raise ValueError(f"N={n} not a multiple of block={block}")
+    return (n // block,), pl.BlockSpec((block,), lambda i: (i,))
+
+
+def stream_copy(a, *, block: int = DEFAULT_BLOCK):
+    """c[i] = a[i]; 2 * N * 4 bytes of HBM traffic."""
+    grid, spec = _grid_and_spec(a.shape[0], block)
+    return pl.pallas_call(
+        _copy_kernel, grid=grid, in_specs=[spec], out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct(a.shape, a.dtype), interpret=True,
+    )(a)
+
+
+def stream_mul(c, scalar: float = 0.4, *, block: int = DEFAULT_BLOCK):
+    """b[i] = scalar * c[i]."""
+    grid, spec = _grid_and_spec(c.shape[0], block)
+    return pl.pallas_call(
+        partial(_mul_kernel, scalar=scalar), grid=grid, in_specs=[spec],
+        out_specs=spec, out_shape=jax.ShapeDtypeStruct(c.shape, c.dtype),
+        interpret=True,
+    )(c)
+
+
+def stream_add(a, b, *, block: int = DEFAULT_BLOCK):
+    """c[i] = a[i] + b[i]; 3 * N * 4 bytes of traffic."""
+    grid, spec = _grid_and_spec(a.shape[0], block)
+    return pl.pallas_call(
+        _add_kernel, grid=grid, in_specs=[spec, spec], out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct(a.shape, a.dtype), interpret=True,
+    )(a, b)
+
+
+def stream_triad(b, c, scalar: float = 0.4, *, block: int = DEFAULT_BLOCK):
+    """a[i] = b[i] + scalar * c[i]; the headline STREAM kernel."""
+    grid, spec = _grid_and_spec(b.shape[0], block)
+    return pl.pallas_call(
+        partial(_triad_kernel, scalar=scalar), grid=grid,
+        in_specs=[spec, spec], out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct(b.shape, b.dtype), interpret=True,
+    )(b, c)
+
+
+def stream_dot_partials(a, b, *, block: int = DEFAULT_BLOCK):
+    """Per-block partial sums of a·b, shape f32[n/block]."""
+    n = a.shape[0]
+    grid, spec = _grid_and_spec(n, block)
+    return pl.pallas_call(
+        _dot_kernel, grid=grid, in_specs=[spec, spec],
+        out_specs=pl.BlockSpec((1,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n // block,), a.dtype),
+        interpret=True,
+    )(a, b)
+
+
+def stream_bytes(n: int, kernel: str, dtype_bytes: int = 4) -> int:
+    """HBM traffic per kernel, matching BabelStream's accounting."""
+    arrays = {"copy": 2, "mul": 2, "add": 3, "triad": 3, "dot": 2}[kernel]
+    return arrays * n * dtype_bytes

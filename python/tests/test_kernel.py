@@ -1,0 +1,146 @@
+"""pytest: Pallas kernels vs pure-jnp oracle — the CORE correctness signal.
+
+hypothesis sweeps block sizes, grid sizes, iteration counts, dtypes and
+seeds; every case asserts allclose(kernel, ref). Shapes are kept small so
+interpret-mode Pallas (CPU numpy semantics) stays fast.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import logmap as lk
+from compile.kernels import ref
+from compile.kernels import stream as sk
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def rng_arrays(seed, n, dtype, lo=0.0, hi=1.0, count=1):
+    rng = np.random.default_rng(seed)
+    out = [jnp.asarray(rng.uniform(lo, hi, n).astype(dtype))
+           for _ in range(count)]
+    return out[0] if count == 1 else out
+
+
+# ---------------------------------------------------------------- logmap
+
+@settings(**SETTINGS)
+@given(
+    nblocks=st.integers(1, 4),
+    block=st.sampled_from([64, 128, 256]),
+    iters=st.integers(1, 64),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_logmap_matches_ref(nblocks, block, iters, seed):
+    n = nblocks * block
+    x, r = rng_arrays(seed, n, np.float32, count=2)
+    r = 4.0 * r  # classic logistic-map parameter range [0, 4)
+    got = lk.logmap(x, r, iters=iters, block=block)
+    want = ref.logmap_ref(x, r, iters=iters)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("dtype,rtol", [(np.float32, 1e-5),
+                                        (jnp.bfloat16, 3e-2)])
+def test_logmap_dtypes(dtype, rtol):
+    n, block, iters = 256, 128, 8
+    rng = np.random.default_rng(7)
+    x = jnp.asarray(rng.uniform(0, 1, n), dtype=dtype)
+    r = jnp.asarray(rng.uniform(0, 4, n), dtype=dtype)
+    got = lk.logmap(x, r, iters=iters, block=block)
+    want = ref.logmap_ref(x, r, iters=iters)
+    np.testing.assert_allclose(np.asarray(got, np.float64),
+                               np.asarray(want, np.float64), rtol=rtol)
+
+
+def test_logmap_production_variant_shape():
+    """The AOT variants (n=16384, block=16384) lower and run."""
+    n, iters = 16384, 128
+    x, r = rng_arrays(3, n, np.float32, count=2)
+    out = lk.logmap(x, 3.7 * r, iters=iters)
+    assert out.shape == (n,)
+    want = ref.logmap_ref(x, 3.7 * r, iters=iters)
+    np.testing.assert_allclose(out, want, rtol=1e-5, atol=1e-6)
+
+
+def test_logmap_fixed_point():
+    """x=0 and x=1-1/r are fixed points of the map."""
+    block = 64
+    r = jnp.full((block,), 3.2, jnp.float32)
+    zero = jnp.zeros((block,), jnp.float32)
+    np.testing.assert_allclose(
+        lk.logmap(zero, r, iters=17, block=block), zero, atol=0)
+    fp = 1.0 - 1.0 / r
+    got = lk.logmap(fp, r, iters=17, block=block)
+    np.testing.assert_allclose(got, fp, rtol=1e-4)
+
+
+def test_logmap_rejects_ragged_block():
+    x = jnp.zeros((100,), jnp.float32)
+    with pytest.raises(ValueError):
+        lk.logmap(x, x, iters=1, block=64)
+
+
+def test_logmap_flops_bytes_accounting():
+    assert lk.logmap_flops(1000, 10) == 3 * 1000 * 10
+    assert lk.logmap_bytes(1000) == 3 * 1000 * 4
+
+
+# ---------------------------------------------------------------- stream
+
+@settings(**SETTINGS)
+@given(
+    nblocks=st.integers(1, 4),
+    block=st.sampled_from([64, 128]),
+    scalar=st.floats(0.1, 2.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_stream_kernels_match_ref(nblocks, block, scalar, seed):
+    n = nblocks * block
+    a, b, c = rng_arrays(seed, n, np.float32, -1.0, 1.0, count=3)
+    np.testing.assert_allclose(
+        sk.stream_copy(a, block=block), ref.stream_copy_ref(a))
+    np.testing.assert_allclose(
+        sk.stream_mul(c, scalar, block=block),
+        ref.stream_mul_ref(c, scalar), rtol=1e-6)
+    np.testing.assert_allclose(
+        sk.stream_add(a, b, block=block), ref.stream_add_ref(a, b),
+        rtol=1e-6)
+    # triad may fuse b + scalar*c into an FMA in one impl but not the other
+    np.testing.assert_allclose(
+        sk.stream_triad(b, c, scalar, block=block),
+        ref.stream_triad_ref(b, c, scalar), rtol=1e-5, atol=1e-7)
+
+
+@settings(**SETTINGS)
+@given(
+    nblocks=st.integers(1, 8),
+    block=st.sampled_from([64, 256]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_stream_dot_partials_match_ref(nblocks, block, seed):
+    n = nblocks * block
+    a, b = rng_arrays(seed, n, np.float32, -1.0, 1.0, count=2)
+    got = sk.stream_dot_partials(a, b, block=block)
+    assert got.shape == (nblocks,)
+    want = ref.stream_dot_partials_ref(a, b, block=block)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(jnp.sum(got), ref.stream_dot_ref(a, b),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_stream_bytes_accounting():
+    assert sk.stream_bytes(1000, "copy") == 2 * 4000
+    assert sk.stream_bytes(1000, "add") == 3 * 4000
+    assert sk.stream_bytes(1000, "triad") == 3 * 4000
+    with pytest.raises(KeyError):
+        sk.stream_bytes(1000, "nope")
+
+
+def test_stream_copy_is_identity_not_alias():
+    a = jnp.arange(128, dtype=jnp.float32)
+    out = sk.stream_copy(a, block=64)
+    np.testing.assert_array_equal(out, a)

@@ -1,0 +1,86 @@
+"""pytest: L2 model shapes, checksum closed forms, and AOT lowering."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+SETTINGS = dict(max_examples=15, deadline=None)
+
+
+def test_logmap_model_shapes_and_summary():
+    n, block, iters = 256, 128, 16
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.uniform(0, 1, n).astype(np.float32))
+    r = jnp.full((n,), 3.5, jnp.float32)
+    out, summary = model.logmap_model(x, r, iters=iters, block=block)
+    assert out.shape == (n,) and summary.shape == (4,)
+    np.testing.assert_allclose(summary[0], jnp.mean(out), rtol=1e-6)
+    np.testing.assert_allclose(summary[1], jnp.min(out), rtol=1e-6)
+    np.testing.assert_allclose(summary[2], jnp.max(out), rtol=1e-6)
+    np.testing.assert_allclose(summary[3], jnp.sum(out), rtol=1e-5)
+    want = ref.logmap_ref(x, r, iters=iters)
+    np.testing.assert_allclose(out, want, rtol=1e-5, atol=1e-6)
+
+
+@settings(**SETTINGS)
+@given(
+    a0=st.floats(0.05, 1.0),
+    scalar=st.floats(0.1, 1.0),
+)
+def test_stream_model_matches_closed_form(a0, scalar):
+    """Constant-initialised arrays: model checksums == closed form.
+
+    This is the exact validation contract the Rust workload
+    (rust/src/workloads/stream.rs) relies on.
+    """
+    n, block = 256, 128
+    a = jnp.full((n,), a0, jnp.float32)
+    (got,) = model.stream_model(a, scalar=scalar, block=block)
+    want = model.stream_checksums_expected(n, a0, scalar)
+    np.testing.assert_allclose(got, np.asarray(want, np.float32),
+                               rtol=2e-4)
+
+
+def test_stream_model_random_inputs_vs_ref():
+    n, block, scalar = 512, 128, 0.4
+    rng = np.random.default_rng(5)
+    a = jnp.asarray(rng.uniform(-1, 1, n).astype(np.float32))
+    (got,) = model.stream_model(a, scalar=scalar, block=block)
+    c1 = ref.stream_copy_ref(a)
+    b1 = ref.stream_mul_ref(c1, scalar)
+    c2 = ref.stream_add_ref(a, b1)
+    a1 = ref.stream_triad_ref(b1, c2, scalar)
+    want = jnp.stack([jnp.sum(c1), jnp.sum(b1), jnp.sum(c2), jnp.sum(a1),
+                      ref.stream_dot_ref(a1, b1)])
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+# ------------------------------------------------------------------ AOT
+
+def test_aot_logmap_lowering_produces_hlo_text():
+    from compile import aot
+    text = aot.lower_logmap(n=16384, iters=2)
+    assert "ENTRY" in text and "HloModule" in text
+    # while loop from fori_loop must survive lowering
+    assert "while" in text
+
+
+def test_aot_stream_lowering_produces_hlo_text():
+    from compile import aot
+    text = aot.lower_stream(n=262144)
+    assert "ENTRY" in text and "HloModule" in text
+
+
+def test_manifest_entries_are_consistent():
+    from compile import aot
+    e = aot.logmap_entry(65536, 512, "f.hlo.txt")
+    assert e["flops"] == 3 * 65536 * 512
+    assert e["inputs"][0]["shape"] == [65536]
+    s = aot.stream_entry(262144, "s.hlo.txt")
+    assert s["outputs"][0]["shape"] == [5]
+    assert s["bytes"] == (2 + 2 + 3 + 3 + 2) * 262144 * 4

@@ -1,0 +1,10 @@
+//! Bench: regenerate Fig. 3 (BabelStream 5-kernel daily time series, 90
+//! days of scheduled pipelines on simulated JUPITER) and time it.
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    let result = exacb::experiments::fig3(90, 2026);
+    result.print();
+    result.save(std::path::Path::new("out")).ok();
+    println!("\n[bench] 90 daily pipelines + analysis in {:.2}s", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,10 @@
+//! Bench: regenerate Fig 9 energy frequency sweet spots through the full stack and time it.
+//! Prints the same rows/series the paper reports (see EXPERIMENTS.md).
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    let result = exacb::experiments::fig9(2026);
+    result.print();
+    result.save(std::path::Path::new("out")).ok();
+    println!("\n[bench] regenerated in {:.2}s", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,70 @@
+//! Perf: analysis pipeline — time-series extraction, changepoint
+//! detection, scaling computation over campaign-scale report sets.
+
+use exacb::analysis::{ReportSet, StrongScaling};
+use exacb::bench::Bench;
+use exacb::protocol::{DataEntry, Report};
+use exacb::util::json::Json;
+use exacb::util::stats::changepoints;
+use exacb::util::timeutil::SimTime;
+
+fn campaign_set(days: usize) -> ReportSet {
+    let mut reports = Vec::new();
+    for d in 0..days {
+        let mut r = Report::default();
+        r.reporter.tool = "exacb".into();
+        r.reporter.tool_version = "0.1".into();
+        r.reporter.system = "jupiter".into();
+        r.reporter.pipeline_id = 221_600 + d as u64;
+        r.reporter.timestamp = SimTime::from_days(d as i64).iso8601();
+        r.experiment.system = "jupiter".into();
+        r.experiment.timestamp = r.reporter.timestamp.clone();
+        for n in [1u64, 2, 4, 8, 16, 32] {
+            r.data.push(DataEntry {
+                success: true,
+                runtime: 100.0 / n as f64 + (d % 5) as f64 * 0.01,
+                nodes: n,
+                metrics: Json::obj()
+                    .set("bw_triad", 3_450_000.0 * if d > days / 2 { 0.8 } else { 1.0 })
+                    .set("tts", 100.0 / n as f64),
+                ..Default::default()
+            });
+        }
+        reports.push(r);
+    }
+    ReportSet::from_reports(reports)
+}
+
+fn main() {
+    let mut b = Bench::new();
+    let set = campaign_set(365);
+    println!(
+        "campaign set: {} reports, {} entries",
+        set.len(),
+        set.len() * 6
+    );
+    b.throughput_case("time-series extraction (365d)", 365.0, "reports", || {
+        set.time_series("bw_triad").len()
+    });
+    let series: Vec<f64> = set.time_series("bw_triad").iter().map(|(_, v)| *v).collect();
+    b.case("changepoint detection (365 pts)", || {
+        changepoints(&series, 8.0).len()
+    });
+    b.case("strong-scaling analysis", || {
+        StrongScaling::from_set(&set, "jupiter", "runtime").unwrap()
+    });
+    b.case("filter by time span", || {
+        set.filter_time_span(
+            SimTime::parse("2026-03-01"),
+            SimTime::parse("2026-06-01"),
+        )
+        .len()
+    });
+    let analysis = exacb::analysis::analyse(&set, "bw_triad", 8.0);
+    b.case("render timeseries SVG", || {
+        exacb::analysis::timeseries::plot("t", "y", std::slice::from_ref(&analysis), &[])
+            .render_svg()
+            .len()
+    });
+    b.report("perf_analysis");
+}

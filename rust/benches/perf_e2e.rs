@@ -1,0 +1,77 @@
+//! Perf: end-to-end pipeline latency and coordinator overhead
+//! (DESIGN.md §8 target: coordinator overhead < 5% of pipeline wall).
+//!
+//! Measures (a) a full single-benchmark pipeline, (b) the same with the
+//! workload model replaced by a no-op-cost app, isolating framework
+//! overhead, and (c) campaign throughput in pipelines/s.
+
+use exacb::bench::Bench;
+use exacb::ci::Trigger;
+use exacb::coordinator::{BenchmarkRepo, World};
+
+fn repo(cmd: &str) -> BenchmarkRepo {
+    let jube = format!(
+        "name: app\nsteps:\n  - name: execute\n    remote: true\n    do:\n      - {cmd}\n"
+    );
+    let ci = r#"
+include:
+  - component: execution@v3
+    inputs:
+      prefix: "jedi.app"
+      machine: "jedi"
+      queue: "all"
+      project: "cjsc"
+      budget: "zam"
+      jube_file: "b.yml"
+"#;
+    BenchmarkRepo::new("app")
+        .with_file("b.yml", &jube)
+        .with_file(".gitlab-ci.yml", ci)
+}
+
+fn run_once(cmd: &str, seed: u64) -> std::time::Duration {
+    let mut world = World::new(seed);
+    world.add_repo(repo(cmd));
+    let t0 = std::time::Instant::now();
+    world.run_pipeline("app", Trigger::Manual).unwrap();
+    t0.elapsed()
+}
+
+fn main() {
+    let mut b = Bench::new();
+    let mut seed = 0u64;
+    b.case("pipeline: simapp workload", || {
+        seed += 1;
+        run_once("simapp --name x --flops 100000 --steps 100", seed)
+    });
+    b.case("pipeline: graph500 scale 12 (real BFS)", || {
+        seed += 1;
+        run_once("graph500 --scale 12 --nbfs 2", seed)
+    });
+    b.case("pipeline: trivial app (framework floor)", || {
+        seed += 1;
+        run_once("simapp --name x --flops 1 --steps 1", seed)
+    });
+    // campaign throughput (world reused, store grows)
+    let mut world = World::new(99);
+    world.add_repo(repo("simapp --name x --flops 100000 --steps 100"));
+    let mut day = 0i64;
+    b.throughput_case("scheduled pipelines (1/day)", 1.0, "pipelines", || {
+        day += 1;
+        world.advance_to(exacb::util::timeutil::SimTime::from_days(day));
+        world.run_pipeline("app", Trigger::Scheduled).unwrap()
+    });
+    b.report("perf_e2e");
+
+    let full = b.results()[0].mean.as_secs_f64();
+    let floor = b.results()[2].mean.as_secs_f64();
+    println!(
+        "\nframework floor = {:.3} ms; full pipeline = {:.3} ms; overhead ratio = {:.1}%",
+        floor * 1e3,
+        full * 1e3,
+        100.0 * floor / full
+    );
+    println!(
+        "(the floor includes YAML parse + component validation + scheduler + store commit)"
+    );
+}

@@ -1,0 +1,65 @@
+//! Perf: harness front end — YAML spec parsing, parameter-space
+//! expansion, substitution, and regex analysis.
+
+use exacb::bench::Bench;
+use exacb::harness::{expand_for_step, substitute, BenchmarkSpec, ParamPoint};
+
+const SPEC: &str = r#"
+name: sweep
+parametersets:
+  - name: run
+    parameters:
+      - name: nodes
+        values: [1, 2, 4, 8, 16, 32, 64, 128]
+      - name: tasks
+        values: [1, 2, 4, 8]
+      - name: intensity
+        values: [0.5, 1.0, 2.0, 2.4, 4.0]
+      - name: impl
+        values: [cuda, hip, sycl, kokkos]
+steps:
+  - name: compile
+    do: [cmake -S . -B build]
+  - name: execute
+    depends: [compile]
+    use: [run]
+    remote: true
+    do:
+      - app --nodes $nodes --tasks $tasks --intensity $intensity --impl $impl
+analysis:
+  - name: runtime
+    file: app.out
+    regex: "time: ([0-9.eE+-]+)"
+    type: float
+"#;
+
+fn main() {
+    let mut b = Bench::new();
+    b.case("parse benchmark spec", || BenchmarkSpec::parse(SPEC).unwrap());
+    let spec = BenchmarkSpec::parse(SPEC).unwrap();
+    b.throughput_case("expand 640-point space", 640.0, "points", || {
+        expand_for_step(&spec, "execute", &[])
+    });
+    let points = expand_for_step(&spec, "execute", &[]);
+    println!("expanded {} points", points.len());
+    let point: &ParamPoint = &points[123];
+    b.case("substitute command line", || {
+        substitute(
+            "app --nodes $nodes --tasks $tasks --intensity ${intensity} --impl $impl",
+            point,
+        )
+    });
+    b.case("step order (DAG toposort)", || spec.step_order().unwrap());
+
+    // regex analysis over a realistic output file
+    let mut output = String::new();
+    for i in 0..2000 {
+        output.push_str(&format!("step {i} residual 1.2e-{}\n", i % 9));
+    }
+    output.push_str("time: 123.456\n");
+    let re = regex::Regex::new("time: ([0-9.eE+-]+)").unwrap();
+    b.throughput_case("regex analysis 2k-line file", output.len() as f64, "B", || {
+        re.captures_iter(&output).last().unwrap()[1].to_string()
+    });
+    b.report("perf_harness");
+}

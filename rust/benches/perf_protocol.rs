@@ -1,0 +1,58 @@
+//! Perf: protocol document parse/serialize throughput (DESIGN.md §8
+//! target: parse ≥ 200 MB/s) and Table-I CSV emission.
+
+use exacb::bench::Bench;
+use exacb::protocol::{results_csv, DataEntry, Report};
+use exacb::util::json::Json;
+
+fn big_report(entries: usize) -> Report {
+    let mut r = Report::default();
+    r.reporter.tool = "exacb".into();
+    r.reporter.tool_version = "0.1.0".into();
+    r.reporter.system = "jupiter".into();
+    r.reporter.timestamp = "2026-03-01T03:00:00Z".into();
+    r.experiment.system = "jupiter".into();
+    r.experiment.timestamp = r.reporter.timestamp.clone();
+    for i in 0..entries {
+        r.data.push(DataEntry {
+            success: i % 7 != 0,
+            runtime: 12.25 + i as f64,
+            nodes: 1 + (i as u64 % 64),
+            taskspernode: 4,
+            threadspertask: 18,
+            jobid: 7_700_000 + i as u64,
+            queue: "booster".into(),
+            metrics: Json::obj()
+                .set("bw_copy", 3_400_000.0 + i as f64)
+                .set("bw_triad", 3_450_000.0 + i as f64)
+                .set("gflops", 830.25)
+                .set("energy_j", 51234.5),
+        });
+    }
+    r
+}
+
+fn main() {
+    let mut b = Bench::new();
+    let small = big_report(1).to_document();
+    let large = big_report(500).to_document();
+    println!("document sizes: small={} B, large={} B", small.len(), large.len());
+
+    b.throughput_case("parse small report", small.len() as f64, "B", || {
+        Report::parse(&small).unwrap()
+    });
+    b.throughput_case("parse 500-entry report", large.len() as f64, "B", || {
+        Report::parse(&large).unwrap()
+    });
+    let r = big_report(500);
+    b.throughput_case("serialize 500-entry report", large.len() as f64, "B", || {
+        r.to_document()
+    });
+    b.case("validate+migrate v1 doc", || {
+        let doc = r#"{"version":1,"meta":{"tool":"t","system":"s","timestamp":"2026-01-01"},
+                      "runs":[{"success":"true","runtime_s":1.0,"nodes":2}]}"#;
+        Report::parse(doc).unwrap()
+    });
+    b.case("results.csv for 500 entries", || results_csv(&[&r]));
+    b.report("perf_protocol");
+}

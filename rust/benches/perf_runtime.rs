@@ -1,0 +1,70 @@
+//! Perf: PJRT hot path — artifact compile (one-time) vs execute
+//! latency, per logmap variant and the stream model. This is the L1/L2
+//! performance evidence for EXPERIMENTS.md §Perf (structure-level; on
+//! CPU the Pallas kernel runs under interpret-mode lowering).
+
+use exacb::bench::Bench;
+use exacb::runtime::{manifest::default_dir, Engine};
+
+fn main() {
+    if !default_dir().join("manifest.json").exists() {
+        println!("perf_runtime skipped: run `make artifacts` first");
+        return;
+    }
+    let mut engine = Engine::load_default().expect("engine");
+    let entries = engine.manifest.entries.clone();
+
+    // one-time compile cost per artifact
+    for e in &entries {
+        let t0 = std::time::Instant::now();
+        match e.kind.as_str() {
+            "logmap" => {
+                let n = e.n();
+                let x = vec![0.4f32; n];
+                let r = vec![3.5f32; n];
+                engine.run_logmap(&e.name, &x, &r).unwrap();
+            }
+            _ => {
+                engine.run_stream(&e.name, 0.1).unwrap();
+            }
+        }
+        println!(
+            "first-run (compile+execute) {:<24} {:>8.1} ms",
+            e.name,
+            t0.elapsed().as_secs_f64() * 1e3
+        );
+    }
+
+    // steady-state execute latency + achieved host rates
+    let mut b = Bench::new();
+    for e in &entries {
+        match e.kind.as_str() {
+            "logmap" => {
+                let n = e.n();
+                let x = vec![0.4f32; n];
+                let r = vec![3.5f32; n];
+                let name = e.name.clone();
+                b.throughput_case(
+                    &format!("execute {name}"),
+                    e.flops as f64 / 1e9,
+                    "GFLOP",
+                    || engine.run_logmap(&name, &x, &r).unwrap().2,
+                );
+            }
+            _ => {
+                let name = e.name.clone();
+                b.throughput_case(
+                    &format!("execute {name}"),
+                    e.bytes as f64 / 1e9,
+                    "GB",
+                    || engine.run_stream(&name, 0.1).unwrap().1,
+                );
+            }
+        }
+    }
+    b.report("perf_runtime");
+    println!(
+        "\ncompilations={} executions={}",
+        engine.compilations, engine.executions
+    );
+}

@@ -1,0 +1,77 @@
+//! Perf: batch-scheduler throughput (DESIGN.md §8 target: ≥ 100k
+//! jobs/min simulated) and contention handling.
+
+use exacb::bench::Bench;
+use exacb::scheduler::{AccountManager, BatchSystem, JobResult, JobSpec};
+use exacb::util::json::Json;
+
+fn submit_run(jobs: usize, nodes_each: u64, partition_nodes: u64) -> usize {
+    let mut bs = BatchSystem::new("m", 128, AccountManager::open("a", "b", 1e15));
+    bs.add_partition("p", partition_nodes);
+    for i in 0..jobs {
+        bs.submit(
+            JobSpec {
+                nodes: nodes_each,
+                account: "a".into(),
+                budget: "b".into(),
+                partition: "p".into(),
+                walltime_limit_s: 1_000_000,
+                name: format!("j{i}"),
+                ..Default::default()
+            },
+            Box::new(|_| JobResult {
+                duration_s: 300.0,
+                success: true,
+                metrics: Json::obj(),
+                files: vec![],
+            }),
+        )
+        .unwrap();
+    }
+    bs.run_until_idle();
+    bs.records().len()
+}
+
+fn main() {
+    let mut b = Bench::new();
+    b.throughput_case("1k jobs, no contention", 1000.0, "jobs", || {
+        submit_run(1000, 1, 2000)
+    });
+    b.throughput_case("1k jobs, 8-node partition (queued)", 1000.0, "jobs", || {
+        submit_run(1000, 2, 8)
+    });
+    b.throughput_case("200 jobs, heavy backfill mix", 200.0, "jobs", || {
+        let mut bs = BatchSystem::new("m", 128, AccountManager::open("a", "b", 1e15));
+        bs.add_partition("p", 64);
+        for i in 0..200usize {
+            let nodes = [1u64, 2, 4, 48][i % 4];
+            bs.submit(
+                JobSpec {
+                    nodes,
+                    account: "a".into(),
+                    budget: "b".into(),
+                    partition: "p".into(),
+                    walltime_limit_s: 1_000_000,
+                    ..Default::default()
+                },
+                Box::new(move |_| JobResult {
+                    duration_s: 60.0 * (1 + nodes) as f64,
+                    success: true,
+                    metrics: Json::obj(),
+                    files: vec![],
+                }),
+            )
+            .unwrap();
+        }
+        bs.run_until_idle();
+        bs.records().len()
+    });
+    b.report("perf_scheduler");
+    // DESIGN.md §8: >= 100k jobs/min == ~1667 jobs/s
+    let jobs_per_s = 1000.0 / b.results()[0].mean.as_secs_f64();
+    println!(
+        "\nno-contention throughput: {:.0} jobs/s (target ≥ 1667 jobs/s == 100k/min): {}",
+        jobs_per_s,
+        if jobs_per_s >= 1667.0 { "PASS" } else { "MISS" }
+    );
+}

@@ -1,0 +1,60 @@
+//! Perf: data-store append/read (DESIGN.md §8 target: O(1)-ish append
+//! per report) and prefix retrieval at campaign scale.
+
+use exacb::bench::Bench;
+use exacb::store::DataStore;
+use exacb::util::timeutil::SimTime;
+
+fn seeded_store(commits: usize) -> DataStore {
+    let mut s = DataStore::new();
+    for i in 0..commits {
+        s.commit(
+            "exacb.data",
+            &[(
+                format!("jupiter.app{}/{}/report.json", i % 70, 221_600 + i),
+                format!("{{\"version\":3,\"i\":{i}}}"),
+            )],
+            &format!("record {i}"),
+            SimTime(i as i64 * 86_400),
+        );
+    }
+    s
+}
+
+fn main() {
+    let mut b = Bench::new();
+    let report = "x".repeat(4096);
+
+    // append cost at three store sizes — how O(1) is it really?
+    // (one growing store per size class; appends mutate it in place)
+    for size in [10usize, 1000, 10_000] {
+        let mut store = seeded_store(size);
+        let mut i = 0u64;
+        b.case(&format!("append to store of {size} commits"), || {
+            i += 1;
+            store.commit(
+                "exacb.data",
+                &[(format!("new/report-{i}.json"), report.clone())],
+                "m",
+                SimTime(i as i64),
+            )
+        });
+    }
+    let store = seeded_store(10_000);
+    b.case("read one path at head (10k commits)", || {
+        store
+            .read("exacb.data", "jupiter.app3/221603/report.json")
+            .unwrap()
+            .len()
+    });
+    b.throughput_case(
+        "prefix list one app's 143 reports",
+        143.0,
+        "paths",
+        || store.list("exacb.data", "jupiter.app3/"),
+    );
+    b.case("history walk (10k commits)", || {
+        store.history("exacb.data").len()
+    });
+    b.report("perf_store");
+}

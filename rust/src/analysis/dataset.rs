@@ -1,0 +1,308 @@
+//! Report datasets: loading, filtering, and series extraction.
+//!
+//! The analysis CI jobs (§IV-F) consume protocol documents from the
+//! `exacb.data` branch (or injected externally) and need uniform slicing:
+//! by prefix, pipeline, time span, system — then extraction of
+//! (x, metric) series. All figures' data flows through this module.
+
+use crate::protocol::Report;
+use crate::store::DataStore;
+use crate::util::timeutil::SimTime;
+
+/// A set of reports with their store paths.
+#[derive(Debug, Clone, Default)]
+pub struct ReportSet {
+    pub reports: Vec<(String, Report)>,
+}
+
+impl ReportSet {
+    /// Load every parseable report under `prefix` on the `exacb.data`
+    /// branch. Only `.json` documents are considered (the branch also
+    /// carries `results.csv` artifacts); unparseable documents are
+    /// skipped (robustness against partial generation) but counted.
+    pub fn load(store: &DataStore, branch: &str, prefix: &str) -> (ReportSet, usize) {
+        let mut set = ReportSet::default();
+        let mut skipped = 0;
+        for (path, content) in store.read_all(branch, prefix) {
+            if !path.ends_with(".json") {
+                continue;
+            }
+            match Report::parse(&content) {
+                Ok(r) => set.reports.push((path, r)),
+                Err(_) => skipped += 1,
+            }
+        }
+        set.reports.sort_by(|a, b| a.0.cmp(&b.0));
+        (set, skipped)
+    }
+
+    pub fn from_reports(reports: Vec<Report>) -> ReportSet {
+        ReportSet {
+            reports: reports.into_iter().map(|r| (String::new(), r)).collect(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.reports.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.reports.is_empty()
+    }
+
+    /// Keep reports whose pipeline id is in `pipelines` (empty = all).
+    pub fn filter_pipelines(&self, pipelines: &[u64]) -> ReportSet {
+        if pipelines.is_empty() {
+            return self.clone();
+        }
+        ReportSet {
+            reports: self
+                .reports
+                .iter()
+                .filter(|(_, r)| pipelines.contains(&r.reporter.pipeline_id))
+                .cloned()
+                .collect(),
+        }
+    }
+
+    /// Keep reports whose experiment timestamp lies in [from, to].
+    pub fn filter_time_span(&self, from: Option<SimTime>, to: Option<SimTime>) -> ReportSet {
+        ReportSet {
+            reports: self
+                .reports
+                .iter()
+                .filter(|(_, r)| {
+                    let Some(t) = r.experiment.time() else {
+                        return false;
+                    };
+                    from.map(|f| t >= f).unwrap_or(true) && to.map(|e| t <= e).unwrap_or(true)
+                })
+                .cloned()
+                .collect(),
+        }
+    }
+
+    /// Keep reports for one system.
+    pub fn filter_system(&self, system: &str) -> ReportSet {
+        ReportSet {
+            reports: self
+                .reports
+                .iter()
+                .filter(|(_, r)| r.experiment.system == system)
+                .cloned()
+                .collect(),
+        }
+    }
+
+    /// Distinct systems present, sorted.
+    pub fn systems(&self) -> Vec<String> {
+        let mut v: Vec<String> = self
+            .reports
+            .iter()
+            .map(|(_, r)| r.experiment.system.clone())
+            .collect();
+        v.sort();
+        v.dedup();
+        v
+    }
+
+    /// Extract a (time, metric) series across reports: one point per
+    /// successful data entry carrying the metric, ordered by time.
+    /// `runtime` is always available as a pseudo-metric.
+    pub fn time_series(&self, metric: &str) -> Vec<(SimTime, f64)> {
+        let mut pts = Vec::new();
+        for (_, r) in &self.reports {
+            let Some(t) = r.experiment.time() else {
+                continue;
+            };
+            for e in &r.data {
+                if !e.success {
+                    continue;
+                }
+                let v = if metric == "runtime" {
+                    Some(e.runtime)
+                } else {
+                    e.metric(metric)
+                };
+                if let Some(v) = v {
+                    pts.push((t, v));
+                }
+            }
+        }
+        pts.sort_by_key(|(t, _)| *t);
+        pts
+    }
+
+    /// Extract (nodes, metric) points across successful entries.
+    pub fn nodes_series(&self, metric: &str) -> Vec<(u64, f64)> {
+        let mut pts = Vec::new();
+        for (_, r) in &self.reports {
+            for e in &r.data {
+                if !e.success {
+                    continue;
+                }
+                let v = if metric == "runtime" {
+                    Some(e.runtime)
+                } else {
+                    e.metric(metric)
+                };
+                if let Some(v) = v {
+                    pts.push((e.nodes, v));
+                }
+            }
+        }
+        pts.sort_by_key(|(n, _)| *n);
+        pts
+    }
+
+    /// Median metric value per node count (collapses repeats).
+    pub fn nodes_medians(&self, metric: &str) -> Vec<(u64, f64)> {
+        let pts = self.nodes_series(metric);
+        let mut out: Vec<(u64, f64)> = Vec::new();
+        let mut i = 0;
+        while i < pts.len() {
+            let n = pts[i].0;
+            let vals: Vec<f64> = pts
+                .iter()
+                .filter(|(m, _)| *m == n)
+                .map(|(_, v)| *v)
+                .collect();
+            out.push((n, crate::util::stats::median(&vals)));
+            i += vals.len();
+        }
+        out
+    }
+
+    /// Success-rate summary: (successful entries, total entries).
+    pub fn success_counts(&self) -> (usize, usize) {
+        let mut ok = 0;
+        let mut total = 0;
+        for (_, r) in &self.reports {
+            for e in &r.data {
+                total += 1;
+                if e.success {
+                    ok += 1;
+                }
+            }
+        }
+        (ok, total)
+    }
+}
+
+#[cfg(test)]
+pub(crate) fn synthetic_report(
+    system: &str,
+    day: i64,
+    pipeline: u64,
+    entries: &[(u64, f64, bool)], // (nodes, runtime, success)
+    metrics: &[(&str, f64)],
+) -> Report {
+    use crate::protocol::{DataEntry, Experiment, Reporter};
+    use crate::util::json::Json;
+    Report {
+        reporter: Reporter {
+            tool: "exacb".into(),
+            tool_version: "0.1".into(),
+            pipeline_id: pipeline,
+            system: system.into(),
+            timestamp: SimTime::from_days(day).iso8601(),
+            ..Default::default()
+        },
+        parameter: Json::obj(),
+        experiment: Experiment {
+            system: system.into(),
+            timestamp: SimTime::from_days(day).iso8601(),
+            ..Default::default()
+        },
+        data: entries
+            .iter()
+            .map(|&(nodes, runtime, success)| {
+                let mut m = Json::obj();
+                for (k, v) in metrics {
+                    m.insert(k, *v);
+                }
+                DataEntry {
+                    success,
+                    runtime,
+                    nodes,
+                    metrics: m,
+                    ..Default::default()
+                }
+            })
+            .collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_set() -> ReportSet {
+        ReportSet::from_reports(vec![
+            synthetic_report("jedi", 1, 100, &[(1, 10.0, true)], &[("bw", 5.0)]),
+            synthetic_report("jedi", 2, 101, &[(2, 6.0, true)], &[("bw", 5.1)]),
+            synthetic_report("jureca", 2, 102, &[(2, 12.0, true)], &[("bw", 2.0)]),
+            synthetic_report("jedi", 3, 103, &[(4, 4.0, false)], &[("bw", 0.0)]),
+        ])
+    }
+
+    #[test]
+    fn filters_compose() {
+        let set = sample_set();
+        assert_eq!(set.filter_system("jedi").len(), 3);
+        assert_eq!(set.filter_pipelines(&[101, 102]).len(), 2);
+        assert_eq!(
+            set.filter_time_span(Some(SimTime::from_days(2)), None).len(),
+            3
+        );
+        assert_eq!(
+            set.filter_time_span(Some(SimTime::from_days(2)), Some(SimTime::from_days(2)))
+                .len(),
+            2
+        );
+        assert_eq!(set.systems(), vec!["jedi", "jureca"]);
+    }
+
+    #[test]
+    fn series_skip_failures() {
+        let set = sample_set();
+        let ts = set.time_series("bw");
+        assert_eq!(ts.len(), 3); // failed day-3 entry skipped
+        let ns = set.filter_system("jedi").nodes_series("runtime");
+        assert_eq!(ns, vec![(1, 10.0), (2, 6.0)]);
+    }
+
+    #[test]
+    fn medians_collapse_repeats() {
+        let set = ReportSet::from_reports(vec![
+            synthetic_report("s", 1, 1, &[(1, 10.0, true), (1, 14.0, true), (1, 12.0, true)], &[]),
+            synthetic_report("s", 1, 1, &[(2, 5.0, true)], &[]),
+        ]);
+        assert_eq!(set.nodes_medians("runtime"), vec![(1, 12.0), (2, 5.0)]);
+    }
+
+    #[test]
+    fn load_skips_garbage(){
+        let mut store = DataStore::new();
+        let good = synthetic_report("jedi", 1, 1, &[(1, 1.0, true)], &[]);
+        store.commit(
+            "exacb.data",
+            &[
+                ("p/a.json".into(), good.to_document()),
+                ("p/bad.json".into(), "{not json".into()),
+                ("q/other.json".into(), good.to_document()),
+            ],
+            "m",
+            SimTime(0),
+        );
+        let (set, skipped) = ReportSet::load(&store, "exacb.data", "p/");
+        assert_eq!(set.len(), 1);
+        assert_eq!(skipped, 1);
+    }
+
+    #[test]
+    fn success_counts() {
+        let (ok, total) = sample_set().success_counts();
+        assert_eq!((ok, total), (3, 4));
+    }
+}

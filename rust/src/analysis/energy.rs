@@ -1,0 +1,135 @@
+//! Energy analysis (Fig. 9): energy-to-solution vs operating frequency,
+//! sweet-spot identification across applications.
+
+use super::dataset::ReportSet;
+use crate::util::plot::{Plot, Series};
+
+/// One application's frequency sweep.
+#[derive(Debug, Clone)]
+pub struct EnergySweep {
+    pub app: String,
+    /// (freq MHz, energy J) sorted by frequency.
+    pub points: Vec<(f64, f64)>,
+    /// The energy-minimising frequency.
+    pub sweet_spot_mhz: f64,
+    /// Energy saving at the sweet spot vs nominal (fraction, e.g. 0.18).
+    pub saving_vs_nominal: f64,
+}
+
+impl EnergySweep {
+    /// Build from reports carrying `freq_mhz` and `energy_j` metrics.
+    pub fn from_set(set: &ReportSet, app: &str) -> Option<EnergySweep> {
+        let mut points: Vec<(f64, f64)> = Vec::new();
+        for (_, r) in &set.reports {
+            for e in &r.data {
+                if !e.success {
+                    continue;
+                }
+                if let (Some(f), Some(en)) = (e.metric("freq_mhz"), e.metric("energy_j")) {
+                    points.push((f, en));
+                }
+            }
+        }
+        if points.len() < 3 {
+            return None;
+        }
+        points.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        // collapse duplicate frequencies by median
+        let mut collapsed: Vec<(f64, f64)> = Vec::new();
+        let mut i = 0;
+        while i < points.len() {
+            let f = points[i].0;
+            let vals: Vec<f64> = points
+                .iter()
+                .filter(|(g, _)| (*g - f).abs() < 0.5)
+                .map(|(_, e)| *e)
+                .collect();
+            collapsed.push((f, crate::util::stats::median(&vals)));
+            i += vals.len();
+        }
+        let (spot, e_min) = collapsed
+            .iter()
+            .cloned()
+            .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())?;
+        let e_nominal = collapsed.last()?.1;
+        Some(EnergySweep {
+            app: app.to_string(),
+            points: collapsed,
+            sweet_spot_mhz: spot,
+            saving_vs_nominal: 1.0 - e_min / e_nominal,
+        })
+    }
+}
+
+/// Fig. 9: energy vs frequency for several applications, sweet spots
+/// marked with vertical guides.
+pub fn energy_sweep_plot(sweeps: &[EnergySweep]) -> Plot {
+    let mut p = Plot::new(
+        "Energy-to-solution vs GPU frequency (Fig. 9)",
+        "GPU frequency [MHz]",
+        "energy to solution [J]",
+    );
+    for s in sweeps {
+        p.add(Series::new(&s.app, s.points.clone()));
+        p.add_vmark(s.sweet_spot_mhz, &format!("{} sweet spot", s.app));
+    }
+    p
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::dataset::{synthetic_report, ReportSet};
+    use super::*;
+
+    fn sweep_set(app_bias: f64) -> ReportSet {
+        // bowl with minimum at 900 + bias
+        let reports = (0..12)
+            .map(|i| {
+                let f = 400.0 + i as f64 * 140.0;
+                let e = 1000.0 + 0.002 * (f - (900.0 + app_bias)).powi(2);
+                synthetic_report(
+                    "jedi",
+                    1,
+                    1,
+                    &[(1, 100.0, true)],
+                    &[("freq_mhz", f), ("energy_j", e)],
+                )
+            })
+            .collect();
+        ReportSet::from_reports(reports)
+    }
+
+    #[test]
+    fn finds_sweet_spot() {
+        let s = EnergySweep::from_set(&sweep_set(0.0), "appA").unwrap();
+        assert!(
+            (s.sweet_spot_mhz - 960.0).abs() < 150.0,
+            "spot={}",
+            s.sweet_spot_mhz
+        );
+        assert!(s.saving_vs_nominal > 0.1, "{}", s.saving_vs_nominal);
+    }
+
+    #[test]
+    fn different_apps_have_different_spots() {
+        // Fig. 9 shows two applications with distinct sweet spots
+        let a = EnergySweep::from_set(&sweep_set(0.0), "appA").unwrap();
+        let b = EnergySweep::from_set(&sweep_set(400.0), "appB").unwrap();
+        assert!(b.sweet_spot_mhz > a.sweet_spot_mhz);
+        let p = energy_sweep_plot(&[a, b]);
+        assert_eq!(p.series.len(), 2);
+        assert_eq!(p.vmarks.len(), 2);
+    }
+
+    #[test]
+    fn too_few_points_is_none() {
+        let set = ReportSet::from_reports(vec![synthetic_report(
+            "jedi",
+            1,
+            1,
+            &[(1, 1.0, true)],
+            &[("freq_mhz", 900.0), ("energy_j", 5.0)],
+        )]);
+        assert!(EnergySweep::from_set(&set, "x").is_none());
+    }
+}

@@ -1,0 +1,20 @@
+//! Data analysis (paper §IV-F): "to decouple execution and data
+//! acquisition from evaluation, exaCB provides dedicated CI jobs for data
+//! analysis" — these are the analytics those jobs run. Everything
+//! consumes protocol [`crate::protocol::Report`]s, so the pipeline "can
+//! also be applied outside of a full exaCB workflow".
+//!
+//! * [`dataset`] — loading/filtering report sets, series extraction.
+//! * [`timeseries`] — Figs. 3–4: daily series + changepoint detection.
+//! * [`scaling`] — Figs. 5 & 7: strong/weak scaling with guide bands.
+//! * [`energy`] — Fig. 9: energy-vs-frequency sweet spots.
+
+pub mod dataset;
+pub mod energy;
+pub mod scaling;
+pub mod timeseries;
+
+pub use dataset::ReportSet;
+pub use energy::{energy_sweep_plot, EnergySweep};
+pub use scaling::{machine_comparison_plot, weak_scaling_plot, StrongScaling, WeakScaling};
+pub use timeseries::{analyse, SeriesAnalysis};

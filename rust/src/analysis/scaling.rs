@@ -1,0 +1,257 @@
+//! Scaling analysis (Figs. 5 & 7): strong-scaling speedup/efficiency with
+//! ideal-scaling guide bands, and weak-scaling efficiency.
+
+use super::dataset::ReportSet;
+use crate::util::plot::{Band, Plot, Series};
+
+/// One system's strong-scaling curve.
+#[derive(Debug, Clone)]
+pub struct StrongScaling {
+    pub system: String,
+    /// (nodes, median runtime)
+    pub runtimes: Vec<(u64, f64)>,
+    /// (nodes, speedup vs smallest node count)
+    pub speedups: Vec<(u64, f64)>,
+    /// (nodes, parallel efficiency vs smallest node count)
+    pub efficiencies: Vec<(u64, f64)>,
+}
+
+impl StrongScaling {
+    pub fn from_set(set: &ReportSet, system: &str, metric: &str) -> Option<StrongScaling> {
+        let runtimes = set.filter_system(system).nodes_medians(metric);
+        if runtimes.len() < 2 {
+            return None;
+        }
+        let (n0, t0) = runtimes[0];
+        let speedups: Vec<(u64, f64)> = runtimes
+            .iter()
+            .map(|&(n, t)| (n, t0 / t * 1.0_f64.max(1.0)))
+            .collect();
+        let efficiencies = runtimes
+            .iter()
+            .map(|&(n, t)| (n, (t0 * n0 as f64) / (t * n as f64)))
+            .collect();
+        Some(StrongScaling {
+            system: system.to_string(),
+            runtimes,
+            speedups,
+            efficiencies,
+        })
+    }
+
+    /// Largest node count still at or above the given efficiency (the
+    /// "80% scaling regime" boundary of Fig. 5).
+    pub fn scaling_limit(&self, efficiency: f64) -> Option<u64> {
+        self.efficiencies
+            .iter()
+            .filter(|(_, e)| *e >= efficiency)
+            .map(|(n, _)| *n)
+            .max()
+    }
+}
+
+/// Fig. 5: runtime vs nodes for several systems, log-log, with the ideal
+/// and `band_pct`% scaling band anchored on each system's first point.
+/// `halve` lists systems whose runtime is halved "for easier
+/// comparability" (the paper does this for the Ampere result).
+pub fn machine_comparison_plot(
+    set: &ReportSet,
+    systems: &[String],
+    metric: &str,
+    band_pct: f64,
+    halve: &[String],
+) -> Plot {
+    let mut p = Plot::new(
+        "Strong scaling comparison (Fig. 5)",
+        "nodes",
+        "time to solution [s]",
+    )
+    .logx()
+    .logy();
+    for system in systems {
+        let Some(s) = StrongScaling::from_set(set, system, metric) else {
+            continue;
+        };
+        let factor = if halve.contains(system) { 0.5 } else { 1.0 };
+        let pts: Vec<(f64, f64)> = s
+            .runtimes
+            .iter()
+            .map(|&(n, t)| (n as f64, t * factor))
+            .collect();
+        let label = if factor != 1.0 {
+            format!("{system} (/2)")
+        } else {
+            system.clone()
+        };
+        // guide band: ideal scaling and band_pct% of ideal from this curve
+        if let Some(&(n0, t0)) = s.runtimes.first() {
+            let t0 = t0 * factor;
+            let upper: Vec<(f64, f64)> = s
+                .runtimes
+                .iter()
+                .map(|&(n, _)| {
+                    let ideal = t0 * n0 as f64 / n as f64;
+                    (n as f64, ideal / (band_pct / 100.0))
+                })
+                .collect();
+            let lower: Vec<(f64, f64)> = s
+                .runtimes
+                .iter()
+                .map(|&(n, _)| (n as f64, t0 * n0 as f64 / n as f64))
+                .collect();
+            p.add_band(Band {
+                name: format!("{system} {band_pct:.0}% band"),
+                upper,
+                lower,
+            });
+        }
+        p.add(Series::new(&label, pts));
+    }
+    p
+}
+
+/// One weak-scaling curve: (nodes, efficiency) with t(1 node) reference.
+#[derive(Debug, Clone)]
+pub struct WeakScaling {
+    pub label: String,
+    pub runtimes: Vec<(u64, f64)>,
+    pub efficiencies: Vec<(u64, f64)>,
+}
+
+impl WeakScaling {
+    /// Weak-scaling efficiency: t(n0)/t(n) (perfect = 1.0, workload per
+    /// node constant).
+    pub fn from_set(set: &ReportSet, label: &str, metric: &str) -> Option<WeakScaling> {
+        let runtimes = set.nodes_medians(metric);
+        if runtimes.len() < 2 {
+            return None;
+        }
+        let t0 = runtimes[0].1;
+        let efficiencies = runtimes.iter().map(|&(n, t)| (n, t0 / t)).collect();
+        Some(WeakScaling {
+            label: label.to_string(),
+            runtimes,
+            efficiencies,
+        })
+    }
+}
+
+/// Fig. 7: weak-scaling efficiency for multiple software stages.
+pub fn weak_scaling_plot(curves: &[WeakScaling]) -> Plot {
+    let mut p = Plot::new(
+        "Weak scaling across software stages (Fig. 7)",
+        "nodes",
+        "weak-scaling efficiency",
+    )
+    .logx();
+    for c in curves {
+        p.add(Series::new(
+            &c.label,
+            c.efficiencies
+                .iter()
+                .map(|&(n, e)| (n as f64, e))
+                .collect(),
+        ));
+    }
+    p
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::dataset::{synthetic_report, ReportSet};
+    use super::*;
+
+    /// Amdahl-ish runtime generator.
+    fn scaling_set(system: &str, t1: f64, serial: f64) -> ReportSet {
+        ReportSet::from_reports(
+            [1u64, 2, 4, 8, 16, 32]
+                .iter()
+                .map(|&n| {
+                    let t = t1 * (serial + (1.0 - serial) / n as f64);
+                    synthetic_report(system, 1, 1, &[(n, t, true)], &[])
+                })
+                .collect(),
+        )
+    }
+
+    #[test]
+    fn strong_scaling_math() {
+        let set = scaling_set("jedi", 100.0, 0.02);
+        let s = StrongScaling::from_set(&set, "jedi", "runtime").unwrap();
+        assert_eq!(s.speedups[0], (1, 1.0));
+        let (n, sp) = *s.speedups.last().unwrap();
+        assert_eq!(n, 32);
+        assert!(sp > 16.0 && sp < 32.0, "sp={sp}");
+        // efficiency monotonically decays
+        for w in s.efficiencies.windows(2) {
+            assert!(w[1].1 <= w[0].1 + 1e-9);
+        }
+    }
+
+    #[test]
+    fn scaling_limit_finds_80pct_boundary() {
+        let set = scaling_set("jedi", 100.0, 0.02);
+        let s = StrongScaling::from_set(&set, "jedi", "runtime").unwrap();
+        let limit = s.scaling_limit(0.8).unwrap();
+        // with 2% serial fraction, 80% efficiency is lost somewhere
+        // between 8 and 16 nodes: eff(8)=0.88, eff(16)=0.78
+        assert_eq!(limit, 8, "{:?}", s.efficiencies);
+    }
+
+    #[test]
+    fn comparison_plot_has_bands_and_halving() {
+        let mut set = scaling_set("jedi", 40.0, 0.02);
+        set.reports
+            .extend(scaling_set("juwels-booster", 130.0, 0.02).reports);
+        let p = machine_comparison_plot(
+            &set,
+            &["jedi".into(), "juwels-booster".into()],
+            "runtime",
+            80.0,
+            &["juwels-booster".into()],
+        );
+        assert_eq!(p.series.len(), 2);
+        assert_eq!(p.bands.len(), 2);
+        assert!(p.series.iter().any(|s| s.name == "juwels-booster (/2)"));
+        // halved: first point of the booster curve is 65
+        let booster = p
+            .series
+            .iter()
+            .find(|s| s.name.contains("booster"))
+            .unwrap();
+        assert!((booster.points[0].1 - 65.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn weak_scaling_efficiency() {
+        // runtime grows slowly with nodes under weak scaling
+        let set = ReportSet::from_reports(
+            [1u64, 2, 4, 8, 16]
+                .iter()
+                .map(|&n| {
+                    let t = 100.0 * (1.0 + 0.03 * (n as f64).log2());
+                    synthetic_report("jedi", 1, 1, &[(n, t, true)], &[])
+                })
+                .collect(),
+        );
+        let w = WeakScaling::from_set(&set, "stage 2026", "runtime").unwrap();
+        assert!((w.efficiencies[0].1 - 1.0).abs() < 1e-9);
+        let last = w.efficiencies.last().unwrap().1;
+        assert!(last < 1.0 && last > 0.8, "{last}");
+        let p = weak_scaling_plot(&[w]);
+        assert_eq!(p.series.len(), 1);
+    }
+
+    #[test]
+    fn insufficient_data_is_none() {
+        let set = ReportSet::from_reports(vec![synthetic_report(
+            "jedi",
+            1,
+            1,
+            &[(1, 10.0, true)],
+            &[],
+        )]);
+        assert!(StrongScaling::from_set(&set, "jedi", "runtime").is_none());
+        assert!(StrongScaling::from_set(&set, "ghost", "runtime").is_none());
+    }
+}

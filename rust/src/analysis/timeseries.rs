@@ -1,0 +1,146 @@
+//! Time-series analysis (Figs. 3–4): daily metric series, stability
+//! assessment, and regression/recovery detection.
+
+use super::dataset::ReportSet;
+use crate::util::plot::{Plot, Series};
+use crate::util::stats::{self, Changepoint};
+use crate::util::timeutil::SimTime;
+
+/// One analysed metric series.
+#[derive(Debug, Clone)]
+pub struct SeriesAnalysis {
+    pub label: String,
+    pub points: Vec<(SimTime, f64)>,
+    pub mean: f64,
+    /// Coefficient of variation (sd/mean).
+    pub cv: f64,
+    pub changepoints: Vec<Changepoint>,
+}
+
+impl SeriesAnalysis {
+    /// "Stable" series: no detected level shifts and small variation —
+    /// Fig. 3's BabelStream verdict.
+    pub fn is_stable(&self) -> bool {
+        self.changepoints.is_empty() && self.cv < 0.03
+    }
+}
+
+/// Analyse one metric label over a report set.
+pub fn analyse(set: &ReportSet, label: &str, threshold_sd: f64) -> SeriesAnalysis {
+    let points = set.time_series(label);
+    let values: Vec<f64> = points.iter().map(|(_, v)| *v).collect();
+    let s = stats::summary(&values);
+    SeriesAnalysis {
+        label: label.to_string(),
+        points,
+        mean: s.mean,
+        cv: if s.mean.abs() > 0.0 { s.sd / s.mean } else { f64::NAN },
+        changepoints: stats::changepoints(&values, threshold_sd),
+    }
+}
+
+/// The time-series component's plot: one series per data label, x in
+/// days since epoch (rendered as dates by the caller).
+pub fn plot(
+    title: &str,
+    ylabel: &str,
+    analyses: &[SeriesAnalysis],
+    plot_labels: &[String],
+) -> Plot {
+    let mut p = Plot::new(title, "date", ylabel);
+    for (i, a) in analyses.iter().enumerate() {
+        let name = plot_labels
+            .get(i)
+            .cloned()
+            .unwrap_or_else(|| a.label.clone());
+        p.add(Series::new(
+            &name,
+            a.points
+                .iter()
+                .map(|(t, v)| (t.day() as f64, *v))
+                .collect(),
+        ));
+    }
+    // mark detected changepoints as vertical guides
+    for a in analyses {
+        for cp in &a.changepoints {
+            if let Some((t, _)) = a.points.get(cp.index) {
+                let kind = if cp.after < cp.before { "regression" } else { "recovery" };
+                p.add_vmark(t.day() as f64, kind);
+            }
+        }
+    }
+    p
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::dataset::{synthetic_report, ReportSet};
+    use super::*;
+
+    fn daily_series(f: impl Fn(i64) -> f64, days: i64) -> ReportSet {
+        ReportSet::from_reports(
+            (0..days)
+                .map(|d| {
+                    synthetic_report(
+                        "jupiter",
+                        d,
+                        100 + d as u64,
+                        &[(1, 10.0, true)],
+                        &[("bw", f(d))],
+                    )
+                })
+                .collect(),
+        )
+    }
+
+    #[test]
+    fn stable_series_fig3() {
+        // BabelStream-like: flat with small wiggle
+        let set = daily_series(|d| 3_400_000.0 * (1.0 + 0.003 * ((d % 5) as f64 - 2.0)), 90);
+        let a = analyse(&set, "bw", 8.0);
+        assert!(a.is_stable(), "cv={} cps={:?}", a.cv, a.changepoints);
+        assert_eq!(a.points.len(), 90);
+    }
+
+    #[test]
+    fn regression_recovery_fig4() {
+        // Graph500-like: dip between day 30 and 60
+        let set = daily_series(
+            |d| {
+                let base = if (30..60).contains(&d) { 0.72 } else { 1.0 };
+                2.0e9 * base * (1.0 + 0.004 * ((d % 7) as f64 - 3.0))
+            },
+            90,
+        );
+        let a = analyse(&set, "bw", 8.0);
+        assert!(!a.is_stable());
+        assert!(a.changepoints.len() >= 2, "{:?}", a.changepoints);
+        let down = a.changepoints.iter().find(|c| c.after < c.before).unwrap();
+        let up = a.changepoints.iter().find(|c| c.after > c.before).unwrap();
+        assert!((28..=32).contains(&down.index), "down at {}", down.index);
+        assert!((58..=62).contains(&up.index), "up at {}", up.index);
+    }
+
+    #[test]
+    fn plot_carries_series_and_marks() {
+        let set = daily_series(
+            |d| if (30..60).contains(&d) { 7.0 } else { 10.0 } + 0.01 * (d % 3) as f64,
+            90,
+        );
+        let a = analyse(&set, "bw", 8.0);
+        let p = plot("ts", "y", &[a], &["Copy kernel".to_string()]);
+        assert_eq!(p.series.len(), 1);
+        assert_eq!(p.series[0].name, "Copy kernel");
+        assert!(p.vmarks.len() >= 2);
+        assert!(p.render_svg().contains("regression"));
+    }
+
+    #[test]
+    fn empty_set_analyses_cleanly() {
+        let set = ReportSet::default();
+        let a = analyse(&set, "bw", 8.0);
+        assert!(a.points.is_empty());
+        assert!(a.mean.is_nan());
+    }
+}

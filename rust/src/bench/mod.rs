@@ -1,0 +1,203 @@
+//! Mini-criterion: a small benchmarking harness (substrate; DESIGN.md §2
+//! — no `criterion` crate vendored offline).
+//!
+//! Provides warm-up, timed iterations, mean/p50/p95 statistics, and
+//! throughput reporting, with text output similar to criterion's.
+//! `cargo bench` targets use `harness = false` and drive this directly.
+
+use std::time::{Duration, Instant};
+
+/// Result of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iterations: u64,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p95: Duration,
+    pub min: Duration,
+    /// Optional throughput: (units-per-iteration, unit label).
+    pub throughput: Option<(f64, &'static str)>,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        let mut line = format!(
+            "{:<44} {:>10} iters  mean {:>11}  p50 {:>11}  p95 {:>11}",
+            self.name,
+            self.iterations,
+            fmt_dur(self.mean),
+            fmt_dur(self.p50),
+            fmt_dur(self.p95),
+        );
+        if let Some((units, label)) = self.throughput {
+            let per_sec = units / self.mean.as_secs_f64();
+            line.push_str(&format!("  {:>12.3} {label}/s", per_sec));
+        }
+        line
+    }
+}
+
+fn fmt_dur(d: Duration) -> String {
+    let ns = d.as_nanos();
+    if ns < 1_000 {
+        format!("{ns} ns")
+    } else if ns < 1_000_000 {
+        format!("{:.2} µs", ns as f64 / 1e3)
+    } else if ns < 1_000_000_000 {
+        format!("{:.2} ms", ns as f64 / 1e6)
+    } else {
+        format!("{:.3} s", ns as f64 / 1e9)
+    }
+}
+
+/// Bench runner with a global time budget per case.
+pub struct Bench {
+    pub warmup: Duration,
+    pub measure: Duration,
+    pub max_iters: u64,
+    results: Vec<BenchResult>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench {
+            warmup: Duration::from_millis(200),
+            measure: Duration::from_millis(900),
+            max_iters: 1_000_000,
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Bench {
+    pub fn new() -> Bench {
+        Bench::default()
+    }
+
+    /// Quick mode for CI (shorter budgets).
+    pub fn quick() -> Bench {
+        Bench {
+            warmup: Duration::from_millis(50),
+            measure: Duration::from_millis(250),
+            max_iters: 100_000,
+            results: Vec::new(),
+        }
+    }
+
+    /// Run one case; `f` is the measured body (return value is consumed
+    /// through `std::hint::black_box`).
+    pub fn case<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> &BenchResult {
+        self.case_with_throughput(name, None, move || {
+            std::hint::black_box(f());
+        })
+    }
+
+    /// Run one case reporting throughput in `units` per iteration.
+    pub fn throughput_case<T>(
+        &mut self,
+        name: &str,
+        units: f64,
+        label: &'static str,
+        mut f: impl FnMut() -> T,
+    ) -> &BenchResult {
+        self.case_with_throughput(name, Some((units, label)), move || {
+            std::hint::black_box(f());
+        })
+    }
+
+    fn case_with_throughput(
+        &mut self,
+        name: &str,
+        throughput: Option<(f64, &'static str)>,
+        mut f: impl FnMut(),
+    ) -> &BenchResult {
+        // warm-up
+        let start = Instant::now();
+        while start.elapsed() < self.warmup {
+            f();
+        }
+        // measurement: batched timing to amortise clock reads for fast fns
+        let mut samples: Vec<Duration> = Vec::new();
+        let mut total_iters = 0u64;
+        let t0 = Instant::now();
+        // estimate batch size from one probe
+        let probe = Instant::now();
+        f();
+        let probe_t = probe.elapsed();
+        let batch = (Duration::from_micros(200).as_nanos() / probe_t.as_nanos().max(1))
+            .clamp(1, 10_000) as u64;
+        // always collect at least one sample, even when a single
+        // iteration blows the measurement budget
+        loop {
+            let s = Instant::now();
+            for _ in 0..batch {
+                f();
+            }
+            samples.push(s.elapsed() / batch as u32);
+            total_iters += batch;
+            if t0.elapsed() >= self.measure || total_iters >= self.max_iters {
+                break;
+            }
+        }
+        samples.sort();
+        let mean = samples.iter().sum::<Duration>() / samples.len().max(1) as u32;
+        let result = BenchResult {
+            name: name.to_string(),
+            iterations: total_iters,
+            mean,
+            p50: samples[samples.len() / 2],
+            p95: samples[((samples.len() as f64 * 0.95) as usize).min(samples.len() - 1)],
+            min: samples[0],
+            throughput,
+        };
+        self.results.push(result);
+        self.results.last().unwrap()
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+
+    /// Print the standard report block.
+    pub fn report(&self, title: &str) {
+        println!("\n== {title} ==");
+        for r in &self.results {
+            println!("{}", r.report());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let mut b = Bench::quick();
+        let r = b.case("noop-ish", || 1 + 1).clone();
+        assert!(r.iterations > 0);
+        assert!(r.p95 >= r.p50);
+        assert!(r.min <= r.mean * 2);
+    }
+
+    #[test]
+    fn throughput_reported() {
+        let mut b = Bench::quick();
+        let data = vec![1u8; 64 * 1024];
+        let r = b
+            .throughput_case("hash-64k", data.len() as f64, "B", || {
+                crate::util::fnv1a(&data)
+            })
+            .clone();
+        assert!(r.throughput.is_some());
+        assert!(r.report().contains("B/s"));
+    }
+
+    #[test]
+    fn report_formats() {
+        assert_eq!(fmt_dur(Duration::from_nanos(500)), "500 ns");
+        assert!(fmt_dur(Duration::from_micros(1500)).contains("ms"));
+        assert!(fmt_dur(Duration::from_secs(2)).contains(" s"));
+    }
+}

@@ -1,0 +1,354 @@
+//! CI/CD component registry with typed inputs (paper §V-A).
+//!
+//! exaCB ships "a growing catalog of CI/CD components" invoked from
+//! pipeline configs as `component: execution@v3` plus an `inputs:` map.
+//! Each component declares its input schema; invocation resolves
+//! defaults and rejects unknown/missing inputs — the "strong coupling"
+//! half of the design (§III quadrant 2).
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone, PartialEq, thiserror::Error)]
+pub enum ComponentError {
+    #[error("unknown component '{0}'")]
+    Unknown(String),
+    #[error("component '{component}': missing required input '{input}'")]
+    MissingInput { component: String, input: String },
+    #[error("component '{component}': unknown input '{input}'")]
+    UnknownInput { component: String, input: String },
+    #[error("component '{component}': input '{input}' must be {expected}")]
+    BadType {
+        component: String,
+        input: String,
+        expected: String,
+    },
+}
+
+/// Expected JSON shape of one input.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum InputType {
+    Str,
+    Int,
+    Bool,
+    List,
+}
+
+impl InputType {
+    fn matches(&self, v: &Json) -> bool {
+        match self {
+            InputType::Str => v.as_str().is_some(),
+            InputType::Int => v.as_u64().is_some(),
+            // CI configs often quote booleans: accept "true"/"false" too.
+            InputType::Bool => {
+                v.as_bool().is_some() || matches!(v.as_str(), Some("true" | "false"))
+            }
+            InputType::List => v.as_arr().is_some(),
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        match self {
+            InputType::Str => "a string",
+            InputType::Int => "an integer",
+            InputType::Bool => "a boolean",
+            InputType::List => "a list",
+        }
+    }
+}
+
+/// Declared input of a component.
+#[derive(Debug, Clone)]
+pub struct InputSpec {
+    pub name: &'static str,
+    pub ty: InputType,
+    pub required: bool,
+    pub default: Option<Json>,
+}
+
+impl InputSpec {
+    fn req(name: &'static str, ty: InputType) -> InputSpec {
+        InputSpec {
+            name,
+            ty,
+            required: true,
+            default: None,
+        }
+    }
+
+    fn opt(name: &'static str, ty: InputType, default: Json) -> InputSpec {
+        InputSpec {
+            name,
+            ty,
+            required: false,
+            default: Some(default),
+        }
+    }
+}
+
+/// A registered component (name@version + input schema).
+#[derive(Debug, Clone)]
+pub struct ComponentSpec {
+    /// Full reference, e.g. `execution@v3`.
+    pub reference: String,
+    pub inputs: Vec<InputSpec>,
+}
+
+impl ComponentSpec {
+    /// Validate raw invocation inputs against the schema, filling
+    /// defaults. Returns the resolved input object.
+    pub fn resolve(&self, raw: &Json) -> Result<Json, ComponentError> {
+        let mut resolved = Json::obj();
+        let raw_pairs = raw.as_obj().unwrap_or(&[]);
+        for (k, _) in raw_pairs {
+            if !self.inputs.iter().any(|i| i.name == k) {
+                return Err(ComponentError::UnknownInput {
+                    component: self.reference.clone(),
+                    input: k.clone(),
+                });
+            }
+        }
+        for input in &self.inputs {
+            match raw.get(input.name) {
+                Some(v) => {
+                    if !input.ty.matches(v) {
+                        return Err(ComponentError::BadType {
+                            component: self.reference.clone(),
+                            input: input.name.to_string(),
+                            expected: input.ty.name().to_string(),
+                        });
+                    }
+                    resolved.insert(input.name, v.clone());
+                }
+                None if input.required => {
+                    return Err(ComponentError::MissingInput {
+                        component: self.reference.clone(),
+                        input: input.name.to_string(),
+                    });
+                }
+                None => {
+                    if let Some(d) = &input.default {
+                        resolved.insert(input.name, d.clone());
+                    }
+                }
+            }
+        }
+        Ok(resolved)
+    }
+}
+
+/// The built-in component catalog (paper §V-A).
+#[derive(Debug, Clone)]
+pub struct ComponentRegistry {
+    components: Vec<ComponentSpec>,
+}
+
+impl Default for ComponentRegistry {
+    fn default() -> Self {
+        Self::builtin()
+    }
+}
+
+impl ComponentRegistry {
+    pub fn builtin() -> ComponentRegistry {
+        use InputType::*;
+        let execution_inputs = vec![
+            InputSpec::req("prefix", Str),
+            InputSpec::req("machine", Str),
+            InputSpec::req("jube_file", Str),
+            InputSpec::opt("usecase", Str, Json::Str(String::new())),
+            InputSpec::opt("variant", Str, Json::Str(String::new())),
+            InputSpec::opt("queue", Str, Json::Str("all".into())),
+            InputSpec::opt("project", Str, Json::Str("default".into())),
+            InputSpec::opt("budget", Str, Json::Str("default".into())),
+            InputSpec::opt("fixture", Str, Json::Str(String::new())),
+            InputSpec::opt("record", Bool, Json::Bool(true)),
+            InputSpec::opt("tags", List, Json::arr()),
+            InputSpec::opt("stage", Str, Json::Str("2026".into())),
+            InputSpec::opt("launcher", Str, Json::Str("srun".into())),
+            InputSpec::opt("freq_mhz", Int, Json::Num(0.0)),
+            InputSpec::opt("nodes", Int, Json::Num(0.0)),
+        ];
+        let mut feature_injection_inputs = execution_inputs.clone();
+        feature_injection_inputs.push(InputSpec::req("in_command", Str));
+        let execution_inputs2 = execution_inputs.clone();
+
+        ComponentRegistry {
+            components: vec![
+                ComponentSpec {
+                    reference: "execution@v3".into(),
+                    inputs: execution_inputs.clone(),
+                },
+                // the paper's §II-C example uses a namespaced alias
+                ComponentSpec {
+                    reference: "example/jube@v3.2".into(),
+                    inputs: execution_inputs,
+                },
+                ComponentSpec {
+                    reference: "feature-injection@v3".into(),
+                    inputs: feature_injection_inputs,
+                },
+                ComponentSpec {
+                    reference: "machine-comparison@v3".into(),
+                    inputs: vec![
+                        InputSpec::req("prefix", Str),
+                        InputSpec::req("selector", List),
+                        InputSpec::opt("pipeline", List, Json::arr()),
+                        InputSpec::opt("metric", Str, Json::Str("runtime".into())),
+                        InputSpec::opt("xaxis", Str, Json::Str("nodes".into())),
+                        InputSpec::opt("scaling_band", Int, Json::Num(80.0)),
+                    ],
+                },
+                ComponentSpec {
+                    reference: "scalability@v3".into(),
+                    inputs: vec![
+                        InputSpec::req("prefix", Str),
+                        InputSpec::req("selector", Str),
+                        InputSpec::opt("metric", Str, Json::Str("runtime".into())),
+                        InputSpec::opt("mode", Str, Json::Str("strong".into())),
+                    ],
+                },
+                ComponentSpec {
+                    reference: "time-series@v3".into(),
+                    inputs: vec![
+                        InputSpec::req("prefix", Str),
+                        InputSpec::opt("pipeline", List, Json::arr()),
+                        InputSpec::req("data_labels", List),
+                        InputSpec::opt("ylabel", List, Json::arr()),
+                        InputSpec::opt("plot_labels", List, Json::arr()),
+                        InputSpec::opt("time_span", List, Json::arr()),
+                    ],
+                },
+                ComponentSpec {
+                    reference: "jureap/energy@v3".into(),
+                    inputs: {
+                        // execution-like: energy studies *run* the benchmark
+                        // per frequency through the jpwr launcher (§VI-B)
+                        let mut v = execution_inputs2.clone();
+                        v.push(InputSpec::opt("frequencies", List, Json::arr()));
+                        v.push(InputSpec::opt(
+                            "metric",
+                            Str,
+                            Json::Str("energy_j".into()),
+                        ));
+                        v
+                    },
+                },
+            ],
+        }
+    }
+
+    pub fn get(&self, reference: &str) -> Result<&ComponentSpec, ComponentError> {
+        self.components
+            .iter()
+            .find(|c| c.reference == reference)
+            .ok_or_else(|| ComponentError::Unknown(reference.to_string()))
+    }
+
+    pub fn references(&self) -> Vec<&str> {
+        self.components
+            .iter()
+            .map(|c| c.reference.as_str())
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_execution_invocation_resolves() {
+        let reg = ComponentRegistry::builtin();
+        let spec = reg.get("execution@v3").unwrap();
+        let raw = Json::obj()
+            .set("prefix", "jureca.single")
+            .set("usecase", "bigproblem")
+            .set("variant", "single")
+            .set("jube_file", "benchmark/jube/shell.yml")
+            .set("machine", "jureca")
+            .set("queue", "dc-gpu")
+            .set("project", "cexalab")
+            .set("budget", "exalab")
+            .set("record", "true");
+        let resolved = spec.resolve(&raw).unwrap();
+        assert_eq!(resolved.str_of("machine"), Some("jureca"));
+        // defaults filled
+        assert_eq!(resolved.str_of("stage"), Some("2026"));
+        assert_eq!(resolved.str_of("launcher"), Some("srun"));
+    }
+
+    #[test]
+    fn missing_required_input_fails() {
+        let reg = ComponentRegistry::builtin();
+        let spec = reg.get("execution@v3").unwrap();
+        let raw = Json::obj().set("prefix", "x");
+        let err = spec.resolve(&raw).unwrap_err();
+        assert!(matches!(err, ComponentError::MissingInput { .. }));
+    }
+
+    #[test]
+    fn unknown_input_fails() {
+        let reg = ComponentRegistry::builtin();
+        let spec = reg.get("time-series@v3").unwrap();
+        let raw = Json::obj()
+            .set("prefix", "p")
+            .set("data_labels", Json::arr())
+            .set("typo_input", 1u64);
+        assert!(matches!(
+            spec.resolve(&raw).unwrap_err(),
+            ComponentError::UnknownInput { .. }
+        ));
+    }
+
+    #[test]
+    fn type_mismatch_fails() {
+        let reg = ComponentRegistry::builtin();
+        let spec = reg.get("machine-comparison@v3").unwrap();
+        let raw = Json::obj()
+            .set("prefix", "p")
+            .set("selector", "not-a-list");
+        assert!(matches!(
+            spec.resolve(&raw).unwrap_err(),
+            ComponentError::BadType { .. }
+        ));
+    }
+
+    #[test]
+    fn unknown_component() {
+        let reg = ComponentRegistry::builtin();
+        assert!(matches!(
+            reg.get("nope@v1").unwrap_err(),
+            ComponentError::Unknown(_)
+        ));
+    }
+
+    #[test]
+    fn catalog_contains_paper_components() {
+        let reg = ComponentRegistry::builtin();
+        for c in [
+            "execution@v3",
+            "feature-injection@v3",
+            "machine-comparison@v3",
+            "scalability@v3",
+            "time-series@v3",
+            "jureap/energy@v3",
+            "example/jube@v3.2",
+        ] {
+            assert!(reg.get(c).is_ok(), "{c}");
+        }
+    }
+
+    #[test]
+    fn feature_injection_requires_in_command() {
+        let reg = ComponentRegistry::builtin();
+        let spec = reg.get("feature-injection@v3").unwrap();
+        let raw = Json::obj()
+            .set("prefix", "jupiter.single")
+            .set("machine", "jupiter")
+            .set("jube_file", "f.yml");
+        let err = spec.resolve(&raw).unwrap_err();
+        assert!(
+            matches!(err, ComponentError::MissingInput { ref input, .. } if input == "in_command")
+        );
+    }
+}

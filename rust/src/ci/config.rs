@@ -1,0 +1,239 @@
+//! `.gitlab-ci.yml`-style pipeline configuration parsing (paper §II-C).
+//!
+//! Two accepted shapes, both used in the paper:
+//!
+//! ```yaml
+//! include:
+//!   - component: example/jube@v3.2
+//!     inputs:
+//!       prefix: "jedi.strong.tiny"
+//! ```
+//!
+//! and the single-component form:
+//!
+//! ```yaml
+//! component: execution@v3
+//! inputs:
+//!   prefix: "jureca.single"
+//! ```
+//!
+//! Plus an optional `schedule:` block for recurring pipelines (the daily
+//! BabelStream/Graph500 runs behind Figs. 3–4).
+
+use crate::util::json::Json;
+use crate::util::yamlite;
+
+#[derive(Debug, Clone, PartialEq, thiserror::Error)]
+pub enum ConfigError {
+    #[error("yaml: {0}")]
+    Yaml(String),
+    #[error("config: {0}")]
+    Invalid(String),
+}
+
+/// One component invocation from the CI file.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ComponentInvocation {
+    pub component: String,
+    pub inputs: Json,
+}
+
+/// When pipelines run.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Schedule {
+    /// Every day at the given hour (0-23).
+    Daily { hour: u8 },
+    /// Every `n` days at the given hour.
+    EveryDays { n: u32, hour: u8 },
+}
+
+impl Schedule {
+    /// Seconds-of-epoch of the first firing strictly after `after`.
+    pub fn next_fire(&self, after: crate::util::timeutil::SimTime) -> crate::util::timeutil::SimTime {
+        use crate::util::timeutil::{SimTime, SECS_PER_DAY};
+        let (period, hour) = match self {
+            Schedule::Daily { hour } => (1i64, *hour as i64),
+            Schedule::EveryDays { n, hour } => (*n as i64, *hour as i64),
+        };
+        let mut day = after.0.div_euclid(SECS_PER_DAY);
+        loop {
+            let candidate = SimTime(day * SECS_PER_DAY + hour * 3600);
+            if candidate > after && day % period == 0 {
+                return candidate;
+            }
+            day += 1;
+        }
+    }
+}
+
+/// A parsed CI configuration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CiConfig {
+    pub invocations: Vec<ComponentInvocation>,
+    pub schedule: Option<Schedule>,
+}
+
+impl CiConfig {
+    pub fn parse(text: &str) -> Result<CiConfig, ConfigError> {
+        let doc = yamlite::parse(text).map_err(|e| ConfigError::Yaml(e.to_string()))?;
+        Self::from_json(&doc)
+    }
+
+    pub fn from_json(doc: &Json) -> Result<CiConfig, ConfigError> {
+        let mut invocations = Vec::new();
+        if let Some(includes) = doc.get("include").and_then(Json::as_arr) {
+            for (i, inc) in includes.iter().enumerate() {
+                invocations.push(parse_invocation(inc, &format!("include[{i}]"))?);
+            }
+        }
+        if doc.get("component").is_some() {
+            invocations.push(parse_invocation(doc, "top-level")?);
+        }
+        // `- component:` directly at top level (a bare list document)
+        if let Json::Arr(items) = doc {
+            for (i, item) in items.iter().enumerate() {
+                if item.get("component").is_some() {
+                    invocations.push(parse_invocation(item, &format!("[{i}]"))?);
+                }
+            }
+        }
+        if invocations.is_empty() {
+            return Err(ConfigError::Invalid(
+                "no component invocations found".into(),
+            ));
+        }
+        let schedule = match doc.get("schedule") {
+            None => None,
+            Some(s) => Some(parse_schedule(s)?),
+        };
+        Ok(CiConfig {
+            invocations,
+            schedule,
+        })
+    }
+}
+
+fn parse_invocation(v: &Json, at: &str) -> Result<ComponentInvocation, ConfigError> {
+    let component = v
+        .str_of("component")
+        .ok_or_else(|| ConfigError::Invalid(format!("{at}: missing 'component'")))?
+        .to_string();
+    let inputs = match v.get("inputs") {
+        None => Json::obj(),
+        Some(o @ Json::Obj(_)) => o.clone(),
+        Some(_) => {
+            return Err(ConfigError::Invalid(format!(
+                "{at}: 'inputs' must be a mapping"
+            )))
+        }
+    };
+    Ok(ComponentInvocation { component, inputs })
+}
+
+fn parse_schedule(v: &Json) -> Result<Schedule, ConfigError> {
+    let hour = v.u64_of("hour").unwrap_or(3) as u8;
+    if hour > 23 {
+        return Err(ConfigError::Invalid("schedule hour must be 0-23".into()));
+    }
+    match v.str_of("every") {
+        Some("day") | None => Ok(Schedule::Daily { hour }),
+        Some(other) => {
+            if let Some(days) = other
+                .strip_suffix("days")
+                .map(str::trim)
+                .and_then(|n| n.parse::<u32>().ok())
+            {
+                Ok(Schedule::EveryDays { n: days, hour })
+            } else {
+                Err(ConfigError::Invalid(format!(
+                    "unsupported schedule '{other}'"
+                )))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::timeutil::SimTime;
+
+    #[test]
+    fn parses_include_form() {
+        let text = r#"
+include:
+  - component: example/jube@v3.2
+    inputs:
+      prefix: "jedi.strong.tiny"
+      variant: "large-intensity"
+      machine: "jedi"
+      queue: "all"
+      project: "cjsc"
+      budget: "zam"
+      jube_file: "simple.yaml"
+"#;
+        let cfg = CiConfig::parse(text).unwrap();
+        assert_eq!(cfg.invocations.len(), 1);
+        assert_eq!(cfg.invocations[0].component, "example/jube@v3.2");
+        assert_eq!(
+            cfg.invocations[0].inputs.str_of("budget"),
+            Some("zam")
+        );
+        assert!(cfg.schedule.is_none());
+    }
+
+    #[test]
+    fn parses_single_component_form() {
+        let text = "component: execution@v3\ninputs:\n  prefix: p\n  machine: jedi\n";
+        let cfg = CiConfig::parse(text).unwrap();
+        assert_eq!(cfg.invocations[0].component, "execution@v3");
+    }
+
+    #[test]
+    fn parses_schedule() {
+        let text = "component: execution@v3\ninputs:\n  prefix: p\nschedule:\n  every: day\n  hour: 4\n";
+        let cfg = CiConfig::parse(text).unwrap();
+        assert_eq!(cfg.schedule, Some(Schedule::Daily { hour: 4 }));
+    }
+
+    #[test]
+    fn schedule_next_fire() {
+        let s = Schedule::Daily { hour: 3 };
+        let t0 = SimTime(0);
+        let f1 = s.next_fire(t0);
+        assert_eq!(f1.iso8601(), "2026-01-01T03:00:00Z");
+        let f2 = s.next_fire(f1);
+        assert_eq!(f2.iso8601(), "2026-01-02T03:00:00Z");
+        let e = Schedule::EveryDays { n: 7, hour: 0 };
+        let f = e.next_fire(SimTime(1));
+        assert_eq!(f.date_string(), "2026-01-08");
+    }
+
+    #[test]
+    fn multiple_includes() {
+        let text = r#"
+include:
+  - component: execution@v3
+    inputs:
+      prefix: a
+  - component: time-series@v3
+    inputs:
+      prefix: b
+"#;
+        let cfg = CiConfig::parse(text).unwrap();
+        assert_eq!(cfg.invocations.len(), 2);
+    }
+
+    #[test]
+    fn empty_config_rejected() {
+        assert!(CiConfig::parse("stages: [build]\n").is_err());
+    }
+
+    #[test]
+    fn bad_schedule_rejected() {
+        let text = "component: c\nschedule:\n  every: fortnight\n";
+        assert!(CiConfig::parse(text).is_err());
+        let text = "component: c\nschedule:\n  hour: 99\n";
+        assert!(CiConfig::parse(text).is_err());
+    }
+}

@@ -1,0 +1,24 @@
+//! CI/CD engine substrate (paper §IV-C, §V-A; DESIGN.md §2 — GitLab
+//! replacement).
+//!
+//! * [`config`] — `.gitlab-ci.yml`-style parsing (includes, components,
+//!   inputs, schedules).
+//! * [`component`] — the component catalog with typed-input validation.
+//! * [`pipeline`] — pipelines, CI jobs, artifacts, triggers.
+//! * [`runner`] — the Jacamar-like login-node runner bridging CI jobs to
+//!   the batch scheduler.
+//!
+//! The engine is passive: *executing* a component (interpreting its
+//! resolved inputs against the cluster/scheduler/harness) is the
+//! orchestrators' job (`coordinator`), keeping front end and back end
+//! decoupled exactly as the protocol prescribes.
+
+pub mod component;
+pub mod config;
+pub mod pipeline;
+pub mod runner;
+
+pub use component::{ComponentError, ComponentRegistry, ComponentSpec, InputSpec, InputType};
+pub use config::{CiConfig, ComponentInvocation, ConfigError, Schedule};
+pub use pipeline::{CiJob, CiJobState, IdAllocator, Pipeline, Trigger};
+pub use runner::{Runner, RunnerError};

@@ -1,0 +1,195 @@
+//! Pipelines, CI jobs, and artifacts (the GitLab-shaped execution model).
+//!
+//! Each orchestrator stage "is realized as an individual CI job. The jobs
+//! communicate between themselves primarily through the CI/CD's native
+//! artifact management capabilities" (paper §IV-C). A pipeline is a run
+//! of a repository's CI config; its jobs carry artifacts (named text
+//! files) and a log.
+
+use crate::util::json::Json;
+use crate::util::timeutil::SimTime;
+
+/// Why a pipeline ran.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Trigger {
+    Manual,
+    Scheduled,
+    Push,
+    /// Cross-triggered by another repository's pipeline (§IV-C).
+    Cross { from_pipeline: u64 },
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CiJobState {
+    Created,
+    Running,
+    Success,
+    Failed,
+}
+
+/// One CI job (one orchestrator stage execution).
+#[derive(Debug, Clone)]
+pub struct CiJob {
+    pub id: u64,
+    /// `<prefix>.<stage>` naming, e.g. `jureca.single.execute`.
+    pub name: String,
+    pub state: CiJobState,
+    pub artifacts: Vec<(String, String)>,
+    pub log: Vec<String>,
+    /// Structured outcome for downstream jobs (beyond raw artifacts).
+    pub output: Json,
+}
+
+impl CiJob {
+    pub fn new(id: u64, name: &str) -> CiJob {
+        CiJob {
+            id,
+            name: name.to_string(),
+            state: CiJobState::Created,
+            artifacts: Vec::new(),
+            log: Vec::new(),
+            output: Json::obj(),
+        }
+    }
+
+    pub fn artifact(&self, name: &str) -> Option<&str> {
+        self.artifacts
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, c)| c.as_str())
+    }
+
+    pub fn add_artifact(&mut self, name: &str, content: &str) {
+        self.artifacts.push((name.to_string(), content.to_string()));
+    }
+
+    pub fn log_line(&mut self, line: impl Into<String>) {
+        self.log.push(line.into());
+    }
+}
+
+/// A pipeline: one run of a repository's CI configuration.
+#[derive(Debug, Clone)]
+pub struct Pipeline {
+    pub id: u64,
+    pub repo: String,
+    pub trigger: Trigger,
+    pub created: SimTime,
+    pub jobs: Vec<CiJob>,
+}
+
+impl Pipeline {
+    pub fn succeeded(&self) -> bool {
+        !self.jobs.is_empty() && self.jobs.iter().all(|j| j.state == CiJobState::Success)
+    }
+
+    pub fn job(&self, name: &str) -> Option<&CiJob> {
+        self.jobs.iter().find(|j| j.name == name)
+    }
+
+    /// Artifacts from all jobs, job-name-qualified.
+    pub fn all_artifacts(&self) -> Vec<(String, &str)> {
+        self.jobs
+            .iter()
+            .flat_map(|j| {
+                j.artifacts
+                    .iter()
+                    .map(move |(n, c)| (format!("{}/{}", j.name, n), c.as_str()))
+            })
+            .collect()
+    }
+}
+
+/// Monotonic id allocation for pipelines and CI jobs.
+#[derive(Debug, Clone)]
+pub struct IdAllocator {
+    next_pipeline: u64,
+    next_job: u64,
+}
+
+impl Default for IdAllocator {
+    fn default() -> Self {
+        // GitLab-flavoured id ranges (the paper shows pipeline 221622).
+        IdAllocator {
+            next_pipeline: 221_600,
+            next_job: 900_000,
+        }
+    }
+}
+
+impl IdAllocator {
+    pub fn new() -> IdAllocator {
+        IdAllocator::default()
+    }
+
+    pub fn pipeline_id(&mut self) -> u64 {
+        let id = self.next_pipeline;
+        self.next_pipeline += 1;
+        id
+    }
+
+    pub fn job_id(&mut self) -> u64 {
+        let id = self.next_job;
+        self.next_job += 1;
+        id
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pipeline_success_requires_all_jobs() {
+        let mut p = Pipeline {
+            id: 1,
+            repo: "logmap".into(),
+            trigger: Trigger::Manual,
+            created: SimTime(0),
+            jobs: vec![CiJob::new(1, "a"), CiJob::new(2, "b")],
+        };
+        assert!(!p.succeeded());
+        p.jobs[0].state = CiJobState::Success;
+        p.jobs[1].state = CiJobState::Success;
+        assert!(p.succeeded());
+        p.jobs[1].state = CiJobState::Failed;
+        assert!(!p.succeeded());
+    }
+
+    #[test]
+    fn artifacts_are_job_scoped() {
+        let mut p = Pipeline {
+            id: 1,
+            repo: "r".into(),
+            trigger: Trigger::Scheduled,
+            created: SimTime(0),
+            jobs: vec![CiJob::new(1, "execute")],
+        };
+        p.jobs[0].add_artifact("results.csv", "a,b\n1,2\n");
+        assert_eq!(p.job("execute").unwrap().artifact("results.csv").unwrap(), "a,b\n1,2\n");
+        assert!(p.job("execute").unwrap().artifact("nope").is_none());
+        let all = p.all_artifacts();
+        assert_eq!(all[0].0, "execute/results.csv");
+    }
+
+    #[test]
+    fn id_allocation_is_monotonic() {
+        let mut ids = IdAllocator::new();
+        let a = ids.pipeline_id();
+        let b = ids.pipeline_id();
+        assert_eq!(b, a + 1);
+        assert_ne!(ids.job_id(), ids.job_id());
+    }
+
+    #[test]
+    fn empty_pipeline_not_successful() {
+        let p = Pipeline {
+            id: 1,
+            repo: "r".into(),
+            trigger: Trigger::Push,
+            created: SimTime(0),
+            jobs: vec![],
+        };
+        assert!(!p.succeeded());
+    }
+}

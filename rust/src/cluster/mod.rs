@@ -1,0 +1,152 @@
+//! Simulated HPC cluster substrate (DESIGN.md §2).
+//!
+//! The paper evaluates on JUPITER, JEDI, JUWELS Booster and JURECA-DC;
+//! none of which are available here, so this module models the hardware
+//! behaviour the experiments depend on: GPU generations and memory
+//! bandwidth ([`machine`]), the interconnect with UCX protocol switching
+//! ([`network`]), power/frequency response ([`power`]), and software
+//! stages plus timed system events ([`stage`]).
+//!
+//! [`Cluster`] ties it together: a set of machines with an event log and
+//! a per-run environment view used by the workload models.
+
+pub mod machine;
+pub mod network;
+pub mod power;
+pub mod stage;
+
+pub use machine::{standard_machines, GpuGen, Machine};
+pub use network::NetworkLink;
+pub use power::PowerModel;
+pub use stage::{EventLog, MetricClass, SoftwareStage, SystemEvent};
+
+use crate::util::prng::Prng;
+use crate::util::timeutil::SimTime;
+
+/// The simulated computing centre: machines + system-event history.
+#[derive(Debug, Clone)]
+pub struct Cluster {
+    pub machines: Vec<Machine>,
+    pub events: EventLog,
+}
+
+impl Cluster {
+    /// The standard JSC-like centre.
+    pub fn standard() -> Cluster {
+        Cluster {
+            machines: standard_machines(),
+            events: EventLog::new(),
+        }
+    }
+
+    pub fn with_events(mut self, events: EventLog) -> Cluster {
+        self.events = events;
+        self
+    }
+
+    pub fn machine(&self, name: &str) -> Option<&Machine> {
+        self.machines.iter().find(|m| m.name == name)
+    }
+
+    /// The execution environment for one run: machine view at a point in
+    /// time, with stage + event factors resolved.
+    pub fn env_at<'a>(
+        &'a self,
+        machine: &str,
+        stage: &SoftwareStage,
+        t: SimTime,
+    ) -> Option<RunEnv<'a>> {
+        let m = self.machine(machine)?;
+        Some(RunEnv {
+            machine: m,
+            stage: stage.clone(),
+            time: t,
+            events: &self.events,
+        })
+    }
+}
+
+/// Resolved per-run environment: what a job launched on `machine` at
+/// `time` under `stage` actually sees.
+#[derive(Debug, Clone)]
+pub struct RunEnv<'a> {
+    pub machine: &'a Machine,
+    pub stage: SoftwareStage,
+    pub time: SimTime,
+    events: &'a EventLog,
+}
+
+impl<'a> RunEnv<'a> {
+    /// Combined multiplicative factor for a metric class: stage × events.
+    pub fn factor(&self, class: MetricClass) -> f64 {
+        self.stage.factor(class) * self.events.factor_at(&self.machine.name, class, self.time)
+    }
+
+    /// Effective attainable STREAM bandwidth per GPU [MB/s] now.
+    pub fn stream_bw_mbs(&self) -> f64 {
+        self.machine.stream_bw_mbs() * self.factor(MetricClass::MemBw)
+    }
+
+    /// Effective pt2pt bandwidth [MB/s] for a message size + threshold.
+    pub fn pt2pt_bw_mbs(&self, bytes: u64, rndv_thresh: u64) -> f64 {
+        self.machine.network.pt2pt_bw_mbs(bytes, rndv_thresh) * self.factor(MetricClass::Network)
+    }
+
+    /// Multiplicative run-to-run noise for this machine.
+    pub fn noise(&self, rng: &mut Prng) -> f64 {
+        rng.jitter(self.machine.noise_sigma)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn env_resolves_factors() {
+        let cluster =
+            Cluster::standard().with_events(EventLog::fig4_scenario("jupiter"));
+        let stage = SoftwareStage::stage_2026();
+        let before = cluster
+            .env_at("jupiter", &stage, SimTime::from_days(10))
+            .unwrap();
+        let during = cluster
+            .env_at("jupiter", &stage, SimTime::from_days(45))
+            .unwrap();
+        assert_eq!(before.factor(MetricClass::Network), 1.0);
+        assert!((during.factor(MetricClass::Network) - 0.72).abs() < 1e-12);
+        // memory bandwidth unaffected (Fig. 3 stays flat while Fig. 4 dips)
+        assert_eq!(during.factor(MetricClass::MemBw), 1.0);
+    }
+
+    #[test]
+    fn stage_and_event_factors_compose() {
+        let cluster = Cluster::standard().with_events(EventLog::fig4_scenario("jedi"));
+        let env = cluster
+            .env_at("jedi", &SoftwareStage::stage_2025(), SimTime::from_days(45))
+            .unwrap();
+        let expect = 0.90 * 0.72;
+        assert!((env.factor(MetricClass::Network) - expect).abs() < 1e-12);
+    }
+
+    #[test]
+    fn unknown_machine_is_none() {
+        let cluster = Cluster::standard();
+        assert!(cluster
+            .env_at("frontier", &SoftwareStage::stage_2026(), SimTime(0))
+            .is_none());
+    }
+
+    #[test]
+    fn noise_is_small_and_positive() {
+        let cluster = Cluster::standard();
+        let env = cluster
+            .env_at("jedi", &SoftwareStage::stage_2026(), SimTime(0))
+            .unwrap();
+        let mut rng = Prng::new(1);
+        for _ in 0..100 {
+            let n = env.noise(&mut rng);
+            assert!(n > 0.9 && n < 1.1);
+        }
+    }
+}

@@ -1,0 +1,167 @@
+//! Inter-node network model with UCX-style protocol switching.
+//!
+//! Fig. 6 of the paper evaluates OSU pt2pt bandwidth under different
+//! `UCX_RNDV_THRESH` values. The model reproduces the mechanism:
+//!
+//! * **eager** protocol — message is copied through pre-posted bounce
+//!   buffers: low startup cost, but an extra copy caps bandwidth and the
+//!   per-message overhead grows with size.
+//! * **rendezvous (rndv)** — an RTS/CTS handshake adds fixed latency,
+//!   then zero-copy RDMA streams at near line rate.
+//!
+//! Small messages favour eager (handshake dominates), large messages
+//! favour rendezvous (copy dominates); the crossover is exactly what
+//! moving `UCX_RNDV_THRESH` exposes.
+
+/// A point-to-point network link.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NetworkLink {
+    pub name: String,
+    /// Base one-way latency [µs].
+    pub latency_us: f64,
+    /// Peak (zero-copy) link bandwidth [GB/s].
+    pub bw_gbs: f64,
+    /// Rendezvous handshake cost [µs] (RTS/CTS round trip + pin).
+    pub rndv_handshake_us: f64,
+    /// Eager-path effective bandwidth fraction (extra copy penalty).
+    pub eager_bw_fraction: f64,
+    /// Per-KB packetisation overhead on the eager path [µs/KB].
+    pub eager_per_kb_us: f64,
+    /// Default rendezvous threshold [bytes] (UCX_RNDV_THRESH default).
+    pub default_rndv_thresh: u64,
+}
+
+impl NetworkLink {
+    /// InfiniBand NDR (400 Gb/s class — JEDI/JUPITER).
+    pub fn ndr400() -> NetworkLink {
+        NetworkLink {
+            name: "IB-NDR400".into(),
+            latency_us: 0.9,
+            bw_gbs: 48.0,
+            rndv_handshake_us: 2.2,
+            eager_bw_fraction: 0.55,
+            eager_per_kb_us: 0.012,
+            default_rndv_thresh: 8192,
+        }
+    }
+
+    /// InfiniBand HDR (200 Gb/s — JUWELS Booster).
+    pub fn hdr200() -> NetworkLink {
+        NetworkLink {
+            name: "IB-HDR200".into(),
+            latency_us: 1.1,
+            bw_gbs: 24.0,
+            rndv_handshake_us: 2.6,
+            eager_bw_fraction: 0.55,
+            eager_per_kb_us: 0.02,
+            default_rndv_thresh: 8192,
+        }
+    }
+
+    /// InfiniBand HDR100 (JURECA-DC class).
+    pub fn hdr100() -> NetworkLink {
+        NetworkLink {
+            name: "IB-HDR100".into(),
+            latency_us: 1.2,
+            bw_gbs: 12.0,
+            rndv_handshake_us: 2.8,
+            eager_bw_fraction: 0.55,
+            eager_per_kb_us: 0.03,
+            default_rndv_thresh: 8192,
+        }
+    }
+
+    /// Transfer time [µs] for `bytes` with a given rendezvous threshold.
+    pub fn pt2pt_time_us(&self, bytes: u64, rndv_thresh: u64) -> f64 {
+        let kb = bytes as f64 / 1024.0;
+        if bytes < rndv_thresh {
+            // eager: base latency + packetisation + copy-limited stream
+            self.latency_us
+                + self.eager_per_kb_us * kb
+                + bytes as f64 / (self.bw_gbs * self.eager_bw_fraction * 1e3)
+        } else {
+            // rendezvous: handshake + zero-copy stream at line rate
+            self.latency_us
+                + self.rndv_handshake_us
+                + bytes as f64 / (self.bw_gbs * 1e3)
+        }
+    }
+
+    /// OSU-style bandwidth [MB/s] for a message size under a threshold.
+    pub fn pt2pt_bw_mbs(&self, bytes: u64, rndv_thresh: u64) -> f64 {
+        let t_us = self.pt2pt_time_us(bytes, rndv_thresh);
+        bytes as f64 / t_us // bytes/µs == MB/s
+    }
+
+    /// Ring-allreduce time [µs] for `bytes` over `n` ranks (2(n-1)/n data
+    /// exchange volume, handshake per step). Used by the scaling models.
+    pub fn allreduce_time_us(&self, bytes: u64, ranks: u64) -> f64 {
+        if ranks <= 1 {
+            return 0.0;
+        }
+        let steps = 2 * (ranks - 1);
+        let chunk = bytes as f64 / ranks as f64;
+        steps as f64
+            * (self.latency_us + self.rndv_handshake_us + chunk / (self.bw_gbs * 1e3))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eager_wins_small_rndv_wins_large() {
+        let link = NetworkLink::ndr400();
+        // 256 B: eager faster than forcing rendezvous
+        let eager = link.pt2pt_time_us(256, 1 << 20);
+        let rndv = link.pt2pt_time_us(256, 0);
+        assert!(eager < rndv, "eager={eager} rndv={rndv}");
+        // 4 MB: rendezvous faster than forcing eager
+        let eager = link.pt2pt_time_us(4 << 20, u64::MAX);
+        let rndv = link.pt2pt_time_us(4 << 20, 0);
+        assert!(rndv < eager, "eager={eager} rndv={rndv}");
+    }
+
+    #[test]
+    fn bandwidth_monotone_toward_line_rate() {
+        let link = NetworkLink::ndr400();
+        let bw_small = link.pt2pt_bw_mbs(1024, link.default_rndv_thresh);
+        let bw_large = link.pt2pt_bw_mbs(4 << 20, link.default_rndv_thresh);
+        assert!(bw_large > bw_small);
+        // large-message bandwidth approaches line rate (within 15%)
+        assert!(bw_large > link.bw_gbs * 1e3 * 0.85);
+        assert!(bw_large <= link.bw_gbs * 1e3);
+    }
+
+    #[test]
+    fn threshold_moves_the_crossover() {
+        // Fig. 6's observable: at message sizes between two thresholds the
+        // protocol (and thus bandwidth) differs.
+        let link = NetworkLink::ndr400();
+        let msg = 512 * 1024;
+        let rndv = link.pt2pt_bw_mbs(msg, 64 * 1024); // rendezvous at 512k
+        let eager = link.pt2pt_bw_mbs(msg, 1 << 20); // forced eager at 512k
+        assert!(
+            (rndv - eager) / eager > 0.30,
+            "threshold must visibly change mid-size bandwidth: {rndv} vs {eager}"
+        );
+    }
+
+    #[test]
+    fn allreduce_scales_with_ranks_and_bytes() {
+        let link = NetworkLink::hdr200();
+        let t2 = link.allreduce_time_us(1 << 20, 2);
+        let t8 = link.allreduce_time_us(1 << 20, 8);
+        assert!(t8 > t2);
+        assert_eq!(link.allreduce_time_us(1 << 20, 1), 0.0);
+    }
+
+    #[test]
+    fn generation_ordering() {
+        let small = 1 << 22;
+        let ndr = NetworkLink::ndr400().pt2pt_bw_mbs(small, 8192);
+        let hdr = NetworkLink::hdr200().pt2pt_bw_mbs(small, 8192);
+        assert!(ndr > 1.5 * hdr);
+    }
+}

@@ -1,0 +1,149 @@
+//! GPU power/frequency models (Fig. 8 power traces, Fig. 9 energy bowls).
+//!
+//! Mechanics encoded:
+//! * dynamic power grows ~cubically with core clock: P(f) = P_idle +
+//!   (P_tdp - P_idle)·(f/f_nom)³·u, with utilisation u from the phase,
+//! * application throughput grows *sub-linearly* with clock — a fraction
+//!   `mem_bound` of the work is memory-bound and does not scale with f,
+//! * therefore energy-to-solution E(f) = P(f)·T(f) has an interior
+//!   minimum ("sweet spot") below f_nom — exactly what the paper's Fig. 9
+//!   frequency study finds.
+
+/// Per-GPU power model.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PowerModel {
+    /// Idle power [W].
+    pub idle_w: f64,
+    /// TDP at nominal clock, full utilisation [W].
+    pub tdp_w: f64,
+    /// Nominal (maximum) core clock [MHz].
+    pub nominal_mhz: f64,
+    /// Minimum settable clock [MHz].
+    pub min_mhz: f64,
+    /// Power-measurement sensor noise sigma [W].
+    pub sensor_noise_w: f64,
+}
+
+impl PowerModel {
+    pub fn a100() -> PowerModel {
+        PowerModel {
+            idle_w: 55.0,
+            tdp_w: 400.0,
+            nominal_mhz: 1410.0,
+            min_mhz: 210.0,
+            sensor_noise_w: 4.0,
+        }
+    }
+
+    pub fn gh200() -> PowerModel {
+        PowerModel {
+            idle_w: 75.0,
+            tdp_w: 700.0,
+            nominal_mhz: 1980.0,
+            min_mhz: 345.0,
+            sensor_noise_w: 6.0,
+        }
+    }
+
+    /// Instantaneous power [W] at clock `f_mhz` and utilisation `u` ∈ [0,1].
+    ///
+    /// Dynamic power follows P_dyn ∝ f·V²; DVFS lowers voltage with the
+    /// clock down to a **voltage floor** (~55% of nominal) below which
+    /// only the linear-in-f term remains — the reason real energy bowls
+    /// flatten at the low end instead of plunging cubically.
+    pub fn power_w(&self, f_mhz: f64, u: f64) -> f64 {
+        let f = (f_mhz / self.nominal_mhz).clamp(0.1, 1.2);
+        let v = f.clamp(0.55, 1.0);
+        self.idle_w + (self.tdp_w - self.idle_w) * f * v * v * u.clamp(0.0, 1.0)
+    }
+
+    /// Relative application throughput at clock `f_mhz` for a workload
+    /// with memory-bound fraction `mem_bound` ∈ [0,1] (1.0 at nominal).
+    ///
+    /// Compute-bound work scales linearly with the clock; memory-bound
+    /// work barely scales — but below ~35% of nominal even memory-bound
+    /// kernels lose throughput (issue-rate/latency limit), which is what
+    /// keeps the Fig. 9 sweet spots interior.
+    pub fn perf_factor(&self, f_mhz: f64, mem_bound: f64) -> f64 {
+        let f = (f_mhz / self.nominal_mhz).clamp(0.05, 1.2);
+        let mb = mem_bound.clamp(0.0, 1.0);
+        let issue = (f / 0.35).min(1.0).powf(0.3);
+        (mb + (1.0 - mb) * f) * issue
+    }
+
+    /// Energy-to-solution [J] for a workload of `t_nominal_s` seconds at
+    /// nominal clock, run instead at `f_mhz`.
+    pub fn energy_j(&self, f_mhz: f64, t_nominal_s: f64, u: f64, mem_bound: f64) -> f64 {
+        let t = t_nominal_s / self.perf_factor(f_mhz, mem_bound);
+        self.power_w(f_mhz, u) * t
+    }
+
+    /// Frequency [MHz] minimising energy-to-solution (grid search over
+    /// the settable range — mirrors the paper's empirical sweep).
+    pub fn sweet_spot_mhz(&self, u: f64, mem_bound: f64) -> f64 {
+        let mut best = (self.nominal_mhz, f64::MAX);
+        let mut f = self.min_mhz;
+        while f <= self.nominal_mhz + 1e-9 {
+            let e = self.energy_j(f, 1.0, u, mem_bound);
+            if e < best.1 {
+                best = (f, e);
+            }
+            f += 15.0;
+        }
+        best.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn power_monotone_in_frequency_and_util() {
+        let p = PowerModel::a100();
+        assert!(p.power_w(1410.0, 1.0) > p.power_w(800.0, 1.0));
+        assert!(p.power_w(1410.0, 1.0) > p.power_w(1410.0, 0.3));
+        assert!((p.power_w(1410.0, 1.0) - p.tdp_w).abs() < 1.0);
+        assert!((p.power_w(1410.0, 0.0) - p.idle_w).abs() < 1.0);
+    }
+
+    #[test]
+    fn perf_linear_for_compute_flat_for_memory() {
+        let p = PowerModel::gh200();
+        // pure compute: halving clock halves perf
+        let half = p.perf_factor(990.0, 0.0);
+        assert!((half - 0.5).abs() < 1e-9);
+        // pure memory-bound: clock barely matters
+        let mb = p.perf_factor(990.0, 1.0);
+        assert!((mb - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn energy_bowl_has_interior_minimum() {
+        // Fig. 9's premise: the sweet spot is strictly inside the range.
+        let p = PowerModel::a100();
+        for mem_bound in [0.3, 0.5, 0.7] {
+            let spot = p.sweet_spot_mhz(0.9, mem_bound);
+            assert!(
+                spot > p.min_mhz && spot < p.nominal_mhz,
+                "mem_bound={mem_bound} spot={spot}"
+            );
+            // energy at the spot beats both extremes by a visible margin
+            let e_spot = p.energy_j(spot, 100.0, 0.9, mem_bound);
+            let e_min = p.energy_j(p.min_mhz, 100.0, 0.9, mem_bound);
+            let e_nom = p.energy_j(p.nominal_mhz, 100.0, 0.9, mem_bound);
+            assert!(e_spot < e_min && e_spot < e_nom);
+        }
+    }
+
+    #[test]
+    fn more_memory_bound_means_lower_sweet_spot() {
+        let p = PowerModel::gh200();
+        let compute_spot = p.sweet_spot_mhz(0.9, 0.2);
+        let memory_spot = p.sweet_spot_mhz(0.9, 0.8);
+        assert!(
+            memory_spot < compute_spot,
+            "memory-bound={memory_spot} compute-bound={compute_spot}"
+        );
+    }
+}

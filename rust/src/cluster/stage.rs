@@ -1,0 +1,218 @@
+//! Software stages and timed system events.
+//!
+//! JSC deploys software in yearly "stages" (the paper's Fig. 7 compares
+//! stage 2025 vs 2026); independently, the system evolves over time —
+//! driver updates, fabric reconfigurations, firmware — which shows up in
+//! daily benchmark series as regressions and recoveries (Fig. 4).
+//!
+//! Both are modelled as multiplicative factors on *metric classes*:
+//! `compute`, `membw`, `network`, `io`. A stage carries static factors;
+//! an event changes a factor from its date onward.
+
+use crate::util::timeutil::SimTime;
+
+/// What part of the machine a factor applies to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum MetricClass {
+    Compute,
+    MemBw,
+    Network,
+    Io,
+}
+
+impl MetricClass {
+    pub fn name(&self) -> &'static str {
+        match self {
+            MetricClass::Compute => "compute",
+            MetricClass::MemBw => "membw",
+            MetricClass::Network => "network",
+            MetricClass::Io => "io",
+        }
+    }
+}
+
+/// A named software stage with per-class performance factors (1.0 = the
+/// 2026 reference stage).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SoftwareStage {
+    pub name: String,
+    pub compute: f64,
+    pub membw: f64,
+    pub network: f64,
+    pub io: f64,
+}
+
+impl SoftwareStage {
+    pub fn factor(&self, class: MetricClass) -> f64 {
+        match class {
+            MetricClass::Compute => self.compute,
+            MetricClass::MemBw => self.membw,
+            MetricClass::Network => self.network,
+            MetricClass::Io => self.io,
+        }
+    }
+
+    /// The 2026 reference stage.
+    pub fn stage_2026() -> SoftwareStage {
+        SoftwareStage {
+            name: "2026".into(),
+            compute: 1.0,
+            membw: 1.0,
+            network: 1.0,
+            io: 1.0,
+        }
+    }
+
+    /// The older 2025 stage: slightly slower compiler output and an MPI
+    /// with poorer collectives — the gap Fig. 7 visualises.
+    pub fn stage_2025() -> SoftwareStage {
+        SoftwareStage {
+            name: "2025".into(),
+            compute: 0.94,
+            membw: 0.995,
+            network: 0.90,
+            io: 0.97,
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<SoftwareStage> {
+        match name {
+            "2025" | "stage-2025" => Some(Self::stage_2025()),
+            "2026" | "stage-2026" => Some(Self::stage_2026()),
+            _ => None,
+        }
+    }
+}
+
+/// A timed change to a metric-class factor on one system.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SystemEvent {
+    pub machine: String,
+    pub date: SimTime,
+    pub class: MetricClass,
+    /// New factor in effect from `date` (replaces the previous one).
+    pub factor: f64,
+    pub description: String,
+}
+
+/// Event log for a simulation; answers "what is the factor for class C on
+/// machine M at time T".
+#[derive(Debug, Clone, Default)]
+pub struct EventLog {
+    events: Vec<SystemEvent>,
+}
+
+impl EventLog {
+    pub fn new() -> EventLog {
+        EventLog::default()
+    }
+
+    pub fn push(&mut self, ev: SystemEvent) {
+        self.events.push(ev);
+        self.events.sort_by_key(|e| e.date);
+    }
+
+    /// Effective factor at `t` (latest event at or before `t` wins; 1.0
+    /// if none).
+    pub fn factor_at(&self, machine: &str, class: MetricClass, t: SimTime) -> f64 {
+        self.events
+            .iter()
+            .filter(|e| e.machine == machine && e.class == class && e.date <= t)
+            .next_back()
+            .map(|e| e.factor)
+            .unwrap_or(1.0)
+    }
+
+    pub fn events(&self) -> &[SystemEvent] {
+        &self.events
+    }
+
+    /// The Fig. 4 scenario: an interconnect-firmware update regresses
+    /// network performance on `machine` at day 30 and a fix restores it
+    /// at day 60.
+    pub fn fig4_scenario(machine: &str) -> EventLog {
+        let mut log = EventLog::new();
+        log.push(SystemEvent {
+            machine: machine.into(),
+            date: SimTime::from_days(30),
+            class: MetricClass::Network,
+            factor: 0.72,
+            description: "fabric firmware update (regression)".into(),
+        });
+        log.push(SystemEvent {
+            machine: machine.into(),
+            date: SimTime::from_days(60),
+            class: MetricClass::Network,
+            factor: 1.0,
+            description: "fabric routing fix deployed (recovery)".into(),
+        });
+        log
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stage_lookup() {
+        assert_eq!(SoftwareStage::by_name("2025").unwrap().name, "2025");
+        assert_eq!(SoftwareStage::by_name("stage-2026").unwrap().name, "2026");
+        assert!(SoftwareStage::by_name("1999").is_none());
+    }
+
+    #[test]
+    fn stage_2025_is_slower_where_it_matters() {
+        let s = SoftwareStage::stage_2025();
+        assert!(s.factor(MetricClass::Network) < 1.0);
+        assert!(s.factor(MetricClass::Compute) < 1.0);
+        // memory bandwidth is essentially hardware-bound
+        assert!(s.factor(MetricClass::MemBw) > 0.99);
+    }
+
+    #[test]
+    fn event_log_latest_wins() {
+        let log = EventLog::fig4_scenario("jupiter");
+        let net = |d: i64| log.factor_at("jupiter", MetricClass::Network, SimTime::from_days(d));
+        assert_eq!(net(0), 1.0);
+        assert_eq!(net(29), 1.0);
+        assert!((net(30) - 0.72).abs() < 1e-12);
+        assert!((net(59) - 0.72).abs() < 1e-12);
+        assert_eq!(net(60), 1.0);
+        assert_eq!(net(89), 1.0);
+    }
+
+    #[test]
+    fn events_scoped_to_machine_and_class() {
+        let log = EventLog::fig4_scenario("jupiter");
+        assert_eq!(
+            log.factor_at("jedi", MetricClass::Network, SimTime::from_days(40)),
+            1.0
+        );
+        assert_eq!(
+            log.factor_at("jupiter", MetricClass::MemBw, SimTime::from_days(40)),
+            1.0
+        );
+    }
+
+    #[test]
+    fn unsorted_pushes_are_ordered() {
+        let mut log = EventLog::new();
+        log.push(SystemEvent {
+            machine: "m".into(),
+            date: SimTime::from_days(10),
+            class: MetricClass::Io,
+            factor: 0.5,
+            description: "later".into(),
+        });
+        log.push(SystemEvent {
+            machine: "m".into(),
+            date: SimTime::from_days(5),
+            class: MetricClass::Io,
+            factor: 0.8,
+            description: "earlier".into(),
+        });
+        assert!((log.factor_at("m", MetricClass::Io, SimTime::from_days(7)) - 0.8).abs() < 1e-12);
+        assert!((log.factor_at("m", MetricClass::Io, SimTime::from_days(12)) - 0.5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,275 @@
+//! Integration-mode ablation (paper §III, Fig. 2): centralization ×
+//! coupling.
+//!
+//! The paper argues qualitatively that quadrant ② — *decentralized
+//! repositories, strongly coupled to a central external harness* — is
+//! the most balanced design, and implements exaCB that way. This module
+//! turns the §III prose into a quantitative model and simulates the four
+//! quadrants over a collection lifecycle, reproducing the trade-offs as
+//! numbers (the Fig. 2 ablation bench).
+//!
+//! Modelled effects, each traceable to a §III claim:
+//! * centralized repos put a **curator-review queue** in front of both
+//!   onboarding and benchmark updates ("a contribution threshold ... may
+//!   create a bottleneck");
+//! * tight coupling propagates harness enhancements **immediately**
+//!   ("direct embedding ... ensures immediate propagation"), loose
+//!   coupling requires per-repo manual incorporation, "inducing delay or
+//!   even omission";
+//! * strong coupling to a shared protocol enables **collection-wide
+//!   experiments** ("can easily participate in collection-wide
+//!   large-scale experiments"), loose coupling makes them "cumbersome";
+//! * decentralization preserves **contributor autonomy** (loss of
+//!   control under central curation).
+
+use crate::util::prng::Prng;
+use crate::util::table::Table;
+
+/// The two §III axes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Centralization {
+    Central,
+    Distributed,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Coupling {
+    Tight,
+    Loose,
+}
+
+/// One quadrant of Fig. 2.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct IntegrationMode {
+    pub centralization: Centralization,
+    pub coupling: Coupling,
+}
+
+impl IntegrationMode {
+    /// Quadrant number as labelled in the paper's Fig. 2.
+    pub fn quadrant(&self) -> u8 {
+        match (self.centralization, self.coupling) {
+            (Centralization::Central, Coupling::Tight) => 1,
+            (Centralization::Distributed, Coupling::Tight) => 2,
+            (Centralization::Central, Coupling::Loose) => 3,
+            (Centralization::Distributed, Coupling::Loose) => 4,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self.quadrant() {
+            1 => "central+tight (monorepo)",
+            2 => "distributed+tight (exaCB)",
+            3 => "central+loose",
+            _ => "distributed+loose",
+        }
+    }
+
+    pub fn all() -> [IntegrationMode; 4] {
+        [
+            IntegrationMode {
+                centralization: Centralization::Central,
+                coupling: Coupling::Tight,
+            },
+            IntegrationMode {
+                centralization: Centralization::Distributed,
+                coupling: Coupling::Tight,
+            },
+            IntegrationMode {
+                centralization: Centralization::Central,
+                coupling: Coupling::Loose,
+            },
+            IntegrationMode {
+                centralization: Centralization::Distributed,
+                coupling: Coupling::Loose,
+            },
+        ]
+    }
+}
+
+/// Simulated lifecycle outcome for one mode.
+#[derive(Debug, Clone)]
+pub struct ModeOutcome {
+    pub mode: IntegrationMode,
+    /// Mean days from "team wants to onboard" to first green run.
+    pub onboarding_days: f64,
+    /// Mean days for a harness enhancement to reach all benchmarks.
+    pub propagation_days: f64,
+    /// Fraction of the collection reachable by a cross-experiment.
+    pub cross_experiment_coverage: f64,
+    /// Contributor autonomy score in [0, 1].
+    pub autonomy: f64,
+    /// Composite balance score (geometric mix of normalised criteria).
+    pub balance: f64,
+}
+
+/// Simulate a collection lifecycle: `n_benchmarks` onboard, then
+/// `n_enhancements` harness improvements roll out.
+pub fn simulate(mode: IntegrationMode, n_benchmarks: usize, n_enhancements: usize, seed: u64) -> ModeOutcome {
+    let mut rng = Prng::new(seed ^ mode.quadrant() as u64);
+    // --- onboarding ------------------------------------------------------
+    // base effort: adapting the benchmark to the harness conventions
+    let adapt_days = match mode.coupling {
+        Coupling::Tight => 3.0, // strict protocol conformance
+        Coupling::Loose => 1.5, // "fewer adaptions"
+    };
+    // curator review queue for centralized collections (serial, grows
+    // with queue position)
+    let mut onboarding = Vec::with_capacity(n_benchmarks);
+    for i in 0..n_benchmarks {
+        let review = match mode.centralization {
+            Centralization::Central => 2.0 + 0.15 * i as f64, // bottleneck grows
+            Centralization::Distributed => 0.5,               // self-service
+        };
+        onboarding.push(adapt_days * rng.jitter(0.3) + review * rng.jitter(0.2));
+    }
+    let onboarding_days = onboarding.iter().sum::<f64>() / n_benchmarks as f64;
+
+    // --- enhancement propagation ------------------------------------------
+    let mut propagation = Vec::with_capacity(n_enhancements);
+    for _ in 0..n_enhancements {
+        let d = match mode.coupling {
+            // shared harness: next scheduled run picks it up
+            Coupling::Tight => rng.range_f64(0.5, 1.5),
+            // each repo incorporates manually; some omit for a long time
+            Coupling::Loose => {
+                let mut worst: f64 = 0.0;
+                for _ in 0..n_benchmarks {
+                    let per_repo = if rng.bool_with(0.15) {
+                        rng.range_f64(30.0, 90.0) // omission
+                    } else {
+                        rng.range_f64(2.0, 14.0)
+                    };
+                    worst = worst.max(per_repo);
+                }
+                worst
+            }
+        };
+        propagation.push(d);
+    }
+    let propagation_days = propagation.iter().sum::<f64>() / n_enhancements as f64;
+
+    // --- cross-experiment coverage ----------------------------------------
+    let cross_experiment_coverage = match mode.coupling {
+        Coupling::Tight => 0.97, // protocol-aligned artifacts
+        Coupling::Loose => {
+            // only repos that happen to follow the guidelines closely
+            let mut covered = 0;
+            for _ in 0..n_benchmarks {
+                if rng.bool_with(0.45) {
+                    covered += 1;
+                }
+            }
+            covered as f64 / n_benchmarks as f64
+        }
+    };
+
+    // --- autonomy -----------------------------------------------------------
+    let autonomy = match (mode.centralization, mode.coupling) {
+        (Centralization::Distributed, Coupling::Loose) => 0.95,
+        (Centralization::Distributed, Coupling::Tight) => 0.80, // own repo, shared protocol
+        (Centralization::Central, Coupling::Loose) => 0.45,
+        (Centralization::Central, Coupling::Tight) => 0.30, // curators gate everything
+    };
+
+    // --- composite balance ---------------------------------------------------
+    // normalise each criterion to [0,1], higher is better
+    let onb = (10.0 - onboarding_days).clamp(0.0, 10.0) / 10.0;
+    let prop = (30.0 - propagation_days).clamp(0.0, 30.0) / 30.0;
+    let balance =
+        (onb * prop * cross_experiment_coverage * autonomy).powf(0.25);
+
+    ModeOutcome {
+        mode,
+        onboarding_days,
+        propagation_days,
+        cross_experiment_coverage,
+        autonomy,
+        balance,
+    }
+}
+
+/// Run the full Fig. 2 ablation and render the comparison table.
+pub fn run_ablation(n_benchmarks: usize, n_enhancements: usize, seed: u64) -> (Vec<ModeOutcome>, Table) {
+    let outcomes: Vec<ModeOutcome> = IntegrationMode::all()
+        .iter()
+        .map(|&m| simulate(m, n_benchmarks, n_enhancements, seed))
+        .collect();
+    let mut t = Table::new(&[
+        "quadrant",
+        "mode",
+        "onboard_days",
+        "propagate_days",
+        "cross_experiment",
+        "autonomy",
+        "balance",
+    ]);
+    for o in &outcomes {
+        t.push_row(vec![
+            o.mode.quadrant().to_string(),
+            o.mode.label().to_string(),
+            format!("{:.2}", o.onboarding_days),
+            format!("{:.2}", o.propagation_days),
+            format!("{:.2}", o.cross_experiment_coverage),
+            format!("{:.2}", o.autonomy),
+            format!("{:.3}", o.balance),
+        ]);
+    }
+    (outcomes, t)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn outcomes() -> Vec<ModeOutcome> {
+        run_ablation(70, 10, 2026).0
+    }
+
+    #[test]
+    fn exacb_quadrant_has_best_balance() {
+        // §III: "we consider the ... strongly-coupled, but uncentralized
+        // approach of 2 the most balanced"
+        let outs = outcomes();
+        let best = outs
+            .iter()
+            .max_by(|a, b| a.balance.partial_cmp(&b.balance).unwrap())
+            .unwrap();
+        assert_eq!(best.mode.quadrant(), 2, "{outs:#?}");
+    }
+
+    #[test]
+    fn tight_coupling_propagates_fast() {
+        let outs = outcomes();
+        let tight: Vec<&ModeOutcome> = outs
+            .iter()
+            .filter(|o| o.mode.coupling == Coupling::Tight)
+            .collect();
+        let loose: Vec<&ModeOutcome> = outs
+            .iter()
+            .filter(|o| o.mode.coupling == Coupling::Loose)
+            .collect();
+        for t in &tight {
+            for l in &loose {
+                assert!(t.propagation_days < l.propagation_days / 5.0);
+                assert!(t.cross_experiment_coverage > l.cross_experiment_coverage);
+            }
+        }
+    }
+
+    #[test]
+    fn central_curation_slows_onboarding() {
+        let outs = outcomes();
+        let central_tight = outs.iter().find(|o| o.mode.quadrant() == 1).unwrap();
+        let dist_tight = outs.iter().find(|o| o.mode.quadrant() == 2).unwrap();
+        assert!(central_tight.onboarding_days > dist_tight.onboarding_days);
+        assert!(central_tight.autonomy < dist_tight.autonomy);
+    }
+
+    #[test]
+    fn table_renders_all_quadrants() {
+        let (_, t) = run_ablation(20, 5, 1);
+        assert_eq!(t.len(), 4);
+        assert!(t.render().contains("exaCB"));
+    }
+}

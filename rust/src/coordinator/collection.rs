@@ -1,0 +1,311 @@
+//! Collection-scale continuous benchmarking (paper §VI-A): the JUREAP
+//! campaign manager.
+//!
+//! Onboards a portfolio of benchmark repositories at heterogeneous
+//! maturity levels, runs their scheduled pipelines across simulated
+//! days, and produces the cross-application analyses the paper
+//! highlights: uniform protocol capture regardless of maturity, success
+//! tracking, maturity histograms, per-domain aggregation.
+
+use crate::analysis::ReportSet;
+use crate::ci::Trigger;
+use crate::util::json::Json;
+use crate::util::table::Table;
+use crate::util::timeutil::SimTime;
+use crate::workloads::portfolio::{Maturity, PortfolioApp};
+
+use super::repo::BenchmarkRepo;
+use super::world::World;
+
+/// Build a benchmark repository for one portfolio application.
+///
+/// Maturity shapes the definition, mirroring the incremental-adoption
+/// ladder: runnability-level repos have the minimal runnable benchmark;
+/// instrumentability adds analysis patterns; reproducibility additionally
+/// pins the environment and records by default.
+pub fn repo_for_app(app: &PortfolioApp, machine: &str, queue: &str) -> BenchmarkRepo {
+    let mut jube = format!(
+        "name: {name}\nparametersets:\n  - name: run\n    parameters:\n      - name: nodes\n        value: {nodes}\n",
+        name = app.name,
+        nodes = app.nodes
+    );
+    jube.push_str("steps:\n  - name: execute\n    use: [run]\n    remote: true\n    do:\n");
+    jube.push_str(&format!("      - {}\n", app.command()));
+    if app.maturity >= Maturity::Instrumentability {
+        jube.push_str(
+            "analysis:\n  - name: tts_file\n    file: app.out\n    regex: \"time: ([0-9.eE+-]+)\"\n    type: float\n",
+        );
+    }
+    let ci = format!(
+        r#"
+include:
+  - component: execution@v3
+    inputs:
+      prefix: "{machine}.{name}"
+      machine: "{machine}"
+      queue: "{queue}"
+      project: "cexalab"
+      budget: "exalab"
+      jube_file: "benchmark/jube/app.yml"
+      record: "true"
+schedule:
+  every: day
+  hour: 3
+"#,
+        name = app.name
+    );
+    BenchmarkRepo::new(&app.name)
+        .with_file("benchmark/jube/app.yml", &jube)
+        .with_file(".gitlab-ci.yml", &ci)
+        .with_maturity(app.maturity)
+}
+
+/// Summary of a collection campaign.
+#[derive(Debug, Clone)]
+pub struct CollectionSummary {
+    pub apps: usize,
+    pub days: i64,
+    pub pipelines_run: usize,
+    pub pipelines_succeeded: usize,
+    pub reports_recorded: usize,
+    pub entries_ok: usize,
+    pub entries_total: usize,
+    pub core_hours: f64,
+    /// (maturity, app count, success rate)
+    pub by_maturity: Vec<(Maturity, usize, f64)>,
+    /// (domain, app count, median tts)
+    pub by_domain: Vec<(String, usize, f64)>,
+}
+
+impl CollectionSummary {
+    pub fn table(&self) -> Table {
+        let mut t = Table::new(&["maturity", "apps", "success_rate"]);
+        for (m, n, rate) in &self.by_maturity {
+            t.push_row(vec![
+                m.name().to_string(),
+                n.to_string(),
+                format!("{:.3}", rate),
+            ]);
+        }
+        t
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut by_m = Json::arr();
+        for (m, n, rate) in &self.by_maturity {
+            by_m.push(
+                Json::obj()
+                    .set("maturity", m.name())
+                    .set("apps", *n)
+                    .set("success_rate", *rate),
+            );
+        }
+        Json::obj()
+            .set("apps", self.apps)
+            .set("days", self.days as i64)
+            .set("pipelines_run", self.pipelines_run)
+            .set("pipelines_succeeded", self.pipelines_succeeded)
+            .set("reports_recorded", self.reports_recorded)
+            .set("entries_ok", self.entries_ok)
+            .set("entries_total", self.entries_total)
+            .set("core_hours", self.core_hours)
+            .set("by_maturity", by_m)
+    }
+}
+
+/// Onboard the portfolio into the world (one repo per app) and return
+/// the app list for bookkeeping.
+pub fn onboard(world: &mut World, apps: &[PortfolioApp], machine: &str, queue: &str) {
+    for app in apps {
+        world.add_repo(repo_for_app(app, machine, queue));
+    }
+}
+
+/// Run `days` of daily scheduled pipelines for every onboarded app.
+///
+/// Each app's repo declares `schedule: daily@3`; the campaign advances
+/// the simulated clock day by day and fires every repo's pipeline.
+/// Per-run failures are injected per the app's failure rate by flipping
+/// the app command to an invalid one for that day (flaky software).
+pub fn run_campaign(
+    world: &mut World,
+    apps: &[PortfolioApp],
+    days: i64,
+) -> CollectionSummary {
+    let mut pipelines_run = 0;
+    let mut pipelines_succeeded = 0;
+    for day in 0..days {
+        world.advance_to(SimTime::from_days(day).add_secs(3 * 3600));
+        for app in apps {
+            // flaky-software injection: with failure_rate probability the
+            // app binary crashes this run (exercises the Failed path)
+            let fail_today = world.rng.bool_with(app.failure_rate);
+            if fail_today {
+                if let Some(repo) = world.repos.get_mut(&app.name) {
+                    patch_command(repo, &app.command(), "crashing-binary --boom");
+                }
+            }
+            let pid = world.run_pipeline(&app.name, Trigger::Scheduled);
+            pipelines_run += 1;
+            if let Ok(pid) = pid {
+                if world.pipeline(pid).map(|p| p.succeeded()).unwrap_or(false) {
+                    pipelines_succeeded += 1;
+                }
+            }
+            if fail_today {
+                if let Some(repo) = world.repos.get_mut(&app.name) {
+                    patch_command(repo, "crashing-binary --boom", &app.command());
+                }
+            }
+        }
+    }
+    summarize(world, apps, days, pipelines_run, pipelines_succeeded)
+}
+
+fn patch_command(repo: &mut BenchmarkRepo, from: &str, to: &str) {
+    for (path, content) in repo.files.iter_mut() {
+        if path.ends_with("app.yml") {
+            *content = content.replace(from, to);
+        }
+    }
+}
+
+fn summarize(
+    world: &World,
+    apps: &[PortfolioApp],
+    days: i64,
+    pipelines_run: usize,
+    pipelines_succeeded: usize,
+) -> CollectionSummary {
+    let mut reports_recorded = 0;
+    let mut entries_ok = 0;
+    let mut entries_total = 0;
+    let mut by_maturity: Vec<(Maturity, usize, f64)> = Vec::new();
+    let mut by_domain: Vec<(String, usize, f64)> = Vec::new();
+
+    for maturity in [
+        Maturity::Runnability,
+        Maturity::Instrumentability,
+        Maturity::Reproducibility,
+    ] {
+        let mut ok = 0usize;
+        let mut total = 0usize;
+        let mut n_apps = 0usize;
+        for app in apps.iter().filter(|a| a.maturity == maturity) {
+            n_apps += 1;
+            if let Some(repo) = world.repo(&app.name) {
+                let (set, _) = ReportSet::load(&repo.store, "exacb.data", "");
+                reports_recorded += set.len();
+                let (o, t) = set.success_counts();
+                ok += o;
+                total += t;
+            }
+        }
+        entries_ok += ok;
+        entries_total += total;
+        by_maturity.push((
+            maturity,
+            n_apps,
+            if total > 0 { ok as f64 / total as f64 } else { 0.0 },
+        ));
+    }
+
+    let mut domains: Vec<String> = apps.iter().map(|a| a.domain.clone()).collect();
+    domains.sort();
+    domains.dedup();
+    for domain in domains {
+        let mut tts: Vec<f64> = Vec::new();
+        let mut n_apps = 0;
+        for app in apps.iter().filter(|a| a.domain == domain) {
+            n_apps += 1;
+            if let Some(repo) = world.repo(&app.name) {
+                let (set, _) = ReportSet::load(&repo.store, "exacb.data", "");
+                tts.extend(set.time_series("tts").iter().map(|(_, v)| *v));
+            }
+        }
+        by_domain.push((domain, n_apps, crate::util::stats::median(&tts)));
+    }
+
+    CollectionSummary {
+        apps: apps.len(),
+        days,
+        pipelines_run,
+        pipelines_succeeded,
+        reports_recorded,
+        entries_ok,
+        entries_total,
+        core_hours: world.total_core_hours(),
+        by_maturity,
+        by_domain,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::portfolio;
+
+    #[test]
+    fn small_campaign_end_to_end() {
+        let apps = portfolio::generate(6, 11);
+        let mut world = World::new(11);
+        onboard(&mut world, &apps, "jupiter", "all");
+        let summary = run_campaign(&mut world, &apps, 3);
+        assert_eq!(summary.apps, 6);
+        assert_eq!(summary.pipelines_run, 18);
+        assert!(summary.pipelines_succeeded > 0);
+        // every app recorded protocol reports in a uniform format
+        assert!(summary.reports_recorded >= summary.pipelines_succeeded);
+        assert!(summary.entries_total >= summary.reports_recorded);
+        assert!(summary.core_hours > 0.0);
+        // maturity table renders
+        let t = summary.table();
+        assert_eq!(t.len(), 3);
+    }
+
+    #[test]
+    fn repos_reflect_maturity() {
+        let apps = portfolio::generate(20, 3);
+        let runnable = apps
+            .iter()
+            .find(|a| a.maturity == Maturity::Runnability)
+            .unwrap();
+        let instrumented = apps
+            .iter()
+            .find(|a| a.maturity >= Maturity::Instrumentability)
+            .unwrap();
+        let r1 = repo_for_app(runnable, "jupiter", "all");
+        let r2 = repo_for_app(instrumented, "jupiter", "all");
+        assert!(!r1.file("benchmark/jube/app.yml").unwrap().contains("analysis:"));
+        assert!(r2.file("benchmark/jube/app.yml").unwrap().contains("analysis:"));
+        // both parse and produce valid CI configs
+        r1.ci_config().unwrap();
+        r2.ci_config().unwrap();
+        r1.benchmark_spec("benchmark/jube/app.yml").unwrap();
+    }
+
+    #[test]
+    fn failures_show_up_in_success_rates() {
+        // an always-failing app drags its maturity class down
+        let mut apps = portfolio::generate(2, 5);
+        apps[0].failure_rate = 1.0;
+        apps[1].failure_rate = 0.0;
+        apps[0].maturity = Maturity::Runnability;
+        apps[1].maturity = Maturity::Reproducibility;
+        let mut world = World::new(5);
+        onboard(&mut world, &apps, "jupiter", "all");
+        let summary = run_campaign(&mut world, &apps, 2);
+        let runnable = summary
+            .by_maturity
+            .iter()
+            .find(|(m, _, _)| *m == Maturity::Runnability)
+            .unwrap();
+        let repro = summary
+            .by_maturity
+            .iter()
+            .find(|(m, _, _)| *m == Maturity::Reproducibility)
+            .unwrap();
+        assert!(runnable.2 < 0.5, "{:?}", summary.by_maturity);
+        assert!(repro.2 > 0.9, "{:?}", summary.by_maturity);
+    }
+}

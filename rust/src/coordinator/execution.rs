@@ -1,0 +1,270 @@
+//! The Execution Orchestrator (paper §V-A.1) and its feature-injection
+//! variant (§V-A.3).
+//!
+//! Stages, each an individual CI job communicating through artifacts:
+//!
+//! 1. **setup** — Jacamar-runner preflight: environment, queue, account.
+//! 2. **execute** — instantiate the JUBE-style benchmark, run the
+//!    parameter study through the batch system, first-line analysis.
+//! 3. **record** — assemble the protocol report + Table-I `results.csv`
+//!    and (when `record: true`) commit them to the repo's `exacb.data`
+//!    branch.
+
+use crate::ci::{CiJob, CiJobState, Runner};
+use crate::cluster::SoftwareStage;
+use crate::harness::run_benchmark;
+use crate::protocol::{results_csv, Experiment, Report, Reporter};
+use crate::util::json::Json;
+
+use super::executor::{BatchStepExecutor, Launcher};
+use super::repo::BenchmarkRepo;
+use super::world::World;
+
+/// Resolved execution inputs (post component-schema validation).
+#[derive(Debug, Clone)]
+pub struct ExecutionParams {
+    pub prefix: String,
+    pub machine: String,
+    pub queue: String,
+    pub project: String,
+    pub budget: String,
+    pub jube_file: String,
+    pub variant: String,
+    pub usecase: String,
+    pub extra_tags: Vec<String>,
+    pub stage: String,
+    pub launcher: Launcher,
+    pub record: bool,
+    pub freq_mhz: Option<f64>,
+    pub nodes_override: u64,
+    /// Feature injection: command prepended to every remote step.
+    pub in_command: Option<String>,
+}
+
+impl ExecutionParams {
+    /// Build from resolved component inputs.
+    pub fn from_inputs(inputs: &Json) -> ExecutionParams {
+        let s = |k: &str| inputs.str_of(k).unwrap_or("").to_string();
+        let freq = inputs.f64_of("freq_mhz").unwrap_or(0.0);
+        ExecutionParams {
+            prefix: s("prefix"),
+            machine: s("machine"),
+            queue: s("queue"),
+            project: s("project"),
+            budget: s("budget"),
+            jube_file: s("jube_file"),
+            variant: s("variant"),
+            usecase: s("usecase"),
+            extra_tags: inputs
+                .get("tags")
+                .and_then(Json::as_arr)
+                .map(|a| {
+                    a.iter()
+                        .filter_map(|v| v.as_str().map(str::to_string))
+                        .collect()
+                })
+                .unwrap_or_default(),
+            stage: inputs.str_of("stage").unwrap_or("2026").to_string(),
+            launcher: Launcher::parse(inputs.str_of("launcher").unwrap_or("srun")),
+            record: inputs.bool_of("record").unwrap_or(true)
+                && inputs.str_of("record") != Some("false"),
+            freq_mhz: if freq > 0.0 { Some(freq) } else { None },
+            nodes_override: inputs.u64_of("nodes").unwrap_or(0),
+            in_command: inputs.str_of("in_command").map(str::to_string),
+        }
+    }
+
+    /// The harness tags of this run: machine + variant + usecase + extras
+    /// (paper §II-B: "System Name" and "Variant Tag").
+    pub fn tags(&self) -> Vec<String> {
+        let mut t = vec![self.machine.clone()];
+        if !self.variant.is_empty() {
+            t.push(self.variant.clone());
+        }
+        if !self.usecase.is_empty() {
+            t.push(self.usecase.clone());
+        }
+        t.extend(self.extra_tags.iter().cloned());
+        t
+    }
+}
+
+/// Run the execution orchestrator for one repository. Returns the CI
+/// jobs of this stage and the protocol report (when execution happened).
+pub fn run_execution(
+    world: &mut World,
+    repo: &mut BenchmarkRepo,
+    params: &ExecutionParams,
+    pipeline_id: u64,
+) -> (Vec<CiJob>, Option<Report>) {
+    let mut jobs = Vec::new();
+
+    // ---- stage 1: setup (runner preflight) ----------------------------
+    let mut setup = CiJob::new(world.ids.job_id(), &format!("{}.setup", params.prefix));
+    setup.state = CiJobState::Running;
+    let runner = Runner::new(&params.machine);
+    let preflight = match world.batch.get(&params.machine) {
+        Some(bs) => runner
+            .setup(bs, &params.project, &params.budget, &params.queue)
+            .map_err(|e| e.to_string()),
+        None => Err(format!("no batch system for machine '{}'", params.machine)),
+    };
+    match &preflight {
+        Ok(()) => {
+            setup.log_line(format!(
+                "environment ready on {} (queue {}, project {}, budget {})",
+                params.machine, params.queue, params.project, params.budget
+            ));
+            setup.state = CiJobState::Success;
+        }
+        Err(e) => {
+            setup.log_line(format!("setup failed: {e}"));
+            setup.state = CiJobState::Failed;
+        }
+    }
+    let setup_ok = setup.state == CiJobState::Success;
+    jobs.push(setup);
+    if !setup_ok {
+        return (jobs, None);
+    }
+
+    // ---- stage 2: execute ---------------------------------------------
+    let mut execute = CiJob::new(world.ids.job_id(), &format!("{}.execute", params.prefix));
+    execute.state = CiJobState::Running;
+    let spec = match repo.benchmark_spec(&params.jube_file) {
+        Ok(s) => s,
+        Err(e) => {
+            execute.log_line(e);
+            execute.state = CiJobState::Failed;
+            jobs.push(execute);
+            return (jobs, None);
+        }
+    };
+    let stage = SoftwareStage::by_name(&params.stage).unwrap_or_else(SoftwareStage::stage_2026);
+    let start_time = world
+        .batch
+        .get(&params.machine)
+        .map(|b| b.now())
+        .unwrap_or_default();
+    let tags = params.tags();
+    let outcomes = {
+        let batch = world.batch.get_mut(&params.machine).expect("checked above");
+        let mut exec = BatchStepExecutor {
+            cluster: &world.cluster,
+            batch,
+            engine: world.engine.as_mut(),
+            rng: &mut world.rng,
+            calibration: world.calibration,
+            machine: params.machine.clone(),
+            queue: params.queue.clone(),
+            project: params.project.clone(),
+            budget: params.budget.clone(),
+            stage: stage.clone(),
+            launcher: params.launcher,
+            freq_mhz: params.freq_mhz,
+            injected_commands: params.in_command.iter().cloned().collect(),
+            nodes_override: params.nodes_override,
+            walltime_s: 7200,
+            benchmark: spec.name.clone(),
+        };
+        match run_benchmark(&spec, &tags, &mut exec) {
+            Ok(o) => o,
+            Err(e) => {
+                execute.log_line(format!("harness: {e}"));
+                execute.state = CiJobState::Failed;
+                jobs.push(execute);
+                return (jobs, None);
+            }
+        }
+    };
+    let n_ok = outcomes.iter().filter(|o| o.success).count();
+    execute.log_line(format!(
+        "{}/{} parameter points succeeded",
+        n_ok,
+        outcomes.len()
+    ));
+
+    // ---- assemble the protocol report ---------------------------------
+    let end_time = world
+        .batch
+        .get(&params.machine)
+        .map(|b| b.now())
+        .unwrap_or_default();
+    let machine_version = world
+        .cluster
+        .machine(&params.machine)
+        .map(|m| m.version.clone())
+        .unwrap_or_default();
+    let mut parameter = Json::obj()
+        .set("variant", params.variant.as_str())
+        .set("usecase", params.usecase.as_str())
+        .set("tags", tags.clone())
+        .set("launcher", match params.launcher {
+            Launcher::Jpwr => "jpwr",
+            Launcher::Srun => "srun",
+        });
+    if let Some(f) = params.freq_mhz {
+        parameter.insert("freq_mhz", f);
+    }
+    if let Some(cmd) = &params.in_command {
+        parameter.insert("in_command", cmd.as_str());
+    }
+    let report = Report {
+        reporter: Reporter {
+            tool: "exacb".into(),
+            tool_version: env!("CARGO_PKG_VERSION").into(),
+            pipeline_id,
+            ci_job_id: execute.id,
+            commit: repo.commit.clone(),
+            user: "exacb-bot".into(),
+            system: params.machine.clone(),
+            system_version: machine_version,
+            timestamp: end_time.iso8601(),
+            seed: world.seed,
+        },
+        parameter,
+        experiment: Experiment {
+            system: params.machine.clone(),
+            software_version: format!("stage-{}", stage.name),
+            variant: params.variant.clone(),
+            usecase: params.usecase.clone(),
+            timestamp: start_time.iso8601(),
+        },
+        data: outcomes.iter().map(|o| o.to_data_entry()).collect(),
+    };
+    let csv = results_csv(&[&report]);
+    execute.add_artifact("results.csv", &csv);
+    execute.add_artifact("report.json", &report.to_document());
+    execute.output = Json::obj()
+        .set("points", outcomes.len())
+        .set("succeeded", n_ok);
+    execute.state = if n_ok == outcomes.len() && !outcomes.is_empty() {
+        CiJobState::Success
+    } else {
+        CiJobState::Failed
+    };
+    let execute_ok = execute.state == CiJobState::Success;
+    jobs.push(execute);
+
+    // ---- stage 3: record ----------------------------------------------
+    if params.record {
+        let mut record = CiJob::new(world.ids.job_id(), &format!("{}.record", params.prefix));
+        record.state = CiJobState::Running;
+        let base = format!("{}/{}", params.prefix, pipeline_id);
+        let commit_id = repo.store.commit(
+            "exacb.data",
+            &[
+                (format!("{base}/report.json"), report.to_document()),
+                (format!("{base}/results.csv"), csv),
+            ],
+            &format!("record pipeline {pipeline_id}"),
+            end_time,
+        );
+        record.log_line(format!("committed {commit_id} to exacb.data at {base}/"));
+        record.state = CiJobState::Success;
+        jobs.push(record);
+    }
+
+    let _ = execute_ok;
+    (jobs, Some(report))
+}

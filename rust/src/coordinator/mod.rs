@@ -1,0 +1,28 @@
+//! The exaCB coordinator — the paper's system contribution (§IV–§V).
+//!
+//! * [`repo`] — benchmark repositories: JUBE-style definitions + CI
+//!   config + the `exacb.data` branch (§IV-A).
+//! * [`executor`] — the harness↔batch bridge with jpwr launcher and
+//!   feature injection (§IV-D, §VI-B).
+//! * [`execution`] — the Execution Orchestrator: setup → execute →
+//!   record, each an individual CI job (§V-A.1).
+//! * [`postproc`] — machine-comparison / scalability / time-series /
+//!   energy post-processing orchestrators (§V-A.2).
+//! * [`collection`] — JUREAP-scale campaign management over portfolios
+//!   at heterogeneous maturity (§VI-A).
+//! * [`ablation`] — the §III / Fig. 2 integration-mode trade-off model.
+//! * [`world`] — the deployment container + component dispatcher.
+
+pub mod ablation;
+pub mod collection;
+pub mod execution;
+pub mod executor;
+pub mod postproc;
+pub mod repo;
+pub mod world;
+
+pub use collection::{onboard, repo_for_app, run_campaign, CollectionSummary};
+pub use execution::{run_execution, ExecutionParams};
+pub use executor::{BatchStepExecutor, Launcher};
+pub use repo::BenchmarkRepo;
+pub use world::World;

@@ -1,0 +1,430 @@
+//! Post-processing orchestrators (paper §V-A.2) and the energy-study
+//! orchestrator (§VI-B).
+//!
+//! Each runs as a dedicated CI job, reads protocol reports from the
+//! repository's `exacb.data` branch, applies the `analysis` module, and
+//! attaches plots + CSV as CI artifacts — fully decoupled from execution
+//! ("without having to rerun the benchmarks themselves").
+
+use crate::analysis::{
+    analyse, energy_sweep_plot, machine_comparison_plot, weak_scaling_plot, EnergySweep,
+    ReportSet, StrongScaling, WeakScaling,
+};
+use crate::ci::{CiJob, CiJobState};
+use crate::util::json::Json;
+use crate::util::table::Table;
+use crate::util::timeutil::SimTime;
+
+use super::execution::{run_execution, ExecutionParams};
+use super::executor::Launcher;
+use super::repo::BenchmarkRepo;
+use super::world::World;
+
+fn str_list(inputs: &Json, key: &str) -> Vec<String> {
+    inputs
+        .get(key)
+        .and_then(Json::as_arr)
+        .map(|a| {
+            a.iter()
+                .filter_map(|v| v.as_str().map(str::to_string))
+                .collect()
+        })
+        .unwrap_or_default()
+}
+
+fn u64_list(inputs: &Json, key: &str) -> Vec<u64> {
+    inputs
+        .get(key)
+        .and_then(Json::as_arr)
+        .map(|a| a.iter().filter_map(Json::as_u64).collect())
+        .unwrap_or_default()
+}
+
+fn load_set(repo: &BenchmarkRepo, prefix: &str, inputs: &Json) -> (ReportSet, usize) {
+    let (set, skipped) = ReportSet::load(&repo.store, "exacb.data", prefix);
+    let set = set.filter_pipelines(&u64_list(inputs, "pipeline"));
+    let span = str_list(inputs, "time_span");
+    let from = span.first().and_then(|s| SimTime::parse(s));
+    let to = span.get(1).and_then(|s| SimTime::parse(s));
+    (set.filter_time_span(from, to), skipped)
+}
+
+/// `time-series@v3` (paper §V-A.2): continuous visualisation of selected
+/// performance metrics with regression detection (Figs. 3–4).
+pub fn run_time_series(world: &mut World, repo: &BenchmarkRepo, inputs: &Json) -> CiJob {
+    let prefix = inputs.str_of("prefix").unwrap_or("").to_string();
+    let mut job = CiJob::new(world.ids.job_id(), &format!("{prefix}.time-series"));
+    job.state = CiJobState::Running;
+
+    let (set, skipped) = load_set(repo, &prefix, inputs);
+    if skipped > 0 {
+        job.log_line(format!("skipped {skipped} unparseable reports"));
+    }
+    if set.is_empty() {
+        job.log_line("no reports selected");
+        job.state = CiJobState::Failed;
+        return job;
+    }
+    let data_labels = str_list(inputs, "data_labels");
+    let plot_labels = str_list(inputs, "plot_labels");
+    let ylabel = str_list(inputs, "ylabel")
+        .first()
+        .cloned()
+        .unwrap_or_else(|| "value".to_string());
+
+    let mut analyses = Vec::new();
+    let mut csv = Table::new(&["label", "points", "mean", "cv", "changepoints", "stable"]);
+    let mut verdict = Json::obj();
+    for label in &data_labels {
+        let a = analyse(&set, label, 8.0);
+        csv.push_row(vec![
+            label.clone(),
+            a.points.len().to_string(),
+            format!("{:.4}", a.mean),
+            format!("{:.5}", a.cv),
+            a.changepoints.len().to_string(),
+            a.is_stable().to_string(),
+        ]);
+        let mut cps = Json::arr();
+        for cp in &a.changepoints {
+            cps.push(
+                Json::obj()
+                    .set(
+                        "date",
+                        a.points
+                            .get(cp.index)
+                            .map(|(t, _)| t.date_string())
+                            .unwrap_or_default(),
+                    )
+                    .set("before", cp.before)
+                    .set("after", cp.after)
+                    .set(
+                        "kind",
+                        if cp.after < cp.before {
+                            "regression"
+                        } else {
+                            "recovery"
+                        },
+                    ),
+            );
+        }
+        verdict.insert(
+            label,
+            Json::obj()
+                .set("stable", a.is_stable())
+                .set("changepoints", cps),
+        );
+        analyses.push(a);
+    }
+    let plot = crate::analysis::timeseries::plot(
+        &format!("{prefix} time series"),
+        &ylabel,
+        &analyses,
+        &plot_labels,
+    );
+    job.add_artifact("timeseries.svg", &plot.render_svg());
+    job.add_artifact("timeseries.csv", &csv.to_csv());
+    job.output = verdict;
+    job.log_line(format!(
+        "analysed {} labels over {} reports",
+        data_labels.len(),
+        set.len()
+    ));
+    job.state = CiJobState::Success;
+    job
+}
+
+/// `machine-comparison@v3`: strong-scaling comparison across systems
+/// (Fig. 5). `selector` lists the store prefixes to compare.
+pub fn run_machine_comparison(world: &mut World, repo: &BenchmarkRepo, inputs: &Json) -> CiJob {
+    let prefix = inputs.str_of("prefix").unwrap_or("").to_string();
+    let mut job = CiJob::new(world.ids.job_id(), &format!("{prefix}.machine-comparison"));
+    job.state = CiJobState::Running;
+    let metric = inputs.str_of("metric").unwrap_or("runtime").to_string();
+    let band = inputs.f64_of("scaling_band").unwrap_or(80.0);
+
+    let mut merged = ReportSet::default();
+    for sel in str_list(inputs, "selector") {
+        let (set, _) = load_set(repo, &sel, inputs);
+        merged.reports.extend(set.reports);
+    }
+    if merged.is_empty() {
+        job.log_line("no reports selected");
+        job.state = CiJobState::Failed;
+        return job;
+    }
+    let systems = merged.systems();
+    // The paper halves the Ampere result "for easier comparability".
+    let halve: Vec<String> = systems
+        .iter()
+        .filter(|s| {
+            world
+                .cluster
+                .machine(s)
+                .map(|m| m.gpu_gen == crate::cluster::GpuGen::Ampere)
+                .unwrap_or(false)
+        })
+        .cloned()
+        .collect();
+    let plot = machine_comparison_plot(&merged, &systems, &metric, band, &halve);
+    job.add_artifact("comparison.svg", &plot.render_svg());
+
+    let mut csv = Table::new(&["system", "nodes", "median_runtime", "speedup", "efficiency"]);
+    let mut out = Json::obj();
+    for system in &systems {
+        if let Some(s) = StrongScaling::from_set(&merged, system, &metric) {
+            for (i, &(n, t)) in s.runtimes.iter().enumerate() {
+                csv.push_row(vec![
+                    system.clone(),
+                    n.to_string(),
+                    format!("{t:.4}"),
+                    format!("{:.3}", s.speedups[i].1),
+                    format!("{:.3}", s.efficiencies[i].1),
+                ]);
+            }
+            out.insert(
+                system,
+                Json::obj().set(
+                    "scaling_limit_80pct",
+                    s.scaling_limit(band / 100.0)
+                        .map(|n| Json::Num(n as f64))
+                        .unwrap_or(Json::Null),
+                ),
+            );
+        }
+    }
+    job.add_artifact("comparison.csv", &csv.to_csv());
+    job.output = out;
+    job.log_line(format!("compared {} systems", systems.len()));
+    job.state = CiJobState::Success;
+    job
+}
+
+/// `scalability@v3`: single-system strong or weak scaling analysis.
+pub fn run_scalability(world: &mut World, repo: &BenchmarkRepo, inputs: &Json) -> CiJob {
+    let prefix = inputs.str_of("prefix").unwrap_or("").to_string();
+    let mut job = CiJob::new(world.ids.job_id(), &format!("{prefix}.scalability"));
+    job.state = CiJobState::Running;
+    let metric = inputs.str_of("metric").unwrap_or("runtime").to_string();
+    let mode = inputs.str_of("mode").unwrap_or("strong").to_string();
+    let selector = inputs.str_of("selector").unwrap_or("").to_string();
+    let (set, _) = load_set(repo, &selector, inputs);
+    if set.is_empty() {
+        job.log_line("no reports selected");
+        job.state = CiJobState::Failed;
+        return job;
+    }
+
+    let mut csv = Table::new(&["nodes", "median", "efficiency"]);
+    if mode == "weak" {
+        let Some(w) = WeakScaling::from_set(&set, &prefix, &metric) else {
+            job.log_line("insufficient points for weak scaling");
+            job.state = CiJobState::Failed;
+            return job;
+        };
+        for (i, &(n, t)) in w.runtimes.iter().enumerate() {
+            csv.push_row(vec![
+                n.to_string(),
+                format!("{t:.4}"),
+                format!("{:.3}", w.efficiencies[i].1),
+            ]);
+        }
+        job.add_artifact("scaling.svg", &weak_scaling_plot(&[w]).render_svg());
+    } else {
+        let systems = set.systems();
+        let Some(sys) = systems.first() else {
+            job.state = CiJobState::Failed;
+            return job;
+        };
+        let Some(s) = StrongScaling::from_set(&set, sys, &metric) else {
+            job.log_line("insufficient points for strong scaling");
+            job.state = CiJobState::Failed;
+            return job;
+        };
+        for (i, &(n, t)) in s.runtimes.iter().enumerate() {
+            csv.push_row(vec![
+                n.to_string(),
+                format!("{t:.4}"),
+                format!("{:.3}", s.efficiencies[i].1),
+            ]);
+        }
+        let plot = machine_comparison_plot(&set, &systems, &metric, 80.0, &[]);
+        job.add_artifact("scaling.svg", &plot.render_svg());
+    }
+    job.add_artifact("scaling.csv", &csv.to_csv());
+    job.state = CiJobState::Success;
+    job
+}
+
+/// `jureap/energy@v3` (paper §VI-B, Fig. 9): run the benchmark through
+/// the jpwr launcher at each requested frequency, then analyse the
+/// energy-vs-frequency sweep for its sweet spot.
+pub fn run_energy_study(
+    world: &mut World,
+    repo: &mut BenchmarkRepo,
+    inputs: &Json,
+    pipeline_id: u64,
+) -> Vec<CiJob> {
+    let base = ExecutionParams::from_inputs(inputs);
+    let frequencies: Vec<f64> = inputs
+        .get("frequencies")
+        .and_then(Json::as_arr)
+        .map(|a| a.iter().filter_map(Json::as_f64).collect())
+        .unwrap_or_default();
+    let mut jobs = Vec::new();
+    let freqs = if frequencies.is_empty() {
+        // default sweep over the machine's settable range
+        let m = world.cluster.machine(&base.machine);
+        match m {
+            Some(m) => {
+                let (lo, hi) = (m.power.min_mhz, m.power.nominal_mhz);
+                (0..8)
+                    .map(|i| lo + (hi - lo) * i as f64 / 7.0)
+                    .collect()
+            }
+            None => vec![],
+        }
+    } else {
+        frequencies
+    };
+
+    for f in &freqs {
+        let mut params = base.clone();
+        params.launcher = Launcher::Jpwr;
+        params.freq_mhz = Some(*f);
+        params.prefix = format!("{}.f{:.0}", base.prefix, f);
+        let (js, _) = run_execution(world, repo, &params, pipeline_id);
+        jobs.extend(js);
+    }
+
+    // analysis job over everything recorded under the base prefix
+    let mut job = CiJob::new(
+        world.ids.job_id(),
+        &format!("{}.energy-analysis", base.prefix),
+    );
+    job.state = CiJobState::Running;
+    let (set, _) = ReportSet::load(&repo.store, "exacb.data", &format!("{}.f", base.prefix));
+    match EnergySweep::from_set(&set, &base.prefix) {
+        Some(sweep) => {
+            let mut csv = Table::new(&["freq_mhz", "energy_j"]);
+            for &(f, e) in &sweep.points {
+                csv.push_row(vec![format!("{f:.0}"), format!("{e:.1}")]);
+            }
+            job.add_artifact("energy.csv", &csv.to_csv());
+            job.add_artifact(
+                "energy.svg",
+                &energy_sweep_plot(std::slice::from_ref(&sweep)).render_svg(),
+            );
+            job.output = Json::obj()
+                .set("sweet_spot_mhz", sweep.sweet_spot_mhz)
+                .set("saving_vs_nominal", sweep.saving_vs_nominal);
+            job.log_line(format!(
+                "sweet spot at {:.0} MHz ({:.1}% saving vs nominal)",
+                sweep.sweet_spot_mhz,
+                sweep.saving_vs_nominal * 100.0
+            ));
+            job.state = CiJobState::Success;
+        }
+        None => {
+            job.log_line("not enough energy points for a sweep");
+            job.state = CiJobState::Failed;
+        }
+    }
+    jobs.push(job);
+    jobs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ci::Trigger;
+
+    /// Repo whose CI config runs logmap daily; we seed its store by
+    /// running pipelines, then post-process.
+    fn world_with_history(days: i64) -> World {
+        let mut world = World::new(7);
+        world.add_repo(BenchmarkRepo::logmap_example("jedi", "all"));
+        for d in 0..days {
+            world.advance_to(SimTime::from_days(d).add_secs(3 * 3600));
+            world.run_pipeline("logmap", Trigger::Scheduled).unwrap();
+        }
+        world
+    }
+
+    #[test]
+    fn time_series_over_recorded_history() {
+        let mut world = world_with_history(10);
+        let repo = world.repos.remove("logmap").unwrap();
+        let inputs = Json::obj()
+            .set("prefix", "jedi.logmap")
+            .set("pipeline", Json::arr())
+            .set("data_labels", vec!["app_time"])
+            .set("ylabel", vec!["time / s"])
+            .set("plot_labels", Json::arr())
+            .set("time_span", Json::arr());
+        let job = run_time_series(&mut world, &repo, &inputs);
+        assert_eq!(job.state, CiJobState::Success, "{:?}", job.log);
+        assert!(job.artifact("timeseries.svg").unwrap().contains("<svg"));
+        let csv = Table::from_csv(job.artifact("timeseries.csv").unwrap()).unwrap();
+        assert_eq!(csv.rows[0][0], "app_time");
+        assert_eq!(csv.rows[0][1], "10");
+        // logmap on an event-free machine is stable
+        assert_eq!(csv.rows[0][5], "true");
+    }
+
+    #[test]
+    fn time_series_respects_time_span() {
+        let mut world = world_with_history(10);
+        let repo = world.repos.remove("logmap").unwrap();
+        let inputs = Json::obj()
+            .set("prefix", "jedi.logmap")
+            .set("data_labels", vec!["app_time"])
+            .set(
+                "time_span",
+                vec!["2026-01-03".to_string(), "2026-01-05".to_string()],
+            );
+        let job = run_time_series(&mut world, &repo, &inputs);
+        let csv = Table::from_csv(job.artifact("timeseries.csv").unwrap()).unwrap();
+        // experiments run at 03:00 daily; the span [Jan 3 00:00, Jan 5
+        // 00:00] covers the Jan 3 and Jan 4 runs only
+        assert_eq!(csv.rows[0][1], "2");
+    }
+
+    #[test]
+    fn empty_prefix_fails() {
+        let mut world = world_with_history(1);
+        let repo = world.repos.remove("logmap").unwrap();
+        let inputs = Json::obj()
+            .set("prefix", "nothing.here")
+            .set("data_labels", vec!["app_time"]);
+        let job = run_time_series(&mut world, &repo, &inputs);
+        assert_eq!(job.state, CiJobState::Failed);
+    }
+
+    #[test]
+    fn energy_study_finds_sweet_spot() {
+        let mut world = World::new(9);
+        world.add_repo(BenchmarkRepo::logmap_example("jedi", "all"));
+        let mut repo = world.repos.remove("logmap").unwrap();
+        let inputs = Json::obj()
+            .set("prefix", "jedi.energy")
+            .set("machine", "jedi")
+            .set("queue", "all")
+            .set("project", "cjsc")
+            .set("budget", "zam")
+            .set("jube_file", "benchmark/jube/logmap.yml")
+            .set("variant", "large-intensity")
+            .set("usecase", "large-workload")
+            .set("frequencies", Json::arr());
+        let jobs = run_energy_study(&mut world, &mut repo, &inputs, 1);
+        let analysis = jobs.last().unwrap();
+        assert_eq!(analysis.state, CiJobState::Success, "{:?}", analysis.log);
+        let spot = analysis.output.f64_of("sweet_spot_mhz").unwrap();
+        let m = world.cluster.machine("jedi").unwrap();
+        assert!(
+            spot > m.power.min_mhz && spot < m.power.nominal_mhz,
+            "interior sweet spot, got {spot}"
+        );
+        assert!(analysis.output.f64_of("saving_vs_nominal").unwrap() > 0.0);
+    }
+}

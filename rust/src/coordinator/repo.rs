@@ -1,0 +1,194 @@
+//! Benchmark repositories (paper §IV-A): "each benchmark in exaCB is
+//! encapsulated in an individual Git repository, which serves as the
+//! primary user-facing interface".
+//!
+//! A repository carries its benchmark definition (a JUBE-style script),
+//! its CI configuration, optional platform configuration (e.g. launcher
+//! selection for energy studies), and its own `exacb.data` branch.
+
+use crate::ci::CiConfig;
+use crate::harness::BenchmarkSpec;
+use crate::store::DataStore;
+use crate::workloads::portfolio::Maturity;
+
+/// One benchmark repository.
+#[derive(Debug, Clone)]
+pub struct BenchmarkRepo {
+    pub name: String,
+    /// Repository files: path -> content (`benchmark/jube/*.yml`,
+    /// `.gitlab-ci.yml`, `platform.yml`, …).
+    pub files: Vec<(String, String)>,
+    /// The data branch (results live here, never in the source tree).
+    pub store: DataStore,
+    /// Incremental-adoption level (§VI-A).
+    pub maturity: Maturity,
+    /// Current HEAD commit hash of the source tree (provenance).
+    pub commit: String,
+}
+
+impl BenchmarkRepo {
+    pub fn new(name: &str) -> BenchmarkRepo {
+        BenchmarkRepo {
+            name: name.to_string(),
+            files: Vec::new(),
+            store: DataStore::new(),
+            maturity: Maturity::Runnability,
+            commit: crate::util::short_hash(name.as_bytes()),
+        }
+    }
+
+    pub fn with_file(mut self, path: &str, content: &str) -> BenchmarkRepo {
+        self.files.push((path.to_string(), content.to_string()));
+        self.commit = crate::util::short_hash(
+            format!("{}{}", self.commit, content).as_bytes(),
+        );
+        self
+    }
+
+    pub fn with_maturity(mut self, m: Maturity) -> BenchmarkRepo {
+        self.maturity = m;
+        self
+    }
+
+    pub fn file(&self, path: &str) -> Option<&str> {
+        self.files
+            .iter()
+            .find(|(p, _)| p == path)
+            .map(|(_, c)| c.as_str())
+    }
+
+    /// Parse the repository's CI configuration (`.gitlab-ci.yml`).
+    pub fn ci_config(&self) -> Result<CiConfig, String> {
+        let text = self
+            .file(".gitlab-ci.yml")
+            .ok_or_else(|| format!("repo '{}': no .gitlab-ci.yml", self.name))?;
+        CiConfig::parse(text).map_err(|e| format!("repo '{}': {e}", self.name))
+    }
+
+    /// Parse a benchmark definition by path (the `jube_file` input).
+    pub fn benchmark_spec(&self, path: &str) -> Result<BenchmarkSpec, String> {
+        let text = self
+            .file(path)
+            .ok_or_else(|| format!("repo '{}': no file '{path}'", self.name))?;
+        BenchmarkSpec::parse(text).map_err(|e| format!("repo '{}': {e}", self.name))
+    }
+
+    /// Build the paper's §II example repository: the logmap benchmark
+    /// with its JUBE script and CI pipeline.
+    pub fn logmap_example(machine: &str, queue: &str) -> BenchmarkRepo {
+        let jube = r#"
+name: logmap
+parametersets:
+  - name: run
+    parameters:
+      - name: workload
+        value: 2
+      - name: workload
+        values: [6]
+        tag: large-workload
+      - name: intensity
+        value: 0.8
+      - name: intensity
+        values: [2.4]
+        tag: large-intensity
+      - name: nodes
+        value: 1
+      - name: nodes
+        values: [1, 2, 4, 8, 16, 32]
+        tag: scaling
+steps:
+  - name: compile
+    do:
+      - cmake -S . -B build -DPROJECT_FEATURE=feature
+      - cmake --build build
+      - cmake --install build --prefix /opt/logmap/
+  - name: execute
+    depends: [compile]
+    use: [run]
+    remote: true
+    do:
+      - logmap --workload $workload --intensity $intensity
+analysis:
+  - name: app_time
+    file: logmap.out
+    regex: "time: ([0-9.eE+-]+)"
+    type: float
+  - name: kernel_time
+    file: logmap.stats
+    regex: "kernel_time: ([0-9.eE+-]+)"
+    type: float
+"#;
+        let ci = format!(
+            r#"
+include:
+  - component: example/jube@v3.2
+    inputs:
+      prefix: "{machine}.logmap"
+      variant: "large-intensity"
+      usecase: "large-workload"
+      machine: "{machine}"
+      queue: "{queue}"
+      project: "cjsc"
+      budget: "zam"
+      jube_file: "benchmark/jube/logmap.yml"
+"#
+        );
+        BenchmarkRepo::new("logmap")
+            .with_file("benchmark/jube/logmap.yml", jube)
+            .with_file(".gitlab-ci.yml", &ci)
+            .with_maturity(Maturity::Reproducibility)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn logmap_example_parses_end_to_end() {
+        let repo = BenchmarkRepo::logmap_example("jedi", "all");
+        let cfg = repo.ci_config().unwrap();
+        assert_eq!(cfg.invocations.len(), 1);
+        let inputs = &cfg.invocations[0].inputs;
+        assert_eq!(inputs.str_of("machine"), Some("jedi"));
+        let spec = repo
+            .benchmark_spec(inputs.str_of("jube_file").unwrap())
+            .unwrap();
+        assert_eq!(spec.name, "logmap");
+        assert_eq!(spec.steps.len(), 2);
+        assert!(spec.steps[1].remote);
+    }
+
+    #[test]
+    fn tags_switch_parameters() {
+        use crate::harness::expand_for_step;
+        let repo = BenchmarkRepo::logmap_example("jedi", "all");
+        let spec = repo.benchmark_spec("benchmark/jube/logmap.yml").unwrap();
+        let base = expand_for_step(&spec, "execute", &[]);
+        assert_eq!(base.len(), 1);
+        assert_eq!(base[0]["workload"], "2");
+        let tagged = expand_for_step(
+            &spec,
+            "execute",
+            &["large-workload".into(), "large-intensity".into()],
+        );
+        assert_eq!(tagged[0]["workload"], "6");
+        assert_eq!(tagged[0]["intensity"], "2.4");
+        let scaling = expand_for_step(&spec, "execute", &["scaling".into()]);
+        assert_eq!(scaling.len(), 6);
+    }
+
+    #[test]
+    fn missing_files_error() {
+        let repo = BenchmarkRepo::new("empty");
+        assert!(repo.ci_config().is_err());
+        assert!(repo.benchmark_spec("nope.yml").is_err());
+    }
+
+    #[test]
+    fn commit_changes_with_content() {
+        let a = BenchmarkRepo::new("r").with_file("f", "1");
+        let b = BenchmarkRepo::new("r").with_file("f", "2");
+        assert_ne!(a.commit, b.commit);
+    }
+}

@@ -1,0 +1,299 @@
+//! The simulation world: machines + batch systems + repositories +
+//! shared framework state, and the pipeline dispatcher that routes CI
+//! component invocations to the orchestrators.
+
+use std::collections::BTreeMap;
+
+use crate::ci::{
+    CiJob, CiJobState, ComponentRegistry, IdAllocator, Pipeline, Trigger,
+};
+use crate::cluster::Cluster;
+use crate::runtime::Engine;
+use crate::scheduler::{for_machine, AccountManager, BatchSystem};
+use crate::store::ObjectStore;
+use crate::util::prng::Prng;
+use crate::util::timeutil::SimTime;
+use crate::workloads::HostCalibration;
+
+use super::execution::{run_execution, ExecutionParams};
+use super::postproc;
+use super::repo::BenchmarkRepo;
+
+/// Everything a deployment of exaCB talks to.
+pub struct World {
+    pub cluster: Cluster,
+    pub batch: BTreeMap<String, BatchSystem>,
+    pub repos: BTreeMap<String, BenchmarkRepo>,
+    pub registry: ComponentRegistry,
+    pub ids: IdAllocator,
+    pub rng: Prng,
+    pub seed: u64,
+    pub engine: Option<Engine>,
+    pub calibration: HostCalibration,
+    pub object_store: ObjectStore,
+    /// All executed pipelines (the GitLab pipeline list).
+    pub pipelines: Vec<Pipeline>,
+}
+
+/// Standard accounts available on every simulated machine.
+fn standard_accounts() -> AccountManager {
+    let mut m = AccountManager::new();
+    m.add_budget("zam", 5.0e8);
+    m.add_budget("exalab", 5.0e8);
+    m.add_account(crate::scheduler::Account {
+        name: "cjsc".into(),
+        budget: "zam".into(),
+        enabled: true,
+        partitions: vec![],
+    });
+    m.add_account(crate::scheduler::Account {
+        name: "cexalab".into(),
+        budget: "exalab".into(),
+        enabled: true,
+        partitions: vec![],
+    });
+    m
+}
+
+impl World {
+    /// A world over the standard JSC-like cluster. No PJRT engine.
+    pub fn new(seed: u64) -> World {
+        Self::with_cluster(Cluster::standard(), seed)
+    }
+
+    pub fn with_cluster(cluster: Cluster, seed: u64) -> World {
+        let batch = cluster
+            .machines
+            .iter()
+            .map(|m| (m.name.clone(), for_machine(m, standard_accounts())))
+            .collect();
+        World {
+            cluster,
+            batch,
+            repos: BTreeMap::new(),
+            registry: ComponentRegistry::builtin(),
+            ids: IdAllocator::new(),
+            rng: Prng::new(seed),
+            seed,
+            engine: None,
+            calibration: HostCalibration::default(),
+            object_store: ObjectStore::new(),
+            pipelines: Vec::new(),
+        }
+    }
+
+    /// Attach the PJRT engine (real kernel execution + host calibration)
+    /// when artifacts are built; silently stays analytic otherwise.
+    pub fn try_attach_engine(&mut self) -> bool {
+        match Engine::load_default() {
+            Ok(mut engine) => {
+                if let Ok(c) = HostCalibration::measure(&mut engine) {
+                    self.calibration = c;
+                }
+                self.engine = Some(engine);
+                true
+            }
+            Err(_) => false,
+        }
+    }
+
+    pub fn add_repo(&mut self, repo: BenchmarkRepo) {
+        self.repos.insert(repo.name.clone(), repo);
+    }
+
+    pub fn repo(&self, name: &str) -> Option<&BenchmarkRepo> {
+        self.repos.get(name)
+    }
+
+    /// Advance every machine's clock to `t` (e.g. the next scheduled
+    /// pipeline trigger).
+    pub fn advance_to(&mut self, t: SimTime) {
+        for bs in self.batch.values_mut() {
+            bs.advance_clock_to(t);
+        }
+    }
+
+    pub fn now(&self) -> SimTime {
+        self.batch
+            .values()
+            .map(|b| b.now())
+            .max()
+            .unwrap_or_default()
+    }
+
+    /// Run one repository's CI pipeline: parse its config, validate each
+    /// component invocation, dispatch to the orchestrators. Returns the
+    /// pipeline id (the pipeline itself lands in `self.pipelines`).
+    pub fn run_pipeline(&mut self, repo_name: &str, trigger: Trigger) -> Result<u64, String> {
+        let mut repo = self
+            .repos
+            .remove(repo_name)
+            .ok_or_else(|| format!("unknown repo '{repo_name}'"))?;
+        let result = self.run_pipeline_inner(&mut repo, trigger);
+        self.repos.insert(repo_name.to_string(), repo);
+        result
+    }
+
+    fn run_pipeline_inner(
+        &mut self,
+        repo: &mut BenchmarkRepo,
+        trigger: Trigger,
+    ) -> Result<u64, String> {
+        let config = repo.ci_config()?;
+        let pipeline_id = self.ids.pipeline_id();
+        let mut pipeline = Pipeline {
+            id: pipeline_id,
+            repo: repo.name.clone(),
+            trigger,
+            created: self.now(),
+            jobs: Vec::new(),
+        };
+        for invocation in &config.invocations {
+            let jobs = self.dispatch(repo, &invocation.component, &invocation.inputs, pipeline_id);
+            pipeline.jobs.extend(jobs);
+        }
+        self.pipelines.push(pipeline);
+        Ok(pipeline_id)
+    }
+
+    fn dispatch(
+        &mut self,
+        repo: &mut BenchmarkRepo,
+        component: &str,
+        raw_inputs: &crate::util::json::Json,
+        pipeline_id: u64,
+    ) -> Vec<CiJob> {
+        // input validation against the component schema
+        let resolved = match self
+            .registry
+            .get(component)
+            .and_then(|spec| spec.resolve(raw_inputs))
+        {
+            Ok(r) => r,
+            Err(e) => {
+                let mut job =
+                    CiJob::new(self.ids.job_id(), &format!("{component}.validate"));
+                job.log_line(format!("input validation failed: {e}"));
+                job.state = CiJobState::Failed;
+                return vec![job];
+            }
+        };
+        match component {
+            "execution@v3" | "example/jube@v3.2" => {
+                let params = ExecutionParams::from_inputs(&resolved);
+                run_execution(self, repo, &params, pipeline_id).0
+            }
+            "feature-injection@v3" => {
+                let params = ExecutionParams::from_inputs(&resolved);
+                run_execution(self, repo, &params, pipeline_id).0
+            }
+            "jureap/energy@v3" => postproc::run_energy_study(self, repo, &resolved, pipeline_id),
+            "machine-comparison@v3" => {
+                vec![postproc::run_machine_comparison(self, repo, &resolved)]
+            }
+            "scalability@v3" => vec![postproc::run_scalability(self, repo, &resolved)],
+            "time-series@v3" => vec![postproc::run_time_series(self, repo, &resolved)],
+            other => {
+                let mut job = CiJob::new(self.ids.job_id(), &format!("{other}.dispatch"));
+                job.log_line(format!("component '{other}' validated but has no orchestrator"));
+                job.state = CiJobState::Failed;
+                vec![job]
+            }
+        }
+    }
+
+    /// Find an executed pipeline by id.
+    pub fn pipeline(&self, id: u64) -> Option<&Pipeline> {
+        self.pipelines.iter().find(|p| p.id == id)
+    }
+
+    /// Total core-hours consumed across all machines.
+    pub fn total_core_hours(&self) -> f64 {
+        self.batch.values().map(|b| b.accounts.total_used()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quickstart_pipeline_end_to_end() {
+        // The paper's §II example: logmap on a machine through CI.
+        let mut world = World::new(42);
+        world.add_repo(BenchmarkRepo::logmap_example("jedi", "all"));
+        let pid = world.run_pipeline("logmap", Trigger::Manual).unwrap();
+        let p = world.pipeline(pid).unwrap().clone();
+        assert!(p.succeeded(), "jobs: {:?}", p.jobs.iter().map(|j| (&j.name, j.state)).collect::<Vec<_>>());
+        // three stages: setup, execute, record
+        assert_eq!(p.jobs.len(), 3);
+        let execute = p.job("jedi.logmap.execute").unwrap();
+        let csv = execute.artifact("results.csv").unwrap();
+        assert!(csv.starts_with("system,version,queue,variant,jobid,nodes"));
+        assert!(csv.contains("jedi"));
+        // report landed on the data branch
+        let repo = world.repo("logmap").unwrap();
+        let paths = repo.store.list("exacb.data", "jedi.logmap/");
+        assert_eq!(paths.len(), 2, "{paths:?}");
+        // report is protocol-parseable
+        let (report_path, _) = (
+            paths.iter().find(|p| p.ends_with("report.json")).unwrap(),
+            (),
+        );
+        let doc = repo.store.read("exacb.data", report_path).unwrap();
+        let report = crate::protocol::Report::parse(doc).unwrap();
+        assert_eq!(report.reporter.pipeline_id, pid);
+        assert_eq!(report.experiment.variant, "large-intensity");
+        assert_eq!(report.data.len(), 1);
+        assert!(report.data[0].success);
+    }
+
+    #[test]
+    fn pipeline_fails_on_bad_inputs() {
+        let mut world = World::new(1);
+        let repo = BenchmarkRepo::new("broken").with_file(
+            ".gitlab-ci.yml",
+            "component: execution@v3\ninputs:\n  prefix: p\n", // missing machine etc.
+        );
+        world.add_repo(repo);
+        let pid = world.run_pipeline("broken", Trigger::Manual).unwrap();
+        let p = world.pipeline(pid).unwrap();
+        assert!(!p.succeeded());
+        assert!(p.jobs[0].log[0].contains("input validation failed"));
+    }
+
+    #[test]
+    fn unknown_repo_errors() {
+        let mut world = World::new(1);
+        assert!(world.run_pipeline("ghost", Trigger::Manual).is_err());
+    }
+
+    #[test]
+    fn clock_advances_between_pipelines() {
+        let mut world = World::new(2);
+        world.add_repo(BenchmarkRepo::logmap_example("jedi", "all"));
+        world.advance_to(SimTime::from_days(3));
+        world.run_pipeline("logmap", Trigger::Scheduled).unwrap();
+        assert!(world.now() >= SimTime::from_days(3));
+        let repo = world.repo("logmap").unwrap();
+        let head = repo.store.head("exacb.data").unwrap();
+        assert!(head.time >= SimTime::from_days(3));
+        assert!(world.total_core_hours() > 0.0);
+    }
+
+    #[test]
+    fn disabled_account_fails_setup_stage() {
+        let mut world = World::new(3);
+        world
+            .batch
+            .get_mut("jedi")
+            .unwrap()
+            .accounts
+            .set_enabled("cjsc", false);
+        world.add_repo(BenchmarkRepo::logmap_example("jedi", "all"));
+        let pid = world.run_pipeline("logmap", Trigger::Manual).unwrap();
+        let p = world.pipeline(pid).unwrap();
+        assert_eq!(p.jobs.len(), 1); // only setup ran
+        assert_eq!(p.jobs[0].state, CiJobState::Failed);
+    }
+}

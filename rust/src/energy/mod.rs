@@ -1,0 +1,23 @@
+//! Energy measurement (paper §VI-B, Figs. 8–9): the jpwr-like
+//! energy-aware launcher.
+//!
+//! "Energy measurements are obtained by running benchmarks through the
+//! energy-aware launcher jpwr. ... The JUBE platform configuration
+//! selects jpwr as the launcher" — i.e. the benchmark itself is never
+//! modified; the launcher samples per-GPU power while the application
+//! runs and the framework post-processes the trace.
+//!
+//! * [`trace`] — per-GPU power traces with start-up/steady/wind-down
+//!   phases sampled from the machine's power model.
+//! * [`scope`] — semi-automatic measurement-scope detection: the black
+//!   vertical bars of Fig. 8 excluding ramp phases.
+//! * [`launcher`] — the jpwr wrapper producing protocol-compliant
+//!   `energy_j` / `avg_power_w` metrics from an [`AppOutput`].
+
+pub mod launcher;
+pub mod scope;
+pub mod trace;
+
+pub use launcher::{wrap_with_jpwr, EnergyReport};
+pub use scope::{detect_scope, integrate_energy, Scope};
+pub use trace::{sample_trace, PowerTrace};

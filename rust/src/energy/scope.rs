@@ -1,0 +1,163 @@
+//! Measurement-scope detection (the black vertical bars of Fig. 8).
+//!
+//! "The measurement scope excludes start-up and wind-down phases, as they
+//! are in many cases not representative of the overall application
+//! profile — of course, this systematically underestimates the reported
+//! energy. The semi-automatic approach automatically places the vertical
+//! guide, but allows for human verification and adaption." (§VI-B)
+//!
+//! Detection: a sample belongs to the steady phase when it exceeds
+//! idle + `threshold` × (steady − idle); the scope is the first/last such
+//! sample, shrunk by a guard band. Manual adjustment shifts the bars.
+
+use super::trace::{trapezoid, PowerTrace};
+
+/// A detected measurement scope (sample indices, inclusive).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Scope {
+    pub start: usize,
+    pub end: usize,
+}
+
+impl Scope {
+    pub fn len(&self) -> usize {
+        self.end.saturating_sub(self.start)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Manual adaption (the "human verification" step): shift both bars.
+    pub fn adjusted(&self, dstart: i64, dend: i64, max_len: usize) -> Scope {
+        let start = (self.start as i64 + dstart).max(0) as usize;
+        let end = ((self.end as i64 + dend).max(0) as usize).min(max_len.saturating_sub(1));
+        Scope {
+            start: start.min(end),
+            end,
+        }
+    }
+}
+
+/// Automatically place the measurement-scope bars on a trace.
+///
+/// `threshold` is the fraction of the idle→peak swing a sample must
+/// exceed to count as "in the run" (default 0.5 works for the standard
+/// phase shapes).
+pub fn detect_scope(trace: &PowerTrace, idle_w: f64, threshold: f64) -> Option<Scope> {
+    let peak = trace.samples.iter().cloned().fold(f64::MIN, f64::max);
+    if peak <= idle_w {
+        return None;
+    }
+    let cut = idle_w + threshold.clamp(0.05, 0.95) * (peak - idle_w);
+    let first = trace.samples.iter().position(|&p| p > cut)?;
+    let last = trace.samples.iter().rposition(|&p| p > cut)?;
+    if last <= first {
+        return None;
+    }
+    // guard band: move inside the ramps by ~2 samples each side
+    let guard = 2usize;
+    let start = (first + guard).min(last);
+    let end = last.saturating_sub(guard).max(start);
+    if end <= start {
+        return None;
+    }
+    Some(Scope { start, end })
+}
+
+/// Energy within the scope [J] (trapezoidal integration).
+pub fn integrate_energy(trace: &PowerTrace, scope: Scope) -> f64 {
+    trapezoid(&trace.samples, trace.dt_s, scope.start, scope.end)
+}
+
+/// Average power within the scope [W].
+pub fn average_power(trace: &PowerTrace, scope: Scope) -> f64 {
+    if scope.is_empty() {
+        return 0.0;
+    }
+    integrate_energy(trace, scope) / (scope.len() as f64 * trace.dt_s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::trace::{sample_trace, PowerTrace};
+    use super::*;
+    use crate::cluster::PowerModel;
+    use crate::util::prng::Prng;
+    use crate::workloads::AppProfile;
+
+    fn mk() -> (PowerTrace, PowerModel) {
+        let p = PowerModel::a100();
+        let mut rng = Prng::new(3);
+        let t = sample_trace(
+            0,
+            &p,
+            AppProfile {
+                utilization: 0.9,
+                mem_bound: 0.3,
+            },
+            p.nominal_mhz,
+            120.0,
+            &mut rng,
+        );
+        (t, p)
+    }
+
+    #[test]
+    fn scope_excludes_ramps() {
+        let (t, p) = mk();
+        let scope = detect_scope(&t, p.idle_w, 0.5).unwrap();
+        // scope starts after the 5 s idle margin and some ramp
+        assert!(scope.start >= 5, "start={}", scope.start);
+        assert!(scope.end <= t.samples.len() - 5, "end={}", scope.end);
+        // scoped samples are all near steady power
+        let steady = p.power_w(p.nominal_mhz, 0.9);
+        for &s in &t.samples[scope.start..=scope.end] {
+            assert!(s > 0.7 * steady, "{s} vs {steady}");
+        }
+    }
+
+    #[test]
+    fn scoped_energy_underestimates_total() {
+        // "this systematically underestimates the reported energy"
+        let (t, p) = mk();
+        let scope = detect_scope(&t, p.idle_w, 0.5).unwrap();
+        let scoped = integrate_energy(&t, scope);
+        let total = t.total_energy_j();
+        assert!(scoped < total);
+        assert!(scoped > 0.75 * total, "scope too aggressive: {scoped} vs {total}");
+    }
+
+    #[test]
+    fn manual_adjustment_moves_bars() {
+        let (t, p) = mk();
+        let scope = detect_scope(&t, p.idle_w, 0.5).unwrap();
+        let wider = scope.adjusted(-3, 3, t.samples.len());
+        assert_eq!(wider.start, scope.start - 3);
+        assert_eq!(wider.end, scope.end + 3);
+        assert!(integrate_energy(&t, wider) > integrate_energy(&t, scope));
+        // clamped at trace edges
+        let clamped = scope.adjusted(-1000, 1000, t.samples.len());
+        assert_eq!(clamped.start, 0);
+        assert_eq!(clamped.end, t.samples.len() - 1);
+    }
+
+    #[test]
+    fn flat_idle_trace_has_no_scope() {
+        let t = PowerTrace {
+            gpu: 0,
+            dt_s: 1.0,
+            samples: vec![55.0; 50],
+        };
+        assert!(detect_scope(&t, 55.0, 0.5).is_none());
+    }
+
+    #[test]
+    fn average_power_is_near_steady() {
+        let (t, p) = mk();
+        let scope = detect_scope(&t, p.idle_w, 0.5).unwrap();
+        let avg = average_power(&t, scope);
+        let steady = p.power_w(p.nominal_mhz, 0.9);
+        assert!((avg - steady).abs() < 0.1 * steady, "{avg} vs {steady}");
+    }
+}

@@ -1,0 +1,163 @@
+//! Per-GPU power traces (the raw material of Fig. 8).
+//!
+//! A run's power profile has three phases, as the paper describes for
+//! measurement-scope calibration: start-up (ramp from idle), steady
+//! execution at the workload's utilisation, and wind-down back to idle.
+//! Sensor noise rides on top. Sampling is 1 Hz, like typical node power
+//! telemetry.
+
+use crate::cluster::PowerModel;
+use crate::util::prng::Prng;
+use crate::workloads::AppProfile;
+
+/// One GPU's sampled power series.
+#[derive(Debug, Clone)]
+pub struct PowerTrace {
+    pub gpu: usize,
+    /// Sample period [s].
+    pub dt_s: f64,
+    /// Power samples [W].
+    pub samples: Vec<f64>,
+}
+
+impl PowerTrace {
+    /// Trapezoidal energy over the full trace [J].
+    pub fn total_energy_j(&self) -> f64 {
+        trapezoid(&self.samples, self.dt_s, 0, self.samples.len().saturating_sub(1))
+    }
+
+    /// Trapezoidal energy between two sample indices [J].
+    pub fn energy_between_j(&self, start: usize, end: usize) -> f64 {
+        trapezoid(&self.samples, self.dt_s, start, end)
+    }
+}
+
+pub(crate) fn trapezoid(samples: &[f64], dt: f64, start: usize, end: usize) -> f64 {
+    if samples.is_empty() || end <= start || end >= samples.len() + 1 {
+        return 0.0;
+    }
+    let end = end.min(samples.len() - 1);
+    let mut e = 0.0;
+    for i in start..end {
+        e += 0.5 * (samples[i] + samples[i + 1]) * dt;
+    }
+    e
+}
+
+/// Fractions of the runtime spent ramping up / down.
+const RAMP_UP_FRAC: f64 = 0.06;
+const RAMP_DOWN_FRAC: f64 = 0.05;
+/// Minimum ramp lengths [s] (short jobs still show the phases).
+const MIN_RAMP_S: f64 = 3.0;
+
+/// Sample a power trace for one GPU of a run.
+///
+/// `runtime_s` is the application runtime; the trace covers it plus a
+/// little idle margin on both ends (what a telemetry window records).
+pub fn sample_trace(
+    gpu: usize,
+    power: &PowerModel,
+    profile: AppProfile,
+    freq_mhz: f64,
+    runtime_s: f64,
+    rng: &mut Prng,
+) -> PowerTrace {
+    let runtime_s = runtime_s.max(0.5);
+    // adaptive sample period: ~240 samples over the run, capped at 1 Hz
+    // (telemetry rate) — short jobs still get a resolvable trace
+    let dt = (runtime_s / 240.0).clamp(0.05, 1.0);
+    let idle_margin_s = 10.0 * dt;
+    // ramps never consume more than half the run
+    let ramp_up = (runtime_s * RAMP_UP_FRAC).max(MIN_RAMP_S.min(runtime_s * 0.25));
+    let ramp_down = (runtime_s * RAMP_DOWN_FRAC).max(MIN_RAMP_S.min(runtime_s * 0.2));
+    let total = idle_margin_s + runtime_s + idle_margin_s;
+    let n = (total / dt).ceil() as usize + 1;
+    let steady_power = power.power_w(freq_mhz, profile.utilization);
+    let idle = power.idle_w;
+    let mut samples = Vec::with_capacity(n);
+    for i in 0..n {
+        let t = i as f64 * dt;
+        // position within the run
+        let in_run = t - idle_margin_s;
+        let base = if in_run < 0.0 || in_run > runtime_s {
+            idle
+        } else if in_run < ramp_up {
+            idle + (steady_power - idle) * (in_run / ramp_up)
+        } else if in_run > runtime_s - ramp_down {
+            idle + (steady_power - idle) * ((runtime_s - in_run) / ramp_down).max(0.0)
+        } else {
+            // small utilisation wobble during steady state
+            steady_power * (1.0 + 0.01 * (t * 0.7).sin())
+        };
+        samples.push((base + rng.normal(0.0, power.sensor_noise_w)).max(0.0));
+    }
+    PowerTrace {
+        gpu,
+        dt_s: dt,
+        samples,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::PowerModel;
+
+    fn mk_trace(runtime: f64) -> PowerTrace {
+        let p = PowerModel::a100();
+        let mut rng = Prng::new(1);
+        sample_trace(
+            0,
+            &p,
+            AppProfile {
+                utilization: 0.9,
+                mem_bound: 0.3,
+            },
+            p.nominal_mhz,
+            runtime,
+            &mut rng,
+        )
+    }
+
+    #[test]
+    fn trace_has_three_phases() {
+        let t = mk_trace(100.0);
+        let p = PowerModel::a100();
+        // first and last samples near idle
+        assert!((t.samples[0] - p.idle_w).abs() < 20.0);
+        assert!((t.samples.last().unwrap() - p.idle_w).abs() < 20.0);
+        // middle near steady power
+        let mid = t.samples[t.samples.len() / 2];
+        let steady = p.power_w(p.nominal_mhz, 0.9);
+        assert!((mid - steady).abs() < 0.05 * steady, "{mid} vs {steady}");
+    }
+
+    #[test]
+    fn energy_scales_with_runtime() {
+        let e_short = mk_trace(50.0).total_energy_j();
+        let e_long = mk_trace(200.0).total_energy_j();
+        assert!(e_long > 3.0 * e_short);
+    }
+
+    #[test]
+    fn trapezoid_of_constant_is_exact() {
+        let samples = vec![100.0; 11];
+        assert!((trapezoid(&samples, 1.0, 0, 10) - 1000.0).abs() < 1e-9);
+        assert_eq!(trapezoid(&samples, 1.0, 5, 5), 0.0);
+        assert_eq!(trapezoid(&[], 1.0, 0, 10), 0.0);
+    }
+
+    #[test]
+    fn lower_frequency_lowers_power() {
+        let p = PowerModel::gh200();
+        let mut rng = Prng::new(2);
+        let prof = AppProfile {
+            utilization: 0.9,
+            mem_bound: 0.5,
+        };
+        let hi = sample_trace(0, &p, prof, p.nominal_mhz, 60.0, &mut rng);
+        let lo = sample_trace(0, &p, prof, p.nominal_mhz * 0.6, 60.0, &mut rng);
+        let mid = |t: &PowerTrace| t.samples[t.samples.len() / 2];
+        assert!(mid(&lo) < 0.6 * mid(&hi), "{} vs {}", mid(&lo), mid(&hi));
+    }
+}

@@ -1,0 +1,228 @@
+//! Parameter-space expansion and `$var` substitution.
+//!
+//! JUBE "resolves dependencies between individual commands and expands
+//! parameters, allowing for parameter space explorations through multiple
+//! definition of explored parameters" (paper §II-B). Expansion is the
+//! full cross product of every active multi-valued parameter; activity is
+//! controlled by tags.
+
+use std::collections::BTreeMap;
+
+use super::spec::{BenchmarkSpec, ParameterSet};
+
+/// One resolved point of the parameter space (name -> value).
+pub type ParamPoint = BTreeMap<String, String>;
+
+/// Expand the cross product of all active parameters in the given sets.
+/// A parameter with a `tag` participates only when that tag is passed;
+/// multiple definitions of the *same* parameter name are overridden by
+/// the later (more specific, tag-activated) definition, matching JUBE's
+/// script-inheritance behaviour.
+pub fn expand(sets: &[&ParameterSet], tags: &[String]) -> Vec<ParamPoint> {
+    // Collect active parameters; later definitions override earlier ones.
+    let mut axes: Vec<(String, Vec<String>)> = Vec::new();
+    for set in sets {
+        for p in &set.parameters {
+            let active = match &p.tag {
+                None => true,
+                Some(t) => tags.iter().any(|x| x == t),
+            };
+            if !active {
+                continue;
+            }
+            if let Some(slot) = axes.iter_mut().find(|(n, _)| n == &p.name) {
+                slot.1 = p.values.clone();
+            } else {
+                axes.push((p.name.clone(), p.values.clone()));
+            }
+        }
+    }
+    let mut points: Vec<ParamPoint> = vec![ParamPoint::new()];
+    for (name, values) in &axes {
+        let mut next = Vec::with_capacity(points.len() * values.len());
+        for point in &points {
+            for v in values {
+                let mut p = point.clone();
+                p.insert(name.clone(), v.clone());
+                next.push(p);
+            }
+        }
+        points = next;
+    }
+    points
+}
+
+/// Expand the parameter sets used by a named step of a spec.
+pub fn expand_for_step(
+    spec: &BenchmarkSpec,
+    step_name: &str,
+    tags: &[String],
+) -> Vec<ParamPoint> {
+    let step = match spec.steps.iter().find(|s| s.name == step_name) {
+        Some(s) => s,
+        None => return vec![ParamPoint::new()],
+    };
+    let sets: Vec<&ParameterSet> = spec
+        .parametersets
+        .iter()
+        .filter(|ps| step.uses.iter().any(|u| u == &ps.name))
+        .collect();
+    expand(&sets, tags)
+}
+
+/// Substitute `$name` / `${name}` occurrences with parameter values.
+/// Unknown variables are left untouched (they may be environment-level,
+/// resolved later by the executor). `$$` escapes a literal `$`.
+pub fn substitute(template: &str, point: &ParamPoint) -> String {
+    let mut out = String::with_capacity(template.len());
+    let bytes = template.as_bytes();
+    let mut i = 0;
+    while i < bytes.len() {
+        if bytes[i] == b'$' {
+            if i + 1 < bytes.len() && bytes[i + 1] == b'$' {
+                out.push('$');
+                i += 2;
+                continue;
+            }
+            let (name, consumed) = if i + 1 < bytes.len() && bytes[i + 1] == b'{' {
+                match template[i + 2..].find('}') {
+                    Some(end) => (template[i + 2..i + 2 + end].to_string(), end + 3),
+                    None => {
+                        out.push('$');
+                        i += 1;
+                        continue;
+                    }
+                }
+            } else {
+                let rest = &template[i + 1..];
+                let len = rest
+                    .chars()
+                    .take_while(|c| c.is_ascii_alphanumeric() || *c == '_')
+                    .map(char::len_utf8)
+                    .sum::<usize>();
+                (rest[..len].to_string(), len + 1)
+            };
+            if !name.is_empty() {
+                if let Some(v) = point.get(&name) {
+                    out.push_str(v);
+                    i += consumed;
+                    continue;
+                }
+            }
+            // unknown or empty: keep as-is
+            out.push('$');
+            i += 1;
+        } else {
+            let c = template[i..].chars().next().unwrap();
+            out.push(c);
+            i += c.len_utf8();
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::spec::BenchmarkSpec;
+    use super::*;
+
+    fn pt(pairs: &[(&str, &str)]) -> ParamPoint {
+        pairs
+            .iter()
+            .map(|(k, v)| (k.to_string(), v.to_string()))
+            .collect()
+    }
+
+    #[test]
+    fn cross_product_size() {
+        let spec = BenchmarkSpec::parse(super::super::spec::LOGMAP_SPEC).unwrap();
+        // without the scaling tag: workload in {4,6} x intensity -> 2 points
+        let pts = expand_for_step(&spec, "execute", &[]);
+        assert_eq!(pts.len(), 2);
+        // with the scaling tag: x nodes in {1,2} -> 4 points
+        let pts = expand_for_step(&spec, "execute", &["scaling".to_string()]);
+        assert_eq!(pts.len(), 4);
+        assert!(pts.iter().all(|p| p.contains_key("nodes")));
+    }
+
+    #[test]
+    fn full_cross_product_property() {
+        use crate::prop_assert;
+        use crate::util::prop::check;
+        check("expansion is a full cross product", 50, |g| {
+            let n_axes = g.usize(1, 4);
+            let mut sizes = Vec::new();
+            let mut params = Vec::new();
+            for a in 0..n_axes {
+                let k = g.usize(1, 4);
+                sizes.push(k);
+                params.push(super::super::spec::Parameter {
+                    name: format!("p{a}"),
+                    values: (0..k).map(|v| v.to_string()).collect(),
+                    tag: None,
+                });
+            }
+            let set = ParameterSet {
+                name: "s".into(),
+                parameters: params,
+            };
+            let pts = expand(&[&set], &[]);
+            let expect: usize = sizes.iter().product();
+            prop_assert!(
+                pts.len() == expect,
+                "got {} points, expected {expect}",
+                pts.len()
+            );
+            // all points distinct
+            let mut seen = std::collections::HashSet::new();
+            for p in &pts {
+                prop_assert!(seen.insert(format!("{p:?}")), "duplicate point {p:?}");
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn tagged_override_wins() {
+        let a = ParameterSet {
+            name: "a".into(),
+            parameters: vec![
+                super::super::spec::Parameter {
+                    name: "queue".into(),
+                    values: vec!["default".into()],
+                    tag: None,
+                },
+                super::super::spec::Parameter {
+                    name: "queue".into(),
+                    values: vec!["dc-gpu".into()],
+                    tag: Some("jureca".into()),
+                },
+            ],
+        };
+        let pts = expand(&[&a], &[]);
+        assert_eq!(pts[0]["queue"], "default");
+        let pts = expand(&[&a], &["jureca".to_string()]);
+        assert_eq!(pts.len(), 1);
+        assert_eq!(pts[0]["queue"], "dc-gpu");
+    }
+
+    #[test]
+    fn substitution_forms() {
+        let p = pt(&[("workload", "6"), ("intensity", "2.4")]);
+        assert_eq!(
+            substitute("logmap --workload $workload --intensity ${intensity}", &p),
+            "logmap --workload 6 --intensity 2.4"
+        );
+        assert_eq!(substitute("cost: $$5 for $workload", &p), "cost: $5 for 6");
+        assert_eq!(substitute("$unknown stays", &p), "$unknown stays");
+        assert_eq!(substitute("${unclosed", &p), "${unclosed");
+        assert_eq!(substitute("a$workload_x", &p), "a$workload_x"); // _x extends the name
+    }
+
+    #[test]
+    fn empty_sets_give_single_empty_point() {
+        let pts = expand(&[], &[]);
+        assert_eq!(pts.len(), 1);
+        assert!(pts[0].is_empty());
+    }
+}

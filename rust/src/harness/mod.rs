@@ -1,0 +1,22 @@
+//! The JUBE-like benchmark harness (paper §II-B, §IV-D; DESIGN.md §2).
+//!
+//! exaCB "delegates execution to an external benchmarking harness that
+//! conforms to the protocol"; this module is that harness: benchmark
+//! scripts ([`spec`]), parameter-space expansion with tags ([`expand`]),
+//! and the step-DAG execution + output-analysis engine ([`run`]).
+//!
+//! The harness is deliberately independent of the CI layer and the batch
+//! system: execution goes through the [`run::StepExecutor`] trait, so the
+//! same benchmark definition runs under a scripted test executor, the
+//! login-node executor, or the batch-submitting executor provided by the
+//! coordinator (this is the protocol's "harness adapter" seam).
+
+pub mod expand;
+pub mod run;
+pub mod spec;
+
+pub use expand::{expand, expand_for_step, substitute, ParamPoint};
+pub use run::{
+    run_benchmark, ResolvedStep, RunOutcome, ScriptedExecutor, StepExecutor, StepOutcome,
+};
+pub use spec::{AnalysisPattern, BenchmarkSpec, Parameter, ParameterSet, SpecError, Step};

@@ -1,0 +1,385 @@
+//! Harness execution engine: step DAG × parameter space → analysed runs.
+//!
+//! For each point of the expanded parameter space, steps run in
+//! dependency order through a [`StepExecutor`] (the bridge to either the
+//! login node or the batch system — supplied by the caller, typically
+//! `coordinator::execution`). After the last step, analysis patterns are
+//! applied to the produced output files and one [`RunOutcome`] per point
+//! is returned; `results_table` renders them per Table I.
+
+use std::collections::BTreeMap;
+
+use super::expand::{expand_for_step, substitute, ParamPoint};
+use super::spec::{AnalysisPattern, BenchmarkSpec, SpecError, Step};
+use crate::protocol::DataEntry;
+use crate::util::json::Json;
+
+/// A step with parameters substituted into its command lines.
+#[derive(Debug, Clone)]
+pub struct ResolvedStep {
+    pub name: String,
+    pub commands: Vec<String>,
+    pub remote: bool,
+    pub point: ParamPoint,
+}
+
+/// What executing one step produced.
+#[derive(Debug, Clone)]
+pub struct StepOutcome {
+    pub success: bool,
+    /// Application runtime [s] (remote steps: the batch job runtime).
+    pub runtime_s: f64,
+    /// Output files (name -> contents) available to analysis.
+    pub files: Vec<(String, String)>,
+    /// Structured metrics contributed directly by the executor.
+    pub metrics: Json,
+    /// Scheduler metadata for remote steps.
+    pub jobid: u64,
+    pub queue: String,
+    pub nodes: u64,
+    pub tasks_per_node: u64,
+    pub threads_per_task: u64,
+}
+
+impl StepOutcome {
+    pub fn local_ok() -> StepOutcome {
+        StepOutcome {
+            success: true,
+            runtime_s: 0.0,
+            files: Vec::new(),
+            metrics: Json::obj(),
+            jobid: 0,
+            queue: String::new(),
+            nodes: 1,
+            tasks_per_node: 1,
+            threads_per_task: 1,
+        }
+    }
+
+    pub fn failed(msg: &str) -> StepOutcome {
+        StepOutcome {
+            success: false,
+            metrics: Json::obj().set("error", msg),
+            ..StepOutcome::local_ok()
+        }
+    }
+}
+
+/// The execution back end: interprets a resolved step's commands.
+pub trait StepExecutor {
+    fn execute(&mut self, step: &ResolvedStep) -> StepOutcome;
+}
+
+/// One fully-executed parameter point.
+#[derive(Debug, Clone)]
+pub struct RunOutcome {
+    pub point: ParamPoint,
+    pub success: bool,
+    pub runtime_s: f64,
+    /// Metrics: executor metrics merged with analysis extractions.
+    pub metrics: Json,
+    pub jobid: u64,
+    pub queue: String,
+    pub nodes: u64,
+    pub tasks_per_node: u64,
+    pub threads_per_task: u64,
+    /// Per-step success for diagnostics.
+    pub step_status: Vec<(String, bool)>,
+}
+
+impl RunOutcome {
+    /// Convert to a protocol data entry (§V-B (e)).
+    pub fn to_data_entry(&self) -> DataEntry {
+        DataEntry {
+            success: self.success,
+            runtime: self.runtime_s,
+            nodes: self.nodes,
+            taskspernode: self.tasks_per_node,
+            threadspertask: self.threads_per_task,
+            jobid: self.jobid,
+            queue: self.queue.clone(),
+            metrics: self.metrics.clone(),
+        }
+    }
+}
+
+/// Run the whole benchmark: expand, execute, analyse.
+pub fn run_benchmark(
+    spec: &BenchmarkSpec,
+    tags: &[String],
+    executor: &mut dyn StepExecutor,
+) -> Result<Vec<RunOutcome>, SpecError> {
+    let order = spec.step_order()?;
+    // The parameter space of the run is the union of axes used by any
+    // step; expansion per final (leaf) step keeps per-point execution
+    // simple: we expand over the *last* step's space, and earlier steps
+    // see the subset of parameters they use.
+    let leaf = order.last().expect("validated non-empty");
+    let points = expand_for_step(spec, &leaf.name, tags);
+
+    let mut outcomes = Vec::with_capacity(points.len());
+    for point in points {
+        outcomes.push(run_point(spec, &order, &point, tags, executor));
+    }
+    Ok(outcomes)
+}
+
+fn active_step(step: &Step, tags: &[String]) -> bool {
+    match &step.tag {
+        None => true,
+        Some(t) => tags.iter().any(|x| x == t),
+    }
+}
+
+fn run_point(
+    spec: &BenchmarkSpec,
+    order: &[&Step],
+    point: &ParamPoint,
+    tags: &[String],
+    executor: &mut dyn StepExecutor,
+) -> RunOutcome {
+    let mut files: Vec<(String, String)> = Vec::new();
+    let mut metrics = Json::obj();
+    let mut step_status = Vec::new();
+    let mut success = true;
+    let mut runtime_s = 0.0;
+    let mut jobid = 0;
+    let mut queue = String::new();
+    let mut nodes = 1;
+    let mut tasks_per_node = 1;
+    let mut threads_per_task = 1;
+
+    for step in order {
+        if !active_step(step, tags) {
+            continue;
+        }
+        if !success {
+            step_status.push((step.name.clone(), false));
+            continue; // downstream steps are skipped after a failure
+        }
+        let resolved = ResolvedStep {
+            name: step.name.clone(),
+            commands: step
+                .commands
+                .iter()
+                .map(|c| substitute(c, point))
+                .collect(),
+            remote: step.remote,
+            point: point.clone(),
+        };
+        let out = executor.execute(&resolved);
+        step_status.push((step.name.clone(), out.success));
+        success &= out.success;
+        if step.remote {
+            runtime_s = out.runtime_s;
+            jobid = out.jobid;
+            queue = out.queue.clone();
+            nodes = out.nodes;
+            tasks_per_node = out.tasks_per_node;
+            threads_per_task = out.threads_per_task;
+        }
+        files.extend(out.files.iter().cloned());
+        for (k, v) in out.metrics.as_obj().unwrap_or(&[]) {
+            metrics.insert(k, v.clone());
+        }
+    }
+
+    // Analysis: regex extraction over output files (paper §II-B).
+    for pat in &spec.analysis {
+        if let Some(v) = apply_pattern(pat, &files) {
+            metrics.insert(&pat.name, v);
+        }
+    }
+    // Parameters are recorded into metrics-adjacent storage by the
+    // coordinator (protocol `parameter` section), not here.
+
+    RunOutcome {
+        point: point.clone(),
+        success,
+        runtime_s,
+        metrics,
+        jobid,
+        queue,
+        nodes,
+        tasks_per_node,
+        threads_per_task,
+        step_status,
+    }
+}
+
+fn apply_pattern(pat: &AnalysisPattern, files: &[(String, String)]) -> Option<Json> {
+    let re = regex::Regex::new(&pat.regex).ok()?;
+    let content = files
+        .iter()
+        .find(|(name, _)| name == &pat.file)
+        .map(|(_, c)| c)?;
+    // JUBE semantics: last match wins (repeated prints converge).
+    let captures = re.captures_iter(content).last()?;
+    let text = captures
+        .get(1)
+        .map(|m| m.as_str())
+        .unwrap_or_else(|| captures.get(0).unwrap().as_str());
+    match pat.dtype.as_str() {
+        "float" => text.parse::<f64>().ok().map(Json::Num),
+        "int" => text.parse::<i64>().ok().map(|v| Json::Num(v as f64)),
+        _ => Some(Json::Str(text.to_string())),
+    }
+}
+
+/// A scripted executor for tests: maps step name -> outcome factory.
+pub struct ScriptedExecutor {
+    pub outcomes: BTreeMap<String, Box<dyn Fn(&ResolvedStep) -> StepOutcome>>,
+    pub log: Vec<(String, Vec<String>)>,
+}
+
+impl ScriptedExecutor {
+    pub fn new() -> ScriptedExecutor {
+        ScriptedExecutor {
+            outcomes: BTreeMap::new(),
+            log: Vec::new(),
+        }
+    }
+
+    pub fn on(
+        mut self,
+        step: &str,
+        f: impl Fn(&ResolvedStep) -> StepOutcome + 'static,
+    ) -> ScriptedExecutor {
+        self.outcomes.insert(step.to_string(), Box::new(f));
+        self
+    }
+}
+
+impl Default for ScriptedExecutor {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl StepExecutor for ScriptedExecutor {
+    fn execute(&mut self, step: &ResolvedStep) -> StepOutcome {
+        self.log
+            .push((step.name.clone(), step.commands.clone()));
+        match self.outcomes.get(&step.name) {
+            Some(f) => f(step),
+            None => StepOutcome::local_ok(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::spec::{BenchmarkSpec, LOGMAP_SPEC};
+    use super::*;
+
+    fn exec_with_output() -> ScriptedExecutor {
+        ScriptedExecutor::new().on("execute", |step| {
+            let workload: f64 = step.point["workload"].parse().unwrap();
+            StepOutcome {
+                success: true,
+                runtime_s: workload * 2.0,
+                files: vec![(
+                    "logmap.out".into(),
+                    format!("result ok\ntime: {}\n", workload * 2.0),
+                )],
+                metrics: Json::obj().set("gflops", 10.0),
+                jobid: 42,
+                queue: "all".into(),
+                nodes: 1,
+                tasks_per_node: 4,
+                threads_per_task: 8,
+                ..StepOutcome::local_ok()
+            }
+        })
+    }
+
+    #[test]
+    fn runs_all_points_and_analyses() {
+        let spec = BenchmarkSpec::parse(LOGMAP_SPEC).unwrap();
+        let mut exec = exec_with_output();
+        let outs = run_benchmark(&spec, &[], &mut exec).unwrap();
+        assert_eq!(outs.len(), 2); // workload {4, 6}
+        for o in &outs {
+            assert!(o.success);
+            let w: f64 = o.point["workload"].parse().unwrap();
+            assert_eq!(o.metrics.f64_of("runtime"), Some(w * 2.0));
+            assert_eq!(o.metrics.f64_of("gflops"), Some(10.0));
+            assert_eq!(o.jobid, 42);
+        }
+        // compile ran once per point, before execute
+        let names: Vec<&str> = exec.log.iter().map(|(n, _)| n.as_str()).collect();
+        assert_eq!(names, vec!["compile", "execute", "compile", "execute"]);
+    }
+
+    #[test]
+    fn substitution_reaches_commands() {
+        let spec = BenchmarkSpec::parse(LOGMAP_SPEC).unwrap();
+        let mut exec = exec_with_output();
+        run_benchmark(&spec, &[], &mut exec).unwrap();
+        let exec_cmds: Vec<&str> = exec
+            .log
+            .iter()
+            .filter(|(n, _)| n == "execute")
+            .map(|(_, c)| c[0].as_str())
+            .collect();
+        assert!(exec_cmds.contains(&"logmap --workload 4 --intensity 2.4"));
+        assert!(exec_cmds.contains(&"logmap --workload 6 --intensity 2.4"));
+    }
+
+    #[test]
+    fn failure_skips_downstream_steps() {
+        let spec = BenchmarkSpec::parse(LOGMAP_SPEC).unwrap();
+        let mut exec =
+            ScriptedExecutor::new().on("compile", |_| StepOutcome::failed("compiler error"));
+        let outs = run_benchmark(&spec, &[], &mut exec).unwrap();
+        assert!(outs.iter().all(|o| !o.success));
+        // execute never ran
+        assert!(exec.log.iter().all(|(n, _)| n != "execute"));
+        // step status records the skip
+        assert_eq!(outs[0].step_status.len(), 2);
+        assert!(!outs[0].step_status[1].1);
+    }
+
+    #[test]
+    fn tags_expand_scaling_axis() {
+        let spec = BenchmarkSpec::parse(LOGMAP_SPEC).unwrap();
+        let mut exec = exec_with_output();
+        let outs = run_benchmark(&spec, &["scaling".to_string()], &mut exec).unwrap();
+        assert_eq!(outs.len(), 4);
+    }
+
+    #[test]
+    fn data_entry_conversion() {
+        let spec = BenchmarkSpec::parse(LOGMAP_SPEC).unwrap();
+        let mut exec = exec_with_output();
+        let outs = run_benchmark(&spec, &[], &mut exec).unwrap();
+        let e = outs[0].to_data_entry();
+        assert!(e.success);
+        assert_eq!(e.jobid, 42);
+        assert_eq!(e.taskspernode, 4);
+        assert!(e.metric("runtime").is_some());
+    }
+
+    #[test]
+    fn analysis_last_match_wins() {
+        let pat = AnalysisPattern {
+            name: "t".into(),
+            file: "f".into(),
+            regex: "t=([0-9]+)".into(),
+            dtype: "int".into(),
+        };
+        let files = vec![("f".to_string(), "t=1\nt=2\nt=3".to_string())];
+        assert_eq!(apply_pattern(&pat, &files), Some(Json::Num(3.0)));
+    }
+
+    #[test]
+    fn analysis_missing_file_is_none() {
+        let pat = AnalysisPattern {
+            name: "t".into(),
+            file: "missing".into(),
+            regex: "x".into(),
+            dtype: "string".into(),
+        };
+        assert_eq!(apply_pattern(&pat, &[]), None);
+    }
+}

@@ -1,0 +1,412 @@
+//! Benchmark-script model (the JUBE-like harness front end, paper §II-B).
+//!
+//! A benchmark definition is a YAML document ("JUBE script") with
+//! parameter sets, a step DAG, and analysis patterns:
+//!
+//! ```yaml
+//! name: logmap
+//! parametersets:
+//!   - name: run
+//!     parameters:
+//!       - name: workload
+//!         values: [4, 6]            # expands the study
+//!       - name: intensity
+//!         value: 2.4
+//!       - name: nodes
+//!         values: [1, 2, 4]
+//!         tag: scaling              # only active when tag set
+//! steps:
+//!   - name: compile
+//!     do:
+//!       - cmake -S . -B build -DPROJECT_FEATURE=feature
+//!       - cmake --build build
+//!   - name: execute
+//!     depends: [compile]
+//!     use: [run]
+//!     remote: true                  # submitted to the batch system
+//!     do:
+//!       - logmap --workload $workload --intensity $intensity
+//! analysis:
+//!   - name: runtime
+//!     file: logmap.out
+//!     regex: "time: ([0-9.eE+-]+)"
+//!     type: float
+//! ```
+//!
+//! Tags (paper §II-B) select system- and variant-specific definitions at
+//! launch: parameters and steps carry an optional `tag`, active only when
+//! that tag is passed (`jube run logmap.yml --tags juwels-booster
+//! large-intensity`).
+
+use crate::util::json::Json;
+use crate::util::yamlite;
+
+#[derive(Debug, Clone, PartialEq, thiserror::Error)]
+pub enum SpecError {
+    #[error("yaml: {0}")]
+    Yaml(String),
+    #[error("spec: {0}")]
+    Invalid(String),
+}
+
+fn invalid(msg: impl Into<String>) -> SpecError {
+    SpecError::Invalid(msg.into())
+}
+
+/// A parameter definition: fixed value or a study axis.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Parameter {
+    pub name: String,
+    /// One or more values; >1 values expand the parameter space.
+    pub values: Vec<String>,
+    /// Active only when this tag is passed (None = always active).
+    pub tag: Option<String>,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParameterSet {
+    pub name: String,
+    pub parameters: Vec<Parameter>,
+}
+
+/// One step of the benchmark workflow.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Step {
+    pub name: String,
+    pub depends: Vec<String>,
+    /// Parameter sets this step consumes.
+    pub uses: Vec<String>,
+    /// Shell-like command lines (interpreted by the executor).
+    pub commands: Vec<String>,
+    /// Submitted to the batch system instead of running on the login node.
+    pub remote: bool,
+    pub tag: Option<String>,
+}
+
+/// A regex extraction applied to an output file after execution.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AnalysisPattern {
+    pub name: String,
+    pub file: String,
+    pub regex: String,
+    /// "float" | "int" | "string"
+    pub dtype: String,
+}
+
+/// The parsed benchmark definition.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BenchmarkSpec {
+    pub name: String,
+    pub parametersets: Vec<ParameterSet>,
+    pub steps: Vec<Step>,
+    pub analysis: Vec<AnalysisPattern>,
+}
+
+impl BenchmarkSpec {
+    pub fn parse(yaml_text: &str) -> Result<BenchmarkSpec, SpecError> {
+        let doc = yamlite::parse(yaml_text).map_err(|e| SpecError::Yaml(e.to_string()))?;
+        Self::from_json(&doc)
+    }
+
+    pub fn from_json(doc: &Json) -> Result<BenchmarkSpec, SpecError> {
+        let name = doc
+            .str_of("name")
+            .ok_or_else(|| invalid("missing 'name'"))?
+            .to_string();
+
+        let mut parametersets = Vec::new();
+        if let Some(sets) = doc.get("parametersets").and_then(Json::as_arr) {
+            for (i, set) in sets.iter().enumerate() {
+                parametersets.push(parse_parameterset(set, i)?);
+            }
+        }
+
+        let mut steps = Vec::new();
+        for (i, s) in doc
+            .get("steps")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| invalid("missing 'steps' list"))?
+            .iter()
+            .enumerate()
+        {
+            steps.push(parse_step(s, i)?);
+        }
+        if steps.is_empty() {
+            return Err(invalid("'steps' must not be empty"));
+        }
+
+        let mut analysis = Vec::new();
+        if let Some(pats) = doc.get("analysis").and_then(Json::as_arr) {
+            for (i, p) in pats.iter().enumerate() {
+                analysis.push(parse_pattern(p, i)?);
+            }
+        }
+
+        let spec = BenchmarkSpec {
+            name,
+            parametersets,
+            steps,
+            analysis,
+        };
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    fn validate(&self) -> Result<(), SpecError> {
+        // unique step names, known dependencies and parameter sets
+        for (i, s) in self.steps.iter().enumerate() {
+            if self.steps[..i].iter().any(|o| o.name == s.name) {
+                return Err(invalid(format!("duplicate step '{}'", s.name)));
+            }
+            for d in &s.depends {
+                if !self.steps.iter().any(|o| &o.name == d) {
+                    return Err(invalid(format!(
+                        "step '{}' depends on unknown step '{d}'",
+                        s.name
+                    )));
+                }
+            }
+            for u in &s.uses {
+                if !self.parametersets.iter().any(|p| &p.name == u) {
+                    return Err(invalid(format!(
+                        "step '{}' uses unknown parameterset '{u}'",
+                        s.name
+                    )));
+                }
+            }
+        }
+        // regexes must compile
+        for p in &self.analysis {
+            regex::Regex::new(&p.regex)
+                .map_err(|e| invalid(format!("pattern '{}': {e}", p.name)))?;
+            if !["float", "int", "string"].contains(&p.dtype.as_str()) {
+                return Err(invalid(format!(
+                    "pattern '{}': unknown type '{}'",
+                    p.name, p.dtype
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// Steps in dependency order; error on cycles.
+    pub fn step_order(&self) -> Result<Vec<&Step>, SpecError> {
+        let mut order: Vec<&Step> = Vec::new();
+        let mut done: Vec<&str> = Vec::new();
+        let mut remaining: Vec<&Step> = self.steps.iter().collect();
+        while !remaining.is_empty() {
+            let ready: Vec<usize> = remaining
+                .iter()
+                .enumerate()
+                .filter(|(_, s)| s.depends.iter().all(|d| done.contains(&d.as_str())))
+                .map(|(i, _)| i)
+                .collect();
+            if ready.is_empty() {
+                return Err(invalid(format!(
+                    "dependency cycle among steps: {}",
+                    remaining
+                        .iter()
+                        .map(|s| s.name.as_str())
+                        .collect::<Vec<_>>()
+                        .join(", ")
+                )));
+            }
+            for i in ready.into_iter().rev() {
+                let s = remaining.remove(i);
+                done.push(&s.name);
+                order.push(s);
+            }
+        }
+        Ok(order)
+    }
+}
+
+fn parse_parameterset(v: &Json, i: usize) -> Result<ParameterSet, SpecError> {
+    let name = v
+        .str_of("name")
+        .ok_or_else(|| invalid(format!("parameterset[{i}]: missing 'name'")))?
+        .to_string();
+    let mut parameters = Vec::new();
+    for (j, p) in v
+        .get("parameters")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| invalid(format!("parameterset '{name}': missing 'parameters'")))?
+        .iter()
+        .enumerate()
+    {
+        let pname = p
+            .str_of("name")
+            .ok_or_else(|| invalid(format!("parameterset '{name}'[{j}]: missing 'name'")))?
+            .to_string();
+        let values: Vec<String> = if let Some(vals) = p.get("values").and_then(Json::as_arr) {
+            vals.iter().map(json_scalar_string).collect()
+        } else if let Some(v1) = p.get("value") {
+            vec![json_scalar_string(v1)]
+        } else {
+            return Err(invalid(format!(
+                "parameter '{pname}': needs 'value' or 'values'"
+            )));
+        };
+        if values.is_empty() {
+            return Err(invalid(format!("parameter '{pname}': empty 'values'")));
+        }
+        parameters.push(Parameter {
+            name: pname,
+            values,
+            tag: p.str_of("tag").map(str::to_string),
+        });
+    }
+    Ok(ParameterSet { name, parameters })
+}
+
+fn parse_step(v: &Json, i: usize) -> Result<Step, SpecError> {
+    let name = v
+        .str_of("name")
+        .ok_or_else(|| invalid(format!("steps[{i}]: missing 'name'")))?
+        .to_string();
+    let strings = |key: &str| -> Vec<String> {
+        v.get(key)
+            .and_then(Json::as_arr)
+            .map(|a| a.iter().map(json_scalar_string).collect())
+            .unwrap_or_default()
+    };
+    let commands = match v.get("do") {
+        Some(Json::Arr(_)) => strings("do"),
+        Some(Json::Str(s)) => s.lines().map(str::to_string).collect(),
+        _ => {
+            return Err(invalid(format!("step '{name}': missing 'do'")));
+        }
+    };
+    Ok(Step {
+        name,
+        depends: strings("depends"),
+        uses: strings("use"),
+        commands,
+        remote: v.bool_of("remote").unwrap_or(false)
+            || v.str_of("remote") == Some("true"),
+        tag: v.str_of("tag").map(str::to_string),
+    })
+}
+
+fn parse_pattern(v: &Json, i: usize) -> Result<AnalysisPattern, SpecError> {
+    Ok(AnalysisPattern {
+        name: v
+            .str_of("name")
+            .ok_or_else(|| invalid(format!("analysis[{i}]: missing 'name'")))?
+            .to_string(),
+        file: v
+            .str_of("file")
+            .ok_or_else(|| invalid(format!("analysis[{i}]: missing 'file'")))?
+            .to_string(),
+        regex: v
+            .str_of("regex")
+            .ok_or_else(|| invalid(format!("analysis[{i}]: missing 'regex'")))?
+            .to_string(),
+        dtype: v.str_of("type").unwrap_or("string").to_string(),
+    })
+}
+
+fn json_scalar_string(v: &Json) -> String {
+    match v {
+        Json::Str(s) => s.clone(),
+        Json::Num(n) if n.fract() == 0.0 && n.abs() < 9.0e15 => format!("{}", *n as i64),
+        Json::Num(n) => format!("{n}"),
+        Json::Bool(b) => b.to_string(),
+        Json::Null => String::new(),
+        other => other.to_string(),
+    }
+}
+
+#[cfg(test)]
+pub(crate) const LOGMAP_SPEC: &str = r#"
+name: logmap
+parametersets:
+  - name: run
+    parameters:
+      - name: workload
+        values: [4, 6]
+      - name: intensity
+        value: 2.4
+      - name: nodes
+        values: [1, 2]
+        tag: scaling
+steps:
+  - name: compile
+    do:
+      - cmake -S . -B build
+      - cmake --build build
+  - name: execute
+    depends: [compile]
+    use: [run]
+    remote: true
+    do:
+      - logmap --workload $workload --intensity $intensity
+analysis:
+  - name: runtime
+    file: logmap.out
+    regex: "time: ([0-9.eE+-]+)"
+    type: float
+"#;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_full_spec() {
+        let spec = BenchmarkSpec::parse(LOGMAP_SPEC).unwrap();
+        assert_eq!(spec.name, "logmap");
+        assert_eq!(spec.parametersets.len(), 1);
+        assert_eq!(spec.parametersets[0].parameters.len(), 3);
+        assert_eq!(spec.steps.len(), 2);
+        assert!(spec.steps[1].remote);
+        assert_eq!(spec.analysis[0].dtype, "float");
+    }
+
+    #[test]
+    fn step_order_respects_deps() {
+        let spec = BenchmarkSpec::parse(LOGMAP_SPEC).unwrap();
+        let order = spec.step_order().unwrap();
+        let names: Vec<&str> = order.iter().map(|s| s.name.as_str()).collect();
+        assert_eq!(names, vec!["compile", "execute"]);
+    }
+
+    #[test]
+    fn detects_cycles() {
+        let text = r#"
+name: cyc
+steps:
+  - name: a
+    depends: [b]
+    do: [x]
+  - name: b
+    depends: [a]
+    do: [y]
+"#;
+        let err = BenchmarkSpec::parse(text)
+            .unwrap()
+            .step_order()
+            .unwrap_err();
+        assert!(err.to_string().contains("cycle"));
+    }
+
+    #[test]
+    fn rejects_bad_specs() {
+        assert!(BenchmarkSpec::parse("name: x\n").is_err()); // no steps
+        let dup = "name: x\nsteps:\n  - name: a\n    do: [c]\n  - name: a\n    do: [c]\n";
+        assert!(BenchmarkSpec::parse(dup).is_err());
+        let unk_dep = "name: x\nsteps:\n  - name: a\n    depends: [z]\n    do: [c]\n";
+        assert!(BenchmarkSpec::parse(unk_dep).is_err());
+        let unk_use = "name: x\nsteps:\n  - name: a\n    use: [z]\n    do: [c]\n";
+        assert!(BenchmarkSpec::parse(unk_use).is_err());
+        let bad_re = "name: x\nsteps:\n  - name: a\n    do: [c]\nanalysis:\n  - name: m\n    file: f\n    regex: \"([\"\n";
+        assert!(BenchmarkSpec::parse(bad_re).is_err());
+    }
+
+    #[test]
+    fn multiline_do_block() {
+        let text = "name: x\nsteps:\n  - name: a\n    do: |\n      echo one\n      echo two\n";
+        let spec = BenchmarkSpec::parse(text).unwrap();
+        assert_eq!(spec.steps[0].commands.len(), 2);
+    }
+}

@@ -1,0 +1,33 @@
+//! # exaCB — Reproducible Continuous Benchmark Collections at Scale
+//!
+//! Library reproduction of *exaCB* (Badwaik, Bode, Rajski, Herten; JSC,
+//! CS.DC 2026): a continuous-benchmarking framework where independently
+//! owned benchmark repositories are strongly coupled to a shared protocol
+//! and orchestrated through CI/CD pipelines on HPC systems.
+//!
+//! The crate contains the framework itself (`protocol`, `ci`,
+//! `coordinator`, `harness`, `analysis`, `energy`, `store`) **and** every
+//! substrate the paper depends on, simulated where the real thing is
+//! hardware- or site-gated (`cluster`, `scheduler`, `workloads`): see
+//! DESIGN.md for the substitution table.
+//!
+//! Compute hot paths (the logmap and STREAM benchmark kernels) are
+//! AOT-compiled from JAX/Pallas to HLO at build time (`make artifacts`)
+//! and executed natively through the PJRT C API (`runtime`); Python never
+//! runs on the benchmarking path.
+
+pub mod util;
+pub mod protocol;
+pub mod cluster;
+pub mod scheduler;
+pub mod harness;
+pub mod ci;
+pub mod runtime;
+pub mod workloads;
+pub mod energy;
+pub mod analysis;
+pub mod coordinator;
+pub mod experiments;
+pub mod bench;
+pub mod cli;
+pub mod store;

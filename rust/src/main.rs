@@ -1,0 +1,9 @@
+//! exaCB leader entrypoint: the command-line interface over the library.
+//!
+//! See `exacb --help` (or [`exacb::cli::USAGE`]) for commands. The binary
+//! is self-contained after `make artifacts`: Python is never invoked.
+
+fn main() {
+    let code = exacb::cli::run(std::env::args().skip(1).collect());
+    std::process::exit(code);
+}

@@ -1,0 +1,179 @@
+//! Table I: the harness `results.csv` contract.
+//!
+//! "The result table shown here represents the minimum required output —
+//! a baseline that stays consistent as users add more metrics via
+//! additional *additional_metrics* columns." (paper §II-B, Table I)
+//!
+//! Column order is normative: system, version, queue, variant, jobid,
+//! nodes, taskspernode, threadspertasks, runtime, success, then one
+//! column per additional metric (sorted by name for stability).
+
+use super::report::Report;
+use crate::util::table::Table;
+
+/// The fixed Table-I columns, in order. `threadspertasks` keeps the
+/// paper's spelling.
+pub const BASE_COLUMNS: [&str; 10] = [
+    "system",
+    "version",
+    "queue",
+    "variant",
+    "jobid",
+    "nodes",
+    "taskspernode",
+    "threadspertasks",
+    "runtime",
+    "success",
+];
+
+/// Render one or more protocol reports as a Table-I `results.csv` table.
+pub fn results_table(reports: &[&Report]) -> Table {
+    // Collect the union of metric names across all entries.
+    let mut metric_names: Vec<String> = Vec::new();
+    for r in reports {
+        for e in &r.data {
+            for (k, v) in e.metrics.as_obj().unwrap_or(&[]) {
+                if v.as_f64().is_some() && !metric_names.contains(k) {
+                    metric_names.push(k.clone());
+                }
+            }
+        }
+    }
+    metric_names.sort();
+
+    let mut columns: Vec<&str> = BASE_COLUMNS.to_vec();
+    for m in &metric_names {
+        columns.push(m.as_str());
+    }
+    let mut table = Table::new(&columns);
+    for r in reports {
+        for e in &r.data {
+            let mut row = vec![
+                r.experiment.system.clone(),
+                r.reporter.system_version.clone(),
+                e.queue.clone(),
+                r.experiment.variant.clone(),
+                e.jobid.to_string(),
+                e.nodes.to_string(),
+                e.taskspernode.to_string(),
+                e.threadspertask.to_string(),
+                format_num(e.runtime),
+                e.success.to_string(),
+            ];
+            for m in &metric_names {
+                row.push(e.metric(m).map(format_num).unwrap_or_default());
+            }
+            table.push_row(row);
+        }
+    }
+    table
+}
+
+/// Emit Table-I CSV text for a set of reports.
+pub fn results_csv(reports: &[&Report]) -> String {
+    results_table(reports).to_csv()
+}
+
+fn format_num(v: f64) -> String {
+    if v.fract() == 0.0 && v.abs() < 9.0e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v:.6}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::report::{DataEntry, Experiment, Report, Reporter};
+    use super::*;
+    use crate::util::json::Json;
+
+    fn report_with_metrics() -> Report {
+        Report {
+            reporter: Reporter {
+                tool: "exacb".into(),
+                tool_version: "0.1".into(),
+                system: "jedi".into(),
+                system_version: "2026.1".into(),
+                timestamp: "2026-02-01T00:00:00Z".into(),
+                ..Default::default()
+            },
+            parameter: Json::obj(),
+            experiment: Experiment {
+                system: "jedi".into(),
+                variant: "large-intensity".into(),
+                ..Default::default()
+            },
+            data: vec![
+                DataEntry {
+                    success: true,
+                    runtime: 12.5,
+                    nodes: 4,
+                    taskspernode: 4,
+                    threadspertask: 8,
+                    jobid: 101,
+                    queue: "all".into(),
+                    metrics: Json::obj().set("gflops", 830.25),
+                },
+                DataEntry {
+                    success: false,
+                    runtime: 0.0,
+                    nodes: 8,
+                    jobid: 102,
+                    queue: "all".into(),
+                    ..Default::default()
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn table1_contract_columns_in_order() {
+        let r = report_with_metrics();
+        let t = results_table(&[&r]);
+        assert_eq!(
+            &t.columns[..10],
+            &BASE_COLUMNS
+                .iter()
+                .map(|s| s.to_string())
+                .collect::<Vec<_>>()[..]
+        );
+        // additional_metrics columns follow the base set
+        assert_eq!(t.columns[10], "gflops");
+        assert_eq!(t.len(), 2);
+    }
+
+    #[test]
+    fn rows_carry_values() {
+        let r = report_with_metrics();
+        let t = results_table(&[&r]);
+        assert_eq!(t.rows[0][0], "jedi");
+        assert_eq!(t.rows[0][4], "101");
+        assert_eq!(t.rows[0][8], "12.500000");
+        assert_eq!(t.rows[0][9], "true");
+        assert_eq!(t.rows[0][10], "830.250000");
+        // missing metric -> empty cell
+        assert_eq!(t.rows[1][10], "");
+        assert_eq!(t.rows[1][9], "false");
+    }
+
+    #[test]
+    fn csv_parses_back() {
+        let r = report_with_metrics();
+        let csv = results_csv(&[&r]);
+        let t = crate::util::table::Table::from_csv(&csv).unwrap();
+        assert_eq!(t.len(), 2);
+        assert_eq!(t.column("system").unwrap(), vec!["jedi", "jedi"]);
+    }
+
+    #[test]
+    fn multiple_reports_union_metrics() {
+        let a = report_with_metrics();
+        let mut b = report_with_metrics();
+        b.data[0].metrics = Json::obj().set("bw_copy", 1.0);
+        let t = results_table(&[&a, &b]);
+        assert!(t.col_index("gflops").is_some());
+        assert!(t.col_index("bw_copy").is_some());
+        assert_eq!(t.len(), 4);
+    }
+}

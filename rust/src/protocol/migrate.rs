@@ -1,0 +1,161 @@
+//! Protocol schema migrations (§V-B (a): "a protocol version identifier
+//! ... enables backward compatibility and schema evolution").
+//!
+//! Old reports stored in `exacb.data` branches remain readable forever:
+//! `Report::parse` migrates any supported version forward to the current
+//! schema before validation. Version history in this reproduction:
+//!
+//! * **v1** — flat `meta` section (tool/system/timestamp mixed together),
+//!   no `experiment` section, runs under `runs` with `runtime_s`.
+//! * **v2** — split `reporter`, added `experiment`, renamed `runs` →
+//!   `data` but kept `runtime_s` and string booleans for `success`.
+//! * **v3** — current: numeric `runtime`, real booleans, `metrics` object.
+
+use super::report::ProtocolError;
+use crate::util::json::Json;
+
+/// Migrate a parsed document at `version` to the current schema.
+pub fn migrate(doc: &Json, version: u64) -> Result<Json, ProtocolError> {
+    let mut v = doc.clone();
+    let mut at = version;
+    while at < super::report::PROTOCOL_VERSION {
+        v = match at {
+            1 => v1_to_v2(&v)?,
+            2 => v2_to_v3(&v)?,
+            other => return Err(ProtocolError::Version(other)),
+        };
+        at += 1;
+    }
+    Ok(v)
+}
+
+fn v1_to_v2(doc: &Json) -> Result<Json, ProtocolError> {
+    let meta = doc.get("meta").cloned().unwrap_or_else(Json::obj);
+    let reporter = Json::obj()
+        .set("tool", meta.str_of("tool").unwrap_or("unknown"))
+        .set("tool_version", meta.str_of("tool_version").unwrap_or("0"))
+        .set("system", meta.str_of("system").unwrap_or("unknown"))
+        .set("timestamp", meta.str_of("timestamp").unwrap_or(""));
+    let experiment = Json::obj()
+        .set("system", meta.str_of("system").unwrap_or("unknown"))
+        .set("variant", meta.str_of("variant").unwrap_or(""))
+        .set("timestamp", meta.str_of("timestamp").unwrap_or(""));
+    let runs = doc.get("runs").cloned().unwrap_or_else(Json::arr);
+    Ok(Json::obj()
+        .set("version", 2u64)
+        .set("reporter", reporter)
+        .set(
+            "parameter",
+            doc.get("parameter").cloned().unwrap_or_else(Json::obj),
+        )
+        .set("experiment", experiment)
+        .set("data", runs))
+}
+
+fn v2_to_v3(doc: &Json) -> Result<Json, ProtocolError> {
+    let mut out = doc.clone();
+    out.insert("version", 3u64);
+    let data = doc
+        .get("data")
+        .and_then(Json::as_arr)
+        .unwrap_or(&[])
+        .to_vec();
+    let mut migrated = Json::arr();
+    for entry in data {
+        let mut e = entry.clone();
+        // runtime_s (v2) -> runtime (v3)
+        if e.get("runtime").is_none() {
+            if let Some(rt) = e.f64_of("runtime_s") {
+                e.insert("runtime", rt);
+            }
+        }
+        // string "true"/"false" success (v2) -> bool (v3)
+        if let Some(s) = e.str_of("success").map(str::to_string) {
+            e.insert("success", s == "true" || s == "1");
+        }
+        // loose numeric metrics at top level -> metrics object
+        if e.get("metrics").is_none() {
+            let known = [
+                "success",
+                "runtime",
+                "runtime_s",
+                "nodes",
+                "taskspernode",
+                "threadspertask",
+                "jobid",
+                "queue",
+            ];
+            let extras: Vec<(String, Json)> = e
+                .as_obj()
+                .unwrap_or(&[])
+                .iter()
+                .filter(|(k, v)| !known.contains(&k.as_str()) && v.as_f64().is_some())
+                .cloned()
+                .collect();
+            if !extras.is_empty() {
+                e.insert("metrics", Json::Obj(extras));
+            }
+        }
+        migrated.push(e);
+    }
+    out.insert("data", migrated);
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::report::Report;
+    use super::*;
+
+    #[test]
+    fn v2_document_parses() {
+        let doc = r#"{
+            "version": 2,
+            "reporter": {"tool": "exacb", "tool_version": "0.0.2",
+                         "system": "jureca", "timestamp": "2026-01-05T00:00:00Z"},
+            "experiment": {"system": "jureca", "variant": "single",
+                           "timestamp": "2026-01-05T00:00:00Z"},
+            "data": [
+                {"success": "true", "runtime_s": 33.1, "nodes": 2,
+                 "jobid": 5, "queue": "dc-gpu", "bw_copy": 1234.5}
+            ]
+        }"#;
+        let r = Report::parse(doc).unwrap();
+        assert_eq!(r.data.len(), 1);
+        assert!(r.data[0].success);
+        assert!((r.data[0].runtime - 33.1).abs() < 1e-9);
+        assert_eq!(r.data[0].metric("bw_copy"), Some(1234.5));
+    }
+
+    #[test]
+    fn v1_document_parses() {
+        let doc = r#"{
+            "version": 1,
+            "meta": {"tool": "jube-glue", "system": "juwels-booster",
+                     "variant": "strong", "timestamp": "2026-01-02T00:00:00Z"},
+            "runs": [
+                {"success": "false", "runtime_s": 0.0, "nodes": 8}
+            ]
+        }"#;
+        let r = Report::parse(doc).unwrap();
+        assert_eq!(r.reporter.tool, "jube-glue");
+        assert_eq!(r.experiment.system, "juwels-booster");
+        assert_eq!(r.experiment.variant, "strong");
+        assert!(!r.data[0].success);
+        assert_eq!(r.data[0].nodes, 8);
+    }
+
+    #[test]
+    fn v1_empty_runs_ok() {
+        let doc = r#"{"version": 1,
+                      "meta": {"tool":"t","system":"s","timestamp":"2026-01-01"}}"#;
+        let r = Report::parse(doc).unwrap();
+        assert!(r.data.is_empty());
+    }
+
+    #[test]
+    fn unknown_old_version_fails() {
+        let err = migrate(&Json::obj(), 0).unwrap_err();
+        assert!(matches!(err, ProtocolError::Version(0)));
+    }
+}

@@ -1,0 +1,87 @@
+//! The exaCB protocol (paper §IV-B, §V-B): the standardized data model
+//! that strongly couples independently-owned benchmarks to the framework.
+//!
+//! * [`report`] — the document model (`version`/`reporter`/`parameter`/
+//!   `experiment`/`data[]`) with parsing + validation.
+//! * [`migrate`] — schema-version migrations (old stored reports stay
+//!   readable).
+//! * [`csv`] — the Table-I `results.csv` contract.
+//!
+//! Design rule enforced throughout the crate: components never exchange
+//! ad-hoc structures — generation and consumption of benchmark data are
+//! fully decoupled and may happen at different times on different
+//! systems, so everything crosses module boundaries as [`report::Report`]
+//! documents.
+
+pub mod csv;
+pub mod migrate;
+pub mod report;
+
+pub use csv::{results_csv, results_table, BASE_COLUMNS};
+pub use report::{
+    DataEntry, Experiment, ProtocolError, Report, Reporter, PROTOCOL_VERSION,
+};
+
+/// Merge several reports that share an experiment context into one
+/// document (used when a parameter study produces per-point reports that
+/// the post-processing orchestrator wants as a single dataset). The first
+/// report's reporter/experiment win; data arrays concatenate; parameters
+/// merge key-wise (later reports do not override earlier keys).
+pub fn merge(reports: &[Report]) -> Option<Report> {
+    let mut iter = reports.iter();
+    let mut out = iter.next()?.clone();
+    for r in iter {
+        out.data.extend(r.data.iter().cloned());
+        for (k, v) in r.parameter.as_obj().unwrap_or(&[]) {
+            if out.parameter.get(k).is_none() {
+                out.parameter.insert(k, v.clone());
+            }
+        }
+    }
+    Some(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::report::{DataEntry, Report};
+    use super::*;
+    use crate::util::json::Json;
+
+    fn mk(n_entries: usize, param: (&str, u64)) -> Report {
+        let mut r = Report::default();
+        r.reporter.tool = "t".into();
+        r.reporter.tool_version = "1".into();
+        r.reporter.system = "s".into();
+        r.reporter.timestamp = "2026-01-01T00:00:00Z".into();
+        r.experiment.system = "s".into();
+        r.parameter = Json::obj().set(param.0, param.1);
+        r.data = (0..n_entries)
+            .map(|i| DataEntry {
+                success: true,
+                runtime: i as f64,
+                nodes: 1,
+                ..Default::default()
+            })
+            .collect();
+        r
+    }
+
+    #[test]
+    fn merge_concatenates_data() {
+        let merged = merge(&[mk(2, ("a", 1)), mk(3, ("b", 2))]).unwrap();
+        assert_eq!(merged.data.len(), 5);
+        assert_eq!(merged.parameter.u64_of("a"), Some(1));
+        assert_eq!(merged.parameter.u64_of("b"), Some(2));
+    }
+
+    #[test]
+    fn merge_first_param_wins() {
+        let merged = merge(&[mk(1, ("a", 1)), mk(1, ("a", 9))]).unwrap();
+        assert_eq!(merged.parameter.u64_of("a"), Some(1));
+    }
+
+    #[test]
+    fn merge_empty_is_none() {
+        assert!(merge(&[]).is_none());
+    }
+}

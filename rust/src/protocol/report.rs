@@ -1,0 +1,395 @@
+//! The exaCB protocol data model (paper §V-B).
+//!
+//! A protocol document is a single benchmark *report* with five top-level
+//! sections: `version`, `reporter`, `parameter`, `experiment`, `data[]`.
+//! The format is hierarchical JSON, self-describing, extensible, and
+//! robust against partial/incremental generation: every consumer in the
+//! framework (orchestrators, store, analysis) speaks only this model.
+
+use crate::util::json::Json;
+use crate::util::timeutil::SimTime;
+
+/// Current protocol schema version.
+pub const PROTOCOL_VERSION: u64 = 3;
+
+/// §V-B (b): provenance metadata about the entity that generated the
+/// report — tool, pipeline/job ids, commit, user, system, timestamps.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct Reporter {
+    pub tool: String,
+    pub tool_version: String,
+    pub pipeline_id: u64,
+    pub ci_job_id: u64,
+    pub commit: String,
+    pub user: String,
+    pub system: String,
+    pub system_version: String,
+    pub timestamp: String,
+    /// Seed that reproduces simulated noise (this reproduction's addition
+    /// to the provenance section; see DESIGN.md).
+    pub seed: u64,
+}
+
+/// §V-B (d): semantic context of the experiment.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct Experiment {
+    pub system: String,
+    pub software_version: String,
+    pub variant: String,
+    pub usecase: String,
+    pub timestamp: String,
+}
+
+/// §V-B (e): one benchmark execution (a run of one parameter point).
+#[derive(Debug, Clone, PartialEq)]
+pub struct DataEntry {
+    pub success: bool,
+    /// Total runtime in seconds (time-to-solution).
+    pub runtime: f64,
+    pub nodes: u64,
+    pub taskspernode: u64,
+    pub threadspertask: u64,
+    /// Scheduler metadata.
+    pub jobid: u64,
+    pub queue: String,
+    /// Extensible benchmark-specific metrics (bandwidths, energy, ...).
+    pub metrics: Json,
+}
+
+impl Default for DataEntry {
+    fn default() -> Self {
+        DataEntry {
+            success: false,
+            runtime: 0.0,
+            nodes: 1,
+            taskspernode: 1,
+            threadspertask: 1,
+            jobid: 0,
+            queue: String::new(),
+            metrics: Json::obj(),
+        }
+    }
+}
+
+/// A complete protocol document.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct Report {
+    pub reporter: Reporter,
+    /// §V-B (c): global (experiment-wide) parameters.
+    pub parameter: Json,
+    pub experiment: Experiment,
+    pub data: Vec<DataEntry>,
+}
+
+#[derive(Debug, Clone, PartialEq, thiserror::Error)]
+pub enum ProtocolError {
+    #[error("malformed json: {0}")]
+    Json(String),
+    #[error("schema violation at {path}: {msg}")]
+    Schema { path: String, msg: String },
+    #[error("unsupported protocol version {0} (current: {PROTOCOL_VERSION})")]
+    Version(u64),
+}
+
+fn schema_err(path: &str, msg: &str) -> ProtocolError {
+    ProtocolError::Schema {
+        path: path.to_string(),
+        msg: msg.to_string(),
+    }
+}
+
+impl Reporter {
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("tool", self.tool.as_str())
+            .set("tool_version", self.tool_version.as_str())
+            .set("pipeline_id", self.pipeline_id)
+            .set("ci_job_id", self.ci_job_id)
+            .set("commit", self.commit.as_str())
+            .set("user", self.user.as_str())
+            .set("system", self.system.as_str())
+            .set("system_version", self.system_version.as_str())
+            .set("timestamp", self.timestamp.as_str())
+            .set("seed", self.seed)
+    }
+
+    pub fn from_json(v: &Json) -> Result<Reporter, ProtocolError> {
+        let req = |k: &str| -> Result<String, ProtocolError> {
+            v.str_of(k)
+                .map(str::to_string)
+                .ok_or_else(|| schema_err(&format!("/reporter/{k}"), "missing string field"))
+        };
+        Ok(Reporter {
+            tool: req("tool")?,
+            tool_version: req("tool_version")?,
+            pipeline_id: v.u64_of("pipeline_id").unwrap_or(0),
+            ci_job_id: v.u64_of("ci_job_id").unwrap_or(0),
+            commit: v.str_of("commit").unwrap_or_default().to_string(),
+            user: v.str_of("user").unwrap_or_default().to_string(),
+            system: req("system")?,
+            system_version: v.str_of("system_version").unwrap_or_default().to_string(),
+            timestamp: req("timestamp")?,
+            seed: v.u64_of("seed").unwrap_or(0),
+        })
+    }
+}
+
+impl Experiment {
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("system", self.system.as_str())
+            .set("software_version", self.software_version.as_str())
+            .set("variant", self.variant.as_str())
+            .set("usecase", self.usecase.as_str())
+            .set("timestamp", self.timestamp.as_str())
+    }
+
+    pub fn from_json(v: &Json) -> Result<Experiment, ProtocolError> {
+        Ok(Experiment {
+            system: v
+                .str_of("system")
+                .ok_or_else(|| schema_err("/experiment/system", "missing string field"))?
+                .to_string(),
+            software_version: v
+                .str_of("software_version")
+                .unwrap_or_default()
+                .to_string(),
+            variant: v.str_of("variant").unwrap_or_default().to_string(),
+            usecase: v.str_of("usecase").unwrap_or_default().to_string(),
+            timestamp: v.str_of("timestamp").unwrap_or_default().to_string(),
+        })
+    }
+
+    /// Parse the experiment timestamp for time-series filtering.
+    pub fn time(&self) -> Option<SimTime> {
+        SimTime::parse(&self.timestamp)
+    }
+}
+
+impl DataEntry {
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("success", self.success)
+            .set("runtime", self.runtime)
+            .set("nodes", self.nodes)
+            .set("taskspernode", self.taskspernode)
+            .set("threadspertask", self.threadspertask)
+            .set("jobid", self.jobid)
+            .set("queue", self.queue.as_str())
+            .set("metrics", self.metrics.clone())
+    }
+
+    pub fn from_json(v: &Json, idx: usize) -> Result<DataEntry, ProtocolError> {
+        let path = format!("/data/{idx}");
+        let success = v
+            .bool_of("success")
+            .ok_or_else(|| schema_err(&path, "missing bool 'success'"))?;
+        let runtime = v
+            .f64_of("runtime")
+            .ok_or_else(|| schema_err(&path, "missing number 'runtime'"))?;
+        if !runtime.is_finite() || runtime < 0.0 {
+            return Err(schema_err(&path, "'runtime' must be finite and >= 0"));
+        }
+        let nodes = v
+            .u64_of("nodes")
+            .ok_or_else(|| schema_err(&path, "missing integer 'nodes'"))?;
+        if nodes == 0 {
+            return Err(schema_err(&path, "'nodes' must be >= 1"));
+        }
+        let metrics = match v.get("metrics") {
+            None => Json::obj(),
+            Some(m @ Json::Obj(_)) => m.clone(),
+            Some(_) => return Err(schema_err(&path, "'metrics' must be an object")),
+        };
+        Ok(DataEntry {
+            success,
+            runtime,
+            nodes,
+            taskspernode: v.u64_of("taskspernode").unwrap_or(1),
+            threadspertask: v.u64_of("threadspertask").unwrap_or(1),
+            jobid: v.u64_of("jobid").unwrap_or(0),
+            queue: v.str_of("queue").unwrap_or_default().to_string(),
+            metrics,
+        })
+    }
+
+    /// A named metric value, if present and numeric.
+    pub fn metric(&self, name: &str) -> Option<f64> {
+        self.metrics.f64_of(name)
+    }
+}
+
+impl Report {
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("version", PROTOCOL_VERSION)
+            .set("reporter", self.reporter.to_json())
+            .set("parameter", self.parameter.clone())
+            .set("experiment", self.experiment.to_json())
+            .set(
+                "data",
+                Json::Arr(self.data.iter().map(DataEntry::to_json).collect()),
+            )
+    }
+
+    /// Serialize as the canonical protocol document (pretty JSON).
+    pub fn to_document(&self) -> String {
+        self.to_json().pretty()
+    }
+
+    /// Parse and validate a protocol document, migrating old versions
+    /// forward (see [`super::migrate`]).
+    pub fn parse(text: &str) -> Result<Report, ProtocolError> {
+        let v = Json::parse(text).map_err(|e| ProtocolError::Json(e.to_string()))?;
+        Report::from_json(&v)
+    }
+
+    pub fn from_json(v: &Json) -> Result<Report, ProtocolError> {
+        let version = v
+            .u64_of("version")
+            .ok_or_else(|| schema_err("/version", "missing integer 'version'"))?;
+        let v = if version < PROTOCOL_VERSION {
+            super::migrate::migrate(v, version)?
+        } else if version > PROTOCOL_VERSION {
+            return Err(ProtocolError::Version(version));
+        } else {
+            v.clone()
+        };
+        let reporter = Reporter::from_json(
+            v.get("reporter")
+                .ok_or_else(|| schema_err("/reporter", "missing section"))?,
+        )?;
+        let parameter = match v.get("parameter") {
+            None | Some(Json::Null) => Json::obj(),
+            Some(p @ Json::Obj(_)) => p.clone(),
+            Some(_) => return Err(schema_err("/parameter", "must be an object")),
+        };
+        let experiment = Experiment::from_json(
+            v.get("experiment")
+                .ok_or_else(|| schema_err("/experiment", "missing section"))?,
+        )?;
+        let data_json = v
+            .get("data")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| schema_err("/data", "missing array section"))?;
+        let mut data = Vec::with_capacity(data_json.len());
+        for (i, entry) in data_json.iter().enumerate() {
+            data.push(DataEntry::from_json(entry, i)?);
+        }
+        Ok(Report {
+            reporter,
+            parameter,
+            experiment,
+            data,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    pub fn sample_report() -> Report {
+        Report {
+            reporter: Reporter {
+                tool: "exacb".into(),
+                tool_version: "0.1.0".into(),
+                pipeline_id: 221622,
+                ci_job_id: 900001,
+                commit: "abc123def456".into(),
+                user: "jureap-bot".into(),
+                system: "jedi".into(),
+                system_version: "2026.1".into(),
+                timestamp: "2026-02-03T04:05:06Z".into(),
+                seed: 42,
+            },
+            parameter: Json::obj().set("workload", 6u64).set("intensity", 2.4),
+            experiment: Experiment {
+                system: "jedi".into(),
+                software_version: "stage-2026".into(),
+                variant: "large-intensity".into(),
+                usecase: "large-workload".into(),
+                timestamp: "2026-02-03T04:00:00Z".into(),
+            },
+            data: vec![DataEntry {
+                success: true,
+                runtime: 12.5,
+                nodes: 4,
+                taskspernode: 4,
+                threadspertask: 8,
+                jobid: 7700123,
+                queue: "all".into(),
+                metrics: Json::obj().set("tts", 12.5).set("gflops", 830.2),
+            }],
+        }
+    }
+
+    #[test]
+    fn roundtrip() {
+        let r = sample_report();
+        let doc = r.to_document();
+        let back = Report::parse(&doc).unwrap();
+        assert_eq!(back, r);
+    }
+
+    #[test]
+    fn rejects_future_version() {
+        let mut j = sample_report().to_json();
+        j.insert("version", 99u64);
+        let err = Report::from_json(&j).unwrap_err();
+        assert!(matches!(err, ProtocolError::Version(99)));
+    }
+
+    #[test]
+    fn rejects_missing_sections() {
+        for missing in ["reporter", "experiment", "data"] {
+            let j = sample_report().to_json();
+            let pruned = Json::Obj(
+                j.as_obj()
+                    .unwrap()
+                    .iter()
+                    .filter(|(k, _)| k != missing)
+                    .cloned()
+                    .collect(),
+            );
+            assert!(Report::from_json(&pruned).is_err(), "{missing}");
+        }
+    }
+
+    #[test]
+    fn rejects_bad_data_entries() {
+        let mut r = sample_report();
+        r.data[0].runtime = -1.0;
+        let err = Report::parse(&r.to_document()).unwrap_err();
+        assert!(matches!(err, ProtocolError::Schema { .. }));
+
+        let mut r = sample_report();
+        r.data[0].nodes = 0;
+        assert!(Report::parse(&r.to_document()).is_err());
+    }
+
+    #[test]
+    fn metrics_accessor() {
+        let r = sample_report();
+        assert_eq!(r.data[0].metric("gflops"), Some(830.2));
+        assert_eq!(r.data[0].metric("missing"), None);
+    }
+
+    #[test]
+    fn empty_data_is_valid() {
+        // "robust against partial or incremental data generation" (§V-B)
+        let mut r = sample_report();
+        r.data.clear();
+        let back = Report::parse(&r.to_document()).unwrap();
+        assert!(back.data.is_empty());
+    }
+
+    #[test]
+    fn experiment_time_parses() {
+        let r = sample_report();
+        assert_eq!(
+            r.experiment.time().unwrap().date_string(),
+            "2026-02-03"
+        );
+    }
+}

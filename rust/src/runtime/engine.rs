@@ -1,0 +1,272 @@
+//! PJRT execution engine: load AOT HLO artifacts, compile once, execute
+//! from the benchmarking hot path.
+//!
+//! Pattern follows /opt/xla-example/load_hlo: HLO *text* -> HloModuleProto
+//! -> XlaComputation -> PjRtClient::compile -> execute. Compiled
+//! executables are cached per artifact, so a 90-day simulated campaign
+//! pays compilation once per variant (see EXPERIMENTS.md §Perf).
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Context, Result};
+
+use super::manifest::{ArtifactEntry, Manifest};
+
+/// Execution result of one artifact invocation.
+#[derive(Debug, Clone)]
+pub struct ExecOutput {
+    /// Flattened f32 outputs, in artifact output order.
+    pub outputs: Vec<Vec<f32>>,
+    /// Host wall-clock of the execute call (compile excluded).
+    pub wall: Duration,
+}
+
+/// PJRT CPU engine with a compile cache.
+pub struct Engine {
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+    /// Cumulative executions (introspection for perf benches).
+    pub executions: u64,
+    pub compilations: u64,
+}
+
+impl Engine {
+    /// Load the engine from an artifacts directory.
+    pub fn load(dir: &Path) -> Result<Engine> {
+        let manifest = Manifest::load(dir).map_err(|e| anyhow!("{e}"))?;
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        Ok(Engine {
+            manifest,
+            client,
+            cache: HashMap::new(),
+            executions: 0,
+            compilations: 0,
+        })
+    }
+
+    /// Load from the default artifacts directory.
+    pub fn load_default() -> Result<Engine> {
+        Self::load(&super::manifest::default_dir())
+    }
+
+    fn executable(&mut self, entry: &ArtifactEntry) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.cache.contains_key(&entry.name) {
+            let path = self.manifest.hlo_path(entry);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("artifact path not utf-8")?,
+            )
+            .with_context(|| format!("parse HLO text {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compile {}", entry.name))?;
+            self.compilations += 1;
+            self.cache.insert(entry.name.clone(), exe);
+        }
+        Ok(&self.cache[&entry.name])
+    }
+
+    /// Execute an artifact on f32 input buffers (shapes per manifest).
+    pub fn execute(&mut self, name: &str, inputs: &[&[f32]]) -> Result<ExecOutput> {
+        let entry = self
+            .manifest
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact '{name}'"))?
+            .clone();
+        if inputs.len() != entry.inputs.len() {
+            return Err(anyhow!(
+                "artifact '{name}' wants {} inputs, got {}",
+                entry.inputs.len(),
+                inputs.len()
+            ));
+        }
+        for (spec, buf) in entry.inputs.iter().zip(inputs) {
+            if spec.elements() != buf.len() {
+                return Err(anyhow!(
+                    "artifact '{name}' input '{}' wants {} elements, got {}",
+                    spec.name,
+                    spec.elements(),
+                    buf.len()
+                ));
+            }
+        }
+        let n_outputs = entry.outputs.len();
+        let exe = self.executable(&entry)?;
+
+        let literals: Vec<xla::Literal> = entry
+            .inputs
+            .iter()
+            .zip(inputs)
+            .map(|(spec, buf)| {
+                let lit = xla::Literal::vec1(buf);
+                let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+                lit.reshape(&dims).context("reshape input literal")
+            })
+            .collect::<Result<_>>()?;
+
+        let start = Instant::now();
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .context("PJRT execute")?;
+        let wall = start.elapsed();
+
+        let root = result
+            .into_iter()
+            .next()
+            .and_then(|d| d.into_iter().next())
+            .ok_or_else(|| anyhow!("empty execution result"))?
+            .to_literal_sync()
+            .context("device->host transfer")?;
+        // aot.py lowers with return_tuple=True: root is a tuple literal.
+        let elements = root.to_tuple().context("untuple result")?;
+        if elements.len() != n_outputs {
+            return Err(anyhow!(
+                "artifact '{name}': expected {n_outputs} outputs, got {}",
+                elements.len()
+            ));
+        }
+        let outputs = elements
+            .into_iter()
+            .map(|l| l.to_vec::<f32>().context("output to f32 vec"))
+            .collect::<Result<Vec<_>>>()?;
+        self.executions += 1;
+        Ok(ExecOutput { outputs, wall })
+    }
+
+    /// Run the logmap artifact: returns (out, summary, wall).
+    pub fn run_logmap(
+        &mut self,
+        name: &str,
+        x: &[f32],
+        r: &[f32],
+    ) -> Result<(Vec<f32>, [f32; 4], Duration)> {
+        let out = self.execute(name, &[x, r])?;
+        let summary: [f32; 4] = out.outputs[1]
+            .as_slice()
+            .try_into()
+            .map_err(|_| anyhow!("summary must have 4 elements"))?;
+        Ok((out.outputs.into_iter().next().unwrap(), summary, out.wall))
+    }
+
+    /// Run the stream artifact on a constant-initialised `a` array:
+    /// returns ([copy, mul, add, triad, dot] checksums, wall). The
+    /// initial b/c arrays are overwritten before first read by the
+    /// BabelStream dataflow, so only `a` is an input (see model.py).
+    pub fn run_stream(&mut self, name: &str, a0: f32) -> Result<([f32; 5], Duration)> {
+        let n = self
+            .manifest
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact '{name}'"))?
+            .n();
+        let a = vec![a0; n];
+        let out = self.execute(name, &[&a])?;
+        let sums: [f32; 5] = out.outputs[0]
+            .as_slice()
+            .try_into()
+            .map_err(|_| anyhow!("checksums must have 5 elements"))?;
+        Ok((sums, out.wall))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::default_dir;
+
+    fn engine() -> Option<Engine> {
+        if default_dir().join("manifest.json").exists() {
+            Some(Engine::load_default().expect("engine loads"))
+        } else {
+            eprintln!("skipping PJRT test: artifacts not built");
+            None
+        }
+    }
+
+    /// Scalar reference implementation used to validate PJRT output.
+    fn logmap_scalar(x: f32, r: f32, iters: u64) -> f32 {
+        let mut v = x;
+        for _ in 0..iters {
+            v = r * v * (1.0 - v);
+        }
+        v
+    }
+
+    #[test]
+    fn logmap_artifact_matches_scalar_reference() {
+        let Some(mut eng) = engine() else { return };
+        let entry = eng.manifest.best_logmap(128, 16384).unwrap().clone();
+        let n = entry.n();
+        let x: Vec<f32> = (0..n).map(|i| 0.1 + 0.8 * (i as f32 / n as f32)).collect();
+        let r = vec![3.5f32; n];
+        let (out, summary, wall) = eng.run_logmap(&entry.name, &x, &r).unwrap();
+        assert_eq!(out.len(), n);
+        assert!(wall.as_nanos() > 0);
+        // spot-check against the scalar reference (f32 rounding differs
+        // slightly between vectorised XLA and the scalar loop)
+        for &i in &[0usize, 1, n / 2, n - 1] {
+            let want = logmap_scalar(x[i], 3.5, entry.iters());
+            let got = out[i];
+            assert!(
+                (got - want).abs() <= 1e-3 * want.abs().max(1e-3),
+                "i={i} got={got} want={want}"
+            );
+        }
+        // summary[3] = sum
+        let sum: f32 = out.iter().sum();
+        assert!((summary[3] - sum).abs() < 0.05 * sum.abs().max(1.0));
+    }
+
+    #[test]
+    fn stream_artifact_matches_closed_form() {
+        let Some(mut eng) = engine() else { return };
+        let name = eng
+            .manifest
+            .entries
+            .iter()
+            .find(|e| e.kind == "stream")
+            .unwrap()
+            .name
+            .clone();
+        let n = eng.manifest.get(&name).unwrap().n() as f64;
+        let (sums, wall) = eng.run_stream(&name, 0.1).unwrap();
+        assert!(wall.as_nanos() > 0);
+        // closed forms (see python model.stream_checksums_expected)
+        let scalar = 0.4f64;
+        let c1 = 0.1;
+        let b1 = scalar * c1;
+        let c2 = 0.1 + b1;
+        let a1 = b1 + scalar * c2;
+        let expect = [n * c1, n * b1, n * c2, n * a1, a1 * b1 * n];
+        for (i, (&got, want)) in sums.iter().zip(expect).enumerate() {
+            assert!(
+                ((got as f64) - want).abs() < 1e-3 * want.abs(),
+                "checksum {i}: got {got}, want {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn compile_cache_reused() {
+        let Some(mut eng) = engine() else { return };
+        let entry = eng.manifest.best_logmap(128, 16384).unwrap().clone();
+        let n = entry.n();
+        let x = vec![0.5f32; n];
+        let r = vec![3.2f32; n];
+        eng.run_logmap(&entry.name, &x, &r).unwrap();
+        eng.run_logmap(&entry.name, &x, &r).unwrap();
+        assert_eq!(eng.compilations, 1);
+        assert_eq!(eng.executions, 2);
+    }
+
+    #[test]
+    fn bad_inputs_rejected() {
+        let Some(mut eng) = engine() else { return };
+        let entry = eng.manifest.best_logmap(128, 16384).unwrap().clone();
+        assert!(eng.execute(&entry.name, &[&[0.0f32]]).is_err());
+        assert!(eng.execute("ghost", &[]).is_err());
+    }
+}

@@ -1,0 +1,216 @@
+//! AOT-artifact manifest (produced by `python/compile/aot.py`).
+//!
+//! `make artifacts` lowers the L2 JAX models (with embedded L1 Pallas
+//! kernels) to HLO text and writes `artifacts/manifest.json`, indexing
+//! each compiled variant with its shapes, FLOP count and HBM traffic.
+//! The Rust side reads only this manifest + the `.hlo.txt` files; Python
+//! is never invoked at runtime.
+
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone, PartialEq, thiserror::Error)]
+pub enum ManifestError {
+    #[error("artifacts not built: {0} (run `make artifacts`)")]
+    Missing(String),
+    #[error("manifest parse error: {0}")]
+    Parse(String),
+}
+
+/// One tensor description.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One AOT-compiled computation.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub file: String,
+    /// "logmap" | "stream"
+    pub kind: String,
+    pub params: Json,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    pub flops: u64,
+    pub bytes: u64,
+}
+
+impl ArtifactEntry {
+    pub fn n(&self) -> usize {
+        self.params.u64_of("n").unwrap_or(0) as usize
+    }
+
+    pub fn iters(&self) -> u64 {
+        self.params.u64_of("iters").unwrap_or(0)
+    }
+}
+
+/// The parsed manifest with its base directory.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub entries: Vec<ArtifactEntry>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest, ManifestError> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| ManifestError::Missing(format!("{}: {e}", path.display())))?;
+        Self::parse(dir, &text)
+    }
+
+    pub fn parse(dir: &Path, text: &str) -> Result<Manifest, ManifestError> {
+        let doc = Json::parse(text).map_err(|e| ManifestError::Parse(e.to_string()))?;
+        let mut entries = Vec::new();
+        for (i, e) in doc
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| ManifestError::Parse("missing 'artifacts'".into()))?
+            .iter()
+            .enumerate()
+        {
+            entries.push(parse_entry(e, i)?);
+        }
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            entries,
+        })
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ArtifactEntry> {
+        self.entries.iter().find(|e| e.name == name)
+    }
+
+    /// Pick the logmap variant closest to (iters, n).
+    pub fn best_logmap(&self, iters: u64, n: usize) -> Option<&ArtifactEntry> {
+        self.entries
+            .iter()
+            .filter(|e| e.kind == "logmap")
+            .min_by_key(|e| {
+                let di = (e.iters() as i64 - iters as i64).unsigned_abs();
+                let dn = (e.n() as i64 - n as i64).unsigned_abs();
+                // prioritise iteration match, then size
+                di * 1_000_000 + dn
+            })
+    }
+
+    pub fn hlo_path(&self, entry: &ArtifactEntry) -> PathBuf {
+        self.dir.join(&entry.file)
+    }
+}
+
+fn parse_entry(e: &Json, i: usize) -> Result<ArtifactEntry, ManifestError> {
+    let tensors = |key: &str| -> Result<Vec<TensorSpec>, ManifestError> {
+        let mut out = Vec::new();
+        for t in e.get(key).and_then(Json::as_arr).unwrap_or(&[]) {
+            out.push(TensorSpec {
+                name: t.str_of("name").unwrap_or("").to_string(),
+                shape: t
+                    .get("shape")
+                    .and_then(Json::as_arr)
+                    .unwrap_or(&[])
+                    .iter()
+                    .filter_map(|d| d.as_u64().map(|v| v as usize))
+                    .collect(),
+                dtype: t.str_of("dtype").unwrap_or("f32").to_string(),
+            });
+        }
+        Ok(out)
+    };
+    Ok(ArtifactEntry {
+        name: e
+            .str_of("name")
+            .ok_or_else(|| ManifestError::Parse(format!("artifacts[{i}]: missing name")))?
+            .to_string(),
+        file: e
+            .str_of("file")
+            .ok_or_else(|| ManifestError::Parse(format!("artifacts[{i}]: missing file")))?
+            .to_string(),
+        kind: e.str_of("kind").unwrap_or("unknown").to_string(),
+        params: e.get("params").cloned().unwrap_or_else(Json::obj),
+        inputs: tensors("inputs")?,
+        outputs: tensors("outputs")?,
+        flops: e.u64_of("flops").unwrap_or(0),
+        bytes: e.u64_of("bytes").unwrap_or(0),
+    })
+}
+
+/// Default artifacts directory: `$EXACB_ARTIFACTS` or `./artifacts`.
+pub fn default_dir() -> PathBuf {
+    std::env::var("EXACB_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1,
+      "artifacts": [
+        {"name": "logmap_i128_n16384", "file": "logmap_i128_n16384.hlo.txt",
+         "kind": "logmap", "params": {"n": 16384, "iters": 128, "block": 16384},
+         "inputs": [{"name": "x", "shape": [16384], "dtype": "f32"},
+                     {"name": "r", "shape": [16384], "dtype": "f32"}],
+         "outputs": [{"name": "out", "shape": [16384], "dtype": "f32"},
+                      {"name": "summary", "shape": [4], "dtype": "f32"}],
+         "flops": 6291456, "bytes": 196608},
+        {"name": "logmap_i2048_n65536", "file": "logmap_i2048_n65536.hlo.txt",
+         "kind": "logmap", "params": {"n": 65536, "iters": 2048, "block": 16384},
+         "inputs": [], "outputs": [], "flops": 402653184, "bytes": 786432}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(Path::new("/tmp"), SAMPLE).unwrap();
+        assert_eq!(m.entries.len(), 2);
+        let e = m.get("logmap_i128_n16384").unwrap();
+        assert_eq!(e.n(), 16384);
+        assert_eq!(e.iters(), 128);
+        assert_eq!(e.inputs[0].elements(), 16384);
+        assert_eq!(e.flops, 6291456);
+    }
+
+    #[test]
+    fn best_logmap_prefers_iteration_match() {
+        let m = Manifest::parse(Path::new("/tmp"), SAMPLE).unwrap();
+        assert_eq!(m.best_logmap(2048, 1000).unwrap().name, "logmap_i2048_n65536");
+        assert_eq!(m.best_logmap(100, 16384).unwrap().name, "logmap_i128_n16384");
+    }
+
+    #[test]
+    fn real_manifest_loads_if_built() {
+        // Soft check: only when `make artifacts` has run.
+        let dir = default_dir();
+        if dir.join("manifest.json").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert!(m.entries.iter().any(|e| e.kind == "logmap"));
+            assert!(m.entries.iter().any(|e| e.kind == "stream"));
+            for e in &m.entries {
+                assert!(m.hlo_path(e).exists(), "{}", e.file);
+            }
+        }
+    }
+
+    #[test]
+    fn missing_dir_is_error() {
+        assert!(matches!(
+            Manifest::load(Path::new("/nonexistent-dir-xyz")),
+            Err(ManifestError::Missing(_))
+        ));
+    }
+}

@@ -1,0 +1,12 @@
+//! PJRT runtime: loads the AOT-compiled HLO artifacts (L2 JAX models with
+//! embedded L1 Pallas kernels) and executes them natively via the XLA
+//! PJRT C API. Python only ever runs at `make artifacts` time.
+//!
+//! * [`manifest`] — the artifact index written by `python/compile/aot.py`.
+//! * [`engine`] — PJRT CPU client + compile cache + typed entry points.
+
+pub mod engine;
+pub mod manifest;
+
+pub use engine::{Engine, ExecOutput};
+pub use manifest::{ArtifactEntry, Manifest, ManifestError, TensorSpec};

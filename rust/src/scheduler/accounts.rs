@@ -1,0 +1,216 @@
+//! Compute accounts and core-hour budgets.
+//!
+//! The CI execution component validates that "the compute account ... is
+//! enabled so that subsequent jobs can access the relevant partition"
+//! (paper §II-C). Accounts map to projects; each draws core-hours from a
+//! named budget with a hard cap.
+
+use std::collections::HashMap;
+
+/// A compute project with partition access.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Account {
+    pub name: String,
+    pub budget: String,
+    pub enabled: bool,
+    /// Partitions this account may submit to (empty = all).
+    pub partitions: Vec<String>,
+}
+
+/// A core-hour budget shared by one or more accounts.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Budget {
+    pub name: String,
+    pub granted_core_hours: f64,
+    pub used_core_hours: f64,
+}
+
+impl Budget {
+    pub fn remaining(&self) -> f64 {
+        self.granted_core_hours - self.used_core_hours
+    }
+}
+
+#[derive(Debug, Clone, PartialEq, thiserror::Error)]
+pub enum AccountError {
+    #[error("unknown account '{0}'")]
+    UnknownAccount(String),
+    #[error("account '{0}' is disabled")]
+    Disabled(String),
+    #[error("account '{account}' has no access to partition '{partition}'")]
+    NoPartitionAccess { account: String, partition: String },
+    #[error("budget '{0}' exhausted")]
+    BudgetExhausted(String),
+    #[error("account '{account}' does not draw from budget '{budget}'")]
+    WrongBudget { account: String, budget: String },
+}
+
+/// Registry of accounts + budgets with usage accounting.
+#[derive(Debug, Clone, Default)]
+pub struct AccountManager {
+    accounts: HashMap<String, Account>,
+    budgets: HashMap<String, Budget>,
+}
+
+impl AccountManager {
+    pub fn new() -> AccountManager {
+        AccountManager::default()
+    }
+
+    /// A permissive manager with one open account (tests, quickstart).
+    pub fn open(account: &str, budget: &str, core_hours: f64) -> AccountManager {
+        let mut m = AccountManager::new();
+        m.add_budget(budget, core_hours);
+        m.add_account(Account {
+            name: account.into(),
+            budget: budget.into(),
+            enabled: true,
+            partitions: vec![],
+        });
+        m
+    }
+
+    pub fn add_account(&mut self, a: Account) {
+        self.accounts.insert(a.name.clone(), a);
+    }
+
+    pub fn add_budget(&mut self, name: &str, core_hours: f64) {
+        self.budgets.insert(
+            name.to_string(),
+            Budget {
+                name: name.to_string(),
+                granted_core_hours: core_hours,
+                used_core_hours: 0.0,
+            },
+        );
+    }
+
+    pub fn set_enabled(&mut self, account: &str, enabled: bool) {
+        if let Some(a) = self.accounts.get_mut(account) {
+            a.enabled = enabled;
+        }
+    }
+
+    pub fn account(&self, name: &str) -> Option<&Account> {
+        self.accounts.get(name)
+    }
+
+    pub fn budget(&self, name: &str) -> Option<&Budget> {
+        self.budgets.get(name)
+    }
+
+    /// Validate a submission (the Jacamar-runner account check).
+    pub fn authorize(
+        &self,
+        account: &str,
+        budget: &str,
+        partition: &str,
+    ) -> Result<(), AccountError> {
+        let a = self
+            .accounts
+            .get(account)
+            .ok_or_else(|| AccountError::UnknownAccount(account.to_string()))?;
+        if !a.enabled {
+            return Err(AccountError::Disabled(account.to_string()));
+        }
+        if a.budget != budget {
+            return Err(AccountError::WrongBudget {
+                account: account.to_string(),
+                budget: budget.to_string(),
+            });
+        }
+        if !a.partitions.is_empty() && !a.partitions.iter().any(|p| p == partition) {
+            return Err(AccountError::NoPartitionAccess {
+                account: account.to_string(),
+                partition: partition.to_string(),
+            });
+        }
+        let b = self
+            .budgets
+            .get(budget)
+            .ok_or_else(|| AccountError::BudgetExhausted(budget.to_string()))?;
+        if b.remaining() <= 0.0 {
+            return Err(AccountError::BudgetExhausted(budget.to_string()));
+        }
+        Ok(())
+    }
+
+    /// Charge consumed core-hours to the account's budget.
+    pub fn charge(&mut self, account: &str, core_hours: f64) {
+        if let Some(budget) = self
+            .accounts
+            .get(account)
+            .map(|a| a.budget.clone())
+        {
+            if let Some(b) = self.budgets.get_mut(&budget) {
+                b.used_core_hours += core_hours;
+            }
+        }
+    }
+
+    /// Total core-hours used across all budgets.
+    pub fn total_used(&self) -> f64 {
+        self.budgets.values().map(|b| b.used_core_hours).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mgr() -> AccountManager {
+        let mut m = AccountManager::new();
+        m.add_budget("exalab", 10_000.0);
+        m.add_account(Account {
+            name: "cexalab".into(),
+            budget: "exalab".into(),
+            enabled: true,
+            partitions: vec!["dc-gpu".into()],
+        });
+        m
+    }
+
+    #[test]
+    fn authorize_happy_path() {
+        assert!(mgr().authorize("cexalab", "exalab", "dc-gpu").is_ok());
+    }
+
+    #[test]
+    fn rejects_unknown_disabled_wrong() {
+        let mut m = mgr();
+        assert!(matches!(
+            m.authorize("nobody", "exalab", "dc-gpu"),
+            Err(AccountError::UnknownAccount(_))
+        ));
+        assert!(matches!(
+            m.authorize("cexalab", "other", "dc-gpu"),
+            Err(AccountError::WrongBudget { .. })
+        ));
+        assert!(matches!(
+            m.authorize("cexalab", "exalab", "booster"),
+            Err(AccountError::NoPartitionAccess { .. })
+        ));
+        m.set_enabled("cexalab", false);
+        assert!(matches!(
+            m.authorize("cexalab", "exalab", "dc-gpu"),
+            Err(AccountError::Disabled(_))
+        ));
+    }
+
+    #[test]
+    fn budget_exhaustion() {
+        let mut m = mgr();
+        m.charge("cexalab", 10_000.0);
+        assert!(matches!(
+            m.authorize("cexalab", "exalab", "dc-gpu"),
+            Err(AccountError::BudgetExhausted(_))
+        ));
+        assert_eq!(m.total_used(), 10_000.0);
+    }
+
+    #[test]
+    fn open_manager_allows_everything() {
+        let m = AccountManager::open("cjsc", "zam", 1e9);
+        assert!(m.authorize("cjsc", "zam", "any-partition").is_ok());
+    }
+}

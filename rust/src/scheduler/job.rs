@@ -1,0 +1,183 @@
+//! Batch-job model: specs, states, and accounting records.
+
+use crate::util::json::Json;
+use crate::util::timeutil::SimTime;
+
+/// What a job asks the batch system for (an `sbatch` header).
+#[derive(Debug, Clone, PartialEq)]
+pub struct JobSpec {
+    pub name: String,
+    /// Compute project / account (`project` input in the CI component).
+    pub account: String,
+    /// Budget the core-hours are drawn from (`budget` input).
+    pub budget: String,
+    pub partition: String,
+    pub nodes: u64,
+    pub tasks_per_node: u64,
+    pub threads_per_task: u64,
+    /// Wall-time limit [s]; the job is killed when it exceeds this.
+    pub walltime_limit_s: u64,
+}
+
+impl Default for JobSpec {
+    fn default() -> JobSpec {
+        JobSpec {
+            name: "job".into(),
+            account: "default".into(),
+            budget: "default".into(),
+            partition: "all".into(),
+            nodes: 1,
+            tasks_per_node: 1,
+            threads_per_task: 1,
+            walltime_limit_s: 3600,
+        }
+    }
+}
+
+/// Lifecycle states (Slurm-like subset).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobState {
+    Pending,
+    Running,
+    Completed,
+    Failed,
+    Timeout,
+    /// Rejected at submission (bad partition, disabled account, …).
+    Rejected,
+}
+
+impl JobState {
+    pub fn is_terminal(&self) -> bool {
+        !matches!(self, JobState::Pending | JobState::Running)
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            JobState::Pending => "PENDING",
+            JobState::Running => "RUNNING",
+            JobState::Completed => "COMPLETED",
+            JobState::Failed => "FAILED",
+            JobState::Timeout => "TIMEOUT",
+            JobState::Rejected => "REJECTED",
+        }
+    }
+}
+
+/// What a payload reports back when the job runs.
+#[derive(Debug, Clone)]
+pub struct JobResult {
+    /// Application wall-clock [s] (the Table-I `runtime`).
+    pub duration_s: f64,
+    pub success: bool,
+    /// Benchmark-specific metrics (protocol `metrics` object).
+    pub metrics: Json,
+    /// Named output files the harness may analyse (`logmap.out`, …).
+    pub files: Vec<(String, String)>,
+}
+
+impl JobResult {
+    pub fn failure(msg: &str) -> JobResult {
+        JobResult {
+            duration_s: 0.0,
+            success: false,
+            metrics: Json::obj().set("error", msg),
+            files: Vec::new(),
+        }
+    }
+}
+
+/// Context handed to the payload when the job starts.
+#[derive(Debug, Clone)]
+pub struct JobCtx {
+    pub jobid: u64,
+    pub start_time: SimTime,
+    pub nodes: u64,
+    pub tasks_per_node: u64,
+    pub threads_per_task: u64,
+    pub partition: String,
+}
+
+/// The payload executed when the job starts on the (simulated) nodes.
+pub type JobPayload = Box<dyn FnOnce(&JobCtx) -> JobResult>;
+
+/// Full accounting record of a job (the `sacct` view).
+#[derive(Debug, Clone)]
+pub struct JobRecord {
+    pub jobid: u64,
+    pub spec: JobSpec,
+    pub state: JobState,
+    pub submit_time: SimTime,
+    pub start_time: Option<SimTime>,
+    pub end_time: Option<SimTime>,
+    pub result: Option<JobResult>,
+}
+
+impl JobRecord {
+    /// Core-hours consumed (accounting basis).
+    pub fn core_hours(&self, cores_per_node: u64) -> f64 {
+        match (self.start_time, self.end_time) {
+            (Some(s), Some(e)) => {
+                let secs = (e.0 - s.0).max(0) as f64;
+                secs / 3600.0 * (self.spec.nodes * cores_per_node) as f64
+            }
+            _ => 0.0,
+        }
+    }
+
+    pub fn queue_wait_s(&self) -> Option<i64> {
+        self.start_time.map(|s| s.0 - self.submit_time.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn terminal_states() {
+        assert!(!JobState::Pending.is_terminal());
+        assert!(!JobState::Running.is_terminal());
+        for s in [
+            JobState::Completed,
+            JobState::Failed,
+            JobState::Timeout,
+            JobState::Rejected,
+        ] {
+            assert!(s.is_terminal());
+        }
+    }
+
+    #[test]
+    fn core_hours_accounting() {
+        let rec = JobRecord {
+            jobid: 1,
+            spec: JobSpec {
+                nodes: 4,
+                ..Default::default()
+            },
+            state: JobState::Completed,
+            submit_time: SimTime(0),
+            start_time: Some(SimTime(100)),
+            end_time: Some(SimTime(100 + 1800)),
+            result: None,
+        };
+        // 0.5 h on 4 nodes x 128 cores = 256 core-hours
+        assert!((rec.core_hours(128) - 256.0).abs() < 1e-9);
+        assert_eq!(rec.queue_wait_s(), Some(100));
+    }
+
+    #[test]
+    fn unstarted_job_costs_nothing() {
+        let rec = JobRecord {
+            jobid: 2,
+            spec: JobSpec::default(),
+            state: JobState::Rejected,
+            submit_time: SimTime(0),
+            start_time: None,
+            end_time: None,
+            result: None,
+        };
+        assert_eq!(rec.core_hours(128), 0.0);
+        assert_eq!(rec.queue_wait_s(), None);
+    }
+}

@@ -1,0 +1,14 @@
+//! Slurm-like batch scheduling substrate (paper §IV-D: "JUBE's Slurm
+//! integration"; DESIGN.md §2).
+//!
+//! * [`job`] — specs, states, payloads, accounting records.
+//! * [`accounts`] — compute projects and core-hour budgets.
+//! * [`slurm`] — the discrete-event FIFO+backfill scheduler.
+
+pub mod accounts;
+pub mod job;
+pub mod slurm;
+
+pub use accounts::{Account, AccountError, AccountManager, Budget};
+pub use job::{JobCtx, JobPayload, JobRecord, JobResult, JobSpec, JobState};
+pub use slurm::{for_machine, BatchSystem, SubmitError};

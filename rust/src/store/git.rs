@@ -1,0 +1,419 @@
+//! Content-addressed commit store: the `exacb.data` orphan branch.
+//!
+//! Model: blobs are content-addressed by hash; a commit records a
+//! **delta** (path -> blob id) on a branch, chaining to its parent; the
+//! full tree is materialized only at each branch head. Appending a
+//! report is therefore O(delta), not O(tree) — the property the daily
+//! campaign workload needs (EXPERIMENTS.md §Perf, store iterations).
+//! Historic trees are reconstructed on demand by replaying deltas from
+//! the orphan root (a-posteriori analyses are rare; appends are not).
+//!
+//! Retrieval is by branch + path prefix, which is exactly how the
+//! post-processing orchestrators pull "results from the exacb.data
+//! branch of the benchmark repositories" (paper §V-A.2).
+
+use std::collections::BTreeMap;
+
+use crate::util::short_hash;
+use crate::util::timeutil::SimTime;
+
+#[derive(Debug, Clone, PartialEq, thiserror::Error)]
+pub enum StoreError {
+    #[error("unknown branch '{0}'")]
+    UnknownBranch(String),
+    #[error("unknown object '{0}'")]
+    UnknownObject(String),
+    #[error("path '{0}' not found")]
+    PathNotFound(String),
+    #[error("io: {0}")]
+    Io(String),
+}
+
+/// One commit on a branch (delta-based).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Commit {
+    pub id: String,
+    pub parent: Option<String>,
+    pub branch: String,
+    pub message: String,
+    pub time: SimTime,
+    /// Paths written by this commit: path -> blob id.
+    pub delta: BTreeMap<String, String>,
+}
+
+/// The data store: blobs + branches of commit chains with materialized
+/// head trees.
+#[derive(Debug, Clone, Default)]
+pub struct DataStore {
+    blobs: BTreeMap<String, String>,
+    commits: BTreeMap<String, Commit>,
+    /// branch -> (head commit id, materialized tree path -> blob id)
+    heads: BTreeMap<String, (String, BTreeMap<String, String>)>,
+}
+
+impl DataStore {
+    pub fn new() -> DataStore {
+        DataStore::default()
+    }
+
+    fn put_blob(&mut self, content: &str) -> String {
+        let id = short_hash(content.as_bytes());
+        self.blobs
+            .entry(id.clone())
+            .or_insert_with(|| content.to_string());
+        id
+    }
+
+    /// Commit `files` onto `branch` (created on first commit,
+    /// orphan-style). Unchanged paths from the previous head remain
+    /// visible — the head tree is updated in place, O(delta).
+    pub fn commit(
+        &mut self,
+        branch: &str,
+        files: &[(String, String)],
+        message: &str,
+        time: SimTime,
+    ) -> String {
+        let parent = self.heads.get(branch).map(|(id, _)| id.clone());
+        let mut delta = BTreeMap::new();
+        // Commit id: hash of (branch, parent, message, time, delta).
+        // The parent id already summarizes the prior tree, so hashing
+        // only the delta keeps append O(delta).
+        let mut payload = format!("{branch}|{:?}|{message}|{}", parent, time.0);
+        for (path, content) in files {
+            let blob = self.put_blob(content);
+            payload.push('|');
+            payload.push_str(path);
+            payload.push(':');
+            payload.push_str(&blob);
+            delta.insert(path.clone(), blob);
+        }
+        let id = short_hash(payload.as_bytes());
+        let commit = Commit {
+            id: id.clone(),
+            parent,
+            branch: branch.to_string(),
+            message: message.to_string(),
+            time,
+            delta: delta.clone(),
+        };
+        self.commits.insert(id.clone(), commit);
+        let entry = self
+            .heads
+            .entry(branch.to_string())
+            .or_insert_with(|| (id.clone(), BTreeMap::new()));
+        entry.0 = id.clone();
+        for (p, b) in delta {
+            entry.1.insert(p, b);
+        }
+        id
+    }
+
+    pub fn head(&self, branch: &str) -> Option<&Commit> {
+        self.heads
+            .get(branch)
+            .and_then(|(id, _)| self.commits.get(id))
+    }
+
+    /// The materialized tree at the branch head.
+    pub fn head_tree(&self, branch: &str) -> Option<&BTreeMap<String, String>> {
+        self.heads.get(branch).map(|(_, t)| t)
+    }
+
+    /// Reconstruct the full tree at an arbitrary commit by replaying
+    /// deltas from the orphan root (O(history); for a-posteriori use).
+    pub fn tree_at(&self, commit_id: &str) -> Option<BTreeMap<String, String>> {
+        // collect the chain root..=commit
+        let mut chain = Vec::new();
+        let mut cur = Some(commit_id.to_string());
+        while let Some(id) = cur {
+            let c = self.commits.get(&id)?;
+            cur = c.parent.clone();
+            chain.push(c);
+        }
+        let mut tree = BTreeMap::new();
+        for c in chain.into_iter().rev() {
+            for (p, b) in &c.delta {
+                tree.insert(p.clone(), b.clone());
+            }
+        }
+        Some(tree)
+    }
+
+    pub fn branch_exists(&self, branch: &str) -> bool {
+        self.heads.contains_key(branch)
+    }
+
+    pub fn branches(&self) -> Vec<&str> {
+        self.heads.keys().map(String::as_str).collect()
+    }
+
+    /// Resolve a blob's content by id.
+    pub fn blob(&self, id: &str) -> Option<&str> {
+        self.blobs.get(id).map(String::as_str)
+    }
+
+    /// Read a file at the branch head.
+    pub fn read(&self, branch: &str, path: &str) -> Result<&str, StoreError> {
+        let tree = self
+            .head_tree(branch)
+            .ok_or_else(|| StoreError::UnknownBranch(branch.to_string()))?;
+        let blob = tree
+            .get(path)
+            .ok_or_else(|| StoreError::PathNotFound(path.to_string()))?;
+        self.blobs
+            .get(blob)
+            .map(String::as_str)
+            .ok_or_else(|| StoreError::UnknownObject(blob.clone()))
+    }
+
+    /// All paths at the head matching a prefix (the selector mechanism of
+    /// the post-processing orchestrators).
+    pub fn list(&self, branch: &str, prefix: &str) -> Vec<String> {
+        self.head_tree(branch)
+            .map(|t| {
+                t.keys()
+                    .filter(|p| p.starts_with(prefix))
+                    .cloned()
+                    .collect()
+            })
+            .unwrap_or_default()
+    }
+
+    /// Read every prefix-matching file at the head.
+    pub fn read_all(&self, branch: &str, prefix: &str) -> Vec<(String, String)> {
+        self.list(branch, prefix)
+            .into_iter()
+            .filter_map(|p| {
+                self.read(branch, &p)
+                    .ok()
+                    .map(|c| (p.clone(), c.to_string()))
+            })
+            .collect()
+    }
+
+    /// Commit history of a branch, newest first.
+    pub fn history(&self, branch: &str) -> Vec<&Commit> {
+        let mut out = Vec::new();
+        let mut cur = self.heads.get(branch).map(|(id, _)| id.clone());
+        while let Some(id) = cur {
+            if let Some(c) = self.commits.get(&id) {
+                cur = c.parent.clone();
+                out.push(c);
+            } else {
+                break;
+            }
+        }
+        out
+    }
+
+    pub fn commit_by_id(&self, id: &str) -> Option<&Commit> {
+        self.commits.get(id)
+    }
+
+    /// Persist to a directory (one file per blob + a JSON index).
+    pub fn persist(&self, dir: &std::path::Path) -> Result<(), StoreError> {
+        use crate::util::json::Json;
+        std::fs::create_dir_all(dir.join("blobs")).map_err(|e| StoreError::Io(e.to_string()))?;
+        for (id, content) in &self.blobs {
+            std::fs::write(dir.join("blobs").join(id), content)
+                .map_err(|e| StoreError::Io(e.to_string()))?;
+        }
+        let mut commits = Json::arr();
+        for c in self.commits.values() {
+            let mut delta = Json::obj();
+            for (p, b) in &c.delta {
+                delta.insert(p, b.as_str());
+            }
+            commits.push(
+                Json::obj()
+                    .set("id", c.id.as_str())
+                    .set(
+                        "parent",
+                        c.parent
+                            .as_ref()
+                            .map(|p| Json::Str(p.clone()))
+                            .unwrap_or(Json::Null),
+                    )
+                    .set("branch", c.branch.as_str())
+                    .set("message", c.message.as_str())
+                    .set("time", c.time.0)
+                    .set("delta", delta),
+            );
+        }
+        let mut heads = Json::obj();
+        for (b, (id, _)) in &self.heads {
+            heads.insert(b, id.as_str());
+        }
+        let index = Json::obj().set("commits", commits).set("heads", heads);
+        std::fs::write(dir.join("index.json"), index.pretty())
+            .map_err(|e| StoreError::Io(e.to_string()))
+    }
+
+    /// Load a persisted store (head trees rebuilt by delta replay).
+    pub fn load(dir: &std::path::Path) -> Result<DataStore, StoreError> {
+        use crate::util::json::Json;
+        let text = std::fs::read_to_string(dir.join("index.json"))
+            .map_err(|e| StoreError::Io(e.to_string()))?;
+        let index = Json::parse(&text).map_err(|e| StoreError::Io(e.to_string()))?;
+        let mut store = DataStore::new();
+        for c in index.get("commits").and_then(Json::as_arr).unwrap_or(&[]) {
+            let mut delta = BTreeMap::new();
+            for (p, b) in c.get("delta").and_then(Json::as_obj).unwrap_or(&[]) {
+                delta.insert(p.clone(), b.as_str().unwrap_or("").to_string());
+            }
+            let commit = Commit {
+                id: c.str_of("id").unwrap_or("").to_string(),
+                parent: c.str_of("parent").map(str::to_string),
+                branch: c.str_of("branch").unwrap_or("").to_string(),
+                message: c.str_of("message").unwrap_or("").to_string(),
+                time: SimTime(c.get("time").and_then(Json::as_i64).unwrap_or(0)),
+                delta,
+            };
+            store.commits.insert(commit.id.clone(), commit);
+        }
+        for (b, id) in index.get("heads").and_then(Json::as_obj).unwrap_or(&[]) {
+            let id = id.as_str().unwrap_or("").to_string();
+            let tree = store.tree_at(&id).unwrap_or_default();
+            store.heads.insert(b.clone(), (id, tree));
+        }
+        if let Ok(entries) = std::fs::read_dir(dir.join("blobs")) {
+            for e in entries.flatten() {
+                if let (Some(name), Ok(content)) = (
+                    e.file_name().to_str().map(str::to_string),
+                    std::fs::read_to_string(e.path()),
+                ) {
+                    store.blobs.insert(name, content);
+                }
+            }
+        }
+        Ok(store)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn commit_read_roundtrip() {
+        let mut s = DataStore::new();
+        s.commit(
+            "exacb.data",
+            &[("a/report.json".into(), "{\"x\":1}".into())],
+            "first",
+            SimTime(0),
+        );
+        assert_eq!(s.read("exacb.data", "a/report.json").unwrap(), "{\"x\":1}");
+        assert!(matches!(
+            s.read("exacb.data", "missing"),
+            Err(StoreError::PathNotFound(_))
+        ));
+        assert!(matches!(
+            s.read("other", "a"),
+            Err(StoreError::UnknownBranch(_))
+        ));
+    }
+
+    #[test]
+    fn history_is_immutable_chain() {
+        let mut s = DataStore::new();
+        let c1 = s.commit("b", &[("f".into(), "v1".into())], "one", SimTime(1));
+        let c2 = s.commit("b", &[("f".into(), "v2".into())], "two", SimTime(2));
+        assert_ne!(c1, c2);
+        // head sees v2, but the old commit's tree still resolves v1
+        assert_eq!(s.read("b", "f").unwrap(), "v2");
+        let old_tree = s.tree_at(&c1).unwrap();
+        assert_eq!(s.blob(&old_tree["f"]).unwrap(), "v1");
+        let hist = s.history("b");
+        assert_eq!(hist.len(), 2);
+        assert_eq!(hist[0].id, c2);
+        assert_eq!(hist[1].id, c1);
+        assert_eq!(hist[0].parent.as_deref(), Some(c1.as_str()));
+    }
+
+    #[test]
+    fn unchanged_paths_carry_forward() {
+        let mut s = DataStore::new();
+        s.commit("b", &[("keep".into(), "k".into())], "one", SimTime(1));
+        s.commit("b", &[("new".into(), "n".into())], "two", SimTime(2));
+        assert_eq!(s.read("b", "keep").unwrap(), "k");
+        assert_eq!(s.read("b", "new").unwrap(), "n");
+        // historic tree at head matches materialized head tree
+        let head_id = s.head("b").unwrap().id.clone();
+        assert_eq!(&s.tree_at(&head_id).unwrap(), s.head_tree("b").unwrap());
+    }
+
+    #[test]
+    fn prefix_listing() {
+        let mut s = DataStore::new();
+        s.commit(
+            "b",
+            &[
+                ("jedi.strong/1.json".into(), "{}".into()),
+                ("jedi.strong/2.json".into(), "{}".into()),
+                ("jureca.single/1.json".into(), "{}".into()),
+            ],
+            "m",
+            SimTime(0),
+        );
+        assert_eq!(s.list("b", "jedi.strong/").len(), 2);
+        assert_eq!(s.read_all("b", "jureca").len(), 1);
+        assert!(s.list("b", "zzz").is_empty());
+        assert!(s.list("nobranch", "").is_empty());
+    }
+
+    #[test]
+    fn identical_content_dedupes() {
+        let mut s = DataStore::new();
+        s.commit(
+            "b",
+            &[("a".into(), "same".into()), ("b".into(), "same".into())],
+            "m",
+            SimTime(0),
+        );
+        assert_eq!(s.blobs.len(), 1);
+    }
+
+    #[test]
+    fn persist_load_roundtrip() {
+        let mut s = DataStore::new();
+        s.commit("exacb.data", &[("p/r.json".into(), "content".into())], "m", SimTime(5));
+        s.commit("exacb.data", &[("p/s.json".into(), "more".into())], "n", SimTime(6));
+        let dir = std::env::temp_dir().join(format!("exacb-store-{}", std::process::id()));
+        s.persist(&dir).unwrap();
+        let loaded = DataStore::load(&dir).unwrap();
+        assert_eq!(loaded.read("exacb.data", "p/r.json").unwrap(), "content");
+        assert_eq!(loaded.read("exacb.data", "p/s.json").unwrap(), "more");
+        assert_eq!(loaded.history("exacb.data").len(), 2);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn commit_immutability_property() {
+        use crate::prop_assert;
+        use crate::util::prop::check;
+        check("store commits are immutable", 30, |g| {
+            let mut s = DataStore::new();
+            let n = g.usize(1, 8);
+            let mut snapshots = Vec::new();
+            for i in 0..n {
+                let content = format!("v{}", g.u64(0, 1000));
+                let id = s.commit(
+                    "b",
+                    &[(format!("f{}", g.usize(0, 3)), content)],
+                    &format!("c{i}"),
+                    SimTime(i as i64),
+                );
+                snapshots.push((id, s.head_tree("b").unwrap().clone()));
+            }
+            // every recorded snapshot is still reconstructible
+            for (id, tree) in &snapshots {
+                let got = s.tree_at(id);
+                prop_assert!(got.is_some(), "commit {id} vanished");
+                prop_assert!(&got.unwrap() == tree, "tree for {id} changed");
+            }
+            Ok(())
+        });
+    }
+}

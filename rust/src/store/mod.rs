@@ -1,0 +1,18 @@
+//! Result storage (paper §IV-E): "collected data are associated with the
+//! corresponding CI jobs as artifacts and may additionally be stored in
+//! persistent locations, such as orphaned Git branches or dedicated
+//! object storage (e.g., S3-based back ends)".
+//!
+//! * [`git`] — a content-addressed commit store with branch semantics:
+//!   the `exacb.data` orphan branch each benchmark repository carries.
+//! * [`object`] — a flat S3-like bucket/key blob store.
+//!
+//! Both are deterministic and in-memory with optional directory
+//! persistence; immutability of committed history is a tested invariant
+//! (a-posteriori time-series analyses depend on it, §IV-F).
+
+pub mod git;
+pub mod object;
+
+pub use git::{Commit, DataStore, StoreError};
+pub use object::ObjectStore;

@@ -1,0 +1,121 @@
+//! S3-like object store: buckets of key -> blob, with prefix listing.
+//!
+//! The alternative persistent back end the paper mentions for recorded
+//! results (§IV-E). Unlike [`super::git::DataStore`], objects are mutable
+//! (a PUT overwrites), which is why the chain of trust for externally
+//! injected data "is not guaranteed" — reflected in the `injected` flag.
+
+use std::collections::BTreeMap;
+
+/// A stored object with minimal metadata.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StoredObject {
+    pub content: String,
+    /// True when placed via the external-injection hook rather than by an
+    /// exaCB orchestrator (§IV-E: trust is not guaranteed for these).
+    pub injected: bool,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct ObjectStore {
+    buckets: BTreeMap<String, BTreeMap<String, StoredObject>>,
+}
+
+impl ObjectStore {
+    pub fn new() -> ObjectStore {
+        ObjectStore::default()
+    }
+
+    pub fn put(&mut self, bucket: &str, key: &str, content: &str) {
+        self.buckets
+            .entry(bucket.to_string())
+            .or_default()
+            .insert(
+                key.to_string(),
+                StoredObject {
+                    content: content.to_string(),
+                    injected: false,
+                },
+            );
+    }
+
+    /// The external-data injection hook (§IV-E).
+    pub fn inject(&mut self, bucket: &str, key: &str, content: &str) {
+        self.buckets
+            .entry(bucket.to_string())
+            .or_default()
+            .insert(
+                key.to_string(),
+                StoredObject {
+                    content: content.to_string(),
+                    injected: true,
+                },
+            );
+    }
+
+    pub fn get(&self, bucket: &str, key: &str) -> Option<&StoredObject> {
+        self.buckets.get(bucket)?.get(key)
+    }
+
+    pub fn list(&self, bucket: &str, prefix: &str) -> Vec<String> {
+        self.buckets
+            .get(bucket)
+            .map(|b| {
+                b.keys()
+                    .filter(|k| k.starts_with(prefix))
+                    .cloned()
+                    .collect()
+            })
+            .unwrap_or_default()
+    }
+
+    pub fn delete(&mut self, bucket: &str, key: &str) -> bool {
+        self.buckets
+            .get_mut(bucket)
+            .map(|b| b.remove(key).is_some())
+            .unwrap_or(false)
+    }
+
+    pub fn len(&self, bucket: &str) -> usize {
+        self.buckets.get(bucket).map(BTreeMap::len).unwrap_or(0)
+    }
+
+    pub fn is_empty(&self, bucket: &str) -> bool {
+        self.len(bucket) == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn put_get_overwrite() {
+        let mut s = ObjectStore::new();
+        s.put("results", "a/1", "v1");
+        s.put("results", "a/1", "v2");
+        assert_eq!(s.get("results", "a/1").unwrap().content, "v2");
+        assert!(!s.get("results", "a/1").unwrap().injected);
+        assert!(s.get("results", "nope").is_none());
+        assert!(s.get("nobucket", "a/1").is_none());
+    }
+
+    #[test]
+    fn injected_flag_tracks_provenance() {
+        let mut s = ObjectStore::new();
+        s.inject("results", "ext/x", "third-party");
+        assert!(s.get("results", "ext/x").unwrap().injected);
+    }
+
+    #[test]
+    fn prefix_list_and_delete() {
+        let mut s = ObjectStore::new();
+        s.put("b", "p/1", "x");
+        s.put("b", "p/2", "y");
+        s.put("b", "q/1", "z");
+        assert_eq!(s.list("b", "p/"), vec!["p/1", "p/2"]);
+        assert!(s.delete("b", "p/1"));
+        assert!(!s.delete("b", "p/1"));
+        assert_eq!(s.len("b"), 2);
+    }
+}

@@ -1,0 +1,44 @@
+//! Shared substrates: JSON, YAML-subset, PRNG, property testing, tables,
+//! plots, simulated time, statistics. See DESIGN.md §2 for why these are
+//! in-repo rather than external crates (offline vendored build).
+
+pub mod json;
+pub mod plot;
+pub mod prng;
+pub mod prop;
+pub mod stats;
+pub mod table;
+pub mod timeutil;
+pub mod yamlite;
+
+/// fnv1a-64 content hash — stable IDs for store objects and job names.
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+/// Short hex digest (12 chars) of arbitrary content.
+pub fn short_hash(bytes: &[u8]) -> String {
+    // Two passes with different salts to widen to 96 bits.
+    let a = fnv1a(bytes);
+    let mut salted = bytes.to_vec();
+    salted.push(0x5a);
+    let b = fnv1a(&salted);
+    format!("{:016x}{:08x}", a, (b & 0xffff_ffff) as u32)[..12].to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hash_is_stable_and_distinct() {
+        assert_eq!(short_hash(b"abc"), short_hash(b"abc"));
+        assert_ne!(short_hash(b"abc"), short_hash(b"abd"));
+        assert_eq!(short_hash(b"abc").len(), 12);
+    }
+}

@@ -1,0 +1,441 @@
+//! Plot rendering: ASCII (terminal) and SVG (files) line/scatter charts.
+//!
+//! The post-processing orchestrators (paper §V-A.2) emit comparison,
+//! scalability, time-series and energy plots; this module is their
+//! rendering back end. Supports multiple named series, log axes (Fig. 6
+//! uses log-x message sizes, Fig. 5 log-log scaling), shaded guide bands
+//! (the "80% scaling regime" bands in Fig. 5), and vertical markers (the
+//! measurement-scope bars in Fig. 8).
+
+/// One named data series.
+#[derive(Debug, Clone)]
+pub struct Series {
+    pub name: String,
+    pub points: Vec<(f64, f64)>,
+}
+
+impl Series {
+    pub fn new(name: &str, points: Vec<(f64, f64)>) -> Series {
+        Series {
+            name: name.to_string(),
+            points,
+        }
+    }
+}
+
+/// A shaded y-band between two reference curves (e.g. ideal scaling and
+/// 80%-of-ideal), given as point lists sharing the x grid.
+#[derive(Debug, Clone)]
+pub struct Band {
+    pub name: String,
+    pub upper: Vec<(f64, f64)>,
+    pub lower: Vec<(f64, f64)>,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scale {
+    Linear,
+    Log,
+}
+
+#[derive(Debug, Clone)]
+pub struct Plot {
+    pub title: String,
+    pub xlabel: String,
+    pub ylabel: String,
+    pub xscale: Scale,
+    pub yscale: Scale,
+    pub series: Vec<Series>,
+    pub bands: Vec<Band>,
+    /// Vertical markers (x positions), e.g. measurement-scope bars.
+    pub vmarks: Vec<(f64, String)>,
+}
+
+impl Plot {
+    pub fn new(title: &str, xlabel: &str, ylabel: &str) -> Plot {
+        Plot {
+            title: title.to_string(),
+            xlabel: xlabel.to_string(),
+            ylabel: ylabel.to_string(),
+            xscale: Scale::Linear,
+            yscale: Scale::Linear,
+            series: Vec::new(),
+            bands: Vec::new(),
+            vmarks: Vec::new(),
+        }
+    }
+
+    pub fn logx(mut self) -> Plot {
+        self.xscale = Scale::Log;
+        self
+    }
+
+    pub fn logy(mut self) -> Plot {
+        self.yscale = Scale::Log;
+        self
+    }
+
+    pub fn add(&mut self, s: Series) {
+        self.series.push(s);
+    }
+
+    pub fn add_band(&mut self, b: Band) {
+        self.bands.push(b);
+    }
+
+    pub fn add_vmark(&mut self, x: f64, label: &str) {
+        self.vmarks.push((x, label.to_string()));
+    }
+
+    fn tx(&self, x: f64) -> f64 {
+        match self.xscale {
+            Scale::Linear => x,
+            Scale::Log => x.max(1e-300).log10(),
+        }
+    }
+
+    fn ty(&self, y: f64) -> f64 {
+        match self.yscale {
+            Scale::Linear => y,
+            Scale::Log => y.max(1e-300).log10(),
+        }
+    }
+
+    fn extent(&self) -> Option<(f64, f64, f64, f64)> {
+        let mut pts: Vec<(f64, f64)> = Vec::new();
+        for s in &self.series {
+            pts.extend(s.points.iter().map(|&(x, y)| (self.tx(x), self.ty(y))));
+        }
+        for b in &self.bands {
+            pts.extend(b.upper.iter().map(|&(x, y)| (self.tx(x), self.ty(y))));
+            pts.extend(b.lower.iter().map(|&(x, y)| (self.tx(x), self.ty(y))));
+        }
+        if pts.is_empty() {
+            return None;
+        }
+        let (mut x0, mut x1, mut y0, mut y1) = (f64::MAX, f64::MIN, f64::MAX, f64::MIN);
+        for (x, y) in pts {
+            if x.is_finite() && y.is_finite() {
+                x0 = x0.min(x);
+                x1 = x1.max(x);
+                y0 = y0.min(y);
+                y1 = y1.max(y);
+            }
+        }
+        if x1 <= x0 {
+            x1 = x0 + 1.0;
+        }
+        if y1 <= y0 {
+            y1 = y0 + 1.0;
+        }
+        // 5% y headroom so curves don't hug the frame
+        let pad = (y1 - y0) * 0.05;
+        Some((x0, x1, y0 - pad, y1 + pad))
+    }
+
+    /// Render an ASCII chart of the given size (interior plotting area).
+    pub fn render_ascii(&self, width: usize, height: usize) -> String {
+        const MARKS: &[char] = &['*', 'o', '+', 'x', '#', '@', '%', '&', '$', '~'];
+        let (x0, x1, y0, y1) = match self.extent() {
+            Some(e) => e,
+            None => return format!("{} (no data)\n", self.title),
+        };
+        let mut grid = vec![vec![' '; width]; height];
+        // bands first (shaded with '.')
+        for b in &self.bands {
+            for (&(ux, uy), &(_, ly)) in b.upper.iter().zip(&b.lower) {
+                let cx = ((self.tx(ux) - x0) / (x1 - x0) * (width - 1) as f64).round();
+                if !(0.0..width as f64).contains(&cx) {
+                    continue;
+                }
+                let cy_hi = ((self.ty(uy) - y0) / (y1 - y0) * (height - 1) as f64).round();
+                let cy_lo = ((self.ty(ly) - y0) / (y1 - y0) * (height - 1) as f64).round();
+                let (a, bnd) = (cy_lo.min(cy_hi) as usize, cy_lo.max(cy_hi) as usize);
+                for cy in a..=bnd.min(height - 1) {
+                    let r = height - 1 - cy;
+                    if grid[r][cx as usize] == ' ' {
+                        grid[r][cx as usize] = '.';
+                    }
+                }
+            }
+        }
+        // vertical markers
+        for (x, _) in &self.vmarks {
+            let cx = ((self.tx(*x) - x0) / (x1 - x0) * (width - 1) as f64).round();
+            if (0.0..width as f64).contains(&cx) {
+                for row in grid.iter_mut() {
+                    if row[cx as usize] == ' ' {
+                        row[cx as usize] = '|';
+                    }
+                }
+            }
+        }
+        // series
+        for (si, s) in self.series.iter().enumerate() {
+            let mark = MARKS[si % MARKS.len()];
+            for &(x, y) in &s.points {
+                let (px, py) = (self.tx(x), self.ty(y));
+                if !px.is_finite() || !py.is_finite() {
+                    continue;
+                }
+                let cx = ((px - x0) / (x1 - x0) * (width - 1) as f64).round() as i64;
+                let cy = ((py - y0) / (y1 - y0) * (height - 1) as f64).round() as i64;
+                if (0..width as i64).contains(&cx) && (0..height as i64).contains(&cy) {
+                    grid[height - 1 - cy as usize][cx as usize] = mark;
+                }
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("{}\n", self.title));
+        let ylab = |v: f64| -> f64 {
+            match self.yscale {
+                Scale::Linear => v,
+                Scale::Log => 10f64.powf(v),
+            }
+        };
+        for (i, row) in grid.iter().enumerate() {
+            let yv = y1 - (y1 - y0) * i as f64 / (height - 1) as f64;
+            let label = if i == 0 || i == height - 1 || i == height / 2 {
+                format!("{:>10.3} |", ylab(yv))
+            } else {
+                format!("{:>10} |", "")
+            };
+            out.push_str(&label);
+            out.push_str(&row.iter().collect::<String>());
+            out.push('\n');
+        }
+        out.push_str(&format!("{:>10} +{}\n", "", "-".repeat(width)));
+        let xl = match self.xscale {
+            Scale::Linear => (x0, x1),
+            Scale::Log => (10f64.powf(x0), 10f64.powf(x1)),
+        };
+        out.push_str(&format!(
+            "{:>10}  {:<.3}{:>pad$.3}   ({})\n",
+            "",
+            xl.0,
+            xl.1,
+            self.xlabel,
+            pad = width.saturating_sub(8)
+        ));
+        for (si, s) in self.series.iter().enumerate() {
+            out.push_str(&format!("  {} {}\n", MARKS[si % MARKS.len()], s.name));
+        }
+        out
+    }
+
+    /// Render an SVG chart (800x500).
+    pub fn render_svg(&self) -> String {
+        const COLORS: &[&str] = &[
+            "#1f77b4", "#ff7f0e", "#2ca02c", "#d62728", "#9467bd", "#8c564b",
+            "#e377c2", "#7f7f7f", "#bcbd22", "#17becf",
+        ];
+        let (w, h) = (800.0, 500.0);
+        let (ml, mr, mt, mb) = (70.0, 20.0, 40.0, 60.0);
+        let (pw, ph) = (w - ml - mr, h - mt - mb);
+        let (x0, x1, y0, y1) = match self.extent() {
+            Some(e) => e,
+            None => (0.0, 1.0, 0.0, 1.0),
+        };
+        let px = |x: f64| ml + (self.tx(x) - x0) / (x1 - x0) * pw;
+        let py = |y: f64| mt + ph - (self.ty(y) - y0) / (y1 - y0) * ph;
+        let mut svg = String::new();
+        svg.push_str(&format!(
+            r#"<svg xmlns="http://www.w3.org/2000/svg" width="{w}" height="{h}" viewBox="0 0 {w} {h}">"#
+        ));
+        svg.push_str(r#"<rect width="100%" height="100%" fill="white"/>"#);
+        svg.push_str(&format!(
+            r#"<text x="{}" y="24" font-size="16" text-anchor="middle" font-family="sans-serif">{}</text>"#,
+            w / 2.0,
+            xml_escape(&self.title)
+        ));
+        // frame
+        svg.push_str(&format!(
+            r##"<rect x="{ml}" y="{mt}" width="{pw}" height="{ph}" fill="none" stroke="#333"/>"##
+        ));
+        // bands
+        for b in &self.bands {
+            if b.upper.is_empty() {
+                continue;
+            }
+            let mut d = String::from("M");
+            for &(x, y) in &b.upper {
+                d.push_str(&format!("{:.1},{:.1} L", px(x), py(y)));
+            }
+            for &(x, y) in b.lower.iter().rev() {
+                d.push_str(&format!("{:.1},{:.1} L", px(x), py(y)));
+            }
+            d.pop();
+            d.push('Z');
+            svg.push_str(&format!(
+                r##"<path d="{d}" fill="#88aadd" opacity="0.25" stroke="none"/>"##
+            ));
+        }
+        // vmarks
+        for (x, label) in &self.vmarks {
+            let cx = px(*x);
+            svg.push_str(&format!(
+                r#"<line x1="{cx:.1}" y1="{mt}" x2="{cx:.1}" y2="{:.1}" stroke="black" stroke-width="2"/>"#,
+                mt + ph
+            ));
+            svg.push_str(&format!(
+                r#"<text x="{:.1}" y="{:.1}" font-size="11" font-family="sans-serif">{}</text>"#,
+                cx + 4.0,
+                mt + 14.0,
+                xml_escape(label)
+            ));
+        }
+        // axis ticks (5 each)
+        for i in 0..=4 {
+            let fx = x0 + (x1 - x0) * i as f64 / 4.0;
+            let vx = match self.xscale {
+                Scale::Linear => fx,
+                Scale::Log => 10f64.powf(fx),
+            };
+            let cx = ml + pw * i as f64 / 4.0;
+            svg.push_str(&format!(
+                r#"<text x="{cx:.1}" y="{:.1}" font-size="11" text-anchor="middle" font-family="sans-serif">{}</text>"#,
+                mt + ph + 18.0,
+                fmt_tick(vx)
+            ));
+            let fy = y0 + (y1 - y0) * i as f64 / 4.0;
+            let vy = match self.yscale {
+                Scale::Linear => fy,
+                Scale::Log => 10f64.powf(fy),
+            };
+            let cy = mt + ph - ph * i as f64 / 4.0;
+            svg.push_str(&format!(
+                r#"<text x="{:.1}" y="{cy:.1}" font-size="11" text-anchor="end" font-family="sans-serif">{}</text>"#,
+                ml - 6.0,
+                fmt_tick(vy)
+            ));
+        }
+        svg.push_str(&format!(
+            r#"<text x="{:.1}" y="{:.1}" font-size="13" text-anchor="middle" font-family="sans-serif">{}</text>"#,
+            ml + pw / 2.0,
+            h - 16.0,
+            xml_escape(&self.xlabel)
+        ));
+        svg.push_str(&format!(
+            r#"<text x="16" y="{:.1}" font-size="13" text-anchor="middle" font-family="sans-serif" transform="rotate(-90 16 {:.1})">{}</text>"#,
+            mt + ph / 2.0,
+            mt + ph / 2.0,
+            xml_escape(&self.ylabel)
+        ));
+        // series
+        for (si, s) in self.series.iter().enumerate() {
+            let color = COLORS[si % COLORS.len()];
+            if s.points.len() > 1 {
+                let mut d = String::from("M");
+                for &(x, y) in &s.points {
+                    d.push_str(&format!("{:.1},{:.1} L", px(x), py(y)));
+                }
+                d.pop();
+                svg.push_str(&format!(
+                    r#"<path d="{d}" fill="none" stroke="{color}" stroke-width="1.8"/>"#
+                ));
+            }
+            for &(x, y) in &s.points {
+                svg.push_str(&format!(
+                    r#"<circle cx="{:.1}" cy="{:.1}" r="3" fill="{color}"/>"#,
+                    px(x),
+                    py(y)
+                ));
+            }
+            // legend
+            let ly = mt + 16.0 + 16.0 * si as f64;
+            svg.push_str(&format!(
+                r#"<rect x="{:.1}" y="{:.1}" width="10" height="10" fill="{color}"/>"#,
+                ml + 8.0,
+                ly - 9.0
+            ));
+            svg.push_str(&format!(
+                r#"<text x="{:.1}" y="{ly:.1}" font-size="12" font-family="sans-serif">{}</text>"#,
+                ml + 22.0,
+                xml_escape(&s.name)
+            ));
+        }
+        svg.push_str("</svg>");
+        svg
+    }
+}
+
+fn fmt_tick(v: f64) -> String {
+    let a = v.abs();
+    if a >= 1e6 || (a > 0.0 && a < 1e-3) {
+        format!("{v:.1e}")
+    } else if a >= 100.0 {
+        format!("{v:.0}")
+    } else {
+        format!("{v:.2}")
+    }
+}
+
+fn xml_escape(s: &str) -> String {
+    s.replace('&', "&amp;")
+        .replace('<', "&lt;")
+        .replace('>', "&gt;")
+        .replace('"', "&quot;")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn plot_with_data() -> Plot {
+        let mut p = Plot::new("t", "x", "y");
+        p.add(Series::new(
+            "a",
+            vec![(1.0, 1.0), (2.0, 4.0), (3.0, 9.0)],
+        ));
+        p
+    }
+
+    #[test]
+    fn ascii_contains_marks_and_legend() {
+        let r = plot_with_data().render_ascii(40, 10);
+        assert!(r.contains('*'));
+        assert!(r.contains("a"));
+        assert!(r.lines().count() > 10);
+    }
+
+    #[test]
+    fn svg_is_wellformed_enough() {
+        let svg = plot_with_data().render_svg();
+        assert!(svg.starts_with("<svg"));
+        assert!(svg.ends_with("</svg>"));
+        assert_eq!(svg.matches("<circle").count(), 3);
+        assert!(svg.contains("path"));
+    }
+
+    #[test]
+    fn log_axes_transform() {
+        let mut p = Plot::new("t", "x", "y").logx().logy();
+        p.add(Series::new("s", vec![(1.0, 10.0), (100.0, 1000.0)]));
+        let (x0, x1, _, _) = p.extent().unwrap();
+        assert!((x0 - 0.0).abs() < 1e-9);
+        assert!((x1 - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_plot_renders() {
+        let p = Plot::new("nothing", "x", "y");
+        assert!(p.render_ascii(20, 5).contains("no data"));
+        assert!(p.render_svg().contains("</svg>"));
+    }
+
+    #[test]
+    fn bands_and_vmarks_render() {
+        let mut p = plot_with_data();
+        p.add_band(Band {
+            name: "80%".into(),
+            upper: vec![(1.0, 2.0), (3.0, 10.0)],
+            lower: vec![(1.0, 1.0), (3.0, 8.0)],
+        });
+        p.add_vmark(2.0, "scope");
+        let ascii = p.render_ascii(40, 10);
+        assert!(ascii.contains('|'));
+        let svg = p.render_svg();
+        assert!(svg.contains("opacity=\"0.25\""));
+        assert!(svg.contains("scope"));
+    }
+}

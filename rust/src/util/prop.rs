@@ -1,0 +1,247 @@
+//! Tiny property-testing harness (substrate; DESIGN.md §2 — no `proptest`
+//! vendored offline).
+//!
+//! Provides seeded random-input property checks with greedy shrinking for
+//! the coordinator invariants called out in DESIGN.md §7. Usage:
+//!
+//! ```no_run
+//! use exacb::prop_assert;
+//! use exacb::util::prop::{check, Gen};
+//! check("sum is commutative", 200, |g: &mut Gen| {
+//!     let a = g.u64(0, 1000);
+//!     let b = g.u64(0, 1000);
+//!     prop_assert!(a + b == b + a, "a={a} b={b}");
+//!     Ok(())
+//! });
+//! ```
+
+use super::prng::Prng;
+
+/// Property failure: message plus the inputs drawn so far (for replay).
+#[derive(Debug, Clone)]
+pub struct PropFail {
+    pub msg: String,
+}
+
+pub type PropResult = Result<(), PropFail>;
+
+/// Input generator handed to each property execution. Records every draw
+/// so failures can be replayed and shrunk by seed.
+pub struct Gen {
+    rng: Prng,
+    pub draws: Vec<i128>,
+    /// When replaying a shrunk case, draws come from here instead.
+    replay: Option<Vec<i128>>,
+    replay_at: usize,
+}
+
+impl Gen {
+    fn new(seed: u64) -> Gen {
+        Gen {
+            rng: Prng::new(seed),
+            draws: Vec::new(),
+            replay: None,
+            replay_at: 0,
+        }
+    }
+
+    fn draw(&mut self, fresh: impl FnOnce(&mut Prng) -> i128) -> i128 {
+        if let Some(replay) = &self.replay {
+            if self.replay_at < replay.len() {
+                let v = replay[self.replay_at];
+                self.replay_at += 1;
+                self.draws.push(v);
+                return v;
+            }
+        }
+        let v = fresh(&mut self.rng);
+        self.draws.push(v);
+        v
+    }
+
+    pub fn u64(&mut self, lo: u64, hi: u64) -> u64 {
+        let v = self.draw(|r| r.range_u64(lo, hi) as i128);
+        (v.clamp(lo as i128, hi as i128)) as u64
+    }
+
+    pub fn usize(&mut self, lo: usize, hi: usize) -> usize {
+        self.u64(lo as u64, hi as u64) as usize
+    }
+
+    pub fn i64(&mut self, lo: i64, hi: i64) -> i64 {
+        let v = self.draw(|r| (lo + r.below((hi - lo + 1) as u64) as i64) as i128);
+        v.clamp(lo as i128, hi as i128) as i64
+    }
+
+    /// f64 in [lo, hi) with 3 decimal places (keeps shrinking sane).
+    pub fn f64(&mut self, lo: f64, hi: f64) -> f64 {
+        let milli = self.draw(|r| (r.range_f64(lo, hi) * 1000.0).round() as i128);
+        (milli as f64 / 1000.0).clamp(lo, hi)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.u64(0, 1) == 1
+    }
+
+    pub fn pick<'a, T>(&mut self, items: &'a [T]) -> &'a T {
+        let i = self.usize(0, items.len() - 1);
+        &items[i]
+    }
+
+    /// Vector with length in [0, max_len], elements via `f`.
+    pub fn vec<T>(&mut self, max_len: usize, mut f: impl FnMut(&mut Gen) -> T) -> Vec<T> {
+        let len = self.usize(0, max_len);
+        (0..len).map(|_| f(self)).collect()
+    }
+
+    /// Lowercase identifier of length 1..=n.
+    pub fn ident(&mut self, n: usize) -> String {
+        let len = self.usize(1, n);
+        (0..len)
+            .map(|_| (b'a' + self.u64(0, 25) as u8) as char)
+            .collect()
+    }
+}
+
+/// Check `prop` over `cases` random inputs; panics with the shrunk
+/// counterexample on failure. Seed is fixed per property name so CI is
+/// deterministic; override with EXACB_PROP_SEED.
+pub fn check(name: &str, cases: usize, prop: impl Fn(&mut Gen) -> PropResult) {
+    let seed = std::env::var("EXACB_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or_else(|| fnv1a(name.as_bytes()));
+    for case in 0..cases {
+        let mut g = Gen::new(seed.wrapping_add(case as u64));
+        if let Err(fail) = prop(&mut g) {
+            let (draws, fail) = shrink(&g.draws, fail, &prop);
+            panic!(
+                "property '{name}' failed (case {case}, seed {seed}):\n  {}\n  shrunk draws: {:?}",
+                fail.msg, draws
+            );
+        }
+    }
+}
+
+/// Greedy shrink: try to reduce each recorded draw toward zero while the
+/// property still fails; returns the smallest failing draw vector found.
+fn shrink(
+    draws: &[i128],
+    orig: PropFail,
+    prop: &impl Fn(&mut Gen) -> PropResult,
+) -> (Vec<i128>, PropFail) {
+    let mut best = draws.to_vec();
+    let mut best_fail = orig;
+    let mut improved = true;
+    let mut budget = 500usize;
+    while improved && budget > 0 {
+        improved = false;
+        'outer: for i in 0..best.len() {
+            // `best` may have been replaced by a shorter draw vector in a
+            // previous iteration of the while loop; re-check bounds.
+            if i >= best.len() || best[i] == 0 {
+                continue;
+            }
+            for cand in [0, best[i] / 2, best[i] - best[i].signum()] {
+                if cand == best[i] {
+                    continue;
+                }
+                budget = budget.saturating_sub(1);
+                let mut trial = best.clone();
+                trial[i] = cand;
+                let mut g = Gen::new(0);
+                g.replay = Some(trial.clone());
+                if let Err(f) = prop(&mut g) {
+                    best = g.draws.clone();
+                    best_fail = f;
+                    improved = true;
+                    break 'outer;
+                }
+                if budget == 0 {
+                    break 'outer;
+                }
+            }
+        }
+    }
+    (best, best_fail)
+}
+
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+/// Assert inside a property body.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !($cond) {
+            return Err($crate::util::prop::PropFail { msg: format!($($fmt)*) });
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("add-commutes", 100, |g| {
+            let a = g.u64(0, 1_000_000);
+            let b = g.u64(0, 1_000_000);
+            prop_assert!(a + b == b + a, "a={a} b={b}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails' failed")]
+    fn failing_property_panics_with_shrunk_case() {
+        check("always-fails", 10, |g| {
+            let a = g.u64(0, 100);
+            prop_assert!(a > 1000, "a={a} is not > 1000");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn shrinker_reduces_to_boundary() {
+        // Find the minimal failing input for "x < 50" by hand-driving shrink.
+        let prop = |g: &mut Gen| {
+            let x = g.u64(0, 1000);
+            prop_assert!(x < 50, "x={x}");
+            Ok(())
+        };
+        // locate a failing case first
+        let mut failing = None;
+        for seed in 0..100 {
+            let mut g = Gen::new(seed);
+            if prop(&mut g).is_err() {
+                failing = Some(g.draws.clone());
+                break;
+            }
+        }
+        let draws = failing.expect("should find a failing case");
+        let (shrunk, _) = shrink(
+            &draws,
+            PropFail { msg: String::new() },
+            &prop,
+        );
+        assert_eq!(shrunk, vec![50]);
+    }
+
+    #[test]
+    fn gen_vec_and_ident() {
+        let mut g = Gen::new(1);
+        let v = g.vec(10, |g| g.u64(0, 5));
+        assert!(v.len() <= 10);
+        let id = g.ident(8);
+        assert!(!id.is_empty() && id.len() <= 8);
+        assert!(id.chars().all(|c| c.is_ascii_lowercase()));
+    }
+}

@@ -1,0 +1,247 @@
+//! Small statistics toolkit used by the analysis orchestrators and the
+//! bench harness: summary statistics, percentiles, linear regression, and
+//! a CUSUM-style changepoint detector (regression detection, §IV-F).
+
+/// Summary of a sample.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub sd: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+pub fn summary(xs: &[f64]) -> Summary {
+    if xs.is_empty() {
+        return Summary {
+            n: 0,
+            mean: f64::NAN,
+            sd: f64::NAN,
+            min: f64::NAN,
+            max: f64::NAN,
+        };
+    }
+    let n = xs.len();
+    let mean = xs.iter().sum::<f64>() / n as f64;
+    let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+    Summary {
+        n,
+        mean,
+        sd: var.sqrt(),
+        min: xs.iter().cloned().fold(f64::MAX, f64::min),
+        max: xs.iter().cloned().fold(f64::MIN, f64::max),
+    }
+}
+
+/// Percentile with linear interpolation; `q` in [0, 100].
+pub fn percentile(xs: &[f64], q: f64) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+    let pos = (q / 100.0) * (v.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (pos - lo as f64) * (v[hi] - v[lo])
+    }
+}
+
+pub fn median(xs: &[f64]) -> f64 {
+    percentile(xs, 50.0)
+}
+
+/// Ordinary least squares: returns (slope, intercept, r2).
+pub fn linear_fit(points: &[(f64, f64)]) -> (f64, f64, f64) {
+    let n = points.len() as f64;
+    if points.len() < 2 {
+        return (0.0, points.first().map(|p| p.1).unwrap_or(0.0), 0.0);
+    }
+    let sx: f64 = points.iter().map(|p| p.0).sum();
+    let sy: f64 = points.iter().map(|p| p.1).sum();
+    let sxx: f64 = points.iter().map(|p| p.0 * p.0).sum();
+    let sxy: f64 = points.iter().map(|p| p.0 * p.1).sum();
+    let denom = n * sxx - sx * sx;
+    if denom.abs() < 1e-12 {
+        return (0.0, sy / n, 0.0);
+    }
+    let slope = (n * sxy - sx * sy) / denom;
+    let intercept = (sy - slope * sx) / n;
+    let my = sy / n;
+    let ss_tot: f64 = points.iter().map(|p| (p.1 - my) * (p.1 - my)).sum();
+    let ss_res: f64 = points
+        .iter()
+        .map(|p| {
+            let e = p.1 - (slope * p.0 + intercept);
+            e * e
+        })
+        .sum();
+    let r2 = if ss_tot > 0.0 { 1.0 - ss_res / ss_tot } else { 1.0 };
+    (slope, intercept, r2)
+}
+
+/// Detected level shift in a series.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Changepoint {
+    pub index: usize,
+    /// Mean before / after the shift.
+    pub before: f64,
+    pub after: f64,
+    /// |after-before| in units of pooled standard deviation.
+    pub magnitude_sd: f64,
+}
+
+/// Binary-segmentation changepoint detection: recursively find the split
+/// that maximizes the between-segment mean difference, accepting splits
+/// whose shift exceeds `threshold_sd` *noise* standard deviations. Noise
+/// is estimated from the median absolute first difference (robust to the
+/// level shifts we are trying to detect). Used by the time-series
+/// orchestrator to flag regressions/recoveries (Fig. 4).
+pub fn changepoints(xs: &[f64], threshold_sd: f64) -> Vec<Changepoint> {
+    let mut found = Vec::new();
+    let noise = diff_noise(xs);
+    segment(xs, 0, &mut found, threshold_sd, noise, 0);
+    found.sort_by_key(|c| c.index);
+    found
+}
+
+/// Robust noise estimate: median(|x[i+1]-x[i]|) / (sqrt(2) * 0.6745),
+/// the MAD-based sigma of the differenced series. Level shifts contribute
+/// only one sample to the differences, so the median ignores them.
+fn diff_noise(xs: &[f64]) -> f64 {
+    if xs.len() < 3 {
+        return f64::MAX;
+    }
+    let diffs: Vec<f64> = xs.windows(2).map(|w| (w[1] - w[0]).abs()).collect();
+    let mad = median(&diffs);
+    let scale = xs.iter().map(|x| x.abs()).fold(0.0, f64::max).max(1e-300);
+    (mad / (std::f64::consts::SQRT_2 * 0.6745)).max(1e-9 * scale)
+}
+
+fn segment(
+    xs: &[f64],
+    offset: usize,
+    out: &mut Vec<Changepoint>,
+    thr: f64,
+    noise: f64,
+    depth: usize,
+) {
+    const MIN_SEG: usize = 5;
+    if xs.len() < 2 * MIN_SEG || depth > 6 {
+        return;
+    }
+    let mut best: Option<(usize, f64, f64, f64)> = None; // (idx, score, mb, ma)
+    for i in MIN_SEG..xs.len() - MIN_SEG {
+        let (a, b) = xs.split_at(i);
+        let sa = summary(a);
+        let sb = summary(b);
+        let score = (sb.mean - sa.mean).abs() / noise;
+        if best.map(|(_, s, _, _)| score > s).unwrap_or(true) {
+            best = Some((i, score, sa.mean, sb.mean));
+        }
+    }
+    if let Some((i, score, mb, ma)) = best {
+        if score >= thr {
+            out.push(Changepoint {
+                index: offset + i,
+                before: mb,
+                after: ma,
+                magnitude_sd: score,
+            });
+            let (a, b) = xs.split_at(i);
+            segment(a, offset, out, thr, noise, depth + 1);
+            segment(b, offset + i, out, thr, noise, depth + 1);
+        }
+    }
+}
+
+/// Geometric mean (cross-application aggregate, §VI-A).
+pub fn geomean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    (xs.iter().map(|x| x.max(1e-300).ln()).sum::<f64>() / xs.len() as f64).exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basics() {
+        let s = summary(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(s.n, 4);
+        assert!((s.mean - 2.5).abs() < 1e-12);
+        assert!((s.min - 1.0).abs() < 1e-12);
+        assert!((s.max - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentiles() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 5.0];
+        assert_eq!(median(&xs), 3.0);
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 5.0);
+        assert!((percentile(&xs, 25.0) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn linear_fit_exact_line() {
+        let pts: Vec<(f64, f64)> = (0..10).map(|i| (i as f64, 3.0 * i as f64 + 1.0)).collect();
+        let (m, b, r2) = linear_fit(&pts);
+        assert!((m - 3.0).abs() < 1e-9);
+        assert!((b - 1.0).abs() < 1e-9);
+        assert!((r2 - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn changepoint_detects_shift() {
+        let mut xs = vec![10.0; 30];
+        xs.extend(vec![14.0; 30]);
+        // add tiny deterministic wiggle so sd > 0
+        for (i, x) in xs.iter_mut().enumerate() {
+            *x += (i % 3) as f64 * 0.01;
+        }
+        let cps = changepoints(&xs, 5.0);
+        assert_eq!(cps.len(), 1, "{cps:?}");
+        assert!((28..=32).contains(&cps[0].index));
+        assert!(cps[0].after > cps[0].before);
+    }
+
+    #[test]
+    fn changepoint_regression_and_recovery() {
+        // level 10 -> 7 (regression) -> 10 (recovery): Fig. 4 shape
+        let mut xs = Vec::new();
+        for i in 0..90 {
+            let base = if (30..60).contains(&i) { 7.0 } else { 10.0 };
+            xs.push(base + (i % 4) as f64 * 0.02);
+        }
+        let cps = changepoints(&xs, 5.0);
+        assert!(cps.len() >= 2, "{cps:?}");
+        assert!(cps.iter().any(|c| c.after < c.before));
+        assert!(cps.iter().any(|c| c.after > c.before));
+    }
+
+    #[test]
+    fn stable_series_has_no_changepoints() {
+        let xs: Vec<f64> = (0..60).map(|i| 100.0 + (i % 5) as f64 * 0.1).collect();
+        assert!(changepoints(&xs, 6.0).is_empty());
+    }
+
+    #[test]
+    fn geomean_of_constant() {
+        assert!((geomean(&[2.0, 2.0, 2.0]) - 2.0).abs() < 1e-12);
+        assert!((geomean(&[1.0, 4.0]) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_inputs_are_nan() {
+        assert!(summary(&[]).mean.is_nan());
+        assert!(percentile(&[], 50.0).is_nan());
+        assert!(geomean(&[]).is_nan());
+    }
+}

@@ -1,0 +1,229 @@
+//! Aligned ASCII tables and CSV emission (Table I of the paper and every
+//! harness `results.csv`).
+
+/// A simple column-ordered table of string cells.
+#[derive(Debug, Clone, Default)]
+pub struct Table {
+    pub columns: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(columns: &[&str]) -> Table {
+        Table {
+            columns: columns.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn push_row(&mut self, row: Vec<String>) {
+        assert_eq!(
+            row.len(),
+            self.columns.len(),
+            "row width {} != column count {}",
+            row.len(),
+            self.columns.len()
+        );
+        self.rows.push(row);
+    }
+
+    pub fn col_index(&self, name: &str) -> Option<usize> {
+        self.columns.iter().position(|c| c == name)
+    }
+
+    /// All values of one column.
+    pub fn column(&self, name: &str) -> Option<Vec<&str>> {
+        let i = self.col_index(name)?;
+        Some(self.rows.iter().map(|r| r[i].as_str()).collect())
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// RFC-4180-ish CSV (quotes fields containing `,` `"` or newline).
+    pub fn to_csv(&self) -> String {
+        let mut out = String::new();
+        emit_csv_row(&mut out, &self.columns);
+        for row in &self.rows {
+            emit_csv_row(&mut out, row);
+        }
+        out
+    }
+
+    /// Parse CSV produced by `to_csv` (quoted fields supported).
+    pub fn from_csv(text: &str) -> Option<Table> {
+        let mut rows = parse_csv(text);
+        if rows.is_empty() {
+            return None;
+        }
+        let columns = rows.remove(0);
+        let width = columns.len();
+        if rows.iter().any(|r| r.len() != width) {
+            return None;
+        }
+        Some(Table { columns, rows })
+    }
+
+    /// Fixed-width ASCII rendering with a header rule.
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.columns.iter().map(|c| c.len()).collect();
+        for row in &self.rows {
+            for (i, cell) in row.iter().enumerate() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let mut line = String::new();
+            for (i, cell) in cells.iter().enumerate() {
+                if i > 0 {
+                    line.push_str("  ");
+                }
+                line.push_str(&format!("{:<width$}", cell, width = widths[i]));
+            }
+            line.trim_end().to_string()
+        };
+        out.push_str(&fmt_row(&self.columns, &widths));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Sort rows by a column, numerically when possible.
+    pub fn sort_by_column(&mut self, name: &str) {
+        if let Some(i) = self.col_index(name) {
+            self.rows.sort_by(|a, b| {
+                match (a[i].parse::<f64>(), b[i].parse::<f64>()) {
+                    (Ok(x), Ok(y)) => x.partial_cmp(&y).unwrap_or(std::cmp::Ordering::Equal),
+                    _ => a[i].cmp(&b[i]),
+                }
+            });
+        }
+    }
+}
+
+fn emit_csv_row(out: &mut String, cells: &[String]) {
+    for (i, cell) in cells.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        if cell.contains(',') || cell.contains('"') || cell.contains('\n') {
+            out.push('"');
+            out.push_str(&cell.replace('"', "\"\""));
+            out.push('"');
+        } else {
+            out.push_str(cell);
+        }
+    }
+    out.push('\n');
+}
+
+fn parse_csv(text: &str) -> Vec<Vec<String>> {
+    let mut rows = Vec::new();
+    let mut row = Vec::new();
+    let mut field = String::new();
+    let mut in_quotes = false;
+    let mut chars = text.chars().peekable();
+    while let Some(c) = chars.next() {
+        if in_quotes {
+            match c {
+                '"' if chars.peek() == Some(&'"') => {
+                    chars.next();
+                    field.push('"');
+                }
+                '"' => in_quotes = false,
+                c => field.push(c),
+            }
+        } else {
+            match c {
+                '"' => in_quotes = true,
+                ',' => {
+                    row.push(std::mem::take(&mut field));
+                }
+                '\n' => {
+                    row.push(std::mem::take(&mut field));
+                    if !(row.len() == 1 && row[0].is_empty()) {
+                        rows.push(std::mem::take(&mut row));
+                    } else {
+                        row.clear();
+                    }
+                }
+                '\r' => {}
+                c => field.push(c),
+            }
+        }
+    }
+    if !field.is_empty() || !row.is_empty() {
+        row.push(field);
+        rows.push(row);
+    }
+    rows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Table {
+        let mut t = Table::new(&["system", "nodes", "runtime"]);
+        t.push_row(vec!["jedi".into(), "4".into(), "12.5".into()]);
+        t.push_row(vec!["jureca".into(), "2".into(), "30.1".into()]);
+        t
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let t = sample();
+        let back = Table::from_csv(&t.to_csv()).unwrap();
+        assert_eq!(back.columns, t.columns);
+        assert_eq!(back.rows, t.rows);
+    }
+
+    #[test]
+    fn csv_quoting() {
+        let mut t = Table::new(&["a"]);
+        t.push_row(vec!["x,\"y\"\nz".into()]);
+        let back = Table::from_csv(&t.to_csv()).unwrap();
+        assert_eq!(back.rows[0][0], "x,\"y\"\nz");
+    }
+
+    #[test]
+    fn render_aligns() {
+        let r = sample().render();
+        let lines: Vec<&str> = r.lines().collect();
+        assert!(lines[0].starts_with("system"));
+        assert!(lines[1].starts_with("---"));
+        assert_eq!(lines.len(), 4);
+    }
+
+    #[test]
+    fn column_access_and_sort() {
+        let mut t = sample();
+        t.sort_by_column("runtime");
+        assert_eq!(t.rows[0][0], "jedi");
+        assert_eq!(t.column("nodes").unwrap(), vec!["4", "2"]);
+        assert!(t.column("missing").is_none());
+    }
+
+    #[test]
+    #[should_panic(expected = "row width")]
+    fn width_mismatch_panics() {
+        let mut t = sample();
+        t.push_row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn from_csv_rejects_ragged() {
+        assert!(Table::from_csv("a,b\n1\n").is_none());
+    }
+}

@@ -1,0 +1,213 @@
+//! Simulated-calendar utilities.
+//!
+//! The simulators run on a virtual clock of seconds since a fixed epoch
+//! (2026-01-01T00:00:00Z — the start of the paper's Fig. 3/4 time span).
+//! Protocol timestamps are ISO-8601 strings derived from that clock; the
+//! time-series components parse them back for `time_span` filtering.
+
+pub const EPOCH_YEAR: i64 = 2026;
+pub const SECS_PER_DAY: i64 = 86_400;
+
+/// Days in each month for a given year.
+fn month_days(year: i64) -> [i64; 12] {
+    let leap = (year % 4 == 0 && year % 100 != 0) || year % 400 == 0;
+    [
+        31,
+        if leap { 29 } else { 28 },
+        31,
+        30,
+        31,
+        30,
+        31,
+        31,
+        30,
+        31,
+        30,
+        31,
+    ]
+}
+
+/// A simulated instant: seconds since 2026-01-01T00:00:00Z (may be negative
+/// for pre-epoch dates, e.g. software stage 2025 baselines).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub struct SimTime(pub i64);
+
+impl SimTime {
+    pub fn from_days(days: i64) -> SimTime {
+        SimTime(days * SECS_PER_DAY)
+    }
+
+    pub fn day(&self) -> i64 {
+        self.0.div_euclid(SECS_PER_DAY)
+    }
+
+    pub fn add_secs(&self, s: i64) -> SimTime {
+        SimTime(self.0 + s)
+    }
+
+    /// (year, month, day) of the civil date.
+    pub fn ymd(&self) -> (i64, i64, i64) {
+        let mut days = self.day();
+        let mut year = EPOCH_YEAR;
+        loop {
+            let ydays: i64 = month_days(year).iter().sum();
+            if days >= ydays {
+                days -= ydays;
+                year += 1;
+            } else if days < 0 {
+                year -= 1;
+                days += month_days(year).iter().sum::<i64>();
+            } else {
+                break;
+            }
+        }
+        let mut month = 1;
+        for md in month_days(year) {
+            if days < md {
+                break;
+            }
+            days -= md;
+            month += 1;
+        }
+        (year, month, days + 1)
+    }
+
+    /// `YYYY-MM-DD`.
+    pub fn date_string(&self) -> String {
+        let (y, m, d) = self.ymd();
+        format!("{y:04}-{m:02}-{d:02}")
+    }
+
+    /// `YYYY-MM-DDTHH:MM:SSZ`.
+    pub fn iso8601(&self) -> String {
+        let (y, m, d) = self.ymd();
+        let secs = self.0.rem_euclid(SECS_PER_DAY);
+        format!(
+            "{y:04}-{m:02}-{d:02}T{:02}:{:02}:{:02}Z",
+            secs / 3600,
+            (secs % 3600) / 60,
+            secs % 60
+        )
+    }
+
+    /// Parse `YYYY-MM-DD` or full ISO-8601 (Z suffix optional).
+    pub fn parse(text: &str) -> Option<SimTime> {
+        let t = text.trim().trim_end_matches('Z');
+        let (date, time) = match t.split_once('T') {
+            Some((d, tm)) => (d, Some(tm)),
+            None => (t, None),
+        };
+        let mut parts = date.split('-');
+        let y: i64 = parts.next()?.parse().ok()?;
+        let m: i64 = parts.next()?.parse().ok()?;
+        let d: i64 = parts.next()?.parse().ok()?;
+        if parts.next().is_some() || !(1..=12).contains(&m) {
+            return None;
+        }
+        if d < 1 || d > month_days(y)[(m - 1) as usize] {
+            return None;
+        }
+        let mut days: i64 = 0;
+        if y >= EPOCH_YEAR {
+            for yy in EPOCH_YEAR..y {
+                days += month_days(yy).iter().sum::<i64>();
+            }
+        } else {
+            for yy in y..EPOCH_YEAR {
+                days -= month_days(yy).iter().sum::<i64>();
+            }
+        }
+        days += month_days(y)[..(m - 1) as usize].iter().sum::<i64>();
+        days += d - 1;
+        let mut secs = days * SECS_PER_DAY;
+        if let Some(tm) = time {
+            let mut hms = tm.split(':');
+            let h: i64 = hms.next()?.parse().ok()?;
+            let mi: i64 = hms.next().unwrap_or("0").parse().ok()?;
+            let s: i64 = hms
+                .next()
+                .unwrap_or("0")
+                .split('.')
+                .next()?
+                .parse()
+                .ok()?;
+            secs += h * 3600 + mi * 60 + s;
+        }
+        Some(SimTime(secs))
+    }
+}
+
+/// Format seconds as `HH:MM:SS` (job walltimes).
+pub fn fmt_duration(secs: i64) -> String {
+    format!(
+        "{:02}:{:02}:{:02}",
+        secs / 3600,
+        (secs % 3600) / 60,
+        secs % 60
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn epoch_is_jan1_2026() {
+        assert_eq!(SimTime(0).date_string(), "2026-01-01");
+        assert_eq!(SimTime(0).iso8601(), "2026-01-01T00:00:00Z");
+    }
+
+    #[test]
+    fn day_arithmetic() {
+        assert_eq!(SimTime::from_days(31).date_string(), "2026-02-01");
+        assert_eq!(SimTime::from_days(59).date_string(), "2026-03-01"); // 2026 not leap
+        assert_eq!(SimTime::from_days(365).date_string(), "2027-01-01");
+    }
+
+    #[test]
+    fn leap_year_2028() {
+        // 2026: 365, 2027: 365, then Feb 2028 has 29 days
+        let feb29 = SimTime::parse("2028-02-29").unwrap();
+        assert_eq!(feb29.date_string(), "2028-02-29");
+        assert!(SimTime::parse("2026-02-29").is_none());
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        for s in ["2026-01-01", "2026-04-01", "2026-12-31", "2027-06-15"] {
+            assert_eq!(SimTime::parse(s).unwrap().date_string(), s);
+        }
+        let t = SimTime::parse("2026-03-05T13:45:10Z").unwrap();
+        assert_eq!(t.iso8601(), "2026-03-05T13:45:10Z");
+    }
+
+    #[test]
+    fn pre_epoch_dates() {
+        let t = SimTime::parse("2025-12-31").unwrap();
+        assert_eq!(t.day(), -1);
+        assert_eq!(t.date_string(), "2025-12-31");
+        let t2 = SimTime::parse("2025-01-01").unwrap();
+        assert_eq!(t2.date_string(), "2025-01-01");
+    }
+
+    #[test]
+    fn ordering_matches_chronology() {
+        let a = SimTime::parse("2026-01-01").unwrap();
+        let b = SimTime::parse("2026-04-01").unwrap();
+        assert!(a < b);
+    }
+
+    #[test]
+    fn invalid_dates_rejected() {
+        assert!(SimTime::parse("2026-13-01").is_none());
+        assert!(SimTime::parse("2026-00-10").is_none());
+        assert!(SimTime::parse("garbage").is_none());
+        assert!(SimTime::parse("2026-04-31").is_none());
+    }
+
+    #[test]
+    fn duration_format() {
+        assert_eq!(fmt_duration(3725), "01:02:05");
+        assert_eq!(fmt_duration(0), "00:00:00");
+    }
+}

@@ -1,0 +1,541 @@
+//! YAML-subset parser (substrate; DESIGN.md §2).
+//!
+//! exaCB front-ends are YAML files: `.gitlab-ci.yml`-style pipeline
+//! configs (§II-C, §V-A) and JUBE-style benchmark scripts (§II-B). No
+//! YAML crate is vendored, so we parse the subset those files actually
+//! use into the [`Json`] value model:
+//!
+//! * block mappings + sequences via indentation,
+//! * inline (flow) lists `[a, b]` and maps `{k: v}`,
+//! * scalars: unquoted / single- / double-quoted strings, ints, floats,
+//!   booleans, null,
+//! * `|` literal block scalars (for multi-line shell steps),
+//! * `#` comments and blank lines.
+//!
+//! Not supported (by design): anchors/aliases, tags, multi-document
+//! streams, folded `>` scalars, flow nesting beyond one level of quotes.
+
+use super::json::Json;
+use std::fmt;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct YamlError {
+    pub msg: String,
+    pub line: usize,
+}
+
+impl fmt::Display for YamlError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "yaml error at line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for YamlError {}
+
+/// A pre-processed source line.
+struct Line {
+    indent: usize,
+    text: String, // content without indentation
+    no: usize,    // 1-based source line number
+}
+
+pub fn parse(src: &str) -> Result<Json, YamlError> {
+    let lines = preprocess(src)?;
+    if lines.is_empty() {
+        return Ok(Json::Null);
+    }
+    let mut pos = 0;
+    let v = parse_block(&lines, &mut pos, lines[0].indent)?;
+    if pos != lines.len() {
+        return Err(YamlError {
+            msg: "unconsumed trailing content (inconsistent indentation?)".into(),
+            line: lines[pos].no,
+        });
+    }
+    Ok(v)
+}
+
+fn preprocess(src: &str) -> Result<Vec<Line>, YamlError> {
+    let mut out = Vec::new();
+    for (i, raw) in src.lines().enumerate() {
+        let no = i + 1;
+        if raw.trim() == "---" && out.is_empty() {
+            continue; // leading document marker
+        }
+        let without_comment = strip_comment(raw);
+        let trimmed_end = without_comment.trim_end();
+        if trimmed_end.trim().is_empty() {
+            continue;
+        }
+        if trimmed_end.contains('\t') {
+            return Err(YamlError {
+                msg: "tabs are not allowed in indentation".into(),
+                line: no,
+            });
+        }
+        let indent = trimmed_end.len() - trimmed_end.trim_start().len();
+        out.push(Line {
+            indent,
+            text: trimmed_end.trim_start().to_string(),
+            no,
+        });
+    }
+    Ok(out)
+}
+
+/// Strip a trailing `#` comment, respecting quotes.
+fn strip_comment(line: &str) -> &str {
+    let bytes = line.as_bytes();
+    let mut in_single = false;
+    let mut in_double = false;
+    for (i, &b) in bytes.iter().enumerate() {
+        match b {
+            b'\'' if !in_double => in_single = !in_single,
+            b'"' if !in_single => in_double = !in_double,
+            b'#' if !in_single && !in_double => {
+                // `#` begins a comment only at start or after whitespace
+                if i == 0 || bytes[i - 1] == b' ' {
+                    return &line[..i];
+                }
+            }
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_block(lines: &[Line], pos: &mut usize, indent: usize) -> Result<Json, YamlError> {
+    let line = &lines[*pos];
+    if line.text.starts_with("- ") || line.text == "-" {
+        parse_sequence(lines, pos, indent)
+    } else {
+        parse_mapping(lines, pos, indent)
+    }
+}
+
+fn parse_sequence(lines: &[Line], pos: &mut usize, indent: usize) -> Result<Json, YamlError> {
+    let mut items = Vec::new();
+    while *pos < lines.len() {
+        let line = &lines[*pos];
+        if line.indent != indent || !(line.text.starts_with("- ") || line.text == "-") {
+            break;
+        }
+        let no = line.no;
+        let rest = line.text[1..].trim_start().to_string();
+        *pos += 1;
+        if rest.is_empty() {
+            // nested block on following lines
+            if *pos < lines.len() && lines[*pos].indent > indent {
+                let inner_indent = lines[*pos].indent;
+                items.push(parse_block(lines, pos, inner_indent)?);
+            } else {
+                items.push(Json::Null);
+            }
+        } else if let Some((key, val)) = split_key(&rest) {
+            // "- key: value" — an inline mapping whose further keys sit at
+            // indent + 2 (the column of `key`).
+            let item_indent = indent + 2;
+            let mut pairs = Vec::new();
+            push_mapping_entry(lines, pos, item_indent, key, val, no, &mut pairs)?;
+            while *pos < lines.len()
+                && lines[*pos].indent == item_indent
+                && !lines[*pos].text.starts_with("- ")
+            {
+                let l = &lines[*pos];
+                let lno = l.no;
+                let (k, v) = split_key(&l.text).ok_or(YamlError {
+                    msg: format!("expected 'key: value', got '{}'", l.text),
+                    line: lno,
+                })?;
+                *pos += 1;
+                push_mapping_entry(lines, pos, item_indent, k, v, lno, &mut pairs)?;
+            }
+            items.push(Json::Obj(pairs));
+        } else {
+            items.push(scalar(&rest, no)?);
+        }
+    }
+    Ok(Json::Arr(items))
+}
+
+fn parse_mapping(lines: &[Line], pos: &mut usize, indent: usize) -> Result<Json, YamlError> {
+    let mut pairs = Vec::new();
+    while *pos < lines.len() {
+        let line = &lines[*pos];
+        if line.indent != indent || line.text.starts_with("- ") || line.text == "-" {
+            break;
+        }
+        let no = line.no;
+        let (key, val) = split_key(&line.text).ok_or(YamlError {
+            msg: format!("expected 'key: value', got '{}'", line.text),
+            line: no,
+        })?;
+        *pos += 1;
+        push_mapping_entry(lines, pos, indent, key, val, no, &mut pairs)?;
+    }
+    Ok(Json::Obj(pairs))
+}
+
+fn push_mapping_entry(
+    lines: &[Line],
+    pos: &mut usize,
+    indent: usize,
+    key: String,
+    val: String,
+    no: usize,
+    pairs: &mut Vec<(String, Json)>,
+) -> Result<(), YamlError> {
+    let value = if val.is_empty() {
+        // nested block or empty value
+        if *pos < lines.len() && lines[*pos].indent > indent {
+            let inner = lines[*pos].indent;
+            parse_block(lines, pos, inner)?
+        } else if *pos < lines.len()
+            && lines[*pos].indent == indent
+            && (lines[*pos].text.starts_with("- ") || lines[*pos].text == "-")
+        {
+            // sequences are commonly written at the same indent as the key
+            parse_sequence(lines, pos, indent)?
+        } else {
+            Json::Null
+        }
+    } else if val == "|" || val == "|-" {
+        parse_literal_block(lines, pos, indent, val == "|")?
+    } else {
+        scalar(&val, no)?
+    };
+    pairs.push((key, value));
+    Ok(())
+}
+
+fn parse_literal_block(
+    lines: &[Line],
+    pos: &mut usize,
+    indent: usize,
+    keep_newline: bool,
+) -> Result<Json, YamlError> {
+    // Literal blocks lose inner blank lines in `preprocess`; acceptable for
+    // shell steps. All lines deeper than `indent` belong to the block.
+    let mut body = Vec::new();
+    let mut block_indent = None;
+    while *pos < lines.len() && lines[*pos].indent > indent {
+        let l = &lines[*pos];
+        let bi = *block_indent.get_or_insert(l.indent);
+        let extra = l.indent.saturating_sub(bi);
+        body.push(format!("{}{}", " ".repeat(extra), l.text));
+        *pos += 1;
+    }
+    let mut text = body.join("\n");
+    if keep_newline && !text.is_empty() {
+        text.push('\n');
+    }
+    Ok(Json::Str(text))
+}
+
+/// Split `key: value` (value may be empty). Returns None when the line is
+/// not a mapping entry. Respects quoted keys.
+fn split_key(text: &str) -> Option<(String, String)> {
+    let bytes = text.as_bytes();
+    let (key, rest_at) = if bytes[0] == b'"' || bytes[0] == b'\'' {
+        let q = bytes[0];
+        let end = text[1..].find(q as char)? + 1;
+        (text[1..end].to_string(), end + 1)
+    } else {
+        let mut idx = None;
+        for (i, &b) in bytes.iter().enumerate() {
+            if b == b':' && (i + 1 == bytes.len() || bytes[i + 1] == b' ') {
+                idx = Some(i);
+                break;
+            }
+        }
+        let i = idx?;
+        (text[..i].trim().to_string(), i)
+    };
+    let after = text[rest_at..].trim_start();
+    if !after.starts_with(':') {
+        return None;
+    }
+    Some((key, after[1..].trim().to_string()))
+}
+
+fn scalar(text: &str, line: usize) -> Result<Json, YamlError> {
+    let t = text.trim();
+    if t.starts_with('[') {
+        return flow_seq(t, line);
+    }
+    if t.starts_with('{') {
+        return flow_map(t, line);
+    }
+    if t.starts_with('"') && t.ends_with('"') && t.len() >= 2 {
+        // reuse the JSON string parser for escapes
+        return Json::parse(t).map_err(|e| YamlError {
+            msg: e.msg,
+            line,
+        });
+    }
+    if t.starts_with('\'') && t.ends_with('\'') && t.len() >= 2 {
+        return Ok(Json::Str(t[1..t.len() - 1].replace("''", "'")));
+    }
+    Ok(plain_scalar(t))
+}
+
+fn plain_scalar(t: &str) -> Json {
+    match t {
+        "null" | "~" | "" => return Json::Null,
+        "true" | "True" => return Json::Bool(true),
+        "false" | "False" => return Json::Bool(false),
+        _ => {}
+    }
+    // ints/floats; anything else is a string (no octal/hex/sexagesimal)
+    if let Ok(n) = t.parse::<i64>() {
+        return Json::Num(n as f64);
+    }
+    if looks_numeric(t) {
+        if let Ok(f) = t.parse::<f64>() {
+            return Json::Num(f);
+        }
+    }
+    Json::Str(t.to_string())
+}
+
+fn looks_numeric(t: &str) -> bool {
+    let mut chars = t.chars();
+    let first = match chars.next() {
+        Some(c) => c,
+        None => return false,
+    };
+    (first.is_ascii_digit() || first == '-' || first == '+' || first == '.')
+        && t.chars()
+            .all(|c| c.is_ascii_digit() || matches!(c, '.' | 'e' | 'E' | '+' | '-'))
+}
+
+/// Split a flow body on top-level commas (depth-aware, quote-aware).
+fn split_flow(body: &str, line: usize) -> Result<Vec<String>, YamlError> {
+    let mut parts = Vec::new();
+    let mut depth = 0i32;
+    let mut in_single = false;
+    let mut in_double = false;
+    let mut cur = String::new();
+    for c in body.chars() {
+        match c {
+            '\'' if !in_double => in_single = !in_single,
+            '"' if !in_single => in_double = !in_double,
+            '[' | '{' if !in_single && !in_double => depth += 1,
+            ']' | '}' if !in_single && !in_double => depth -= 1,
+            ',' if depth == 0 && !in_single && !in_double => {
+                parts.push(cur.trim().to_string());
+                cur.clear();
+                continue;
+            }
+            _ => {}
+        }
+        cur.push(c);
+    }
+    if depth != 0 || in_single || in_double {
+        return Err(YamlError {
+            msg: "unbalanced flow collection".into(),
+            line,
+        });
+    }
+    if !cur.trim().is_empty() {
+        parts.push(cur.trim().to_string());
+    }
+    Ok(parts)
+}
+
+fn flow_seq(t: &str, line: usize) -> Result<Json, YamlError> {
+    if !t.ends_with(']') {
+        return Err(YamlError {
+            msg: "flow sequence must end with ']'".into(),
+            line,
+        });
+    }
+    let body = &t[1..t.len() - 1];
+    if body.trim().is_empty() {
+        return Ok(Json::Arr(vec![]));
+    }
+    let mut items = Vec::new();
+    for part in split_flow(body, line)? {
+        items.push(scalar(&part, line)?);
+    }
+    Ok(Json::Arr(items))
+}
+
+fn flow_map(t: &str, line: usize) -> Result<Json, YamlError> {
+    if !t.ends_with('}') {
+        return Err(YamlError {
+            msg: "flow mapping must end with '}'".into(),
+            line,
+        });
+    }
+    let body = &t[1..t.len() - 1];
+    if body.trim().is_empty() {
+        return Ok(Json::obj());
+    }
+    let mut pairs = Vec::new();
+    for part in split_flow(body, line)? {
+        let (k, v) = split_key(&part).ok_or(YamlError {
+            msg: format!("expected 'key: value' in flow mapping, got '{part}'"),
+            line,
+        })?;
+        pairs.push((k, scalar(&v, line)?));
+    }
+    Ok(Json::Obj(pairs))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_ci_example_parses() {
+        // The execution-orchestrator invocation from §V-A.1 of the paper.
+        let src = r#"
+component: execution@v3
+inputs:
+  prefix: "jureca.single"
+  # Benchmark specification
+  usecase: "bigproblem"
+  variant: "single"
+  jube_file: "benchmark/jube/shell.yml"
+  machine: "jureca"
+  queue: "dc-gpu"
+  project: "cexalab"
+  budget: "exalab"
+  fixture: .setup
+  record: "true"
+"#;
+        let v = parse(src).unwrap();
+        assert_eq!(v.str_of("component"), Some("execution@v3"));
+        let inputs = v.get("inputs").unwrap();
+        assert_eq!(inputs.str_of("machine"), Some("jureca"));
+        assert_eq!(inputs.str_of("fixture"), Some(".setup"));
+        assert_eq!(inputs.str_of("record"), Some("true"));
+    }
+
+    #[test]
+    fn paper_timeseries_example_parses() {
+        let src = r#"
+component: time-series@v3
+inputs:
+  prefix: "jupiter.benchmark.stream.cuda"
+  pipeline: []
+  data_labels: [ "Copy BW [MBytes/sec]", "Mul BW [MBytes/sec]" ]
+  ylabel: [ "Bandwidth / MB/s" ]
+  time_span: [ "2026-01-01", "2026-04-01" ]
+"#;
+        let v = parse(src).unwrap();
+        let inputs = v.get("inputs").unwrap();
+        assert_eq!(inputs.get("pipeline").unwrap().as_arr().unwrap().len(), 0);
+        assert_eq!(
+            inputs.pointer("/data_labels/0").unwrap().as_str().unwrap(),
+            "Copy BW [MBytes/sec]"
+        );
+        assert_eq!(
+            inputs.pointer("/time_span/1").unwrap().as_str().unwrap(),
+            "2026-04-01"
+        );
+    }
+
+    #[test]
+    fn include_list_of_components() {
+        let src = r#"
+include:
+  - component: example/jube@v3.2
+    inputs:
+      prefix: "jedi.strong.tiny"
+      variant: "large-intensity"
+"#;
+        let v = parse(src).unwrap();
+        let first = v.pointer("/include/0").unwrap();
+        assert_eq!(first.str_of("component"), Some("example/jube@v3.2"));
+        assert_eq!(
+            first.pointer("/inputs/variant").unwrap().as_str().unwrap(),
+            "large-intensity"
+        );
+    }
+
+    #[test]
+    fn sequences_nested_and_scalars() {
+        let src = r#"
+params:
+  - name: nodes
+    values: [1, 2, 4, 8]
+  - name: tag
+    values:
+      - a
+      - b
+count: 3
+ratio: 2.5
+flag: true
+empty: ~
+"#;
+        let v = parse(src).unwrap();
+        assert_eq!(v.pointer("/params/0/values/3").unwrap().as_u64(), Some(8));
+        assert_eq!(
+            v.pointer("/params/1/values/1").unwrap().as_str(),
+            Some("b")
+        );
+        assert_eq!(v.u64_of("count"), Some(3));
+        assert_eq!(v.f64_of("ratio"), Some(2.5));
+        assert_eq!(v.bool_of("flag"), Some(true));
+        assert!(v.get("empty").unwrap().is_null());
+    }
+
+    #[test]
+    fn literal_block() {
+        let src = "run: |\n  echo hello\n  logmap --workload 6\nafter: 1\n";
+        let v = parse(src).unwrap();
+        assert_eq!(
+            v.str_of("run"),
+            Some("echo hello\nlogmap --workload 6\n")
+        );
+        assert_eq!(v.u64_of("after"), Some(1));
+    }
+
+    #[test]
+    fn comments_and_quotes() {
+        let src = r#"
+a: "value # not comment"  # real comment
+b: 'single # also kept'
+c: plain  # stripped
+"#;
+        let v = parse(src).unwrap();
+        assert_eq!(v.str_of("a"), Some("value # not comment"));
+        assert_eq!(v.str_of("b"), Some("single # also kept"));
+        assert_eq!(v.str_of("c"), Some("plain"));
+    }
+
+    #[test]
+    fn flow_map_value() {
+        let v = parse("env: {UCX_RNDV_THRESH: 65536, MODE: eager}\n").unwrap();
+        assert_eq!(v.pointer("/env/UCX_RNDV_THRESH").unwrap().as_u64(), Some(65536));
+        assert_eq!(v.pointer("/env/MODE").unwrap().as_str(), Some("eager"));
+    }
+
+    #[test]
+    fn colon_in_value_kept() {
+        let v = parse("cmd: export UCX_RNDV_THRESH=intra:65536,inter:65536\n").unwrap();
+        assert_eq!(
+            v.str_of("cmd"),
+            Some("export UCX_RNDV_THRESH=intra:65536,inter:65536")
+        );
+    }
+
+    #[test]
+    fn tabs_rejected() {
+        assert!(parse("a:\n\tb: 1\n").is_err());
+    }
+
+    #[test]
+    fn empty_doc_is_null() {
+        assert_eq!(parse("\n# only a comment\n").unwrap(), Json::Null);
+    }
+
+    #[test]
+    fn version_like_strings_stay_strings() {
+        let v = parse("ver: 3.2.1\nrange: 1-4\n").unwrap();
+        assert_eq!(v.str_of("ver"), Some("3.2.1"));
+        assert_eq!(v.str_of("range"), Some("1-4"));
+    }
+}

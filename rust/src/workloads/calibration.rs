@@ -1,0 +1,120 @@
+//! Host calibration: anchoring simulated runtimes in *real measured*
+//! compute.
+//!
+//! When the PJRT engine is available, the logmap/stream workloads execute
+//! their AOT HLO artifacts for real and the measured host wall-clock
+//! anchors the performance model: simulated time on machine M =
+//! host time × (host effective rate / M's modelled rate). Without
+//! artifacts (unit tests, cold checkouts) an analytic fallback rate is
+//! used so every code path still functions.
+
+use std::time::Duration;
+
+/// Measured (or assumed) host execution rates.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct HostCalibration {
+    /// Effective host FLOP rate on the logmap kernel [GFLOP/s].
+    pub logmap_gflops: f64,
+    /// Effective host STREAM traffic rate [GB/s].
+    pub stream_gbs: f64,
+    /// True when derived from a real PJRT run (vs the analytic default).
+    pub measured: bool,
+}
+
+impl Default for HostCalibration {
+    fn default() -> Self {
+        // Conservative single-core CPU-ish defaults for the fallback path.
+        HostCalibration {
+            logmap_gflops: 2.0,
+            stream_gbs: 8.0,
+            measured: false,
+        }
+    }
+}
+
+impl HostCalibration {
+    /// Derive a calibration from one measured logmap + stream execution.
+    pub fn from_measurements(
+        logmap_flops: u64,
+        logmap_wall: Duration,
+        stream_bytes: u64,
+        stream_wall: Duration,
+    ) -> HostCalibration {
+        let gflops = logmap_flops as f64 / logmap_wall.as_secs_f64().max(1e-9) / 1e9;
+        let gbs = stream_bytes as f64 / stream_wall.as_secs_f64().max(1e-9) / 1e9;
+        HostCalibration {
+            logmap_gflops: gflops.max(0.01),
+            stream_gbs: gbs.max(0.01),
+            measured: true,
+        }
+    }
+
+    /// Calibrate from a live engine (one warm-up + one timed run each).
+    pub fn measure(engine: &mut crate::runtime::Engine) -> anyhow::Result<HostCalibration> {
+        let logmap = engine
+            .manifest
+            .best_logmap(512, 65536)
+            .ok_or_else(|| anyhow::anyhow!("no logmap artifact"))?
+            .clone();
+        let stream = engine
+            .manifest
+            .entries
+            .iter()
+            .find(|e| e.kind == "stream")
+            .ok_or_else(|| anyhow::anyhow!("no stream artifact"))?
+            .clone();
+        let n = logmap.n();
+        let x = vec![0.37f32; n];
+        let r = vec![3.61f32; n];
+        // warm-up triggers compilation; second run is the measurement
+        engine.run_logmap(&logmap.name, &x, &r)?;
+        let (_, _, wall_l) = engine.run_logmap(&logmap.name, &x, &r)?;
+        engine.run_stream(&stream.name, 0.1)?;
+        let (_, wall_s) = engine.run_stream(&stream.name, 0.1)?;
+        Ok(HostCalibration::from_measurements(
+            logmap.flops,
+            wall_l,
+            stream.bytes,
+            wall_s,
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_measurements_computes_rates() {
+        let c = HostCalibration::from_measurements(
+            2_000_000_000,
+            Duration::from_secs(1),
+            4_000_000_000,
+            Duration::from_millis(500),
+        );
+        assert!((c.logmap_gflops - 2.0).abs() < 1e-9);
+        assert!((c.stream_gbs - 8.0).abs() < 1e-9);
+        assert!(c.measured);
+    }
+
+    #[test]
+    fn default_is_analytic() {
+        let c = HostCalibration::default();
+        assert!(!c.measured);
+        assert!(c.logmap_gflops > 0.0 && c.stream_gbs > 0.0);
+    }
+
+    #[test]
+    fn measure_with_real_engine() {
+        let dir = crate::runtime::manifest::default_dir();
+        if !dir.join("manifest.json").exists() {
+            return;
+        }
+        let mut eng = crate::runtime::Engine::load_default().unwrap();
+        let c = HostCalibration::measure(&mut eng).unwrap();
+        assert!(c.measured);
+        // plausible host rates: somewhere between 0.01 and 1000
+        assert!(c.logmap_gflops > 0.01 && c.logmap_gflops < 1000.0, "{c:?}");
+        assert!(c.stream_gbs > 0.01 && c.stream_gbs < 1000.0, "{c:?}");
+    }
+}

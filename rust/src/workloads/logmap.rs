@@ -1,0 +1,237 @@
+//! The logmap application (paper §II-A): the running example benchmark.
+//!
+//! `logmap --workload W --intensity I` iterates the logistic map over a
+//! vector of `W × 2²²` values with `I × 1000` iterations per element.
+//!
+//! Real compute: when the PJRT engine is available the app executes the
+//! AOT Pallas kernel (the variant closest to the requested intensity) and
+//! validates the output against a scalar Rust reference — that validation
+//! is the Table-I `success` column. The *simulated* time-to-solution maps
+//! the workload's FLOPs onto the target machine's modelled GPU throughput
+//! (generation, software stage, frequency, node count), so runs on JEDI
+//! vs JURECA differ exactly as Fig. 5 expects while the numerics stay
+//! real.
+//!
+//! Output files follow §II-A: `logmap.out` (results + `time:` line, the
+//! harness analysis target) and `logmap.stats` (kernel metrics).
+
+use super::{AppOutput, AppProfile, CmdLine, ExecCtx};
+use crate::cluster::MetricClass;
+use crate::util::json::Json;
+
+/// Elements per workload unit.
+pub const ELEMS_PER_WORKLOAD: u64 = 1 << 28;
+/// Iterations per intensity unit.
+pub const ITERS_PER_INTENSITY: f64 = 5000.0;
+/// Fraction of GPU FP32 peak a tuned logmap kernel attains (VPU-bound,
+/// fused multiply-add chain; see DESIGN.md §Hardware-Adaptation).
+pub const GPU_EFFICIENCY: f64 = 0.22;
+
+/// logmap is compute-dominated: high utilisation, mildly memory-bound.
+pub const PROFILE: AppProfile = AppProfile {
+    utilization: 0.95,
+    mem_bound: 0.25,
+};
+
+/// Scalar reference for validation (mirrors kernels/ref.py in f32).
+pub fn logmap_scalar(x: f32, r: f32, iters: u64) -> f32 {
+    let mut v = x;
+    for _ in 0..iters {
+        v = r * v * (1.0 - v);
+    }
+    v
+}
+
+pub fn run(cmd: &CmdLine, ctx: &mut ExecCtx) -> AppOutput {
+    let workload = cmd.flag_f64("workload", 1.0);
+    let intensity = cmd.flag_f64("intensity", 1.0);
+    if workload <= 0.0 || intensity <= 0.0 {
+        return AppOutput::failure("logmap: workload and intensity must be positive");
+    }
+    let elems = (workload * ELEMS_PER_WORKLOAD as f64) as u64;
+    let iters = (intensity * ITERS_PER_INTENSITY) as u64;
+    // kernel-variant intensity for the PJRT validation run (AOT grid is
+    // {128, 512, 2048}; see python/compile/aot.py)
+    let kernel_iters = (intensity * 1000.0) as u64;
+    let flops = 3 * elems * iters;
+
+    // ---- simulated time-to-solution on the target machine -------------
+    let m = ctx.env.machine;
+    let rate_gflops = m.gpu_gen.peak_tflops() * 1000.0 // GFLOP/s per GPU
+        * GPU_EFFICIENCY
+        * ctx.env.factor(MetricClass::Compute)
+        * ctx.freq_perf(PROFILE)
+        * ctx.total_gpus() as f64;
+    // embarrassingly parallel map + one final 32-byte/elem-block allreduce
+    let compute_s = flops as f64 / (rate_gflops * 1e9);
+    let comm_s = m
+        .network
+        .allreduce_time_us(4 * 1024, ctx.total_gpus())
+        / 1e6;
+    let setup_s = 0.2; // input generation + output write
+    let noise = ctx.env.noise(ctx.rng);
+    let runtime_s = (compute_s + comm_s + setup_s) * noise;
+
+    // ---- real kernel execution + validation ---------------------------
+    let mut metrics = Json::obj()
+        .set("workload", workload)
+        .set("intensity", intensity)
+        .set("elements", elems)
+        .set("kernel_iters", iters)
+        .set("gflops", flops as f64 / runtime_s / 1e9);
+    let mut success = true;
+    let mut validated = "model";
+    if let Some(engine) = ctx.engine.as_deref_mut() {
+        if let Some(entry) = engine.manifest.best_logmap(kernel_iters, 65536).cloned() {
+            let n = entry.n();
+            let x: Vec<f32> = (0..n)
+                .map(|i| 0.05 + 0.9 * (i as f32 / n as f32))
+                .collect();
+            let r_val = 3.0 + (intensity as f32).fract().max(0.5);
+            let r = vec![r_val; n];
+            match engine.run_logmap(&entry.name, &x, &r) {
+                Ok((out, summary, wall)) => {
+                    // validate a sample of outputs against the scalar ref
+                    let mut ok = true;
+                    for &i in &[0usize, n / 3, n / 2, n - 1] {
+                        let want = logmap_scalar(x[i], r_val, entry.iters());
+                        if (out[i] - want).abs() > 1e-3 * want.abs().max(1e-3) {
+                            ok = false;
+                        }
+                    }
+                    success = ok;
+                    validated = "pjrt";
+                    metrics.insert("host_wall_ms", wall.as_secs_f64() * 1e3);
+                    metrics.insert("kernel_mean", summary[0] as f64);
+                    metrics.insert(
+                        "host_gflops",
+                        entry.flops as f64 / wall.as_secs_f64().max(1e-9) / 1e9,
+                    );
+                }
+                Err(e) => {
+                    success = false;
+                    metrics.insert("error", format!("pjrt: {e}"));
+                }
+            }
+        }
+    }
+    metrics.insert("validation", validated);
+
+    let logmap_out = format!(
+        "logmap v1.0\nworkload: {workload}\nintensity: {intensity}\nelements: {elems}\n\
+         validation: {}\ntime: {runtime_s:.6}\n",
+        if success { "PASSED" } else { "FAILED" }
+    );
+    let logmap_stats = format!(
+        "kernel_time: {:.6}\ncomm_time: {:.6}\nsetup_time: {:.6}\ngflops: {:.3}\n",
+        compute_s * noise,
+        comm_s * noise,
+        setup_s * noise,
+        flops as f64 / runtime_s / 1e9,
+    );
+
+    AppOutput {
+        runtime_s,
+        success,
+        metrics,
+        files: vec![
+            ("logmap.out".into(), logmap_out),
+            ("logmap.stats".into(), logmap_stats),
+        ],
+        profile: PROFILE,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::with_ctx;
+    use super::super::{run_command, CmdLine};
+    use super::*;
+
+    #[test]
+    fn produces_paper_output_files() {
+        with_ctx("jedi", 1, |ctx| {
+            let out = run_command("logmap --workload 6 --intensity 2.4", ctx);
+            assert!(out.success);
+            assert!(out.runtime_s > 0.0);
+            let names: Vec<&str> = out.files.iter().map(|(n, _)| n.as_str()).collect();
+            assert_eq!(names, vec!["logmap.out", "logmap.stats"]);
+            let content = &out.files[0].1;
+            assert!(content.contains("time: "));
+            assert!(content.contains("validation: PASSED"));
+        });
+    }
+
+    #[test]
+    fn runtime_scales_with_workload_and_intensity() {
+        with_ctx("jedi", 1, |ctx| {
+            let small = run_command("logmap --workload 1 --intensity 1", ctx).runtime_s;
+            let big_w = run_command("logmap --workload 8 --intensity 1", ctx).runtime_s;
+            let big_i = run_command("logmap --workload 1 --intensity 8", ctx).runtime_s;
+            assert!(big_w > 2.0 * small, "w: {big_w} vs {small}");
+            assert!(big_i > 2.0 * small, "i: {big_i} vs {small}");
+        });
+    }
+
+    #[test]
+    fn strong_scaling_speedup() {
+        let t1 = with_ctx("jedi", 1, |ctx| {
+            run_command("logmap --workload 32 --intensity 4", ctx).runtime_s
+        });
+        let t8 = with_ctx("jedi", 8, |ctx| {
+            run_command("logmap --workload 32 --intensity 4", ctx).runtime_s
+        });
+        let speedup = t1 / t8;
+        assert!(speedup > 4.0 && speedup < 8.5, "speedup={speedup}");
+    }
+
+    #[test]
+    fn generational_gap_matches_fig5_premise() {
+        let t_jedi = with_ctx("jedi", 4, |ctx| {
+            run_command("logmap --workload 32 --intensity 4", ctx).runtime_s
+        });
+        let t_jwb = with_ctx("juwels-booster", 4, |ctx| {
+            run_command("logmap --workload 32 --intensity 4", ctx).runtime_s
+        });
+        assert!(
+            t_jwb / t_jedi > 2.0,
+            "Hopper-class should beat Ampere >2x: {t_jwb} vs {t_jedi}"
+        );
+    }
+
+    #[test]
+    fn frequency_throttling_slows_compute() {
+        let nominal = with_ctx("jedi", 1, |ctx| {
+            run_command("logmap --workload 8 --intensity 4", ctx).runtime_s
+        });
+        let throttled = with_ctx("jedi", 1, |ctx| {
+            ctx.freq_mhz = Some(990.0);
+            run_command("logmap --workload 8 --intensity 4", ctx).runtime_s
+        });
+        assert!(throttled > 1.3 * nominal, "{throttled} vs {nominal}");
+    }
+
+    #[test]
+    fn rejects_bad_args() {
+        with_ctx("jedi", 1, |ctx| {
+            let out = run_command("logmap --workload 0 --intensity 1", ctx);
+            assert!(!out.success);
+        });
+    }
+
+    #[test]
+    fn pjrt_validation_when_artifacts_present() {
+        let dir = crate::runtime::manifest::default_dir();
+        if !dir.join("manifest.json").exists() {
+            return;
+        }
+        let mut engine = crate::runtime::Engine::load_default().unwrap();
+        super::super::testutil::with_ctx_engine("jedi", 1, Some(&mut engine), |ctx| {
+            let cmd = CmdLine::parse("logmap --workload 2 --intensity 0.5").unwrap();
+            let out = run(&cmd, ctx);
+            assert!(out.success);
+            assert_eq!(out.metrics.str_of("validation"), Some("pjrt"));
+            assert!(out.metrics.f64_of("host_wall_ms").unwrap() > 0.0);
+        });
+    }
+}

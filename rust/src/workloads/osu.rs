@@ -1,0 +1,160 @@
+//! OSU-microbenchmark-like MPI pt2pt benchmark (Fig. 6's workload).
+//!
+//! `osu_bw` sweeps message sizes and reports bandwidth per size from the
+//! machine's UCX network model; `UCX_RNDV_THRESH` injected through the
+//! environment (feature injection, §V-A.3) moves the eager/rendezvous
+//! protocol switch and therefore the bandwidth curve — reproducing the
+//! exact experiment of Fig. 6.
+
+use super::{parse_rndv_thresh, AppOutput, AppProfile, CmdLine, ExecCtx};
+use crate::util::json::Json;
+
+pub const PROFILE: AppProfile = AppProfile {
+    utilization: 0.25,
+    mem_bound: 0.15,
+};
+
+/// Message sizes swept by osu_bw: powers of two, 1 B .. 4 MiB.
+pub fn message_sizes() -> Vec<u64> {
+    (0..=22).map(|p| 1u64 << p).collect()
+}
+
+pub fn run(cmd: &CmdLine, ctx: &mut ExecCtx) -> AppOutput {
+    let is_latency = cmd.binary.contains("latency");
+    let link = &ctx.env.machine.network;
+    let thresh = parse_rndv_thresh(&ctx.env_vars, link.default_rndv_thresh);
+    let net_factor = ctx
+        .env
+        .factor(crate::cluster::MetricClass::Network);
+
+    let mut metrics = Json::obj()
+        .set("rndv_thresh", thresh)
+        .set("network", link.name.as_str());
+    let mut table = Json::arr();
+    let mut out_lines = vec![if is_latency {
+        "# OSU MPI Latency Test (sim)\n# Size      Latency (us)".to_string()
+    } else {
+        "# OSU MPI Bandwidth Test (sim)\n# Size      Bandwidth (MB/s)".to_string()
+    }];
+
+    let mut total_time_s = 2.0; // startup/teardown
+    for size in message_sizes() {
+        let noise = ctx.rng.jitter(0.004);
+        if is_latency {
+            let lat = link.pt2pt_time_us(size, thresh) / net_factor * noise;
+            table.push(Json::Arr(vec![Json::Num(size as f64), Json::Num(lat)]));
+            out_lines.push(format!("{size:<12}{lat:.2}"));
+        } else {
+            let bw = ctx.env.pt2pt_bw_mbs(size, thresh) * noise;
+            table.push(Json::Arr(vec![Json::Num(size as f64), Json::Num(bw)]));
+            out_lines.push(format!("{size:<12}{bw:.2}"));
+            // each size runs a window of 64 messages x ~100 iterations
+            total_time_s += 6400.0 * link.pt2pt_time_us(size, thresh) / 1e6 / net_factor;
+        }
+    }
+    metrics.insert(if is_latency { "latency_us" } else { "bw_mbs" }, table);
+    // headline single-number metric: large-message bandwidth / small latency
+    if is_latency {
+        metrics.insert(
+            "latency_4b_us",
+            link.pt2pt_time_us(4, thresh) / net_factor,
+        );
+    } else {
+        metrics.insert("bw_peak_mbs", ctx.env.pt2pt_bw_mbs(4 << 20, thresh));
+    }
+
+    AppOutput {
+        runtime_s: total_time_s,
+        success: true,
+        metrics,
+        files: vec![(
+            if is_latency {
+                "osu_latency.out".into()
+            } else {
+                "osu_bw.out".into()
+            },
+            out_lines.join("\n") + "\n",
+        )],
+        profile: PROFILE,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::with_ctx;
+    use super::super::run_command;
+    use super::{message_sizes, run};
+
+    fn bw_curve(ctx_thresh: Option<&str>) -> Vec<(f64, f64)> {
+        with_ctx("jupiter", 2, |ctx| {
+            if let Some(t) = ctx_thresh {
+                ctx.env_vars
+                    .insert("UCX_RNDV_THRESH".into(), t.to_string());
+            }
+            let out = run_command("osu_bw", ctx);
+            assert!(out.success);
+            out.metrics
+                .get("bw_mbs")
+                .unwrap()
+                .as_arr()
+                .unwrap()
+                .iter()
+                .map(|row| {
+                    let r = row.as_arr().unwrap();
+                    (r[0].as_f64().unwrap(), r[1].as_f64().unwrap())
+                })
+                .collect()
+        })
+    }
+
+    #[test]
+    fn sweeps_all_message_sizes() {
+        let curve = bw_curve(None);
+        assert_eq!(curve.len(), 23);
+        assert_eq!(curve[0].0, 1.0);
+        assert_eq!(curve.last().unwrap().0, (4 << 20) as f64);
+        // monotone-ish increase to near line rate
+        assert!(curve.last().unwrap().1 > 40_000.0);
+    }
+
+    #[test]
+    fn threshold_changes_the_curve_fig6() {
+        let low = bw_curve(Some("1024"));
+        let high = bw_curve(Some("intra:65536,inter:1048576"));
+        // at 64 KiB: low threshold -> rendezvous, high -> eager
+        let at = |curve: &[(f64, f64)], size: f64| {
+            curve.iter().find(|(s, _)| *s == size).unwrap().1
+        };
+        let l = at(&low, 65536.0);
+        let h = at(&high, 65536.0);
+        assert!(
+            (l - h).abs() / l.min(h) > 0.04,
+            "curves must differ at mid sizes: {l} vs {h}"
+        );
+        // at 4 MiB both should be rendezvous... except the 1 MiB threshold
+        // still switches at 4 MiB, so both end near line rate
+        let l4 = at(&low, (4 << 20) as f64);
+        let h4 = at(&high, (4 << 20) as f64);
+        assert!((l4 - h4).abs() / l4 < 0.05);
+    }
+
+    #[test]
+    fn latency_mode_reports_microseconds() {
+        with_ctx("jureca", 2, |ctx| {
+            let out = run_command("osu_latency", ctx);
+            assert!(out.success);
+            let lat = out.metrics.f64_of("latency_4b_us").unwrap();
+            assert!(lat > 0.5 && lat < 10.0, "{lat}");
+        });
+    }
+
+    #[test]
+    fn files_contain_table() {
+        with_ctx("jupiter", 2, |ctx| {
+            let out = run_command("osu_bw", ctx);
+            let content = &out.files[0].1;
+            assert!(content.contains("# Size"));
+            assert!(content.lines().count() > 20);
+        });
+    }
+}

@@ -1,0 +1,240 @@
+//! Parameterised scalable application: the generic performance model
+//! behind the JUREAP portfolio and the scaling figures (Figs. 5 & 7).
+//!
+//! `simapp --flops F --serial 0.05 --membound 0.5 --comm-mb 64 --steps 50
+//!         [--weak]`
+//!
+//! Runtime model per run on machine M with N nodes:
+//!
+//! ```text
+//! T = serial + parallel_compute / (N·G·rate) + steps · allreduce(comm, N·G)
+//! rate = peak(M) · mix-efficiency(membound) · stage/event factors · f(freq)
+//! weak scaling: total work scales with N (per-node work constant)
+//! ```
+//!
+//! This is the standard Amdahl + collective-overhead decomposition; it
+//! produces the strong-scaling roll-off with 80%-band crossings of
+//! Fig. 5 and the weak-scaling efficiency decay of Fig. 7.
+
+use super::{AppOutput, AppProfile, CmdLine, ExecCtx};
+use crate::cluster::MetricClass;
+use crate::util::json::Json;
+
+/// Model parameters of one synthetic application.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AppModel {
+    pub name: String,
+    /// Total useful work at reference size [GFLOP].
+    pub gflops_total: f64,
+    /// Amdahl serial fraction.
+    pub serial_frac: f64,
+    /// Memory-bound fraction (shapes rate + frequency response).
+    pub mem_bound: f64,
+    /// Bytes all-reduced per step [MB].
+    pub comm_mb: f64,
+    /// Communication steps per run.
+    pub steps: u64,
+    /// Weak scaling: per-node work is constant.
+    pub weak: bool,
+}
+
+impl Default for AppModel {
+    fn default() -> Self {
+        AppModel {
+            name: "simapp".into(),
+            gflops_total: 50_000.0,
+            serial_frac: 0.02,
+            mem_bound: 0.5,
+            comm_mb: 32.0,
+            steps: 50,
+            weak: false,
+        }
+    }
+}
+
+impl AppModel {
+    pub fn from_cmd(cmd: &CmdLine) -> AppModel {
+        AppModel {
+            name: cmd
+                .flag_str("name")
+                .unwrap_or("simapp")
+                .to_string(),
+            gflops_total: cmd.flag_f64("flops", 50_000.0),
+            serial_frac: cmd.flag_f64("serial", 0.02).clamp(0.0, 1.0),
+            mem_bound: cmd.flag_f64("membound", 0.5).clamp(0.0, 1.0),
+            comm_mb: cmd.flag_f64("comm-mb", 32.0).max(0.0),
+            steps: cmd.flag_u64("steps", 50),
+            weak: cmd.flag_str("weak").is_some(),
+        }
+    }
+
+    pub fn profile(&self) -> AppProfile {
+        AppProfile {
+            utilization: 0.95 - 0.25 * self.mem_bound,
+            mem_bound: self.mem_bound,
+        }
+    }
+
+    /// Effective per-GPU rate [GFLOP/s] on this machine/env/frequency.
+    pub fn rate_per_gpu(&self, ctx: &ExecCtx) -> f64 {
+        let m = ctx.env.machine;
+        // mix efficiency: compute-bound work near FP32 peak fraction,
+        // memory-bound work at the bandwidth-derived rate (1 flop / 8 B).
+        let compute_rate = m.gpu_gen.peak_tflops() * 1000.0 * 0.30;
+        let membw_rate = m.gpu_gen.hbm_bw_gbs() / 8.0;
+        let mixed = 1.0
+            / ((1.0 - self.mem_bound) / compute_rate + self.mem_bound / membw_rate);
+        mixed
+            * ctx.env.factor(MetricClass::Compute).min(ctx.env.factor(MetricClass::MemBw))
+            * ctx.freq_perf(self.profile())
+    }
+
+    /// Modelled runtime [s] for this context (no noise).
+    pub fn runtime_s(&self, ctx: &ExecCtx) -> f64 {
+        let gpus = ctx.total_gpus() as f64;
+        let work = if self.weak {
+            self.gflops_total * ctx.nodes as f64
+        } else {
+            self.gflops_total
+        };
+        let rate = self.rate_per_gpu(ctx);
+        // Serial (non-scalable) portion: defined on the *reference* size —
+        // under weak scaling each node's serial work runs concurrently.
+        let serial = self.serial_frac * self.gflops_total / rate;
+        let parallel = (1.0 - self.serial_frac) * work / (gpus * rate);
+        let comm = self.steps as f64
+            * ctx
+                .env
+                .machine
+                .network
+                .allreduce_time_us((self.comm_mb * 1e6) as u64, gpus as u64)
+            / 1e6
+            / ctx.env.factor(MetricClass::Network);
+        serial + parallel + comm + 1.0 // + init/teardown
+    }
+}
+
+pub fn run(cmd: &CmdLine, ctx: &mut ExecCtx) -> AppOutput {
+    let model = AppModel::from_cmd(cmd);
+    let base = model.runtime_s(ctx);
+    let runtime_s = base * ctx.env.noise(ctx.rng);
+    let gpus = ctx.total_gpus() as f64;
+    let work = if model.weak {
+        model.gflops_total * ctx.nodes as f64
+    } else {
+        model.gflops_total
+    };
+    let metrics = Json::obj()
+        .set("app", model.name.as_str())
+        .set("tts", runtime_s)
+        .set("gflops_rate", work / runtime_s)
+        .set("per_gpu_gflops", work / runtime_s / gpus)
+        .set("mem_bound", model.mem_bound)
+        .set(
+            "scaling_mode",
+            if model.weak { "weak" } else { "strong" },
+        );
+    let out = format!(
+        "{} completed\nwork: {work:.1} GFLOP\ntime: {runtime_s:.4}\n",
+        model.name
+    );
+    AppOutput {
+        runtime_s,
+        success: true,
+        metrics,
+        files: vec![("app.out".into(), out)],
+        profile: model.profile(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::with_ctx;
+    use super::super::{run_command, CmdLine};
+    use super::*;
+
+    fn model_runtime(machine: &str, nodes: u64, extra: &str) -> f64 {
+        with_ctx(machine, nodes, |ctx| {
+            let cmd = CmdLine::parse(&format!("simapp --flops 200000 {extra}")).unwrap();
+            AppModel::from_cmd(&cmd).runtime_s(ctx)
+        })
+    }
+
+    #[test]
+    fn strong_scaling_rolls_off() {
+        // speedup grows but efficiency decays with node count (Fig. 5)
+        let t1 = model_runtime("juwels-booster", 1, "--comm-mb 64 --steps 100");
+        let t4 = model_runtime("juwels-booster", 4, "--comm-mb 64 --steps 100");
+        let t32 = model_runtime("juwels-booster", 32, "--comm-mb 64 --steps 100");
+        let s4 = t1 / t4;
+        let s32 = t1 / t32;
+        assert!(s4 > 2.8 && s4 <= 4.0, "s4={s4}");
+        assert!(s32 > 8.0 && s32 < 28.0, "s32={s32}");
+        let eff32 = s32 / 32.0;
+        assert!(eff32 < 0.85, "efficiency must roll off: {eff32}");
+    }
+
+    #[test]
+    fn weak_scaling_efficiency_decays_gently() {
+        let t1 = model_runtime("jedi", 1, "--weak --comm-mb 64 --steps 100");
+        let t16 = model_runtime("jedi", 16, "--weak --comm-mb 64 --steps 100");
+        let eff = t1 / t16;
+        assert!(eff > 0.60 && eff < 1.0, "weak efficiency={eff}");
+    }
+
+    #[test]
+    fn generational_speedup_for_compute_bound() {
+        let ampere = model_runtime("juwels-booster", 4, "--membound 0.2");
+        let hopper = model_runtime("jedi", 4, "--membound 0.2");
+        assert!(ampere / hopper > 2.0, "{ampere} vs {hopper}");
+    }
+
+    #[test]
+    fn stage_2025_is_slower() {
+        use crate::cluster::{Cluster, SoftwareStage};
+        use crate::util::timeutil::SimTime;
+        let cluster = Cluster::standard();
+        let run_stage = |stage: &SoftwareStage| {
+            let env = cluster.env_at("jedi", stage, SimTime(0)).unwrap();
+            let mut rng = crate::util::prng::Prng::new(1);
+            let ctx = super::super::ExecCtx {
+                env: &env,
+                nodes: 8,
+                tasks_per_node: 4,
+                threads_per_task: 8,
+                env_vars: Default::default(),
+                freq_mhz: None,
+                calibration: Default::default(),
+                rng: &mut rng,
+                engine: None,
+            };
+            AppModel {
+                comm_mb: 128.0,
+                steps: 200,
+                ..Default::default()
+            }
+            .runtime_s(&ctx)
+        };
+        let t2026 = run_stage(&SoftwareStage::stage_2026());
+        let t2025 = run_stage(&SoftwareStage::stage_2025());
+        assert!(t2025 > 1.03 * t2026, "{t2025} vs {t2026}");
+    }
+
+    #[test]
+    fn app_runs_and_reports() {
+        with_ctx("jedi", 2, |ctx| {
+            let out = run_command("simapp --name neuroflow --flops 10000", ctx);
+            assert!(out.success);
+            assert_eq!(out.metrics.str_of("app"), Some("neuroflow"));
+            assert!(out.metrics.f64_of("tts").unwrap() > 0.0);
+        });
+    }
+
+    #[test]
+    fn membound_lowers_sweet_spot_profile() {
+        let cmd = CmdLine::parse("simapp --membound 0.9").unwrap();
+        let m = AppModel::from_cmd(&cmd);
+        assert!(m.profile().mem_bound > 0.8);
+        assert!(m.profile().utilization < 0.8);
+    }
+}

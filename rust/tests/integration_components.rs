@@ -1,0 +1,176 @@
+//! Integration: multi-component pipelines — execution followed by
+//! post-processing components in a single CI configuration, dispatched
+//! through the world exactly as a repository's `.gitlab-ci.yml` wires
+//! them (paper §V-A: execution and post-processing orchestrators are
+//! separate, communicate only via recorded protocol data).
+
+use exacb::ci::{CiJobState, Trigger};
+use exacb::coordinator::{BenchmarkRepo, World};
+use exacb::util::table::Table;
+use exacb::util::timeutil::SimTime;
+
+/// Repo whose single pipeline executes a scaling study AND runs the
+/// scalability post-processor over the freshly recorded data.
+fn combined_repo() -> BenchmarkRepo {
+    let jube = "name: combo\nparametersets:\n  - name: run\n    parameters:\n      - name: nodes\n        values: [1, 2, 4, 8, 16]\nsteps:\n  - name: execute\n    use: [run]\n    remote: true\n    do:\n      - simapp --name combo --flops 300000 --comm-mb 48 --steps 100\n";
+    let ci = r#"
+include:
+  - component: execution@v3
+    inputs:
+      prefix: "jedi.combo"
+      machine: "jedi"
+      queue: "all"
+      project: "cjsc"
+      budget: "zam"
+      jube_file: "b.yml"
+  - component: scalability@v3
+    inputs:
+      prefix: "jedi.combo.scaling"
+      selector: "jedi.combo"
+      mode: "strong"
+"#;
+    BenchmarkRepo::new("combo")
+        .with_file("b.yml", jube)
+        .with_file(".gitlab-ci.yml", ci)
+}
+
+#[test]
+fn execute_then_postprocess_in_one_pipeline() {
+    let mut world = World::new(21);
+    world.add_repo(combined_repo());
+    let pid = world.run_pipeline("combo", Trigger::Manual).unwrap();
+    let p = world.pipeline(pid).unwrap();
+    assert!(p.succeeded(), "{:?}", p.jobs.iter().map(|j| (&j.name, j.state, &j.log)).collect::<Vec<_>>());
+    // stages: setup, execute, record, scalability
+    assert_eq!(p.jobs.len(), 4);
+    let scaling = p.job("jedi.combo.scaling.scalability").unwrap();
+    assert_eq!(scaling.state, CiJobState::Success);
+    let csv = Table::from_csv(scaling.artifact("scaling.csv").unwrap()).unwrap();
+    assert_eq!(csv.len(), 5); // one row per node count
+    // efficiency column decays monotonically
+    let effs: Vec<f64> = csv
+        .column("efficiency")
+        .unwrap()
+        .iter()
+        .map(|v| v.parse().unwrap())
+        .collect();
+    for w in effs.windows(2) {
+        assert!(w[1] <= w[0] + 1e-9, "{effs:?}");
+    }
+    assert!(scaling.artifact("scaling.svg").unwrap().contains("<svg"));
+}
+
+#[test]
+fn daily_series_plus_timeseries_component() {
+    // a repo that runs daily and post-processes its own series on the
+    // last day — the Fig. 3 shape, through the component dispatcher.
+    let jube = "name: daily\nsteps:\n  - name: execute\n    remote: true\n    do:\n      - babelstream\n";
+    let exec_ci = r#"
+include:
+  - component: execution@v3
+    inputs:
+      prefix: "jupiter.daily"
+      machine: "jupiter"
+      queue: "all"
+      project: "cjsc"
+      budget: "zam"
+      jube_file: "b.yml"
+"#;
+    let analysis_ci = r#"
+include:
+  - component: time-series@v3
+    inputs:
+      prefix: "jupiter.daily"
+      data_labels: [ "bw_copy", "bw_triad" ]
+      ylabel: [ "Bandwidth / MB/s" ]
+"#;
+    let mut world = World::new(22);
+    world.add_repo(
+        BenchmarkRepo::new("daily")
+            .with_file("b.yml", jube)
+            .with_file(".gitlab-ci.yml", exec_ci),
+    );
+    for d in 0..8 {
+        world.advance_to(SimTime::from_days(d).add_secs(3 * 3600));
+        world.run_pipeline("daily", Trigger::Scheduled).unwrap();
+    }
+    // switch the repo's CI config to the analysis component (a commit
+    // changing .gitlab-ci.yml) and run once more
+    {
+        let repo = world.repos.get_mut("daily").unwrap();
+        for (path, content) in repo.files.iter_mut() {
+            if path == ".gitlab-ci.yml" {
+                *content = analysis_ci.to_string();
+            }
+        }
+    }
+    let pid = world.run_pipeline("daily", Trigger::Manual).unwrap();
+    let p = world.pipeline(pid).unwrap();
+    assert!(p.succeeded());
+    let job = &p.jobs[0];
+    let csv = Table::from_csv(job.artifact("timeseries.csv").unwrap()).unwrap();
+    assert_eq!(csv.len(), 2); // two labels
+    assert_eq!(csv.rows[0][1], "8"); // 8 daily points each
+    // stable verdict for both kernels on an event-free machine
+    assert_eq!(csv.rows[0][5], "true");
+    assert_eq!(csv.rows[1][5], "true");
+}
+
+#[test]
+fn component_catalog_rejects_unvalidated_pipelines_early() {
+    // typo'd input never reaches the scheduler
+    let ci = r#"
+include:
+  - component: execution@v3
+    inputs:
+      prefix: "x"
+      machine: "jedi"
+      jube_file: "b.yml"
+      qeueu: "all"
+"#;
+    let mut world = World::new(23);
+    world.add_repo(
+        BenchmarkRepo::new("typo")
+            .with_file("b.yml", "name: t\nsteps:\n  - name: e\n    do: [true]\n")
+            .with_file(".gitlab-ci.yml", ci),
+    );
+    let pid = world.run_pipeline("typo", Trigger::Manual).unwrap();
+    let p = world.pipeline(pid).unwrap();
+    assert!(!p.succeeded());
+    assert!(p.jobs[0].log[0].contains("unknown input 'qeueu'"), "{:?}", p.jobs[0].log);
+    // nothing was submitted to any batch system
+    for bs in world.batch.values() {
+        assert_eq!(bs.records().len(), 0);
+    }
+}
+
+#[test]
+fn energy_component_through_dispatcher() {
+    let jube = "name: en\nsteps:\n  - name: execute\n    remote: true\n    do:\n      - simapp --name en --flops 150000 --membound 0.5 --steps 30\n";
+    let ci = r#"
+include:
+  - component: jureap/energy@v3
+    inputs:
+      prefix: "jedi.en"
+      machine: "jedi"
+      queue: "all"
+      project: "cjsc"
+      budget: "zam"
+      jube_file: "b.yml"
+      frequencies: [495, 990, 1485, 1980]
+"#;
+    let mut world = World::new(24);
+    world.add_repo(
+        BenchmarkRepo::new("en")
+            .with_file("b.yml", jube)
+            .with_file(".gitlab-ci.yml", ci),
+    );
+    let pid = world.run_pipeline("en", Trigger::Manual).unwrap();
+    let p = world.pipeline(pid).unwrap();
+    // 4 frequencies x 3 stages + 1 analysis job
+    assert_eq!(p.jobs.len(), 13, "{:?}", p.jobs.iter().map(|j| &j.name).collect::<Vec<_>>());
+    let analysis = p.jobs.last().unwrap();
+    assert_eq!(analysis.state, CiJobState::Success, "{:?}", analysis.log);
+    let spot = analysis.output.f64_of("sweet_spot_mhz").unwrap();
+    assert!([495.0, 990.0, 1485.0].contains(&spot), "spot={spot}");
+}

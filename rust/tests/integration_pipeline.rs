@@ -1,0 +1,223 @@
+//! Integration: CI pipeline → scheduler → workloads → protocol → store,
+//! including failure injection across layers.
+
+use exacb::ci::{CiJobState, Trigger};
+use exacb::coordinator::{BenchmarkRepo, World};
+use exacb::protocol::Report;
+use exacb::util::table::Table;
+use exacb::util::timeutil::SimTime;
+
+fn scaling_repo(machine: &str, queue: &str) -> BenchmarkRepo {
+    let jube = "name: scal\nparametersets:\n  - name: run\n    parameters:\n      - name: nodes\n        values: [1, 2, 4, 8]\nsteps:\n  - name: execute\n    use: [run]\n    remote: true\n    do:\n      - simapp --name scal --flops 400000 --comm-mb 64 --steps 120\n";
+    let ci = format!(
+        r#"
+include:
+  - component: execution@v3
+    inputs:
+      prefix: "{machine}.scal"
+      machine: "{machine}"
+      queue: "{queue}"
+      project: "cjsc"
+      budget: "zam"
+      jube_file: "b.yml"
+"#
+    );
+    BenchmarkRepo::new("scal")
+        .with_file("b.yml", jube)
+        .with_file(".gitlab-ci.yml", &ci)
+}
+
+#[test]
+fn parameter_study_flows_to_table_and_store() {
+    let mut world = World::new(1);
+    world.add_repo(scaling_repo("jedi", "all"));
+    let pid = world.run_pipeline("scal", Trigger::Manual).unwrap();
+    let p = world.pipeline(pid).unwrap();
+    assert!(p.succeeded());
+
+    // results.csv has 4 rows with decreasing runtimes
+    let csv = p
+        .job("jedi.scal.execute")
+        .unwrap()
+        .artifact("results.csv")
+        .unwrap();
+    let t = Table::from_csv(csv).unwrap();
+    assert_eq!(t.len(), 4);
+    let runtimes: Vec<f64> = t
+        .column("runtime")
+        .unwrap()
+        .iter()
+        .map(|v| v.parse().unwrap())
+        .collect();
+    assert!(runtimes[3] < runtimes[0]);
+    // jobids are distinct scheduler jobs
+    let mut jobids = t.column("jobid").unwrap();
+    jobids.dedup();
+    assert_eq!(jobids.len(), 4);
+
+    // protocol report on the branch parses and matches
+    let repo = world.repo("scal").unwrap();
+    let doc = repo
+        .store
+        .read("exacb.data", &format!("jedi.scal/{pid}/report.json"))
+        .unwrap();
+    let report = Report::parse(doc).unwrap();
+    assert_eq!(report.data.len(), 4);
+    assert_eq!(
+        report.data.iter().map(|e| e.nodes).collect::<Vec<_>>(),
+        vec![1, 2, 4, 8]
+    );
+}
+
+#[test]
+fn multi_machine_comparison_through_components() {
+    // run the same benchmark on two systems, then post-process through
+    // the machine-comparison component on a meta-repo.
+    let mut world = World::new(2);
+    for (m, q) in [("jedi", "all"), ("jureca", "dc-gpu")] {
+        let mut repo = scaling_repo(m, q);
+        repo.name = format!("scal-{m}");
+        world.add_repo(repo);
+        world
+            .run_pipeline(&format!("scal-{m}"), Trigger::Manual)
+            .unwrap();
+    }
+    // merge both stores into one meta-repo (the paper's cross-repo
+    // comparison pulls from multiple exacb.data branches)
+    let mut meta = BenchmarkRepo::new("meta");
+    for m in ["jedi", "jureca"] {
+        let src = world.repo(&format!("scal-{m}")).unwrap();
+        let files = src.store.read_all("exacb.data", "");
+        let files: Vec<(String, String)> = files;
+        meta.store
+            .commit("exacb.data", &files, "merge", SimTime(0));
+    }
+    let inputs = exacb::util::json::Json::obj()
+        .set("prefix", "evaluation.jedi")
+        .set("selector", vec!["jedi.scal", "jureca.scal"]);
+    let job = {
+        let resolved = world
+            .registry
+            .get("machine-comparison@v3")
+            .unwrap()
+            .resolve(&inputs)
+            .unwrap();
+        exacb::coordinator::postproc::run_machine_comparison(&mut world, &meta, &resolved)
+    };
+    assert_eq!(job.state, CiJobState::Success, "{:?}", job.log);
+    let csv = Table::from_csv(job.artifact("comparison.csv").unwrap()).unwrap();
+    // both systems, 4 node counts each
+    assert_eq!(csv.len(), 8);
+    let svg = job.artifact("comparison.svg").unwrap();
+    assert!(svg.contains("jureca (/2)")); // Ampere halved, as in Fig. 5
+}
+
+#[test]
+fn runner_failure_fails_setup_but_leaves_no_partial_data() {
+    let mut world = World::new(3);
+    world.add_repo(scaling_repo("jedi", "ghost-queue"));
+    let pid = world.run_pipeline("scal", Trigger::Manual).unwrap();
+    let p = world.pipeline(pid).unwrap();
+    assert!(!p.succeeded());
+    assert_eq!(p.jobs.len(), 1);
+    assert_eq!(p.jobs[0].state, CiJobState::Failed);
+    // nothing recorded
+    let repo = world.repo("scal").unwrap();
+    assert!(!repo.store.branch_exists("exacb.data"));
+}
+
+#[test]
+fn budget_exhaustion_mid_campaign() {
+    let mut world = World::new(4);
+    // tight budget: the first pipeline (~34 core-hours across its 4
+    // scaling jobs) fits, the second exhausts mid-study
+    world
+        .batch
+        .get_mut("jedi")
+        .unwrap()
+        .accounts
+        .add_budget("zam", 40.0); // overwrite with 40 core-hours
+    world.add_repo(scaling_repo("jedi", "all"));
+    let first = world.run_pipeline("scal", Trigger::Scheduled).unwrap();
+    assert!(world.pipeline(first).unwrap().succeeded());
+    // consume: the first run already charged > 10 core-hours
+    let second = world.run_pipeline("scal", Trigger::Scheduled).unwrap();
+    let p2 = world.pipeline(second).unwrap();
+    assert!(!p2.succeeded(), "second run must fail on exhausted budget");
+    assert!(p2.jobs[0].log[0].contains("exhausted"), "{:?}", p2.jobs[0].log);
+}
+
+#[test]
+fn crashed_application_marks_failed_but_still_records() {
+    let mut world = World::new(5);
+    let jube = "name: crashy\nsteps:\n  - name: execute\n    remote: true\n    do:\n      - nonexistent-binary --x\n";
+    let ci = r#"
+include:
+  - component: execution@v3
+    inputs:
+      prefix: "jedi.crashy"
+      machine: "jedi"
+      queue: "all"
+      project: "cjsc"
+      budget: "zam"
+      jube_file: "b.yml"
+"#;
+    world.add_repo(
+        BenchmarkRepo::new("crashy")
+            .with_file("b.yml", jube)
+            .with_file(".gitlab-ci.yml", ci),
+    );
+    let pid = world.run_pipeline("crashy", Trigger::Manual).unwrap();
+    let p = world.pipeline(pid).unwrap();
+    assert!(!p.succeeded());
+    // execute failed but record still happened ("robust against partial
+    // or incremental data generation"): the report carries success=false
+    let repo = world.repo("crashy").unwrap();
+    let doc = repo
+        .store
+        .read("exacb.data", &format!("jedi.crashy/{pid}/report.json"))
+        .unwrap();
+    let report = Report::parse(doc).unwrap();
+    assert_eq!(report.data.len(), 1);
+    assert!(!report.data[0].success);
+}
+
+#[test]
+fn daily_schedule_advances_sim_clock_not_host_clock() {
+    let mut world = World::new(6);
+    world.add_repo(scaling_repo("jedi", "all"));
+    let host_start = std::time::Instant::now();
+    for d in 0..30 {
+        world.advance_to(SimTime::from_days(d).add_secs(3 * 3600));
+        world.run_pipeline("scal", Trigger::Scheduled).unwrap();
+    }
+    // 30 simulated days in a few host seconds
+    assert!(world.now() >= SimTime::from_days(29));
+    assert!(host_start.elapsed().as_secs() < 60);
+    // 30 reports accumulated on the branch, all retrievable a-posteriori
+    let repo = world.repo("scal").unwrap();
+    assert_eq!(repo.store.history("exacb.data").len(), 30);
+    let (set, _) =
+        exacb::analysis::ReportSet::load(&repo.store, "exacb.data", "jedi.scal/");
+    assert_eq!(set.len(), 30);
+}
+
+#[test]
+fn cross_trigger_between_repositories() {
+    // §IV-C: "coordinated execution of benchmarks across multiple
+    // repositories through cross-triggered CI pipelines"
+    let mut world = World::new(8);
+    world.add_repo(scaling_repo("jedi", "all"));
+    let mut repo2 = scaling_repo("jureca", "dc-gpu");
+    repo2.name = "scal2".into();
+    world.add_repo(repo2);
+    let p1 = world.run_pipeline("scal", Trigger::Manual).unwrap();
+    let p2 = world
+        .run_pipeline("scal2", Trigger::Cross { from_pipeline: p1 })
+        .unwrap();
+    assert!(world.pipeline(p2).unwrap().succeeded());
+    assert_eq!(
+        world.pipeline(p2).unwrap().trigger,
+        Trigger::Cross { from_pipeline: p1 }
+    );
+}

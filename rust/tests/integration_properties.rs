@@ -1,0 +1,248 @@
+//! Property-based integration tests on coordinator invariants
+//! (DESIGN.md §7), via the in-repo property harness (util::prop).
+
+use exacb::prop_assert;
+use exacb::protocol::{DataEntry, Report};
+use exacb::scheduler::{AccountManager, BatchSystem, JobResult, JobSpec};
+use exacb::util::json::Json;
+use exacb::util::prop::{check, Gen};
+use exacb::util::timeutil::SimTime;
+
+/// The scheduler never over-allocates nodes: at every point of a random
+/// submission schedule, running jobs' nodes never exceed the partition.
+#[test]
+fn prop_scheduler_never_overallocates() {
+    check("scheduler never over-allocates", 60, |g: &mut Gen| {
+        let total_nodes = g.u64(2, 16);
+        let mut bs = BatchSystem::new("m", 64, AccountManager::open("a", "b", 1e12));
+        bs.add_partition("p", total_nodes);
+        let n_jobs = g.usize(1, 12);
+        let mut ids = Vec::new();
+        for _ in 0..n_jobs {
+            let nodes = g.u64(1, total_nodes);
+            let dur = g.u64(1, 5000) as f64;
+            if let Ok(id) = bs.submit(
+                JobSpec {
+                    nodes,
+                    account: "a".into(),
+                    budget: "b".into(),
+                    partition: "p".into(),
+                    walltime_limit_s: 100_000,
+                    ..Default::default()
+                },
+                Box::new(move |_| JobResult {
+                    duration_s: dur,
+                    success: true,
+                    metrics: Json::obj(),
+                    files: vec![],
+                }),
+            ) {
+                ids.push(id);
+            }
+        }
+        bs.run_until_idle();
+        // after the fact, verify no overlap ever exceeded capacity by
+        // sweeping start/end events
+        let mut events: Vec<(i64, i64)> = Vec::new(); // (time, +/- nodes)
+        for id in &ids {
+            let r = bs.record(*id).unwrap();
+            let (Some(s), Some(e)) = (r.start_time, r.end_time) else {
+                continue;
+            };
+            events.push((s.0, r.spec.nodes as i64));
+            events.push((e.0, -(r.spec.nodes as i64)));
+        }
+        events.sort_by_key(|&(t, d)| (t, d)); // process releases before grabs at same t
+        let mut in_use = 0i64;
+        for (t, d) in events {
+            in_use += d;
+            prop_assert!(
+                in_use <= total_nodes as i64,
+                "over-allocation at t={t}: {in_use} > {total_nodes}"
+            );
+        }
+        // all jobs eventually completed
+        for id in &ids {
+            prop_assert!(
+                bs.record(*id).unwrap().state.is_terminal(),
+                "job {id} not terminal"
+            );
+        }
+        Ok(())
+    });
+}
+
+/// Budget accounting conserves core-hours: total charged equals the sum
+/// over completed jobs of nodes × cores × duration.
+#[test]
+fn prop_budget_conservation() {
+    check("budget accounting conserves core-hours", 40, |g: &mut Gen| {
+        let cores = g.u64(16, 128);
+        let mut bs = BatchSystem::new("m", cores, AccountManager::open("a", "b", 1e12));
+        bs.add_partition("p", 8);
+        let n = g.usize(1, 8);
+        let mut ids = Vec::new();
+        for _ in 0..n {
+            let dur = g.u64(10, 2000) as f64;
+            let id = bs
+                .submit(
+                    JobSpec {
+                        nodes: g.u64(1, 4),
+                        account: "a".into(),
+                        budget: "b".into(),
+                        partition: "p".into(),
+                        walltime_limit_s: 100_000,
+                        ..Default::default()
+                    },
+                    Box::new(move |_| JobResult {
+                        duration_s: dur,
+                        success: true,
+                        metrics: Json::obj(),
+                        files: vec![],
+                    }),
+                )
+                .unwrap();
+            ids.push(id);
+        }
+        bs.run_until_idle();
+        let expected: f64 = ids
+            .iter()
+            .map(|id| bs.record(*id).unwrap().core_hours(cores))
+            .sum();
+        let charged = bs.accounts.total_used();
+        prop_assert!(
+            (charged - expected).abs() < 1e-6 * expected.max(1.0),
+            "charged {charged} != expected {expected}"
+        );
+        Ok(())
+    });
+}
+
+/// Protocol documents round-trip: parse(write(r)) == r for arbitrary
+/// generated reports.
+#[test]
+fn prop_protocol_roundtrip() {
+    check("protocol round-trips", 80, |g: &mut Gen| {
+        let mut r = Report::default();
+        r.reporter.tool = g.ident(8);
+        r.reporter.tool_version = format!("{}.{}", g.u64(0, 9), g.u64(0, 99));
+        r.reporter.system = g.ident(10);
+        r.reporter.timestamp = SimTime(g.i64(0, 10_000_000)).iso8601();
+        // protocol numbers are JSON numbers (f64): integers are exact up
+        // to 2^53, which the schema documents as the id range
+        r.reporter.pipeline_id = g.u64(0, 1 << 40);
+        r.reporter.seed = g.u64(0, 1 << 50);
+        r.experiment.system = r.reporter.system.clone();
+        r.experiment.variant = g.ident(6);
+        r.experiment.timestamp = r.reporter.timestamp.clone();
+        r.parameter = Json::obj().set(&g.ident(5), g.u64(0, 100));
+        let n = g.usize(0, 6);
+        for _ in 0..n {
+            let mut metrics = Json::obj();
+            for _ in 0..g.usize(0, 4) {
+                metrics.insert(&g.ident(6), Json::Num(g.f64(-1e6, 1e6)));
+            }
+            r.data.push(DataEntry {
+                success: g.bool(),
+                runtime: g.f64(0.0, 1e5),
+                nodes: g.u64(1, 4096),
+                taskspernode: g.u64(1, 8),
+                threadspertask: g.u64(1, 64),
+                jobid: g.u64(0, 1 << 40),
+                queue: g.ident(8),
+                metrics,
+            });
+        }
+        let doc = r.to_document();
+        let back = Report::parse(&doc).map_err(|e| exacb::util::prop::PropFail {
+            msg: format!("parse failed: {e} for doc {doc}"),
+        })?;
+        prop_assert!(back == r, "round-trip mismatch");
+        Ok(())
+    });
+}
+
+/// Store commits are immutable and prefix listing is complete: every
+/// committed path remains readable with its exact content at head when
+/// not overwritten.
+#[test]
+fn prop_store_retains_latest_writes() {
+    check("store retains latest writes", 40, |g: &mut Gen| {
+        let mut store = exacb::store::DataStore::new();
+        let mut latest: std::collections::BTreeMap<String, String> = Default::default();
+        let commits = g.usize(1, 10);
+        for c in 0..commits {
+            let n_files = g.usize(1, 4);
+            let mut files = Vec::new();
+            for _ in 0..n_files {
+                let path = format!("p{}/f{}", g.usize(0, 2), g.usize(0, 5));
+                let content = format!("v{}", g.u64(0, 1_000_000));
+                latest.insert(path.clone(), content.clone());
+                files.push((path, content));
+            }
+            store.commit("exacb.data", &files, &format!("c{c}"), SimTime(c as i64));
+        }
+        for (path, content) in &latest {
+            let got = store.read("exacb.data", path).map_err(|e| {
+                exacb::util::prop::PropFail {
+                    msg: format!("read {path}: {e}"),
+                }
+            })?;
+            prop_assert!(got == content, "{path}: got {got}, want {content}");
+        }
+        let listed = store.list("exacb.data", "");
+        prop_assert!(
+            listed.len() == latest.len(),
+            "listing {} != expected {}",
+            listed.len(),
+            latest.len()
+        );
+        Ok(())
+    });
+}
+
+/// Harness expansion × executor: the number of scheduler jobs equals the
+/// size of the parameter cross product, whatever the axes.
+#[test]
+fn prop_expansion_matches_job_count() {
+    use exacb::ci::Trigger;
+    use exacb::coordinator::{BenchmarkRepo, World};
+    check("expansion size == scheduler job count", 12, |g: &mut Gen| {
+        let n_nodes_vals = g.usize(1, 3);
+        let n_steps_vals = g.usize(1, 3);
+        let nodes_vals: Vec<String> = (0..n_nodes_vals).map(|i| (1u64 << i).to_string()).collect();
+        let steps_vals: Vec<String> = (0..n_steps_vals).map(|i| (10 * (i + 1)).to_string()).collect();
+        let jube = format!(
+            "name: px\nparametersets:\n  - name: run\n    parameters:\n      - name: nodes\n        values: [{}]\n      - name: steps\n        values: [{}]\nsteps:\n  - name: execute\n    use: [run]\n    remote: true\n    do:\n      - simapp --name px --flops 1000 --steps $steps\n",
+            nodes_vals.join(", "),
+            steps_vals.join(", ")
+        );
+        let ci = r#"
+include:
+  - component: execution@v3
+    inputs:
+      prefix: "jedi.px"
+      machine: "jedi"
+      queue: "all"
+      project: "cjsc"
+      budget: "zam"
+      jube_file: "b.yml"
+"#;
+        let mut world = World::new(g.u64(0, 1 << 30));
+        world.add_repo(
+            BenchmarkRepo::new("px")
+                .with_file("b.yml", &jube)
+                .with_file(".gitlab-ci.yml", ci),
+        );
+        world.run_pipeline("px", Trigger::Manual).map_err(|e| {
+            exacb::util::prop::PropFail { msg: e }
+        })?;
+        let jobs = world.batch.get("jedi").unwrap().records().len();
+        let expect = n_nodes_vals * n_steps_vals;
+        prop_assert!(
+            jobs == expect,
+            "submitted {jobs} scheduler jobs for a {expect}-point study"
+        );
+        Ok(())
+    });
+}

@@ -1,0 +1,137 @@
+//! Integration: the three-layer compose — AOT HLO artifacts (L1 Pallas
+//! kernels inside L2 JAX models) executed from the Rust coordinator via
+//! PJRT, inside full CI pipelines. Skips cleanly when `make artifacts`
+//! has not run.
+
+use exacb::ci::Trigger;
+use exacb::coordinator::{BenchmarkRepo, World};
+use exacb::runtime::{manifest::default_dir, Engine};
+
+fn artifacts_built() -> bool {
+    default_dir().join("manifest.json").exists()
+}
+
+#[test]
+fn engine_executes_all_manifest_artifacts() {
+    if !artifacts_built() {
+        eprintln!("skipped: artifacts not built");
+        return;
+    }
+    let mut eng = Engine::load_default().unwrap();
+    let entries = eng.manifest.entries.clone();
+    assert!(entries.len() >= 7, "expected the full variant grid");
+    for e in &entries {
+        match e.kind.as_str() {
+            "logmap" => {
+                let n = e.n();
+                let x = vec![0.42f32; n];
+                let r = vec![3.3f32; n];
+                let (out, summary, wall) = eng.run_logmap(&e.name, &x, &r).unwrap();
+                assert_eq!(out.len(), n, "{}", e.name);
+                assert!(wall.as_nanos() > 0);
+                assert!(summary.iter().all(|v| v.is_finite()));
+            }
+            "stream" => {
+                let (sums, _) = eng.run_stream(&e.name, 0.1).unwrap();
+                assert!(sums.iter().all(|v| v.is_finite()));
+            }
+            other => panic!("unknown artifact kind {other}"),
+        }
+    }
+    assert_eq!(eng.compilations as usize, entries.len());
+}
+
+#[test]
+fn pjrt_validation_flows_into_protocol_reports() {
+    if !artifacts_built() {
+        eprintln!("skipped: artifacts not built");
+        return;
+    }
+    let mut world = World::new(77);
+    assert!(world.try_attach_engine());
+    assert!(world.calibration.measured, "host calibration from real runs");
+    world.add_repo(BenchmarkRepo::logmap_example("jedi", "all"));
+    let pid = world.run_pipeline("logmap", Trigger::Manual).unwrap();
+    assert!(world.pipeline(pid).unwrap().succeeded());
+    let repo = world.repo("logmap").unwrap();
+    let doc = repo
+        .store
+        .read("exacb.data", &format!("jedi.logmap/{pid}/report.json"))
+        .unwrap();
+    let report = exacb::protocol::Report::parse(doc).unwrap();
+    let entry = &report.data[0];
+    // the run was validated through PJRT, not just modelled
+    assert_eq!(
+        entry.metrics.str_of("validation"),
+        Some("pjrt"),
+        "{:?}",
+        entry.metrics
+    );
+    assert!(entry.metric("host_wall_ms").unwrap() > 0.0);
+    assert!(entry.metric("host_gflops").unwrap() > 0.0);
+}
+
+#[test]
+fn stream_validation_through_pipeline() {
+    if !artifacts_built() {
+        eprintln!("skipped: artifacts not built");
+        return;
+    }
+    let mut world = World::new(78);
+    world.try_attach_engine();
+    let jube = "name: stream\nsteps:\n  - name: execute\n    remote: true\n    do:\n      - babelstream\n";
+    let ci = r#"
+include:
+  - component: execution@v3
+    inputs:
+      prefix: "jupiter.stream"
+      machine: "jupiter"
+      queue: "all"
+      project: "cjsc"
+      budget: "zam"
+      jube_file: "b.yml"
+"#;
+    world.add_repo(
+        BenchmarkRepo::new("stream")
+            .with_file("b.yml", jube)
+            .with_file(".gitlab-ci.yml", ci),
+    );
+    let pid = world.run_pipeline("stream", Trigger::Manual).unwrap();
+    assert!(world.pipeline(pid).unwrap().succeeded());
+    let repo = world.repo("stream").unwrap();
+    let doc = repo
+        .store
+        .read("exacb.data", &format!("jupiter.stream/{pid}/report.json"))
+        .unwrap();
+    let report = exacb::protocol::Report::parse(doc).unwrap();
+    let m = &report.data[0].metrics;
+    assert_eq!(m.str_of("validation"), Some("pjrt"));
+    // the five Fig. 3 bandwidths are present
+    for k in ["bw_copy", "bw_mul", "bw_add", "bw_triad", "bw_dot"] {
+        assert!(m.f64_of(k).unwrap() > 0.0, "{k}");
+    }
+    assert!(m.f64_of("host_stream_gbs").unwrap() > 0.0);
+}
+
+#[test]
+fn compile_cache_amortises_across_campaign() {
+    if !artifacts_built() {
+        eprintln!("skipped: artifacts not built");
+        return;
+    }
+    let mut world = World::new(79);
+    world.try_attach_engine();
+    world.add_repo(BenchmarkRepo::logmap_example("jedi", "all"));
+    for d in 0..5 {
+        world.advance_to(exacb::util::timeutil::SimTime::from_days(d).add_secs(7200));
+        world.run_pipeline("logmap", Trigger::Scheduled).unwrap();
+    }
+    let engine = world.engine.as_ref().unwrap();
+    // 5 pipelines + calibration runs, but each artifact compiled once
+    assert!(engine.executions >= 5);
+    assert!(
+        engine.compilations <= 3,
+        "compilations={} should be bounded by distinct artifacts used",
+        engine.compilations
+    );
+}
