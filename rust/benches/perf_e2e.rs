@@ -3,11 +3,15 @@
 //!
 //! Measures (a) a full single-benchmark pipeline, (b) the same with the
 //! workload model replaced by a no-op-cost app, isolating framework
-//! overhead, and (c) campaign throughput in pipelines/s.
+//! overhead, (c) campaign throughput in pipelines/s, and (d) the
+//! incremental-execution contract: a warm (unchanged-input) collection
+//! sweep submits **zero** batch jobs and is ≥5x faster than the cold
+//! sweep (asserted, not just reported).
 
 use exacb::bench::Bench;
 use exacb::ci::Trigger;
-use exacb::coordinator::{BenchmarkRepo, World};
+use exacb::coordinator::{collection, BenchmarkRepo, World};
+use exacb::workloads::portfolio;
 
 fn repo(cmd: &str) -> BenchmarkRepo {
     let jube = format!(
@@ -73,5 +77,48 @@ fn main() {
     );
     println!(
         "(the floor includes YAML parse + component validation + scheduler + store commit)"
+    );
+
+    // ---- incremental execution: cold vs warm collection sweep ---------
+    let mut apps = portfolio::generate(12, 7);
+    for app in &mut apps {
+        app.failure_rate = 0.0; // flaky injection would change the inputs
+    }
+    let machines = ["jupiter", "jedi"];
+    let mut world = World::new(7);
+    world.enable_cache();
+    collection::onboard_multi(&mut world, &apps, &machines, "all");
+
+    let t0 = std::time::Instant::now();
+    let cold_summary = collection::run_campaign_queued(&mut world, &apps, &machines, 1);
+    let cold = t0.elapsed();
+    let jobs_cold: usize = world.batch.values().map(|b| b.records().len()).sum();
+
+    let t1 = std::time::Instant::now();
+    let warm_summary = collection::run_campaign_queued(&mut world, &apps, &machines, 1);
+    let warm = t1.elapsed();
+    let jobs_total: usize = world.batch.values().map(|b| b.records().len()).sum();
+    let jobs_warm = jobs_total - jobs_cold;
+    let speedup = cold.as_secs_f64() / warm.as_secs_f64().max(1e-9);
+
+    println!("\n== incremental collection sweep (12 apps x 2 machines, 1 day) ==");
+    println!(
+        "cold sweep: {:>10.3} ms  ({} batch jobs, {} pipelines ok)",
+        cold.as_secs_f64() * 1e3,
+        jobs_cold,
+        cold_summary.pipelines_succeeded,
+    );
+    println!(
+        "warm sweep: {:>10.3} ms  ({} batch jobs, {} cache hits, {} pipelines ok)",
+        warm.as_secs_f64() * 1e3,
+        jobs_warm,
+        warm_summary.cache.hits - cold_summary.cache.hits,
+        warm_summary.pipelines_succeeded,
+    );
+    println!("warm/cold speedup: {speedup:.1}x");
+    assert_eq!(jobs_warm, 0, "warm sweep submitted batch jobs");
+    assert!(
+        speedup >= 5.0,
+        "warm sweep must be >=5x faster than cold (got {speedup:.1}x)"
     );
 }

@@ -57,9 +57,9 @@ fn main() {
         output.push_str(&format!("step {i} residual 1.2e-{}\n", i % 9));
     }
     output.push_str("time: 123.456\n");
-    let re = regex::Regex::new("time: ([0-9.eE+-]+)").unwrap();
+    let re = exacb::util::rex::Rex::new("time: ([0-9.eE+-]+)").unwrap();
     b.throughput_case("regex analysis 2k-line file", output.len() as f64, "B", || {
-        re.captures_iter(&output).last().unwrap()[1].to_string()
+        re.captures_last(&output).unwrap().get(1).unwrap().to_string()
     });
     b.report("perf_harness");
 }

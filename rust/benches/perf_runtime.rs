@@ -11,7 +11,10 @@ fn main() {
         println!("perf_runtime skipped: run `make artifacts` first");
         return;
     }
-    let mut engine = Engine::load_default().expect("engine");
+    let Ok(mut engine) = Engine::load_default() else {
+        println!("perf_runtime skipped: engine backend unavailable (build with --features pjrt)");
+        return;
+    };
     let entries = engine.manifest.entries.clone();
 
     // one-time compile cost per artifact

@@ -8,21 +8,38 @@
 
 use crate::util::json::Json;
 
-#[derive(Debug, Clone, PartialEq, thiserror::Error)]
+#[derive(Debug, Clone, PartialEq)]
 pub enum ComponentError {
-    #[error("unknown component '{0}'")]
     Unknown(String),
-    #[error("component '{component}': missing required input '{input}'")]
     MissingInput { component: String, input: String },
-    #[error("component '{component}': unknown input '{input}'")]
     UnknownInput { component: String, input: String },
-    #[error("component '{component}': input '{input}' must be {expected}")]
     BadType {
         component: String,
         input: String,
         expected: String,
     },
 }
+
+impl std::fmt::Display for ComponentError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ComponentError::Unknown(c) => write!(f, "unknown component '{c}'"),
+            ComponentError::MissingInput { component, input } => {
+                write!(f, "component '{component}': missing required input '{input}'")
+            }
+            ComponentError::UnknownInput { component, input } => {
+                write!(f, "component '{component}': unknown input '{input}'")
+            }
+            ComponentError::BadType {
+                component,
+                input,
+                expected,
+            } => write!(f, "component '{component}': input '{input}' must be {expected}"),
+        }
+    }
+}
+
+impl std::error::Error for ComponentError {}
 
 /// Expected JSON shape of one input.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]

@@ -23,13 +23,22 @@
 use crate::util::json::Json;
 use crate::util::yamlite;
 
-#[derive(Debug, Clone, PartialEq, thiserror::Error)]
+#[derive(Debug, Clone, PartialEq)]
 pub enum ConfigError {
-    #[error("yaml: {0}")]
     Yaml(String),
-    #[error("config: {0}")]
     Invalid(String),
 }
+
+impl std::fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ConfigError::Yaml(e) => write!(f, "yaml: {e}"),
+            ConfigError::Invalid(e) => write!(f, "config: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for ConfigError {}
 
 /// One component invocation from the CI file.
 #[derive(Debug, Clone, PartialEq)]

@@ -6,6 +6,7 @@
 //! of a repository's CI config; its jobs carry artifacts (named text
 //! files) and a log.
 
+use crate::protocol::StepProvenance;
 use crate::util::json::Json;
 use crate::util::timeutil::SimTime;
 
@@ -38,6 +39,10 @@ pub struct CiJob {
     pub log: Vec<String>,
     /// Structured outcome for downstream jobs (beyond raw artifacts).
     pub output: Json,
+    /// Per-step execution-cache provenance (empty when caching is off or
+    /// the job is not an execute stage). Also mirrored in the
+    /// `cache.json` artifact for external consumers.
+    pub provenance: Vec<StepProvenance>,
 }
 
 impl CiJob {
@@ -49,6 +54,7 @@ impl CiJob {
             artifacts: Vec::new(),
             log: Vec::new(),
             output: Json::obj(),
+            provenance: Vec::new(),
         }
     }
 
@@ -97,6 +103,19 @@ impl Pipeline {
                     .map(move |(n, c)| (format!("{}/{}", j.name, n), c.as_str()))
             })
             .collect()
+    }
+
+    /// Cache provenance tallied over all jobs: (hits, misses,
+    /// invalidated). A warm pipeline reads `(n, 0, 0)`.
+    pub fn cache_summary(&self) -> (usize, usize, usize) {
+        let mut t = (0, 0, 0);
+        for j in &self.jobs {
+            let (h, m, i) = crate::protocol::provenance::tally(&j.provenance);
+            t.0 += h;
+            t.1 += m;
+            t.2 += i;
+        }
+        t
     }
 }
 
@@ -179,6 +198,28 @@ mod tests {
         let b = ids.pipeline_id();
         assert_eq!(b, a + 1);
         assert_ne!(ids.job_id(), ids.job_id());
+    }
+
+    #[test]
+    fn cache_summary_tallies_across_jobs() {
+        use crate::protocol::{CacheOutcome, StepProvenance};
+        let mut p = Pipeline {
+            id: 1,
+            repo: "r".into(),
+            trigger: Trigger::Scheduled,
+            created: SimTime(0),
+            jobs: vec![CiJob::new(1, "a.execute"), CiJob::new(2, "b.execute")],
+        };
+        p.jobs[0].provenance = vec![
+            StepProvenance::new("compile", "k1", CacheOutcome::Hit),
+            StepProvenance::new("execute", "k2", CacheOutcome::Miss),
+        ];
+        p.jobs[1].provenance = vec![StepProvenance::new(
+            "execute",
+            "k3",
+            CacheOutcome::Invalidated,
+        )];
+        assert_eq!(p.cache_summary(), (1, 1, 1));
     }
 
     #[test]

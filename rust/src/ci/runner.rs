@@ -13,14 +13,31 @@
 
 use crate::scheduler::{BatchSystem, JobPayload, JobSpec, SubmitError};
 
-#[derive(Debug, Clone, PartialEq, thiserror::Error)]
+#[derive(Debug, Clone, PartialEq)]
 pub enum RunnerError {
-    #[error("no runner registered for machine '{0}'")]
     NoRunner(String),
-    #[error("environment setup failed on '{machine}': {reason}")]
     Setup { machine: String, reason: String },
-    #[error(transparent)]
-    Submit(#[from] SubmitError),
+    Submit(SubmitError),
+}
+
+impl std::fmt::Display for RunnerError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RunnerError::NoRunner(m) => write!(f, "no runner registered for machine '{m}'"),
+            RunnerError::Setup { machine, reason } => {
+                write!(f, "environment setup failed on '{machine}': {reason}")
+            }
+            RunnerError::Submit(e) => write!(f, "{e}"),
+        }
+    }
+}
+
+impl std::error::Error for RunnerError {}
+
+impl From<SubmitError> for RunnerError {
+    fn from(e: SubmitError) -> RunnerError {
+        RunnerError::Submit(e)
+    }
 }
 
 /// A runner bound to one machine's login node.
@@ -65,6 +82,26 @@ impl Runner {
                 machine: self.machine.clone(),
                 reason: e.to_string(),
             })
+    }
+
+    /// Digest of the runner-visible execution environment identity:
+    /// machine + account + budget + queue. Part of the execution-cache
+    /// key, so a cached result never replays across account or queue
+    /// contexts (different partitions run different hardware). Reuses
+    /// [`CacheKeyBuilder`]'s canonical encoding so the no-aliasing rule
+    /// lives in one tested place.
+    pub fn environment_fingerprint(
+        &self,
+        account: &str,
+        budget: &str,
+        queue: &str,
+    ) -> String {
+        crate::store::CacheKeyBuilder::new("runner-env", &self.machine)
+            .field("account", account)
+            .field("budget", budget)
+            .field("queue", queue)
+            .build()
+            .digest
     }
 
     /// Submit a batch job through this runner.
@@ -130,6 +167,17 @@ mod tests {
             )
             .unwrap_err();
         assert!(matches!(err, RunnerError::Setup { .. }));
+    }
+
+    #[test]
+    fn environment_fingerprint_distinguishes_contexts() {
+        let r = Runner::new("jedi");
+        let a = r.environment_fingerprint("cjsc", "zam", "all");
+        let b = r.environment_fingerprint("cjsc", "zam", "all");
+        assert_eq!(a, b);
+        assert_ne!(a, r.environment_fingerprint("cjsc", "zam", "develop"));
+        assert_ne!(a, r.environment_fingerprint("cexalab", "exalab", "all"));
+        assert_ne!(a, Runner::new("jureca").environment_fingerprint("cjsc", "zam", "all"));
     }
 
     #[test]

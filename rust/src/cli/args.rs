@@ -12,13 +12,22 @@ pub struct Args {
     pub positional: Vec<String>,
 }
 
-#[derive(Debug, Clone, PartialEq, thiserror::Error)]
+#[derive(Debug, Clone, PartialEq)]
 pub enum ArgsError {
-    #[error("flag '--{0}' given twice")]
     Duplicate(String),
-    #[error("flag '--{0}' expects a value")]
     MissingValue(String),
 }
+
+impl std::fmt::Display for ArgsError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ArgsError::Duplicate(k) => write!(f, "flag '--{k}' given twice"),
+            ArgsError::MissingValue(k) => write!(f, "flag '--{k}' expects a value"),
+        }
+    }
+}
+
+impl std::error::Error for ArgsError {}
 
 impl Args {
     pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Args, ArgsError> {

@@ -26,7 +26,8 @@ USAGE: exacb <command> [flags]
 
 COMMANDS:
   quickstart    run the paper's §II logmap example end to end
-  collection    run a JUREAP-scale campaign (--apps N --days D --machine M)
+  collection    run a JUREAP-scale campaign (--apps N --days D --machine M
+                --machines M1,M2 --cache --sweeps K for incremental re-runs)
   figures       regenerate every paper table/figure (--days D --out DIR --only ID)
   ablation      run the §III integration-mode ablation (--benchmarks N)
   components    list the CI/CD component catalog
@@ -111,14 +112,49 @@ fn cmd_collection(args: &Args) -> i32 {
     let n = args.u64("apps", 72) as usize;
     let days = args.i64("days", 14);
     let machine = args.str("machine", "jupiter");
+    let machines_arg = args.str("machines", "");
     let queue = args.str("queue", "all");
     let seed = args.u64("seed", 20260101);
+    let sweeps = args.u64("sweeps", 1).max(1);
+    let cache = args.str("cache", "false") == "true";
     let mut world = World::new(seed);
+    if cache || sweeps > 1 {
+        world.enable_cache();
+    }
     world.try_attach_engine();
     let apps = portfolio::generate(n, seed);
-    collection::onboard(&mut world, &apps, &machine, &queue);
-    println!("onboarded {n} applications on {machine}; running {days} simulated days…");
-    let summary = collection::run_campaign(&mut world, &apps, days);
+    let machine_list: Vec<String> = if machines_arg.trim().is_empty() {
+        vec![machine]
+    } else {
+        machines_arg
+            .split(',')
+            .map(|s| s.trim().to_string())
+            .filter(|s| !s.is_empty())
+            .collect()
+    };
+    if machine_list.is_empty() {
+        eprintln!("error: --machines needs at least one machine name (e.g. jupiter,jedi)");
+        return 2;
+    }
+    let machine_refs: Vec<&str> = machine_list.iter().map(String::as_str).collect();
+    collection::onboard_multi(&mut world, &apps, &machine_refs, &queue);
+    println!(
+        "onboarded {n} applications on {}; running {days} simulated day(s) x {sweeps} sweep(s)…",
+        machine_list.join(",")
+    );
+    let mut summary = None;
+    for s in 0..sweeps {
+        let t = std::time::Instant::now();
+        let sum = collection::run_campaign_queued(&mut world, &apps, &machine_refs, days);
+        println!(
+            "sweep {}: {:.1} ms wall, {} cumulative cache hits",
+            s + 1,
+            t.elapsed().as_secs_f64() * 1e3,
+            sum.cache.hits
+        );
+        summary = Some(sum);
+    }
+    let summary = summary.expect("sweeps >= 1");
     println!(
         "\npipelines: {}/{} succeeded; {} protocol reports recorded; {:.0} core-hours",
         summary.pipelines_succeeded,
@@ -280,5 +316,15 @@ mod tests {
     #[test]
     fn small_collection_runs() {
         assert_eq!(run_str("collection --apps 3 --days 1 --seed 6"), 0);
+    }
+
+    #[test]
+    fn cached_multi_machine_collection_runs() {
+        assert_eq!(
+            run_str(
+                "collection --apps 2 --days 1 --seed 6 --cache --sweeps 2 --machines jupiter,jedi"
+            ),
+            0
+        );
     }
 }

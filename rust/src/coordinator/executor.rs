@@ -10,11 +10,13 @@
 
 use std::collections::BTreeMap;
 
-use crate::cluster::{Cluster, SoftwareStage};
+use crate::cluster::{Cluster, RunEnv, SoftwareStage};
 use crate::energy::wrap_with_jpwr;
 use crate::harness::{ResolvedStep, StepExecutor, StepOutcome};
+use crate::protocol::{CacheOutcome, StepProvenance};
 use crate::runtime::Engine;
 use crate::scheduler::{BatchSystem, JobResult, JobSpec};
+use crate::store::{CacheKey, CacheKeyBuilder, ExecutionCache};
 use crate::util::json::Json;
 use crate::util::prng::Prng;
 use crate::workloads::{run_command, AppProfile, ExecCtx, HostCalibration};
@@ -59,6 +61,33 @@ pub struct BatchStepExecutor<'w> {
     pub walltime_s: u64,
     /// Benchmark name for job naming.
     pub benchmark: String,
+    /// Execution cache (None = incremental execution disabled).
+    pub cache: Option<&'w mut ExecutionCache>,
+    /// Fingerprint of the attached engine artifacts ("analytic" without
+    /// PJRT) — part of every step's cache key.
+    pub engine_fingerprint: String,
+    /// Per-remote-step cache provenance accumulated over this run.
+    pub provenance: Vec<StepProvenance>,
+}
+
+/// Digest of the resolved machine environment at a point in simulated
+/// time: machine identity/version + software stage + the effective
+/// stage×event factors per metric class. Day-granular system events
+/// therefore invalidate cached step results exactly when they change
+/// the modelled performance.
+pub fn env_fingerprint(env: &RunEnv) -> String {
+    use crate::cluster::MetricClass;
+    // CacheKeyBuilder's canonical encoding keeps the no-aliasing rule
+    // (free-form names vs separators) in one tested place
+    CacheKeyBuilder::new("machine-env", &env.machine.name)
+        .field("version", &env.machine.version)
+        .field("stage", &env.stage.name)
+        .field("compute", format!("{:.9}", env.factor(MetricClass::Compute)))
+        .field("membw", format!("{:.9}", env.factor(MetricClass::MemBw)))
+        .field("network", format!("{:.9}", env.factor(MetricClass::Network)))
+        .field("io", format!("{:.9}", env.factor(MetricClass::Io)))
+        .build()
+        .digest
 }
 
 impl<'w> BatchStepExecutor<'w> {
@@ -66,6 +95,55 @@ impl<'w> BatchStepExecutor<'w> {
         let rest = cmd.trim().strip_prefix("export ")?;
         let (k, v) = rest.split_once('=')?;
         Some((k.trim().to_string(), v.trim().to_string()))
+    }
+
+    /// Compose the content-addressed cache key of one resolved remote
+    /// step — over what the executor actually *consumes*, not the raw
+    /// definition. Identity (slot): benchmark + step + machine + the
+    /// resolved geometry (nodes / tasks / threads — distinct parameter-
+    /// study points stay distinct entries). Inputs (digest): the
+    /// substituted command lines (these embed every parameter the step
+    /// references) and every execution-context knob that can change the
+    /// outcome — environment fingerprint (machine version, software
+    /// stage, event factors at submit time), account context, launcher,
+    /// frequency, injected features, walltime, engine artifacts.
+    /// Consequence: mutating one parameter value re-executes exactly the
+    /// steps whose resolved commands change; steps that resolve
+    /// identically keep hitting.
+    fn step_key(&self, step: &ResolvedStep) -> CacheKey {
+        let env_fp = self
+            .cluster
+            .env_at(&self.machine, &self.stage, self.batch.now())
+            .map(|e| env_fingerprint(&e))
+            .unwrap_or_else(|| "unresolved-env".into());
+        let p = |k: &str| step.point.get(k).cloned().unwrap_or_default();
+        CacheKeyBuilder::new(&self.benchmark, &step.name)
+            .ident("machine", &self.machine)
+            .ident("nodes", self.remote_nodes(step).to_string())
+            .ident("taskspernode", p("taskspernode"))
+            .ident("threadspertask", p("threadspertask"))
+            .field("commands", step.commands.join("\n"))
+            .field("environment", env_fp)
+            .field(
+                "account",
+                format!("{}/{}/{}", self.project, self.budget, self.queue),
+            )
+            .field(
+                "launcher",
+                match self.launcher {
+                    Launcher::Jpwr => "jpwr",
+                    Launcher::Srun => "srun",
+                },
+            )
+            .field(
+                "freq_mhz",
+                self.freq_mhz.map(|f| format!("{f:.3}")).unwrap_or_default(),
+            )
+            .field("injected", self.injected_commands.join("\n"))
+            .field("nodes_override", self.nodes_override.to_string())
+            .field("walltime_s", self.walltime_s.to_string())
+            .field("engine", &self.engine_fingerprint)
+            .build()
     }
 
     fn remote_nodes(&self, step: &ResolvedStep) -> u64 {
@@ -200,18 +278,57 @@ impl<'w> BatchStepExecutor<'w> {
 
 impl<'w> StepExecutor for BatchStepExecutor<'w> {
     fn execute(&mut self, step: &ResolvedStep) -> StepOutcome {
-        if step.remote {
-            self.run_remote(step)
-        } else {
+        if !step.remote {
             // login-node step: setup commands succeed; exports recorded
             // into the injected set so they reach later remote steps.
+            // Local steps are cheap and mutate executor state, so they
+            // always run (their effect is part of remote-step keys).
             for cmd in &step.commands {
                 if Self::parse_export(cmd).is_some() {
                     self.injected_commands.push(cmd.clone());
                 }
             }
-            StepOutcome::local_ok()
+            return StepOutcome::local_ok();
         }
+        // remote step: consult the execution cache before submitting
+        let cached_ctx = if self.cache.is_some() {
+            let key = self.step_key(step);
+            let (status, doc) = self
+                .cache
+                .as_deref_mut()
+                .expect("checked above")
+                .lookup(&key, "step");
+            if status == CacheOutcome::Hit {
+                if let Some(out) = doc.as_deref().and_then(StepOutcome::from_document) {
+                    self.provenance.push(StepProvenance::new(
+                        &step.name,
+                        &key.digest,
+                        CacheOutcome::Hit,
+                    ));
+                    return out;
+                }
+            }
+            // a hit whose document fails to parse re-executes as a miss
+            let status = if status == CacheOutcome::Hit {
+                CacheOutcome::Miss
+            } else {
+                status
+            };
+            Some((key, status))
+        } else {
+            None
+        };
+        let out = self.run_remote(step);
+        if let Some((key, status)) = cached_ctx {
+            self.provenance
+                .push(StepProvenance::new(&step.name, &key.digest, status));
+            if out.success {
+                if let Some(cache) = self.cache.as_deref_mut() {
+                    cache.insert(&key, "step", &out.to_document());
+                }
+            }
+        }
+        out
     }
 }
 
@@ -250,6 +367,9 @@ mod tests {
             nodes_override: 0,
             walltime_s: 7200,
             benchmark: "logmap".into(),
+            cache: None,
+            engine_fingerprint: "analytic".into(),
+            provenance: Vec::new(),
         }
     }
 
@@ -335,6 +455,60 @@ mod tests {
         assert!(m.f64_of("energy_j").unwrap() > 0.0);
         assert!(m.f64_of("avg_power_w").unwrap() > 50.0);
         assert_eq!(m.str_of("launcher"), Some("jpwr"));
+    }
+
+    #[test]
+    fn step_cache_replays_without_resubmitting() {
+        let (cluster, mut batch, mut rng) = setup();
+        let spec = logmap_spec();
+        let mut cache = ExecutionCache::new();
+
+        let cold = {
+            let mut exec = executor(&cluster, &mut batch, &mut rng);
+            exec.cache = Some(&mut cache);
+            run_benchmark(&spec, &[], &mut exec).unwrap()
+        };
+        let jobs_after_cold = batch.records().len();
+        assert_eq!(jobs_after_cold, 1);
+        assert_eq!(cache.stats.misses, 1);
+        assert_eq!(cache.stats.inserts, 1);
+
+        let warm = {
+            let mut exec = executor(&cluster, &mut batch, &mut rng);
+            exec.cache = Some(&mut cache);
+            let outs = run_benchmark(&spec, &[], &mut exec).unwrap();
+            // provenance classifies the remote step as a hit
+            assert_eq!(exec.provenance.len(), 1);
+            assert_eq!(exec.provenance[0].status, CacheOutcome::Hit);
+            outs
+        };
+        // no new scheduler jobs, identical replayed outcome
+        assert_eq!(batch.records().len(), jobs_after_cold);
+        assert_eq!(cache.stats.hits, 1);
+        assert_eq!(warm[0].runtime_s, cold[0].runtime_s);
+        assert_eq!(warm[0].jobid, cold[0].jobid);
+        assert_eq!(warm[0].metrics, cold[0].metrics);
+    }
+
+    #[test]
+    fn changed_injection_invalidates_step() {
+        let (cluster, mut batch, mut rng) = setup();
+        let spec = logmap_spec();
+        let mut cache = ExecutionCache::new();
+        {
+            let mut exec = executor(&cluster, &mut batch, &mut rng);
+            exec.cache = Some(&mut cache);
+            run_benchmark(&spec, &[], &mut exec).unwrap();
+        }
+        {
+            let mut exec = executor(&cluster, &mut batch, &mut rng);
+            exec.cache = Some(&mut cache);
+            exec.injected_commands = vec!["export UCX_RNDV_THRESH=inter:1".into()];
+            run_benchmark(&spec, &[], &mut exec).unwrap();
+            assert_eq!(exec.provenance[0].status, CacheOutcome::Invalidated);
+        }
+        assert_eq!(batch.records().len(), 2);
+        assert_eq!(cache.stats.invalidated, 1);
     }
 
     #[test]

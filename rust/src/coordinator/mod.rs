@@ -21,8 +21,11 @@ pub mod postproc;
 pub mod repo;
 pub mod world;
 
-pub use collection::{onboard, repo_for_app, run_campaign, CollectionSummary};
+pub use collection::{
+    assign, dispatch_item, onboard, onboard_multi, repo_for_app, run_campaign,
+    run_campaign_queued, CollectionSummary, WorkItem, WorkQueue,
+};
 pub use execution::{run_execution, ExecutionParams};
-pub use executor::{BatchStepExecutor, Launcher};
+pub use executor::{env_fingerprint, BatchStepExecutor, Launcher};
 pub use repo::BenchmarkRepo;
 pub use world::World;

@@ -49,6 +49,56 @@ fn load_set(repo: &BenchmarkRepo, prefix: &str, inputs: &Json) -> (ReportSet, us
     (set.filter_time_span(from, to), skipped)
 }
 
+/// Canonical cross-repo results table: every successful data entry of
+/// every report across the world's repositories, sorted by a total
+/// order independent of pipeline dispatch or store iteration order.
+/// Two campaigns over the same inputs yield byte-identical tables
+/// whatever the work-queue interleaving — the aggregation counterpart
+/// of the deterministic concurrent collection runner.
+pub fn collection_results_table(world: &World, metric: &str) -> Table {
+    let mut rows: Vec<Vec<String>> = Vec::new();
+    for (name, repo) in &world.repos {
+        let (set, _) = ReportSet::load(&repo.store, "exacb.data", "");
+        for (_, r) in &set.reports {
+            for e in &r.data {
+                if !e.success {
+                    continue;
+                }
+                let v = if metric == "runtime" {
+                    Some(e.runtime)
+                } else {
+                    e.metric(metric)
+                };
+                if let Some(v) = v {
+                    // date (not time-of-day): campaigns trigger daily,
+                    // and exact submit times depend on how the work
+                    // queue interleaved jobs on a shared batch system —
+                    // day granularity is the order-independent identity
+                    let date = r
+                        .experiment
+                        .time()
+                        .map(|t| t.date_string())
+                        .unwrap_or_default();
+                    rows.push(vec![
+                        name.clone(),
+                        r.experiment.system.clone(),
+                        date,
+                        e.nodes.to_string(),
+                        format!("{v:.6}"),
+                    ]);
+                }
+            }
+        }
+    }
+    rows.sort();
+    rows.dedup();
+    let mut t = Table::new(&["benchmark", "system", "date", "nodes", metric]);
+    for r in rows {
+        t.push_row(r);
+    }
+    t
+}
+
 /// `time-series@v3` (paper §V-A.2): continuous visualisation of selected
 /// performance metrics with regression detection (Figs. 3–4).
 pub fn run_time_series(world: &mut World, repo: &BenchmarkRepo, inputs: &Json) -> CiJob {

@@ -10,7 +10,7 @@ use crate::ci::{
 use crate::cluster::Cluster;
 use crate::runtime::Engine;
 use crate::scheduler::{for_machine, AccountManager, BatchSystem};
-use crate::store::ObjectStore;
+use crate::store::{CacheStats, ExecutionCache, ObjectStore};
 use crate::util::prng::Prng;
 use crate::util::timeutil::SimTime;
 use crate::workloads::HostCalibration;
@@ -33,6 +33,10 @@ pub struct World {
     pub object_store: ObjectStore,
     /// All executed pipelines (the GitLab pipeline list).
     pub pipelines: Vec<Pipeline>,
+    /// Incremental-execution cache. `None` (the default) preserves the
+    /// always-re-execute behaviour; [`World::enable_cache`] turns repeat
+    /// pipelines with unchanged inputs into zero-submission replays.
+    pub cache: Option<ExecutionCache>,
 }
 
 /// Standard accounts available on every simulated machine.
@@ -79,7 +83,27 @@ impl World {
             calibration: HostCalibration::default(),
             object_store: ObjectStore::new(),
             pipelines: Vec::new(),
+            cache: None,
         }
+    }
+
+    /// Turn on incremental execution: repeat pipelines whose resolved
+    /// inputs are unchanged replay cached results instead of submitting
+    /// batch jobs. Off by default so continuous *measurement* campaigns
+    /// (which want fresh noise samples every day) keep re-executing.
+    pub fn enable_cache(&mut self) -> &mut World {
+        if self.cache.is_none() {
+            self.cache = Some(ExecutionCache::new());
+        }
+        self
+    }
+
+    /// Cache counters (zeroes when caching is disabled).
+    pub fn cache_stats(&self) -> CacheStats {
+        self.cache
+            .as_ref()
+            .map(|c| c.stats)
+            .unwrap_or_default()
     }
 
     /// Attach the PJRT engine (real kernel execution + host calibration)
@@ -106,10 +130,14 @@ impl World {
     }
 
     /// Advance every machine's clock to `t` (e.g. the next scheduled
-    /// pipeline trigger).
+    /// pipeline trigger). Machines already past `t` are left untouched,
+    /// so re-dispatching a campaign window over a warmed world (a cache
+    /// replay sweep) is safe — simulated time never moves backwards.
     pub fn advance_to(&mut self, t: SimTime) {
         for bs in self.batch.values_mut() {
-            bs.advance_clock_to(t);
+            if bs.now() < t {
+                bs.advance_clock_to(t);
+            }
         }
     }
 
@@ -246,6 +274,51 @@ mod tests {
         assert_eq!(report.experiment.variant, "large-intensity");
         assert_eq!(report.data.len(), 1);
         assert!(report.data[0].success);
+    }
+
+    #[test]
+    fn warm_pipeline_replays_from_cache() {
+        let mut world = World::new(42);
+        world.enable_cache();
+        world.add_repo(BenchmarkRepo::logmap_example("jedi", "all"));
+        let p1 = world.run_pipeline("logmap", Trigger::Manual).unwrap();
+        let jobs_cold = world.batch.get("jedi").unwrap().records().len();
+        assert!(jobs_cold > 0);
+        let p2 = world.run_pipeline("logmap", Trigger::Manual).unwrap();
+        assert!(world.pipeline(p2).unwrap().succeeded());
+        // zero new batch submissions on the warm run
+        assert_eq!(world.batch.get("jedi").unwrap().records().len(), jobs_cold);
+        assert!(world.cache_stats().hits >= 1);
+        // byte-identical recorded reports
+        let repo = world.repo("logmap").unwrap();
+        let d1 = repo
+            .store
+            .read("exacb.data", &format!("jedi.logmap/{p1}/report.json"))
+            .unwrap();
+        let d2 = repo
+            .store
+            .read("exacb.data", &format!("jedi.logmap/{p2}/report.json"))
+            .unwrap();
+        assert_eq!(d1, d2);
+        // provenance marks the warm execute job as all-hit
+        let warm = world.pipeline(p2).unwrap();
+        let (h, m, i) = warm.cache_summary();
+        assert!(h >= 1, "hits={h}");
+        assert_eq!((m, i), (0, 0));
+    }
+
+    #[test]
+    fn cache_disabled_by_default_keeps_reexecuting() {
+        let mut world = World::new(42);
+        world.add_repo(BenchmarkRepo::logmap_example("jedi", "all"));
+        world.run_pipeline("logmap", Trigger::Manual).unwrap();
+        let jobs_cold = world.batch.get("jedi").unwrap().records().len();
+        world.run_pipeline("logmap", Trigger::Manual).unwrap();
+        assert_eq!(
+            world.batch.get("jedi").unwrap().records().len(),
+            2 * jobs_cold
+        );
+        assert_eq!(world.cache_stats(), crate::store::CacheStats::default());
     }
 
     #[test]

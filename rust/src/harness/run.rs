@@ -63,6 +63,55 @@ impl StepOutcome {
             ..StepOutcome::local_ok()
         }
     }
+
+    /// Serialize for the execution cache. A replay must reconstruct the
+    /// outcome exactly: output files feed analysis patterns, metrics are
+    /// merged into the protocol report verbatim.
+    pub fn to_document(&self) -> String {
+        let mut files = Json::arr();
+        for (name, content) in &self.files {
+            files.push(
+                Json::obj()
+                    .set("name", name.as_str())
+                    .set("content", content.as_str()),
+            );
+        }
+        Json::obj()
+            .set("success", self.success)
+            .set("runtime_s", self.runtime_s)
+            .set("files", files)
+            .set("metrics", self.metrics.clone())
+            .set("jobid", self.jobid)
+            .set("queue", self.queue.as_str())
+            .set("nodes", self.nodes)
+            .set("taskspernode", self.tasks_per_node)
+            .set("threadspertask", self.threads_per_task)
+            .pretty()
+    }
+
+    /// Parse a cached outcome document; `None` on any shape mismatch
+    /// (the caller then falls back to executing the step).
+    pub fn from_document(doc: &str) -> Option<StepOutcome> {
+        let v = Json::parse(doc).ok()?;
+        let mut files = Vec::new();
+        for f in v.get("files").and_then(Json::as_arr).unwrap_or(&[]) {
+            files.push((
+                f.str_of("name")?.to_string(),
+                f.str_of("content")?.to_string(),
+            ));
+        }
+        Some(StepOutcome {
+            success: v.bool_of("success")?,
+            runtime_s: v.f64_of("runtime_s")?,
+            files,
+            metrics: v.get("metrics").cloned().unwrap_or_else(Json::obj),
+            jobid: v.u64_of("jobid")?,
+            queue: v.str_of("queue")?.to_string(),
+            nodes: v.u64_of("nodes")?,
+            tasks_per_node: v.u64_of("taskspernode")?,
+            threads_per_task: v.u64_of("threadspertask")?,
+        })
+    }
 }
 
 /// The execution back end: interprets a resolved step's commands.
@@ -208,17 +257,16 @@ fn run_point(
 }
 
 fn apply_pattern(pat: &AnalysisPattern, files: &[(String, String)]) -> Option<Json> {
-    let re = regex::Regex::new(&pat.regex).ok()?;
+    let re = crate::util::rex::Rex::new(&pat.regex).ok()?;
     let content = files
         .iter()
         .find(|(name, _)| name == &pat.file)
         .map(|(_, c)| c)?;
     // JUBE semantics: last match wins (repeated prints converge).
-    let captures = re.captures_iter(content).last()?;
+    let captures = re.captures_last(content)?;
     let text = captures
         .get(1)
-        .map(|m| m.as_str())
-        .unwrap_or_else(|| captures.get(0).unwrap().as_str());
+        .unwrap_or_else(|| captures.get(0).expect("whole match always present"));
     match pat.dtype.as_str() {
         "float" => text.parse::<f64>().ok().map(Json::Num),
         "int" => text.parse::<i64>().ok().map(|v| Json::Num(v as f64)),
@@ -370,6 +418,45 @@ mod tests {
         };
         let files = vec![("f".to_string(), "t=1\nt=2\nt=3".to_string())];
         assert_eq!(apply_pattern(&pat, &files), Some(Json::Num(3.0)));
+    }
+
+    #[test]
+    fn step_outcome_document_roundtrip() {
+        let out = StepOutcome {
+            success: true,
+            runtime_s: 12.345678,
+            files: vec![
+                ("logmap.out".into(), "time: 12.345678\n".into()),
+                ("logmap.stats".into(), "kernel_time: 9.5\n".into()),
+            ],
+            metrics: Json::obj().set("gflops", 10.25).set("launcher", "srun"),
+            jobid: 7_700_042,
+            queue: "all".into(),
+            nodes: 4,
+            tasks_per_node: 4,
+            threads_per_task: 8,
+        };
+        let doc = out.to_document();
+        let back = StepOutcome::from_document(&doc).unwrap();
+        assert_eq!(back.success, out.success);
+        assert_eq!(back.runtime_s, out.runtime_s);
+        assert_eq!(back.files, out.files);
+        assert_eq!(back.metrics, out.metrics);
+        assert_eq!(back.jobid, out.jobid);
+        assert_eq!(back.queue, out.queue);
+        assert_eq!(
+            (back.nodes, back.tasks_per_node, back.threads_per_task),
+            (4, 4, 8)
+        );
+        // byte-stable re-serialization (replay determinism)
+        assert_eq!(back.to_document(), doc);
+    }
+
+    #[test]
+    fn bad_outcome_documents_rejected() {
+        assert!(StepOutcome::from_document("{not json").is_none());
+        assert!(StepOutcome::from_document("{}").is_none());
+        assert!(StepOutcome::from_document("{\"success\":true}").is_none());
     }
 
     #[test]

@@ -41,13 +41,22 @@
 use crate::util::json::Json;
 use crate::util::yamlite;
 
-#[derive(Debug, Clone, PartialEq, thiserror::Error)]
+#[derive(Debug, Clone, PartialEq)]
 pub enum SpecError {
-    #[error("yaml: {0}")]
     Yaml(String),
-    #[error("spec: {0}")]
     Invalid(String),
 }
+
+impl std::fmt::Display for SpecError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SpecError::Yaml(e) => write!(f, "yaml: {e}"),
+            SpecError::Invalid(e) => write!(f, "spec: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for SpecError {}
 
 fn invalid(msg: impl Into<String>) -> SpecError {
     SpecError::Invalid(msg.into())
@@ -177,7 +186,7 @@ impl BenchmarkSpec {
         }
         // regexes must compile
         for p in &self.analysis {
-            regex::Regex::new(&p.regex)
+            crate::util::rex::Rex::new(&p.regex)
                 .map_err(|e| invalid(format!("pattern '{}': {e}", p.name)))?;
             if !["float", "int", "string"].contains(&p.dtype.as_str()) {
                 return Err(invalid(format!(

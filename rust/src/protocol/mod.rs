@@ -6,6 +6,8 @@
 //! * [`migrate`] — schema-version migrations (old stored reports stay
 //!   readable).
 //! * [`csv`] — the Table-I `results.csv` contract.
+//! * [`provenance`] — the cache hit/miss/invalidated sidecar (`cache.json`)
+//!   pipelines attach next to (never inside) recorded reports.
 //!
 //! Design rule enforced throughout the crate: components never exchange
 //! ad-hoc structures — generation and consumption of benchmark data are
@@ -15,9 +17,13 @@
 
 pub mod csv;
 pub mod migrate;
+pub mod provenance;
 pub mod report;
 
 pub use csv::{results_csv, results_table, BASE_COLUMNS};
+pub use provenance::{
+    parse_provenance, provenance_document, CacheOutcome, StepProvenance,
+};
 pub use report::{
     DataEntry, Experiment, ProtocolError, Report, Reporter, PROTOCOL_VERSION,
 };

@@ -1,0 +1,157 @@
+//! Cache-provenance section of the protocol: how each step of a pipeline
+//! execution was satisfied — executed fresh, replayed from the execution
+//! cache, or re-executed because a prior entry was invalidated.
+//!
+//! Provenance is deliberately a *sidecar* document (the `cache.json` CI
+//! artifact), never part of the recorded protocol report: a warm replay
+//! must reproduce the cold run's `report.json` byte-for-byte, and
+//! hit/miss status is volatile by construction.
+
+use crate::util::json::Json;
+
+/// How one step of a run was satisfied.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CacheOutcome {
+    /// Replayed from the execution cache; no work submitted.
+    Hit,
+    /// No prior entry under this key; executed and recorded.
+    Miss,
+    /// A prior entry existed for this step slot but its inputs changed;
+    /// executed and the slot re-pointed.
+    Invalidated,
+    /// Caching disabled (or a local step): executed directly.
+    Executed,
+}
+
+impl CacheOutcome {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            CacheOutcome::Hit => "hit",
+            CacheOutcome::Miss => "miss",
+            CacheOutcome::Invalidated => "invalidated",
+            CacheOutcome::Executed => "executed",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<CacheOutcome> {
+        match s {
+            "hit" => Some(CacheOutcome::Hit),
+            "miss" => Some(CacheOutcome::Miss),
+            "invalidated" => Some(CacheOutcome::Invalidated),
+            "executed" => Some(CacheOutcome::Executed),
+            _ => None,
+        }
+    }
+}
+
+/// Provenance of one step execution.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StepProvenance {
+    pub step: String,
+    /// The cache key digest the step resolved to.
+    pub digest: String,
+    pub status: CacheOutcome,
+}
+
+impl StepProvenance {
+    pub fn new(step: &str, digest: &str, status: CacheOutcome) -> StepProvenance {
+        StepProvenance {
+            step: step.to_string(),
+            digest: digest.to_string(),
+            status,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("step", self.step.as_str())
+            .set("digest", self.digest.as_str())
+            .set("status", self.status.as_str())
+    }
+
+    pub fn from_json(v: &Json) -> Option<StepProvenance> {
+        Some(StepProvenance {
+            step: v.str_of("step")?.to_string(),
+            digest: v.str_of("digest")?.to_string(),
+            status: CacheOutcome::parse(v.str_of("status")?)?,
+        })
+    }
+}
+
+/// Serialize a run's step provenance as the `cache.json` artifact.
+pub fn provenance_document(steps: &[StepProvenance]) -> String {
+    let mut arr = Json::arr();
+    for s in steps {
+        arr.push(s.to_json());
+    }
+    Json::obj().set("version", 1u64).set("steps", arr).pretty()
+}
+
+/// Parse a `cache.json` artifact back; steps with unknown status are
+/// dropped (forward compatibility).
+pub fn parse_provenance(doc: &str) -> Vec<StepProvenance> {
+    let Ok(v) = Json::parse(doc) else {
+        return Vec::new();
+    };
+    v.get("steps")
+        .and_then(Json::as_arr)
+        .map(|steps| steps.iter().filter_map(StepProvenance::from_json).collect())
+        .unwrap_or_default()
+}
+
+/// Count (hits, misses, invalidated) across step provenance entries.
+pub fn tally(steps: &[StepProvenance]) -> (usize, usize, usize) {
+    let mut t = (0, 0, 0);
+    for s in steps {
+        match s.status {
+            CacheOutcome::Hit => t.0 += 1,
+            CacheOutcome::Miss => t.1 += 1,
+            CacheOutcome::Invalidated => t.2 += 1,
+            CacheOutcome::Executed => {}
+        }
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn document_roundtrip() {
+        let steps = vec![
+            StepProvenance::new("compile", "aaaa", CacheOutcome::Hit),
+            StepProvenance::new("execute", "bbbb", CacheOutcome::Miss),
+            StepProvenance::new("execute", "cccc", CacheOutcome::Invalidated),
+        ];
+        let doc = provenance_document(&steps);
+        let back = parse_provenance(&doc);
+        assert_eq!(back, steps);
+        assert_eq!(tally(&back), (1, 1, 1));
+    }
+
+    #[test]
+    fn garbage_documents_parse_empty() {
+        assert!(parse_provenance("{not json").is_empty());
+        assert!(parse_provenance("{}").is_empty());
+        // unknown status dropped, known kept
+        let doc = r#"{"steps":[{"step":"a","digest":"x","status":"warp"},
+                      {"step":"b","digest":"y","status":"hit"}]}"#;
+        let back = parse_provenance(doc);
+        assert_eq!(back.len(), 1);
+        assert_eq!(back[0].status, CacheOutcome::Hit);
+    }
+
+    #[test]
+    fn outcome_strings_roundtrip() {
+        for o in [
+            CacheOutcome::Hit,
+            CacheOutcome::Miss,
+            CacheOutcome::Invalidated,
+            CacheOutcome::Executed,
+        ] {
+            assert_eq!(CacheOutcome::parse(o.as_str()), Some(o));
+        }
+        assert_eq!(CacheOutcome::parse("nope"), None);
+    }
+}

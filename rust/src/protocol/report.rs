@@ -81,15 +81,29 @@ pub struct Report {
     pub data: Vec<DataEntry>,
 }
 
-#[derive(Debug, Clone, PartialEq, thiserror::Error)]
+#[derive(Debug, Clone, PartialEq)]
 pub enum ProtocolError {
-    #[error("malformed json: {0}")]
     Json(String),
-    #[error("schema violation at {path}: {msg}")]
     Schema { path: String, msg: String },
-    #[error("unsupported protocol version {0} (current: {PROTOCOL_VERSION})")]
     Version(u64),
 }
+
+impl std::fmt::Display for ProtocolError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ProtocolError::Json(e) => write!(f, "malformed json: {e}"),
+            ProtocolError::Schema { path, msg } => {
+                write!(f, "schema violation at {path}: {msg}")
+            }
+            ProtocolError::Version(v) => write!(
+                f,
+                "unsupported protocol version {v} (current: {PROTOCOL_VERSION})"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for ProtocolError {}
 
 fn schema_err(path: &str, msg: &str) -> ProtocolError {
     ProtocolError::Schema {

@@ -10,13 +10,24 @@ use std::path::{Path, PathBuf};
 
 use crate::util::json::Json;
 
-#[derive(Debug, Clone, PartialEq, thiserror::Error)]
+#[derive(Debug, Clone, PartialEq)]
 pub enum ManifestError {
-    #[error("artifacts not built: {0} (run `make artifacts`)")]
     Missing(String),
-    #[error("manifest parse error: {0}")]
     Parse(String),
 }
+
+impl std::fmt::Display for ManifestError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ManifestError::Missing(p) => {
+                write!(f, "artifacts not built: {p} (run `make artifacts`)")
+            }
+            ManifestError::Parse(e) => write!(f, "manifest parse error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for ManifestError {}
 
 /// One tensor description.
 #[derive(Debug, Clone, PartialEq)]
@@ -108,6 +119,19 @@ impl Manifest {
 
     pub fn hlo_path(&self, entry: &ArtifactEntry) -> PathBuf {
         self.dir.join(&entry.file)
+    }
+
+    /// Content fingerprint of the artifact set — part of the execution
+    /// cache key, so a rebuilt engine invalidates cached runs.
+    pub fn fingerprint(&self) -> String {
+        let mut payload = String::new();
+        for e in &self.entries {
+            payload.push_str(&format!(
+                "{}|{}|{}|{}|{}\n",
+                e.name, e.file, e.kind, e.flops, e.bytes
+            ));
+        }
+        crate::util::wide_hash(payload.as_bytes())
     }
 }
 

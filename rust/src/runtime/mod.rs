@@ -8,5 +8,5 @@
 pub mod engine;
 pub mod manifest;
 
-pub use engine::{Engine, ExecOutput};
+pub use engine::{Engine, EngineError, ExecOutput};
 pub use manifest::{ArtifactEntry, Manifest, ManifestError, TensorSpec};

@@ -31,19 +31,32 @@ impl Budget {
     }
 }
 
-#[derive(Debug, Clone, PartialEq, thiserror::Error)]
+#[derive(Debug, Clone, PartialEq)]
 pub enum AccountError {
-    #[error("unknown account '{0}'")]
     UnknownAccount(String),
-    #[error("account '{0}' is disabled")]
     Disabled(String),
-    #[error("account '{account}' has no access to partition '{partition}'")]
     NoPartitionAccess { account: String, partition: String },
-    #[error("budget '{0}' exhausted")]
     BudgetExhausted(String),
-    #[error("account '{account}' does not draw from budget '{budget}'")]
     WrongBudget { account: String, budget: String },
 }
+
+impl std::fmt::Display for AccountError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            AccountError::UnknownAccount(a) => write!(f, "unknown account '{a}'"),
+            AccountError::Disabled(a) => write!(f, "account '{a}' is disabled"),
+            AccountError::NoPartitionAccess { account, partition } => {
+                write!(f, "account '{account}' has no access to partition '{partition}'")
+            }
+            AccountError::BudgetExhausted(b) => write!(f, "budget '{b}' exhausted"),
+            AccountError::WrongBudget { account, budget } => {
+                write!(f, "account '{account}' does not draw from budget '{budget}'")
+            }
+        }
+    }
+}
+
+impl std::error::Error for AccountError {}
 
 /// Registry of accounts + budgets with usage accounting.
 #[derive(Debug, Clone, Default)]

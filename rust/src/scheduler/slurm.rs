@@ -13,18 +13,40 @@ use super::accounts::{AccountError, AccountManager};
 use super::job::{JobCtx, JobPayload, JobRecord, JobResult, JobSpec, JobState};
 use crate::util::timeutil::SimTime;
 
-#[derive(Debug, Clone, PartialEq, thiserror::Error)]
+#[derive(Debug, Clone, PartialEq)]
 pub enum SubmitError {
-    #[error("account rejected: {0}")]
-    Account(#[from] AccountError),
-    #[error("unknown partition '{0}'")]
+    Account(AccountError),
     UnknownPartition(String),
-    #[error("job requests {requested} nodes but partition '{partition}' has {total}")]
     TooLarge {
         requested: u64,
         partition: String,
         total: u64,
     },
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::Account(e) => write!(f, "account rejected: {e}"),
+            SubmitError::UnknownPartition(p) => write!(f, "unknown partition '{p}'"),
+            SubmitError::TooLarge {
+                requested,
+                partition,
+                total,
+            } => write!(
+                f,
+                "job requests {requested} nodes but partition '{partition}' has {total}"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
+impl From<AccountError> for SubmitError {
+    fn from(e: AccountError) -> SubmitError {
+        SubmitError::Account(e)
+    }
 }
 
 struct PendingJob {

@@ -1,0 +1,285 @@
+//! Content-addressed execution cache — the crate's incremental-execution
+//! core (the paper's namesake "incremental approach" applied to
+//! *execution*, not just adoption).
+//!
+//! A **cache key** is a canonical digest over everything that determines
+//! a step's outcome: the resolved commands (the benchmark definition
+//! after parameter substitution), the parameter point, machine +
+//! software stage + resolved environment factors, launcher, injected
+//! features, scheduler account context, and the engine artifact
+//! fingerprint. Two layers are cached:
+//!
+//! * `"step"` — one serialized [`crate::harness::StepOutcome`] per
+//!   resolved remote step (partial replay when only some inputs change);
+//! * `"report"` / `"csv"` — the assembled protocol report + Table-I CSV
+//!   of a whole run (full replay: byte-identical artifacts, zero batch
+//!   submissions).
+//!
+//! Entries are layered on [`super::object::ObjectStore`] (the S3-like
+//! back end of §IV-E), addressed by digest, so the cache shares the
+//! persistence semantics of recorded results. Only *successful*
+//! outcomes are cached — failures always re-execute.
+//!
+//! Invalidation is implicit: a changed input changes the digest, so the
+//! stale entry is simply never addressed again. The `slots` index maps a
+//! step's stable identity (benchmark, step, point, machine) to its last
+//! digest purely to *classify* a re-execution as `invalidated` (same
+//! slot, new key) versus `miss` (never seen) for provenance reporting.
+//! See DESIGN.md §"Execution cache" for the full key composition table.
+
+use std::collections::BTreeMap;
+
+use crate::protocol::CacheOutcome;
+use crate::util::wide_hash;
+
+use super::object::ObjectStore;
+
+/// A fully-composed cache key: `slot` identifies *what* is being
+/// executed, `digest` additionally pins *under which inputs*.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CacheKey {
+    pub slot: String,
+    pub digest: String,
+}
+
+/// Builder for canonical cache keys. Parts are length-prefix encoded
+/// (no separator ambiguity) and sorted by name (no insertion-order
+/// dependence), so the digest is stable across `BTreeMap` iteration,
+/// re-serialization, or call-site reordering.
+#[derive(Debug, Clone, Default)]
+pub struct CacheKeyBuilder {
+    ident: Vec<(String, String)>,
+    fields: Vec<(String, String)>,
+}
+
+fn encode(parts: &[(String, String)]) -> String {
+    let mut sorted: Vec<&(String, String)> = parts.iter().collect();
+    sorted.sort();
+    let mut out = String::new();
+    for (k, v) in sorted {
+        out.push_str(&format!("{}|{}|{}{}", k.len(), v.len(), k, v));
+    }
+    out
+}
+
+impl CacheKeyBuilder {
+    pub fn new(benchmark: &str, step: &str) -> CacheKeyBuilder {
+        CacheKeyBuilder::default()
+            .ident("benchmark", benchmark)
+            .ident("step", step)
+    }
+
+    /// An identity part: contributes to the slot *and* the digest.
+    pub fn ident(mut self, name: &str, value: impl AsRef<str>) -> CacheKeyBuilder {
+        self.ident
+            .push((name.to_string(), value.as_ref().to_string()));
+        self
+    }
+
+    /// An input part: contributes to the digest only — changing it
+    /// *invalidates* the slot rather than creating a new one.
+    pub fn field(mut self, name: &str, value: impl AsRef<str>) -> CacheKeyBuilder {
+        self.fields
+            .push((name.to_string(), value.as_ref().to_string()));
+        self
+    }
+
+    pub fn build(self) -> CacheKey {
+        let ident_enc = encode(&self.ident);
+        let full_enc = format!("{}#{}", ident_enc, encode(&self.fields));
+        CacheKey {
+            slot: wide_hash(ident_enc.as_bytes()),
+            digest: wide_hash(full_enc.as_bytes()),
+        }
+    }
+}
+
+/// Cumulative cache counters.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub invalidated: u64,
+    pub inserts: u64,
+}
+
+impl CacheStats {
+    pub fn lookups(&self) -> u64 {
+        self.hits + self.misses + self.invalidated
+    }
+}
+
+/// The execution cache: digest-addressed documents + slot index + stats.
+#[derive(Debug, Clone, Default)]
+pub struct ExecutionCache {
+    store: ObjectStore,
+    /// slot -> digest of the entry currently considered live.
+    slots: BTreeMap<String, String>,
+    pub stats: CacheStats,
+}
+
+impl ExecutionCache {
+    pub fn new() -> ExecutionCache {
+        ExecutionCache::default()
+    }
+
+    /// Look up `key` among `kind` entries, recording hit/miss/invalidated
+    /// statistics. Returns the classification and, on a hit, the stored
+    /// document.
+    pub fn lookup(&mut self, key: &CacheKey, kind: &str) -> (CacheOutcome, Option<String>) {
+        if let Some(doc) = self.store.get(kind, &key.digest) {
+            self.stats.hits += 1;
+            return (CacheOutcome::Hit, Some(doc.content.clone()));
+        }
+        match self.slots.get(&key.slot) {
+            Some(live) if live != &key.digest => {
+                self.stats.invalidated += 1;
+                (CacheOutcome::Invalidated, None)
+            }
+            _ => {
+                self.stats.misses += 1;
+                (CacheOutcome::Miss, None)
+            }
+        }
+    }
+
+    /// Insert a document under `key`, re-pointing the slot.
+    pub fn insert(&mut self, key: &CacheKey, kind: &str, doc: &str) {
+        self.store.put(kind, &key.digest, doc);
+        self.slots.insert(key.slot.clone(), key.digest.clone());
+        self.stats.inserts += 1;
+    }
+
+    /// Insert an auxiliary document sharing another entry's digest (e.g.
+    /// the `csv` companion of a `report`). No slot/stats bookkeeping.
+    pub fn insert_aux(&mut self, kind: &str, digest: &str, doc: &str) {
+        self.store.put(kind, digest, doc);
+    }
+
+    /// Raw digest-addressed read without statistics.
+    pub fn get(&self, kind: &str, digest: &str) -> Option<&str> {
+        self.store.get(kind, digest).map(|o| o.content.as_str())
+    }
+
+    /// Number of entries of one kind.
+    pub fn len(&self, kind: &str) -> usize {
+        self.store.len(kind)
+    }
+
+    pub fn is_empty(&self, kind: &str) -> bool {
+        self.store.is_empty(kind)
+    }
+
+    /// Forget everything (stats survive — they describe the session).
+    pub fn clear(&mut self) {
+        self.store = ObjectStore::new();
+        self.slots.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn key(step: &str, cmd: &str) -> CacheKey {
+        CacheKeyBuilder::new("logmap", step)
+            .ident("machine", "jedi")
+            .ident("point", "workload=2")
+            .field("commands", cmd)
+            .field("stage", "2026")
+            .build()
+    }
+
+    #[test]
+    fn builder_is_order_and_iteration_independent() {
+        let a = CacheKeyBuilder::new("b", "s")
+            .field("x", "1")
+            .field("y", "2")
+            .ident("machine", "m")
+            .build();
+        let b = CacheKeyBuilder::new("b", "s")
+            .ident("machine", "m")
+            .field("y", "2")
+            .field("x", "1")
+            .build();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn no_separator_ambiguity() {
+        // ("ab","c") must not collide with ("a","bc")
+        let a = CacheKeyBuilder::new("b", "s").field("ab", "c").build();
+        let b = CacheKeyBuilder::new("b", "s").field("a", "bc").build();
+        assert_ne!(a.digest, b.digest);
+    }
+
+    #[test]
+    fn lookup_classifies_miss_hit_invalidated() {
+        let mut c = ExecutionCache::new();
+        let k1 = key("execute", "logmap --workload 2");
+
+        let (st, doc) = c.lookup(&k1, "step");
+        assert_eq!(st, CacheOutcome::Miss);
+        assert!(doc.is_none());
+
+        c.insert(&k1, "step", "{\"ok\":true}");
+        let (st, doc) = c.lookup(&k1, "step");
+        assert_eq!(st, CacheOutcome::Hit);
+        assert_eq!(doc.unwrap(), "{\"ok\":true}");
+
+        // same slot (same step+point+machine), changed command
+        let k2 = key("execute", "logmap --workload 2 --fast");
+        let (st, _) = c.lookup(&k2, "step");
+        assert_eq!(st, CacheOutcome::Invalidated);
+
+        // a different step is a miss, not an invalidation
+        let k3 = key("compile", "cmake --build build");
+        let (st, _) = c.lookup(&k3, "step");
+        assert_eq!(st, CacheOutcome::Miss);
+
+        assert_eq!(c.stats.hits, 1);
+        assert_eq!(c.stats.misses, 2);
+        assert_eq!(c.stats.invalidated, 1);
+        assert_eq!(c.stats.lookups(), 4);
+    }
+
+    #[test]
+    fn reinsert_repoints_slot() {
+        let mut c = ExecutionCache::new();
+        let k1 = key("execute", "v1");
+        let k2 = key("execute", "v2");
+        c.insert(&k1, "step", "one");
+        c.insert(&k2, "step", "two");
+        // old digest still addressable (content-addressed, immutable use)
+        assert_eq!(c.get("step", &k1.digest), Some("one"));
+        // but the slot now lives at k2: looking up k1 hits its stored
+        // entry directly, a *third* digest classifies as invalidated
+        let k3 = key("execute", "v3");
+        let (st, _) = c.lookup(&k3, "step");
+        assert_eq!(st, CacheOutcome::Invalidated);
+    }
+
+    #[test]
+    fn aux_documents_share_digest() {
+        let mut c = ExecutionCache::new();
+        let k = key("run", "all");
+        c.insert(&k, "report", "{}");
+        c.insert_aux("csv", &k.digest, "a,b\n");
+        assert_eq!(c.get("csv", &k.digest), Some("a,b\n"));
+        assert_eq!(c.len("report"), 1);
+        assert_eq!(c.len("csv"), 1);
+    }
+
+    #[test]
+    fn clear_drops_entries_keeps_stats() {
+        let mut c = ExecutionCache::new();
+        let k = key("execute", "x");
+        c.insert(&k, "step", "doc");
+        c.lookup(&k, "step");
+        c.clear();
+        assert!(c.is_empty("step"));
+        assert_eq!(c.stats.hits, 1);
+        let (st, _) = c.lookup(&k, "step");
+        assert_eq!(st, CacheOutcome::Miss);
+    }
+}

@@ -17,17 +17,26 @@ use std::collections::BTreeMap;
 use crate::util::short_hash;
 use crate::util::timeutil::SimTime;
 
-#[derive(Debug, Clone, PartialEq, thiserror::Error)]
+#[derive(Debug, Clone, PartialEq)]
 pub enum StoreError {
-    #[error("unknown branch '{0}'")]
     UnknownBranch(String),
-    #[error("unknown object '{0}'")]
     UnknownObject(String),
-    #[error("path '{0}' not found")]
     PathNotFound(String),
-    #[error("io: {0}")]
     Io(String),
 }
+
+impl std::fmt::Display for StoreError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            StoreError::UnknownBranch(b) => write!(f, "unknown branch '{b}'"),
+            StoreError::UnknownObject(o) => write!(f, "unknown object '{o}'"),
+            StoreError::PathNotFound(p) => write!(f, "path '{p}' not found"),
+            StoreError::Io(e) => write!(f, "io: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for StoreError {}
 
 /// One commit on a branch (delta-based).
 #[derive(Debug, Clone, PartialEq)]

@@ -6,13 +6,18 @@
 //! * [`git`] — a content-addressed commit store with branch semantics:
 //!   the `exacb.data` orphan branch each benchmark repository carries.
 //! * [`object`] — a flat S3-like bucket/key blob store.
+//! * [`cache`] — the content-addressed execution cache layered on the
+//!   object store: digest-keyed step outcomes + whole-run reports that
+//!   make repeat collection sweeps incremental.
 //!
-//! Both are deterministic and in-memory with optional directory
+//! All are deterministic and in-memory with optional directory
 //! persistence; immutability of committed history is a tested invariant
 //! (a-posteriori time-series analyses depend on it, §IV-F).
 
+pub mod cache;
 pub mod git;
 pub mod object;
 
+pub use cache::{CacheKey, CacheKeyBuilder, CacheStats, ExecutionCache};
 pub use git::{Commit, DataStore, StoreError};
 pub use object::ObjectStore;

@@ -6,6 +6,7 @@ pub mod json;
 pub mod plot;
 pub mod prng;
 pub mod prop;
+pub mod rex;
 pub mod stats;
 pub mod table;
 pub mod timeutil;
@@ -31,6 +32,19 @@ pub fn short_hash(bytes: &[u8]) -> String {
     format!("{:016x}{:08x}", a, (b & 0xffff_ffff) as u32)[..12].to_string()
 }
 
+/// Wide hex digest (32 chars, 128 bits from two salted fnv1a-64 passes).
+/// Used for execution-cache keys, where collisions would silently replay
+/// the wrong result — 48 bits (`short_hash`) is enough for store object
+/// ids but not for a cache addressing a whole campaign's step space.
+pub fn wide_hash(bytes: &[u8]) -> String {
+    let a = fnv1a(bytes);
+    let mut salted = Vec::with_capacity(bytes.len() + 1);
+    salted.push(0xa5);
+    salted.extend_from_slice(bytes);
+    let b = fnv1a(&salted);
+    format!("{a:016x}{b:016x}")
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -40,5 +54,15 @@ mod tests {
         assert_eq!(short_hash(b"abc"), short_hash(b"abc"));
         assert_ne!(short_hash(b"abc"), short_hash(b"abd"));
         assert_eq!(short_hash(b"abc").len(), 12);
+    }
+
+    #[test]
+    fn wide_hash_is_stable_and_wide() {
+        assert_eq!(wide_hash(b"abc"), wide_hash(b"abc"));
+        assert_ne!(wide_hash(b"abc"), wide_hash(b"abd"));
+        assert_eq!(wide_hash(b"").len(), 32);
+        // the two halves are independent passes, not a repeat
+        let h = wide_hash(b"abc");
+        assert_ne!(&h[..16], &h[16..]);
     }
 }

@@ -1,0 +1,625 @@
+//! Mini regular-expression engine (substrate; DESIGN.md §2 — no `regex`
+//! crate vendored offline).
+//!
+//! Implements the subset JUBE analysis patterns actually use: literal
+//! characters, `.`, escaped characters (`\.` `\d` `\w` `\s`, inside and
+//! outside classes), character classes `[a-z0-9.eE+-]` with `^`
+//! negation, capturing groups `(...)`, and the quantifiers `?`, `*`,
+//! `+` (greedy, backtracking). Matching is unanchored; `captures_last`
+//! gives JUBE's "last match wins" semantics.
+//!
+//! Not supported (compile error, so misuse is loud rather than silently
+//! wrong): alternation `|`, counted repeats `{n,m}`, anchors `^` `$`,
+//! non-greedy quantifiers, backreferences. Braces that do not form a
+//! counted repeat stay literal characters.
+
+/// Compile error with position context.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RexError {
+    pub msg: String,
+    pub at: usize,
+}
+
+impl std::fmt::Display for RexError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "regex error at {}: {}", self.at, self.msg)
+    }
+}
+
+impl std::error::Error for RexError {}
+
+#[derive(Debug, Clone)]
+enum Node {
+    Char(char),
+    Any,
+    Class { neg: bool, ranges: Vec<(char, char)> },
+    Group(usize, Vec<Atom>),
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum Quant {
+    One,
+    Opt,
+    Star,
+    Plus,
+}
+
+#[derive(Debug, Clone)]
+struct Atom {
+    node: Node,
+    quant: Quant,
+}
+
+/// A compiled pattern.
+#[derive(Debug, Clone)]
+pub struct Rex {
+    seq: Vec<Atom>,
+    n_groups: usize,
+}
+
+/// One match: the overall span plus capture-group spans, over the
+/// original text.
+#[derive(Debug, Clone)]
+pub struct Caps<'t> {
+    text: &'t str,
+    /// Byte spans: index 0 = whole match, 1.. = groups.
+    spans: Vec<Option<(usize, usize)>>,
+}
+
+impl<'t> Caps<'t> {
+    /// Text of group `i` (0 = whole match), if it participated.
+    pub fn get(&self, i: usize) -> Option<&'t str> {
+        let (s, e) = (*self.spans.get(i)?)?;
+        Some(&self.text[s..e])
+    }
+}
+
+struct Parser<'p> {
+    chars: Vec<char>,
+    pos: usize,
+    n_groups: usize,
+    pattern: &'p str,
+}
+
+impl<'p> Parser<'p> {
+    fn err(&self, msg: &str) -> RexError {
+        let _ = self.pattern;
+        RexError {
+            msg: msg.to_string(),
+            at: self.pos,
+        }
+    }
+
+    fn peek(&self) -> Option<char> {
+        self.chars.get(self.pos).copied()
+    }
+
+    fn next(&mut self) -> Option<char> {
+        let c = self.peek()?;
+        self.pos += 1;
+        Some(c)
+    }
+
+    /// Parse a sequence until end-of-pattern or a closing `)`.
+    fn seq(&mut self, in_group: bool) -> Result<Vec<Atom>, RexError> {
+        let mut out: Vec<Atom> = Vec::new();
+        loop {
+            let Some(c) = self.peek() else {
+                if in_group {
+                    return Err(self.err("unclosed group"));
+                }
+                return Ok(out);
+            };
+            match c {
+                ')' => {
+                    if in_group {
+                        return Ok(out);
+                    }
+                    return Err(self.err("unmatched ')'"));
+                }
+                '|' => return Err(self.err("alternation '|' not supported")),
+                '*' | '+' | '?' => return Err(self.err("quantifier without target")),
+                _ => {}
+            }
+            let node = self.atom()?;
+            let quant = match self.peek() {
+                Some('?') => {
+                    self.pos += 1;
+                    Quant::Opt
+                }
+                Some('*') => {
+                    self.pos += 1;
+                    Quant::Star
+                }
+                Some('+') => {
+                    self.pos += 1;
+                    Quant::Plus
+                }
+                Some('{') if self.counted_repeat_ahead() => {
+                    return Err(self.err("counted repeats '{n,m}' not supported"));
+                }
+                _ => Quant::One,
+            };
+            out.push(Atom { node, quant });
+        }
+    }
+
+    /// True when the upcoming `{...}` has the shape of a counted repeat
+    /// (`{3}`, `{2,}`, `{2,5}`) — rejected loudly rather than silently
+    /// matched as literal braces. A brace with any other content stays a
+    /// literal.
+    fn counted_repeat_ahead(&self) -> bool {
+        let mut i = self.pos + 1; // past '{'
+        let mut digits = 0;
+        while self.chars.get(i).is_some_and(|c| c.is_ascii_digit()) {
+            i += 1;
+            digits += 1;
+        }
+        if digits == 0 {
+            return false;
+        }
+        if self.chars.get(i) == Some(&',') {
+            i += 1;
+            while self.chars.get(i).is_some_and(|c| c.is_ascii_digit()) {
+                i += 1;
+            }
+        }
+        self.chars.get(i) == Some(&'}')
+    }
+
+    fn atom(&mut self) -> Result<Node, RexError> {
+        let c = self.next().expect("caller checked");
+        match c {
+            '(' => {
+                self.n_groups += 1;
+                let idx = self.n_groups;
+                let inner = self.seq(true)?;
+                match self.next() {
+                    Some(')') => Ok(Node::Group(idx, inner)),
+                    _ => Err(self.err("unclosed group")),
+                }
+            }
+            '[' => self.class(),
+            '.' => Ok(Node::Any),
+            '\\' => match self.next() {
+                Some('d') => Ok(Node::Class {
+                    neg: false,
+                    ranges: vec![('0', '9')],
+                }),
+                Some('w') => Ok(Node::Class {
+                    neg: false,
+                    ranges: vec![('a', 'z'), ('A', 'Z'), ('0', '9'), ('_', '_')],
+                }),
+                Some('s') => Ok(Node::Class {
+                    neg: false,
+                    ranges: vec![(' ', ' '), ('\t', '\t'), ('\n', '\n'), ('\r', '\r')],
+                }),
+                Some('n') => Ok(Node::Char('\n')),
+                Some('t') => Ok(Node::Char('\t')),
+                Some(c) => Ok(Node::Char(c)),
+                None => Err(self.err("trailing backslash")),
+            },
+            '^' | '$' => Err(self.err("anchors not supported")),
+            c => Ok(Node::Char(c)),
+        }
+    }
+
+    /// Parse a `[...]` class; the leading `[` is already consumed.
+    fn class(&mut self) -> Result<Node, RexError> {
+        let mut ranges: Vec<(char, char)> = Vec::new();
+        let neg = if self.peek() == Some('^') {
+            self.pos += 1;
+            true
+        } else {
+            false
+        };
+        loop {
+            let Some(c) = self.next() else {
+                return Err(self.err("unclosed character class"));
+            };
+            match c {
+                ']' => {
+                    if ranges.is_empty() {
+                        return Err(self.err("empty character class"));
+                    }
+                    return Ok(Node::Class { neg, ranges });
+                }
+                '\\' => {
+                    let Some(esc) = self.next() else {
+                        return Err(self.err("trailing backslash in class"));
+                    };
+                    match esc {
+                        'd' => ranges.push(('0', '9')),
+                        'w' => ranges.extend([('a', 'z'), ('A', 'Z'), ('0', '9'), ('_', '_')]),
+                        's' => ranges
+                            .extend([(' ', ' '), ('\t', '\t'), ('\n', '\n'), ('\r', '\r')]),
+                        'n' => ranges.push(('\n', '\n')),
+                        't' => ranges.push(('\t', '\t')),
+                        c => ranges.push((c, c)),
+                    }
+                }
+                lo => {
+                    // range `a-z` when '-' is followed by a non-']' char
+                    if self.peek() == Some('-')
+                        && self.chars.get(self.pos + 1).is_some_and(|&c| c != ']')
+                    {
+                        self.pos += 1; // '-'
+                        let hi = self.next().expect("checked above");
+                        if hi < lo {
+                            return Err(self.err("inverted range in class"));
+                        }
+                        ranges.push((lo, hi));
+                    } else {
+                        ranges.push((lo, lo));
+                    }
+                }
+            }
+        }
+    }
+}
+
+impl Rex {
+    pub fn new(pattern: &str) -> Result<Rex, RexError> {
+        let mut p = Parser {
+            chars: pattern.chars().collect(),
+            pos: 0,
+            n_groups: 0,
+            pattern,
+        };
+        let seq = p.seq(false)?;
+        Ok(Rex {
+            seq,
+            n_groups: p.n_groups,
+        })
+    }
+
+    /// First match anywhere in `text`. Returns capture spans.
+    pub fn captures<'t>(&self, text: &'t str) -> Option<Caps<'t>> {
+        let chars: Vec<(usize, char)> = text.char_indices().collect();
+        self.scan(&chars, text.len(), 0)
+            .map(|(spans, _, _)| Caps { text, spans })
+    }
+
+    /// Last non-overlapping match in `text` (JUBE: repeated prints
+    /// converge, last value wins). The character table is built once and
+    /// reused across matches, so a pattern that matches on every line of
+    /// a large file stays linear.
+    pub fn captures_last<'t>(&self, text: &'t str) -> Option<Caps<'t>> {
+        let chars: Vec<(usize, char)> = text.char_indices().collect();
+        let mut from = 0usize; // char index
+        let mut last = None;
+        while from <= chars.len() {
+            let Some((spans, start_idx, end_idx)) = self.scan(&chars, text.len(), from) else {
+                break;
+            };
+            // guarantee progress past zero-width matches
+            from = if end_idx > start_idx {
+                end_idx
+            } else {
+                start_idx + 1
+            };
+            last = Some(Caps { text, spans });
+        }
+        last
+    }
+
+    /// Whether the pattern matches anywhere in `text`.
+    pub fn is_match(&self, text: &str) -> bool {
+        self.captures(text).is_some()
+    }
+
+    /// Try each start position from char index `from`; returns
+    /// (capture spans, match start char index, match end char index).
+    fn scan(
+        &self,
+        chars: &[(usize, char)],
+        text_len: usize,
+        from: usize,
+    ) -> Option<(Vec<Option<(usize, usize)>>, usize, usize)> {
+        for start in from..=chars.len() {
+            let mut spans: Spans = vec![None; self.n_groups + 1];
+            let end = m_seq(&self.seq, chars, text_len, start, &mut spans, &mut |j, _| {
+                Some(j)
+            });
+            if let Some(end_idx) = end {
+                let s = chars.get(start).map(|&(b, _)| b).unwrap_or(text_len);
+                let e = chars.get(end_idx).map(|&(b, _)| b).unwrap_or(text_len);
+                spans[0] = Some((s, e));
+                return Some((spans, start, end_idx));
+            }
+        }
+        None
+    }
+}
+
+fn class_matches(neg: bool, ranges: &[(char, char)], c: char) -> bool {
+    let hit = ranges.iter().any(|&(lo, hi)| c >= lo && c <= hi);
+    hit != neg
+}
+
+type Spans = Vec<Option<(usize, usize)>>;
+/// Continuation: "the rest of the pattern matches from char index j".
+type Cont<'c> = &'c mut dyn FnMut(usize, &mut Spans) -> Option<usize>;
+
+/// Single-character node match (no groups); index after the match.
+fn m_simple(node: &Node, chars: &[(usize, char)], i: usize) -> Option<usize> {
+    match node {
+        Node::Char(c) => (chars.get(i)?.1 == *c).then_some(i + 1),
+        Node::Any => chars.get(i).map(|_| i + 1),
+        Node::Class { neg, ranges } => {
+            class_matches(*neg, ranges, chars.get(i)?.1).then_some(i + 1)
+        }
+        Node::Group(..) => unreachable!("groups go through m_node"),
+    }
+}
+
+/// Match one node at `i`, then hand the end position to `k`. Written in
+/// continuation-passing style so backtracking reaches *into* groups: if
+/// the continuation fails, a group retries its inner alternatives (e.g.
+/// a shorter `.+`) before giving up — matching the regex crate's
+/// semantics. Group spans are unwound when the continuation rejects.
+fn m_node(
+    node: &Node,
+    chars: &[(usize, char)],
+    text_len: usize,
+    i: usize,
+    spans: &mut Spans,
+    k: Cont,
+) -> Option<usize> {
+    match node {
+        Node::Group(idx, inner) => {
+            let start_b = chars.get(i).map(|&(b, _)| b).unwrap_or(text_len);
+            m_seq(inner, chars, text_len, i, spans, &mut |j, sp| {
+                let end_b = chars.get(j).map(|&(b, _)| b).unwrap_or(text_len);
+                let prev = sp[*idx];
+                sp[*idx] = Some((start_b, end_b));
+                match k(j, sp) {
+                    Some(e) => Some(e),
+                    None => {
+                        sp[*idx] = prev;
+                        None
+                    }
+                }
+            })
+        }
+        simple => {
+            let j = m_simple(simple, chars, i)?;
+            k(j, spans)
+        }
+    }
+}
+
+/// Greedy `*`/`+` repetition of `node` with full backtracking: prefer
+/// one more repetition (letting the repetition itself backtrack), fall
+/// back to stopping here once `min` repetitions are satisfied.
+fn m_rep(
+    node: &Node,
+    min: usize,
+    chars: &[(usize, char)],
+    text_len: usize,
+    i: usize,
+    spans: &mut Spans,
+    k: Cont,
+) -> Option<usize> {
+    if matches!(node, Node::Group(..)) {
+        let saved = spans.clone();
+        let r = m_node(node, chars, text_len, i, spans, &mut |j, sp| {
+            if j == i {
+                return None; // zero-width repetition would never progress
+            }
+            m_rep(node, min.saturating_sub(1), chars, text_len, j, sp, k)
+        });
+        if r.is_some() {
+            return r;
+        }
+        *spans = saved;
+        if min == 0 {
+            k(i, spans)
+        } else {
+            None
+        }
+    } else {
+        // single-char node: no inner alternatives, so enumerating the
+        // repetition counts longest-first is complete (and keeps the
+        // recursion depth bounded by the pattern, not the text)
+        let mut ends = vec![i];
+        let mut p = i;
+        while let Some(j) = m_simple(node, chars, p) {
+            if j == p {
+                break;
+            }
+            ends.push(j);
+            p = j;
+        }
+        for reps in (min..ends.len()).rev() {
+            if let Some(e) = k(ends[reps], spans) {
+                return Some(e);
+            }
+        }
+        None
+    }
+}
+
+/// Backtracking sequence match starting at char index `i`; calls `cont`
+/// with the end position once the whole sequence has matched.
+fn m_seq(
+    seq: &[Atom],
+    chars: &[(usize, char)],
+    text_len: usize,
+    i: usize,
+    spans: &mut Spans,
+    cont: Cont,
+) -> Option<usize> {
+    let Some((first, rest)) = seq.split_first() else {
+        return cont(i, spans);
+    };
+    match first.quant {
+        Quant::One => m_node(&first.node, chars, text_len, i, spans, &mut |j, sp| {
+            m_seq(rest, chars, text_len, j, sp, cont)
+        }),
+        Quant::Opt => {
+            // snapshot so a failed present-branch leaves no stale group
+            // spans behind (a group that did not participate must read
+            // as None, matching the regex crate)
+            let saved = spans.clone();
+            let r = m_node(&first.node, chars, text_len, i, spans, &mut |j, sp| {
+                m_seq(rest, chars, text_len, j, sp, cont)
+            });
+            if r.is_some() {
+                return r;
+            }
+            *spans = saved;
+            m_seq(rest, chars, text_len, i, spans, cont)
+        }
+        Quant::Star | Quant::Plus => {
+            let min = if first.quant == Quant::Plus { 1 } else { 0 };
+            m_rep(&first.node, min, chars, text_len, i, spans, &mut |j, sp| {
+                m_seq(rest, chars, text_len, j, sp, cont)
+            })
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn group1(pattern: &str, text: &str) -> Option<String> {
+        let re = Rex::new(pattern).unwrap();
+        let caps = re.captures_last(text)?;
+        caps.get(1)
+            .or_else(|| caps.get(0))
+            .map(str::to_string)
+    }
+
+    #[test]
+    fn literal_and_capture() {
+        assert_eq!(
+            group1("time: ([0-9.eE+-]+)", "setup done\ntime: 12.5\n"),
+            Some("12.5".into())
+        );
+        assert_eq!(group1("x", "an x marks the spot"), Some("x".into()));
+        assert_eq!(group1("zz", "no match here"), None);
+    }
+
+    #[test]
+    fn last_match_wins() {
+        assert_eq!(group1("t=([0-9]+)", "t=1\nt=2\nt=3"), Some("3".into()));
+        assert_eq!(
+            group1("time: ([0-9.eE+-]+)", "time: 1.0\ntime: 2.5e-3\n"),
+            Some("2.5e-3".into())
+        );
+    }
+
+    #[test]
+    fn classes_and_ranges() {
+        let re = Rex::new("[a-f0-9]+").unwrap();
+        assert_eq!(re.captures("zz deadbeef!").unwrap().get(0), Some("deadbeef"));
+        let re = Rex::new("[^ ]+").unwrap();
+        assert_eq!(re.captures("  word rest").unwrap().get(0), Some("word"));
+        // '-' at class end is a literal
+        let re = Rex::new("[0-9+-]+").unwrap();
+        assert_eq!(re.captures("x -12+3 y").unwrap().get(0), Some("-12+3"));
+    }
+
+    #[test]
+    fn quantifiers() {
+        assert_eq!(group1("ab?c", "ac abc"), Some("abc".into()));
+        assert_eq!(group1("ab*c", "abbbc"), Some("abbbc".into()));
+        let re = Rex::new("a+").unwrap();
+        assert_eq!(re.captures("baaad").unwrap().get(0), Some("aaa"));
+        // greedy with backtracking: the '+' must give back one 'b'
+        let re = Rex::new("ab+b").unwrap();
+        assert_eq!(re.captures("abbb").unwrap().get(0), Some("abbb"));
+    }
+
+    #[test]
+    fn dot_and_escapes() {
+        assert_eq!(group1("a.c", "abc"), Some("abc".into()));
+        assert_eq!(group1(r"1\.5", "x1.5y"), Some("1.5".into()));
+        assert_eq!(group1(r"\d+", "abc 456"), Some("456".into()));
+        assert_eq!(group1(r"\w+", "  hi_9 "), Some("hi_9".into()));
+    }
+
+    #[test]
+    fn invalid_patterns_rejected() {
+        assert!(Rex::new("([").is_err());
+        assert!(Rex::new("(abc").is_err());
+        assert!(Rex::new("abc)").is_err());
+        assert!(Rex::new("[abc").is_err());
+        assert!(Rex::new("*x").is_err());
+        assert!(Rex::new("a|b").is_err());
+        assert!(Rex::new("\\").is_err());
+        // counted repeats are loudly rejected, literal braces are fine
+        assert!(Rex::new("a{3}").is_err());
+        assert!(Rex::new("a{2,}").is_err());
+        assert!(Rex::new("a{2,5}").is_err());
+        assert_eq!(Rex::new("a{x}").unwrap().captures("za{x}b").unwrap().get(0), Some("a{x}"));
+        assert_eq!(Rex::new("{3}").unwrap().captures("{3}").unwrap().get(0), Some("{3}"));
+    }
+
+    #[test]
+    fn class_escapes_expand() {
+        assert_eq!(group1(r"mem: ([\d.]+)", "mem: 12.5 MB"), Some("12.5".into()));
+        assert_eq!(group1(r"[\w]+", "  a_b9! "), Some("a_b9".into()));
+        let re = Rex::new(r"[^\s]+").unwrap();
+        assert_eq!(re.captures("  token rest").unwrap().get(0), Some("token"));
+    }
+
+    #[test]
+    fn backtracks_into_groups() {
+        // the inner `.+` must give back " MB" for the literal tail
+        assert_eq!(group1("mem: (.+) MB", "mem: 12.5 MB"), Some("12.5".into()));
+        // group followed by a char the greedy class would also eat
+        assert_eq!(group1("([0-9]+)4", "1234"), Some("123".into()));
+        // nested group backtracking
+        let re = Rex::new("a(b(c+))cd").unwrap();
+        let caps = re.captures("abcccd").unwrap();
+        assert_eq!(caps.get(0), Some("abcccd"));
+        assert_eq!(caps.get(1), Some("bcc"));
+        assert_eq!(caps.get(2), Some("cc"));
+    }
+
+    #[test]
+    fn failed_backtracking_branch_leaves_no_stale_spans() {
+        // the optional group matches greedily, then the overall match
+        // backtracks to the group-absent branch: group 1 must read None
+        let re = Rex::new("(ab)?a").unwrap();
+        let caps = re.captures("ab a").unwrap();
+        assert_eq!(caps.get(0), Some("a"));
+        assert_eq!(caps.get(1), None);
+        // star over a group that ends up with zero reps
+        let re = Rex::new("(xy)*x").unwrap();
+        let caps = re.captures("xyz x").unwrap();
+        assert_eq!(caps.get(0), Some("x"));
+        assert_eq!(caps.get(1), None);
+    }
+
+    #[test]
+    fn groups_nested_in_sequence() {
+        let re = Rex::new("nodes=([0-9]+) tasks=([0-9]+)").unwrap();
+        let caps = re.captures("run nodes=32 tasks=4 done").unwrap();
+        assert_eq!(caps.get(1), Some("32"));
+        assert_eq!(caps.get(2), Some("4"));
+        assert_eq!(caps.get(0), Some("nodes=32 tasks=4"));
+    }
+
+    #[test]
+    fn unicode_text_is_safe() {
+        assert_eq!(group1("[0-9]+", "π≈3 — 14159?"), Some("14159".into()));
+        assert_eq!(group1("m.p", "map möp"), Some("möp".into()));
+    }
+
+    #[test]
+    fn scientific_float_pattern() {
+        // the exact pattern every seed benchmark definition uses
+        let re = Rex::new("time: ([0-9.eE+-]+)").unwrap();
+        for (text, want) in [
+            ("time: 123.456", "123.456"),
+            ("time: 1.2e-07", "1.2e-07"),
+            ("time: 9E+4", "9E+4"),
+        ] {
+            assert_eq!(re.captures_last(text).unwrap().get(1), Some(want));
+        }
+    }
+}

