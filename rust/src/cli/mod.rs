@@ -27,7 +27,9 @@ USAGE: exacb <command> [flags]
 COMMANDS:
   quickstart    run the paper's §II logmap example end to end
   collection    run a JUREAP-scale campaign (--apps N --days D --machine M
-                --machines M1,M2 --cache --sweeps K for incremental re-runs)
+                --machines M1,M2 --cache --sweeps K for incremental re-runs;
+                --concurrent interleaves all pipelines on the shared
+                timeline via the discrete-event loop)
   figures       regenerate every paper table/figure (--days D --out DIR --only ID)
   ablation      run the §III integration-mode ablation (--benchmarks N)
   components    list the CI/CD component catalog
@@ -117,6 +119,7 @@ fn cmd_collection(args: &Args) -> i32 {
     let seed = args.u64("seed", 20260101);
     let sweeps = args.u64("sweeps", 1).max(1);
     let cache = args.str("cache", "false") == "true";
+    let concurrent = args.str("concurrent", "false") == "true";
     let mut world = World::new(seed);
     if cache || sweeps > 1 {
         world.enable_cache();
@@ -139,13 +142,18 @@ fn cmd_collection(args: &Args) -> i32 {
     let machine_refs: Vec<&str> = machine_list.iter().map(String::as_str).collect();
     collection::onboard_multi(&mut world, &apps, &machine_refs, &queue);
     println!(
-        "onboarded {n} applications on {}; running {days} simulated day(s) x {sweeps} sweep(s)…",
-        machine_list.join(",")
+        "onboarded {n} applications on {}; running {days} simulated day(s) x {sweeps} sweep(s){}…",
+        machine_list.join(","),
+        if concurrent { " [concurrent]" } else { "" }
     );
     let mut summary = None;
     for s in 0..sweeps {
         let t = std::time::Instant::now();
-        let sum = collection::run_campaign_queued(&mut world, &apps, &machine_refs, days);
+        let sum = if concurrent {
+            collection::run_campaign_concurrent(&mut world, &apps, &machine_refs, days)
+        } else {
+            collection::run_campaign_queued(&mut world, &apps, &machine_refs, days)
+        };
         println!(
             "sweep {}: {:.1} ms wall, {} cumulative cache hits",
             s + 1,
@@ -163,6 +171,11 @@ fn cmd_collection(args: &Args) -> i32 {
         summary.core_hours
     );
     print!("{}", summary.table().render());
+    println!("\nqueue-wait statistics (per machine):");
+    print!(
+        "{}",
+        crate::coordinator::postproc::queue_stats(&world).render()
+    );
     println!("{}", summary.to_json().pretty());
     0
 }
@@ -323,6 +336,16 @@ mod tests {
         assert_eq!(
             run_str(
                 "collection --apps 2 --days 1 --seed 6 --cache --sweeps 2 --machines jupiter,jedi"
+            ),
+            0
+        );
+    }
+
+    #[test]
+    fn concurrent_collection_runs() {
+        assert_eq!(
+            run_str(
+                "collection --apps 4 --days 1 --seed 9 --machines jupiter,jedi,jureca --concurrent true"
             ),
             0
         );

@@ -155,7 +155,10 @@ pub fn standard_machines() -> Vec<Machine> {
             nodes: 192,
             gpus_per_node: 4,
             cores_per_node: 128,
-            queues: vec!["dc-gpu".into(), "dc-gpu-devel".into()],
+            // "all" is the cross-system campaign partition name shared
+            // with jedi/jupiter, so multi-machine collections can target
+            // one queue name everywhere.
+            queues: vec!["dc-gpu".into(), "dc-gpu-devel".into(), "all".into()],
             network: NetworkLink::hdr100(),
             power: PowerModel::a100(),
             stream_efficiency: 0.86,

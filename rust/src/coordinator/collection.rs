@@ -328,6 +328,76 @@ pub fn run_campaign_queued(
     summarize(world, apps, days, pipelines_run, pipelines_succeeded)
 }
 
+/// Run a campaign with **true concurrency**: per simulated day, every
+/// (app, machine) item of the work queue is started as a resumable
+/// pipeline task and all of them are driven together by the coordinator
+/// event loop — N apps × M machines in flight simultaneously on one
+/// shared virtual timeline. Same-trigger pipelines submit before any
+/// simulated time passes, so real queue waits, backfill, and
+/// account-budget contention emerge on shared partitions (the JUREAP
+/// scenario the sequential dispatcher cannot express).
+///
+/// Determinism and equivalence: each task gets the same per-item PRNG
+/// stream `seed ^ fnv1a("day|app")` that [`dispatch_item`] installs, so
+/// on a single machine with no contention-induced day drift this
+/// produces byte-identical [`super::postproc::collection_results_table`]
+/// output to [`run_campaign_queued`] (property-tested).
+pub fn run_campaign_concurrent(
+    world: &mut World,
+    apps: &[PortfolioApp],
+    machines: &[&str],
+    days: i64,
+) -> CollectionSummary {
+    let assignments = assign(apps, machines);
+    let queue = WorkQueue::build(&assignments, days, world.seed);
+    let mut pipelines_run = 0;
+    let mut pipelines_succeeded = 0;
+    for day in 0..days {
+        world.advance_to(SimTime::from_days(day).add_secs(3 * 3600));
+        let mut tasks = Vec::new();
+        let mut patched: Vec<&PortfolioApp> = Vec::new();
+        for item in queue.items.iter().filter(|i| i.day == day) {
+            let app = apps
+                .iter()
+                .find(|a| a.name == item.app)
+                .expect("queue items come from the app list");
+            // the same per-item stream dispatch_item uses: the flaky-
+            // software draw comes first, the pipeline's noise follows
+            let mut rng = Prng::new(
+                world.seed ^ crate::util::fnv1a(format!("{day}|{}", app.name).as_bytes()),
+            );
+            let fail_today = rng.bool_with(app.failure_rate);
+            if fail_today {
+                if let Some(repo) = world.repos.get_mut(&app.name) {
+                    patch_command(repo, &app.command(), "crashing-binary --boom");
+                }
+                patched.push(app);
+            }
+            pipelines_run += 1;
+            match world.begin_pipeline(&app.name, crate::ci::Trigger::Scheduled) {
+                Ok(mut task) => {
+                    task.rng = Some(rng);
+                    tasks.push(task);
+                }
+                Err(_) => {} // counted as run, never as succeeded
+            }
+        }
+        let pids = super::event_loop::drive(world, tasks);
+        for pid in pids {
+            if world.pipeline(pid).map(|p| p.succeeded()).unwrap_or(false) {
+                pipelines_succeeded += 1;
+            }
+        }
+        // un-patch after the day's tasks returned their repos
+        for app in patched {
+            if let Some(repo) = world.repos.get_mut(&app.name) {
+                patch_command(repo, "crashing-binary --boom", &app.command());
+            }
+        }
+    }
+    summarize(world, apps, days, pipelines_run, pipelines_succeeded)
+}
+
 fn patch_command(repo: &mut BenchmarkRepo, from: &str, to: &str) {
     for (path, content) in repo.files.iter_mut() {
         if path.ends_with("app.yml") {
@@ -537,6 +607,47 @@ mod tests {
         assert_eq!(
             warm.cache.misses, cold.cache.misses,
             "no new misses on a warm sweep"
+        );
+    }
+
+    #[test]
+    fn concurrent_campaign_matches_sequential_on_one_machine() {
+        let apps = portfolio::generate(6, 29);
+        let machines = ["jedi"];
+        let mut seq = World::new(29);
+        onboard_multi(&mut seq, &apps, &machines, "all");
+        let s1 = run_campaign_queued(&mut seq, &apps, &machines, 2);
+        let mut con = World::new(29);
+        onboard_multi(&mut con, &apps, &machines, "all");
+        let s2 = run_campaign_concurrent(&mut con, &apps, &machines, 2);
+        // same per-item PRNG streams: identical outcomes either way
+        assert_eq!(s1.pipelines_run, s2.pipelines_run);
+        assert_eq!(s1.pipelines_succeeded, s2.pipelines_succeeded);
+        assert_eq!(s1.reports_recorded, s2.reports_recorded);
+        let t1 = crate::coordinator::postproc::collection_results_table(&seq, "runtime");
+        let t2 = crate::coordinator::postproc::collection_results_table(&con, "runtime");
+        assert_eq!(t1.to_csv(), t2.to_csv());
+    }
+
+    #[test]
+    fn concurrent_campaign_interleaves_submissions() {
+        // all of a day's pipelines must be in the queue before any
+        // simulated time passes — that is what the sequential path
+        // cannot express
+        let mut apps = portfolio::generate(4, 37);
+        for a in &mut apps {
+            a.failure_rate = 0.0;
+        }
+        let machines = ["jedi"];
+        let mut world = World::new(37);
+        onboard_multi(&mut world, &apps, &machines, "all");
+        run_campaign_concurrent(&mut world, &apps, &machines, 1);
+        let bs = world.batch.get("jedi").unwrap();
+        let submits: Vec<i64> = bs.records().iter().map(|r| r.submit_time.0).collect();
+        assert_eq!(submits.len(), 4);
+        assert!(
+            submits.windows(2).all(|w| w[0] == w[1]),
+            "same-trigger submissions must share the submit instant: {submits:?}"
         );
     }
 

@@ -1,0 +1,401 @@
+//! The coordinator event loop: many in-flight pipelines on one shared
+//! virtual timeline.
+//!
+//! The pre-event-loop coordinator ran each pipeline to completion before
+//! the next started, so two applications on the same machine never
+//! actually contended for nodes — the work queue only interleaved
+//! *dispatch order*, never *timelines*. Here each pipeline is a
+//! [`PipelineTask`]: a resumable state machine that advances its CI
+//! invocations (execution stages drive a
+//! [`crate::harness::RunCursor`] through [`super::execution::ExecutionTask`])
+//! and *yields* whenever a remote step is submitted. [`drive`]
+//! interleaves all tasks by repeatedly completing the **globally
+//! earliest** batch-system event across all machines and waking the
+//! pipeline that was waiting on the finished job. Queue waits, backfill,
+//! and account-budget contention therefore emerge from the shared
+//! timeline instead of being serialized away.
+//!
+//! Determinism: tasks are polled in creation order, machines are visited
+//! in `BTreeMap` (name) order with event time as the primary key, and
+//! each task carries its own PRNG stream (seeded per campaign item by
+//! the caller), so a campaign's results are bit-reproducible and
+//! independent of how the interleaving happens to schedule.
+
+use crate::ci::{CiJob, CiJobState, ComponentInvocation, Pipeline, Trigger};
+use crate::util::prng::Prng;
+
+use super::execution::{ExecPoll, ExecutionParams, ExecutionTask};
+use super::postproc;
+use super::repo::BenchmarkRepo;
+use super::world::World;
+
+/// What a pipeline task is doing after a poll.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum TaskPoll {
+    /// Waiting for batch job `jobid` on `machine` to complete.
+    Waiting { machine: String, jobid: u64 },
+    /// All invocations ran; finish with [`PipelineTask::finish_into`].
+    Done,
+}
+
+enum Started {
+    /// The invocation is an execution orchestrator: runs resumably.
+    Execution(Box<ExecutionTask>),
+    /// The invocation completed synchronously (post-processing,
+    /// validation failures, unknown components).
+    Jobs(Vec<CiJob>),
+}
+
+/// One in-flight pipeline: owns its repository (checked out of
+/// `world.repos` for the duration of the run) and the pipeline record
+/// under construction.
+pub struct PipelineTask {
+    repo: BenchmarkRepo,
+    pipeline: Pipeline,
+    invocations: Vec<ComponentInvocation>,
+    inv_idx: usize,
+    exec: Option<Box<ExecutionTask>>,
+    /// Per-pipeline noise stream. `None` uses the world PRNG, which
+    /// reproduces the sequential dispatch behaviour exactly; concurrent
+    /// campaigns install a per-item stream so results are independent of
+    /// the interleaving.
+    pub rng: Option<Prng>,
+    waiting: Option<(String, u64)>,
+    done: bool,
+}
+
+impl PipelineTask {
+    /// Parse the repository's CI configuration and allocate the pipeline
+    /// id. On a config error the repository is handed back so the caller
+    /// can restore it into the world.
+    pub(super) fn new(
+        world: &mut World,
+        repo: BenchmarkRepo,
+        trigger: Trigger,
+    ) -> Result<PipelineTask, (BenchmarkRepo, String)> {
+        let config = match repo.ci_config() {
+            Ok(c) => c,
+            Err(e) => return Err((repo, e)),
+        };
+        let pipeline = Pipeline {
+            id: world.ids.pipeline_id(),
+            repo: repo.name.clone(),
+            trigger,
+            created: world.now(),
+            jobs: Vec::new(),
+        };
+        Ok(PipelineTask {
+            repo,
+            pipeline,
+            invocations: config.invocations,
+            inv_idx: 0,
+            exec: None,
+            rng: None,
+            waiting: None,
+            done: false,
+        })
+    }
+
+    pub fn pipeline_id(&self) -> u64 {
+        self.pipeline.id
+    }
+
+    pub fn repo_name(&self) -> &str {
+        &self.pipeline.repo
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.done
+    }
+
+    /// The (machine, jobid) this task is blocked on, if any.
+    pub fn waiting_on(&self) -> Option<(&str, u64)> {
+        self.waiting.as_ref().map(|(m, j)| (m.as_str(), *j))
+    }
+
+    /// Advance through invocations until the task blocks on a batch job
+    /// or finishes. Pass the completed awaited jobid when resuming.
+    pub fn poll(&mut self, world: &mut World, mut completed: Option<u64>) -> TaskPoll {
+        loop {
+            if let Some(exec) = self.exec.as_mut() {
+                match exec.poll(world, &mut self.repo, self.rng.as_mut(), completed.take()) {
+                    ExecPoll::Waiting { machine, jobid } => {
+                        self.waiting = Some((machine.clone(), jobid));
+                        return TaskPoll::Waiting { machine, jobid };
+                    }
+                    ExecPoll::Done => {
+                        self.waiting = None;
+                        let finished = self.exec.take().expect("just polled");
+                        let (jobs, _report) = finished.into_result();
+                        self.pipeline.jobs.extend(jobs);
+                        self.inv_idx += 1;
+                    }
+                }
+                continue;
+            }
+            if self.inv_idx >= self.invocations.len() {
+                self.done = true;
+                return TaskPoll::Done;
+            }
+            let invocation = self.invocations[self.inv_idx].clone();
+            match self.start_invocation(world, &invocation) {
+                Started::Execution(task) => self.exec = Some(task),
+                Started::Jobs(jobs) => {
+                    self.pipeline.jobs.extend(jobs);
+                    self.inv_idx += 1;
+                }
+            }
+        }
+    }
+
+    /// Validate one component invocation against the catalog and route
+    /// it: execution components become resumable tasks, post-processing
+    /// components run synchronously (they read recorded reports and
+    /// never touch the batch system).
+    fn start_invocation(
+        &mut self,
+        world: &mut World,
+        invocation: &ComponentInvocation,
+    ) -> Started {
+        let component = invocation.component.as_str();
+        fn validate_failure(world: &mut World, component: &str, err: &str) -> Started {
+            let mut job = CiJob::new(world.ids.job_id(), &format!("{component}.validate"));
+            job.log_line(format!("input validation failed: {err}"));
+            job.state = CiJobState::Failed;
+            Started::Jobs(vec![job])
+        }
+        // input validation against the component schema
+        let resolved = match world
+            .registry
+            .get(component)
+            .and_then(|spec| spec.resolve(&invocation.inputs))
+        {
+            Ok(r) => r,
+            Err(e) => return validate_failure(world, component, &e.to_string()),
+        };
+        match component {
+            "execution@v3" | "example/jube@v3.2" | "feature-injection@v3" => {
+                match ExecutionParams::from_inputs(&resolved) {
+                    Ok(params) => Started::Execution(Box::new(ExecutionTask::new(
+                        params,
+                        self.pipeline.id,
+                    ))),
+                    Err(e) => validate_failure(world, component, &e),
+                }
+            }
+            "jureap/energy@v3" => Started::Jobs(postproc::run_energy_study(
+                world,
+                &mut self.repo,
+                &resolved,
+                self.pipeline.id,
+            )),
+            "machine-comparison@v3" => Started::Jobs(vec![
+                postproc::run_machine_comparison(world, &self.repo, &resolved),
+            ]),
+            "scalability@v3" => {
+                Started::Jobs(vec![postproc::run_scalability(world, &self.repo, &resolved)])
+            }
+            "time-series@v3" => {
+                Started::Jobs(vec![postproc::run_time_series(world, &self.repo, &resolved)])
+            }
+            other => {
+                let mut job =
+                    CiJob::new(world.ids.job_id(), &format!("{other}.dispatch"));
+                job.log_line(format!(
+                    "component '{other}' validated but has no orchestrator"
+                ));
+                job.state = CiJobState::Failed;
+                Started::Jobs(vec![job])
+            }
+        }
+    }
+
+    /// Fail the in-flight execution (if any) and mark the task done.
+    fn give_up(&mut self, reason: &str) {
+        if let Some(mut exec) = self.exec.take() {
+            exec.abort(reason);
+            let (jobs, _) = exec.into_result();
+            self.pipeline.jobs.extend(jobs);
+        }
+        self.waiting = None;
+        self.done = true;
+    }
+
+    /// Return the finished pipeline to the world: the pipeline record is
+    /// appended and the repository restored.
+    pub fn finish_into(self, world: &mut World) {
+        world.pipelines.push(self.pipeline);
+        world.repos.insert(self.repo.name.clone(), self.repo);
+    }
+}
+
+/// Retire every finished task into the world.
+fn finalize_done(world: &mut World, tasks: &mut Vec<PipelineTask>) {
+    let mut i = 0;
+    while i < tasks.len() {
+        if tasks[i].is_done() {
+            tasks.remove(i).finish_into(world);
+        } else {
+            i += 1;
+        }
+    }
+}
+
+/// Drive a set of pipeline tasks to completion on the shared timeline.
+///
+/// All tasks are first polled to their initial yield (so every pipeline
+/// submits its head-of-line batch job before any simulated time passes —
+/// this is what makes same-trigger pipelines contend). The loop then
+/// repeatedly completes the globally earliest scheduler event across all
+/// machines and resumes whichever task was waiting on the finished job.
+/// Returns the pipeline ids in task order; the finished pipelines land
+/// in `world.pipelines` and every repository is restored to
+/// `world.repos`.
+pub fn drive(world: &mut World, mut tasks: Vec<PipelineTask>) -> Vec<u64> {
+    let pids: Vec<u64> = tasks.iter().map(|t| t.pipeline_id()).collect();
+    for task in tasks.iter_mut() {
+        if !task.is_done() && task.waiting.is_none() {
+            task.poll(world, None);
+        }
+    }
+    finalize_done(world, &mut tasks);
+    while !tasks.is_empty() {
+        // resume any task whose awaited job is already terminal (e.g.
+        // completed incidentally by a clock advance elsewhere)
+        let mut resumed = false;
+        for task in tasks.iter_mut() {
+            let Some((machine, jobid)) = task.waiting.clone() else {
+                continue;
+            };
+            let terminal = world
+                .batch
+                .get(&machine)
+                .and_then(|b| b.job_state(jobid))
+                .map(|s| s.is_terminal())
+                // an unknown job can never complete; resuming collects a
+                // failed outcome instead of hanging the loop
+                .unwrap_or(true);
+            if terminal {
+                task.poll(world, Some(jobid));
+                resumed = true;
+            }
+        }
+        finalize_done(world, &mut tasks);
+        if tasks.is_empty() {
+            break;
+        }
+        if resumed {
+            continue;
+        }
+        // the global virtual clock: the earliest next completion event
+        // over all machines (ties broken by machine name — BTreeMap
+        // iteration keeps this deterministic)
+        let next = world
+            .batch
+            .iter()
+            .filter_map(|(name, bs)| bs.peek_next_event().map(|t| (t, name.clone())))
+            .min();
+        let Some((_, machine)) = next else {
+            // no running job anywhere, yet tasks are still waiting: the
+            // awaited jobs can never complete — fail loudly, don't spin
+            for task in tasks.iter_mut() {
+                task.give_up("event loop stalled: awaited job never completes");
+            }
+            finalize_done(world, &mut tasks);
+            break;
+        };
+        let completed = world
+            .batch
+            .get_mut(&machine)
+            .and_then(|b| b.advance_next_event());
+        if let Some(jobid) = completed {
+            for task in tasks.iter_mut() {
+                let waits_here = task
+                    .waiting
+                    .as_ref()
+                    .map(|(m, j)| m == &machine && *j == jobid)
+                    .unwrap_or(false);
+                if waits_here {
+                    task.poll(world, Some(jobid));
+                }
+            }
+            finalize_done(world, &mut tasks);
+        }
+    }
+    pids
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::timeutil::SimTime;
+
+    fn app_repo(name: &str, machine: &str, nodes: u64) -> BenchmarkRepo {
+        let jube = format!(
+            "name: {name}\nparametersets:\n  - name: run\n    parameters:\n      - name: nodes\n        value: {nodes}\nsteps:\n  - name: execute\n    use: [run]\n    remote: true\n    do:\n      - simapp --name {name} --flops 200000 --steps 50\n",
+        );
+        let ci = format!(
+            "include:\n  - component: execution@v3\n    inputs:\n      prefix: \"{machine}.{name}\"\n      machine: \"{machine}\"\n      queue: \"all\"\n      project: \"cjsc\"\n      budget: \"zam\"\n      jube_file: \"b.yml\"\n"
+        );
+        BenchmarkRepo::new(name)
+            .with_file("b.yml", &jube)
+            .with_file(".gitlab-ci.yml", &ci)
+    }
+
+    #[test]
+    fn concurrent_pipelines_share_the_timeline() {
+        // jedi's "all" partition has 48 nodes; four 16-node pipelines
+        // submitted at the same trigger cannot all start at once.
+        let mut world = World::new(7);
+        world.advance_to(SimTime::from_days(1));
+        let names = ["app-a", "app-b", "app-c", "app-d"];
+        for n in &names {
+            world.add_repo(app_repo(n, "jedi", 16));
+        }
+        let mut tasks = Vec::new();
+        for n in &names {
+            tasks.push(world.begin_pipeline(n, Trigger::Scheduled).unwrap());
+        }
+        let pids = drive(&mut world, tasks);
+        assert_eq!(pids.len(), 4);
+        for pid in &pids {
+            assert!(world.pipeline(*pid).unwrap().succeeded());
+        }
+        // every repo was restored
+        for n in &names {
+            assert!(world.repo(n).is_some(), "{n}");
+        }
+        // contention is real: 4x16 nodes on a 48-node partition means at
+        // least one job waited for another to finish, beyond the fixed
+        // scheduler latency
+        let bs = world.batch.get("jedi").unwrap();
+        let latency = bs.sched_latency_s;
+        let max_wait = bs
+            .records()
+            .iter()
+            .filter_map(|r| r.queue_wait_s())
+            .max()
+            .unwrap();
+        assert!(
+            max_wait > latency,
+            "expected a real queue wait, max was {max_wait}s"
+        );
+        // all submissions happened at the shared trigger instant
+        let submits: Vec<i64> = bs.records().iter().map(|r| r.submit_time.0).collect();
+        assert!(submits.windows(2).all(|w| w[0] == w[1]), "{submits:?}");
+    }
+
+    #[test]
+    fn drive_on_empty_task_list_is_a_noop() {
+        let mut world = World::new(1);
+        assert!(drive(&mut world, Vec::new()).is_empty());
+    }
+
+    #[test]
+    fn config_error_restores_repo() {
+        let mut world = World::new(3);
+        world.add_repo(BenchmarkRepo::new("broken").with_file(".gitlab-ci.yml", "stages: [x]\n"));
+        assert!(world.begin_pipeline("broken", Trigger::Manual).is_err());
+        assert!(world.repo("broken").is_some());
+    }
+}

@@ -1,5 +1,5 @@
 //! The Execution Orchestrator (paper §V-A.1) and its feature-injection
-//! variant (§V-A.3).
+//! variant (§V-A.3), as a **resumable state machine**.
 //!
 //! Stages, each an individual CI job communicating through artifacts:
 //!
@@ -9,18 +9,27 @@
 //! 3. **record** — assemble the protocol report + Table-I `results.csv`
 //!    and (when `record: true`) commit them to the repo's `exacb.data`
 //!    branch.
+//!
+//! [`ExecutionTask`] drives these stages through a
+//! [`crate::harness::RunCursor`]: every remote step submission *yields*
+//! (`ExecPoll::Waiting`) instead of draining the batch system, so the
+//! coordinator event loop can interleave many in-flight executions on
+//! one shared virtual timeline. [`run_execution`] remains the blocking
+//! drive-to-completion wrapper every pre-event-loop caller used.
 
 use crate::ci::{CiJob, CiJobState, Runner};
 use crate::cluster::SoftwareStage;
-use crate::harness::run_benchmark;
+use crate::harness::{CursorPoll, RunCursor};
 use crate::protocol::{
     provenance_document, results_csv, CacheOutcome, Experiment, Report, Reporter,
     StepProvenance,
 };
 use crate::store::{CacheKey, CacheKeyBuilder};
 use crate::util::json::Json;
+use crate::util::prng::Prng;
+use crate::util::timeutil::SimTime;
 
-use super::executor::{env_fingerprint, BatchStepExecutor, Launcher};
+use super::executor::{env_fingerprint, BatchStepExecutor, Launcher, PendingStep};
 use super::repo::BenchmarkRepo;
 use super::world::World;
 
@@ -46,11 +55,14 @@ pub struct ExecutionParams {
 }
 
 impl ExecutionParams {
-    /// Build from resolved component inputs.
-    pub fn from_inputs(inputs: &Json) -> ExecutionParams {
+    /// Build from resolved component inputs. An unknown launcher string
+    /// is a loud error surfaced through the CI validation job.
+    pub fn from_inputs(inputs: &Json) -> Result<ExecutionParams, String> {
         let s = |k: &str| inputs.str_of(k).unwrap_or("").to_string();
         let freq = inputs.f64_of("freq_mhz").unwrap_or(0.0);
-        ExecutionParams {
+        let launcher = Launcher::parse(inputs.str_of("launcher").unwrap_or("srun"))
+            .map_err(|e| e.to_string())?;
+        Ok(ExecutionParams {
             prefix: s("prefix"),
             machine: s("machine"),
             queue: s("queue"),
@@ -69,13 +81,13 @@ impl ExecutionParams {
                 })
                 .unwrap_or_default(),
             stage: inputs.str_of("stage").unwrap_or("2026").to_string(),
-            launcher: Launcher::parse(inputs.str_of("launcher").unwrap_or("srun")),
+            launcher,
             record: inputs.bool_of("record").unwrap_or(true)
                 && inputs.str_of("record") != Some("false"),
             freq_mhz: if freq > 0.0 { Some(freq) } else { None },
             nodes_override: inputs.u64_of("nodes").unwrap_or(0),
             in_command: inputs.str_of("in_command").map(str::to_string),
-        }
+        })
     }
 
     /// The harness tags of this run: machine + variant + usecase + extras
@@ -116,13 +128,7 @@ fn run_cache_key(
         .field("stage", &stage.name)
         .field("environment", env_fp)
         .field("account", account_identity)
-        .field(
-            "launcher",
-            match params.launcher {
-                Launcher::Jpwr => "jpwr",
-                Launcher::Srun => "srun",
-            },
-        )
+        .field("launcher", params.launcher.name())
         .field(
             "freq_mhz",
             params
@@ -139,312 +145,524 @@ fn run_cache_key(
         .build()
 }
 
-/// Run the execution orchestrator for one repository. Returns the CI
-/// jobs of this stage and the protocol report (when execution happened).
+/// What an [`ExecutionTask`] is doing after a poll.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ExecPoll {
+    /// A remote step is in flight as batch job `jobid` on `machine`;
+    /// poll again with `completed = Some(jobid)` once that job reaches a
+    /// terminal state.
+    Waiting { machine: String, jobid: u64 },
+    /// The orchestrator finished (successfully or not); take the CI jobs
+    /// and report with [`ExecutionTask::into_result`].
+    Done,
+}
+
+enum Phase {
+    Start,
+    Executing,
+    Done,
+}
+
+/// Persistent executor state threaded across polls: the borrowing
+/// [`BatchStepExecutor`] is rebuilt per poll, but exported environment,
+/// provenance, and the in-flight step survive between yields.
+#[derive(Default)]
+struct StepExecState {
+    injected_commands: Vec<String>,
+    provenance: Vec<StepProvenance>,
+    pending: Option<PendingStep>,
+}
+
+/// One resumable run of the execution orchestrator.
+///
+/// Create with [`ExecutionTask::new`], then [`ExecutionTask::poll`]
+/// until `ExecPoll::Done`. Between a `Waiting` result and the matching
+/// completion the task holds no borrows of the world, so any number of
+/// tasks can be in flight concurrently — that is the whole point.
+pub struct ExecutionTask {
+    params: ExecutionParams,
+    pipeline_id: u64,
+    phase: Phase,
+    jobs: Vec<CiJob>,
+    report: Option<Report>,
+    execute_job: Option<CiJob>,
+    cursor: Option<RunCursor>,
+    exec_state: StepExecState,
+    stage: SoftwareStage,
+    tags: Vec<String>,
+    benchmark_name: String,
+    engine_fp: String,
+    run_key: Option<CacheKey>,
+    start_time: SimTime,
+}
+
+impl ExecutionTask {
+    pub fn new(params: ExecutionParams, pipeline_id: u64) -> ExecutionTask {
+        let stage =
+            SoftwareStage::by_name(&params.stage).unwrap_or_else(SoftwareStage::stage_2026);
+        let tags = params.tags();
+        ExecutionTask {
+            params,
+            pipeline_id,
+            phase: Phase::Start,
+            jobs: Vec::new(),
+            report: None,
+            execute_job: None,
+            cursor: None,
+            exec_state: StepExecState::default(),
+            stage,
+            tags,
+            benchmark_name: String::new(),
+            engine_fp: String::new(),
+            run_key: None,
+            start_time: SimTime::default(),
+        }
+    }
+
+    pub fn machine(&self) -> &str {
+        &self.params.machine
+    }
+
+    /// Advance as far as possible. `rng` selects the noise stream: a
+    /// per-pipeline stream for concurrent campaigns, or `None` to use
+    /// the world PRNG (the legacy sequential behaviour). Pass the jobid
+    /// of the completed awaited job in `completed` when resuming.
+    pub fn poll(
+        &mut self,
+        world: &mut World,
+        repo: &mut BenchmarkRepo,
+        rng: Option<&mut Prng>,
+        completed: Option<u64>,
+    ) -> ExecPoll {
+        if matches!(self.phase, Phase::Start) {
+            if let Some(done) = self.start(world, repo) {
+                return done;
+            }
+            self.phase = Phase::Executing;
+        }
+        if matches!(self.phase, Phase::Done) {
+            return ExecPoll::Done;
+        }
+        // Phase::Executing: drive the cursor through an executor that
+        // borrows the world for exactly this poll.
+        let poll = {
+            let World {
+                cluster,
+                batch,
+                engine,
+                rng: world_rng,
+                calibration,
+                cache,
+                ..
+            } = world;
+            let batch = match batch.get_mut(&self.params.machine) {
+                Some(b) => b,
+                None => {
+                    self.abort("machine disappeared mid-run");
+                    return ExecPoll::Done;
+                }
+            };
+            let rng = match rng {
+                Some(r) => r,
+                None => world_rng,
+            };
+            let mut exec = BatchStepExecutor {
+                cluster,
+                batch,
+                engine: engine.as_mut(),
+                rng,
+                calibration: *calibration,
+                machine: self.params.machine.clone(),
+                queue: self.params.queue.clone(),
+                project: self.params.project.clone(),
+                budget: self.params.budget.clone(),
+                stage: self.stage.clone(),
+                launcher: self.params.launcher,
+                freq_mhz: self.params.freq_mhz,
+                injected_commands: std::mem::take(&mut self.exec_state.injected_commands),
+                nodes_override: self.params.nodes_override,
+                walltime_s: 7200,
+                benchmark: self.benchmark_name.clone(),
+                cache: cache.as_mut(),
+                engine_fingerprint: self.engine_fp.clone(),
+                provenance: std::mem::take(&mut self.exec_state.provenance),
+                pending: self.exec_state.pending.take(),
+            };
+            let cursor = self.cursor.as_mut().expect("cursor live while executing");
+            let poll = match completed {
+                Some(jobid) => cursor.complete(jobid, &mut exec),
+                None => cursor.poll(&mut exec),
+            };
+            self.exec_state.injected_commands = exec.injected_commands;
+            self.exec_state.provenance = exec.provenance;
+            self.exec_state.pending = exec.pending;
+            poll
+        };
+        match poll {
+            CursorPoll::Waiting { jobid } => ExecPoll::Waiting {
+                machine: self.params.machine.clone(),
+                jobid,
+            },
+            CursorPoll::Finished => {
+                self.finalize(world, repo);
+                ExecPoll::Done
+            }
+        }
+    }
+
+    /// Give up on an in-flight execution (e.g. the awaited job can never
+    /// complete); the execute stage is recorded as failed.
+    pub fn abort(&mut self, reason: &str) {
+        if let Some(mut execute) = self.execute_job.take() {
+            execute.log_line(format!("aborted: {reason}"));
+            execute.state = CiJobState::Failed;
+            self.jobs.push(execute);
+        }
+        self.cursor = None;
+        self.phase = Phase::Done;
+    }
+
+    /// The accumulated CI jobs and (on success) the protocol report.
+    pub fn into_result(self) -> (Vec<CiJob>, Option<Report>) {
+        (self.jobs, self.report)
+    }
+
+    /// Setup stage + run-level cache replay + cursor construction.
+    /// Returns `Some(ExecPoll::Done)` when the task short-circuits
+    /// (setup failure, bad spec, or a full cache replay).
+    fn start(&mut self, world: &mut World, repo: &mut BenchmarkRepo) -> Option<ExecPoll> {
+        let params = self.params.clone();
+
+        // ---- stage 1: setup (runner preflight) ------------------------
+        let mut setup = CiJob::new(world.ids.job_id(), &format!("{}.setup", params.prefix));
+        setup.state = CiJobState::Running;
+        let runner = Runner::new(&params.machine);
+        let preflight = match world.batch.get(&params.machine) {
+            Some(bs) => runner
+                .setup(bs, &params.project, &params.budget, &params.queue)
+                .map_err(|e| e.to_string()),
+            None => Err(format!("no batch system for machine '{}'", params.machine)),
+        };
+        match &preflight {
+            Ok(()) => {
+                setup.log_line(format!(
+                    "environment ready on {} (queue {}, project {}, budget {})",
+                    params.machine, params.queue, params.project, params.budget
+                ));
+                setup.state = CiJobState::Success;
+            }
+            Err(e) => {
+                setup.log_line(format!("setup failed: {e}"));
+                setup.state = CiJobState::Failed;
+            }
+        }
+        let setup_ok = setup.state == CiJobState::Success;
+        self.jobs.push(setup);
+        if !setup_ok {
+            self.phase = Phase::Done;
+            return Some(ExecPoll::Done);
+        }
+
+        // ---- stage 2: execute -----------------------------------------
+        let mut execute = CiJob::new(world.ids.job_id(), &format!("{}.execute", params.prefix));
+        execute.state = CiJobState::Running;
+        let spec = match repo.benchmark_spec(&params.jube_file) {
+            Ok(s) => s,
+            Err(e) => {
+                execute.log_line(e);
+                execute.state = CiJobState::Failed;
+                self.jobs.push(execute);
+                self.phase = Phase::Done;
+                return Some(ExecPoll::Done);
+            }
+        };
+        let stage = self.stage.clone();
+        self.start_time = world
+            .batch
+            .get(&params.machine)
+            .map(|b| b.now())
+            .unwrap_or_default();
+
+        // ---- incremental execution: run-level replay ------------------
+        let spec_text = repo.file(&params.jube_file).unwrap_or_default().to_string();
+        self.engine_fp = world
+            .engine
+            .as_ref()
+            .map(|e| e.manifest.fingerprint())
+            .unwrap_or_else(|| "analytic".to_string());
+        let account_identity =
+            runner.environment_fingerprint(&params.project, &params.budget, &params.queue);
+        let run_env_fp = world
+            .cluster
+            .env_at(&params.machine, &stage, self.start_time)
+            .map(|e| env_fingerprint(&e))
+            .unwrap_or_else(|| "unresolved-env".into());
+        let run_key = run_cache_key(
+            repo,
+            &spec_text,
+            &self.tags,
+            &params,
+            &stage,
+            &account_identity,
+            &run_env_fp,
+            &self.engine_fp,
+        );
+        if let Some(cache) = world.cache.as_mut() {
+            let (status, doc) = cache.lookup(&run_key, "report");
+            if status == CacheOutcome::Hit {
+                if let Some(doc) = doc {
+                    if let Ok(report) = Report::parse(&doc) {
+                        let csv = cache
+                            .get("csv", &run_key.digest)
+                            .unwrap_or_default()
+                            .to_string();
+                        // replay the cold run's per-step provenance (real
+                        // step digests), re-labelled as hits; fall back to
+                        // step names from the spec if the sidecar is absent
+                        let mut prov: Vec<StepProvenance> = cache
+                            .get("prov", &run_key.digest)
+                            .map(crate::protocol::parse_provenance)
+                            .unwrap_or_default();
+                        for s in &mut prov {
+                            s.status = CacheOutcome::Hit;
+                        }
+                        if prov.is_empty() {
+                            prov = spec
+                                .steps
+                                .iter()
+                                .filter(|s| s.remote)
+                                .map(|s| {
+                                    StepProvenance::new(
+                                        &s.name,
+                                        &run_key.digest,
+                                        CacheOutcome::Hit,
+                                    )
+                                })
+                                .collect();
+                        }
+                        execute.log_line(format!(
+                            "cache hit: replayed {} data entries, 0 batch jobs submitted",
+                            report.data.len()
+                        ));
+                        execute.add_artifact("results.csv", &csv);
+                        execute.add_artifact("report.json", &doc);
+                        execute.add_artifact("cache.json", &provenance_document(&prov));
+                        execute.output = Json::obj()
+                            .set("points", report.data.len())
+                            .set(
+                                "succeeded",
+                                report.data.iter().filter(|e| e.success).count(),
+                            )
+                            .set("cache", "hit");
+                        execute.provenance = prov;
+                        execute.state = CiJobState::Success;
+                        self.jobs.push(execute);
+                        if params.record {
+                            let end_time = world
+                                .batch
+                                .get(&params.machine)
+                                .map(|b| b.now())
+                                .unwrap_or_default();
+                            let mut record = CiJob::new(
+                                world.ids.job_id(),
+                                &format!("{}.record", params.prefix),
+                            );
+                            record.state = CiJobState::Running;
+                            let base = format!("{}/{}", params.prefix, self.pipeline_id);
+                            let commit_id = repo.store.commit(
+                                "exacb.data",
+                                &[
+                                    (format!("{base}/report.json"), doc),
+                                    (format!("{base}/results.csv"), csv),
+                                ],
+                                &format!(
+                                    "record pipeline {} (cache replay)",
+                                    self.pipeline_id
+                                ),
+                                end_time,
+                            );
+                            record.log_line(format!(
+                                "committed {commit_id} to exacb.data at {base}/"
+                            ));
+                            record.state = CiJobState::Success;
+                            self.jobs.push(record);
+                        }
+                        self.report = Some(report);
+                        self.phase = Phase::Done;
+                        return Some(ExecPoll::Done);
+                    }
+                }
+            }
+        }
+        self.run_key = Some(run_key);
+
+        // ---- cold (or partially warm) execution: build the cursor -----
+        let cursor = match RunCursor::new(&spec, &self.tags) {
+            Ok(c) => c,
+            Err(e) => {
+                execute.log_line(format!("harness: {e}"));
+                execute.state = CiJobState::Failed;
+                self.jobs.push(execute);
+                self.phase = Phase::Done;
+                return Some(ExecPoll::Done);
+            }
+        };
+        self.benchmark_name = spec.name.clone();
+        self.exec_state = StepExecState {
+            injected_commands: params.in_command.iter().cloned().collect(),
+            provenance: Vec::new(),
+            pending: None,
+        };
+        self.cursor = Some(cursor);
+        self.execute_job = Some(execute);
+        None
+    }
+
+    /// The cursor finished every point: assemble the protocol report,
+    /// cache it, and run the record stage.
+    fn finalize(&mut self, world: &mut World, repo: &mut BenchmarkRepo) {
+        let params = self.params.clone();
+        let mut execute = self.execute_job.take().expect("execute job live");
+        let outcomes = self
+            .cursor
+            .take()
+            .expect("cursor live while executing")
+            .into_outcomes();
+        let step_provenance = std::mem::take(&mut self.exec_state.provenance);
+
+        let n_ok = outcomes.iter().filter(|o| o.success).count();
+        execute.log_line(format!(
+            "{}/{} parameter points succeeded",
+            n_ok,
+            outcomes.len()
+        ));
+        let prov_doc = provenance_document(&step_provenance);
+        if world.cache.is_some() {
+            let (h, m, i) = crate::protocol::provenance::tally(&step_provenance);
+            execute.log_line(format!("cache: {h} hit / {m} miss / {i} invalidated"));
+            execute.add_artifact("cache.json", &prov_doc);
+        }
+
+        // ---- assemble the protocol report -----------------------------
+        let end_time = world
+            .batch
+            .get(&params.machine)
+            .map(|b| b.now())
+            .unwrap_or_default();
+        let machine_version = world
+            .cluster
+            .machine(&params.machine)
+            .map(|m| m.version.clone())
+            .unwrap_or_default();
+        let mut parameter = Json::obj()
+            .set("variant", params.variant.as_str())
+            .set("usecase", params.usecase.as_str())
+            .set("tags", self.tags.clone())
+            .set("launcher", params.launcher.name());
+        if let Some(f) = params.freq_mhz {
+            parameter.insert("freq_mhz", f);
+        }
+        if let Some(cmd) = &params.in_command {
+            parameter.insert("in_command", cmd.as_str());
+        }
+        let report = Report {
+            reporter: Reporter {
+                tool: "exacb".into(),
+                tool_version: env!("CARGO_PKG_VERSION").into(),
+                pipeline_id: self.pipeline_id,
+                ci_job_id: execute.id,
+                commit: repo.commit.clone(),
+                user: "exacb-bot".into(),
+                system: params.machine.clone(),
+                system_version: machine_version,
+                timestamp: end_time.iso8601(),
+                seed: world.seed,
+            },
+            parameter,
+            experiment: Experiment {
+                system: params.machine.clone(),
+                software_version: format!("stage-{}", self.stage.name),
+                variant: params.variant.clone(),
+                usecase: params.usecase.clone(),
+                timestamp: self.start_time.iso8601(),
+            },
+            data: outcomes.iter().map(|o| o.to_data_entry()).collect(),
+        };
+        let csv = results_csv(&[&report]);
+        let report_doc = report.to_document();
+        execute.add_artifact("results.csv", &csv);
+        execute.add_artifact("report.json", &report_doc);
+        execute.output = Json::obj()
+            .set("points", outcomes.len())
+            .set("succeeded", n_ok);
+        execute.state = if n_ok == outcomes.len() && !outcomes.is_empty() {
+            CiJobState::Success
+        } else {
+            CiJobState::Failed
+        };
+        execute.provenance = step_provenance;
+        let execute_ok = execute.state == CiJobState::Success;
+        self.jobs.push(execute);
+
+        // Only fully-successful runs enter the run-level cache: a failure
+        // must re-execute on the next attempt, never replay.
+        if execute_ok {
+            if let (Some(cache), Some(run_key)) =
+                (world.cache.as_mut(), self.run_key.as_ref())
+            {
+                cache.insert(run_key, "report", &report_doc);
+                cache.insert_aux("csv", &run_key.digest, &csv);
+                cache.insert_aux("prov", &run_key.digest, &prov_doc);
+            }
+        }
+
+        // ---- stage 3: record ------------------------------------------
+        if params.record {
+            let mut record =
+                CiJob::new(world.ids.job_id(), &format!("{}.record", params.prefix));
+            record.state = CiJobState::Running;
+            let base = format!("{}/{}", params.prefix, self.pipeline_id);
+            let commit_id = repo.store.commit(
+                "exacb.data",
+                &[
+                    (format!("{base}/report.json"), report_doc),
+                    (format!("{base}/results.csv"), csv),
+                ],
+                &format!("record pipeline {}", self.pipeline_id),
+                end_time,
+            );
+            record.log_line(format!("committed {commit_id} to exacb.data at {base}/"));
+            record.state = CiJobState::Success;
+            self.jobs.push(record);
+        }
+
+        self.report = Some(report);
+        self.phase = Phase::Done;
+    }
+}
+
+/// Run the execution orchestrator for one repository, blocking until it
+/// completes: a thin drive-to-completion wrapper over [`ExecutionTask`]
+/// that drains the machine's batch system at every yield — exactly the
+/// pre-event-loop behaviour, preserved for every existing caller.
 pub fn run_execution(
     world: &mut World,
     repo: &mut BenchmarkRepo,
     params: &ExecutionParams,
     pipeline_id: u64,
 ) -> (Vec<CiJob>, Option<Report>) {
-    let mut jobs = Vec::new();
-
-    // ---- stage 1: setup (runner preflight) ----------------------------
-    let mut setup = CiJob::new(world.ids.job_id(), &format!("{}.setup", params.prefix));
-    setup.state = CiJobState::Running;
-    let runner = Runner::new(&params.machine);
-    let preflight = match world.batch.get(&params.machine) {
-        Some(bs) => runner
-            .setup(bs, &params.project, &params.budget, &params.queue)
-            .map_err(|e| e.to_string()),
-        None => Err(format!("no batch system for machine '{}'", params.machine)),
-    };
-    match &preflight {
-        Ok(()) => {
-            setup.log_line(format!(
-                "environment ready on {} (queue {}, project {}, budget {})",
-                params.machine, params.queue, params.project, params.budget
-            ));
-            setup.state = CiJobState::Success;
-        }
-        Err(e) => {
-            setup.log_line(format!("setup failed: {e}"));
-            setup.state = CiJobState::Failed;
-        }
-    }
-    let setup_ok = setup.state == CiJobState::Success;
-    jobs.push(setup);
-    if !setup_ok {
-        return (jobs, None);
-    }
-
-    // ---- stage 2: execute ---------------------------------------------
-    let mut execute = CiJob::new(world.ids.job_id(), &format!("{}.execute", params.prefix));
-    execute.state = CiJobState::Running;
-    let spec = match repo.benchmark_spec(&params.jube_file) {
-        Ok(s) => s,
-        Err(e) => {
-            execute.log_line(e);
-            execute.state = CiJobState::Failed;
-            jobs.push(execute);
-            return (jobs, None);
-        }
-    };
-    let stage = SoftwareStage::by_name(&params.stage).unwrap_or_else(SoftwareStage::stage_2026);
-    let start_time = world
-        .batch
-        .get(&params.machine)
-        .map(|b| b.now())
-        .unwrap_or_default();
-    let tags = params.tags();
-
-    // ---- incremental execution: run-level replay ----------------------
-    let spec_text = repo.file(&params.jube_file).unwrap_or_default().to_string();
-    let engine_fp = world
-        .engine
-        .as_ref()
-        .map(|e| e.manifest.fingerprint())
-        .unwrap_or_else(|| "analytic".to_string());
-    let account_identity =
-        runner.environment_fingerprint(&params.project, &params.budget, &params.queue);
-    let run_env_fp = world
-        .cluster
-        .env_at(&params.machine, &stage, start_time)
-        .map(|e| env_fingerprint(&e))
-        .unwrap_or_else(|| "unresolved-env".into());
-    let run_key = run_cache_key(
-        repo,
-        &spec_text,
-        &tags,
-        params,
-        &stage,
-        &account_identity,
-        &run_env_fp,
-        &engine_fp,
-    );
-    if let Some(cache) = world.cache.as_mut() {
-        let (status, doc) = cache.lookup(&run_key, "report");
-        if status == CacheOutcome::Hit {
-            if let Some(doc) = doc {
-                if let Ok(report) = Report::parse(&doc) {
-                    let csv = cache
-                        .get("csv", &run_key.digest)
-                        .unwrap_or_default()
-                        .to_string();
-                    // replay the cold run's per-step provenance (real
-                    // step digests), re-labelled as hits; fall back to
-                    // step names from the spec if the sidecar is absent
-                    let mut prov: Vec<StepProvenance> = cache
-                        .get("prov", &run_key.digest)
-                        .map(crate::protocol::parse_provenance)
-                        .unwrap_or_default();
-                    for s in &mut prov {
-                        s.status = CacheOutcome::Hit;
-                    }
-                    if prov.is_empty() {
-                        prov = spec
-                            .steps
-                            .iter()
-                            .filter(|s| s.remote)
-                            .map(|s| {
-                                StepProvenance::new(&s.name, &run_key.digest, CacheOutcome::Hit)
-                            })
-                            .collect();
-                    }
-                    execute.log_line(format!(
-                        "cache hit: replayed {} data entries, 0 batch jobs submitted",
-                        report.data.len()
-                    ));
-                    execute.add_artifact("results.csv", &csv);
-                    execute.add_artifact("report.json", &doc);
-                    execute.add_artifact("cache.json", &provenance_document(&prov));
-                    execute.output = Json::obj()
-                        .set("points", report.data.len())
-                        .set(
-                            "succeeded",
-                            report.data.iter().filter(|e| e.success).count(),
-                        )
-                        .set("cache", "hit");
-                    execute.provenance = prov;
-                    execute.state = CiJobState::Success;
-                    jobs.push(execute);
-                    if params.record {
-                        let end_time = world
-                            .batch
-                            .get(&params.machine)
-                            .map(|b| b.now())
-                            .unwrap_or_default();
-                        let mut record = CiJob::new(
-                            world.ids.job_id(),
-                            &format!("{}.record", params.prefix),
-                        );
-                        record.state = CiJobState::Running;
-                        let base = format!("{}/{}", params.prefix, pipeline_id);
-                        let commit_id = repo.store.commit(
-                            "exacb.data",
-                            &[
-                                (format!("{base}/report.json"), doc),
-                                (format!("{base}/results.csv"), csv),
-                            ],
-                            &format!("record pipeline {pipeline_id} (cache replay)"),
-                            end_time,
-                        );
-                        record.log_line(format!(
-                            "committed {commit_id} to exacb.data at {base}/"
-                        ));
-                        record.state = CiJobState::Success;
-                        jobs.push(record);
-                    }
-                    return (jobs, Some(report));
+    let mut task = ExecutionTask::new(params.clone(), pipeline_id);
+    let mut completed = None;
+    loop {
+        match task.poll(world, repo, None, completed.take()) {
+            ExecPoll::Done => break,
+            ExecPoll::Waiting { machine, jobid } => {
+                if let Some(bs) = world.batch.get_mut(&machine) {
+                    bs.run_until_idle();
                 }
+                completed = Some(jobid);
             }
         }
     }
-
-    // ---- cold (or partially warm) execution ---------------------------
-    let exec_result = {
-        let batch = world.batch.get_mut(&params.machine).expect("checked above");
-        let mut exec = BatchStepExecutor {
-            cluster: &world.cluster,
-            batch,
-            engine: world.engine.as_mut(),
-            rng: &mut world.rng,
-            calibration: world.calibration,
-            machine: params.machine.clone(),
-            queue: params.queue.clone(),
-            project: params.project.clone(),
-            budget: params.budget.clone(),
-            stage: stage.clone(),
-            launcher: params.launcher,
-            freq_mhz: params.freq_mhz,
-            injected_commands: params.in_command.iter().cloned().collect(),
-            nodes_override: params.nodes_override,
-            walltime_s: 7200,
-            benchmark: spec.name.clone(),
-            cache: world.cache.as_mut(),
-            engine_fingerprint: engine_fp.clone(),
-            provenance: Vec::new(),
-        };
-        let result = run_benchmark(&spec, &tags, &mut exec);
-        match result {
-            Ok(o) => Ok((o, exec.provenance)),
-            Err(e) => Err(e),
-        }
-    };
-    let (outcomes, step_provenance) = match exec_result {
-        Ok(v) => v,
-        Err(e) => {
-            execute.log_line(format!("harness: {e}"));
-            execute.state = CiJobState::Failed;
-            jobs.push(execute);
-            return (jobs, None);
-        }
-    };
-    let n_ok = outcomes.iter().filter(|o| o.success).count();
-    execute.log_line(format!(
-        "{}/{} parameter points succeeded",
-        n_ok,
-        outcomes.len()
-    ));
-    let prov_doc = provenance_document(&step_provenance);
-    if world.cache.is_some() {
-        let (h, m, i) = crate::protocol::provenance::tally(&step_provenance);
-        execute.log_line(format!("cache: {h} hit / {m} miss / {i} invalidated"));
-        execute.add_artifact("cache.json", &prov_doc);
-    }
-
-    // ---- assemble the protocol report ---------------------------------
-    let end_time = world
-        .batch
-        .get(&params.machine)
-        .map(|b| b.now())
-        .unwrap_or_default();
-    let machine_version = world
-        .cluster
-        .machine(&params.machine)
-        .map(|m| m.version.clone())
-        .unwrap_or_default();
-    let mut parameter = Json::obj()
-        .set("variant", params.variant.as_str())
-        .set("usecase", params.usecase.as_str())
-        .set("tags", tags.clone())
-        .set("launcher", match params.launcher {
-            Launcher::Jpwr => "jpwr",
-            Launcher::Srun => "srun",
-        });
-    if let Some(f) = params.freq_mhz {
-        parameter.insert("freq_mhz", f);
-    }
-    if let Some(cmd) = &params.in_command {
-        parameter.insert("in_command", cmd.as_str());
-    }
-    let report = Report {
-        reporter: Reporter {
-            tool: "exacb".into(),
-            tool_version: env!("CARGO_PKG_VERSION").into(),
-            pipeline_id,
-            ci_job_id: execute.id,
-            commit: repo.commit.clone(),
-            user: "exacb-bot".into(),
-            system: params.machine.clone(),
-            system_version: machine_version,
-            timestamp: end_time.iso8601(),
-            seed: world.seed,
-        },
-        parameter,
-        experiment: Experiment {
-            system: params.machine.clone(),
-            software_version: format!("stage-{}", stage.name),
-            variant: params.variant.clone(),
-            usecase: params.usecase.clone(),
-            timestamp: start_time.iso8601(),
-        },
-        data: outcomes.iter().map(|o| o.to_data_entry()).collect(),
-    };
-    let csv = results_csv(&[&report]);
-    let report_doc = report.to_document();
-    execute.add_artifact("results.csv", &csv);
-    execute.add_artifact("report.json", &report_doc);
-    execute.output = Json::obj()
-        .set("points", outcomes.len())
-        .set("succeeded", n_ok);
-    execute.state = if n_ok == outcomes.len() && !outcomes.is_empty() {
-        CiJobState::Success
-    } else {
-        CiJobState::Failed
-    };
-    execute.provenance = step_provenance;
-    let execute_ok = execute.state == CiJobState::Success;
-    jobs.push(execute);
-
-    // Only fully-successful runs enter the run-level cache: a failure
-    // must re-execute on the next attempt, never replay.
-    if execute_ok {
-        if let Some(cache) = world.cache.as_mut() {
-            cache.insert(&run_key, "report", &report_doc);
-            cache.insert_aux("csv", &run_key.digest, &csv);
-            cache.insert_aux("prov", &run_key.digest, &prov_doc);
-        }
-    }
-
-    // ---- stage 3: record ----------------------------------------------
-    if params.record {
-        let mut record = CiJob::new(world.ids.job_id(), &format!("{}.record", params.prefix));
-        record.state = CiJobState::Running;
-        let base = format!("{}/{}", params.prefix, pipeline_id);
-        let commit_id = repo.store.commit(
-            "exacb.data",
-            &[
-                (format!("{base}/report.json"), report_doc),
-                (format!("{base}/results.csv"), csv),
-            ],
-            &format!("record pipeline {pipeline_id}"),
-            end_time,
-        );
-        record.log_line(format!("committed {commit_id} to exacb.data at {base}/"));
-        record.state = CiJobState::Success;
-        jobs.push(record);
-    }
-
-    (jobs, Some(report))
+    task.into_result()
 }

@@ -12,14 +12,30 @@ use std::collections::BTreeMap;
 
 use crate::cluster::{Cluster, RunEnv, SoftwareStage};
 use crate::energy::wrap_with_jpwr;
-use crate::harness::{ResolvedStep, StepExecutor, StepOutcome};
+use crate::harness::{ResolvedStep, StepDispatch, StepDriver, StepExecutor, StepOutcome};
 use crate::protocol::{CacheOutcome, StepProvenance};
 use crate::runtime::Engine;
-use crate::scheduler::{BatchSystem, JobResult, JobSpec};
+use crate::scheduler::{BatchSystem, JobResult, JobSpec, JobState};
 use crate::store::{CacheKey, CacheKeyBuilder, ExecutionCache};
 use crate::util::json::Json;
 use crate::util::prng::Prng;
 use crate::workloads::{run_command, AppProfile, ExecCtx, HostCalibration};
+
+/// A launcher string the platform configuration does not know.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LauncherError(pub String);
+
+impl std::fmt::Display for LauncherError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "unknown launcher '{}' (expected 'srun' or 'jpwr')",
+            self.0
+        )
+    }
+}
+
+impl std::error::Error for LauncherError {}
 
 /// Which launcher wraps the application (JUBE platform configuration).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -30,11 +46,23 @@ pub enum Launcher {
 }
 
 impl Launcher {
-    pub fn parse(s: &str) -> Launcher {
+    /// Parse a launcher name; anything that is not `srun`/`jpwr` is a
+    /// loud error (it used to silently fall back to `Srun`, hiding
+    /// typos like `jwpr` until an energy study produced no energy).
+    pub fn parse(s: &str) -> Result<Launcher, LauncherError> {
         if s.eq_ignore_ascii_case("jpwr") {
-            Launcher::Jpwr
+            Ok(Launcher::Jpwr)
+        } else if s.eq_ignore_ascii_case("srun") {
+            Ok(Launcher::Srun)
         } else {
-            Launcher::Srun
+            Err(LauncherError(s.to_string()))
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Launcher::Jpwr => "jpwr",
+            Launcher::Srun => "srun",
         }
     }
 }
@@ -68,6 +96,19 @@ pub struct BatchStepExecutor<'w> {
     pub engine_fingerprint: String,
     /// Per-remote-step cache provenance accumulated over this run.
     pub provenance: Vec<StepProvenance>,
+    /// The in-flight remote step when driving in two-phase mode: set by
+    /// [`StepDriver::dispatch`], consumed by [`StepDriver::collect`].
+    pub pending: Option<PendingStep>,
+}
+
+/// Bookkeeping for a remote step submitted but not yet collected.
+#[derive(Debug, Clone)]
+pub struct PendingStep {
+    pub step_name: String,
+    pub jobid: u64,
+    /// Cache key + pre-classified outcome (miss/invalidated) to record
+    /// once the job completes; `None` when caching is disabled.
+    pub cache_ctx: Option<(CacheKey, CacheOutcome)>,
 }
 
 /// Digest of the resolved machine environment at a point in simulated
@@ -128,13 +169,7 @@ impl<'w> BatchStepExecutor<'w> {
                 "account",
                 format!("{}/{}/{}", self.project, self.budget, self.queue),
             )
-            .field(
-                "launcher",
-                match self.launcher {
-                    Launcher::Jpwr => "jpwr",
-                    Launcher::Srun => "srun",
-                },
-            )
+            .field("launcher", self.launcher.name())
             .field(
                 "freq_mhz",
                 self.freq_mhz.map(|f| format!("{f:.3}")).unwrap_or_default(),
@@ -157,11 +192,24 @@ impl<'w> BatchStepExecutor<'w> {
             .unwrap_or(1)
     }
 
-    fn run_remote(&mut self, step: &ResolvedStep) -> StepOutcome {
+    /// Submit one remote step as a batch job. The application model runs
+    /// at submit time under the environment of the current simulated
+    /// clock (events change on day granularity; queue waits are seconds,
+    /// so this is a faithful approximation); the precomputed result
+    /// becomes the job payload. Does **not** drain the batch system —
+    /// collection happens in [`Self::collect_step`] after the job's
+    /// completion event. Returns a ready failed outcome when nothing was
+    /// submitted.
+    fn submit_remote(&mut self, step: &ResolvedStep) -> Result<u64, StepOutcome> {
         let nodes = self.remote_nodes(step);
         let m = match self.cluster.machine(&self.machine) {
             Some(m) => m,
-            None => return StepOutcome::failed(&format!("unknown machine '{}'", self.machine)),
+            None => {
+                return Err(StepOutcome::failed(&format!(
+                    "unknown machine '{}'",
+                    self.machine
+                )))
+            }
         };
         let tasks_per_node = step
             .point
@@ -180,7 +228,7 @@ impl<'w> BatchStepExecutor<'w> {
         let now = self.batch.now();
         let env = match self.cluster.env_at(&self.machine, &self.stage, now) {
             Some(e) => e,
-            None => return StepOutcome::failed("environment resolution failed"),
+            None => return Err(StepOutcome::failed("environment resolution failed")),
         };
         let mut env_vars: BTreeMap<String, String> = BTreeMap::new();
         let mut runtime_s = 0.0;
@@ -251,33 +299,19 @@ impl<'w> BatchStepExecutor<'w> {
             metrics: metrics.clone(),
             files: files.clone(),
         };
-        let jobid = match self
-            .batch
-            .submit(spec, Box::new(move |_| payload_result))
-        {
-            Ok(id) => id,
-            Err(e) => return StepOutcome::failed(&format!("submit: {e}")),
-        };
-        self.batch.run_until_idle();
-        let record = self.batch.record(jobid).expect("record exists");
-        let job_success = record.state == crate::scheduler::JobState::Completed;
-
-        StepOutcome {
-            success: job_success,
-            runtime_s,
-            files,
-            metrics,
-            jobid,
-            queue: self.queue.clone(),
-            nodes,
-            tasks_per_node,
-            threads_per_task,
+        match self.batch.submit(spec, Box::new(move |_| payload_result)) {
+            Ok(id) => Ok(id),
+            Err(e) => Err(StepOutcome::failed(&format!("submit: {e}"))),
         }
     }
 }
 
-impl<'w> StepExecutor for BatchStepExecutor<'w> {
-    fn execute(&mut self, step: &ResolvedStep) -> StepOutcome {
+impl<'w> StepDriver for BatchStepExecutor<'w> {
+    /// Two-phase step execution, phase one: local steps and cache hits
+    /// complete synchronously; a remote step is submitted to the batch
+    /// system and left in flight (`pending`) for [`Self::collect`] once
+    /// the coordinator observes its completion event.
+    fn dispatch(&mut self, step: &ResolvedStep) -> StepDispatch {
         if !step.remote {
             // login-node step: setup commands succeed; exports recorded
             // into the injected set so they reach later remote steps.
@@ -288,10 +322,10 @@ impl<'w> StepExecutor for BatchStepExecutor<'w> {
                     self.injected_commands.push(cmd.clone());
                 }
             }
-            return StepOutcome::local_ok();
+            return StepDispatch::Done(StepOutcome::local_ok());
         }
         // remote step: consult the execution cache before submitting
-        let cached_ctx = if self.cache.is_some() {
+        let cache_ctx = if self.cache.is_some() {
             let key = self.step_key(step);
             let (status, doc) = self
                 .cache
@@ -305,7 +339,7 @@ impl<'w> StepExecutor for BatchStepExecutor<'w> {
                         &key.digest,
                         CacheOutcome::Hit,
                     ));
-                    return out;
+                    return StepDispatch::Done(out);
                 }
             }
             // a hit whose document fails to parse re-executes as a miss
@@ -318,10 +352,60 @@ impl<'w> StepExecutor for BatchStepExecutor<'w> {
         } else {
             None
         };
-        let out = self.run_remote(step);
-        if let Some((key, status)) = cached_ctx {
+        match self.submit_remote(step) {
+            Ok(jobid) => {
+                self.pending = Some(PendingStep {
+                    step_name: step.name.clone(),
+                    jobid,
+                    cache_ctx,
+                });
+                StepDispatch::Submitted(jobid)
+            }
+            Err(out) => {
+                // nothing was submitted; classify for provenance (never
+                // inserted into the cache: the outcome is a failure)
+                if let Some((key, status)) = cache_ctx {
+                    self.provenance
+                        .push(StepProvenance::new(&step.name, &key.digest, status));
+                }
+                StepDispatch::Done(out)
+            }
+        }
+    }
+
+    /// Phase two: rebuild the step outcome from the completed job's
+    /// accounting record, record provenance, and cache successes.
+    fn collect(&mut self, jobid: u64) -> StepOutcome {
+        let (step_name, cache_ctx) = match self.pending.take() {
+            Some(p) if p.jobid == jobid => (p.step_name, p.cache_ctx),
+            other => {
+                self.pending = other;
+                return StepOutcome::failed(&format!("no step pending on job {jobid}"));
+            }
+        };
+        let record = match self.batch.record(jobid) {
+            Some(r) => r,
+            None => return StepOutcome::failed(&format!("no record for job {jobid}")),
+        };
+        debug_assert!(record.state.is_terminal(), "collect before completion");
+        let result = record
+            .result
+            .clone()
+            .unwrap_or_else(|| JobResult::failure("job produced no result"));
+        let out = StepOutcome {
+            success: record.state == JobState::Completed,
+            runtime_s: result.duration_s,
+            files: result.files,
+            metrics: result.metrics,
+            jobid,
+            queue: self.queue.clone(),
+            nodes: record.spec.nodes,
+            tasks_per_node: record.spec.tasks_per_node,
+            threads_per_task: record.spec.threads_per_task,
+        };
+        if let Some((key, status)) = cache_ctx {
             self.provenance
-                .push(StepProvenance::new(&step.name, &key.digest, status));
+                .push(StepProvenance::new(&step_name, &key.digest, status));
             if out.success {
                 if let Some(cache) = self.cache.as_deref_mut() {
                     cache.insert(&key, "step", &out.to_document());
@@ -329,6 +413,22 @@ impl<'w> StepExecutor for BatchStepExecutor<'w> {
             }
         }
         out
+    }
+}
+
+impl<'w> StepExecutor for BatchStepExecutor<'w> {
+    /// Blocking mode: dispatch, drain this machine's batch system, and
+    /// collect in one call — the pre-event-loop behaviour, still used by
+    /// direct `run_benchmark` callers and the drive-to-completion
+    /// `run_execution` wrapper.
+    fn execute(&mut self, step: &ResolvedStep) -> StepOutcome {
+        match self.dispatch(step) {
+            StepDispatch::Done(out) => out,
+            StepDispatch::Submitted(jobid) => {
+                self.batch.run_until_idle();
+                self.collect(jobid)
+            }
+        }
     }
 }
 
@@ -370,6 +470,7 @@ mod tests {
             cache: None,
             engine_fingerprint: "analytic".into(),
             provenance: Vec::new(),
+            pending: None,
         }
     }
 
@@ -509,6 +610,71 @@ mod tests {
         }
         assert_eq!(batch.records().len(), 2);
         assert_eq!(cache.stats.invalidated, 1);
+    }
+
+    #[test]
+    fn launcher_parse_is_strict() {
+        assert_eq!(Launcher::parse("srun").unwrap(), Launcher::Srun);
+        assert_eq!(Launcher::parse("SRUN").unwrap(), Launcher::Srun);
+        assert_eq!(Launcher::parse("JPWR").unwrap(), Launcher::Jpwr);
+        let err = Launcher::parse("mpirun").unwrap_err();
+        assert!(err.to_string().contains("mpirun"), "{err}");
+        assert!(Launcher::parse("").is_err());
+    }
+
+    #[test]
+    fn two_phase_dispatch_waits_for_completion_event() {
+        use crate::harness::{CursorPoll, RunCursor};
+        let (cluster, mut batch, mut rng) = setup();
+        let spec = logmap_spec();
+        let mut exec = executor(&cluster, &mut batch, &mut rng);
+        let mut cursor = RunCursor::new(&spec, &[]).unwrap();
+        let CursorPoll::Waiting { jobid } = cursor.poll(&mut exec) else {
+            panic!("remote step must submit, not drain");
+        };
+        // submitted but not yet completed: the cursor yielded instead of
+        // draining the batch system
+        assert!(!exec.batch.job_state(jobid).unwrap().is_terminal());
+        // advance exactly one scheduler event, then resume the cursor
+        assert_eq!(exec.batch.advance_next_event(), Some(jobid));
+        assert_eq!(cursor.complete(jobid, &mut exec), CursorPoll::Finished);
+        let outs = cursor.into_outcomes();
+        assert_eq!(outs.len(), 1);
+        assert!(outs[0].success);
+        assert_eq!(outs[0].jobid, jobid);
+        // analysis ran over the replayed job files
+        assert!(outs[0].metrics.f64_of("app_time").is_some());
+    }
+
+    #[test]
+    fn two_phase_collect_matches_blocking_outcome() {
+        use crate::harness::{CursorPoll, RunCursor};
+        let spec = logmap_spec();
+        let blocking = {
+            let (cluster, mut batch, mut rng) = setup();
+            let mut exec = executor(&cluster, &mut batch, &mut rng);
+            run_benchmark(&spec, &[], &mut exec).unwrap()
+        };
+        let resumed = {
+            let (cluster, mut batch, mut rng) = setup();
+            let mut exec = executor(&cluster, &mut batch, &mut rng);
+            let mut cursor = RunCursor::new(&spec, &[]).unwrap();
+            let mut poll = cursor.poll(&mut exec);
+            while let CursorPoll::Waiting { jobid } = poll {
+                exec.batch.run_until_idle();
+                poll = cursor.complete(jobid, &mut exec);
+            }
+            cursor.into_outcomes()
+        };
+        assert_eq!(blocking.len(), resumed.len());
+        for (a, b) in blocking.iter().zip(&resumed) {
+            assert_eq!(a.success, b.success);
+            assert_eq!(a.runtime_s, b.runtime_s);
+            assert_eq!(a.metrics, b.metrics);
+            assert_eq!(a.jobid, b.jobid);
+            assert_eq!((a.nodes, a.tasks_per_node, a.threads_per_task),
+                       (b.nodes, b.tasks_per_node, b.threads_per_task));
+        }
     }
 
     #[test]

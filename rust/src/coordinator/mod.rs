@@ -10,11 +10,14 @@
 //!   energy post-processing orchestrators (§V-A.2).
 //! * [`collection`] — JUREAP-scale campaign management over portfolios
 //!   at heterogeneous maturity (§VI-A).
+//! * [`event_loop`] — the discrete-event core: resumable pipeline tasks
+//!   interleaved across all machines on one shared virtual timeline.
 //! * [`ablation`] — the §III / Fig. 2 integration-mode trade-off model.
 //! * [`world`] — the deployment container + component dispatcher.
 
 pub mod ablation;
 pub mod collection;
+pub mod event_loop;
 pub mod execution;
 pub mod executor;
 pub mod postproc;
@@ -23,9 +26,10 @@ pub mod world;
 
 pub use collection::{
     assign, dispatch_item, onboard, onboard_multi, repo_for_app, run_campaign,
-    run_campaign_queued, CollectionSummary, WorkItem, WorkQueue,
+    run_campaign_concurrent, run_campaign_queued, CollectionSummary, WorkItem, WorkQueue,
 };
-pub use execution::{run_execution, ExecutionParams};
-pub use executor::{env_fingerprint, BatchStepExecutor, Launcher};
+pub use event_loop::{drive, PipelineTask, TaskPoll};
+pub use execution::{run_execution, ExecPoll, ExecutionParams, ExecutionTask};
+pub use executor::{env_fingerprint, BatchStepExecutor, Launcher, LauncherError, PendingStep};
 pub use repo::BenchmarkRepo;
 pub use world::World;

@@ -99,6 +99,53 @@ pub fn collection_results_table(world: &World, metric: &str) -> Table {
     t
 }
 
+/// Scheduler queue-wait statistics per machine: job count, p50/p95 wait
+/// [s], and how many jobs were backfilled (started while an
+/// earlier-submitted job of the same partition was still waiting).
+///
+/// Queue waits include the fixed scheduler-cycle latency, so an idle
+/// machine reports p50 ≈ `sched_latency_s`; anything beyond that is real
+/// contention. This is the observability counterpart of the concurrent
+/// event loop — on the sequential dispatch path every pipeline drains
+/// before the next starts, so waits never exceed the latency floor.
+pub fn queue_stats(world: &World) -> Table {
+    let mut t = Table::new(&["machine", "jobs", "p50_wait_s", "p95_wait_s", "backfilled"]);
+    for (name, bs) in &world.batch {
+        let records = bs.records();
+        let waits: Vec<f64> = records
+            .iter()
+            .filter_map(|r| r.queue_wait_s())
+            .map(|w| w as f64)
+            .collect();
+        if waits.is_empty() {
+            continue;
+        }
+        let mut backfilled = 0usize;
+        for r in &records {
+            let Some(start) = r.start_time else { continue };
+            let jumped_queue = records.iter().any(|earlier| {
+                earlier.jobid < r.jobid
+                    && earlier.spec.partition == r.spec.partition
+                    && earlier
+                        .start_time
+                        .map(|s| s > start)
+                        .unwrap_or(earlier.state == crate::scheduler::JobState::Pending)
+            });
+            if jumped_queue {
+                backfilled += 1;
+            }
+        }
+        t.push_row(vec![
+            name.clone(),
+            waits.len().to_string(),
+            format!("{:.0}", crate::util::stats::percentile(&waits, 50.0)),
+            format!("{:.0}", crate::util::stats::percentile(&waits, 95.0)),
+            backfilled.to_string(),
+        ]);
+    }
+    t
+}
+
 /// `time-series@v3` (paper §V-A.2): continuous visualisation of selected
 /// performance metrics with regression detection (Figs. 3–4).
 pub fn run_time_series(world: &mut World, repo: &BenchmarkRepo, inputs: &Json) -> CiJob {
@@ -315,7 +362,15 @@ pub fn run_energy_study(
     inputs: &Json,
     pipeline_id: u64,
 ) -> Vec<CiJob> {
-    let base = ExecutionParams::from_inputs(inputs);
+    let base = match ExecutionParams::from_inputs(inputs) {
+        Ok(p) => p,
+        Err(e) => {
+            let mut job = CiJob::new(world.ids.job_id(), "jureap/energy@v3.validate");
+            job.log_line(format!("input validation failed: {e}"));
+            job.state = CiJobState::Failed;
+            return vec![job];
+        }
+    };
     let frequencies: Vec<f64> = inputs
         .get("frequencies")
         .and_then(Json::as_arr)
@@ -438,6 +493,22 @@ mod tests {
         // experiments run at 03:00 daily; the span [Jan 3 00:00, Jan 5
         // 00:00] covers the Jan 3 and Jan 4 runs only
         assert_eq!(csv.rows[0][1], "2");
+    }
+
+    #[test]
+    fn queue_stats_reports_latency_floor_without_contention() {
+        let world = world_with_history(3);
+        let t = queue_stats(&world);
+        // only jedi ran jobs; idle machines are omitted
+        assert_eq!(t.rows.len(), 1, "{:?}", t.rows);
+        assert_eq!(t.rows[0][0], "jedi");
+        assert_eq!(t.rows[0][1], "3");
+        // sequential daily pipelines never contend: every wait is the
+        // fixed scheduler latency, and nothing backfills
+        let latency = world.batch.get("jedi").unwrap().sched_latency_s;
+        assert_eq!(t.rows[0][2], format!("{latency}"));
+        assert_eq!(t.rows[0][3], format!("{latency}"));
+        assert_eq!(t.rows[0][4], "0");
     }
 
     #[test]

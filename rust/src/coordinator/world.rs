@@ -1,12 +1,12 @@
 //! The simulation world: machines + batch systems + repositories +
-//! shared framework state, and the pipeline dispatcher that routes CI
-//! component invocations to the orchestrators.
+//! shared framework state. Pipelines run through the discrete-event
+//! core (`coordinator::event_loop`): [`World::run_pipeline`] drives one
+//! pipeline to completion, [`World::begin_pipeline`] starts a resumable
+//! task so many pipelines can share the timeline.
 
 use std::collections::BTreeMap;
 
-use crate::ci::{
-    CiJob, CiJobState, ComponentRegistry, IdAllocator, Pipeline, Trigger,
-};
+use crate::ci::{ComponentRegistry, IdAllocator, Pipeline, Trigger};
 use crate::cluster::Cluster;
 use crate::runtime::Engine;
 use crate::scheduler::{for_machine, AccountManager, BatchSystem};
@@ -15,8 +15,7 @@ use crate::util::prng::Prng;
 use crate::util::timeutil::SimTime;
 use crate::workloads::HostCalibration;
 
-use super::execution::{run_execution, ExecutionParams};
-use super::postproc;
+use super::event_loop::{self, PipelineTask};
 use super::repo::BenchmarkRepo;
 
 /// Everything a deployment of exaCB talks to.
@@ -149,83 +148,42 @@ impl World {
             .unwrap_or_default()
     }
 
-    /// Run one repository's CI pipeline: parse its config, validate each
-    /// component invocation, dispatch to the orchestrators. Returns the
-    /// pipeline id (the pipeline itself lands in `self.pipelines`).
+    /// Run one repository's CI pipeline to completion: parse its config,
+    /// validate each component invocation, dispatch to the orchestrators.
+    /// Returns the pipeline id (the pipeline itself lands in
+    /// `self.pipelines`).
+    ///
+    /// This is a thin drive-to-completion wrapper over the discrete-event
+    /// core: the pipeline becomes a [`PipelineTask`] and
+    /// [`event_loop::drive`] runs it alone on the shared timeline. To run
+    /// many pipelines *concurrently* — contending for nodes, budgets, and
+    /// queue positions — begin several tasks with
+    /// [`World::begin_pipeline`] and drive them together.
     pub fn run_pipeline(&mut self, repo_name: &str, trigger: Trigger) -> Result<u64, String> {
-        let mut repo = self
+        let task = self.begin_pipeline(repo_name, trigger)?;
+        let pid = task.pipeline_id();
+        event_loop::drive(self, vec![task]);
+        Ok(pid)
+    }
+
+    /// Start a pipeline as a resumable task without running it. The
+    /// repository is checked out of `self.repos` for the duration of the
+    /// run and restored when the task finishes under
+    /// [`event_loop::drive`].
+    pub fn begin_pipeline(
+        &mut self,
+        repo_name: &str,
+        trigger: Trigger,
+    ) -> Result<PipelineTask, String> {
+        let repo = self
             .repos
             .remove(repo_name)
             .ok_or_else(|| format!("unknown repo '{repo_name}'"))?;
-        let result = self.run_pipeline_inner(&mut repo, trigger);
-        self.repos.insert(repo_name.to_string(), repo);
-        result
-    }
-
-    fn run_pipeline_inner(
-        &mut self,
-        repo: &mut BenchmarkRepo,
-        trigger: Trigger,
-    ) -> Result<u64, String> {
-        let config = repo.ci_config()?;
-        let pipeline_id = self.ids.pipeline_id();
-        let mut pipeline = Pipeline {
-            id: pipeline_id,
-            repo: repo.name.clone(),
-            trigger,
-            created: self.now(),
-            jobs: Vec::new(),
-        };
-        for invocation in &config.invocations {
-            let jobs = self.dispatch(repo, &invocation.component, &invocation.inputs, pipeline_id);
-            pipeline.jobs.extend(jobs);
-        }
-        self.pipelines.push(pipeline);
-        Ok(pipeline_id)
-    }
-
-    fn dispatch(
-        &mut self,
-        repo: &mut BenchmarkRepo,
-        component: &str,
-        raw_inputs: &crate::util::json::Json,
-        pipeline_id: u64,
-    ) -> Vec<CiJob> {
-        // input validation against the component schema
-        let resolved = match self
-            .registry
-            .get(component)
-            .and_then(|spec| spec.resolve(raw_inputs))
-        {
-            Ok(r) => r,
-            Err(e) => {
-                let mut job =
-                    CiJob::new(self.ids.job_id(), &format!("{component}.validate"));
-                job.log_line(format!("input validation failed: {e}"));
-                job.state = CiJobState::Failed;
-                return vec![job];
-            }
-        };
-        match component {
-            "execution@v3" | "example/jube@v3.2" => {
-                let params = ExecutionParams::from_inputs(&resolved);
-                run_execution(self, repo, &params, pipeline_id).0
-            }
-            "feature-injection@v3" => {
-                let params = ExecutionParams::from_inputs(&resolved);
-                run_execution(self, repo, &params, pipeline_id).0
-            }
-            "jureap/energy@v3" => postproc::run_energy_study(self, repo, &resolved, pipeline_id),
-            "machine-comparison@v3" => {
-                vec![postproc::run_machine_comparison(self, repo, &resolved)]
-            }
-            "scalability@v3" => vec![postproc::run_scalability(self, repo, &resolved)],
-            "time-series@v3" => vec![postproc::run_time_series(self, repo, &resolved)],
-            other => {
-                let mut job = CiJob::new(self.ids.job_id(), &format!("{other}.dispatch"));
-                job.log_line(format!("component '{other}' validated but has no orchestrator"));
-                job.state = CiJobState::Failed;
-                vec![job]
+        match PipelineTask::new(self, repo, trigger) {
+            Ok(task) => Ok(task),
+            Err((repo, e)) => {
+                self.repos.insert(repo_name.to_string(), repo);
+                Err(e)
             }
         }
     }
@@ -244,6 +202,7 @@ impl World {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::ci::CiJobState;
 
     #[test]
     fn quickstart_pipeline_end_to_end() {

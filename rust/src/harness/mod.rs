@@ -17,6 +17,7 @@ pub mod spec;
 
 pub use expand::{expand, expand_for_step, substitute, ParamPoint};
 pub use run::{
-    run_benchmark, ResolvedStep, RunOutcome, ScriptedExecutor, StepExecutor, StepOutcome,
+    run_benchmark, CursorPoll, ResolvedStep, RunCursor, RunOutcome, ScriptedExecutor,
+    StepDispatch, StepDriver, StepExecutor, StepOutcome,
 };
 pub use spec::{AnalysisPattern, BenchmarkSpec, Parameter, ParameterSet, SpecError, Step};

@@ -1,11 +1,24 @@
 //! Harness execution engine: step DAG × parameter space → analysed runs.
 //!
 //! For each point of the expanded parameter space, steps run in
-//! dependency order through a [`StepExecutor`] (the bridge to either the
-//! login node or the batch system — supplied by the caller, typically
-//! `coordinator::execution`). After the last step, analysis patterns are
-//! applied to the produced output files and one [`RunOutcome`] per point
-//! is returned; `results_table` renders them per Table I.
+//! dependency order. Two driving modes share one engine:
+//!
+//! * **blocking** — [`run_benchmark`] takes a [`StepExecutor`] (the
+//!   bridge to either the login node or the batch system) and drives the
+//!   whole study to completion, draining each remote submission before
+//!   the next step;
+//! * **resumable** — a [`RunCursor`] advances the same step-DAG ×
+//!   parameter-space walk through a two-phase [`StepDriver`], *yielding*
+//!   at every remote submission instead of draining the batch system.
+//!   The coordinator's event loop interleaves many cursors (one per
+//!   in-flight pipeline) on one shared virtual timeline and resumes a
+//!   cursor when its awaited job completes.
+//!
+//! `run_benchmark` is implemented on top of the cursor with a blocking
+//! adapter, so both modes execute byte-identically step for step. After
+//! the last step of a point, analysis patterns are applied to the
+//! produced output files and one [`RunOutcome`] per point is produced;
+//! `results_table` renders them per Table I.
 
 use std::collections::BTreeMap;
 
@@ -119,6 +132,29 @@ pub trait StepExecutor {
     fn execute(&mut self, step: &ResolvedStep) -> StepOutcome;
 }
 
+/// How a dispatched step proceeded under a [`StepDriver`].
+#[derive(Debug)]
+pub enum StepDispatch {
+    /// The step finished synchronously (local steps, cache hits,
+    /// submission failures).
+    Done(StepOutcome),
+    /// The step was submitted as batch job `jobid`; the outcome becomes
+    /// available through [`StepDriver::collect`] once that job completes.
+    Submitted(u64),
+}
+
+/// Two-phase execution back end for the resumable [`RunCursor`]: remote
+/// steps *submit* and later *collect* instead of blocking on the batch
+/// system. Implemented by the coordinator's batch executor; any plain
+/// [`StepExecutor`] can be driven through the blocking adapter inside
+/// [`run_benchmark`].
+pub trait StepDriver {
+    fn dispatch(&mut self, step: &ResolvedStep) -> StepDispatch;
+    /// Outcome of the previously submitted job `jobid`. Only called
+    /// after the driver's owner observed the job reach a terminal state.
+    fn collect(&mut self, jobid: u64) -> StepOutcome;
+}
+
 /// One fully-executed parameter point.
 #[derive(Debug, Clone)]
 pub struct RunOutcome {
@@ -152,25 +188,38 @@ impl RunOutcome {
     }
 }
 
-/// Run the whole benchmark: expand, execute, analyse.
+/// Run the whole benchmark: expand, execute, analyse. Blocking mode:
+/// every remote step drains before the next begins (the executor's
+/// `execute` is dispatch + drain + collect in one call).
 pub fn run_benchmark(
     spec: &BenchmarkSpec,
     tags: &[String],
     executor: &mut dyn StepExecutor,
 ) -> Result<Vec<RunOutcome>, SpecError> {
-    let order = spec.step_order()?;
-    // The parameter space of the run is the union of axes used by any
-    // step; expansion per final (leaf) step keeps per-point execution
-    // simple: we expand over the *last* step's space, and earlier steps
-    // see the subset of parameters they use.
-    let leaf = order.last().expect("validated non-empty");
-    let points = expand_for_step(spec, &leaf.name, tags);
-
-    let mut outcomes = Vec::with_capacity(points.len());
-    for point in points {
-        outcomes.push(run_point(spec, &order, &point, tags, executor));
+    let mut cursor = RunCursor::new(spec, tags)?;
+    let mut driver = BlockingDriver { inner: executor };
+    match cursor.poll(&mut driver) {
+        CursorPoll::Finished => Ok(cursor.into_outcomes()),
+        CursorPoll::Waiting { .. } => {
+            unreachable!("blocking driver completes every step synchronously")
+        }
     }
-    Ok(outcomes)
+}
+
+/// Adapter running a plain [`StepExecutor`] under the cursor: every
+/// dispatch completes synchronously, so the cursor never yields.
+struct BlockingDriver<'a> {
+    inner: &'a mut dyn StepExecutor,
+}
+
+impl StepDriver for BlockingDriver<'_> {
+    fn dispatch(&mut self, step: &ResolvedStep) -> StepDispatch {
+        StepDispatch::Done(self.inner.execute(step))
+    }
+
+    fn collect(&mut self, _jobid: u64) -> StepOutcome {
+        StepOutcome::failed("blocking driver never leaves a step pending")
+    }
 }
 
 fn active_step(step: &Step, tags: &[String]) -> bool {
@@ -180,79 +229,211 @@ fn active_step(step: &Step, tags: &[String]) -> bool {
     }
 }
 
-fn run_point(
-    spec: &BenchmarkSpec,
-    order: &[&Step],
-    point: &ParamPoint,
-    tags: &[String],
-    executor: &mut dyn StepExecutor,
-) -> RunOutcome {
-    let mut files: Vec<(String, String)> = Vec::new();
-    let mut metrics = Json::obj();
-    let mut step_status = Vec::new();
-    let mut success = true;
-    let mut runtime_s = 0.0;
-    let mut jobid = 0;
-    let mut queue = String::new();
-    let mut nodes = 1;
-    let mut tasks_per_node = 1;
-    let mut threads_per_task = 1;
+/// What a cursor is doing after an advance.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CursorPoll {
+    /// A remote step was submitted as batch job `jobid`; resume with
+    /// [`RunCursor::complete`] once it reaches a terminal state.
+    Waiting { jobid: u64 },
+    /// Every parameter point has executed; take the results with
+    /// [`RunCursor::into_outcomes`].
+    Finished,
+}
 
-    for step in order {
-        if !active_step(step, tags) {
-            continue;
+/// Per-point accumulation state, mirroring one pass of the legacy
+/// blocking loop over a point's steps.
+struct PointAccum {
+    files: Vec<(String, String)>,
+    metrics: Json,
+    step_status: Vec<(String, bool)>,
+    success: bool,
+    runtime_s: f64,
+    jobid: u64,
+    queue: String,
+    nodes: u64,
+    tasks_per_node: u64,
+    threads_per_task: u64,
+}
+
+impl PointAccum {
+    fn new() -> PointAccum {
+        PointAccum {
+            files: Vec::new(),
+            metrics: Json::obj(),
+            step_status: Vec::new(),
+            success: true,
+            runtime_s: 0.0,
+            jobid: 0,
+            queue: String::new(),
+            nodes: 1,
+            tasks_per_node: 1,
+            threads_per_task: 1,
         }
-        if !success {
-            step_status.push((step.name.clone(), false));
-            continue; // downstream steps are skipped after a failure
+    }
+}
+
+struct Awaited {
+    resolved: ResolvedStep,
+    jobid: u64,
+}
+
+/// Resumable step-DAG cursor: the benchmark run as a state machine.
+///
+/// The cursor owns the expanded walk (dependency-ordered steps × leaf
+/// parameter points) and a position within it. [`RunCursor::poll`]
+/// advances until a remote step is submitted ([`CursorPoll::Waiting`])
+/// or the study completes; [`RunCursor::complete`] feeds the awaited
+/// job's completion back in and keeps advancing. The walk order — and
+/// therefore every executor interaction, including PRNG consumption —
+/// is identical to the blocking [`run_benchmark`] loop.
+pub struct RunCursor {
+    steps: Vec<Step>,
+    analysis: Vec<AnalysisPattern>,
+    tags: Vec<String>,
+    points: Vec<ParamPoint>,
+    point_idx: usize,
+    step_idx: usize,
+    acc: PointAccum,
+    outcomes: Vec<RunOutcome>,
+    awaiting: Option<Awaited>,
+}
+
+impl RunCursor {
+    pub fn new(spec: &BenchmarkSpec, tags: &[String]) -> Result<RunCursor, SpecError> {
+        let order = spec.step_order()?;
+        // The parameter space of the run is the union of axes used by
+        // any step; expansion per final (leaf) step keeps per-point
+        // execution simple: we expand over the *last* step's space, and
+        // earlier steps see the subset of parameters they use.
+        let leaf = order.last().expect("validated non-empty");
+        let points = expand_for_step(spec, &leaf.name, tags);
+        let steps: Vec<Step> = order.into_iter().cloned().collect();
+        Ok(RunCursor {
+            steps,
+            analysis: spec.analysis.clone(),
+            tags: tags.to_vec(),
+            points,
+            point_idx: 0,
+            step_idx: 0,
+            acc: PointAccum::new(),
+            outcomes: Vec::new(),
+            awaiting: None,
+        })
+    }
+
+    pub fn is_finished(&self) -> bool {
+        self.awaiting.is_none() && self.point_idx >= self.points.len()
+    }
+
+    /// Advance until the next remote submission or the end of the study.
+    /// Idempotent while waiting: polling again without completing the
+    /// awaited job just reports the same wait.
+    pub fn poll(&mut self, exec: &mut dyn StepDriver) -> CursorPoll {
+        if let Some(w) = &self.awaiting {
+            return CursorPoll::Waiting { jobid: w.jobid };
         }
-        let resolved = ResolvedStep {
-            name: step.name.clone(),
-            commands: step
-                .commands
-                .iter()
-                .map(|c| substitute(c, point))
-                .collect(),
-            remote: step.remote,
-            point: point.clone(),
-        };
-        let out = executor.execute(&resolved);
-        step_status.push((step.name.clone(), out.success));
-        success &= out.success;
+        while self.point_idx < self.points.len() {
+            while self.step_idx < self.steps.len() {
+                let step = self.steps[self.step_idx].clone();
+                if !active_step(&step, &self.tags) {
+                    self.step_idx += 1;
+                    continue;
+                }
+                if !self.acc.success {
+                    // downstream steps are skipped after a failure
+                    self.acc.step_status.push((step.name.clone(), false));
+                    self.step_idx += 1;
+                    continue;
+                }
+                let point = self.points[self.point_idx].clone();
+                let resolved = ResolvedStep {
+                    name: step.name.clone(),
+                    commands: step
+                        .commands
+                        .iter()
+                        .map(|c| substitute(c, &point))
+                        .collect(),
+                    remote: step.remote,
+                    point,
+                };
+                match exec.dispatch(&resolved) {
+                    StepDispatch::Done(out) => {
+                        self.apply(&resolved, out);
+                        self.step_idx += 1;
+                    }
+                    StepDispatch::Submitted(jobid) => {
+                        self.awaiting = Some(Awaited { resolved, jobid });
+                        return CursorPoll::Waiting { jobid };
+                    }
+                }
+            }
+            self.finish_point();
+        }
+        CursorPoll::Finished
+    }
+
+    /// Feed the completion of the awaited batch job back in (collecting
+    /// its outcome from the driver), then keep advancing like `poll`.
+    /// Completions for a job the cursor is not waiting on are ignored.
+    pub fn complete(&mut self, jobid: u64, exec: &mut dyn StepDriver) -> CursorPoll {
+        match self.awaiting.take() {
+            Some(w) if w.jobid == jobid => {
+                let out = exec.collect(jobid);
+                self.apply(&w.resolved, out);
+                self.step_idx += 1;
+            }
+            other => self.awaiting = other,
+        }
+        self.poll(exec)
+    }
+
+    fn apply(&mut self, step: &ResolvedStep, out: StepOutcome) {
+        self.acc.step_status.push((step.name.clone(), out.success));
+        self.acc.success &= out.success;
         if step.remote {
-            runtime_s = out.runtime_s;
-            jobid = out.jobid;
-            queue = out.queue.clone();
-            nodes = out.nodes;
-            tasks_per_node = out.tasks_per_node;
-            threads_per_task = out.threads_per_task;
+            self.acc.runtime_s = out.runtime_s;
+            self.acc.jobid = out.jobid;
+            self.acc.queue = out.queue.clone();
+            self.acc.nodes = out.nodes;
+            self.acc.tasks_per_node = out.tasks_per_node;
+            self.acc.threads_per_task = out.threads_per_task;
         }
-        files.extend(out.files.iter().cloned());
+        self.acc.files.extend(out.files.iter().cloned());
         for (k, v) in out.metrics.as_obj().unwrap_or(&[]) {
-            metrics.insert(k, v.clone());
+            self.acc.metrics.insert(k, v.clone());
         }
     }
 
-    // Analysis: regex extraction over output files (paper §II-B).
-    for pat in &spec.analysis {
-        if let Some(v) = apply_pattern(pat, &files) {
-            metrics.insert(&pat.name, v);
+    fn finish_point(&mut self) {
+        let acc = std::mem::replace(&mut self.acc, PointAccum::new());
+        let mut metrics = acc.metrics;
+        // Analysis: regex extraction over output files (paper §II-B).
+        for pat in &self.analysis {
+            if let Some(v) = apply_pattern(pat, &acc.files) {
+                metrics.insert(&pat.name, v);
+            }
         }
+        // Parameters are recorded into metrics-adjacent storage by the
+        // coordinator (protocol `parameter` section), not here.
+        self.outcomes.push(RunOutcome {
+            point: self.points[self.point_idx].clone(),
+            success: acc.success,
+            runtime_s: acc.runtime_s,
+            metrics,
+            jobid: acc.jobid,
+            queue: acc.queue,
+            nodes: acc.nodes,
+            tasks_per_node: acc.tasks_per_node,
+            threads_per_task: acc.threads_per_task,
+            step_status: acc.step_status,
+        });
+        self.point_idx += 1;
+        self.step_idx = 0;
     }
-    // Parameters are recorded into metrics-adjacent storage by the
-    // coordinator (protocol `parameter` section), not here.
 
-    RunOutcome {
-        point: point.clone(),
-        success,
-        runtime_s,
-        metrics,
-        jobid,
-        queue,
-        nodes,
-        tasks_per_node,
-        threads_per_task,
-        step_status,
+    /// Completed outcomes; call once `poll` returned `Finished`.
+    pub fn into_outcomes(self) -> Vec<RunOutcome> {
+        self.outcomes
     }
 }
 
@@ -457,6 +638,124 @@ mod tests {
         assert!(StepOutcome::from_document("{not json").is_none());
         assert!(StepOutcome::from_document("{}").is_none());
         assert!(StepOutcome::from_document("{\"success\":true}").is_none());
+    }
+
+    /// Test driver that *yields* on every remote step, like the batch
+    /// executor does under the coordinator event loop.
+    struct YieldingDriver {
+        inner: ScriptedExecutor,
+        next_jobid: u64,
+        parked: Option<(u64, StepOutcome)>,
+        submissions: usize,
+    }
+
+    impl YieldingDriver {
+        fn new(inner: ScriptedExecutor) -> YieldingDriver {
+            YieldingDriver {
+                inner,
+                next_jobid: 500,
+                parked: None,
+                submissions: 0,
+            }
+        }
+    }
+
+    impl StepDriver for YieldingDriver {
+        fn dispatch(&mut self, step: &ResolvedStep) -> StepDispatch {
+            let out = self.inner.execute(step);
+            if step.remote {
+                let jobid = self.next_jobid;
+                self.next_jobid += 1;
+                self.submissions += 1;
+                self.parked = Some((jobid, out));
+                StepDispatch::Submitted(jobid)
+            } else {
+                StepDispatch::Done(out)
+            }
+        }
+
+        fn collect(&mut self, jobid: u64) -> StepOutcome {
+            let (id, out) = self.parked.take().expect("a step is parked");
+            assert_eq!(id, jobid);
+            out
+        }
+    }
+
+    #[test]
+    fn cursor_yields_per_remote_step_and_matches_blocking_run() {
+        let spec = BenchmarkSpec::parse(LOGMAP_SPEC).unwrap();
+        let blocking = {
+            let mut exec = exec_with_output();
+            run_benchmark(&spec, &["scaling".to_string()], &mut exec).unwrap()
+        };
+
+        let mut driver = YieldingDriver::new(exec_with_output());
+        let mut cursor = RunCursor::new(&spec, &["scaling".to_string()]).unwrap();
+        let mut waits = 0;
+        let mut poll = cursor.poll(&mut driver);
+        while let CursorPoll::Waiting { jobid } = poll {
+            waits += 1;
+            // re-polling while waiting is idempotent
+            assert_eq!(cursor.poll(&mut driver), CursorPoll::Waiting { jobid });
+            poll = cursor.complete(jobid, &mut driver);
+        }
+        assert!(cursor.is_finished());
+        let resumed = cursor.into_outcomes();
+
+        // one yield per remote step = one per expanded point here
+        assert_eq!(waits, 4);
+        assert_eq!(driver.submissions, 4);
+        assert_eq!(resumed.len(), blocking.len());
+        for (a, b) in resumed.iter().zip(&blocking) {
+            assert_eq!(a.point, b.point);
+            assert_eq!(a.success, b.success);
+            assert_eq!(a.runtime_s, b.runtime_s);
+            assert_eq!(a.metrics, b.metrics);
+            assert_eq!(a.step_status, b.step_status);
+        }
+    }
+
+    #[test]
+    fn cursor_ignores_foreign_completions() {
+        let spec = BenchmarkSpec::parse(LOGMAP_SPEC).unwrap();
+        let mut driver = YieldingDriver::new(exec_with_output());
+        let mut cursor = RunCursor::new(&spec, &[]).unwrap();
+        let CursorPoll::Waiting { jobid } = cursor.poll(&mut driver) else {
+            panic!("expected a remote submission");
+        };
+        // a completion for some other pipeline's job must not advance us
+        assert_eq!(
+            cursor.complete(jobid + 999, &mut driver),
+            CursorPoll::Waiting { jobid }
+        );
+        let mut poll = cursor.complete(jobid, &mut driver);
+        while let CursorPoll::Waiting { jobid } = poll {
+            poll = cursor.complete(jobid, &mut driver);
+        }
+        assert_eq!(poll, CursorPoll::Finished);
+        let outs = cursor.into_outcomes();
+        assert_eq!(outs.len(), 2);
+        assert!(outs.iter().all(|o| o.success));
+    }
+
+    #[test]
+    fn cursor_skips_downstream_after_failed_remote_wait() {
+        let spec = BenchmarkSpec::parse(
+            "name: x\nsteps:\n  - name: a\n    remote: true\n    do: [app]\n  - name: b\n    depends: [a]\n    do: [post]\n",
+        )
+        .unwrap();
+        let scripted =
+            ScriptedExecutor::new().on("a", |_| StepOutcome::failed("boom"));
+        let mut driver = YieldingDriver::new(scripted);
+        let mut cursor = RunCursor::new(&spec, &[]).unwrap();
+        let CursorPoll::Waiting { jobid } = cursor.poll(&mut driver) else {
+            panic!("remote step must submit");
+        };
+        assert_eq!(cursor.complete(jobid, &mut driver), CursorPoll::Finished);
+        let outs = cursor.into_outcomes();
+        assert!(!outs[0].success);
+        // step b was skipped, recorded as failed
+        assert_eq!(outs[0].step_status, vec![("a".to_string(), false), ("b".to_string(), false)]);
     }
 
     #[test]

@@ -285,6 +285,35 @@ impl BatchSystem {
         debug_assert!(self.running.is_empty());
     }
 
+    // ---- discrete-event interleaving API (coordinator event loop) -----
+    //
+    // A coordinator interleaving many pipelines across many machines
+    // drives each machine one completion event at a time instead of
+    // draining it: peek at the next event time, pick the globally
+    // earliest machine, advance it by exactly one event, and wake the
+    // pipeline that was waiting on the completed job.
+
+    /// Simulated time of this machine's next completion event, if any
+    /// job is running. Pending jobs never stall silently: a submission
+    /// that fits starts immediately (`try_schedule` runs on submit and
+    /// on every completion), so `None` means the machine is idle.
+    pub fn peek_next_event(&self) -> Option<SimTime> {
+        self.earliest_end()
+    }
+
+    /// Complete the single earliest-finishing running job, advancing
+    /// this machine's clock to its end time, charging accounting, and
+    /// starting any pending jobs that now fit. Returns the completed
+    /// job id, or `None` when the machine is idle.
+    pub fn advance_next_event(&mut self) -> Option<u64> {
+        self.complete_next()
+    }
+
+    /// Current lifecycle state of a job (`None` for unknown ids).
+    pub fn job_state(&self, jobid: u64) -> Option<JobState> {
+        self.records.get(&jobid).map(|r| r.state)
+    }
+
     pub fn record(&self, jobid: u64) -> Option<&JobRecord> {
         self.records.get(&jobid)
     }
@@ -557,6 +586,80 @@ mod tests {
         bs.run_until_idle();
         assert!(bs.now() > SimTime::from_days(3));
         assert!(bs.now() < SimTime::from_days(3).add_secs(600));
+    }
+
+    #[test]
+    fn peek_and_advance_interleave_events() {
+        let mut bs = sys(); // 8 nodes
+        assert_eq!(bs.peek_next_event(), None);
+        let short = bs
+            .submit(
+                JobSpec {
+                    nodes: 2,
+                    account: "p".into(),
+                    budget: "b".into(),
+                    ..Default::default()
+                },
+                quick_payload(100.0, true),
+            )
+            .unwrap();
+        let long = bs
+            .submit(
+                JobSpec {
+                    nodes: 2,
+                    account: "p".into(),
+                    budget: "b".into(),
+                    ..Default::default()
+                },
+                quick_payload(500.0, true),
+            )
+            .unwrap();
+        // both are running; neither is terminal yet
+        assert_eq!(bs.running_count(), 2);
+        assert!(!bs.job_state(short).unwrap().is_terminal());
+        let first_end = bs.peek_next_event().unwrap();
+        // one event at a time, earliest first, clock tracking each end
+        assert_eq!(bs.advance_next_event(), Some(short));
+        assert_eq!(bs.now(), first_end);
+        assert!(bs.job_state(short).unwrap().is_terminal());
+        assert!(!bs.job_state(long).unwrap().is_terminal());
+        assert_eq!(bs.advance_next_event(), Some(long));
+        assert_eq!(bs.advance_next_event(), None);
+        assert_eq!(bs.peek_next_event(), None);
+        assert_eq!(bs.job_state(9_999_999), None);
+    }
+
+    #[test]
+    fn advance_next_event_starts_queued_jobs() {
+        let mut bs = sys(); // 8 nodes
+        let a = bs
+            .submit(
+                JobSpec {
+                    nodes: 6,
+                    account: "p".into(),
+                    budget: "b".into(),
+                    ..Default::default()
+                },
+                quick_payload(100.0, true),
+            )
+            .unwrap();
+        let b = bs
+            .submit(
+                JobSpec {
+                    nodes: 6,
+                    account: "p".into(),
+                    budget: "b".into(),
+                    ..Default::default()
+                },
+                quick_payload(100.0, true),
+            )
+            .unwrap();
+        // b waits for a; completing a's event must start b
+        assert_eq!(bs.pending_count(), 1);
+        assert_eq!(bs.advance_next_event(), Some(a));
+        assert_eq!(bs.pending_count(), 0);
+        assert_eq!(bs.running_count(), 1);
+        assert!(bs.record(b).unwrap().start_time.unwrap() >= bs.record(a).unwrap().end_time.unwrap());
     }
 
     #[test]
