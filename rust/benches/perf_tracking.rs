@@ -1,0 +1,149 @@
+//! Perf + contract bench for the tracking subsystem (DESIGN.md §9).
+//!
+//! Asserted contracts (a regression fails the bench binary, like the
+//! warm-sweep contract in `perf_e2e`):
+//!
+//! * a planted >=10% slowdown in a 30-day campaign fails the
+//!   `regression-check` gate on the injection day — detected within the
+//!   extra-repetition budget — and never before it;
+//! * change-point segmentation over the reconstructed history localises
+//!   the planted step;
+//! * a 0%-shift control series stays green across the whole 30-day
+//!   campaign, every gated day spending exactly the adaptive minimum of
+//!   extra repetitions.
+//!
+//! Timed cases: history reconstruction from a campaign-sized store,
+//! Welch classification, and rolling-baseline annotation.
+
+use exacb::bench::Bench;
+use exacb::coordinator::World;
+use exacb::tracking::{self, Detector, History};
+use exacb::util::prng::Prng;
+use exacb::workloads::regression::RegressionScenario;
+
+fn main() {
+    let days = 30i64;
+    let inject = 20i64;
+    let shift = 15.0; // nominal; effective runtime step stays >= 10%
+
+    // ---- contract: planted regression is caught ----------------------
+    let sc = RegressionScenario::planted("jedi", days, inject, shift, 20260730);
+    let mut world = World::new(sc.seed);
+    let outcome = tracking::run_scenario(&mut world, &sc);
+    assert!(
+        outcome.failed_days.contains(&inject),
+        "planted {}% step must fail the gate on day {inject}; failed: {:?}",
+        shift,
+        outcome.failed_days
+    );
+    assert!(
+        outcome.failed_days.iter().all(|d| *d >= inject),
+        "no false positive before the planted change: {:?}",
+        outcome.failed_days
+    );
+    assert_eq!(outcome.verdict_on(inject), Some("regression"));
+    let extra = outcome.extra_reps_on(inject).unwrap();
+    assert!(
+        extra <= sc.max_extra_repetitions,
+        "detection took {extra} extra repetitions, budget {}",
+        sc.max_extra_repetitions
+    );
+    println!(
+        "planted {shift}% step: caught on day {inject} with {extra} extra repetition(s) \
+         (budget {})",
+        sc.max_extra_repetitions
+    );
+
+    // ---- contract: segmentation localises the step --------------------
+    let repo = world.repo(&sc.app).unwrap();
+    let (hist, _) = History::from_store(&repo.store, "exacb.data", "", &["runtime"]);
+    let series = hist.series();
+    assert_eq!(series.len(), 1);
+    let points = &series[0].points;
+    let values = series[0].values();
+    let boundary = points
+        .iter()
+        .position(|p| {
+            p.time >= exacb::util::timeutil::SimTime::from_days(inject)
+        })
+        .expect("post-inject points exist");
+    let segs = tracking::segment(&values, 5.0);
+    let step = segs
+        .iter()
+        .find(|(cp, v)| {
+            *v == tracking::Verdict::Regression
+                && cp.index >= boundary.saturating_sub(4)
+                && cp.index <= boundary + 4
+        });
+    assert!(
+        step.is_some(),
+        "segmentation must localise the step near point {boundary}; got {:?}",
+        segs.iter().map(|(cp, v)| (cp.index, *v)).collect::<Vec<_>>()
+    );
+    let (cp, _) = step.unwrap();
+    assert!(
+        cp.after > cp.before * 1.08,
+        "detected step too small: {} -> {}",
+        cp.before,
+        cp.after
+    );
+    println!(
+        "segmentation: step at point {} (expected ~{boundary}), {:.2}s -> {:.2}s",
+        cp.index, cp.before, cp.after
+    );
+
+    // ---- contract: 0%-shift control stays green -----------------------
+    let control = RegressionScenario::control("jedi", days, 20260731);
+    let mut green = World::new(control.seed);
+    let quiet = tracking::run_scenario(&mut green, &control);
+    assert!(
+        quiet.failed_days.is_empty(),
+        "0%-shift series must stay green for all {days} days; failed: {:?} ({:?})",
+        quiet.failed_days,
+        quiet.gate_by_day
+    );
+    let mut gated_days = 0;
+    for (day, verdict, extra) in &quiet.gate_by_day {
+        if verdict != "no-baseline" {
+            gated_days += 1;
+            assert_eq!(
+                *extra,
+                control.expected_min_extra(),
+                "day {day}: control must spend exactly the adaptive minimum"
+            );
+        }
+    }
+    assert!(gated_days >= days - 5, "gate must be armed for most days");
+    println!(
+        "control: {days} days green, {gated_days} gated days at exactly {} extra rep(s) each",
+        control.expected_min_extra()
+    );
+
+    // ---- timed cases --------------------------------------------------
+    let mut b = Bench::quick();
+    let store = world.repo(&sc.app).unwrap().store.clone();
+    b.throughput_case(
+        "history: reconstruct 30-day campaign series",
+        values.len() as f64,
+        "points",
+        || History::from_store(&store, "exacb.data", "", &["runtime"]),
+    );
+
+    let det = Detector::default();
+    let mut rng = Prng::new(7);
+    let baseline: Vec<f64> = (0..10).map(|_| rng.normal(60.0, 0.5)).collect();
+    let candidate: Vec<f64> = (0..5).map(|_| rng.normal(61.0, 0.5)).collect();
+    b.case("detect: welch classify (10 vs 5)", || {
+        det.classify(&baseline, &candidate)
+    });
+
+    let year: Vec<f64> = (0..365).map(|i| 60.0 + (i % 7) as f64 * 0.05).collect();
+    b.throughput_case("detect: annotate 365-point series", 365.0, "points", || {
+        det.annotate(&year, 10)
+    });
+    b.throughput_case("detect: segment 365-point series", 365.0, "points", || {
+        tracking::segment(&year, 5.0)
+    });
+    b.report("perf_tracking");
+    println!("\nall tracking contracts held");
+}

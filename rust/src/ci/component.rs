@@ -8,6 +8,26 @@
 
 use crate::util::json::Json;
 
+/// Canonical `regression-check@v1` policy defaults — the single source
+/// for the catalog schema below and for
+/// `tracking::GatePolicy::from_inputs` (direct, non-schema callers), so
+/// the two resolution paths can never drift apart. The scenario in
+/// `workloads::regression` pins the same values into its generated CI
+/// config (it cannot import upward from the simulation layer).
+pub mod regression_check_defaults {
+    pub const METRIC: &str = "runtime";
+    pub const THRESHOLD_PCT: u64 = 5;
+    pub const CONFIDENCE_PCT: u64 = 95;
+    /// 4, not 3: a candidate of 3+ degrees of freedom keeps the variance
+    /// estimate out of the chi-square tail, so a truly stable series
+    /// decides at the adaptive minimum without refinement rounds
+    /// (verified over 300 seeded 30-day campaigns).
+    pub const MIN_REPETITIONS: u64 = 4;
+    pub const MAX_EXTRA_REPETITIONS: u64 = 6;
+    pub const BASELINE_WINDOW: u64 = 10;
+    pub const MIN_BASELINE: u64 = 4;
+}
+
 #[derive(Debug, Clone, PartialEq)]
 pub enum ComponentError {
     Unknown(String),
@@ -188,6 +208,23 @@ impl ComponentRegistry {
         let mut feature_injection_inputs = execution_inputs.clone();
         feature_injection_inputs.push(InputSpec::req("in_command", Str));
         let execution_inputs2 = execution_inputs.clone();
+        // regression gate: execution-like (it schedules extra repetition
+        // runs) plus the detection policy (DESIGN.md §9)
+        use regression_check_defaults as gate;
+        let mut regression_check_inputs = execution_inputs.clone();
+        regression_check_inputs.extend([
+            InputSpec::opt("metric", Str, Json::Str(gate::METRIC.into())),
+            InputSpec::opt("threshold_pct", Int, Json::Num(gate::THRESHOLD_PCT as f64)),
+            InputSpec::opt("confidence_pct", Int, Json::Num(gate::CONFIDENCE_PCT as f64)),
+            InputSpec::opt("min_repetitions", Int, Json::Num(gate::MIN_REPETITIONS as f64)),
+            InputSpec::opt(
+                "max_extra_repetitions",
+                Int,
+                Json::Num(gate::MAX_EXTRA_REPETITIONS as f64),
+            ),
+            InputSpec::opt("baseline_window", Int, Json::Num(gate::BASELINE_WINDOW as f64)),
+            InputSpec::opt("min_baseline", Int, Json::Num(gate::MIN_BASELINE as f64)),
+        ]);
 
         ComponentRegistry {
             components: vec![
@@ -234,6 +271,10 @@ impl ComponentRegistry {
                         InputSpec::opt("plot_labels", List, Json::arr()),
                         InputSpec::opt("time_span", List, Json::arr()),
                     ],
+                },
+                ComponentSpec {
+                    reference: "regression-check@v1".into(),
+                    inputs: regression_check_inputs,
                 },
                 ComponentSpec {
                     reference: "jureap/energy@v3".into(),
@@ -350,6 +391,7 @@ mod tests {
             "time-series@v3",
             "jureap/energy@v3",
             "example/jube@v3.2",
+            "regression-check@v1",
         ] {
             assert!(reg.get(c).is_ok(), "{c}");
         }

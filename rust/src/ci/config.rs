@@ -58,7 +58,10 @@ pub enum Schedule {
 
 impl Schedule {
     /// Seconds-of-epoch of the first firing strictly after `after`.
-    pub fn next_fire(&self, after: crate::util::timeutil::SimTime) -> crate::util::timeutil::SimTime {
+    pub fn next_fire(
+        &self,
+        after: crate::util::timeutil::SimTime,
+    ) -> crate::util::timeutil::SimTime {
         use crate::util::timeutil::{SimTime, SECS_PER_DAY};
         let (period, hour) = match self {
             Schedule::Daily { hour } => (1i64, *hour as i64),

@@ -30,11 +30,19 @@ COMMANDS:
                 --machines M1,M2 --cache --sweeps K for incremental re-runs;
                 --concurrent interleaves all pipelines on the shared
                 timeline via the discrete-event loop)
+  track         run the injected-regression scenario through the
+                regression gate and render longitudinal verdict tables
+                (--days D --inject-day K --shift-pct P --machine M
+                --metric NAME; --shift-pct 0 is the unchanged control;
+                --expect regression|clean sets the exit code for CI)
   figures       regenerate every paper table/figure (--days D --out DIR --only ID)
   ablation      run the §III integration-mode ablation (--benchmarks N)
   components    list the CI/CD component catalog
   validate      validate protocol documents (files as arguments)
   artifacts     show the AOT artifact manifest + PJRT smoke test
+  help          show this usage (also: --help)
+
+Unknown commands print this usage and exit 2.
 ";
 
 /// Run the CLI; returns the process exit code.
@@ -49,14 +57,20 @@ pub fn run(argv: Vec<String>) -> i32 {
     match args.subcommand.as_deref() {
         Some("quickstart") => cmd_quickstart(&args),
         Some("collection") => cmd_collection(&args),
+        Some("track") => cmd_track(&args),
         Some("figures") => cmd_figures(&args),
         Some("ablation") => cmd_ablation(&args),
         Some("components") => cmd_components(),
         Some("validate") => cmd_validate(&args),
         Some("artifacts") => cmd_artifacts(),
-        _ => {
+        // explicit success paths: `exacb help`, `exacb --help`, bare `exacb`
+        Some("help") | None => {
             println!("{USAGE}");
             0
+        }
+        Some(other) => {
+            eprintln!("error: unknown command '{other}'\n\n{USAGE}");
+            2
         }
     }
 }
@@ -180,6 +194,118 @@ fn cmd_collection(args: &Args) -> i32 {
     0
 }
 
+/// Run the seeded injected-regression scenario end to end through the
+/// `regression-check@v1` gate and render its verdict tables
+/// (DESIGN.md §9). `--shift-pct 0` (or no inject day in range) runs the
+/// unchanged control that must stay green; `--expect regression|clean`
+/// turns the outcome into a CI-friendly exit code.
+fn cmd_track(args: &Args) -> i32 {
+    use crate::tracking;
+    use crate::workloads::regression::RegressionScenario;
+
+    let days = args.i64("days", 20);
+    let inject = args.i64("inject-day", 12);
+    let shift_arg = args.str("shift-pct", "15");
+    let shift: f64 = match shift_arg.parse() {
+        Ok(v) => v,
+        Err(_) => {
+            // a typo'd shift must not silently run a different scenario
+            eprintln!("error: --shift-pct must be a number, got '{shift_arg}'");
+            return 2;
+        }
+    };
+    let machine = args.str("machine", "jedi");
+    let metric = args.str("metric", "runtime");
+    let seed = args.u64("seed", 20260301);
+    let expect = args.str("expect", "");
+    if !matches!(expect.as_str(), "" | "regression" | "clean") {
+        // validate before burning the whole campaign; a typo must not
+        // turn the CI gate into an unconditional pass
+        eprintln!("error: --expect must be 'regression' or 'clean', got '{expect}'");
+        return 2;
+    }
+
+    let planted = shift > 0.0 && (0..days).contains(&inject);
+    let mut sc = if planted {
+        RegressionScenario::planted(&machine, days, inject, shift, seed)
+    } else {
+        RegressionScenario::control(&machine, days, seed)
+    };
+    // gate the same metric the longitudinal table shows
+    sc.metric = metric.clone();
+    println!(
+        "scenario: {} days on {}, {} (seed {seed})",
+        days,
+        machine,
+        if planted {
+            format!("{shift}% slowdown planted on day {inject}")
+        } else {
+            "unchanged control (0% shift)".to_string()
+        }
+    );
+    let mut world = World::new(seed);
+    let outcome = tracking::run_scenario(&mut world, &sc);
+
+    let mut t = crate::util::table::Table::new(&[
+        "day", "pipeline", "status", "verdict", "extra_reps",
+    ]);
+    for (day, pid, ok) in &outcome.pipelines {
+        t.push_row(vec![
+            day.to_string(),
+            pid.to_string(),
+            if *ok { "pass" } else { "FAIL" }.to_string(),
+            outcome.verdict_on(*day).unwrap_or("-").to_string(),
+            outcome
+                .extra_reps_on(*day)
+                .map(|e| e.to_string())
+                .unwrap_or_else(|| "-".to_string()),
+        ]);
+    }
+    print!("{}", t.render());
+    println!("\nlongitudinal series ({metric}):");
+    print!("{}", world.track_table(&metric).render());
+
+    match expect.as_str() {
+        "regression" => {
+            // the *gate verdict* must say regression — a pipeline that
+            // fails on the inject day for an unrelated reason (or a
+            // detector degraded to no-data) must not count as caught
+            let caught = outcome.failed_days.contains(&inject)
+                && outcome.verdict_on(inject) == Some("regression")
+                && outcome.failed_days.iter().all(|d| *d >= inject);
+            if caught {
+                println!(
+                    "\nexpected regression: gate verdict 'regression' on day {inject}, \
+                     no earlier failure"
+                );
+                0
+            } else {
+                eprintln!(
+                    "\nexpected a 'regression' gate verdict on day {inject}; \
+                     failed days: {:?}, verdict: {:?}",
+                    outcome.failed_days,
+                    outcome.verdict_on(inject)
+                );
+                1
+            }
+        }
+        "clean" => {
+            if outcome.failed_days.is_empty() {
+                println!("\nexpected clean: every pipeline passed");
+                0
+            } else {
+                eprintln!(
+                    "\nexpected a green campaign; failed days: {:?}",
+                    outcome.failed_days
+                );
+                1
+            }
+        }
+        // "" (validated up front): informational run, no expectation
+        _ => 0,
+    }
+}
+
 fn cmd_figures(args: &Args) -> i32 {
     let days = args.i64("days", 90);
     let seed = args.u64("seed", 2026);
@@ -190,7 +316,7 @@ fn cmd_figures(args: &Args) -> i32 {
     let mut failures = 0;
     for r in results {
         if let Some(only) = &only {
-            if !r.id.to_lowercase().replace(' ', "") .contains(&only.to_lowercase()) {
+            if !r.id.to_lowercase().replace(' ', "").contains(&only.to_lowercase()) {
                 continue;
             }
         }
@@ -301,8 +427,15 @@ mod tests {
     }
 
     #[test]
-    fn unknown_subcommand_prints_usage() {
-        assert_eq!(run_str("frobnicate"), 0);
+    fn help_is_the_explicit_success_path() {
+        assert_eq!(run_str("help"), 0);
+        assert_eq!(run_str("--help"), 0);
+    }
+
+    #[test]
+    fn unknown_subcommand_errors_with_exit_2() {
+        assert_eq!(run_str("frobnicate"), 2);
+        assert_eq!(run_str("colection --apps 3"), 2); // typo'd command
     }
 
     #[test]
@@ -339,6 +472,32 @@ mod tests {
             ),
             0
         );
+    }
+
+    #[test]
+    fn track_detects_planted_regression() {
+        assert_eq!(
+            run_str("track --days 7 --inject-day 5 --shift-pct 18 --seed 11 --expect regression"),
+            0
+        );
+    }
+
+    #[test]
+    fn track_control_stays_clean() {
+        assert_eq!(
+            run_str("track --days 6 --shift-pct 0 --seed 12 --expect clean"),
+            0
+        );
+    }
+
+    #[test]
+    fn track_rejects_typoed_expectation() {
+        // a typo must not turn the CI gate into an unconditional pass
+        assert_eq!(
+            run_str("track --days 1 --shift-pct 0 --seed 13 --expect regressions"),
+            2
+        );
+        assert_eq!(run_str("track --days 1 --shift-pct 1O"), 2); // typo'd digit
     }
 
     #[test]

@@ -105,7 +105,12 @@ pub struct ModeOutcome {
 
 /// Simulate a collection lifecycle: `n_benchmarks` onboard, then
 /// `n_enhancements` harness improvements roll out.
-pub fn simulate(mode: IntegrationMode, n_benchmarks: usize, n_enhancements: usize, seed: u64) -> ModeOutcome {
+pub fn simulate(
+    mode: IntegrationMode,
+    n_benchmarks: usize,
+    n_enhancements: usize,
+    seed: u64,
+) -> ModeOutcome {
     let mut rng = Prng::new(seed ^ mode.quadrant() as u64);
     // --- onboarding ------------------------------------------------------
     // base effort: adapting the benchmark to the harness conventions
@@ -190,7 +195,11 @@ pub fn simulate(mode: IntegrationMode, n_benchmarks: usize, n_enhancements: usiz
 }
 
 /// Run the full Fig. 2 ablation and render the comparison table.
-pub fn run_ablation(n_benchmarks: usize, n_enhancements: usize, seed: u64) -> (Vec<ModeOutcome>, Table) {
+pub fn run_ablation(
+    n_benchmarks: usize,
+    n_enhancements: usize,
+    seed: u64,
+) -> (Vec<ModeOutcome>, Table) {
     let outcomes: Vec<ModeOutcome> = IntegrationMode::all()
         .iter()
         .map(|&m| simulate(m, n_benchmarks, n_enhancements, seed))

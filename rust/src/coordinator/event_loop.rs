@@ -198,6 +198,17 @@ impl PipelineTask {
             "time-series@v3" => {
                 Started::Jobs(vec![postproc::run_time_series(world, &self.repo, &resolved)])
             }
+            // the tracking gate (DESIGN.md §9): reads recorded history,
+            // adaptively schedules extra repetition runs through the
+            // batch system's discrete-event API, passes/fails the
+            // pipeline with a regressions.json sidecar
+            "regression-check@v1" => Started::Jobs(crate::tracking::run_regression_gate(
+                world,
+                &mut self.repo,
+                &resolved,
+                self.pipeline.id,
+                self.rng.as_mut(),
+            )),
             other => {
                 let mut job =
                     CiJob::new(world.ids.job_id(), &format!("{other}.dispatch"));

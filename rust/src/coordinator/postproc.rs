@@ -93,6 +93,13 @@ pub fn collection_results_table(world: &World, metric: &str) -> Table {
     rows.sort();
     rows.dedup();
     let mut t = Table::new(&["benchmark", "system", "date", "nodes", metric]);
+    if rows.is_empty() {
+        // a labelled empty table, not a bare header: a world with no
+        // completed pipelines should read as such, not render as if the
+        // campaign produced nothing parseable
+        t.push_placeholder("(no completed pipelines)");
+        return t;
+    }
     for r in rows {
         t.push_row(r);
     }
@@ -142,6 +149,11 @@ pub fn queue_stats(world: &World) -> Table {
             format!("{:.0}", crate::util::stats::percentile(&waits, 95.0)),
             backfilled.to_string(),
         ]);
+    }
+    if t.rows.is_empty() {
+        // no machine ran anything: label it instead of rendering a bare
+        // header that reads like a formatting bug
+        t.push_placeholder("(no jobs submitted)");
     }
     t
 }
@@ -509,6 +521,29 @@ mod tests {
         assert_eq!(t.rows[0][2], format!("{latency}"));
         assert_eq!(t.rows[0][3], format!("{latency}"));
         assert_eq!(t.rows[0][4], "0");
+    }
+
+    #[test]
+    fn queue_stats_labels_empty_world() {
+        let world = World::new(1);
+        let t = queue_stats(&world);
+        assert_eq!(t.rows.len(), 1, "{:?}", t.rows);
+        assert!(t.rows[0][0].contains("no jobs submitted"));
+        assert_eq!(t.rows[0][1], "-");
+        assert_eq!(t.rows[0].len(), t.columns.len());
+    }
+
+    #[test]
+    fn collection_results_table_labels_empty_world() {
+        let world = World::new(1);
+        let t = collection_results_table(&world, "runtime");
+        assert_eq!(t.rows.len(), 1, "{:?}", t.rows);
+        assert!(t.rows[0][0].contains("no completed pipelines"));
+        // and stays labelled when repos exist but never ran
+        let mut world = World::new(2);
+        world.add_repo(BenchmarkRepo::logmap_example("jedi", "all"));
+        let t = collection_results_table(&world, "runtime");
+        assert!(t.rows[0][0].contains("no completed pipelines"));
     }
 
     #[test]

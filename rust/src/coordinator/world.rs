@@ -197,6 +197,13 @@ impl World {
     pub fn total_core_hours(&self) -> f64 {
         self.batch.values().map(|b| b.accounts.total_used()).sum()
     }
+
+    /// Longitudinal verdict table over every repository's recorded
+    /// history (the `exacb track` view; DESIGN.md §9). Reads only the
+    /// `exacb.data` branches — never executor state.
+    pub fn track_table(&self, metric: &str) -> crate::util::table::Table {
+        crate::tracking::track_table(self, metric, &crate::tracking::Detector::default())
+    }
 }
 
 #[cfg(test)]
@@ -211,7 +218,11 @@ mod tests {
         world.add_repo(BenchmarkRepo::logmap_example("jedi", "all"));
         let pid = world.run_pipeline("logmap", Trigger::Manual).unwrap();
         let p = world.pipeline(pid).unwrap().clone();
-        assert!(p.succeeded(), "jobs: {:?}", p.jobs.iter().map(|j| (&j.name, j.state)).collect::<Vec<_>>());
+        assert!(
+            p.succeeded(),
+            "jobs: {:?}",
+            p.jobs.iter().map(|j| (&j.name, j.state)).collect::<Vec<_>>()
+        );
         // three stages: setup, execute, record
         assert_eq!(p.jobs.len(), 3);
         let execute = p.job("jedi.logmap.execute").unwrap();

@@ -160,8 +160,10 @@ mod tests {
     fn longer_runs_use_more_energy() {
         let m = jedi();
         let mut rng = Prng::new(2);
-        let (short, _) = wrap_with_jpwr(app_output(50.0, 0.5), &m, 1, m.power.nominal_mhz, &mut rng);
-        let (long, _) = wrap_with_jpwr(app_output(200.0, 0.5), &m, 1, m.power.nominal_mhz, &mut rng);
+        let (short, _) =
+            wrap_with_jpwr(app_output(50.0, 0.5), &m, 1, m.power.nominal_mhz, &mut rng);
+        let (long, _) =
+            wrap_with_jpwr(app_output(200.0, 0.5), &m, 1, m.power.nominal_mhz, &mut rng);
         assert!(
             long.metrics.f64_of("energy_j").unwrap()
                 > 3.0 * short.metrics.f64_of("energy_j").unwrap()

@@ -52,7 +52,13 @@ impl ExperimentResult {
 }
 
 /// Repo running a daily benchmark command on a machine.
-fn daily_repo(name: &str, machine: &str, queue: &str, command: &str, analysis: &str) -> BenchmarkRepo {
+fn daily_repo(
+    name: &str,
+    machine: &str,
+    queue: &str,
+    command: &str,
+    analysis: &str,
+) -> BenchmarkRepo {
     let jube = format!(
         "name: {name}\nparametersets:\n  - name: run\n    parameters:\n      - name: nodes\n        value: 1\nsteps:\n  - name: execute\n    use: [run]\n    remote: true\n    do:\n      - {command}\n{analysis}"
     );
@@ -356,7 +362,9 @@ include:
         }
         curves.push((thresh, curve));
     }
-    let mut table = Table::new(&["msg_bytes", "t1024", "t8192", "t65536", "t262144", "t1048576", "t4194304"]);
+    let mut table = Table::new(&[
+        "msg_bytes", "t1024", "t8192", "t65536", "t262144", "t1048576", "t4194304",
+    ]);
     let sizes: Vec<f64> = curves[0].1.iter().map(|(s, _)| *s).collect();
     for (i, size) in sizes.iter().enumerate() {
         let mut row = vec![format!("{size:.0}")];
@@ -458,7 +466,9 @@ pub fn fig8(seed: u64) -> ExperimentResult {
     let mut rng = crate::util::prng::Prng::new(seed);
     let profile = crate::workloads::logmap::PROFILE;
     let runtime_s = 180.0;
-    let mut table = Table::new(&["gpu", "scope_start_s", "scope_end_s", "scoped_energy_j", "avg_power_w"]);
+    let mut table = Table::new(&[
+        "gpu", "scope_start_s", "scope_end_s", "scoped_energy_j", "avg_power_w",
+    ]);
     let mut plot = Plot::new(
         "Energy-to-solution measurement (Fig. 8)",
         "time [s]",
@@ -512,8 +522,14 @@ pub fn fig9(seed: u64) -> ExperimentResult {
     let mut world = World::new(seed);
     // two apps with different memory-boundedness -> different sweet spots
     let apps = [
-        ("appcompute", "simapp --name appcompute --flops 250000 --membound 0.15 --comm-mb 16 --steps 40"),
-        ("appmemory", "simapp --name appmemory --flops 250000 --membound 0.85 --comm-mb 16 --steps 40"),
+        (
+            "appcompute",
+            "simapp --name appcompute --flops 250000 --membound 0.15 --comm-mb 16 --steps 40",
+        ),
+        (
+            "appmemory",
+            "simapp --name appmemory --flops 250000 --membound 0.85 --comm-mb 16 --steps 40",
+        ),
     ];
     let mut table = Table::new(&["app", "freq_mhz", "energy_j"]);
     let mut sweeps = Vec::new();

@@ -27,6 +27,7 @@ pub mod workloads;
 pub mod energy;
 pub mod analysis;
 pub mod coordinator;
+pub mod tracking;
 pub mod experiments;
 pub mod bench;
 pub mod cli;

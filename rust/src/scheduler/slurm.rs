@@ -659,7 +659,9 @@ mod tests {
         assert_eq!(bs.advance_next_event(), Some(a));
         assert_eq!(bs.pending_count(), 0);
         assert_eq!(bs.running_count(), 1);
-        assert!(bs.record(b).unwrap().start_time.unwrap() >= bs.record(a).unwrap().end_time.unwrap());
+        assert!(
+            bs.record(b).unwrap().start_time.unwrap() >= bs.record(a).unwrap().end_time.unwrap()
+        );
     }
 
     #[test]

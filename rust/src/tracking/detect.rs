@@ -1,0 +1,325 @@
+//! Verdict classification over performance series (DESIGN.md §9).
+//!
+//! Two consumers, two granularities:
+//!
+//! * [`Detector::classify`] — the gate's decision: Welch CI on the
+//!   difference of means between a baseline sample and a candidate
+//!   sample, thresholded symmetrically so before/after swap exactly
+//!   exchanges improvement and regression (property-tested).
+//! * [`Detector::annotate`] + [`segment`] — longitudinal scanning: each
+//!   point judged against a rolling baseline window (prediction-interval
+//!   rule), plus binary-segmentation change-point detection over the
+//!   whole series via [`crate::util::stats::changepoints`].
+//!
+//! Metrics are treated as **lower-is-better** (runtime, energy): a mean
+//! shift up is a regression. Higher-is-better metrics (bandwidths) can
+//! be gated by negating the series at the call site.
+
+use super::stats::{mean, normal_quantile, sample_var, welch_interval, ConfInterval};
+use crate::util::stats::{changepoints, Changepoint};
+
+/// Outcome of comparing a candidate sample against a baseline.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Verdict {
+    /// Not enough baseline history to judge at all.
+    NoBaseline,
+    /// The interval lies inside the ±threshold band: no change to act on.
+    Stable,
+    /// Statistically significant shift *down* (faster / cheaper).
+    Improvement,
+    /// The interval straddles a threshold boundary: measure more.
+    Inconclusive,
+    /// Statistically significant shift *up* beyond the threshold.
+    Regression,
+}
+
+impl Verdict {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Verdict::NoBaseline => "no-baseline",
+            Verdict::Stable => "stable",
+            Verdict::Improvement => "improvement",
+            Verdict::Inconclusive => "inconclusive",
+            Verdict::Regression => "regression",
+        }
+    }
+
+    /// Should a CI gate fail on this verdict (after the repetition
+    /// budget is exhausted)? Regressions always; inconclusive too — a
+    /// gate that cannot prove "no regression" within budget must not
+    /// pass silently (the cbdr stance).
+    pub fn fails_gate(&self) -> bool {
+        matches!(self, Verdict::Regression | Verdict::Inconclusive)
+    }
+
+    /// True when more repetitions could still change the verdict.
+    pub fn wants_more_data(&self) -> bool {
+        matches!(self, Verdict::Inconclusive)
+    }
+}
+
+/// One classification with its evidence.
+#[derive(Debug, Clone)]
+pub struct Classification {
+    pub verdict: Verdict,
+    /// Welch CI on `mean(candidate) - mean(baseline)` (absolute units);
+    /// `None` when either side has fewer than 2 samples.
+    pub interval: Option<ConfInterval>,
+    /// Relative shift in percent of the baseline mean.
+    pub rel_shift_pct: f64,
+    /// The absolute threshold the interval was compared against.
+    pub threshold_abs: f64,
+    pub mean_baseline: f64,
+    pub mean_candidate: f64,
+    pub n_baseline: usize,
+    pub n_candidate: usize,
+}
+
+/// Detection policy: confidence level and the practical-significance
+/// threshold (shifts smaller than `threshold_pct` are noise by decree,
+/// whatever their p-value).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Detector {
+    /// Two-sided confidence for the Welch interval, e.g. 0.95.
+    pub confidence: f64,
+    /// Practical-significance threshold in percent.
+    pub threshold_pct: f64,
+}
+
+impl Default for Detector {
+    fn default() -> Self {
+        Detector {
+            confidence: 0.95,
+            threshold_pct: 5.0,
+        }
+    }
+}
+
+impl Detector {
+    /// Classify a candidate sample against a baseline sample.
+    ///
+    /// The absolute threshold is `threshold_pct` of the *symmetric*
+    /// scale `(|mean_b| + |mean_c|) / 2`, so swapping the two samples
+    /// negates the interval against an identical threshold: regression
+    /// and improvement exchange exactly, stable and inconclusive are
+    /// fixed points (property-tested).
+    pub fn classify(&self, baseline: &[f64], candidate: &[f64]) -> Classification {
+        let mb = mean(baseline);
+        let mc = mean(candidate);
+        // |mb| in the denominator: on negated (higher-is-better) series a
+        // regression must still read as a positive shift. Empty sides
+        // have NaN means; guard so the evidence fields stay meaningful.
+        let rel = if mb.is_finite() && mc.is_finite() && mb.abs() > 1e-300 {
+            100.0 * (mc - mb) / mb.abs()
+        } else {
+            0.0
+        };
+        let thr = {
+            let (mut scale, mut n) = (0.0, 0.0);
+            for m in [mb, mc] {
+                if m.is_finite() {
+                    scale += m.abs();
+                    n += 1.0;
+                }
+            }
+            self.threshold_pct / 100.0 * if n > 0.0 { scale / n } else { 0.0 }
+        };
+        let (verdict, interval) = if baseline.len() < 2 {
+            (Verdict::NoBaseline, None)
+        } else if candidate.len() < 2 {
+            (Verdict::Inconclusive, None)
+        } else {
+            let ci = welch_interval(baseline, candidate, self.confidence)
+                .expect("both sides have >= 2 samples");
+            let v = if ci.entirely_above(thr) {
+                Verdict::Regression
+            } else if ci.entirely_below(-thr) {
+                Verdict::Improvement
+            } else if ci.lo >= -thr && ci.hi <= thr {
+                Verdict::Stable
+            } else {
+                Verdict::Inconclusive
+            };
+            (v, Some(ci))
+        };
+        Classification {
+            verdict,
+            interval,
+            rel_shift_pct: rel,
+            threshold_abs: thr,
+            mean_baseline: mb,
+            mean_candidate: mc,
+            n_baseline: baseline.len(),
+            n_candidate: candidate.len(),
+        }
+    }
+
+    /// Judge a single observation against a rolling baseline: outside
+    /// the prediction interval *and* beyond the practical threshold is a
+    /// shift. Used by [`Detector::annotate`]; the gate uses the stronger
+    /// sample-vs-sample [`Detector::classify`].
+    pub fn classify_point(&self, baseline: &[f64], x: f64) -> Verdict {
+        if baseline.len() < 3 {
+            return Verdict::NoBaseline;
+        }
+        let m = mean(baseline);
+        let sd = sample_var(baseline).sqrt();
+        let z = normal_quantile(0.5 + self.confidence / 2.0);
+        let margin = (z * sd * (1.0 + 1.0 / baseline.len() as f64).sqrt())
+            .max(self.threshold_pct / 100.0 * m.abs());
+        if x > m + margin {
+            Verdict::Regression
+        } else if x < m - margin {
+            Verdict::Improvement
+        } else {
+            Verdict::Stable
+        }
+    }
+
+    /// Per-point verdicts over a whole series: point `i` is judged
+    /// against the `window` points preceding it.
+    pub fn annotate(&self, values: &[f64], window: usize) -> Vec<Verdict> {
+        let window = window.max(1);
+        values
+            .iter()
+            .enumerate()
+            .map(|(i, &x)| {
+                let lo = i.saturating_sub(window);
+                self.classify_point(&values[lo..i], x)
+            })
+            .collect()
+    }
+}
+
+/// Change-point segmentation over a whole series (binary segmentation,
+/// [`crate::util::stats::changepoints`]) with shifts labelled by
+/// direction for lower-is-better metrics.
+pub fn segment(values: &[f64], threshold_sd: f64) -> Vec<(Changepoint, Verdict)> {
+    changepoints(values, threshold_sd)
+        .into_iter()
+        .map(|cp| {
+            let v = if cp.after > cp.before {
+                Verdict::Regression
+            } else {
+                Verdict::Improvement
+            };
+            (cp, v)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::prng::Prng;
+    use crate::util::prop::check;
+
+    fn det() -> Detector {
+        Detector::default()
+    }
+
+    #[test]
+    fn clear_regression_and_improvement() {
+        let base = [10.0, 10.1, 9.9, 10.05, 9.95, 10.02];
+        let slow = [12.0, 12.1, 11.9];
+        let fast = [8.0, 8.1, 7.9];
+        assert_eq!(det().classify(&base, &slow).verdict, Verdict::Regression);
+        assert_eq!(det().classify(&base, &fast).verdict, Verdict::Improvement);
+        let c = det().classify(&base, &slow);
+        assert!(c.rel_shift_pct > 15.0, "{c:?}");
+        assert!(c.interval.unwrap().lo > c.threshold_abs);
+    }
+
+    #[test]
+    fn tiny_shift_is_stable() {
+        let base = [10.0, 10.02, 9.98, 10.01, 9.99, 10.0, 10.01];
+        let cand = [10.05, 10.06, 10.04, 10.05];
+        assert_eq!(det().classify(&base, &cand).verdict, Verdict::Stable);
+    }
+
+    #[test]
+    fn short_sides_are_flagged() {
+        assert_eq!(det().classify(&[1.0], &[2.0, 3.0]).verdict, Verdict::NoBaseline);
+        assert_eq!(
+            det().classify(&[1.0, 1.1, 0.9], &[2.0]).verdict,
+            Verdict::Inconclusive
+        );
+    }
+
+    #[test]
+    fn borderline_shift_is_inconclusive() {
+        // a noisy shift right at the threshold: interval straddles it
+        let base = [10.0, 10.8, 9.2, 10.5, 9.5];
+        let cand = [10.6, 11.4, 9.8, 11.0];
+        let c = det().classify(&base, &cand);
+        assert_eq!(c.verdict, Verdict::Inconclusive, "{c:?}");
+        assert!(c.verdict.wants_more_data());
+    }
+
+    /// Satellite: verdicts are antisymmetric under before/after swap.
+    #[test]
+    fn verdicts_antisymmetric_under_swap() {
+        check("classify(a,b) mirrors classify(b,a)", 120, |g| {
+            let seed = g.u64(0, u64::MAX / 2);
+            let n1 = g.usize(2, 10);
+            let n2 = g.usize(2, 10);
+            let shift = g.f64(-3.0, 3.0);
+            let sd = g.f64(0.01, 1.5).max(0.01);
+            let mut rng = Prng::new(seed);
+            let a: Vec<f64> = (0..n1).map(|_| rng.normal(20.0, sd)).collect();
+            let b: Vec<f64> = (0..n2).map(|_| rng.normal(20.0 + shift, sd)).collect();
+            let d = det();
+            let ab = d.classify(&a, &b).verdict;
+            let ba = d.classify(&b, &a).verdict;
+            let mirrored = match ab {
+                Verdict::Regression => Verdict::Improvement,
+                Verdict::Improvement => Verdict::Regression,
+                v => v,
+            };
+            prop_assert!(
+                ba == mirrored,
+                "classify(a,b)={ab:?} but classify(b,a)={ba:?} (n1={n1} n2={n2} shift={shift} sd={sd})"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn annotate_flags_the_step() {
+        let mut xs: Vec<f64> = (0..20).map(|i| 10.0 + (i % 3) as f64 * 0.02).collect();
+        xs.extend((0..10).map(|i| 13.0 + (i % 3) as f64 * 0.02));
+        let verdicts = det().annotate(&xs, 10);
+        assert_eq!(verdicts.len(), 30);
+        assert_eq!(verdicts[20], Verdict::Regression);
+        // early points have no baseline
+        assert_eq!(verdicts[0], Verdict::NoBaseline);
+        // steady-state points are stable
+        assert_eq!(verdicts[15], Verdict::Stable);
+    }
+
+    #[test]
+    fn segment_labels_direction() {
+        let mut xs = vec![];
+        for i in 0..40 {
+            xs.push(10.0 + (i % 4) as f64 * 0.01);
+        }
+        for i in 0..40 {
+            xs.push(12.0 + (i % 4) as f64 * 0.01);
+        }
+        let segs = segment(&xs, 5.0);
+        assert!(!segs.is_empty());
+        assert!(segs.iter().any(|(cp, v)| {
+            *v == Verdict::Regression && (36..=44).contains(&cp.index)
+        }));
+    }
+
+    #[test]
+    fn verdict_gate_policy() {
+        assert!(Verdict::Regression.fails_gate());
+        assert!(Verdict::Inconclusive.fails_gate());
+        assert!(!Verdict::Stable.fails_gate());
+        assert!(!Verdict::Improvement.fails_gate());
+        assert!(!Verdict::NoBaseline.fails_gate());
+    }
+}

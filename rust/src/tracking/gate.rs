@@ -1,0 +1,475 @@
+//! The `regression-check@v1` CI component: the gate that closes the
+//! continuous-benchmarking loop (DESIGN.md §9).
+//!
+//! Policy (cbdr-style adaptive resampling):
+//!
+//! 1. Reconstruct per-series history from the repository's `exacb.data`
+//!    branch and split it at the current pipeline id: earlier points are
+//!    the **baseline** (last `baseline_window` of them), points from
+//!    this pipeline onwards are the **candidate**.
+//! 2. Classify candidate vs baseline with a Welch CI
+//!    ([`super::detect::Detector`]). While the candidate sample is
+//!    below `min_repetitions` or the verdict is *inconclusive*, schedule
+//!    extra repetition jobs: full execution runs driven concurrently
+//!    through the batch system's discrete-event API
+//!    (`peek_next_event`/`advance_next_event`), each recording a fresh
+//!    report — until the interval clears a threshold or the
+//!    `max_extra_repetitions` budget is exhausted.
+//! 3. Pass or fail the pipeline, attaching the verdict as a
+//!    `regressions.json` artifact — a sidecar like `cache.json`, never
+//!    part of `report.json`.
+//!
+//! The execution cache is stashed for the duration of the gate: a
+//! repetition exists to draw a *fresh* noise sample, which a cache
+//! replay by construction cannot provide.
+
+use crate::ci::{CiJob, CiJobState};
+use crate::coordinator::execution::{ExecPoll, ExecutionParams, ExecutionTask};
+use crate::coordinator::repo::BenchmarkRepo;
+use crate::coordinator::world::World;
+use crate::util::json::Json;
+use crate::util::prng::Prng;
+
+use super::detect::{Classification, Detector, Verdict};
+use super::history::History;
+
+/// Resolved gate policy (post component-schema validation).
+#[derive(Debug, Clone, PartialEq)]
+pub struct GatePolicy {
+    pub metric: String,
+    pub threshold_pct: f64,
+    pub confidence: f64,
+    /// Adaptive minimum candidate sample size before deciding.
+    pub min_repetitions: usize,
+    /// Hard budget of extra repetition runs the gate may schedule.
+    pub max_extra_repetitions: usize,
+    /// Rolling baseline: how many of the latest pre-pipeline points.
+    pub baseline_window: usize,
+    /// Baseline points required before the gate is active at all
+    /// (younger repositories pass with verdict `no-baseline`).
+    pub min_baseline: usize,
+}
+
+impl GatePolicy {
+    /// Resolve policy inputs, falling back to the canonical catalog
+    /// defaults ([`crate::ci::component::regression_check_defaults`]) so
+    /// schema-resolved and direct callers can never drift apart.
+    pub fn from_inputs(inputs: &Json) -> GatePolicy {
+        use crate::ci::component::regression_check_defaults as d;
+        let confidence_pct = inputs
+            .u64_of("confidence_pct")
+            .unwrap_or(d::CONFIDENCE_PCT)
+            .clamp(50, 99);
+        GatePolicy {
+            metric: inputs.str_of("metric").unwrap_or(d::METRIC).to_string(),
+            threshold_pct: inputs
+                .u64_of("threshold_pct")
+                .unwrap_or(d::THRESHOLD_PCT)
+                .max(1) as f64,
+            confidence: confidence_pct as f64 / 100.0,
+            min_repetitions: inputs
+                .u64_of("min_repetitions")
+                .unwrap_or(d::MIN_REPETITIONS)
+                .max(2) as usize,
+            max_extra_repetitions: inputs
+                .u64_of("max_extra_repetitions")
+                .unwrap_or(d::MAX_EXTRA_REPETITIONS) as usize,
+            baseline_window: inputs
+                .u64_of("baseline_window")
+                .unwrap_or(d::BASELINE_WINDOW)
+                .max(2) as usize,
+            min_baseline: inputs
+                .u64_of("min_baseline")
+                .unwrap_or(d::MIN_BASELINE)
+                .max(2) as usize,
+        }
+    }
+
+    pub fn detector(&self) -> Detector {
+        Detector {
+            confidence: self.confidence,
+            threshold_pct: self.threshold_pct,
+        }
+    }
+}
+
+/// One series' classification inside a gate evaluation.
+struct SeriesEval {
+    benchmark: String,
+    system: String,
+    nodes: u64,
+    baseline_pipelines: (u64, u64),
+    candidate_commit: String,
+    classification: Classification,
+}
+
+/// Pull newly recorded reports under `prefix/` into the history.
+/// Already-seen store paths are skipped, so refinement rounds parse
+/// only the repetitions they just recorded instead of re-reading the
+/// whole branch every iteration.
+fn ingest_new_reports(
+    hist: &mut History,
+    known: &mut std::collections::BTreeSet<String>,
+    repo: &BenchmarkRepo,
+    prefix: &str,
+) {
+    for path in repo.store.list("exacb.data", &format!("{prefix}/")) {
+        if !path.ends_with("report.json") || known.contains(&path) {
+            continue;
+        }
+        let benchmark = path.split('/').next().unwrap_or("").to_string();
+        if let Ok(doc) = repo.store.read("exacb.data", &path) {
+            hist.ingest(&benchmark, doc);
+        }
+        known.insert(path);
+    }
+}
+
+/// Split each series at `pipeline_id` and classify. A series may have
+/// no candidate data yet — e.g. a cache-warm replay whose byte-identical
+/// report deduped out of history, or a node count the current definition
+/// no longer runs; it classifies as `no-baseline` (young) or
+/// `inconclusive` (armed, needs repetitions) and the gate loop decides
+/// which it was.
+fn evaluate(hist: &History, policy: &GatePolicy, pipeline_id: u64) -> Vec<SeriesEval> {
+    let det = policy.detector();
+    let mut out = Vec::new();
+    for series in hist.series() {
+        let baseline_pts: Vec<_> = series
+            .points
+            .iter()
+            .filter(|p| p.pipeline_id < pipeline_id)
+            .collect();
+        let candidate_pts: Vec<_> = series
+            .points
+            .iter()
+            .filter(|p| p.pipeline_id >= pipeline_id)
+            .collect();
+        let window_start = baseline_pts.len().saturating_sub(policy.baseline_window);
+        let window = &baseline_pts[window_start..];
+        let baseline: Vec<f64> = window.iter().map(|p| p.value).collect();
+        let candidate: Vec<f64> = candidate_pts.iter().map(|p| p.value).collect();
+        let classification = if baseline.len() < policy.min_baseline {
+            // too young to judge: report as no-baseline, never gate
+            let mut c = det.classify(&baseline, &candidate);
+            c.verdict = Verdict::NoBaseline;
+            c.interval = None;
+            c
+        } else {
+            det.classify(&baseline, &candidate)
+        };
+        out.push(SeriesEval {
+            benchmark: series.key.benchmark.clone(),
+            system: series.key.system.clone(),
+            nodes: series.key.nodes,
+            baseline_pipelines: (
+                window.first().map(|p| p.pipeline_id).unwrap_or(0),
+                window.last().map(|p| p.pipeline_id).unwrap_or(0),
+            ),
+            candidate_commit: candidate_pts
+                .last()
+                .map(|p| p.commit.clone())
+                .unwrap_or_default(),
+            classification,
+        })
+    }
+    out
+}
+
+/// Run `n` extra repetitions of the execution component concurrently on
+/// the shared timeline: every task is polled to its first submission,
+/// then the machine's discrete-event API completes one job at a time
+/// and resumes whichever repetition was waiting on it. Each repetition
+/// records under a fresh pipeline id, so its report is a distinct
+/// history point with honest provenance.
+fn run_repetitions(
+    world: &mut World,
+    repo: &mut BenchmarkRepo,
+    base: &ExecutionParams,
+    n: usize,
+    mut rng: Option<&mut Prng>,
+) -> Vec<CiJob> {
+    let machine = base.machine.clone();
+    let mut tasks: Vec<ExecutionTask> = (0..n)
+        .map(|_| {
+            let rep_pid = world.ids.pipeline_id();
+            ExecutionTask::new(base.clone(), rep_pid)
+        })
+        .collect();
+    let mut pending: Vec<(usize, u64)> = Vec::new();
+    for (i, task) in tasks.iter_mut().enumerate() {
+        match task.poll(world, repo, rng.as_deref_mut(), None) {
+            ExecPoll::Waiting { jobid, .. } => pending.push((i, jobid)),
+            ExecPoll::Done => {}
+        }
+    }
+    while !pending.is_empty() {
+        let completed = world
+            .batch
+            .get_mut(&machine)
+            .and_then(|b| b.advance_next_event());
+        let Some(jobid) = completed else {
+            // no running job can ever complete: fail loudly, don't spin
+            for (i, _) in pending.drain(..) {
+                tasks[i].abort("regression-gate repetition stalled");
+            }
+            break;
+        };
+        // a job of another in-flight pipeline may complete first; ignore
+        // it here — the outer event loop re-checks terminal states and
+        // resumes its owner
+        if let Some(pos) = pending.iter().position(|&(_, j)| j == jobid) {
+            let (i, _) = pending.remove(pos);
+            match tasks[i].poll(world, repo, rng.as_deref_mut(), Some(jobid)) {
+                ExecPoll::Waiting { jobid, .. } => pending.push((i, jobid)),
+                ExecPoll::Done => {}
+            }
+        }
+    }
+    tasks
+        .into_iter()
+        .flat_map(|t| t.into_result().0)
+        .collect()
+}
+
+fn interval_json(c: &Classification) -> Json {
+    match &c.interval {
+        Some(ci) => {
+            let scale = c.mean_baseline.abs().max(1e-300);
+            Json::obj()
+                .set("lo", ci.lo)
+                .set("hi", ci.hi)
+                .set("lo_pct", 100.0 * ci.lo / scale)
+                .set("hi_pct", 100.0 * ci.hi / scale)
+                .set("confidence", ci.confidence)
+        }
+        None => Json::Null,
+    }
+}
+
+/// Run the regression gate for one pipeline. Returns the repetition CI
+/// jobs (if any were scheduled) followed by the gate job itself.
+///
+/// `rng` selects the repetition noise stream: the owning pipeline's
+/// per-item stream in concurrent campaigns (so a gate's measurements
+/// stay independent of which other pipelines share the timeline), or
+/// `None` for the world PRNG on the sequential path.
+pub fn run_regression_gate(
+    world: &mut World,
+    repo: &mut BenchmarkRepo,
+    inputs: &Json,
+    pipeline_id: u64,
+    mut rng: Option<&mut Prng>,
+) -> Vec<CiJob> {
+    let policy = GatePolicy::from_inputs(inputs);
+    let params = match ExecutionParams::from_inputs(inputs) {
+        Ok(p) => p,
+        Err(e) => {
+            let mut job = CiJob::new(world.ids.job_id(), "regression-check@v1.validate");
+            job.log_line(format!("input validation failed: {e}"));
+            job.state = CiJobState::Failed;
+            return vec![job];
+        }
+    };
+    let mut job = CiJob::new(
+        world.ids.job_id(),
+        &format!("{}.regression-check", params.prefix),
+    );
+    job.state = CiJobState::Running;
+
+    // Repetitions are measurement runs: stash the cache so they draw
+    // fresh noise samples instead of replaying byte-identical reports.
+    let stashed_cache = world.cache.take();
+
+    let mut rep_jobs: Vec<CiJob> = Vec::new();
+    let mut extra_used = 0usize;
+    let mut hist = History::new(&[policy.metric.as_str()]);
+    let mut known = std::collections::BTreeSet::new();
+    ingest_new_reports(&mut hist, &mut known, repo, &params.prefix);
+    let evals = loop {
+        let mut evals = evaluate(&hist, &policy, pipeline_id);
+        // a series still without candidate data after a repetition round
+        // ran the current definition is history the definition no longer
+        // produces (e.g. a dropped node count) — not this pipeline's
+        // evidence. First-round candidate-less *armed* series instead
+        // request repetitions below: that is the cache-warm case, where
+        // the replayed report deduped out of history.
+        if extra_used > 0 {
+            evals.retain(|e| e.classification.n_candidate > 0);
+        }
+        // how many more candidate samples does the neediest series want?
+        // Unarmed (no-baseline) series never request repetitions: young
+        // repositories pass for free (DESIGN.md §9 rule 1), warm or cold.
+        let deficit = evals
+            .iter()
+            .filter(|e| e.classification.verdict != Verdict::NoBaseline)
+            .map(|e| {
+                policy
+                    .min_repetitions
+                    .saturating_sub(e.classification.n_candidate)
+            })
+            .max()
+            .unwrap_or(0);
+        let inconclusive = evals
+            .iter()
+            .any(|e| e.classification.verdict.wants_more_data());
+        if deficit == 0 && !inconclusive {
+            break evals;
+        }
+        let remaining = policy.max_extra_repetitions.saturating_sub(extra_used);
+        if remaining == 0 {
+            break evals;
+        }
+        // reach the adaptive minimum in one concurrent batch; past it,
+        // refine an inconclusive interval two repetitions at a time
+        let want = if deficit > 0 { deficit } else { 2 };
+        let batch = want.min(remaining);
+        job.log_line(format!(
+            "scheduling {batch} extra repetition(s) ({} of {} used): {}",
+            extra_used + batch,
+            policy.max_extra_repetitions,
+            if deficit > 0 {
+                "below adaptive minimum"
+            } else {
+                "interval inconclusive"
+            }
+        ));
+        rep_jobs.extend(run_repetitions(world, repo, &params, batch, rng.as_deref_mut()));
+        extra_used += batch;
+        ingest_new_reports(&mut hist, &mut known, repo, &params.prefix);
+    };
+
+    world.cache = stashed_cache;
+
+    // ---- verdict + regressions.json sidecar ---------------------------
+    let overall = evals
+        .iter()
+        .map(|e| e.classification.verdict)
+        .max()
+        .unwrap_or(Verdict::NoBaseline);
+    let mut series_json = Json::arr();
+    for e in &evals {
+        let c = &e.classification;
+        series_json.push(
+            Json::obj()
+                .set("benchmark", e.benchmark.as_str())
+                .set("system", e.system.as_str())
+                .set("nodes", e.nodes)
+                .set("metric", policy.metric.as_str())
+                .set("verdict", c.verdict.as_str())
+                .set("interval", interval_json(c))
+                .set("rel_shift_pct", c.rel_shift_pct)
+                .set("threshold_abs", c.threshold_abs)
+                .set(
+                    "baseline",
+                    Json::obj()
+                        .set("points", c.n_baseline)
+                        .set("mean", c.mean_baseline)
+                        .set("pipelines_from", e.baseline_pipelines.0)
+                        .set("pipelines_to", e.baseline_pipelines.1),
+                )
+                .set(
+                    "candidate",
+                    Json::obj()
+                        .set("points", c.n_candidate)
+                        .set("mean", c.mean_candidate)
+                        .set("commit", e.candidate_commit.as_str()),
+                ),
+        );
+        job.log_line(format!(
+            "{}@{} nodes={}: {} (shift {:+.2}%, {} baseline / {} candidate points)",
+            e.benchmark,
+            e.system,
+            e.nodes,
+            c.verdict.as_str(),
+            c.rel_shift_pct,
+            c.n_baseline,
+            c.n_candidate
+        ));
+    }
+    let verdict_str = if evals.is_empty() {
+        "no-data"
+    } else {
+        overall.as_str()
+    };
+    let doc = Json::obj()
+        .set("component", "regression-check@v1")
+        .set("metric", policy.metric.as_str())
+        .set("threshold_pct", policy.threshold_pct)
+        .set("confidence", policy.confidence)
+        .set("pipeline_id", pipeline_id)
+        .set("commit", repo.commit.as_str())
+        .set("extra_repetitions", extra_used)
+        .set("repetition_budget", policy.max_extra_repetitions)
+        .set("verdict", verdict_str)
+        .set("series", series_json);
+    job.add_artifact("regressions.json", &doc.pretty());
+    job.output = Json::obj()
+        .set("verdict", verdict_str)
+        .set("extra_repetitions", extra_used);
+
+    let failed = evals.is_empty() || overall.fails_gate();
+    job.log_line(format!(
+        "verdict: {verdict_str} ({extra_used} extra repetition(s) of {} budget) → {}",
+        policy.max_extra_repetitions,
+        if failed { "FAIL" } else { "pass" }
+    ));
+    job.state = if failed {
+        CiJobState::Failed
+    } else {
+        CiJobState::Success
+    };
+    rep_jobs.push(job);
+    rep_jobs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn policy_resolves_defaults_and_bounds() {
+        let p = GatePolicy::from_inputs(&Json::obj());
+        assert_eq!(p.metric, "runtime");
+        assert_eq!(p.threshold_pct, 5.0);
+        assert!((p.confidence - 0.95).abs() < 1e-12);
+        assert_eq!(p.min_repetitions, 4);
+        assert_eq!(p.max_extra_repetitions, 6);
+        assert_eq!(p.baseline_window, 10);
+        assert_eq!(p.min_baseline, 4);
+
+        let p = GatePolicy::from_inputs(
+            &Json::obj()
+                .set("metric", "tts")
+                .set("threshold_pct", 0u64)
+                .set("confidence_pct", 200u64)
+                .set("min_repetitions", 1u64),
+        );
+        assert_eq!(p.metric, "tts");
+        assert_eq!(p.threshold_pct, 1.0); // clamped up
+        assert!((p.confidence - 0.99).abs() < 1e-12); // clamped down
+        assert_eq!(p.min_repetitions, 2); // clamped up
+    }
+
+    #[test]
+    fn gate_without_execution_inputs_fails_validation() {
+        let mut world = World::new(1);
+        let mut repo = BenchmarkRepo::new("empty");
+        // machine is empty → runner preflight can never pass; but the
+        // params parse, so the gate runs and reports no-data
+        let jobs = run_regression_gate(&mut world, &mut repo, &Json::obj(), 1, None);
+        let gate = jobs.last().unwrap();
+        assert_eq!(gate.state, CiJobState::Failed);
+        let doc = Json::parse(gate.artifact("regressions.json").unwrap()).unwrap();
+        assert_eq!(doc.str_of("verdict"), Some("no-data"));
+    }
+
+    #[test]
+    fn gate_restores_cache_after_repetitions() {
+        let mut world = World::new(5);
+        world.enable_cache();
+        let mut repo = BenchmarkRepo::new("r");
+        run_regression_gate(&mut world, &mut repo, &Json::obj(), 1, None);
+        assert!(world.cache.is_some(), "stashed cache must be restored");
+    }
+}

@@ -1,0 +1,346 @@
+//! Longitudinal series reconstruction over the report store
+//! (DESIGN.md §9).
+//!
+//! History is rebuilt **only** from protocol reports recorded on the
+//! `exacb.data` branch — the same read-side discipline as the
+//! post-processing orchestrators (§3): never executor or scheduler
+//! state. Each successful data entry contributes one point to the
+//! series keyed by (benchmark, system, metric, nodes), carrying
+//! per-commit provenance (the source commit and pipeline id from the
+//! report's `reporter` section).
+//!
+//! Points are **digest-keyed**: the point identity is a hash of the
+//! report *content* plus the entry index and metric name. Two
+//! consequences, both tested:
+//!
+//! * ingestion order does not matter — any permutation of the same
+//!   reports reconstructs the identical history;
+//! * a cache-warm replay, which re-commits a byte-identical report
+//!   document under a new store path, never creates a new history point
+//!   (replays are evidence of nothing).
+
+use std::collections::BTreeMap;
+
+use crate::protocol::Report;
+use crate::store::DataStore;
+use crate::util::timeutil::SimTime;
+use crate::util::wide_hash;
+
+/// Identity of one longitudinal series.
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
+pub struct SeriesKey {
+    /// Store-path prefix segment, e.g. `jedi.logmap` (the execution
+    /// component's `prefix` input).
+    pub benchmark: String,
+    /// The machine the experiment ran on (`experiment.system`).
+    pub system: String,
+    /// Metric name; `runtime` is always available.
+    pub metric: String,
+    /// Parameter-point node count: different scales are different series.
+    pub nodes: u64,
+}
+
+/// One observation with provenance.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HistoryPoint {
+    /// Content digest: report document ⊕ entry index ⊕ metric.
+    pub digest: String,
+    /// Experiment timestamp (series x-axis).
+    pub time: SimTime,
+    /// Pipeline that produced the report (monotonic — the gate uses it
+    /// to split baseline from candidate).
+    pub pipeline_id: u64,
+    /// Source-tree commit of the benchmark repository at run time.
+    pub commit: String,
+    pub value: f64,
+}
+
+/// A reconstructed series, points in (time, pipeline, digest) order.
+#[derive(Debug, Clone)]
+pub struct Series {
+    pub key: SeriesKey,
+    pub points: Vec<HistoryPoint>,
+}
+
+impl Series {
+    pub fn values(&self) -> Vec<f64> {
+        self.points.iter().map(|p| p.value).collect()
+    }
+}
+
+/// All series reconstructed from a report store.
+#[derive(Debug, Clone, Default)]
+pub struct History {
+    metrics: Vec<String>,
+    series: BTreeMap<SeriesKey, BTreeMap<String, HistoryPoint>>,
+}
+
+impl History {
+    pub fn new(metrics: &[&str]) -> History {
+        History {
+            metrics: metrics.iter().map(|m| m.to_string()).collect(),
+            series: BTreeMap::new(),
+        }
+    }
+
+    /// Ingest one protocol document under a benchmark name. Returns
+    /// `false` (and ingests nothing) when the document does not parse —
+    /// robustness against partial generation, counted by the caller.
+    pub fn ingest(&mut self, benchmark: &str, document: &str) -> bool {
+        let Ok(report) = Report::parse(document) else {
+            return false;
+        };
+        let doc_digest = wide_hash(document.as_bytes());
+        let time = report.experiment.time().unwrap_or_default();
+        for (idx, e) in report.data.iter().enumerate() {
+            if !e.success {
+                continue;
+            }
+            for metric in &self.metrics {
+                let v = if metric == "runtime" {
+                    Some(e.runtime)
+                } else {
+                    e.metric(metric)
+                };
+                let Some(v) = v else { continue };
+                if !v.is_finite() {
+                    continue;
+                }
+                let key = SeriesKey {
+                    benchmark: benchmark.to_string(),
+                    system: report.experiment.system.clone(),
+                    metric: metric.clone(),
+                    nodes: e.nodes,
+                };
+                let digest = wide_hash(format!("{doc_digest}|{idx}|{metric}").as_bytes());
+                self.series.entry(key).or_default().insert(
+                    digest.clone(),
+                    HistoryPoint {
+                        digest,
+                        time,
+                        pipeline_id: report.reporter.pipeline_id,
+                        commit: report.reporter.commit.clone(),
+                        value: v,
+                    },
+                );
+            }
+        }
+        true
+    }
+
+    /// Reconstruct history from every `report.json` under `prefix` on
+    /// `branch` (the `exacb.data` read-side discipline). The benchmark
+    /// name of each series is the first store-path segment. Returns the
+    /// history and the count of unparseable documents skipped.
+    pub fn from_store(
+        store: &DataStore,
+        branch: &str,
+        prefix: &str,
+        metrics: &[&str],
+    ) -> (History, usize) {
+        let mut h = History::new(metrics);
+        let mut skipped = 0;
+        for (path, content) in store.read_all(branch, prefix) {
+            if !path.ends_with("report.json") {
+                continue;
+            }
+            let benchmark = path.split('/').next().unwrap_or("").to_string();
+            if !h.ingest(&benchmark, &content) {
+                skipped += 1;
+            }
+        }
+        (h, skipped)
+    }
+
+    /// Every series, keys sorted, points in (time, pipeline, digest)
+    /// order — identical whatever order reports were ingested in.
+    pub fn series(&self) -> Vec<Series> {
+        self.series
+            .iter()
+            .map(|(key, pts)| {
+                let mut points: Vec<HistoryPoint> = pts.values().cloned().collect();
+                points.sort_by(|a, b| {
+                    (a.time, a.pipeline_id, &a.digest).cmp(&(b.time, b.pipeline_id, &b.digest))
+                });
+                Series {
+                    key: key.clone(),
+                    points,
+                }
+            })
+            .collect()
+    }
+
+    /// Points of one series (sorted), if present.
+    pub fn get(&self, key: &SeriesKey) -> Option<Vec<HistoryPoint>> {
+        self.series().into_iter().find(|s| &s.key == key).map(|s| s.points)
+    }
+
+    pub fn total_points(&self) -> usize {
+        self.series.values().map(|pts| pts.len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.total_points() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::protocol::{DataEntry, Experiment, Reporter};
+    use crate::util::json::Json;
+
+    fn report(
+        system: &str,
+        day: i64,
+        pipeline: u64,
+        commit: &str,
+        entries: &[(u64, f64)],
+    ) -> String {
+        Report {
+            reporter: Reporter {
+                tool: "exacb".into(),
+                tool_version: "0.1".into(),
+                pipeline_id: pipeline,
+                commit: commit.into(),
+                system: system.into(),
+                timestamp: SimTime::from_days(day).iso8601(),
+                ..Default::default()
+            },
+            parameter: Json::obj(),
+            experiment: Experiment {
+                system: system.into(),
+                timestamp: SimTime::from_days(day).iso8601(),
+                ..Default::default()
+            },
+            data: entries
+                .iter()
+                .map(|&(nodes, runtime)| DataEntry {
+                    success: true,
+                    runtime,
+                    nodes,
+                    metrics: Json::obj().set("tts", runtime),
+                    ..Default::default()
+                })
+                .collect(),
+        }
+        .to_document()
+    }
+
+    #[test]
+    fn series_split_by_nodes_and_metric() {
+        let mut h = History::new(&["runtime", "tts"]);
+        assert!(h.ingest("jedi.app", &report("jedi", 1, 10, "c1", &[(1, 5.0), (4, 2.0)])));
+        assert!(h.ingest("jedi.app", &report("jedi", 2, 11, "c1", &[(1, 5.1)])));
+        let all = h.series();
+        // (1 node, 4 nodes) x (runtime, tts)
+        assert_eq!(all.len(), 4, "{:?}", all.iter().map(|s| &s.key).collect::<Vec<_>>());
+        let one_node_runtime = h
+            .get(&SeriesKey {
+                benchmark: "jedi.app".into(),
+                system: "jedi".into(),
+                metric: "runtime".into(),
+                nodes: 1,
+            })
+            .unwrap();
+        assert_eq!(one_node_runtime.len(), 2);
+        assert_eq!(one_node_runtime[0].value, 5.0);
+        assert_eq!(one_node_runtime[1].value, 5.1);
+        assert_eq!(one_node_runtime[0].commit, "c1");
+        assert_eq!(one_node_runtime[0].pipeline_id, 10);
+    }
+
+    #[test]
+    fn byte_identical_documents_dedupe() {
+        // a cache-warm replay re-commits the same document: no new point
+        let doc = report("jedi", 3, 42, "c9", &[(2, 7.5)]);
+        let mut h = History::new(&["runtime"]);
+        h.ingest("jedi.app", &doc);
+        let n1 = h.total_points();
+        h.ingest("jedi.app", &doc);
+        assert_eq!(h.total_points(), n1);
+    }
+
+    #[test]
+    fn garbage_documents_are_skipped() {
+        let mut h = History::new(&["runtime"]);
+        assert!(!h.ingest("x", "{not json"));
+        assert!(h.is_empty());
+    }
+
+    #[test]
+    fn failed_entries_contribute_nothing() {
+        let mut r = Report::parse(&report("jedi", 1, 1, "c", &[(1, 9.0)])).unwrap();
+        r.data[0].success = false;
+        let mut h = History::new(&["runtime"]);
+        h.ingest("b", &r.to_document());
+        assert!(h.is_empty());
+    }
+
+    /// Satellite: digest-keyed history is order-independent — any
+    /// permutation of the same documents reconstructs identical series.
+    #[test]
+    fn history_is_ingestion_order_independent() {
+        use crate::prop_assert;
+        use crate::util::prop::check;
+        check("history independent of ingestion order", 40, |g| {
+            let n = g.usize(1, 8);
+            let docs: Vec<String> = (0..n)
+                .map(|i| {
+                    report(
+                        if g.bool() { "jedi" } else { "jupiter" },
+                        g.i64(0, 5),
+                        g.u64(1, 50),
+                        &format!("c{}", g.u64(0, 3)),
+                        &[(g.u64(1, 4), g.f64(1.0, 100.0)), (1, i as f64 + 0.5)],
+                    )
+                })
+                .collect();
+            let mut forward = History::new(&["runtime", "tts"]);
+            for d in &docs {
+                forward.ingest("bench", d);
+            }
+            let mut shuffled = docs.clone();
+            // deterministic permutation from the generator
+            for i in (1..shuffled.len()).rev() {
+                let j = g.usize(0, i);
+                shuffled.swap(i, j);
+            }
+            let mut backward = History::new(&["runtime", "tts"]);
+            for d in &shuffled {
+                backward.ingest("bench", d);
+            }
+            let a = forward.series();
+            let b = backward.series();
+            prop_assert!(a.len() == b.len(), "series counts differ: {} vs {}", a.len(), b.len());
+            for (sa, sb) in a.iter().zip(&b) {
+                prop_assert!(sa.key == sb.key, "keys diverge: {:?} vs {:?}", sa.key, sb.key);
+                prop_assert!(
+                    sa.points == sb.points,
+                    "points diverge for {:?}",
+                    sa.key
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn from_store_reads_only_reports() {
+        let mut store = DataStore::new();
+        store.commit(
+            "exacb.data",
+            &[
+                ("jedi.app/1/report.json".into(), report("jedi", 1, 1, "c", &[(1, 4.0)])),
+                ("jedi.app/1/results.csv".into(), "a,b\n1,2\n".into()),
+                ("jedi.app/2/report.json".into(), "{broken".into()),
+            ],
+            "m",
+            SimTime(0),
+        );
+        let (h, skipped) = History::from_store(&store, "exacb.data", "jedi.app/", &["runtime"]);
+        assert_eq!(h.total_points(), 1);
+        assert_eq!(skipped, 1);
+        assert_eq!(h.series()[0].key.benchmark, "jedi.app");
+    }
+}

@@ -1,0 +1,230 @@
+//! Statistical regression detection and longitudinal performance
+//! tracking over the report store (DESIGN.md §9).
+//!
+//! The paper's promise for continuous benchmarking is "early detection
+//! of regressions" and performance tracking across the software
+//! lifecycle; this top-layer module is the decision side of that loop.
+//! It consumes **only** recorded protocol reports (the `exacb.data`
+//! read-side discipline, §3) and produces verdicts:
+//!
+//! * [`history`] — digest-keyed per-(benchmark, system, metric, nodes)
+//!   series reconstruction with per-commit provenance;
+//! * [`stats`] — Welch's t confidence intervals on the difference of
+//!   means + a seeded bootstrap (no external dependencies);
+//! * [`detect`] — improvement / stable / inconclusive / regression
+//!   classification against a rolling baseline, plus change-point
+//!   segmentation over whole series;
+//! * [`gate`] — the `regression-check@v1` CI component: adaptive
+//!   repetition scheduling through the discrete-event core and the
+//!   pass/fail policy with its `regressions.json` sidecar artifact.
+//!
+//! Like `analysis`, this module is invoked from the coordinator's
+//! component dispatch; [`track_table`] and
+//! [`crate::coordinator::World::track_table`] are the a-posteriori
+//! entry points behind `exacb track`.
+
+pub mod detect;
+pub mod gate;
+pub mod history;
+pub mod stats;
+
+pub use detect::{segment, Classification, Detector, Verdict};
+pub use gate::{run_regression_gate, GatePolicy};
+pub use history::{History, HistoryPoint, Series, SeriesKey};
+pub use stats::{bootstrap_interval, welch_interval, ConfInterval};
+
+use crate::ci::Trigger;
+use crate::coordinator::{BenchmarkRepo, World};
+use crate::util::json::Json;
+use crate::util::table::Table;
+use crate::util::timeutil::SimTime;
+use crate::workloads::regression::RegressionScenario;
+
+/// Longitudinal verdict table across every repository in the world:
+/// one row per reconstructed series with its latest rolling-baseline
+/// verdict and change-point count. Labelled empty row when nothing has
+/// been recorded yet.
+pub fn track_table(world: &World, metric: &str, det: &Detector) -> Table {
+    let mut t = Table::new(&[
+        "benchmark",
+        "system",
+        "nodes",
+        "metric",
+        "points",
+        "latest",
+        "changepoints",
+    ]);
+    // nodes stays numeric until after the sort so scaling series render
+    // as 1, 2, 4, 8, 16 — not lexicographically
+    let mut rows: Vec<(String, String, u64, String, usize, String, usize)> = Vec::new();
+    for repo in world.repos.values() {
+        let (hist, _) = History::from_store(&repo.store, "exacb.data", "", &[metric]);
+        for s in hist.series() {
+            let values = s.values();
+            let verdicts = det.annotate(&values, 10);
+            let cps = crate::util::stats::changepoints(&values, 5.0);
+            rows.push((
+                s.key.benchmark.clone(),
+                s.key.system.clone(),
+                s.key.nodes,
+                s.key.metric.clone(),
+                values.len(),
+                verdicts
+                    .last()
+                    .map(|v| v.as_str())
+                    .unwrap_or("-")
+                    .to_string(),
+                cps.len(),
+            ));
+        }
+    }
+    rows.sort();
+    rows.dedup();
+    if rows.is_empty() {
+        t.push_placeholder("(no recorded reports)");
+    } else {
+        for (benchmark, system, nodes, metric, points, latest, cps) in rows {
+            t.push_row(vec![
+                benchmark,
+                system,
+                nodes.to_string(),
+                metric,
+                points.to_string(),
+                latest,
+                cps.to_string(),
+            ]);
+        }
+    }
+    t
+}
+
+/// What one scenario campaign produced, day by day.
+#[derive(Debug, Clone, Default)]
+pub struct ScenarioOutcome {
+    /// (day, pipeline id, pipeline succeeded).
+    pub pipelines: Vec<(i64, u64, bool)>,
+    /// Days whose pipeline failed (the gate, or anything else).
+    pub failed_days: Vec<i64>,
+    /// (day, gate verdict, extra repetitions used) per day the gate ran.
+    pub gate_by_day: Vec<(i64, String, u64)>,
+}
+
+impl ScenarioOutcome {
+    pub fn first_failed_day(&self) -> Option<i64> {
+        self.failed_days.first().copied()
+    }
+
+    pub fn extra_reps_on(&self, day: i64) -> Option<u64> {
+        self.gate_by_day
+            .iter()
+            .find(|(d, _, _)| *d == day)
+            .map(|(_, _, e)| *e)
+    }
+
+    pub fn verdict_on(&self, day: i64) -> Option<&str> {
+        self.gate_by_day
+            .iter()
+            .find(|(d, _, _)| *d == day)
+            .map(|(_, v, _)| v.as_str())
+    }
+}
+
+/// Drive a seeded injected-regression scenario end to end: onboard the
+/// scenario repository (execution + regression gate in its CI config),
+/// fire its daily scheduled pipeline, and apply the planted source
+/// change on the injection day (the jube command slows down and the
+/// repository commit moves — exactly what a real regressing merge
+/// looks like to the framework).
+pub fn run_scenario(world: &mut World, sc: &RegressionScenario) -> ScenarioOutcome {
+    world.add_repo(
+        BenchmarkRepo::new(&sc.app)
+            .with_file("benchmark/jube/app.yml", &sc.jube_file(0))
+            .with_file(".gitlab-ci.yml", &sc.ci_file()),
+    );
+    let mut out = ScenarioOutcome::default();
+    for day in 0..sc.days {
+        world.advance_to(SimTime::from_days(day).add_secs(3 * 3600));
+        // apply the day's source state; a changed definition is a commit
+        let desired = sc.jube_file(day);
+        if let Some(repo) = world.repos.get_mut(&sc.app) {
+            let current = repo.file("benchmark/jube/app.yml").map(str::to_string);
+            if current.as_deref() != Some(desired.as_str()) {
+                for (path, content) in repo.files.iter_mut() {
+                    if path == "benchmark/jube/app.yml" {
+                        *content = desired.clone();
+                    }
+                }
+                repo.commit =
+                    crate::util::short_hash(format!("{desired}|day{day}").as_bytes());
+            }
+        }
+        match world.run_pipeline(&sc.app, Trigger::Scheduled) {
+            Ok(pid) => {
+                let ok = world
+                    .pipeline(pid)
+                    .map(|p| p.succeeded())
+                    .unwrap_or(false);
+                out.pipelines.push((day, pid, ok));
+                if !ok {
+                    out.failed_days.push(day);
+                }
+                if let Some(p) = world.pipeline(pid) {
+                    if let Some(j) = p
+                        .jobs
+                        .iter()
+                        .find(|j| j.name.ends_with(".regression-check"))
+                    {
+                        if let Some(doc) = j.artifact("regressions.json") {
+                            if let Ok(v) = Json::parse(doc) {
+                                out.gate_by_day.push((
+                                    day,
+                                    v.str_of("verdict").unwrap_or("?").to_string(),
+                                    v.u64_of("extra_repetitions").unwrap_or(0),
+                                ));
+                            }
+                        }
+                    }
+                }
+            }
+            Err(_) => {
+                out.pipelines.push((day, 0, false));
+                out.failed_days.push(day);
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn track_table_labels_empty_world() {
+        let world = World::new(1);
+        let t = track_table(&world, "runtime", &Detector::default());
+        assert_eq!(t.rows.len(), 1);
+        assert!(t.rows[0][0].contains("no recorded reports"), "{:?}", t.rows);
+    }
+
+    #[test]
+    fn track_table_over_recorded_history() {
+        let mut world = World::new(7);
+        world.add_repo(BenchmarkRepo::logmap_example("jedi", "all"));
+        for d in 0..6 {
+            world.advance_to(SimTime::from_days(d).add_secs(3 * 3600));
+            world.run_pipeline("logmap", Trigger::Scheduled).unwrap();
+        }
+        let t = world.track_table("runtime");
+        assert_eq!(t.rows.len(), 1, "{:?}", t.rows);
+        assert_eq!(t.rows[0][0], "jedi.logmap");
+        assert_eq!(t.rows[0][1], "jedi");
+        assert_eq!(t.rows[0][4], "6");
+        // a steady series settles to "stable" once the window fills
+        assert!(
+            t.rows[0][5] == "stable" || t.rows[0][5] == "no-baseline",
+            "{:?}",
+            t.rows
+        );
+    }
+}

@@ -1,0 +1,375 @@
+//! Regression-decision statistics (cbdr-style, DESIGN.md §9).
+//!
+//! CI gating on noisy measurements must not compare point estimates:
+//! "Continuous Benchmarking, Done Right" gates on a **confidence
+//! interval on the difference of means**, resampling until the interval
+//! is narrow enough to decide. This module provides that machinery with
+//! zero external dependencies: Welch's t interval (unequal variances,
+//! Welch–Satterthwaite degrees of freedom, an in-repo inverse-t
+//! quantile) and a seeded percentile bootstrap on [`crate::util::prng`].
+//!
+//! Conventions: intervals are on `mean(after) - mean(before)` in the
+//! metric's own units. The gate's decision "interval lower bound above
+//! +threshold" is a one-tailed test at level `(1 - confidence) / 2`.
+
+use crate::util::prng::Prng;
+
+/// A two-sided confidence interval on the difference of means.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ConfInterval {
+    pub lo: f64,
+    pub hi: f64,
+    /// Two-sided confidence level in (0, 1), e.g. 0.95.
+    pub confidence: f64,
+}
+
+impl ConfInterval {
+    pub fn width(&self) -> f64 {
+        self.hi - self.lo
+    }
+
+    pub fn contains(&self, x: f64) -> bool {
+        self.lo <= x && x <= self.hi
+    }
+
+    /// The whole interval sits above `x` (one-tailed significance).
+    pub fn entirely_above(&self, x: f64) -> bool {
+        self.lo > x
+    }
+
+    /// The whole interval sits below `x`.
+    pub fn entirely_below(&self, x: f64) -> bool {
+        self.hi < x
+    }
+}
+
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Unbiased sample variance (n-1 denominator); 0 for n < 2.
+pub fn sample_var(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64
+}
+
+/// Inverse standard-normal CDF (Acklam's rational approximation,
+/// |relative error| < 1.15e-9 over (0, 1)).
+pub fn normal_quantile(p: f64) -> f64 {
+    assert!(p > 0.0 && p < 1.0, "normal_quantile needs p in (0,1), got {p}");
+    const A: [f64; 6] = [
+        -3.969683028665376e+01,
+        2.209460984245205e+02,
+        -2.759285104469687e+02,
+        1.383577518672690e+02,
+        -3.066479806614716e+01,
+        2.506628277459239e+00,
+    ];
+    const B: [f64; 5] = [
+        -5.447609879822406e+01,
+        1.615858368580409e+02,
+        -1.556989798598866e+02,
+        6.680131188771972e+01,
+        -1.328068155288572e+01,
+    ];
+    const C: [f64; 6] = [
+        -7.784894002430293e-03,
+        -3.223964580411365e-01,
+        -2.400758277161838e+00,
+        -2.549732539343734e+00,
+        4.374664141464968e+00,
+        2.938163982698783e+00,
+    ];
+    const D: [f64; 4] = [
+        7.784695709041462e-03,
+        3.224671290700398e-01,
+        2.445134137142996e+00,
+        3.754408661907416e+00,
+    ];
+    const P_LOW: f64 = 0.02425;
+    if p < P_LOW {
+        let q = (-2.0 * p.ln()).sqrt();
+        (((((C[0] * q + C[1]) * q + C[2]) * q + C[3]) * q + C[4]) * q + C[5])
+            / ((((D[0] * q + D[1]) * q + D[2]) * q + D[3]) * q + 1.0)
+    } else if p <= 1.0 - P_LOW {
+        let q = p - 0.5;
+        let r = q * q;
+        (((((A[0] * r + A[1]) * r + A[2]) * r + A[3]) * r + A[4]) * r + A[5]) * q
+            / (((((B[0] * r + B[1]) * r + B[2]) * r + B[3]) * r + B[4]) * r + 1.0)
+    } else {
+        let q = (-2.0 * (1.0 - p).ln()).sqrt();
+        -(((((C[0] * q + C[1]) * q + C[2]) * q + C[3]) * q + C[4]) * q + C[5])
+            / ((((D[0] * q + D[1]) * q + D[2]) * q + D[3]) * q + 1.0)
+    }
+}
+
+/// Inverse Student-t CDF via the Cornish–Fisher expansion in the normal
+/// quantile (accurate to ~0.5% down to df = 2; exact as df → ∞).
+pub fn t_quantile(df: f64, p: f64) -> f64 {
+    let df = df.max(1.0);
+    let z = normal_quantile(p);
+    if df > 1e6 {
+        return z;
+    }
+    let z2 = z * z;
+    let z3 = z2 * z;
+    let z5 = z3 * z2;
+    let z7 = z5 * z2;
+    let z9 = z7 * z2;
+    let g1 = (z3 + z) / 4.0;
+    let g2 = (5.0 * z5 + 16.0 * z3 + 3.0 * z) / 96.0;
+    let g3 = (3.0 * z7 + 19.0 * z5 + 17.0 * z3 - 15.0 * z) / 384.0;
+    let g4 = (79.0 * z9 + 776.0 * z7 + 1482.0 * z5 - 1920.0 * z3 - 945.0 * z) / 92160.0;
+    z + g1 / df + g2 / (df * df) + g3 / (df * df * df) + g4 / (df * df * df * df)
+}
+
+/// Welch–Satterthwaite effective degrees of freedom.
+fn welch_df(v1: f64, n1: f64, v2: f64, n2: f64) -> f64 {
+    let a = v1 / n1;
+    let b = v2 / n2;
+    let denom = a * a / (n1 - 1.0) + b * b / (n2 - 1.0);
+    if denom <= 0.0 {
+        return f64::MAX;
+    }
+    ((a + b) * (a + b)) / denom
+}
+
+/// Welch's t confidence interval on `mean(after) - mean(before)`.
+/// Needs at least 2 samples on each side; `confidence` is the two-sided
+/// level (the gate reads one tail at `(1 - confidence) / 2`).
+pub fn welch_interval(before: &[f64], after: &[f64], confidence: f64) -> Option<ConfInterval> {
+    if before.len() < 2 || after.len() < 2 {
+        return None;
+    }
+    let confidence = confidence.clamp(0.5, 0.9999);
+    let (n1, n2) = (before.len() as f64, after.len() as f64);
+    let (v1, v2) = (sample_var(before), sample_var(after));
+    let d = mean(after) - mean(before);
+    let se = (v1 / n1 + v2 / n2).sqrt();
+    if se <= 0.0 {
+        // both samples are exactly constant: the difference is certain
+        return Some(ConfInterval {
+            lo: d,
+            hi: d,
+            confidence,
+        });
+    }
+    // floor df at 2: the Cornish–Fisher inverse-t is only accurate down
+    // to df ≈ 2 (at df = 1 it is ~10% narrow at 95%), and 2-vs-2-sample
+    // comparisons with very unequal variances push Welch–Satterthwaite
+    // below that. Flooring widens the interval — conservative for a
+    // gate: the verdict degrades to inconclusive, never to a false fail.
+    let df = welch_df(v1, n1, v2, n2).max(2.0);
+    let t = t_quantile(df, 0.5 + confidence / 2.0);
+    Some(ConfInterval {
+        lo: d - t * se,
+        hi: d + t * se,
+        confidence,
+    })
+}
+
+/// Seeded percentile bootstrap interval on `mean(after) - mean(before)`.
+/// Deterministic for a given seed (the PRNG substrate, DESIGN.md §2);
+/// `reps` resamples, both sides resampled with replacement.
+pub fn bootstrap_interval(
+    before: &[f64],
+    after: &[f64],
+    confidence: f64,
+    reps: usize,
+    seed: u64,
+) -> Option<ConfInterval> {
+    if before.is_empty() || after.is_empty() || reps < 8 {
+        return None;
+    }
+    let confidence = confidence.clamp(0.5, 0.9999);
+    let mut rng = Prng::new(seed);
+    let mut diffs = Vec::with_capacity(reps);
+    let resampled_mean = |xs: &[f64], rng: &mut Prng| -> f64 {
+        let mut s = 0.0;
+        for _ in 0..xs.len() {
+            s += xs[rng.below(xs.len() as u64) as usize];
+        }
+        s / xs.len() as f64
+    };
+    for _ in 0..reps {
+        let mb = resampled_mean(before, &mut rng);
+        let ma = resampled_mean(after, &mut rng);
+        diffs.push(ma - mb);
+    }
+    let alpha = 1.0 - confidence;
+    Some(ConfInterval {
+        lo: crate::util::stats::percentile(&diffs, 100.0 * alpha / 2.0),
+        hi: crate::util::stats::percentile(&diffs, 100.0 * (1.0 - alpha / 2.0)),
+        confidence,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::prop::check;
+
+    #[test]
+    fn normal_quantile_known_values() {
+        assert!((normal_quantile(0.975) - 1.959964).abs() < 1e-4);
+        assert!((normal_quantile(0.5)).abs() < 1e-9);
+        assert!((normal_quantile(0.025) + 1.959964).abs() < 1e-4);
+        assert!((normal_quantile(0.95) - 1.644854).abs() < 1e-4);
+    }
+
+    #[test]
+    fn t_quantile_matches_tables() {
+        // textbook two-sided 95% critical values
+        assert!((t_quantile(10.0, 0.975) - 2.228).abs() < 0.01);
+        assert!((t_quantile(4.0, 0.975) - 2.776).abs() < 0.02);
+        assert!((t_quantile(30.0, 0.975) - 2.042).abs() < 0.005);
+        assert!((t_quantile(1e9, 0.975) - 1.96).abs() < 0.001);
+        // symmetry
+        assert!((t_quantile(7.0, 0.975) + t_quantile(7.0, 0.025)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn welch_interval_brackets_obvious_shift() {
+        let before = [10.0, 10.1, 9.9, 10.05, 9.95];
+        let after = [12.0, 12.1, 11.9, 12.05, 11.95];
+        let ci = welch_interval(&before, &after, 0.95).unwrap();
+        assert!(ci.contains(2.0), "{ci:?}");
+        assert!(ci.entirely_above(1.0), "{ci:?}");
+        assert!(ci.lo > 1.5 && ci.hi < 2.5, "{ci:?}");
+    }
+
+    #[test]
+    fn welch_interval_needs_two_samples() {
+        assert!(welch_interval(&[1.0], &[2.0, 3.0], 0.95).is_none());
+        assert!(welch_interval(&[1.0, 2.0], &[3.0], 0.95).is_none());
+    }
+
+    #[test]
+    fn welch_interval_constant_samples() {
+        let ci = welch_interval(&[5.0, 5.0, 5.0], &[7.0, 7.0], 0.95).unwrap();
+        assert_eq!((ci.lo, ci.hi), (2.0, 2.0));
+    }
+
+    #[test]
+    fn welch_floors_df_at_two() {
+        // 2-vs-2 with extreme variance imbalance drives Welch df toward
+        // 1; the interval must be built from the (floored) df = 2
+        // critical value, not the underestimating df = 1 expansion
+        let before = [0.0, 0.002];
+        let after = [10.0, 14.0];
+        let ci = welch_interval(&before, &after, 0.95).unwrap();
+        let d = mean(&after) - mean(&before);
+        let se = (sample_var(&before) / 2.0 + sample_var(&after) / 2.0).sqrt();
+        let expected_half = t_quantile(2.0, 0.975) * se;
+        assert!(
+            ((ci.hi - d) - expected_half).abs() < 1e-9,
+            "half-width {} vs floored-df {}",
+            ci.hi - d,
+            expected_half
+        );
+    }
+
+    #[test]
+    fn welch_interval_negates_under_swap() {
+        let a = [10.0, 10.4, 9.8, 10.2];
+        let b = [11.0, 11.3, 10.9, 11.2, 11.1];
+        let ab = welch_interval(&a, &b, 0.95).unwrap();
+        let ba = welch_interval(&b, &a, 0.95).unwrap();
+        assert!((ab.lo + ba.hi).abs() < 1e-12, "{ab:?} {ba:?}");
+        assert!((ab.hi + ba.lo).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bootstrap_is_seed_deterministic() {
+        let a = [10.0, 11.0, 9.5, 10.5, 10.2, 9.8];
+        let b = [12.0, 12.5, 11.5, 12.2, 11.8, 12.1];
+        let c1 = bootstrap_interval(&a, &b, 0.9, 300, 42).unwrap();
+        let c2 = bootstrap_interval(&a, &b, 0.9, 300, 42).unwrap();
+        assert_eq!(c1, c2);
+        let c3 = bootstrap_interval(&a, &b, 0.9, 300, 43).unwrap();
+        assert!(c1 != c3, "different seeds should resample differently");
+        assert!(c1.contains(2.0) || c1.width() < 1.0, "{c1:?}");
+    }
+
+    /// Satellite: the Welch CI covers the true mean difference at
+    /// (approximately) the nominal rate under the seeded PRNG. 90%
+    /// nominal over 300 trials has a binomial sd of ~1.7%, so the
+    /// [0.84, 0.97] acceptance band is ~3.5 sd wide.
+    #[test]
+    fn welch_coverage_is_nominal() {
+        let mut rng = Prng::new(20260730);
+        let true_diff = 3.0;
+        let trials = 300;
+        let mut covered = 0;
+        for _ in 0..trials {
+            let before: Vec<f64> = (0..8).map(|_| rng.normal(10.0, 1.0)).collect();
+            let after: Vec<f64> = (0..8).map(|_| rng.normal(10.0 + true_diff, 1.0)).collect();
+            let ci = welch_interval(&before, &after, 0.90).unwrap();
+            if ci.contains(true_diff) {
+                covered += 1;
+            }
+        }
+        let rate = covered as f64 / trials as f64;
+        assert!(
+            (0.84..=0.97).contains(&rate),
+            "coverage {rate} far from nominal 0.90"
+        );
+    }
+
+    #[test]
+    fn bootstrap_coverage_is_roughly_nominal() {
+        let mut rng = Prng::new(99);
+        let true_diff = 2.0;
+        let trials: u64 = 150;
+        let mut covered = 0;
+        for t in 0..trials {
+            let before: Vec<f64> = (0..12).map(|_| rng.normal(20.0, 1.5)).collect();
+            let after: Vec<f64> = (0..12).map(|_| rng.normal(22.0, 1.5)).collect();
+            let ci = bootstrap_interval(&before, &after, 0.90, 200, 1000 + t).unwrap();
+            if ci.contains(true_diff) {
+                covered += 1;
+            }
+        }
+        let rate = covered as f64 / trials as f64;
+        // percentile bootstrap under-covers slightly at small n
+        assert!(
+            (0.78..=0.98).contains(&rate),
+            "bootstrap coverage {rate} implausible for nominal 0.90"
+        );
+    }
+
+    #[test]
+    fn welch_coverage_property_over_random_shapes() {
+        check("welch CI covers true diff for zero-variance-free draws", 40, |g| {
+            let n1 = g.usize(4, 12);
+            let n2 = g.usize(4, 12);
+            let diff = g.f64(-5.0, 5.0);
+            let seed = g.u64(0, u64::MAX / 2);
+            // average coverage over repeated draws at this shape: a single
+            // 95% interval can legitimately miss, so check the rate
+            let mut rng = Prng::new(seed);
+            let mut covered = 0;
+            let reps = 60;
+            for _ in 0..reps {
+                let before: Vec<f64> = (0..n1).map(|_| rng.normal(50.0, 2.0)).collect();
+                let after: Vec<f64> = (0..n2).map(|_| rng.normal(50.0 + diff, 2.0)).collect();
+                if welch_interval(&before, &after, 0.95).unwrap().contains(diff) {
+                    covered += 1;
+                }
+            }
+            // 95% nominal, 60 reps: p(<44 covered) is astronomically small
+            prop_assert!(
+                covered >= 44,
+                "coverage {covered}/60 at n1={n1} n2={n2} diff={diff}"
+            );
+            Ok(())
+        });
+    }
+}

@@ -99,6 +99,16 @@ impl Table {
         out
     }
 
+    /// Push a labelled placeholder row: `label` in the first column,
+    /// `-` padding to the table's width. For "empty but meaningful"
+    /// tables — a world with no completed pipelines should read as
+    /// such, not render as a bare header.
+    pub fn push_placeholder(&mut self, label: &str) {
+        let mut row = vec![label.to_string()];
+        row.resize(self.columns.len(), "-".to_string());
+        self.rows.push(row);
+    }
+
     /// Sort rows by a column, numerically when possible.
     pub fn sort_by_column(&mut self, name: &str) {
         if let Some(i) = self.col_index(name) {
@@ -109,6 +119,21 @@ impl Table {
                 }
             });
         }
+    }
+}
+
+#[cfg(test)]
+mod placeholder_tests {
+    use super::*;
+
+    #[test]
+    fn placeholder_pads_to_table_width() {
+        let mut t = Table::new(&["a", "b", "c"]);
+        t.push_placeholder("(empty)");
+        assert_eq!(t.rows, vec![vec!["(empty)", "-", "-"]]);
+        // renders and round-trips like any other row
+        assert!(t.render().contains("(empty)"));
+        assert_eq!(Table::from_csv(&t.to_csv()).unwrap().rows, t.rows);
     }
 }
 

@@ -14,6 +14,7 @@ pub mod graph500;
 pub mod logmap;
 pub mod osu;
 pub mod portfolio;
+pub mod regression;
 pub mod scalable;
 pub mod stream;
 

@@ -1,0 +1,248 @@
+//! Seeded injected-regression scenario (DESIGN.md §9): a benchmark
+//! repository whose workload is deliberately slowed down by a planted
+//! source change on a chosen day, to exercise the regression gate's
+//! true-positive behaviour — and, with a 0% shift, its false-positive
+//! behaviour.
+//!
+//! This module is pure model (simulation layer): it produces the JUBE
+//! definition, the CI configuration (execution + `regression-check@v1`),
+//! and the per-day command lines. `tracking::run_scenario` assembles the
+//! repository and drives the campaign.
+//!
+//! The planted slowdown scales the `simapp` work (`--flops`) by
+//! `1 + shift_pct/100` from `inject_day` on. With the default sizing the
+//! compute term dominates the runtime model (serial + parallel ≫ the
+//! fixed 1 s init/teardown), so the *effective* runtime step is within a
+//! couple of percent of the nominal shift
+//! ([`RegressionScenario::effective_shift_pct`]).
+
+/// One injected-regression campaign definition.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RegressionScenario {
+    /// Repository / application name.
+    pub app: String,
+    pub machine: String,
+    pub queue: String,
+    pub project: String,
+    pub budget: String,
+    /// Simulated campaign length in days.
+    pub days: i64,
+    /// Day the slowdown lands (`None` = control scenario, no change).
+    pub inject_day: Option<i64>,
+    /// Nominal planted slowdown in percent of the compute work.
+    pub shift_pct: f64,
+    /// Campaign seed (the caller seeds the world with it; recorded here
+    /// so reports of true/false-positive runs are reproducible).
+    pub seed: u64,
+    pub nodes: u64,
+    /// Total work at reference size [GFLOP] — sized so runtime ≫ the
+    /// model's fixed 1 s overhead.
+    pub flops: f64,
+    pub steps: u64,
+    // gate policy forwarded into the CI config
+    pub metric: String,
+    pub threshold_pct: u64,
+    pub confidence_pct: u64,
+    pub min_repetitions: u64,
+    pub max_extra_repetitions: u64,
+    pub baseline_window: u64,
+    pub min_baseline: u64,
+}
+
+impl RegressionScenario {
+    fn base(machine: &str, days: i64, seed: u64) -> RegressionScenario {
+        RegressionScenario {
+            app: "rgapp".into(),
+            machine: machine.to_string(),
+            queue: "all".into(),
+            project: "cjsc".into(),
+            budget: "zam".into(),
+            days,
+            inject_day: None,
+            shift_pct: 0.0,
+            seed,
+            nodes: 1,
+            flops: 200_000.0,
+            steps: 10,
+            // pins the catalog defaults (ci::component::
+            // regression_check_defaults — not importable from the
+            // simulation layer) so campaign assertions cannot drift
+            // silently if the defaults move
+            metric: "runtime".into(),
+            threshold_pct: 5,
+            confidence_pct: 95,
+            min_repetitions: 4,
+            max_extra_repetitions: 6,
+            baseline_window: 10,
+            min_baseline: 4,
+        }
+    }
+
+    /// A campaign with a planted `shift_pct` slowdown landing on
+    /// `inject_day`.
+    pub fn planted(
+        machine: &str,
+        days: i64,
+        inject_day: i64,
+        shift_pct: f64,
+        seed: u64,
+    ) -> RegressionScenario {
+        RegressionScenario {
+            inject_day: Some(inject_day),
+            shift_pct,
+            ..Self::base(machine, days, seed)
+        }
+    }
+
+    /// The 0%-shift control: an unchanged branch that must stay green.
+    pub fn control(machine: &str, days: i64, seed: u64) -> RegressionScenario {
+        Self::base(machine, days, seed)
+    }
+
+    /// The execution prefix (`machine.app`) the gate tracks.
+    pub fn prefix(&self) -> String {
+        format!("{}.{}", self.machine, self.app)
+    }
+
+    /// True when `day` runs the slowed-down source.
+    pub fn injected(&self, day: i64) -> bool {
+        matches!(self.inject_day, Some(d) if day >= d && self.shift_pct > 0.0)
+    }
+
+    /// The workload command line for a given day.
+    pub fn command(&self, day: i64) -> String {
+        let factor = if self.injected(day) {
+            1.0 + self.shift_pct / 100.0
+        } else {
+            1.0
+        };
+        format!(
+            "simapp --name {} --flops {:.0} --steps {}",
+            self.app,
+            self.flops * factor,
+            self.steps
+        )
+    }
+
+    /// The JUBE definition as of `day` (the planted change is a changed
+    /// `do:` line — what a regressing merge looks like).
+    pub fn jube_file(&self, day: i64) -> String {
+        format!(
+            "name: {name}\n\
+             parametersets:\n  - name: run\n    parameters:\n      - name: nodes\n        value: {nodes}\n\
+             steps:\n  - name: execute\n    use: [run]\n    remote: true\n    do:\n      - {cmd}\n",
+            name = self.app,
+            nodes = self.nodes,
+            cmd = self.command(day)
+        )
+    }
+
+    /// CI configuration: the execution component followed by the
+    /// regression gate, both over the same prefix.
+    pub fn ci_file(&self) -> String {
+        let prefix = self.prefix();
+        format!(
+            r#"include:
+  - component: execution@v3
+    inputs:
+      prefix: "{prefix}"
+      machine: "{machine}"
+      queue: "{queue}"
+      project: "{project}"
+      budget: "{budget}"
+      jube_file: "benchmark/jube/app.yml"
+  - component: regression-check@v1
+    inputs:
+      prefix: "{prefix}"
+      machine: "{machine}"
+      queue: "{queue}"
+      project: "{project}"
+      budget: "{budget}"
+      jube_file: "benchmark/jube/app.yml"
+      metric: "{metric}"
+      threshold_pct: {threshold}
+      confidence_pct: {confidence}
+      min_repetitions: {min_reps}
+      max_extra_repetitions: {max_extra}
+      baseline_window: {window}
+      min_baseline: {min_baseline}
+schedule:
+  every: day
+  hour: 3
+"#,
+            prefix = prefix,
+            machine = self.machine,
+            queue = self.queue,
+            project = self.project,
+            budget = self.budget,
+            metric = self.metric,
+            threshold = self.threshold_pct,
+            confidence = self.confidence_pct,
+            min_reps = self.min_repetitions,
+            max_extra = self.max_extra_repetitions,
+            window = self.baseline_window,
+            min_baseline = self.min_baseline,
+        )
+    }
+
+    /// The gate reaches its adaptive minimum by adding this many
+    /// repetitions to the pipeline's own execution sample.
+    pub fn expected_min_extra(&self) -> u64 {
+        self.min_repetitions.saturating_sub(1)
+    }
+
+    /// Rough effective runtime step: the nominal shift diluted by the
+    /// model's fixed ~1 s init/teardown (compute of this sizing runs
+    /// tens of seconds, so the dilution is a few percent of the shift).
+    pub fn effective_shift_pct(&self, base_runtime_s: f64) -> f64 {
+        if base_runtime_s <= 1.0 {
+            return 0.0;
+        }
+        self.shift_pct * (base_runtime_s - 1.0) / base_runtime_s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn planted_command_changes_only_from_inject_day() {
+        let sc = RegressionScenario::planted("jedi", 10, 6, 15.0, 42);
+        assert_eq!(sc.command(0), sc.command(5));
+        assert_ne!(sc.command(5), sc.command(6));
+        assert_eq!(sc.command(6), sc.command(9));
+        assert!(sc.command(6).contains("--flops 230000"), "{}", sc.command(6));
+        assert!(sc.injected(6) && !sc.injected(5));
+    }
+
+    #[test]
+    fn control_never_changes() {
+        let sc = RegressionScenario::control("jedi", 10, 42);
+        for d in 0..10 {
+            assert_eq!(sc.command(d), sc.command(0));
+            assert!(!sc.injected(d));
+        }
+    }
+
+    #[test]
+    fn jube_and_ci_have_the_wiring() {
+        let sc = RegressionScenario::planted("jedi", 10, 6, 15.0, 42);
+        let jube = sc.jube_file(0);
+        assert!(jube.contains("remote: true"));
+        assert!(jube.contains("simapp --name rgapp"));
+        let ci = sc.ci_file();
+        assert!(ci.contains("component: execution@v3"));
+        assert!(ci.contains("component: regression-check@v1"));
+        assert!(ci.contains("threshold_pct: 5"));
+        assert!(ci.contains(&format!("prefix: \"{}\"", sc.prefix())));
+    }
+
+    #[test]
+    fn effective_shift_is_close_to_nominal_for_long_runs() {
+        let sc = RegressionScenario::planted("jedi", 10, 6, 15.0, 42);
+        let eff = sc.effective_shift_pct(60.0);
+        assert!(eff > 14.0 && eff < 15.0, "{eff}");
+        assert_eq!(sc.effective_shift_pct(0.5), 0.0);
+    }
+}

@@ -40,7 +40,11 @@ fn execute_then_postprocess_in_one_pipeline() {
     world.add_repo(combined_repo());
     let pid = world.run_pipeline("combo", Trigger::Manual).unwrap();
     let p = world.pipeline(pid).unwrap();
-    assert!(p.succeeded(), "{:?}", p.jobs.iter().map(|j| (&j.name, j.state, &j.log)).collect::<Vec<_>>());
+    assert!(
+        p.succeeded(),
+        "{:?}",
+        p.jobs.iter().map(|j| (&j.name, j.state, &j.log)).collect::<Vec<_>>()
+    );
     // stages: setup, execute, record, scalability
     assert_eq!(p.jobs.len(), 4);
     let scaling = p.job("jedi.combo.scaling.scalability").unwrap();

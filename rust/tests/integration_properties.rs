@@ -347,7 +347,8 @@ fn prop_expansion_matches_job_count() {
         let n_nodes_vals = g.usize(1, 3);
         let n_steps_vals = g.usize(1, 3);
         let nodes_vals: Vec<String> = (0..n_nodes_vals).map(|i| (1u64 << i).to_string()).collect();
-        let steps_vals: Vec<String> = (0..n_steps_vals).map(|i| (10 * (i + 1)).to_string()).collect();
+        let steps_vals: Vec<String> =
+            (0..n_steps_vals).map(|i| (10 * (i + 1)).to_string()).collect();
         let jube = format!(
             "name: px\nparametersets:\n  - name: run\n    parameters:\n      - name: nodes\n        values: [{}]\n      - name: steps\n        values: [{}]\nsteps:\n  - name: execute\n    use: [run]\n    remote: true\n    do:\n      - simapp --name px --flops 1000 --steps $steps\n",
             nodes_vals.join(", "),

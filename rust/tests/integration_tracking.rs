@@ -1,0 +1,243 @@
+//! End-to-end tests of the tracking subsystem (DESIGN.md §9): the
+//! regression gate over planted-slowdown and unchanged scenarios, and
+//! the digest-keyed history's replay immunity.
+
+use exacb::ci::{CiJobState, Trigger};
+use exacb::coordinator::{BenchmarkRepo, World};
+use exacb::tracking::{self, History};
+use exacb::util::json::Json;
+use exacb::workloads::regression::RegressionScenario;
+
+/// A pipeline on a branch with a planted >=10% slowdown must fail the
+/// regression gate on the injection day — with a `regressions.json`
+/// artifact naming the metric and the interval — and must never fail
+/// before it.
+#[test]
+fn planted_regression_fails_the_gate_on_inject_day() {
+    let sc = RegressionScenario::planted("jedi", 8, 5, 15.0, 314159);
+    let mut world = World::new(sc.seed);
+    let outcome = tracking::run_scenario(&mut world, &sc);
+
+    assert!(
+        outcome.failed_days.contains(&5),
+        "inject day must fail; failed: {:?}, gates: {:?}",
+        outcome.failed_days,
+        outcome.gate_by_day
+    );
+    assert!(
+        outcome.failed_days.iter().all(|d| *d >= 5),
+        "no failure before the planted change: {:?}",
+        outcome.failed_days
+    );
+    assert_eq!(outcome.verdict_on(5), Some("regression"));
+
+    // the gate decided within the repetition budget
+    let extra = outcome.extra_reps_on(5).unwrap();
+    assert!(
+        extra <= sc.max_extra_repetitions,
+        "extra {extra} beyond budget {}",
+        sc.max_extra_repetitions
+    );
+
+    // regressions.json names the metric and the interval
+    let (_, pid, _) = outcome.pipelines[5];
+    let pipeline = world.pipeline(pid).unwrap();
+    let gate = pipeline
+        .jobs
+        .iter()
+        .find(|j| j.name.ends_with(".regression-check"))
+        .expect("gate job present");
+    assert_eq!(gate.state, CiJobState::Failed);
+    let doc = Json::parse(gate.artifact("regressions.json").unwrap()).unwrap();
+    assert_eq!(doc.str_of("metric"), Some("runtime"));
+    assert_eq!(doc.str_of("verdict"), Some("regression"));
+    let series = doc.get("series").and_then(Json::as_arr).unwrap();
+    assert!(!series.is_empty());
+    let s0 = &series[0];
+    assert_eq!(s0.str_of("verdict"), Some("regression"));
+    let interval = s0.get("interval").unwrap();
+    let lo_pct = interval.f64_of("lo_pct").unwrap();
+    assert!(
+        lo_pct > sc.threshold_pct as f64,
+        "interval lower bound {lo_pct}% must clear the {}% threshold",
+        sc.threshold_pct
+    );
+    // the sidecar stays out of report.json: no recorded report mentions it
+    let repo = world.repo(&sc.app).unwrap();
+    for (path, content) in repo.store.read_all("exacb.data", "") {
+        assert!(
+            !content.contains("regressions.json") && !content.contains("\"verdict\""),
+            "{path} must not embed gate output"
+        );
+    }
+}
+
+/// An unchanged branch passes every day with zero extra repetitions
+/// beyond the adaptive minimum (the gate tops the candidate sample up
+/// to `min_repetitions` and then decides in one shot).
+#[test]
+fn unchanged_branch_stays_green_with_adaptive_minimum() {
+    let sc = RegressionScenario::control("jedi", 8, 271828);
+    let mut world = World::new(sc.seed);
+    let outcome = tracking::run_scenario(&mut world, &sc);
+
+    assert!(
+        outcome.failed_days.is_empty(),
+        "control must stay green: {:?} ({:?})",
+        outcome.failed_days,
+        outcome.gate_by_day
+    );
+    for (day, verdict, extra) in &outcome.gate_by_day {
+        if verdict == "no-baseline" {
+            assert_eq!(*extra, 0, "day {day}: no repetitions before the gate is armed");
+        } else {
+            assert_eq!(verdict, "stable", "day {day}");
+            assert_eq!(
+                *extra,
+                sc.expected_min_extra(),
+                "day {day}: exactly the adaptive minimum, no refinement rounds"
+            );
+        }
+    }
+    // both regimes actually occurred
+    assert!(outcome.gate_by_day.iter().any(|(_, v, _)| v == "no-baseline"));
+    assert!(outcome.gate_by_day.iter().any(|(_, v, _)| v == "stable"));
+}
+
+/// A cache-warm replayed run re-commits a byte-identical report under a
+/// new store path; the digest-keyed history must not grow a new point.
+#[test]
+fn cache_warm_replay_never_creates_a_history_point() {
+    let mut world = World::new(42);
+    world.enable_cache();
+    world.add_repo(BenchmarkRepo::logmap_example("jedi", "all"));
+    world.run_pipeline("logmap", Trigger::Manual).unwrap();
+
+    let repo = world.repo("logmap").unwrap();
+    let (h1, _) = History::from_store(&repo.store, "exacb.data", "", &["runtime"]);
+    let cold_points = h1.total_points();
+    let cold_paths = repo.store.list("exacb.data", "").len();
+    assert!(cold_points > 0);
+
+    // warm run: full cache replay, byte-identical report at a new path
+    world.run_pipeline("logmap", Trigger::Manual).unwrap();
+    assert!(world.cache_stats().hits >= 1, "second run must replay");
+    let repo = world.repo("logmap").unwrap();
+    assert!(
+        repo.store.list("exacb.data", "").len() > cold_paths,
+        "the replay does commit (provenance of the rerun)"
+    );
+    let (h2, _) = History::from_store(&repo.store, "exacb.data", "", &["runtime"]);
+    assert_eq!(
+        h2.total_points(),
+        cold_points,
+        "replayed bytes are evidence of nothing: no new history point"
+    );
+}
+
+/// A *young* repository under a warm cache: the replayed execution
+/// dedupes out of history, the baseline never reaches `min_baseline`,
+/// and the gate must pass for free — zero repetitions, never a no-data
+/// hard fail (DESIGN.md §9 rule 1 holds warm or cold).
+#[test]
+fn young_warm_gated_pipelines_pass_without_repetitions() {
+    let sc = RegressionScenario::control("jedi", 3, 555);
+    let mut world = World::new(sc.seed);
+    world.enable_cache();
+    let outcome = tracking::run_scenario(&mut world, &sc);
+    assert!(
+        outcome.failed_days.is_empty(),
+        "young warm runs must stay green: {:?} ({:?})",
+        outcome.failed_days,
+        outcome.gate_by_day
+    );
+    assert!(world.cache_stats().hits >= 1, "executions must have replayed");
+    for (day, verdict, extra) in &outcome.gate_by_day {
+        assert_eq!(verdict, "no-baseline", "day {day}");
+        assert_eq!(*extra, 0, "day {day}: an unarmed gate spends nothing");
+    }
+}
+
+/// An *armed* gate under a warm cache: the replay contributes no
+/// candidate point, so the gate measures exactly `min_repetitions`
+/// fresh (cache-bypassing) runs and judges those — it neither
+/// hard-fails with no-data nor trusts the replayed bytes.
+#[test]
+fn armed_warm_gated_pipeline_measures_fresh_repetitions() {
+    use exacb::util::timeutil::SimTime;
+    // arm the baseline with cold measurement days first
+    let sc = RegressionScenario::control("jedi", 6, 556);
+    let mut world = World::new(sc.seed);
+    let outcome = tracking::run_scenario(&mut world, &sc);
+    assert!(outcome.failed_days.is_empty(), "{:?}", outcome.gate_by_day);
+
+    // first cached day: a cache miss that seeds the report-level entry
+    world.enable_cache();
+    world.advance_to(SimTime::from_days(6).add_secs(3 * 3600));
+    let p1 = world.run_pipeline(&sc.app, Trigger::Scheduled).unwrap();
+    assert!(world.pipeline(p1).unwrap().succeeded());
+
+    // second cached day: the execution replays byte-identically and
+    // dedupes out of history; the armed gate re-measures
+    world.advance_to(SimTime::from_days(7).add_secs(3 * 3600));
+    let p2 = world.run_pipeline(&sc.app, Trigger::Scheduled).unwrap();
+    let p = world.pipeline(p2).unwrap();
+    assert!(p.succeeded(), "warm gated pipeline must pass");
+    assert!(world.cache_stats().hits >= 1, "day-7 execution must replay");
+    let gate = p
+        .jobs
+        .iter()
+        .find(|j| j.name.ends_with(".regression-check"))
+        .unwrap();
+    let doc = Json::parse(gate.artifact("regressions.json").unwrap()).unwrap();
+    assert_eq!(doc.str_of("verdict"), Some("stable"));
+    assert_eq!(doc.u64_of("extra_repetitions"), Some(sc.min_repetitions));
+}
+
+/// The gate component is schema-validated like every other component:
+/// missing required execution inputs fail the pipeline's validation job
+/// before anything runs.
+#[test]
+fn gate_inputs_are_schema_validated() {
+    let mut world = World::new(9);
+    let repo = BenchmarkRepo::new("misconfigured").with_file(
+        ".gitlab-ci.yml",
+        "component: regression-check@v1\ninputs:\n  prefix: p\n", // no machine/jube_file
+    );
+    world.add_repo(repo);
+    let pid = world.run_pipeline("misconfigured", Trigger::Manual).unwrap();
+    let p = world.pipeline(pid).unwrap();
+    assert!(!p.succeeded());
+    assert!(p.jobs[0].log[0].contains("input validation failed"), "{:?}", p.jobs[0].log);
+}
+
+/// Gate repetitions record under fresh pipeline ids on the same prefix:
+/// every report on the data branch stays protocol-parseable and the
+/// series keeps one benchmark identity.
+#[test]
+fn repetitions_record_parseable_reports_under_one_series() {
+    let sc = RegressionScenario::control("jedi", 6, 1618);
+    let mut world = World::new(sc.seed);
+    tracking::run_scenario(&mut world, &sc);
+    let repo = world.repo(&sc.app).unwrap();
+    let mut reports = 0;
+    for (path, content) in repo.store.read_all("exacb.data", "") {
+        if path.ends_with("report.json") {
+            exacb::protocol::Report::parse(&content)
+                .unwrap_or_else(|e| panic!("{path}: {e}"));
+            reports += 1;
+        }
+    }
+    // 6 daily executions + min_repetitions-1 extra reps on each gated day
+    assert!(reports >= 6 + 2 * (sc.min_repetitions as usize - 1), "got {reports}");
+    let (hist, skipped) = History::from_store(&repo.store, "exacb.data", "", &["runtime"]);
+    assert_eq!(skipped, 0);
+    let series = hist.series();
+    assert_eq!(series.len(), 1, "one (benchmark, system, metric, nodes) series");
+    assert_eq!(series[0].key.benchmark, sc.prefix());
+    assert_eq!(series[0].points.len(), reports);
+    // per-commit provenance: the control never changes its commit
+    let commits: std::collections::BTreeSet<_> =
+        series[0].points.iter().map(|p| p.commit.clone()).collect();
+    assert_eq!(commits.len(), 1);
+}
