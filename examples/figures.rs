@@ -1,6 +1,6 @@
 //! Regenerate every paper table and figure to `out/` (CSV + SVG) and
-//! print the series. Thin wrapper over [`exacb::experiments`]; see
-//! EXPERIMENTS.md for the paper-vs-measured comparison.
+//! print the series. Thin wrapper over `exacb::experiments` (also
+//! reachable as `exacb figures`).
 //!
 //! Run with: `cargo run --release --example figures [-- days]`
 

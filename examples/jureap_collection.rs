@@ -1,16 +1,17 @@
-//! END-TO-END DRIVER (DESIGN.md §6 #2): the paper's headline §VI-A
-//! demonstration at full scale.
+//! End-to-end driver for the paper's headline §VI-A demonstration at
+//! full scale (campaign machinery: DESIGN.md §5; maturity ladder: §10).
 //!
 //! 72 applications across 8 scientific domains, onboarded at
-//! heterogeneous maturity levels (runnability / instrumentability /
-//! reproducibility), continuously benchmarked for 14 simulated days of
-//! daily scheduled CI pipelines on the simulated JUPITER system —
-//! roughly 1000 pipelines, each flowing repository → CI components →
-//! Jacamar-like runner → batch scheduler → workload models → protocol
-//! reports → `exacb.data` branches — followed by the cross-application
-//! analyses the uniform protocol makes possible.
+//! heterogeneous *declared* maturity levels (runnability /
+//! instrumentability / reproducibility), continuously benchmarked for
+//! 14 simulated days of daily scheduled CI pipelines on the simulated
+//! JUPITER system — roughly 1000 pipelines, each flowing repository →
+//! CI components → Jacamar-like runner → batch scheduler → workload
+//! models → protocol reports → `exacb.data` branches — followed by the
+//! cross-application analyses the uniform protocol makes possible.
 //!
-//! The run is recorded in EXPERIMENTS.md §VI-A.
+//! For the campaign where levels are *earned* instead of declared, see
+//! `examples/maturity_ladder.rs` and `exacb jureap`.
 //!
 //! Run with: `cargo run --release --example jureap_collection`
 

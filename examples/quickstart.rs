@@ -1,10 +1,11 @@
-//! Quickstart: the paper's §II walk-through.
+//! Quickstart: the paper's §II walk-through (data flow: DESIGN.md §3).
 //!
 //! Onboards the `logmap` benchmark repository (JUBE-style script + CI
 //! config), runs one CI pipeline on the simulated JEDI system — setup →
 //! execute (through the batch scheduler, with real PJRT kernel execution
 //! when artifacts are built) → record — and prints the Table-I
-//! `results.csv` plus the protocol report.
+//! `results.csv` plus the protocol report. The same flow is reachable
+//! as `exacb quickstart`.
 //!
 //! Run with: `cargo run --example quickstart`
 

@@ -1,0 +1,185 @@
+//! Perf + contract bench for the maturity subsystem (DESIGN.md §10).
+//!
+//! Asserted contracts (a regression fails the bench binary, like the
+//! warm-sweep contract in `perf_e2e` and the gate contracts in
+//! `perf_tracking`):
+//!
+//! * the full JUREAP-scale onboarding campaign — 72 applications × 30
+//!   simulated days of daily pipelines through the `maturity-check@v1`
+//!   gate on the shared timeline — lands every **planted** transition
+//!   on its exact expected day: instrumentation earns
+//!   instrumentability, the replay audit earns reproducibility,
+//!   breakage demotes when windowed evidence decays, the fix re-earns;
+//! * no application ever exceeds its evidence ceiling (never-audited
+//!   apps never reach reproducibility, never-instrumented apps never
+//!   leave runnability);
+//! * a full-collection assessment over all 72 recorded histories
+//!   completes within a wall-time budget.
+//!
+//! Timed cases: single-store evidence assessment, the readiness table,
+//! and criteria evaluation.
+
+use exacb::coordinator::World;
+use exacb::maturity::{self, assess_world, earned_level, CriteriaConfig};
+use exacb::workloads::onboarding::OnboardingScenario;
+use exacb::workloads::portfolio::Maturity;
+
+fn main() {
+    let days = 30i64;
+    let sc = OnboardingScenario::jureap(days);
+    assert_eq!(sc.apps.len(), 72);
+    let mut world = World::new(sc.seed);
+
+    let t0 = std::time::Instant::now();
+    let out = maturity::run_onboarding(&mut world, &sc);
+    let campaign_ms = t0.elapsed().as_secs_f64() * 1e3;
+    println!(
+        "campaign: 72 apps x {days} days, {}/{} pipelines succeeded, \
+         {} transitions, {:.0} ms wall ({:.0} pipelines/s)",
+        out.pipelines_succeeded,
+        out.pipelines_run,
+        out.transitions.len(),
+        campaign_ms,
+        out.pipelines_run as f64 / (campaign_ms / 1e3)
+    );
+
+    // ---- contract: planted promotions land on the exact earn day ------
+    let mut checked = (0usize, 0usize, 0usize, 0usize);
+    for (i, oa) in sc.apps.iter().enumerate() {
+        let name = oa.app.name.as_str();
+        if oa.declared == Maturity::Runnability {
+            if let Some(expect) = sc.expected_instrumentability_day(i) {
+                assert_eq!(
+                    out.transition_day(name, Maturity::Instrumentability),
+                    Some(expect),
+                    "{name}: planted instrumentation must earn on day {expect}: {:?}",
+                    out.transitions_of(name)
+                );
+                checked.0 += 1;
+            }
+        }
+        if oa.declared == Maturity::Instrumentability && oa.verify_from.is_some() {
+            let expect = sc.expected_reproducibility_day(i).unwrap();
+            assert_eq!(
+                out.transition_day(name, Maturity::Reproducibility),
+                Some(expect),
+                "{name}: replay audit must earn the top rung on day {expect}: {:?}",
+                out.transitions_of(name)
+            );
+            checked.1 += 1;
+        }
+        if let (Some(_), Some(fix)) = (oa.break_day, oa.fix_day) {
+            let demote = sc.expected_demotion_day(i).unwrap();
+            let reearn = sc.expected_repromotion_day(i).unwrap();
+            assert_eq!(
+                out.transition_day(name, Maturity::Runnability),
+                Some(demote),
+                "{name}: windowed evidence must decay to a demotion on day {demote}: {:?}",
+                out.transitions_of(name)
+            );
+            let back = out
+                .transitions_of(name)
+                .into_iter()
+                .find(|t| t.day >= fix && t.to == Maturity::Instrumentability)
+                .unwrap_or_else(|| panic!("{name}: no re-promotion after the fix"));
+            assert_eq!(
+                back.day, reearn,
+                "{name}: the fix must re-earn instrumentability on day {reearn}"
+            );
+            checked.2 += 1;
+        }
+        if oa.declared == Maturity::Reproducibility {
+            // re-earning the declared top rung: first audit day after
+            // the evidence floor
+            let expect = sc.expected_reproducibility_day(i).unwrap();
+            assert_eq!(
+                out.transition_day(name, Maturity::Reproducibility),
+                Some(expect),
+                "{name}: declared reproducibility must be re-earned on day {expect}: {:?}",
+                out.transitions_of(name)
+            );
+            checked.3 += 1;
+        }
+    }
+    assert!(
+        checked.0 >= 1 && checked.1 >= 1 && checked.2 >= 1 && checked.3 >= 1,
+        "every planted class must occur: {checked:?}"
+    );
+    println!(
+        "planted transitions exact: {} instrumentations, {} audits, \
+         {} break/fix cycles, {} re-earned declarations",
+        checked.0, checked.1, checked.2, checked.3
+    );
+
+    // ---- contract: nobody exceeds their evidence ceiling --------------
+    for oa in &sc.apps {
+        let level = world.repo(&oa.app.name).unwrap().maturity;
+        if oa.verify_from.is_none() {
+            assert!(
+                level < Maturity::Reproducibility,
+                "{}: reproducibility without a replay audit",
+                oa.app.name
+            );
+        }
+        if oa.instrument_from.is_none() {
+            assert_eq!(
+                level,
+                Maturity::Runnability,
+                "{}: instrumentability without instrumentation",
+                oa.app.name
+            );
+        }
+    }
+    println!("evidence ceilings hold for all 72 applications");
+
+    // ---- contract: full-collection assessment under a wall budget -----
+    let cfg = CriteriaConfig::default();
+    let t1 = std::time::Instant::now();
+    let states = assess_world(&world, &cfg);
+    let assess_ms = t1.elapsed().as_secs_f64() * 1e3;
+    assert_eq!(states.len(), 72);
+    let total_reports: usize = states.iter().map(|s| s.evidence.reports).sum();
+    const ASSESS_BUDGET_MS: f64 = 5_000.0;
+    assert!(
+        assess_ms < ASSESS_BUDGET_MS,
+        "full-collection assessment took {assess_ms:.0} ms (budget {ASSESS_BUDGET_MS} ms)"
+    );
+    println!(
+        "full-collection assessment: 72 stores, {total_reports} distinct reports \
+         in {assess_ms:.1} ms (budget {ASSESS_BUDGET_MS:.0} ms)"
+    );
+
+    // ---- timed cases --------------------------------------------------
+    let mut b = exacb::bench::Bench::quick();
+    let busiest = sc
+        .apps
+        .iter()
+        .enumerate()
+        .max_by_key(|(i, _)| {
+            world
+                .repo(&sc.apps[*i].app.name)
+                .map(|r| r.store.list("exacb.data", "").len())
+                .unwrap_or(0)
+        })
+        .map(|(_, oa)| oa.app.name.clone())
+        .unwrap();
+    let repo = world.repo(&busiest).unwrap().clone();
+    b.throughput_case(
+        "assess: one 30-day store",
+        days as f64,
+        "days",
+        || maturity::assess_repo(&repo, &cfg),
+    );
+    b.case("maturity_table: 72-app readiness view", || {
+        maturity::maturity_table(&world, &cfg)
+    });
+    let sample = states
+        .iter()
+        .find(|s| s.evidence.successful_runs > 0)
+        .unwrap();
+    b.case("criteria: earned_level over evidence", || {
+        earned_level(&sample.evidence, &cfg)
+    });
+    b.report("perf_maturity");
+    println!("\nall maturity contracts held");
+}

@@ -1,8 +1,9 @@
-//! Data analysis (paper §IV-F): "to decouple execution and data
-//! acquisition from evaluation, exaCB provides dedicated CI jobs for data
-//! analysis" — these are the analytics those jobs run. Everything
-//! consumes protocol [`crate::protocol::Report`]s, so the pipeline "can
-//! also be applied outside of a full exaCB workflow".
+//! Data analysis (paper §IV-F; top layer in the DESIGN.md §1 module
+//! map): "to decouple execution and data acquisition from evaluation,
+//! exaCB provides dedicated CI jobs for data analysis" — these are the
+//! analytics those jobs run. Everything consumes protocol
+//! [`crate::protocol::Report`]s, so the pipeline "can also be applied
+//! outside of a full exaCB workflow".
 //!
 //! * [`dataset`] — loading/filtering report sets, series extraction.
 //! * [`timeseries`] — Figs. 3–4: daily series + changepoint detection.

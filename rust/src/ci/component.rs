@@ -28,6 +28,33 @@ pub mod regression_check_defaults {
     pub const MIN_BASELINE: u64 = 4;
 }
 
+/// Canonical `maturity-check@v1` policy defaults — the single source for
+/// the catalog schema below and for
+/// `maturity::GatePolicy::from_inputs` / `maturity::CriteriaConfig`
+/// (direct, non-schema callers), so the resolution paths can never
+/// drift apart. The scenario in `workloads::onboarding` pins the same
+/// values into its generated CI config (it cannot import upward from
+/// the simulation layer).
+pub mod maturity_check_defaults {
+    /// Empty target = assess mode: re-level the repository, never block.
+    pub const TARGET: &str = "";
+    /// Distinct successful reports required for runnability — and the
+    /// evidence floor below which the gate refuses to (de)grade at all
+    /// (young repositories keep their declared level).
+    pub const MIN_RUNS: u64 = 3;
+    /// Distinct instrumented successful reports for instrumentability.
+    pub const MIN_INSTRUMENTED: u64 = 3;
+    /// Distinct systems carrying instrumented evidence.
+    pub const MIN_SYSTEMS: u64 = 1;
+    /// Evidence recency window in days; 0 = whole recorded history.
+    pub const WINDOW_DAYS: u64 = 0;
+    /// Comma-separated metric names that count as instrumentation
+    /// (beyond the Table-I baseline): analysis extractions and the
+    /// jpwr energy metrics.
+    pub const INSTRUMENT_METRICS: &str =
+        "tts_file,kernel_time,app_time,energy_j,node_energy_j,avg_power_w";
+}
+
 #[derive(Debug, Clone, PartialEq)]
 pub enum ComponentError {
     Unknown(String),
@@ -276,6 +303,41 @@ impl ComponentRegistry {
                     reference: "regression-check@v1".into(),
                     inputs: regression_check_inputs,
                 },
+                // the maturity gate (DESIGN.md §10): reads recorded
+                // evidence only, so unlike regression-check it needs no
+                // execution inputs — just the store prefix + policy
+                ComponentSpec {
+                    reference: "maturity-check@v1".into(),
+                    inputs: {
+                        use maturity_check_defaults as m;
+                        vec![
+                            InputSpec::req("prefix", Str),
+                            InputSpec::opt("target", Str, Json::Str(m::TARGET.into())),
+                            InputSpec::opt("min_runs", Int, Json::Num(m::MIN_RUNS as f64)),
+                            InputSpec::opt(
+                                "min_instrumented",
+                                Int,
+                                Json::Num(m::MIN_INSTRUMENTED as f64),
+                            ),
+                            InputSpec::opt(
+                                "min_systems",
+                                Int,
+                                Json::Num(m::MIN_SYSTEMS as f64),
+                            ),
+                            InputSpec::opt(
+                                "window_days",
+                                Int,
+                                Json::Num(m::WINDOW_DAYS as f64),
+                            ),
+                            InputSpec::opt(
+                                "instrument_metrics",
+                                Str,
+                                Json::Str(m::INSTRUMENT_METRICS.into()),
+                            ),
+                            InputSpec::opt("update", Bool, Json::Bool(true)),
+                        ]
+                    },
+                },
                 ComponentSpec {
                     reference: "jureap/energy@v3".into(),
                     inputs: {
@@ -392,9 +454,32 @@ mod tests {
             "jureap/energy@v3",
             "example/jube@v3.2",
             "regression-check@v1",
+            "maturity-check@v1",
         ] {
             assert!(reg.get(c).is_ok(), "{c}");
         }
+    }
+
+    #[test]
+    fn maturity_check_resolves_defaults() {
+        let reg = ComponentRegistry::builtin();
+        let spec = reg.get("maturity-check@v1").unwrap();
+        // prefix is the only required input: the gate reads evidence,
+        // it never executes
+        let err = spec.resolve(&Json::obj()).unwrap_err();
+        assert!(
+            matches!(err, ComponentError::MissingInput { ref input, .. } if input == "prefix")
+        );
+        let resolved = spec
+            .resolve(&Json::obj().set("prefix", "jupiter.app"))
+            .unwrap();
+        assert_eq!(resolved.str_of("target"), Some(""));
+        assert_eq!(resolved.u64_of("min_runs"), Some(3));
+        assert_eq!(resolved.u64_of("window_days"), Some(0));
+        assert!(resolved
+            .str_of("instrument_metrics")
+            .unwrap()
+            .contains("energy_j"));
     }
 
     #[test]

@@ -2,14 +2,19 @@
 //!
 //! ```text
 //! exacb quickstart  [--machine jedi] [--queue all]
-//! exacb pipeline    --repo <name> [--machine jedi]   (built-in demo repos)
 //! exacb collection  [--apps 72] [--days 14] [--machine jupiter]
+//! exacb track       [--days 20] [--inject-day 12] [--shift-pct 15]
+//! exacb jureap      [--apps 72] [--days 12] [--machines jupiter]
 //! exacb figures     [--days 90] [--out out/] [--only fig3]
 //! exacb ablation    [--benchmarks 70]
 //! exacb components
 //! exacb validate    <report.json>...
 //! exacb artifacts
 //! ```
+//!
+//! Every subcommand must be listed in [`USAGE`] with a one-line
+//! description (tested below); unknown commands print the usage and
+//! exit 2.
 
 pub mod args;
 
@@ -35,6 +40,11 @@ COMMANDS:
                 (--days D --inject-day K --shift-pct P --machine M
                 --metric NAME; --shift-pct 0 is the unchanged control;
                 --expect regression|clean sets the exit code for CI)
+  jureap        run the seeded onboarding campaign through the maturity
+                gate and render the cross-application readiness report
+                (--apps N --days D --machines M1,M2 --seed S; apps start
+                at declared levels and must re-earn them from evidence;
+                --expect-promotions fails when no level was ever earned)
   figures       regenerate every paper table/figure (--days D --out DIR --only ID)
   ablation      run the §III integration-mode ablation (--benchmarks N)
   components    list the CI/CD component catalog
@@ -58,6 +68,7 @@ pub fn run(argv: Vec<String>) -> i32 {
         Some("quickstart") => cmd_quickstart(&args),
         Some("collection") => cmd_collection(&args),
         Some("track") => cmd_track(&args),
+        Some("jureap") => cmd_jureap(&args),
         Some("figures") => cmd_figures(&args),
         Some("ablation") => cmd_ablation(&args),
         Some("components") => cmd_components(),
@@ -306,6 +317,80 @@ fn cmd_track(args: &Args) -> i32 {
     }
 }
 
+/// Run the seeded JUREAP-style onboarding campaign end to end through
+/// the `maturity-check@v1` gate (DESIGN.md §10) and render the
+/// cross-application readiness report: per-domain maturity
+/// distribution, promotion timeline, energy-study eligibility
+/// (reproducibility-only), and the full per-app maturity table.
+fn cmd_jureap(args: &Args) -> i32 {
+    use crate::maturity::{self, campaign};
+    use crate::workloads::onboarding::OnboardingScenario;
+
+    let n = args.u64("apps", 72) as usize;
+    let days = args.i64("days", 12);
+    let seed = args.u64("seed", 20260101);
+    let machines_arg = args.str("machines", "jupiter");
+    let expect_promotions = args.bool("expect-promotions");
+    let mut sc = OnboardingScenario::generate(n, days, seed);
+    sc.machines = machines_arg
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect();
+    if sc.machines.is_empty() {
+        eprintln!("error: --machines needs at least one machine name (e.g. jupiter,jedi)");
+        return 2;
+    }
+    println!(
+        "onboarding {n} applications on {} for {days} simulated day(s) \
+         (seed {seed}, replay audit every {} days)…",
+        sc.machines.join(","),
+        sc.verify_every
+    );
+    let mut world = World::new(seed);
+    let t0 = std::time::Instant::now();
+    let outcome = campaign::run_onboarding(&mut world, &sc);
+    println!(
+        "pipelines: {}/{} succeeded in {:.1} ms wall",
+        outcome.pipelines_succeeded,
+        outcome.pipelines_run,
+        t0.elapsed().as_secs_f64() * 1e3
+    );
+
+    let promotions = outcome
+        .transitions
+        .iter()
+        .filter(|t| t.to > t.from)
+        .count();
+    let demotions = outcome.transitions.len() - promotions;
+    println!("\nper-domain maturity distribution (levels currently held):");
+    print!("{}", campaign::domain_distribution(&sc, &world).render());
+    println!("\npromotion timeline ({promotions} promotion(s), {demotions} demotion(s)):");
+    print!("{}", campaign::promotion_timeline(&outcome).render());
+    let eligible = campaign::energy_eligible(&sc, &world);
+    println!(
+        "\nenergy-study eligibility (reproducibility only): {} of {} app(s)",
+        eligible.len(),
+        n
+    );
+    for app in eligible.iter().take(10) {
+        println!("  {app}");
+    }
+    if eligible.len() > 10 {
+        println!("  … and {} more", eligible.len() - 10);
+    }
+    println!("\ncross-application readiness (declared vs earned, evidence):");
+    print!(
+        "{}",
+        maturity::maturity_table(&world, &maturity::CriteriaConfig::default()).render()
+    );
+    if expect_promotions && promotions == 0 {
+        eprintln!("\nexpected at least one earned promotion; none happened");
+        return 1;
+    }
+    0
+}
+
 fn cmd_figures(args: &Args) -> i32 {
     let days = args.i64("days", 90);
     let seed = args.u64("seed", 2026);
@@ -508,5 +593,67 @@ mod tests {
             ),
             0
         );
+    }
+
+    #[test]
+    fn jureap_small_onboarding_earns_levels() {
+        // small but long enough to pass the first audit day: levels are
+        // earned, so --expect-promotions must exit 0
+        assert_eq!(
+            run_str("jureap --apps 6 --days 5 --seed 20260101 --expect-promotions true"),
+            0
+        );
+        assert_eq!(run_str("jureap --apps 2 --days 1 --machines ,"), 2);
+    }
+
+    /// Satellite contract: every dispatched subcommand is listed in
+    /// `exacb help` with a one-line description — a new subcommand
+    /// cannot silently stay undocumented.
+    #[test]
+    fn help_lists_every_subcommand_with_a_description() {
+        // keep in sync with the dispatcher match in `run` (that is the
+        // point: this list fails loudly when the two drift apart)
+        const SUBCOMMANDS: [&str; 10] = [
+            "quickstart",
+            "collection",
+            "track",
+            "jureap",
+            "figures",
+            "ablation",
+            "components",
+            "validate",
+            "artifacts",
+            "help",
+        ];
+        for name in SUBCOMMANDS {
+            let line = USAGE
+                .lines()
+                .find(|l| {
+                    l.strip_prefix("  ")
+                        .and_then(|l| l.strip_prefix(name))
+                        .map(|rest| rest.starts_with(' '))
+                        .unwrap_or(false)
+                })
+                .unwrap_or_else(|| panic!("'{name}' missing from USAGE"));
+            let description = line[2 + name.len()..].trim();
+            assert!(
+                !description.is_empty(),
+                "'{name}' listed without a description"
+            );
+        }
+        // …and nothing else: USAGE command lines (two-space indent, a
+        // word, a description) match the list exactly, so adding a
+        // subcommand to either side without the other fails here
+        let usage_commands = USAGE
+            .lines()
+            .skip_while(|l| !l.starts_with("COMMANDS:"))
+            .filter(|l| l.len() > 2 && l.starts_with("  ") && !l[2..3].contains(' '))
+            .count();
+        assert_eq!(
+            usage_commands,
+            SUBCOMMANDS.len(),
+            "USAGE lists a command this test does not cover (or vice versa)"
+        );
+        assert_eq!(run_str("help"), 0);
     }
 }

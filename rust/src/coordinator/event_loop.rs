@@ -209,6 +209,15 @@ impl PipelineTask {
                 self.pipeline.id,
                 self.rng.as_mut(),
             )),
+            // the maturity gate (DESIGN.md §10): reads recorded
+            // evidence, blocks or grants ladder promotion, re-levels
+            // the repository, emits the maturity.json sidecar
+            "maturity-check@v1" => Started::Jobs(crate::maturity::run_maturity_gate(
+                world,
+                &mut self.repo,
+                &resolved,
+                self.pipeline.id,
+            )),
             other => {
                 let mut job =
                     CiJob::new(world.ids.job_id(), &format!("{other}.dispatch"));

@@ -1,4 +1,5 @@
-//! The exaCB coordinator — the paper's system contribution (§IV–§V).
+//! The exaCB coordinator — the paper's system contribution (§IV–§V;
+//! DESIGN.md §3 data flow, §5 concurrent runner).
 //!
 //! * [`repo`] — benchmark repositories: JUBE-style definitions + CI
 //!   config + the `exacb.data` branch (§IV-A).

@@ -204,6 +204,14 @@ impl World {
     pub fn track_table(&self, metric: &str) -> crate::util::table::Table {
         crate::tracking::track_table(self, metric, &crate::tracking::Detector::default())
     }
+
+    /// Cross-application maturity readiness table: declared vs earned
+    /// level per repository, with the evidence counters behind it (the
+    /// `exacb jureap` view; DESIGN.md §10). Reads only the `exacb.data`
+    /// branches — never executor state.
+    pub fn maturity_table(&self) -> crate::util::table::Table {
+        crate::maturity::maturity_table(self, &crate::maturity::CriteriaConfig::default())
+    }
 }
 
 #[cfg(test)]

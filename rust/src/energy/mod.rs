@@ -1,5 +1,5 @@
-//! Energy measurement (paper §VI-B, Figs. 8–9): the jpwr-like
-//! energy-aware launcher.
+//! Energy measurement (paper §VI-B, Figs. 8–9; top layer in the
+//! DESIGN.md §1 module map): the jpwr-like energy-aware launcher.
 //!
 //! "Energy measurements are obtained by running benchmarks through the
 //! energy-aware launcher jpwr. ... The JUBE platform configuration

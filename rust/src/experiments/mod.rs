@@ -1,5 +1,5 @@
 //! Paper-experiment regeneration: one entry point per table/figure of
-//! the evaluation section (DESIGN.md §5 experiment index).
+//! the evaluation section (top layer in the DESIGN.md §1 module map).
 //!
 //! Every function drives the *full* stack — benchmark repository → CI
 //! pipeline → orchestrators → batch scheduler → workload models (PJRT

@@ -6,10 +6,12 @@
 //! and orchestrated through CI/CD pipelines on HPC systems.
 //!
 //! The crate contains the framework itself (`protocol`, `ci`,
-//! `coordinator`, `harness`, `analysis`, `energy`, `store`) **and** every
-//! substrate the paper depends on, simulated where the real thing is
-//! hardware- or site-gated (`cluster`, `scheduler`, `workloads`): see
-//! DESIGN.md for the substitution table.
+//! `coordinator`, `harness`, `analysis`, `energy`, `store`), the
+//! decision layers on top (`tracking` regression gates, the `maturity`
+//! evidence ladder), **and** every substrate the paper depends on,
+//! simulated where the real thing is hardware- or site-gated
+//! (`cluster`, `scheduler`, `workloads`): see DESIGN.md for the
+//! substitution table.
 //!
 //! Compute hot paths (the logmap and STREAM benchmark kernels) are
 //! AOT-compiled from JAX/Pallas to HLO at build time (`make artifacts`)
@@ -28,6 +30,7 @@ pub mod energy;
 pub mod analysis;
 pub mod coordinator;
 pub mod tracking;
+pub mod maturity;
 pub mod experiments;
 pub mod bench;
 pub mod cli;

@@ -1,0 +1,427 @@
+//! Evidence reconstruction over the report store (DESIGN.md §10).
+//!
+//! Maturity evidence is rebuilt **only** from artifacts recorded on the
+//! `exacb.data` branch — the same read-side discipline as the
+//! post-processing orchestrators and the tracking history (§3, §9):
+//! never executor, scheduler, or CI-job state. Like
+//! [`crate::tracking::History`], the assessment is **digest-keyed** on
+//! report content, with the same two tested consequences:
+//!
+//! * ingestion order does not matter — any permutation of the same
+//!   reports reconstructs the identical evidence;
+//! * a warm cache replay, which re-commits a byte-identical report under
+//!   a new path, never grows an evidence counter. The *only* thing a
+//!   replay proves is replayability itself: the duplicate-path footprint
+//!   feeds exactly one criterion
+//!   ([`super::criteria::Criterion::ReplayVerified`]), and further
+//!   replays of the same document change nothing (idempotence,
+//!   property-tested).
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::coordinator::BenchmarkRepo;
+use crate::protocol::{Report, BASE_COLUMNS};
+use crate::store::DataStore;
+use crate::util::timeutil::SimTime;
+use crate::util::wide_hash;
+use crate::workloads::portfolio::Maturity;
+
+use super::criteria::{earned_level, unmet, CriteriaConfig, Criterion};
+
+/// Monotone evidence counters extracted from a report store. All fields
+/// count *distinct report digests* (replays dedupe), and every criterion
+/// in [`super::criteria`] is a threshold over them.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct Evidence {
+    /// Distinct reports of any outcome (the "enough data to judge"
+    /// floor: below `min_runs` the gate refuses to re-level).
+    pub reports: usize,
+    /// Distinct fully-successful reports (≥ 1 data entry, none failed).
+    pub successful_runs: usize,
+    /// Successful reports whose sibling `results.csv` honours the
+    /// Table-I contract (base columns, in order).
+    pub csv_ok: usize,
+    /// Successful reports carrying an instrumentation metric.
+    pub instrumented_runs: usize,
+    /// Systems any evidence was recorded on.
+    pub systems: BTreeSet<String>,
+    /// Systems carrying instrumented evidence.
+    pub instrumented_systems: BTreeSet<String>,
+    /// Largest group of successful reports agreeing on one nonempty
+    /// (system, software-stage) provenance fingerprint.
+    pub pinned_runs: usize,
+    /// Successful reports recording the reproduction seed.
+    pub seeded_runs: usize,
+    /// Successful reports committed byte-identically at ≥ 2 distinct
+    /// store paths — the warm-replay footprint.
+    pub replay_commits: usize,
+}
+
+/// Everything the assessor remembers about one distinct report document.
+/// All fields are pure functions of the document (plus its content-paired
+/// CSV sibling), which is what makes assessment order-independent.
+#[derive(Debug, Clone)]
+struct ReportFacts {
+    success: bool,
+    csv_ok: bool,
+    instrumented: bool,
+    system: String,
+    stage: String,
+    seeded: bool,
+    time: SimTime,
+}
+
+/// Digest-keyed evidence accumulator over one application's store.
+#[derive(Debug, Clone, Default)]
+pub struct Assessment {
+    cfg: CriteriaConfig,
+    facts: BTreeMap<String, ReportFacts>,
+    /// Digest → the distinct store paths it was committed under.
+    paths: BTreeMap<String, BTreeSet<String>>,
+}
+
+/// Does a `results.csv` text honour the Table-I contract (base columns
+/// present, in order, before any additional metric columns)?
+pub fn csv_honours_contract(csv: &str) -> bool {
+    let Some(header) = csv.lines().next() else {
+        return false;
+    };
+    let cols: Vec<&str> = header.split(',').collect();
+    cols.len() >= BASE_COLUMNS.len()
+        && cols[..BASE_COLUMNS.len()] == BASE_COLUMNS[..]
+}
+
+impl Assessment {
+    pub fn new(cfg: &CriteriaConfig) -> Assessment {
+        Assessment {
+            cfg: cfg.clone(),
+            ..Assessment::default()
+        }
+    }
+
+    /// Ingest one recorded report (with its sibling CSV, when present)
+    /// from `path`. Returns `false` — and ingests nothing — when the
+    /// document does not parse (robustness against partial generation,
+    /// counted by the caller).
+    pub fn ingest(&mut self, path: &str, document: &str, csv: Option<&str>) -> bool {
+        let Ok(report) = Report::parse(document) else {
+            return false;
+        };
+        let digest = wide_hash(document.as_bytes());
+        let csv_ok = csv.map(csv_honours_contract).unwrap_or(false);
+        let entry = self.facts.entry(digest.clone()).or_insert_with(|| {
+            let success =
+                !report.data.is_empty() && report.data.iter().all(|e| e.success);
+            let instrumented = report.data.iter().any(|e| {
+                e.success
+                    && self
+                        .cfg
+                        .instrument_metrics
+                        .iter()
+                        .any(|m| e.metric(m).is_some())
+            });
+            ReportFacts {
+                success,
+                csv_ok,
+                instrumented,
+                system: report.experiment.system.clone(),
+                stage: report.experiment.software_version.clone(),
+                seeded: report.reporter.seed != 0,
+                time: report.experiment.time().unwrap_or_default(),
+            }
+        });
+        // a replayed document is byte-identical, so its facts agree; the
+        // CSV sibling may be absent on one of the paths — OR is both
+        // order-independent and monotone (a later sibling-less ingest
+        // must not revoke already-earned csv evidence)
+        entry.csv_ok |= csv_ok;
+        self.paths.entry(digest).or_default().insert(path.to_string());
+        true
+    }
+
+    /// Reconstruct evidence from every `report.json` under `prefix` on
+    /// `branch`, pairing each with its sibling `results.csv`. Returns
+    /// the assessment and the count of unparseable documents skipped.
+    pub fn from_store(
+        store: &DataStore,
+        branch: &str,
+        prefix: &str,
+        cfg: &CriteriaConfig,
+    ) -> (Assessment, usize) {
+        let mut a = Assessment::new(cfg);
+        let mut skipped = 0;
+        for (path, content) in store.read_all(branch, prefix) {
+            if !path.ends_with("report.json") {
+                continue;
+            }
+            let csv_path = format!("{}results.csv", path.trim_end_matches("report.json"));
+            let csv = store.read(branch, &csv_path).ok();
+            if !a.ingest(&path, &content, csv) {
+                skipped += 1;
+            }
+        }
+        (a, skipped)
+    }
+
+    /// Fold the per-digest facts into the monotone counters, optionally
+    /// restricted to reports from simulated day `since_day` onwards (the
+    /// gate's recency window — day-granular, like environment events,
+    /// §6, so windowed verdicts never depend on queue-wait jitter).
+    pub fn evidence(&self, since_day: Option<i64>) -> Evidence {
+        let mut ev = Evidence::default();
+        let mut pinned: BTreeMap<(&str, &str), usize> = BTreeMap::new();
+        for (digest, f) in &self.facts {
+            if let Some(day) = since_day {
+                if f.time.day() < day {
+                    continue;
+                }
+            }
+            ev.reports += 1;
+            ev.systems.insert(f.system.clone());
+            if !f.success {
+                continue;
+            }
+            ev.successful_runs += 1;
+            if f.csv_ok {
+                ev.csv_ok += 1;
+            }
+            if f.instrumented {
+                ev.instrumented_runs += 1;
+                ev.instrumented_systems.insert(f.system.clone());
+            }
+            if !f.stage.is_empty() {
+                *pinned.entry((f.system.as_str(), f.stage.as_str())).or_default() += 1;
+            }
+            if f.seeded {
+                ev.seeded_runs += 1;
+            }
+            if self.paths.get(digest).map(|p| p.len()).unwrap_or(0) >= 2 {
+                ev.replay_commits += 1;
+            }
+        }
+        ev.pinned_runs = pinned.values().copied().max().unwrap_or(0);
+        ev
+    }
+}
+
+/// The assessed maturity of one application: evidence + the level it has
+/// actually earned, next to the level it declares.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MaturityState {
+    pub app: String,
+    /// The level the repository currently *declares*: its onboarding
+    /// claim until a maturity gate re-levels it — after a gated
+    /// campaign this converges to the earned level (that is the point),
+    /// while un-gated repositories keep showing the declared-vs-earned
+    /// gap. The original claim survives in the campaign's transition
+    /// history.
+    pub declared: Maturity,
+    /// The highest rung the evidence fully earns; `None` below
+    /// runnability.
+    pub earned: Option<Maturity>,
+    pub evidence: Evidence,
+    /// Every unmet criterion up to the top rung, with its shortfall.
+    pub unmet: Vec<(Criterion, String)>,
+    /// Unparseable documents skipped during reconstruction.
+    pub skipped: usize,
+}
+
+impl MaturityState {
+    /// The level the ladder floors at: an application below runnability
+    /// still *is* somewhere — at the bottom rung, re-earning it.
+    pub fn effective(&self) -> Maturity {
+        self.earned.unwrap_or(Maturity::Runnability)
+    }
+}
+
+/// Assess one repository's whole recorded history (no recency window).
+pub fn assess_repo(repo: &BenchmarkRepo, cfg: &CriteriaConfig) -> MaturityState {
+    let (a, skipped) = Assessment::from_store(&repo.store, "exacb.data", "", cfg);
+    let evidence = a.evidence(None);
+    MaturityState {
+        app: repo.name.clone(),
+        declared: repo.maturity,
+        earned: earned_level(&evidence, cfg),
+        unmet: unmet(&evidence, cfg, Maturity::Reproducibility),
+        evidence,
+        skipped,
+    }
+}
+
+/// Assess every repository in the world, sorted by name.
+pub fn assess_world(
+    world: &crate::coordinator::World,
+    cfg: &CriteriaConfig,
+) -> Vec<MaturityState> {
+    world.repos.values().map(|r| assess_repo(r, cfg)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::protocol::{results_csv, DataEntry, Experiment, Reporter};
+    use crate::util::json::Json;
+
+    pub(super) fn report(
+        system: &str,
+        day: i64,
+        pipeline: u64,
+        seed: u64,
+        stage: &str,
+        success: bool,
+        instrumented: bool,
+    ) -> (String, String) {
+        let mut metrics = Json::obj().set("gflops_rate", 12.0);
+        if instrumented {
+            metrics.insert("tts_file", 4.5);
+        }
+        let r = Report {
+            reporter: Reporter {
+                tool: "exacb".into(),
+                tool_version: "0.1".into(),
+                pipeline_id: pipeline,
+                commit: "c0ffee".into(),
+                system: system.into(),
+                timestamp: SimTime::from_days(day).iso8601(),
+                seed,
+                ..Default::default()
+            },
+            parameter: Json::obj(),
+            experiment: Experiment {
+                system: system.into(),
+                software_version: stage.into(),
+                timestamp: SimTime::from_days(day).add_secs(3 * 3600).iso8601(),
+                ..Default::default()
+            },
+            data: vec![DataEntry {
+                success,
+                runtime: 5.0 + day as f64,
+                nodes: 1,
+                metrics,
+                ..Default::default()
+            }],
+        };
+        let csv = results_csv(&[&r]);
+        (r.to_document(), csv)
+    }
+
+    #[test]
+    fn evidence_counts_distinct_successes() {
+        let cfg = CriteriaConfig::default();
+        let mut a = Assessment::new(&cfg);
+        for day in 0..3 {
+            let (doc, csv) = report("jupiter", day, day as u64 + 1, 9, "stage-2026", true, false);
+            assert!(a.ingest(&format!("p/{day}/report.json"), &doc, Some(&csv)));
+        }
+        let (bad, csv) = report("jupiter", 3, 4, 9, "stage-2026", false, false);
+        a.ingest("p/3/report.json", &bad, Some(&csv));
+        let ev = a.evidence(None);
+        assert_eq!(ev.reports, 4);
+        assert_eq!(ev.successful_runs, 3);
+        assert_eq!(ev.csv_ok, 3);
+        assert_eq!(ev.instrumented_runs, 0);
+        assert_eq!(ev.pinned_runs, 3);
+        assert_eq!(ev.seeded_runs, 3);
+        assert_eq!(ev.replay_commits, 0);
+        assert_eq!(earned_level(&ev, &cfg), Some(Maturity::Runnability));
+    }
+
+    #[test]
+    fn instrumented_metrics_flip_the_counter() {
+        let cfg = CriteriaConfig::default();
+        let mut a = Assessment::new(&cfg);
+        for day in 0..3 {
+            let (doc, csv) = report("jupiter", day, day as u64 + 1, 9, "stage-2026", true, true);
+            a.ingest(&format!("p/{day}/report.json"), &doc, Some(&csv));
+        }
+        let ev = a.evidence(None);
+        assert_eq!(ev.instrumented_runs, 3);
+        assert_eq!(
+            ev.instrumented_systems.iter().collect::<Vec<_>>(),
+            vec!["jupiter"]
+        );
+        assert_eq!(earned_level(&ev, &cfg), Some(Maturity::Instrumentability));
+    }
+
+    #[test]
+    fn replay_footprint_is_a_second_path_not_a_second_report() {
+        let cfg = CriteriaConfig::default();
+        let mut a = Assessment::new(&cfg);
+        for day in 0..3 {
+            let (doc, csv) = report("jupiter", day, day as u64 + 1, 9, "stage-2026", true, true);
+            a.ingest(&format!("p/{day}/report.json"), &doc, Some(&csv));
+        }
+        let before = a.evidence(None);
+        assert_eq!(before.replay_commits, 0);
+        // warm replay: the day-2 document re-committed under a new path
+        let (doc, csv) = report("jupiter", 2, 3, 9, "stage-2026", true, true);
+        a.ingest("p/99/report.json", &doc, Some(&csv));
+        let after = a.evidence(None);
+        assert_eq!(after.successful_runs, before.successful_runs);
+        assert_eq!(after.instrumented_runs, before.instrumented_runs);
+        assert_eq!(after.replay_commits, 1);
+        assert_eq!(earned_level(&after, &cfg), Some(Maturity::Reproducibility));
+        // replaying again is idempotent: the state no longer changes
+        a.ingest("p/100/report.json", &doc, Some(&csv));
+        assert_eq!(a.evidence(None), after);
+    }
+
+    #[test]
+    fn window_ages_old_evidence_out() {
+        let cfg = CriteriaConfig::default();
+        let mut a = Assessment::new(&cfg);
+        for day in 0..5 {
+            let (doc, csv) = report("jupiter", day, day as u64 + 1, 9, "stage-2026", true, false);
+            a.ingest(&format!("p/{day}/report.json"), &doc, Some(&csv));
+        }
+        assert_eq!(a.evidence(None).successful_runs, 5);
+        assert_eq!(a.evidence(Some(3)).successful_runs, 2);
+        assert_eq!(a.evidence(Some(6)).reports, 0);
+    }
+
+    #[test]
+    fn unseeded_or_unpinned_reports_do_not_pin() {
+        let cfg = CriteriaConfig::default();
+        let mut a = Assessment::new(&cfg);
+        let (doc, csv) = report("jupiter", 0, 1, 0, "", true, false);
+        a.ingest("p/0/report.json", &doc, Some(&csv));
+        let ev = a.evidence(None);
+        assert_eq!(ev.successful_runs, 1);
+        assert_eq!(ev.seeded_runs, 0);
+        assert_eq!(ev.pinned_runs, 0);
+    }
+
+    #[test]
+    fn garbage_documents_are_skipped() {
+        let cfg = CriteriaConfig::default();
+        let mut a = Assessment::new(&cfg);
+        assert!(!a.ingest("p/report.json", "{broken", None));
+        assert_eq!(a.evidence(None).reports, 0);
+    }
+
+    #[test]
+    fn csv_contract_checks_base_columns() {
+        assert!(csv_honours_contract(
+            "system,version,queue,variant,jobid,nodes,taskspernode,threadspertasks,runtime,success,tts\n"
+        ));
+        assert!(!csv_honours_contract("system,nodes,runtime\n"));
+        assert!(!csv_honours_contract(""));
+    }
+
+    #[test]
+    fn missing_csv_sibling_fails_the_contract() {
+        let cfg = CriteriaConfig::default();
+        let mut a = Assessment::new(&cfg);
+        let (doc, csv) = report("jupiter", 0, 1, 9, "stage-2026", true, false);
+        a.ingest("p/0/report.json", &doc, None);
+        let ev = a.evidence(None);
+        assert_eq!(ev.successful_runs, 1);
+        assert_eq!(ev.csv_ok, 0);
+        // …but a sibling-less re-ingest never *revokes* earned csv
+        // evidence (monotonicity): OR, not AND
+        a.ingest("p/1/report.json", &doc, Some(&csv));
+        assert_eq!(a.evidence(None).csv_ok, 1);
+        a.ingest("p/2/report.json", &doc, None);
+        assert_eq!(a.evidence(None).csv_ok, 1);
+    }
+}

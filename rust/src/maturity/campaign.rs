@@ -1,0 +1,452 @@
+//! Multi-day JUREAP-style onboarding campaigns (DESIGN.md §10): drive a
+//! [`crate::workloads::onboarding::OnboardingScenario`] through the
+//! concurrent event core, day by day, and track every maturity
+//! transition the `maturity-check@v1` gate produces.
+//!
+//! Per simulated day:
+//!
+//! 1. every application's source tree is synced to the day's scenario
+//!    state (instrumentation added, breakage injected/fixed — a changed
+//!    definition is a commit, exactly what the team's merge looks like);
+//! 2. all pipelines start at the shared 03:00 trigger and are driven
+//!    **together** by [`crate::coordinator::event_loop::drive`], so
+//!    queue contention between onboarding applications is real;
+//! 3. on replay-audit days a fresh execution cache is installed and the
+//!    opted-in applications run a *second* wave: the warm replay
+//!    re-commits each report byte-identically at a new path — the
+//!    [`super::criteria::Criterion::ReplayVerified`] footprint — and is
+//!    evidence of nothing else (it dedupes out of every counter). The
+//!    cache is dropped afterwards: ordinary campaign days stay
+//!    measurement days.
+
+use std::collections::BTreeMap;
+
+use crate::ci::Trigger;
+use crate::coordinator::event_loop;
+use crate::coordinator::repo::BenchmarkRepo;
+use crate::coordinator::world::World;
+use crate::store::ExecutionCache;
+use crate::util::json::Json;
+use crate::util::prng::Prng;
+use crate::util::table::Table;
+use crate::util::timeutil::SimTime;
+use crate::workloads::onboarding::OnboardingScenario;
+use crate::workloads::portfolio::{Maturity, LEVELS};
+
+/// One gate reading: the state of one application after one pipeline.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MaturityRecord {
+    pub day: i64,
+    pub app: String,
+    pub pipeline_ok: bool,
+    /// Gate verdict (`confirmed`/`promoted`/`demoted`/…), `-` when the
+    /// gate job produced no artifact.
+    pub verdict: String,
+    /// The repository's level after the gate ran.
+    pub level: Maturity,
+}
+
+/// One level change of one application.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Transition {
+    pub day: i64,
+    pub app: String,
+    pub from: Maturity,
+    pub to: Maturity,
+}
+
+/// What an onboarding campaign produced, day by day.
+#[derive(Debug, Clone, Default)]
+pub struct OnboardingOutcome {
+    pub records: Vec<MaturityRecord>,
+    /// Every promotion/demotion, in the order it happened.
+    pub transitions: Vec<Transition>,
+    pub pipelines_run: usize,
+    pub pipelines_succeeded: usize,
+}
+
+impl OnboardingOutcome {
+    /// The application's level at the end of `day` (its last gate
+    /// reading that day), if it ran.
+    pub fn level_on(&self, app: &str, day: i64) -> Option<Maturity> {
+        self.records
+            .iter()
+            .rev()
+            .find(|r| r.app == app && r.day == day)
+            .map(|r| r.level)
+    }
+
+    /// First day the application transitioned *to* `level`.
+    pub fn transition_day(&self, app: &str, to: Maturity) -> Option<i64> {
+        self.transitions
+            .iter()
+            .find(|t| t.app == app && t.to == to)
+            .map(|t| t.day)
+    }
+
+    /// Every transition of one application, in order.
+    pub fn transitions_of(&self, app: &str) -> Vec<&Transition> {
+        self.transitions.iter().filter(|t| t.app == app).collect()
+    }
+}
+
+/// Sync one repository file to the day's desired content; a change
+/// moves the source commit (the framework sees a real merge).
+fn sync_source(world: &mut World, repo_name: &str, path: &str, desired: &str, day: i64) {
+    let Some(repo) = world.repos.get_mut(repo_name) else {
+        return;
+    };
+    if repo.file(path) == Some(desired) {
+        return;
+    }
+    let mut found = false;
+    for (p, content) in repo.files.iter_mut() {
+        if p == path {
+            *content = desired.to_string();
+            found = true;
+        }
+    }
+    if !found {
+        // a path the repository never carried is a new file, not a
+        // silent no-op with a moved commit
+        repo.files.push((path.to_string(), desired.to_string()));
+    }
+    repo.commit = crate::util::short_hash(format!("{desired}|day{day}").as_bytes());
+}
+
+/// Start one wave of pipelines (per-item PRNG streams, shared trigger)
+/// and drive them together; record gate readings and transitions.
+fn run_wave(
+    world: &mut World,
+    sc: &OnboardingScenario,
+    wave: &[usize],
+    day: i64,
+    tag: &str,
+    levels: &mut BTreeMap<String, Maturity>,
+    out: &mut OnboardingOutcome,
+) {
+    let mut tasks = Vec::new();
+    let mut started: Vec<usize> = Vec::new();
+    for &i in wave {
+        let name = sc.apps[i].app.name.clone();
+        out.pipelines_run += 1;
+        match world.begin_pipeline(&name, Trigger::Scheduled) {
+            Ok(mut task) => {
+                task.rng = Some(Prng::new(
+                    world.seed
+                        ^ crate::util::fnv1a(format!("{day}|{name}|{tag}").as_bytes()),
+                ));
+                tasks.push(task);
+                started.push(i);
+            }
+            Err(_) => {} // counted as run, never as succeeded
+        }
+    }
+    let pids = event_loop::drive(world, tasks);
+    for (&i, pid) in started.iter().zip(pids) {
+        let name = sc.apps[i].app.name.clone();
+        let pipeline = world.pipeline(pid);
+        let ok = pipeline.map(|p| p.succeeded()).unwrap_or(false);
+        if ok {
+            out.pipelines_succeeded += 1;
+        }
+        let verdict = pipeline
+            .and_then(|p| {
+                p.jobs
+                    .iter()
+                    .find(|j| j.name.ends_with(".maturity-check"))
+            })
+            .and_then(|j| j.artifact("maturity.json"))
+            .and_then(|doc| Json::parse(doc).ok())
+            .and_then(|v| v.str_of("verdict").map(str::to_string))
+            .unwrap_or_else(|| "-".to_string());
+        let level = world
+            .repo(&name)
+            .map(|r| r.maturity)
+            .unwrap_or(sc.apps[i].declared);
+        if let Some(prev) = levels.insert(name.clone(), level) {
+            if prev != level {
+                out.transitions.push(Transition {
+                    day,
+                    app: name.clone(),
+                    from: prev,
+                    to: level,
+                });
+            }
+        }
+        out.records.push(MaturityRecord {
+            day,
+            app: name,
+            pipeline_ok: ok,
+            verdict,
+            level,
+        });
+    }
+}
+
+/// Onboard the scenario's portfolio and run the whole multi-day
+/// campaign. Applications start at their *declared* levels; every level
+/// they hold at the end was earned from recorded evidence.
+pub fn run_onboarding(world: &mut World, sc: &OnboardingScenario) -> OnboardingOutcome {
+    for (i, oa) in sc.apps.iter().enumerate() {
+        world.add_repo(
+            BenchmarkRepo::new(&oa.app.name)
+                .with_file("benchmark/jube/app.yml", &oa.jube_file(0))
+                .with_file(".gitlab-ci.yml", &sc.ci_file(i))
+                .with_maturity(oa.declared),
+        );
+    }
+    let mut levels: BTreeMap<String, Maturity> = sc
+        .apps
+        .iter()
+        .map(|oa| (oa.app.name.clone(), oa.declared))
+        .collect();
+    let mut out = OnboardingOutcome::default();
+    let all: Vec<usize> = (0..sc.apps.len()).collect();
+    for day in 0..sc.days {
+        world.advance_to(SimTime::from_days(day).add_secs(3 * 3600));
+        for oa in &sc.apps {
+            sync_source(
+                world,
+                &oa.app.name,
+                "benchmark/jube/app.yml",
+                &oa.jube_file(day),
+                day,
+            );
+        }
+        let audit = sc.is_verification_day(day);
+        let stashed = if audit {
+            let s = world.cache.take();
+            world.cache = Some(ExecutionCache::new());
+            Some(s)
+        } else {
+            None
+        };
+        run_wave(world, sc, &all, day, "run", &mut levels, &mut out);
+        if audit {
+            let opted: Vec<usize> = (0..sc.apps.len())
+                .filter(|&i| sc.apps[i].verifying_on(day))
+                .collect();
+            run_wave(world, sc, &opted, day, "audit", &mut levels, &mut out);
+        }
+        if let Some(s) = stashed {
+            // the audit cache dies with the day: campaign days stay
+            // measurement days
+            world.cache = s;
+        }
+    }
+    out
+}
+
+/// Cross-application readiness: per-domain distribution of the levels
+/// the portfolio currently *holds* (the `exacb jureap` headline table).
+pub fn domain_distribution(sc: &OnboardingScenario, world: &World) -> Table {
+    let mut t = Table::new(&[
+        "domain",
+        "apps",
+        "runnability",
+        "instrumentability",
+        "reproducibility",
+    ]);
+    let mut domains: Vec<&str> = sc.apps.iter().map(|a| a.app.domain.as_str()).collect();
+    domains.sort();
+    domains.dedup();
+    for domain in domains {
+        let mut counts = [0usize; 3];
+        let mut apps = 0usize;
+        for oa in sc.apps.iter().filter(|a| a.app.domain == domain) {
+            apps += 1;
+            let level = world
+                .repo(&oa.app.name)
+                .map(|r| r.maturity)
+                .unwrap_or(oa.declared);
+            counts[LEVELS.iter().position(|l| *l == level).unwrap_or(0)] += 1;
+        }
+        t.push_row(vec![
+            domain.to_string(),
+            apps.to_string(),
+            counts[0].to_string(),
+            counts[1].to_string(),
+            counts[2].to_string(),
+        ]);
+    }
+    t
+}
+
+/// The promotion/demotion timeline as a table.
+pub fn promotion_timeline(out: &OnboardingOutcome) -> Table {
+    let mut t = Table::new(&["day", "app", "from", "to", "change"]);
+    if out.transitions.is_empty() {
+        t.push_placeholder("(no level changes)");
+        return t;
+    }
+    for tr in &out.transitions {
+        t.push_row(vec![
+            tr.day.to_string(),
+            tr.app.clone(),
+            tr.from.name().to_string(),
+            tr.to.name().to_string(),
+            if tr.to > tr.from { "promotion" } else { "demotion" }.to_string(),
+        ]);
+    }
+    t
+}
+
+/// Applications currently eligible for energy studies: holding the
+/// **reproducibility** rung and nothing less (§VI-B studies compare
+/// energy across frequencies, which is meaningless without byte-level
+/// replayability and pinned environments).
+pub fn energy_eligible(sc: &OnboardingScenario, world: &World) -> Vec<String> {
+    sc.apps
+        .iter()
+        .filter(|oa| {
+            world
+                .repo(&oa.app.name)
+                .map(|r| r.maturity == Maturity::Reproducibility)
+                .unwrap_or(false)
+        })
+        .map(|oa| oa.app.name.clone())
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::onboarding::OnboardingApp;
+    use crate::workloads::portfolio::PortfolioApp;
+    use crate::workloads::scalable::AppModel;
+
+    fn tiny_app(name: &str, declared: Maturity) -> OnboardingApp {
+        OnboardingApp {
+            app: PortfolioApp {
+                name: name.to_string(),
+                domain: "materials".to_string(),
+                maturity: declared,
+                model: AppModel {
+                    name: name.to_string(),
+                    gflops_total: 20_000.0,
+                    steps: 10,
+                    ..AppModel::default()
+                },
+                failure_rate: 0.0,
+                nodes: 1,
+            },
+            declared,
+            instrument_from: None,
+            verify_from: None,
+            break_day: None,
+            fix_day: None,
+        }
+    }
+
+    fn tiny_scenario(days: i64) -> OnboardingScenario {
+        OnboardingScenario {
+            apps: vec![],
+            days,
+            machines: vec!["jupiter".to_string()],
+            queue: "all".to_string(),
+            seed: 4242,
+            verify_every: 4,
+            min_runs: 3,
+            min_instrumented: 3,
+            window_days: 6,
+        }
+    }
+
+    #[test]
+    fn healthy_runnable_app_earns_its_level_and_keeps_it() {
+        let mut sc = tiny_scenario(5);
+        sc.apps.push(tiny_app("steady", Maturity::Runnability));
+        let mut world = World::new(sc.seed);
+        let out = run_onboarding(&mut world, &sc);
+        // 5 daily runs; the day-3 audit wave is empty (no replay opt-in)
+        assert_eq!(out.pipelines_run, 5);
+        assert_eq!(out.pipelines_succeeded, 5);
+        assert!(out.transitions_of("steady").is_empty(), "{:?}", out.transitions);
+        assert_eq!(out.level_on("steady", 4), Some(Maturity::Runnability));
+        // gate verdicts move from insufficient-evidence to confirmed
+        let verdicts: Vec<&str> = out
+            .records
+            .iter()
+            .filter(|r| r.app == "steady")
+            .map(|r| r.verdict.as_str())
+            .collect();
+        assert_eq!(verdicts[0], "insufficient-evidence");
+        assert!(verdicts[2..].iter().all(|v| *v == "confirmed"), "{verdicts:?}");
+    }
+
+    #[test]
+    fn overclaimed_app_demotes_on_first_judgeable_day() {
+        // declared instrumentability, but the definition never extracts
+        // an instrumentation metric: the claim cannot be re-earned
+        let mut sc = tiny_scenario(5);
+        sc.apps
+            .push(tiny_app("claims-too-much", Maturity::Instrumentability));
+        let mut world = World::new(sc.seed);
+        let out = run_onboarding(&mut world, &sc);
+        assert_eq!(
+            out.transition_day("claims-too-much", Maturity::Runnability),
+            Some(sc.min_runs as i64 - 1),
+            "{:?}",
+            out.transitions
+        );
+        assert_eq!(
+            world.repo("claims-too-much").unwrap().maturity,
+            Maturity::Runnability
+        );
+    }
+
+    #[test]
+    fn instrumented_app_with_audit_reaches_the_top_rung() {
+        let mut sc = tiny_scenario(6);
+        let mut app = tiny_app("golden", Maturity::Reproducibility);
+        app.instrument_from = Some(0);
+        app.verify_from = Some(0);
+        sc.apps.push(app);
+        let mut world = World::new(sc.seed);
+        let out = run_onboarding(&mut world, &sc);
+        // earns instrumentability on day 2, demoting from the declared
+        // top rung, then proves replay on the day-3 audit
+        assert_eq!(
+            out.transition_day("golden", Maturity::Instrumentability),
+            Some(2),
+            "{:?}",
+            out.transitions
+        );
+        assert_eq!(
+            out.transition_day("golden", Maturity::Reproducibility),
+            Some(3),
+            "{:?}",
+            out.transitions
+        );
+        assert_eq!(energy_eligible(&sc, &world), vec!["golden".to_string()]);
+        // the audit wave replayed: cache evidence exists in the store
+        let repo = world.repo("golden").unwrap();
+        let docs: Vec<String> = repo
+            .store
+            .read_all("exacb.data", "")
+            .into_iter()
+            .filter(|(p, _)| p.ends_with("report.json"))
+            .map(|(_, c)| c)
+            .collect();
+        let mut sorted = docs.clone();
+        sorted.sort();
+        sorted.dedup();
+        assert!(sorted.len() < docs.len(), "a byte-identical replay was committed");
+    }
+
+    #[test]
+    fn distribution_and_timeline_render() {
+        let mut sc = tiny_scenario(4);
+        sc.apps.push(tiny_app("a1", Maturity::Runnability));
+        let mut world = World::new(sc.seed);
+        let out = run_onboarding(&mut world, &sc);
+        let dist = domain_distribution(&sc, &world);
+        assert_eq!(dist.len(), 1);
+        assert_eq!(dist.rows[0][0], "materials");
+        assert_eq!(dist.rows[0][2], "1"); // holds runnability
+        let tl = promotion_timeline(&out);
+        assert_eq!(tl.rows.len(), 1); // placeholder
+        assert!(tl.rows[0][0].contains("no level changes"));
+    }
+}

@@ -1,0 +1,294 @@
+//! Typed maturity criteria: each ladder rung as an explicit checklist
+//! over recorded evidence (DESIGN.md §10).
+//!
+//! Every [`Criterion`] is a **monotone** predicate over the evidence
+//! counters in [`super::assess::Evidence`] — thresholds on counts, never
+//! universally-quantified conditions over all reports. Monotonicity is
+//! what makes promotion monotone in evidence (property-tested in
+//! `tests/integration_maturity.rs`): recording more evidence can only
+//! keep or raise the earned level, never silently lower it. Levels
+//! *decay* only through the gate's recency window
+//! ([`super::gate::GatePolicy::window_days`]), where old evidence ages
+//! out — which is how flaky applications demote.
+
+use crate::ci::component::maturity_check_defaults as defaults;
+use crate::workloads::portfolio::{Maturity, LEVELS};
+
+use super::assess::Evidence;
+
+/// Resolved criteria thresholds (post component-schema validation).
+/// `Default` mirrors the `maturity-check@v1` catalog defaults
+/// ([`crate::ci::component::maturity_check_defaults`]) so schema-resolved
+/// and direct callers can never drift apart.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CriteriaConfig {
+    /// Distinct successful reports required for runnability.
+    pub min_runs: usize,
+    /// Distinct instrumented successful reports for instrumentability.
+    pub min_instrumented: usize,
+    /// Distinct systems that must carry instrumented evidence.
+    pub min_systems: usize,
+    /// Metric names that count as instrumentation (beyond the Table-I
+    /// baseline): analysis extractions, kernel timings, energy.
+    pub instrument_metrics: Vec<String>,
+}
+
+impl Default for CriteriaConfig {
+    fn default() -> Self {
+        CriteriaConfig {
+            min_runs: defaults::MIN_RUNS as usize,
+            min_instrumented: defaults::MIN_INSTRUMENTED as usize,
+            min_systems: defaults::MIN_SYSTEMS as usize,
+            instrument_metrics: parse_metric_list(defaults::INSTRUMENT_METRICS),
+        }
+    }
+}
+
+/// Split a comma-separated metric list (the `instrument_metrics` input).
+pub fn parse_metric_list(s: &str) -> Vec<String> {
+    s.split(',')
+        .map(str::trim)
+        .filter(|m| !m.is_empty())
+        .map(str::to_string)
+        .collect()
+}
+
+impl CriteriaConfig {
+    pub fn is_instrument_metric(&self, name: &str) -> bool {
+        self.instrument_metrics.iter().any(|m| m == name)
+    }
+}
+
+/// One checklist item of the evidence-based ladder.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Criterion {
+    /// ≥ `min_runs` distinct successful reports recorded.
+    SuccessfulRuns,
+    /// ≥ `min_runs` of them paired with a Table-I-conformant
+    /// `results.csv` sibling.
+    CsvContract,
+    /// ≥ `min_instrumented` distinct successful reports carrying an
+    /// instrumentation metric.
+    InstrumentedRuns,
+    /// Instrumented evidence on ≥ `min_systems` distinct systems.
+    InstrumentedSystems,
+    /// ≥ `min_runs` successful reports pinning the *same*
+    /// (system, software-stage) fingerprint in their provenance.
+    PinnedStage,
+    /// ≥ `min_runs` successful reports recording the reproduction seed.
+    SeededProvenance,
+    /// ≥ 1 report re-committed byte-identically at a second store path —
+    /// the footprint only a warm cache replay leaves (`cache.json` hits
+    /// with an unchanged recorded document).
+    ReplayVerified,
+}
+
+/// Every criterion, grouped by rung, lowest rung first.
+pub const CRITERIA: [Criterion; 7] = [
+    Criterion::SuccessfulRuns,
+    Criterion::CsvContract,
+    Criterion::InstrumentedRuns,
+    Criterion::InstrumentedSystems,
+    Criterion::PinnedStage,
+    Criterion::SeededProvenance,
+    Criterion::ReplayVerified,
+];
+
+impl Criterion {
+    /// The rung this criterion belongs to.
+    pub fn level(&self) -> Maturity {
+        match self {
+            Criterion::SuccessfulRuns | Criterion::CsvContract => Maturity::Runnability,
+            Criterion::InstrumentedRuns | Criterion::InstrumentedSystems => {
+                Maturity::Instrumentability
+            }
+            Criterion::PinnedStage
+            | Criterion::SeededProvenance
+            | Criterion::ReplayVerified => Maturity::Reproducibility,
+        }
+    }
+
+    /// Stable kebab-case identifier (used in `maturity.json` and denial
+    /// messages).
+    pub fn name(&self) -> &'static str {
+        match self {
+            Criterion::SuccessfulRuns => "successful-runs",
+            Criterion::CsvContract => "csv-contract",
+            Criterion::InstrumentedRuns => "instrumented-runs",
+            Criterion::InstrumentedSystems => "instrumented-systems",
+            Criterion::PinnedStage => "pinned-stage",
+            Criterion::SeededProvenance => "seeded-provenance",
+            Criterion::ReplayVerified => "replay-verified",
+        }
+    }
+
+    /// Check this criterion against the evidence. `Err` carries the
+    /// human-readable shortfall (what is missing, with the counts).
+    pub fn check(&self, ev: &Evidence, cfg: &CriteriaConfig) -> Result<(), String> {
+        let need = |have: usize, want: usize, what: &str| {
+            if have >= want {
+                Ok(())
+            } else {
+                Err(format!("{have}/{want} {what}"))
+            }
+        };
+        match self {
+            Criterion::SuccessfulRuns => need(
+                ev.successful_runs,
+                cfg.min_runs,
+                "distinct successful reports",
+            ),
+            Criterion::CsvContract => need(
+                ev.csv_ok,
+                cfg.min_runs,
+                "successful reports with a Table-I results.csv",
+            ),
+            Criterion::InstrumentedRuns => need(
+                ev.instrumented_runs,
+                cfg.min_instrumented,
+                "instrumented successful reports",
+            ),
+            Criterion::InstrumentedSystems => need(
+                ev.instrumented_systems.len(),
+                cfg.min_systems,
+                "systems with instrumented evidence",
+            ),
+            Criterion::PinnedStage => need(
+                ev.pinned_runs,
+                cfg.min_runs,
+                "successful reports pinning one (system, stage) fingerprint",
+            ),
+            Criterion::SeededProvenance => need(
+                ev.seeded_runs,
+                cfg.min_runs,
+                "successful reports with seeded provenance",
+            ),
+            Criterion::ReplayVerified => need(
+                ev.replay_commits,
+                1,
+                "byte-identical cache-replay commits",
+            ),
+        }
+    }
+}
+
+/// The cumulative checklist for earning `level`: every criterion of that
+/// rung and of all rungs below it.
+pub fn checklist(level: Maturity) -> Vec<Criterion> {
+    CRITERIA
+        .iter()
+        .filter(|c| c.level() <= level)
+        .copied()
+        .collect()
+}
+
+/// The highest rung whose full (cumulative) checklist the evidence
+/// satisfies; `None` when even runnability is unearned.
+pub fn earned_level(ev: &Evidence, cfg: &CriteriaConfig) -> Option<Maturity> {
+    let mut earned = None;
+    for level in LEVELS {
+        let rung_ok = CRITERIA
+            .iter()
+            .filter(|c| c.level() == level)
+            .all(|c| c.check(ev, cfg).is_ok());
+        if rung_ok {
+            earned = Some(level);
+        } else {
+            break;
+        }
+    }
+    earned
+}
+
+/// Every unmet criterion up to and including `through`, with its named
+/// shortfall — the gate's denial detail.
+pub fn unmet(ev: &Evidence, cfg: &CriteriaConfig, through: Maturity) -> Vec<(Criterion, String)> {
+    checklist(through)
+        .into_iter()
+        .filter_map(|c| c.check(ev, cfg).err().map(|reason| (c, reason)))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::BTreeSet;
+
+    fn ev(successful: usize, instrumented: usize, replay: usize) -> Evidence {
+        let mut systems = BTreeSet::new();
+        systems.insert("jupiter".to_string());
+        Evidence {
+            reports: successful,
+            successful_runs: successful,
+            csv_ok: successful,
+            instrumented_runs: instrumented,
+            systems: systems.clone(),
+            instrumented_systems: if instrumented > 0 {
+                systems
+            } else {
+                BTreeSet::new()
+            },
+            pinned_runs: successful,
+            seeded_runs: successful,
+            replay_commits: replay,
+        }
+    }
+
+    #[test]
+    fn levels_earn_in_order() {
+        let cfg = CriteriaConfig::default();
+        assert_eq!(earned_level(&ev(0, 0, 0), &cfg), None);
+        assert_eq!(earned_level(&ev(2, 2, 0), &cfg), None);
+        assert_eq!(
+            earned_level(&ev(3, 0, 0), &cfg),
+            Some(Maturity::Runnability)
+        );
+        assert_eq!(
+            earned_level(&ev(5, 3, 0), &cfg),
+            Some(Maturity::Instrumentability)
+        );
+        assert_eq!(
+            earned_level(&ev(5, 3, 1), &cfg),
+            Some(Maturity::Reproducibility)
+        );
+        // a higher rung never rescues a broken lower one
+        let mut broken = ev(5, 3, 1);
+        broken.csv_ok = 0;
+        assert_eq!(earned_level(&broken, &cfg), None);
+    }
+
+    #[test]
+    fn unmet_names_the_shortfall() {
+        let cfg = CriteriaConfig::default();
+        let missing = unmet(&ev(3, 0, 0), &cfg, Maturity::Reproducibility);
+        let names: Vec<&str> = missing.iter().map(|(c, _)| c.name()).collect();
+        assert_eq!(
+            names,
+            vec!["instrumented-runs", "instrumented-systems", "replay-verified"]
+        );
+        assert!(missing[0].1.contains("0/3"), "{:?}", missing[0]);
+        assert!(unmet(&ev(5, 3, 1), &cfg, Maturity::Reproducibility).is_empty());
+    }
+
+    #[test]
+    fn checklist_is_cumulative() {
+        assert_eq!(checklist(Maturity::Runnability).len(), 2);
+        assert_eq!(checklist(Maturity::Instrumentability).len(), 4);
+        assert_eq!(checklist(Maturity::Reproducibility).len(), CRITERIA.len());
+        for c in CRITERIA {
+            assert!(!c.name().is_empty());
+        }
+    }
+
+    #[test]
+    fn default_config_mirrors_catalog() {
+        let cfg = CriteriaConfig::default();
+        assert_eq!(cfg.min_runs, 3);
+        assert_eq!(cfg.min_instrumented, 3);
+        assert_eq!(cfg.min_systems, 1);
+        assert!(cfg.is_instrument_metric("tts_file"));
+        assert!(cfg.is_instrument_metric("energy_j"));
+        assert!(!cfg.is_instrument_metric("runtime"));
+        assert_eq!(parse_metric_list(" a, b ,,c "), vec!["a", "b", "c"]);
+    }
+}

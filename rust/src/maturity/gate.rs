@@ -1,0 +1,330 @@
+//! The `maturity-check@v1` CI component: the gate that blocks or grants
+//! promotion on the evidence ladder (DESIGN.md §10).
+//!
+//! Policy:
+//!
+//! 1. Rebuild the application's evidence from its `exacb.data` branch
+//!    under the gate's `prefix`, restricted to the last `window_days`
+//!    simulated days when a recency window is configured (0 = whole
+//!    history). The window is what lets levels *decay*: evidence ages
+//!    out, flaky applications demote, fixed ones re-earn.
+//! 2. Compute the earned level against the typed criteria checklist.
+//!    Fewer than `min_runs` distinct reports in the window → verdict
+//!    `insufficient-evidence`: the gate passes and **never touches** the
+//!    declared level (young repositories must not be graded on noise —
+//!    the same young-repo discipline as the regression gate's
+//!    `no-baseline` rule, §9).
+//! 3. With a `target` level set, the gate **blocks**: earned < target
+//!    fails the pipeline, naming every unmet criterion and its
+//!    shortfall. Without a target (assess mode) it **re-levels**: the
+//!    repository's maturity becomes the earned level (floored at
+//!    runnability), whether that is a promotion, a demotion, or a
+//!    confirmation.
+//! 4. The verdict lands in a `maturity.json` artifact — a sidecar like
+//!    `cache.json` and `regressions.json`, **never** part of
+//!    `report.json` (recorded history must not contain opinions about
+//!    itself).
+
+use crate::ci::{CiJob, CiJobState};
+use crate::coordinator::repo::BenchmarkRepo;
+use crate::coordinator::world::World;
+use crate::util::json::Json;
+use crate::workloads::portfolio::Maturity;
+
+use super::assess::Assessment;
+use super::criteria::{
+    earned_level, parse_metric_list, unmet, CriteriaConfig, CRITERIA,
+};
+
+/// Resolved gate policy (post component-schema validation).
+#[derive(Debug, Clone, PartialEq)]
+pub struct GatePolicy {
+    /// Level the gate demands; `None` = assess mode (re-level, never
+    /// block).
+    pub target: Option<Maturity>,
+    pub cfg: CriteriaConfig,
+    /// Evidence recency window in simulated days; 0 = whole history.
+    pub window_days: u64,
+    /// Whether the gate writes the earned level back to the repository.
+    pub update: bool,
+}
+
+impl GatePolicy {
+    /// Resolve policy inputs, falling back to the canonical catalog
+    /// defaults ([`crate::ci::component::maturity_check_defaults`]).
+    /// An unknown `target` level string is a loud error surfaced through
+    /// the CI validation job (mirroring `Launcher::parse`).
+    pub fn from_inputs(inputs: &Json) -> Result<GatePolicy, String> {
+        use crate::ci::component::maturity_check_defaults as d;
+        let target = match inputs.str_of("target").unwrap_or(d::TARGET) {
+            "" => None,
+            s => Some(Maturity::parse(s).map_err(|e| e.to_string())?),
+        };
+        let cfg = CriteriaConfig {
+            min_runs: inputs.u64_of("min_runs").unwrap_or(d::MIN_RUNS).max(1) as usize,
+            min_instrumented: inputs
+                .u64_of("min_instrumented")
+                .unwrap_or(d::MIN_INSTRUMENTED)
+                .max(1) as usize,
+            min_systems: inputs
+                .u64_of("min_systems")
+                .unwrap_or(d::MIN_SYSTEMS)
+                .max(1) as usize,
+            instrument_metrics: parse_metric_list(
+                inputs
+                    .str_of("instrument_metrics")
+                    .unwrap_or(d::INSTRUMENT_METRICS),
+            ),
+        };
+        Ok(GatePolicy {
+            target,
+            cfg,
+            window_days: inputs.u64_of("window_days").unwrap_or(d::WINDOW_DAYS),
+            update: inputs.bool_of("update").unwrap_or(true)
+                && inputs.str_of("update") != Some("false"),
+        })
+    }
+}
+
+fn level_json(level: Option<Maturity>) -> Json {
+    match level {
+        Some(l) => Json::Str(l.name().to_string()),
+        None => Json::Null,
+    }
+}
+
+/// Run the maturity gate for one pipeline. Returns the single gate CI
+/// job; the `maturity.json` sidecar is attached as its artifact.
+pub fn run_maturity_gate(
+    world: &mut World,
+    repo: &mut BenchmarkRepo,
+    inputs: &Json,
+    pipeline_id: u64,
+) -> Vec<CiJob> {
+    let policy = match GatePolicy::from_inputs(inputs) {
+        Ok(p) => p,
+        Err(e) => {
+            let mut job = CiJob::new(world.ids.job_id(), "maturity-check@v1.validate");
+            job.log_line(format!("input validation failed: {e}"));
+            job.state = CiJobState::Failed;
+            return vec![job];
+        }
+    };
+    let prefix = inputs.str_of("prefix").unwrap_or("").to_string();
+    let mut job = CiJob::new(world.ids.job_id(), &format!("{prefix}.maturity-check"));
+    job.state = CiJobState::Running;
+
+    // evidence: recorded artifacts only, optionally recency-windowed
+    // (day-granular, like environment events — §6)
+    let since_day = if policy.window_days > 0 {
+        Some(world.now().day() - policy.window_days as i64 + 1)
+    } else {
+        None
+    };
+    let (assessment, skipped) = Assessment::from_store(
+        &repo.store,
+        "exacb.data",
+        &format!("{prefix}/"),
+        &policy.cfg,
+    );
+    let evidence = assessment.evidence(since_day);
+    let earned = earned_level(&evidence, &policy.cfg);
+    let declared = repo.maturity;
+
+    // ---- decide ------------------------------------------------------
+    let judgeable = evidence.reports >= policy.cfg.min_runs;
+    let new_level = earned.unwrap_or(Maturity::Runnability);
+    let (verdict, failed) = if let Some(target) = policy.target {
+        // an explicit promotion request is always judged: asking for a
+        // rung without the evidence for it is a denial, however young
+        // the repository
+        if earned.map_or(false, |e| e >= target) {
+            ("granted", false)
+        } else {
+            ("denied", true)
+        }
+    } else if !judgeable {
+        // assess mode on a young repository: never grade on noise (the
+        // same young-repo discipline as the regression gate, §9)
+        ("insufficient-evidence", false)
+    } else if new_level > declared {
+        ("promoted", false)
+    } else if new_level < declared {
+        ("demoted", false)
+    } else {
+        ("confirmed", false)
+    };
+    // Assess mode re-levels freely (promotion, demotion, confirmation);
+    // a *target* gate only ever blocks or grants — on grant it may
+    // promote, but never silently demote a repository declared above
+    // the requested rung.
+    let written_level = if policy.target.is_some() {
+        declared.max(new_level)
+    } else {
+        new_level
+    };
+    let relevel = policy.update
+        && !failed
+        && verdict != "insufficient-evidence"
+        && written_level != declared;
+    if relevel {
+        repo.maturity = written_level;
+    }
+
+    // ---- maturity.json sidecar ---------------------------------------
+    let judge_through = policy.target.unwrap_or(Maturity::Reproducibility);
+    let missing = unmet(&evidence, &policy.cfg, judge_through);
+    let mut criteria_json = Json::arr();
+    for c in CRITERIA {
+        let result = c.check(&evidence, &policy.cfg);
+        criteria_json.push(
+            Json::obj()
+                .set("criterion", c.name())
+                .set("level", c.level().name())
+                .set("satisfied", result.is_ok())
+                .set(
+                    "detail",
+                    result.err().unwrap_or_else(|| "met".to_string()).as_str(),
+                ),
+        );
+    }
+    let mut systems = Json::arr();
+    for s in &evidence.systems {
+        systems.push(s.as_str());
+    }
+    let mut unmet_json = Json::arr();
+    for (c, reason) in &missing {
+        unmet_json.push(
+            Json::obj()
+                .set("criterion", c.name())
+                .set("missing", reason.as_str()),
+        );
+    }
+    let doc = Json::obj()
+        .set("component", "maturity-check@v1")
+        .set("prefix", prefix.as_str())
+        .set("pipeline_id", pipeline_id)
+        .set("commit", repo.commit.as_str())
+        .set("declared", declared.name())
+        .set("earned", level_json(earned))
+        .set("level", repo.maturity.name())
+        .set("target", level_json(policy.target))
+        .set("verdict", verdict)
+        .set("window_days", policy.window_days)
+        .set(
+            "evidence",
+            Json::obj()
+                .set("reports", evidence.reports)
+                .set("successful_runs", evidence.successful_runs)
+                .set("csv_ok", evidence.csv_ok)
+                .set("instrumented_runs", evidence.instrumented_runs)
+                .set("systems", systems)
+                .set("instrumented_systems", evidence.instrumented_systems.len())
+                .set("pinned_runs", evidence.pinned_runs)
+                .set("seeded_runs", evidence.seeded_runs)
+                .set("replay_commits", evidence.replay_commits)
+                .set("unparseable_skipped", skipped),
+        )
+        .set("criteria", criteria_json)
+        .set("unmet", unmet_json);
+    job.add_artifact("maturity.json", &doc.pretty());
+    job.output = Json::obj()
+        .set("verdict", verdict)
+        .set("level", repo.maturity.name());
+
+    job.log_line(format!(
+        "evidence under {prefix}/: {} reports ({} successful, {} instrumented, \
+         {} replay-proven) on {} system(s){}",
+        evidence.reports,
+        evidence.successful_runs,
+        evidence.instrumented_runs,
+        evidence.replay_commits,
+        evidence.systems.len(),
+        match since_day {
+            Some(d) => format!(", window from day {d}"),
+            None => String::new(),
+        }
+    ));
+    for (c, reason) in &missing {
+        job.log_line(format!("unmet [{}] {}: {}", c.level(), c.name(), reason));
+    }
+    job.log_line(format!(
+        "declared {declared}, earned {}: {verdict}{}",
+        earned.map(|l| l.name()).unwrap_or("none"),
+        if failed { " → FAIL" } else { "" }
+    ));
+    job.state = if failed {
+        CiJobState::Failed
+    } else {
+        CiJobState::Success
+    };
+    vec![job]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn policy_resolves_defaults_and_bounds() {
+        let p = GatePolicy::from_inputs(&Json::obj()).unwrap();
+        assert_eq!(p.target, None);
+        assert_eq!(p.cfg.min_runs, 3);
+        assert_eq!(p.cfg.min_instrumented, 3);
+        assert_eq!(p.cfg.min_systems, 1);
+        assert_eq!(p.window_days, 0);
+        assert!(p.update);
+        assert!(p.cfg.is_instrument_metric("kernel_time"));
+
+        let p = GatePolicy::from_inputs(
+            &Json::obj()
+                .set("target", "Reproducibility")
+                .set("min_runs", 0u64)
+                .set("update", "false"),
+        )
+        .unwrap();
+        assert_eq!(p.target, Some(Maturity::Reproducibility));
+        assert_eq!(p.cfg.min_runs, 1); // clamped up
+        assert!(!p.update);
+    }
+
+    #[test]
+    fn unknown_target_is_a_loud_error() {
+        let err = GatePolicy::from_inputs(&Json::obj().set("target", "reproducable"))
+            .unwrap_err();
+        assert!(err.contains("unknown maturity level"), "{err}");
+        assert!(err.contains("reproducable"), "{err}");
+    }
+
+    #[test]
+    fn empty_store_passes_without_touching_the_level() {
+        let mut world = World::new(1);
+        let mut repo =
+            BenchmarkRepo::new("young").with_maturity(Maturity::Instrumentability);
+        let jobs = run_maturity_gate(
+            &mut world,
+            &mut repo,
+            &Json::obj().set("prefix", "jupiter.young"),
+            1,
+        );
+        assert_eq!(jobs.len(), 1);
+        assert_eq!(jobs[0].state, CiJobState::Success);
+        let doc = Json::parse(jobs[0].artifact("maturity.json").unwrap()).unwrap();
+        assert_eq!(doc.str_of("verdict"), Some("insufficient-evidence"));
+        assert_eq!(repo.maturity, Maturity::Instrumentability, "level untouched");
+    }
+
+    #[test]
+    fn bad_target_fails_validation_job() {
+        let mut world = World::new(1);
+        let mut repo = BenchmarkRepo::new("r");
+        let jobs = run_maturity_gate(
+            &mut world,
+            &mut repo,
+            &Json::obj().set("prefix", "p").set("target", "wat"),
+            1,
+        );
+        assert_eq!(jobs[0].state, CiJobState::Failed);
+        assert!(jobs[0].log[0].contains("input validation failed"));
+    }
+}

@@ -1,0 +1,117 @@
+//! Evidence-based maturity ladder: assessment, promotion gates, and
+//! JUREAP-style onboarding campaigns (DESIGN.md §10).
+//!
+//! The paper's second contribution is the incremental-adoption pathway —
+//! benchmarks "evolve from basic runnability to more advanced
+//! instrumentation and reproducibility". Everywhere else in the crate a
+//! [`crate::workloads::portfolio::Maturity`] level is a *declaration*
+//! assigned at generation; this top-layer module makes it **earned from
+//! recorded evidence**:
+//!
+//! * [`criteria`] — each rung as a typed checklist of monotone
+//!   thresholds over evidence counters;
+//! * [`assess`] — digest-keyed evidence reconstruction from `exacb.data`
+//!   artifacts only (order-independent, replay-deduped — the same
+//!   properties as the tracking history, §9);
+//! * [`gate`] — the `maturity-check@v1` CI component: blocks or grants
+//!   promotion, re-levels repositories in assess mode, and emits the
+//!   `maturity.json` sidecar (never in `report.json`);
+//! * [`campaign`] — multi-day onboarding over the concurrent event
+//!   core: apps start at declared levels but must re-earn them, flaky
+//!   apps demote, fixed ones re-promote, and replay-audit days produce
+//!   the byte-identical cache-replay proof reproducibility demands.
+//!
+//! [`maturity_table`] and [`crate::coordinator::World::maturity_table`]
+//! are the a-posteriori entry points behind `exacb jureap`.
+
+pub mod assess;
+pub mod campaign;
+pub mod criteria;
+pub mod gate;
+
+pub use assess::{
+    assess_repo, assess_world, csv_honours_contract, Assessment, Evidence, MaturityState,
+};
+pub use campaign::{
+    domain_distribution, energy_eligible, promotion_timeline, run_onboarding,
+    MaturityRecord, OnboardingOutcome, Transition,
+};
+pub use criteria::{
+    checklist, earned_level, parse_metric_list, unmet, CriteriaConfig, Criterion, CRITERIA,
+};
+pub use gate::{run_maturity_gate, GatePolicy};
+
+use crate::coordinator::World;
+use crate::util::table::Table;
+
+/// Cross-application readiness table: one row per repository with its
+/// declared vs earned level and the evidence counters behind it.
+/// Labelled empty row when nothing is onboarded yet.
+pub fn maturity_table(world: &World, cfg: &CriteriaConfig) -> Table {
+    let mut t = Table::new(&[
+        "benchmark",
+        "declared",
+        "earned",
+        "runs_ok",
+        "instrumented",
+        "systems",
+        "replay",
+        "unmet",
+    ]);
+    let states = assess_world(world, cfg);
+    if states.is_empty() {
+        t.push_placeholder("(no onboarded repositories)");
+        return t;
+    }
+    for s in states {
+        t.push_row(vec![
+            s.app.clone(),
+            s.declared.name().to_string(),
+            s.earned.map(|l| l.name()).unwrap_or("-").to_string(),
+            s.evidence.successful_runs.to_string(),
+            s.evidence.instrumented_runs.to_string(),
+            s.evidence.systems.len().to_string(),
+            s.evidence.replay_commits.to_string(),
+            s.unmet
+                .first()
+                .map(|(c, _)| c.name().to_string())
+                .unwrap_or_else(|| "-".to_string()),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ci::Trigger;
+    use crate::coordinator::BenchmarkRepo;
+
+    #[test]
+    fn maturity_table_labels_empty_world() {
+        let world = World::new(1);
+        let t = maturity_table(&world, &CriteriaConfig::default());
+        assert_eq!(t.rows.len(), 1);
+        assert!(t.rows[0][0].contains("no onboarded"), "{:?}", t.rows);
+    }
+
+    #[test]
+    fn maturity_table_over_recorded_history() {
+        use crate::util::timeutil::SimTime;
+        let mut world = World::new(7);
+        world.add_repo(BenchmarkRepo::logmap_example("jedi", "all"));
+        for d in 0..3 {
+            world.advance_to(SimTime::from_days(d).add_secs(3 * 3600));
+            world.run_pipeline("logmap", Trigger::Scheduled).unwrap();
+        }
+        let t = world.maturity_table();
+        assert_eq!(t.rows.len(), 1, "{:?}", t.rows);
+        assert_eq!(t.rows[0][0], "logmap");
+        assert_eq!(t.rows[0][1], "reproducibility"); // declared
+        // earned: logmap extracts kernel_time, so three successful runs
+        // reach instrumentability — but nothing has replay-proven it
+        assert_eq!(t.rows[0][2], "instrumentability");
+        assert_eq!(t.rows[0][3], "3");
+        assert_eq!(t.rows[0][7], "replay-verified");
+    }
+}

@@ -1,5 +1,6 @@
-//! The exaCB protocol (paper §IV-B, §V-B): the standardized data model
-//! that strongly couples independently-owned benchmarks to the framework.
+//! The exaCB protocol (paper §IV-B, §V-B; DESIGN.md §1 protocol layer):
+//! the standardized data model that strongly couples independently-owned
+//! benchmarks to the framework.
 //!
 //! * [`report`] — the document model (`version`/`reporter`/`parameter`/
 //!   `experiment`/`data[]`) with parsing + validation.

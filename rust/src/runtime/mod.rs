@@ -1,6 +1,7 @@
-//! PJRT runtime: loads the AOT-compiled HLO artifacts (L2 JAX models with
-//! embedded L1 Pallas kernels) and executes them natively via the XLA
-//! PJRT C API. Python only ever runs at `make artifacts` time.
+//! PJRT runtime (DESIGN.md §1 runtime layer, §2 substrate table): loads
+//! the AOT-compiled HLO artifacts (L2 JAX models with embedded L1 Pallas
+//! kernels) and executes them natively via the XLA PJRT C API. Python
+//! only ever runs at `make artifacts` time.
 //!
 //! * [`manifest`] — the artifact index written by `python/compile/aot.py`.
 //! * [`engine`] — PJRT CPU client + compile cache + typed entry points.

@@ -25,7 +25,7 @@
 //! step's stable identity (benchmark, step, point, machine) to its last
 //! digest purely to *classify* a re-execution as `invalidated` (same
 //! slot, new key) versus `miss` (never seen) for provenance reporting.
-//! See DESIGN.md §"Execution cache" for the full key composition table.
+//! See DESIGN.md §4 for the full key composition table.
 
 use std::collections::BTreeMap;
 

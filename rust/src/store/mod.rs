@@ -1,7 +1,8 @@
-//! Result storage (paper §IV-E): "collected data are associated with the
-//! corresponding CI jobs as artifacts and may additionally be stored in
-//! persistent locations, such as orphaned Git branches or dedicated
-//! object storage (e.g., S3-based back ends)".
+//! Result storage (paper §IV-E; DESIGN.md §1 framework layer, §4 cache
+//! design): "collected data are associated with the corresponding CI
+//! jobs as artifacts and may additionally be stored in persistent
+//! locations, such as orphaned Git branches or dedicated object storage
+//! (e.g., S3-based back ends)".
 //!
 //! * [`git`] — a content-addressed commit store with branch semantics:
 //!   the `exacb.data` orphan branch each benchmark repository carries.

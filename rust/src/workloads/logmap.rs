@@ -24,7 +24,8 @@ pub const ELEMS_PER_WORKLOAD: u64 = 1 << 28;
 /// Iterations per intensity unit.
 pub const ITERS_PER_INTENSITY: f64 = 5000.0;
 /// Fraction of GPU FP32 peak a tuned logmap kernel attains (VPU-bound,
-/// fused multiply-add chain; see DESIGN.md §Hardware-Adaptation).
+/// fused multiply-add chain; the machine models are DESIGN.md §2
+/// substrates).
 pub const GPU_EFFICIENCY: f64 = 0.22;
 
 /// logmap is compute-dominated: high utilisation, mildly memory-bound.

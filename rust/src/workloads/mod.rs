@@ -12,6 +12,7 @@
 pub mod calibration;
 pub mod graph500;
 pub mod logmap;
+pub mod onboarding;
 pub mod osu;
 pub mod portfolio;
 pub mod regression;

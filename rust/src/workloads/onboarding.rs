@@ -1,0 +1,375 @@
+//! Seeded JUREAP-style onboarding scenario (DESIGN.md §10): a portfolio
+//! whose applications *declare* maturity levels but must **re-earn**
+//! them from recorded evidence, day by day, through the
+//! `maturity-check@v1` gate.
+//!
+//! This module is pure model (simulation layer): it produces per-day
+//! JUBE definitions, the CI configuration (execution +
+//! `maturity-check@v1`), and the planted event schedule —
+//! `maturity::campaign::run_onboarding` assembles the repositories and
+//! drives the multi-day campaign over the concurrent event core.
+//!
+//! Planted events, all deterministic so tests can assert the **exact
+//! earn day** of every transition:
+//!
+//! * `instrument_from` — the day the team adds analysis instrumentation
+//!   to the benchmark definition (a planted *promotion* to
+//!   instrumentability once enough instrumented runs are recorded);
+//! * `verify_from` — the day the team opts into the replay audit
+//!   (pinned sources + seeded validation), making the app eligible for
+//!   the byte-identical cache-replay proof that reproducibility demands;
+//! * `break_day` / `fix_day` — a flaky stretch where every run crashes:
+//!   windowed evidence decays, the app *demotes*, the team fixes it and
+//!   re-earns the level.
+
+use super::portfolio::{self, Maturity, PortfolioApp};
+
+/// One onboarding application: a portfolio app plus its planted
+/// improvement/breakage schedule.
+#[derive(Debug, Clone)]
+pub struct OnboardingApp {
+    pub app: PortfolioApp,
+    /// Level the team claims at onboarding time (must be re-earned).
+    pub declared: Maturity,
+    /// First day the definition carries analysis instrumentation
+    /// (`None` = never instrumented).
+    pub instrument_from: Option<i64>,
+    /// First day the team opts into the reproducibility replay audit
+    /// (`None` = never).
+    pub verify_from: Option<i64>,
+    /// First day every run crashes (`None` = always healthy).
+    pub break_day: Option<i64>,
+    /// Day the crash is fixed (meaningful only with `break_day`).
+    pub fix_day: Option<i64>,
+}
+
+impl OnboardingApp {
+    /// Is the benchmark definition instrumented on `day`?
+    pub fn instrumented_on(&self, day: i64) -> bool {
+        matches!(self.instrument_from, Some(d) if day >= d)
+    }
+
+    /// Does every run crash on `day`?
+    pub fn broken_on(&self, day: i64) -> bool {
+        match (self.break_day, self.fix_day) {
+            (Some(b), Some(f)) => day >= b && day < f,
+            (Some(b), None) => day >= b,
+            _ => false,
+        }
+    }
+
+    /// Has the team opted into the replay audit by `day`?
+    pub fn verifying_on(&self, day: i64) -> bool {
+        matches!(self.verify_from, Some(d) if day >= d)
+    }
+
+    /// The workload command line as of `day`.
+    pub fn command(&self, day: i64) -> String {
+        if self.broken_on(day) {
+            // the crash is a source defect: a changed command (= commit)
+            "crashing-binary --boom".to_string()
+        } else {
+            self.app.command()
+        }
+    }
+
+    /// The JUBE definition as of `day`: instrumentation appears on
+    /// `instrument_from` (exactly the incremental-adoption step the
+    /// paper describes), breakage swaps the launch line.
+    pub fn jube_file(&self, day: i64) -> String {
+        let mut jube = format!(
+            "name: {name}\nparametersets:\n  - name: run\n    parameters:\n      - name: nodes\n        value: {nodes}\nsteps:\n  - name: execute\n    use: [run]\n    remote: true\n    do:\n      - {cmd}\n",
+            name = self.app.name,
+            nodes = self.app.nodes,
+            cmd = self.command(day)
+        );
+        if self.instrumented_on(day) {
+            jube.push_str(
+                "analysis:\n  - name: tts_file\n    file: app.out\n    regex: \"time: ([0-9.eE+-]+)\"\n    type: float\n",
+            );
+        }
+        jube
+    }
+}
+
+/// A complete onboarding campaign definition.
+#[derive(Debug, Clone)]
+pub struct OnboardingScenario {
+    pub apps: Vec<OnboardingApp>,
+    /// Simulated campaign length in days.
+    pub days: i64,
+    /// Machines the portfolio is spread across (round-robin by index).
+    pub machines: Vec<String>,
+    pub queue: String,
+    pub seed: u64,
+    /// Every `verify_every`-th day is a replay-audit day (the campaign
+    /// runs opted-in apps twice under a fresh execution cache, so the
+    /// second run must replay byte-identically).
+    pub verify_every: i64,
+    // Gate policy pinned into the generated CI configs. These mirror
+    // the `maturity-check@v1` catalog defaults
+    // (`ci::component::maturity_check_defaults` — not importable from
+    // the simulation layer) so campaign assertions cannot drift
+    // silently if the defaults move.
+    pub min_runs: u64,
+    pub min_instrumented: u64,
+    pub window_days: u64,
+}
+
+impl OnboardingScenario {
+    /// Deterministically generate an `n`-application onboarding
+    /// campaign. Planted schedules are index-derived, so the expected
+    /// transition days are exactly computable:
+    ///
+    /// * declared ≥ instrumentability → instrumented from day 0;
+    /// * every 3rd runnability-declared app instruments on day
+    ///   `days / 3` (planted promotion);
+    /// * reproducibility-declared apps join the replay audit on day 0;
+    ///   every 4th instrumentability-declared app joins on `days / 2`
+    ///   (planted promotion to the top rung);
+    /// * every 5th instrumentability-declared app breaks on `days / 3`
+    ///   and is fixed on `2 * days / 3` (planted demotion + re-earn).
+    pub fn generate(n: usize, days: i64, seed: u64) -> OnboardingScenario {
+        let portfolio = portfolio::generate(n, seed);
+        let mut apps = Vec::with_capacity(n);
+        let (mut n_run, mut n_instr) = (0usize, 0usize);
+        for pa in portfolio {
+            let declared = pa.maturity;
+            let mut oa = OnboardingApp {
+                app: pa,
+                declared,
+                instrument_from: None,
+                verify_from: None,
+                break_day: None,
+                fix_day: None,
+            };
+            // evidence must be earnable: the campaign injects failures
+            // only through the planted break/fix windows
+            oa.app.failure_rate = 0.0;
+            match declared {
+                Maturity::Runnability => {
+                    if n_run % 3 == 0 {
+                        oa.instrument_from = Some(days / 3);
+                    }
+                    n_run += 1;
+                }
+                Maturity::Instrumentability => {
+                    oa.instrument_from = Some(0);
+                    if n_instr % 4 == 0 {
+                        oa.verify_from = Some(days / 2);
+                    } else if n_instr % 5 == 1 {
+                        oa.break_day = Some(days / 3);
+                        oa.fix_day = Some(2 * days / 3);
+                    }
+                    n_instr += 1;
+                }
+                Maturity::Reproducibility => {
+                    oa.instrument_from = Some(0);
+                    oa.verify_from = Some(0);
+                }
+            }
+            apps.push(oa);
+        }
+        OnboardingScenario {
+            apps,
+            days,
+            machines: vec!["jupiter".to_string()],
+            queue: "all".to_string(),
+            seed,
+            verify_every: 4,
+            min_runs: 3,
+            min_instrumented: 3,
+            window_days: 6,
+        }
+    }
+
+    /// The standard JUREAP-scale onboarding campaign (72 applications,
+    /// fixed seed — the same portfolio `portfolio::jureap` generates).
+    pub fn jureap(days: i64) -> OnboardingScenario {
+        Self::generate(72, days, 20260101)
+    }
+
+    /// The machine application `i` is onboarded to (round-robin).
+    pub fn machine_for(&self, i: usize) -> &str {
+        &self.machines[i % self.machines.len()]
+    }
+
+    /// Replay-audit days: every `verify_every`-th day, starting at day
+    /// `verify_every - 1` (never day 0 — there is nothing to replay).
+    pub fn is_verification_day(&self, day: i64) -> bool {
+        self.verify_every > 0 && day % self.verify_every == self.verify_every - 1
+    }
+
+    /// First replay-audit day at or after `day` (if any remain).
+    pub fn next_verification_day(&self, day: i64) -> Option<i64> {
+        (day.max(0)..self.days).find(|d| self.is_verification_day(*d))
+    }
+
+    /// The execution prefix (`machine.app`) of application `i`.
+    pub fn prefix(&self, i: usize) -> String {
+        format!("{}.{}", self.machine_for(i), self.apps[i].app.name)
+    }
+
+    /// CI configuration of application `i`: the execution component
+    /// followed by the maturity gate in assess mode (empty `target` —
+    /// the gate re-levels the repository instead of blocking).
+    pub fn ci_file(&self, i: usize) -> String {
+        let machine = self.machine_for(i);
+        format!(
+            r#"include:
+  - component: execution@v3
+    inputs:
+      prefix: "{prefix}"
+      machine: "{machine}"
+      queue: "{queue}"
+      project: "cexalab"
+      budget: "exalab"
+      jube_file: "benchmark/jube/app.yml"
+  - component: maturity-check@v1
+    inputs:
+      prefix: "{prefix}"
+      min_runs: {min_runs}
+      min_instrumented: {min_instrumented}
+      window_days: {window}
+schedule:
+  every: day
+  hour: 3
+"#,
+            prefix = self.prefix(i),
+            machine = machine,
+            queue = self.queue,
+            min_runs = self.min_runs,
+            min_instrumented = self.min_instrumented,
+            window = self.window_days,
+        )
+    }
+
+    // ---- expected transition days (healthy apps, daily runs) ----------
+
+    /// Day a healthy app has recorded `min_runs` successful runs.
+    pub fn expected_runnability_day(&self) -> i64 {
+        self.min_runs as i64 - 1
+    }
+
+    /// Day app `i` earns instrumentability: `min_instrumented`
+    /// instrumented successful runs after `instrument_from`.
+    pub fn expected_instrumentability_day(&self, i: usize) -> Option<i64> {
+        let from = self.apps[i].instrument_from?;
+        Some((from + self.min_instrumented as i64 - 1).max(self.expected_runnability_day()))
+    }
+
+    /// Day app `i` earns reproducibility: the first replay-audit day on
+    /// which it is both instrumentability-earned and opted in.
+    pub fn expected_reproducibility_day(&self, i: usize) -> Option<i64> {
+        let verify = self.apps[i].verify_from?;
+        let instr = self.expected_instrumentability_day(i)?;
+        self.next_verification_day(verify.max(instr))
+    }
+
+    /// Day a broken app's windowed successes drop below `min_runs`:
+    /// `break_day + window_days - min_runs`. Exact when the app was
+    /// healthy for ≥ `min_runs` days before breaking **and** the fix
+    /// lands after this day (`fix_day > break_day + window_days -
+    /// min_runs` — otherwise the window refills before it ever drains);
+    /// the generated break/fix schedules guarantee both for campaigns
+    /// of ≥ 11 days.
+    pub fn expected_demotion_day(&self, i: usize) -> Option<i64> {
+        let b = self.apps[i].break_day?;
+        Some(b + self.window_days as i64 - self.min_runs as i64)
+    }
+
+    /// Day a fixed app has re-earned its instrumented level:
+    /// `fix_day + min_runs - 1`.
+    pub fn expected_repromotion_day(&self, i: usize) -> Option<i64> {
+        let f = self.apps[i].fix_day?;
+        Some(f + self.min_runs as i64 - 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn jureap_scenario_shape() {
+        let sc = OnboardingScenario::jureap(12);
+        assert_eq!(sc.apps.len(), 72);
+        // all three declared levels present, and every planted event
+        // class occurs at least once
+        for level in portfolio::LEVELS {
+            assert!(sc.apps.iter().any(|a| a.declared == level), "{level}");
+        }
+        assert!(sc
+            .apps
+            .iter()
+            .any(|a| a.declared == Maturity::Runnability && a.instrument_from.is_some()));
+        assert!(sc
+            .apps
+            .iter()
+            .any(|a| a.declared == Maturity::Instrumentability && a.verify_from.is_some()));
+        assert!(sc.apps.iter().any(|a| a.break_day.is_some()));
+        // generation is deterministic
+        let again = OnboardingScenario::jureap(12);
+        for (a, b) in sc.apps.iter().zip(&again.apps) {
+            assert_eq!(a.app.name, b.app.name);
+            assert_eq!(a.instrument_from, b.instrument_from);
+            assert_eq!(a.break_day, b.break_day);
+        }
+    }
+
+    #[test]
+    fn instrumentation_appears_on_schedule() {
+        // the jureap portfolio mix guarantees runnability-declared apps
+        // (asserted by portfolio::tests::jureap_portfolio_shape)
+        let sc = OnboardingScenario::jureap(12);
+        let planted = sc
+            .apps
+            .iter()
+            .find(|a| a.declared == Maturity::Runnability && a.instrument_from.is_some())
+            .unwrap();
+        let day = planted.instrument_from.unwrap();
+        assert!(!planted.jube_file(day - 1).contains("analysis:"));
+        assert!(planted.jube_file(day).contains("analysis:"));
+        assert!(planted.jube_file(day).contains("tts_file"));
+    }
+
+    #[test]
+    fn breakage_swaps_the_launch_line_and_heals() {
+        let sc = OnboardingScenario::jureap(12);
+        let (i, broken) = sc
+            .apps
+            .iter()
+            .enumerate()
+            .find(|(_, a)| a.break_day.is_some())
+            .unwrap();
+        let (b, f) = (broken.break_day.unwrap(), broken.fix_day.unwrap());
+        assert!(b < f && f < sc.days);
+        assert!(!broken.broken_on(b - 1));
+        assert!(broken.jube_file(b).contains("crashing-binary"));
+        assert_eq!(broken.jube_file(f), broken.jube_file(b - 1));
+        // demotion strictly after the break, re-earn after the fix
+        assert!(sc.expected_demotion_day(i).unwrap() > b);
+        assert!(sc.expected_repromotion_day(i).unwrap() >= f);
+    }
+
+    #[test]
+    fn verification_days_recur_and_never_start_at_zero() {
+        let sc = OnboardingScenario::generate(4, 12, 7);
+        assert!(!sc.is_verification_day(0));
+        let days: Vec<i64> = (0..sc.days).filter(|d| sc.is_verification_day(*d)).collect();
+        assert_eq!(days, vec![3, 7, 11]);
+        assert_eq!(sc.next_verification_day(4), Some(7));
+        assert_eq!(sc.next_verification_day(12), None);
+    }
+
+    #[test]
+    fn ci_file_wires_execution_and_gate() {
+        let sc = OnboardingScenario::generate(4, 12, 7);
+        let ci = sc.ci_file(0);
+        assert!(ci.contains("component: execution@v3"));
+        assert!(ci.contains("component: maturity-check@v1"));
+        assert!(ci.contains(&format!("prefix: \"{}\"", sc.prefix(0))));
+        assert!(ci.contains("min_runs: 3"));
+        assert!(ci.contains("window_days: 6"));
+    }
+}

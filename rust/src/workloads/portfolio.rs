@@ -11,6 +11,23 @@
 use super::scalable::AppModel;
 use crate::util::prng::Prng;
 
+/// A maturity-level string the ladder does not know.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct MaturityError(pub String);
+
+impl std::fmt::Display for MaturityError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "unknown maturity level '{}' (expected 'runnability', \
+             'instrumentability' or 'reproducibility')",
+            self.0
+        )
+    }
+}
+
+impl std::error::Error for MaturityError {}
+
 /// The incremental-adoption maturity ladder (paper contribution 2).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
 pub enum Maturity {
@@ -22,6 +39,13 @@ pub enum Maturity {
     Reproducibility,
 }
 
+/// Every rung, lowest first (iteration order matches `Ord`).
+pub const LEVELS: [Maturity; 3] = [
+    Maturity::Runnability,
+    Maturity::Instrumentability,
+    Maturity::Reproducibility,
+];
+
 impl Maturity {
     pub fn name(&self) -> &'static str {
         match self {
@@ -29,6 +53,25 @@ impl Maturity {
             Maturity::Instrumentability => "instrumentability",
             Maturity::Reproducibility => "reproducibility",
         }
+    }
+
+    /// Parse a level name; anything that is not a ladder rung is a loud
+    /// error (mirroring [`crate::coordinator::Launcher::parse`] — a
+    /// typo'd `target` on a maturity gate must fail CI validation, not
+    /// silently assess against the wrong rung).
+    pub fn parse(s: &str) -> Result<Maturity, MaturityError> {
+        for level in LEVELS {
+            if s.eq_ignore_ascii_case(level.name()) {
+                return Ok(level);
+            }
+        }
+        Err(MaturityError(s.to_string()))
+    }
+}
+
+impl std::fmt::Display for Maturity {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
     }
 }
 
@@ -188,5 +231,19 @@ mod tests {
     fn maturity_ordering() {
         assert!(Maturity::Runnability < Maturity::Instrumentability);
         assert!(Maturity::Instrumentability < Maturity::Reproducibility);
+        assert!(LEVELS.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn maturity_parse_roundtrips_and_rejects_typos() {
+        for level in LEVELS {
+            assert_eq!(Maturity::parse(level.name()), Ok(level));
+            assert_eq!(Maturity::parse(&level.name().to_uppercase()), Ok(level));
+            assert_eq!(format!("{level}"), level.name());
+        }
+        let err = Maturity::parse("reproducable").unwrap_err();
+        assert!(err.to_string().contains("reproducable"), "{err}");
+        assert!(err.to_string().contains("expected"), "{err}");
+        assert!(Maturity::parse("").is_err());
     }
 }

@@ -1,0 +1,374 @@
+//! End-to-end tests of the maturity subsystem (DESIGN.md §10): the
+//! evidence-based ladder's assessment properties, the promotion gate,
+//! and the onboarding campaign's exact transition days.
+
+use exacb::ci::{CiJobState, Trigger};
+use exacb::coordinator::{BenchmarkRepo, World};
+use exacb::maturity::{assess_repo, earned_level, Assessment, CriteriaConfig};
+use exacb::prop_assert;
+use exacb::util::json::Json;
+use exacb::util::prop::check;
+use exacb::util::timeutil::SimTime;
+use exacb::workloads::onboarding::OnboardingScenario;
+use exacb::workloads::portfolio::Maturity;
+
+/// Build one synthetic recorded (report, csv) pair.
+fn report(
+    system: &str,
+    day: i64,
+    pipeline: u64,
+    seed: u64,
+    stage: &str,
+    success: bool,
+    instrumented: bool,
+) -> (String, String) {
+    use exacb::protocol::{results_csv, DataEntry, Experiment, Report, Reporter};
+    let mut metrics = Json::obj().set("gflops_rate", 11.5);
+    if instrumented {
+        metrics.insert("kernel_time", 0.25 + day as f64);
+    }
+    let r = Report {
+        reporter: Reporter {
+            tool: "exacb".into(),
+            tool_version: "0.1".into(),
+            pipeline_id: pipeline,
+            commit: format!("c{pipeline}"),
+            system: system.into(),
+            timestamp: SimTime::from_days(day).iso8601(),
+            seed,
+            ..Default::default()
+        },
+        parameter: Json::obj(),
+        experiment: Experiment {
+            system: system.into(),
+            software_version: stage.into(),
+            timestamp: SimTime::from_days(day).add_secs(3 * 3600).iso8601(),
+            ..Default::default()
+        },
+        data: vec![DataEntry {
+            success,
+            runtime: 7.5 + day as f64,
+            nodes: 1,
+            metrics,
+            ..Default::default()
+        }],
+    };
+    let csv = results_csv(&[&r]);
+    (r.to_document(), csv)
+}
+
+/// Property: assessment is **order-independent** — any permutation of
+/// the same recorded documents reconstructs the identical evidence and
+/// earned level.
+#[test]
+fn assessment_is_ingestion_order_independent() {
+    let cfg = CriteriaConfig::default();
+    check("maturity assessment independent of ingestion order", 40, |g| {
+        let n = g.usize(1, 10);
+        let docs: Vec<(String, String, String)> = (0..n)
+            .map(|i| {
+                let (doc, csv) = report(
+                    if g.bool() { "jupiter" } else { "jedi" },
+                    g.i64(0, 6),
+                    g.u64(1, 40),
+                    g.u64(0, 2),
+                    if g.bool() { "stage-2026" } else { "" },
+                    g.bool(),
+                    g.bool(),
+                );
+                // occasionally alias two entries to the same path suffix
+                // so replay footprints appear in both orders
+                (format!("p/{}/report.json", g.usize(0, n)), doc, csv)
+            })
+            .map(|(p, d, c)| (p, d, c))
+            .collect();
+        let mut forward = Assessment::new(&cfg);
+        for (p, d, c) in &docs {
+            forward.ingest(p, d, Some(c));
+        }
+        let mut shuffled = docs.clone();
+        for i in (1..shuffled.len()).rev() {
+            let j = g.usize(0, i);
+            shuffled.swap(i, j);
+        }
+        let mut backward = Assessment::new(&cfg);
+        for (p, d, c) in &shuffled {
+            backward.ingest(p, d, Some(c));
+        }
+        let (a, b) = (forward.evidence(None), backward.evidence(None));
+        prop_assert!(a == b, "evidence diverges:\n  {a:?}\n  {b:?}");
+        prop_assert!(
+            earned_level(&a, &cfg) == earned_level(&b, &cfg),
+            "earned level diverges"
+        );
+        Ok(())
+    });
+}
+
+/// Property: promotion is **monotone in evidence** — ingesting one more
+/// recorded document never lowers the earned level.
+#[test]
+fn promotion_is_monotone_in_evidence() {
+    let cfg = CriteriaConfig::default();
+    check("earned level is monotone under added evidence", 40, |g| {
+        let mut a = Assessment::new(&cfg);
+        let mut last: Option<Maturity> = None;
+        for i in 0..g.usize(3, 14) {
+            let (doc, csv) = report(
+                if g.bool() { "jupiter" } else { "jedi" },
+                g.i64(0, 6),
+                i as u64 + 1,
+                g.u64(0, 2),
+                if g.bool() { "stage-2026" } else { "" },
+                g.bool(),
+                g.bool(),
+            );
+            // replays (same doc at a second path) are also "more
+            // evidence" and must never demote
+            let path = format!("p/{}/report.json", g.usize(0, 9));
+            a.ingest(&path, &doc, Some(&csv));
+            let now = earned_level(&a.evidence(None), &cfg);
+            prop_assert!(
+                now >= last,
+                "evidence demoted the level: {last:?} -> {now:?} after {} docs",
+                i + 1
+            );
+            last = now;
+        }
+        Ok(())
+    });
+}
+
+/// Warm cache replays never change the assessed maturity state: the
+/// replayed bytes dedupe out of every counter, and once the replay
+/// footprint exists, further replays are idempotent.
+#[test]
+fn warm_replays_never_change_assessed_state() {
+    let cfg = CriteriaConfig::default();
+    // three cold measurement days (no cache): distinct evidence points
+    let mut world = World::new(42);
+    world.add_repo(BenchmarkRepo::logmap_example("jedi", "all"));
+    for d in 0..3 {
+        world.advance_to(SimTime::from_days(d).add_secs(3 * 3600));
+        world.run_pipeline("logmap", Trigger::Scheduled).unwrap();
+    }
+    let cold = assess_repo(world.repo("logmap").unwrap(), &cfg);
+    assert_eq!(cold.evidence.successful_runs, 3);
+    assert_eq!(cold.evidence.replay_commits, 0);
+    assert_eq!(cold.earned, Some(Maturity::Instrumentability));
+
+    // enable caching: the first cached run is a miss (a fourth distinct
+    // evidence point), every later one a byte-identical replay
+    world.enable_cache();
+    world.advance_to(SimTime::from_days(3).add_secs(3 * 3600));
+    world.run_pipeline("logmap", Trigger::Scheduled).unwrap();
+    let seeded = assess_repo(world.repo("logmap").unwrap(), &cfg);
+    assert_eq!(seeded.evidence.successful_runs, 4);
+    assert_eq!(seeded.evidence.replay_commits, 0);
+
+    // warm replay: re-commits the day-3 report byte-identically at a
+    // new path. The one and only thing that may change is the
+    // replay-verified criterion — which this replay *earns*, promoting
+    // to the top rung. No other counter moves.
+    world.run_pipeline("logmap", Trigger::Scheduled).unwrap();
+    assert!(world.cache_stats().hits >= 1, "second cached run must replay");
+    let warm = assess_repo(world.repo("logmap").unwrap(), &cfg);
+    assert_eq!(warm.evidence.successful_runs, seeded.evidence.successful_runs);
+    assert_eq!(
+        warm.evidence.instrumented_runs,
+        seeded.evidence.instrumented_runs
+    );
+    assert_eq!(warm.evidence.csv_ok, seeded.evidence.csv_ok);
+    assert_eq!(warm.evidence.seeded_runs, seeded.evidence.seeded_runs);
+    assert_eq!(warm.evidence.replay_commits, 1);
+    assert_eq!(warm.earned, Some(Maturity::Reproducibility));
+
+    // …and from here on, warm replays change nothing at all
+    for _ in 0..4 {
+        world.run_pipeline("logmap", Trigger::Scheduled).unwrap();
+    }
+    let again = assess_repo(world.repo("logmap").unwrap(), &cfg);
+    assert_eq!(again.evidence, warm.evidence, "replays are evidence of nothing new");
+    assert_eq!(again.earned, warm.earned);
+}
+
+/// The gate denies promotion on missing evidence, naming every unmet
+/// criterion and its shortfall in `maturity.json`.
+#[test]
+fn gate_denies_with_named_criteria() {
+    let mut world = World::new(9);
+    let mut repo = BenchmarkRepo::logmap_example("jedi", "all");
+    // one single successful run: runnable evidence exists but is thin
+    world.add_repo(repo.clone());
+    world.run_pipeline("logmap", Trigger::Manual).unwrap();
+    repo = world.repos.remove("logmap").unwrap();
+
+    let inputs = Json::obj()
+        .set("prefix", "jedi.logmap")
+        .set("target", "reproducibility")
+        .set("min_runs", 3u64);
+    let jobs = exacb::maturity::run_maturity_gate(&mut world, &mut repo, &inputs, 99);
+    let gate = jobs.last().unwrap();
+    assert_eq!(gate.state, CiJobState::Failed, "promotion must be denied");
+    let doc = Json::parse(gate.artifact("maturity.json").unwrap()).unwrap();
+    assert_eq!(doc.str_of("verdict"), Some("denied"));
+    assert_eq!(doc.str_of("target"), Some("reproducibility"));
+    let unmet = doc.get("unmet").and_then(Json::as_arr).unwrap();
+    let names: Vec<&str> = unmet
+        .iter()
+        .filter_map(|u| u.str_of("criterion"))
+        .collect();
+    assert!(names.contains(&"successful-runs"), "{names:?}");
+    assert!(names.contains(&"replay-verified"), "{names:?}");
+    for u in unmet {
+        assert!(u.str_of("missing").is_some(), "shortfall text present");
+    }
+    // denial never touches the declared level
+    assert_eq!(repo.maturity, Maturity::Reproducibility);
+}
+
+/// A *target* gate only blocks or grants — granting a rung below the
+/// declared level must never silently demote the repository (demotion
+/// is assess mode's job, with its recency window).
+#[test]
+fn granting_a_lower_target_never_demotes() {
+    let mut world = World::new(11);
+    world.add_repo(BenchmarkRepo::logmap_example("jedi", "all"));
+    for d in 0..3 {
+        world.advance_to(SimTime::from_days(d).add_secs(3 * 3600));
+        world.run_pipeline("logmap", Trigger::Scheduled).unwrap();
+    }
+    let mut repo = world.repos.remove("logmap").unwrap();
+    assert_eq!(repo.maturity, Maturity::Reproducibility); // declared
+    let inputs = Json::obj()
+        .set("prefix", "jedi.logmap")
+        .set("target", "runnability");
+    let jobs = exacb::maturity::run_maturity_gate(&mut world, &mut repo, &inputs, 77);
+    let gate = jobs.last().unwrap();
+    assert_eq!(gate.state, CiJobState::Success);
+    let doc = Json::parse(gate.artifact("maturity.json").unwrap()).unwrap();
+    assert_eq!(doc.str_of("verdict"), Some("granted"));
+    // earned is instrumentability (no replay proof), target was met,
+    // and the declared top rung survives the grant
+    assert_eq!(doc.str_of("earned"), Some("instrumentability"));
+    assert_eq!(doc.str_of("level"), Some("reproducibility"));
+    assert_eq!(repo.maturity, Maturity::Reproducibility);
+}
+
+/// The maturity sidecar stays out of recorded history: no report on the
+/// data branch ever embeds a gate verdict.
+#[test]
+fn maturity_sidecar_never_leaks_into_reports() {
+    let sc = OnboardingScenario::generate(3, 5, 77);
+    let mut world = World::new(sc.seed);
+    exacb::maturity::run_onboarding(&mut world, &sc);
+    let mut reports_seen = 0;
+    for oa in &sc.apps {
+        let repo = world.repo(&oa.app.name).unwrap();
+        for (path, content) in repo.store.read_all("exacb.data", "") {
+            if !path.ends_with("report.json") {
+                continue;
+            }
+            reports_seen += 1;
+            exacb::protocol::Report::parse(&content)
+                .unwrap_or_else(|e| panic!("{path}: {e}"));
+            assert!(
+                !content.contains("maturity.json") && !content.contains("\"verdict\""),
+                "{path} must not embed gate output"
+            );
+        }
+    }
+    assert!(reports_seen >= 3 * 5, "campaign recorded {reports_seen} reports");
+}
+
+/// Planted onboarding events land on their exact expected days:
+/// instrumentation earns instrumentability, the replay audit earns
+/// reproducibility, breakage demotes when windowed evidence decays, and
+/// the fix re-earns the level — all through full pipelines on the
+/// shared timeline.
+#[test]
+fn onboarding_transitions_land_on_exact_days() {
+    use exacb::workloads::onboarding::OnboardingApp;
+    use exacb::workloads::portfolio::PortfolioApp;
+    use exacb::workloads::scalable::AppModel;
+
+    let app = |name: &str, declared: Maturity| OnboardingApp {
+        app: PortfolioApp {
+            name: name.to_string(),
+            domain: "cfd".to_string(),
+            maturity: declared,
+            model: AppModel {
+                name: name.to_string(),
+                gflops_total: 20_000.0,
+                steps: 10,
+                ..AppModel::default()
+            },
+            failure_rate: 0.0,
+            nodes: 1,
+        },
+        declared,
+        instrument_from: None,
+        verify_from: None,
+        break_day: None,
+        fix_day: None,
+    };
+    let mut late_bloomer = app("late-bloomer", Maturity::Runnability);
+    late_bloomer.instrument_from = Some(6);
+    let mut auditee = app("auditee", Maturity::Instrumentability);
+    auditee.instrument_from = Some(0);
+    auditee.verify_from = Some(5);
+    let mut flaky = app("flaky", Maturity::Instrumentability);
+    flaky.instrument_from = Some(0);
+    flaky.break_day = Some(5);
+    flaky.fix_day = Some(9);
+    let sc = OnboardingScenario {
+        apps: vec![late_bloomer, auditee, flaky],
+        days: 13,
+        machines: vec!["jupiter".to_string()],
+        queue: "all".to_string(),
+        seed: 314,
+        verify_every: 4,
+        min_runs: 3,
+        min_instrumented: 3,
+        window_days: 6,
+    };
+    let mut world = World::new(sc.seed);
+    let out = exacb::maturity::run_onboarding(&mut world, &sc);
+
+    // late-bloomer: instrumented from day 6 → 3 instrumented runs on
+    // day 8, exactly
+    assert_eq!(sc.expected_instrumentability_day(0), Some(8));
+    assert_eq!(
+        out.transition_day("late-bloomer", Maturity::Instrumentability),
+        Some(8),
+        "{:?}",
+        out.transitions_of("late-bloomer")
+    );
+
+    // auditee: opts into the replay audit on day 5 → proven on the
+    // day-7 audit, exactly
+    assert_eq!(sc.expected_reproducibility_day(1), Some(7));
+    assert_eq!(
+        out.transition_day("auditee", Maturity::Reproducibility),
+        Some(7),
+        "{:?}",
+        out.transitions_of("auditee")
+    );
+
+    // flaky: breaks on day 5 → windowed successes drop below min_runs
+    // on day 5+6-3=8, demoting to the floor; fixed on day 9 → re-earns
+    // instrumentability on day 9+3-1=11, exactly
+    assert_eq!(sc.expected_demotion_day(2), Some(8));
+    assert_eq!(sc.expected_repromotion_day(2), Some(11));
+    let flaky_t = out.transitions_of("flaky");
+    assert_eq!(
+        out.transition_day("flaky", Maturity::Runnability),
+        Some(8),
+        "{flaky_t:?}"
+    );
+    let reearn = flaky_t
+        .iter()
+        .find(|t| t.day > 8 && t.to == Maturity::Instrumentability)
+        .unwrap_or_else(|| panic!("no re-promotion: {flaky_t:?}"));
+    assert_eq!(reearn.day, 11);
+}
