@@ -57,7 +57,9 @@ fn main() {
         }
         let repo = world.repo(name).unwrap();
         let (set, _) = ReportSet::load(&repo.store, "exacb.data", "");
-        sweeps.push(EnergySweep::from_set(&set, name).expect("sweep"));
+        // reports live under the execution prefix "jedi.{name}", which is
+        // what from_set filters on (DESIGN.md §11)
+        sweeps.push(EnergySweep::from_set(&set, &format!("jedi.{name}")).expect("sweep"));
     }
 
     println!("\nenergy vs frequency (Fig. 9 series):");

@@ -1,0 +1,187 @@
+//! Perf + contract bench for the energy subsystem (DESIGN.md §11).
+//!
+//! Asserted contracts (a regression fails the bench binary, like the
+//! warm-sweep contract in `perf_e2e` and the gate contracts in
+//! `perf_tracking` / `perf_maturity`):
+//!
+//! * the concurrent 24-app × 8-frequency collection sweep — every point
+//!   of every eligible application interleaved on the shared batch
+//!   timeline across three machines — completes in **strictly less
+//!   simulated time** than sequential dispatch;
+//! * concurrent and sequential dispatch agree byte-for-byte on the
+//!   analysis (per-point PRNG streams make the noise
+//!   interleaving-independent);
+//! * every **planted energy bowl** (memory-boundedness swept 0.15→0.85
+//!   across the portfolio) recovers its analytic sweet spot within one
+//!   frequency step of the sweep grid;
+//! * no sweep produces a NaN anywhere in its summary.
+
+use exacb::coordinator::World;
+use exacb::energy::study;
+use exacb::workloads::onboarding::{OnboardingApp, OnboardingScenario};
+use exacb::workloads::portfolio::{Maturity, PortfolioApp};
+use exacb::workloads::scalable::AppModel;
+
+const APPS: usize = 24;
+const POINTS: usize = 8;
+const MACHINES: [&str; 3] = ["jupiter", "jedi", "jureca"];
+
+/// 24 eligible applications with planted energy bowls: single-node,
+/// communication-free, memory-boundedness swept linearly so every app's
+/// analytic sweet spot is computable from its machine's power model.
+fn scenario() -> OnboardingScenario {
+    let apps = (0..APPS)
+        .map(|i| {
+            let mem_bound = 0.15 + 0.70 * i as f64 / (APPS - 1) as f64;
+            let name = format!("energy-{i:02}");
+            OnboardingApp {
+                app: PortfolioApp {
+                    name: name.clone(),
+                    domain: "energy".to_string(),
+                    maturity: Maturity::Reproducibility,
+                    model: AppModel {
+                        name,
+                        gflops_total: 300_000.0,
+                        serial_frac: 0.01,
+                        mem_bound,
+                        comm_mb: 0.0,
+                        steps: 20,
+                        weak: false,
+                    },
+                    failure_rate: 0.0,
+                    nodes: 1,
+                },
+                declared: Maturity::Reproducibility,
+                instrument_from: Some(0),
+                verify_from: Some(0),
+                break_day: None,
+                fix_day: None,
+            }
+        })
+        .collect();
+    OnboardingScenario {
+        apps,
+        days: 1,
+        machines: MACHINES.iter().map(|m| m.to_string()).collect(),
+        queue: "all".to_string(),
+        seed: 20260601,
+        verify_every: 4,
+        min_runs: 3,
+        min_instrumented: 3,
+        window_days: 0,
+    }
+}
+
+fn main() {
+    let sc = scenario();
+
+    // ---- sequential baseline ------------------------------------------
+    let mut seq = World::new(sc.seed);
+    study::onboard_declared(&mut seq, &sc);
+    let t0 = std::time::Instant::now();
+    let seq_out = study::run_energy_campaign(&mut seq, &sc, POINTS, false);
+    let seq_wall = t0.elapsed().as_secs_f64();
+    let seq_sim = seq.now().0;
+
+    // ---- concurrent sweep ---------------------------------------------
+    let mut con = World::new(sc.seed);
+    study::onboard_declared(&mut con, &sc);
+    let t0 = std::time::Instant::now();
+    let con_out = study::run_energy_campaign(&mut con, &sc, POINTS, true);
+    let con_wall = t0.elapsed().as_secs_f64();
+    let con_sim = con.now().0;
+
+    println!(
+        "campaign: {APPS} apps x {POINTS} frequencies on {} machines ({} jobs)",
+        MACHINES.len(),
+        APPS * POINTS
+    );
+    println!(
+        "  sequential: {seq_sim:>8} simulated s, {:>7.1} ms wall",
+        seq_wall * 1e3
+    );
+    println!(
+        "  concurrent: {con_sim:>8} simulated s, {:>7.1} ms wall  (sim speedup {:.1}x)",
+        con_wall * 1e3,
+        seq_sim as f64 / con_sim.max(1) as f64
+    );
+
+    // ---- contract: concurrent beats sequential in simulated time ------
+    assert!(
+        con_sim < seq_sim,
+        "concurrent sweep must finish in strictly less simulated time: \
+         {con_sim}s vs {seq_sim}s"
+    );
+
+    // ---- contract: both dispatch modes agree on the analysis ----------
+    assert_eq!(seq_out.swept.len(), APPS);
+    assert_eq!(con_out.swept.len(), APPS);
+    for (a, b) in seq_out.swept.iter().zip(&con_out.swept) {
+        let (sa, sb) = (
+            a.summary.as_ref().expect("sequential sweep analysed"),
+            b.summary.as_ref().expect("concurrent sweep analysed"),
+        );
+        assert_eq!(
+            sa.sweet_spot_mhz, sb.sweet_spot_mhz,
+            "{}: dispatch mode must not change the sweet spot",
+            a.app
+        );
+        assert_eq!(sa.energy_nominal_j, sb.energy_nominal_j, "{}", a.app);
+    }
+
+    // ---- contract: planted bowls recover their sweet spots ------------
+    let mut recovered = 0usize;
+    let mut with_saving = 0usize;
+    for (i, s) in con_out.swept.iter().enumerate() {
+        let summary = s.summary.as_ref().expect("sweep analysed");
+        let m = con.cluster.machine(&s.machine).unwrap();
+        let (lo, hi) = (m.power.min_mhz, m.power.nominal_mhz);
+        let step = (hi - lo) / (POINTS - 1) as f64;
+        let mb = sc.apps[i].app.model.mem_bound;
+        let util = 0.95 - 0.25 * mb;
+        // the analytic minimum of the same power/perf model, on the same
+        // grid the sweep sampled
+        let expected = (0..POINTS)
+            .map(|k| lo + step * k as f64)
+            .min_by(|a, b| {
+                m.power
+                    .energy_j(*a, 100.0, util, mb)
+                    .partial_cmp(&m.power.energy_j(*b, 100.0, util, mb))
+                    .unwrap()
+            })
+            .unwrap();
+        assert!(
+            (summary.sweet_spot_mhz - expected).abs() <= step + 1e-6,
+            "{} (mem_bound {mb:.2} on {}): recovered {:.0} MHz, analytic {expected:.0} MHz, \
+             step {step:.0}",
+            s.app,
+            s.machine,
+            summary.sweet_spot_mhz
+        );
+        recovered += 1;
+        if summary.saving_vs_nominal > 0.0 {
+            with_saving += 1;
+        }
+        // no NaN anywhere in the summary
+        for v in [
+            summary.sweet_spot_mhz,
+            summary.edp_spot_mhz,
+            summary.energy_nominal_j,
+            summary.energy_spot_j,
+            summary.saving_vs_nominal,
+        ] {
+            assert!(v.is_finite(), "{}: non-finite summary value", s.app);
+        }
+    }
+    println!(
+        "sweet spots: {recovered}/{APPS} recovered within one grid step, \
+         {with_saving} with a positive saving, projected collection saving {:.1}%",
+        con_out.projected_saving_frac() * 100.0
+    );
+    assert_eq!(recovered, APPS);
+    assert!(
+        with_saving > APPS / 2,
+        "most planted bowls must show a positive sweet-spot saving ({with_saving}/{APPS})"
+    );
+    println!("\nperf_energy contracts OK");
+}

@@ -1,5 +1,6 @@
-//! Energy analysis (Fig. 9): energy-to-solution vs operating frequency,
-//! sweet-spot identification across applications.
+//! Energy analysis (Fig. 9; DESIGN.md §11): energy-to-solution vs
+//! operating frequency, sweet-spot identification across applications,
+//! and the energy-delay product the collection-wide studies rank by.
 
 use super::dataset::ReportSet;
 use crate::util::plot::{Plot, Series};
@@ -10,54 +11,130 @@ pub struct EnergySweep {
     pub app: String,
     /// (freq MHz, energy J) sorted by frequency.
     pub points: Vec<(f64, f64)>,
-    /// The energy-minimising frequency.
+    /// (freq MHz, median runtime s), aligned with `points`.
+    pub runtimes: Vec<(f64, f64)>,
+    /// (freq MHz, energy-delay product J·s), aligned with `points`.
+    pub edp: Vec<(f64, f64)>,
+    /// The energy-minimising frequency among *interior* sweep points —
+    /// a minimum on the sweep boundary is un-bracketed and therefore
+    /// never called a sweet spot (Fig. 9's spots are interior by
+    /// construction).
     pub sweet_spot_mhz: f64,
-    /// Energy saving at the sweet spot vs nominal (fraction, e.g. 0.18).
+    /// The EDP-minimising frequency (boundary allowed: EDP ranks
+    /// operating points, it does not claim a bracketed bowl).
+    pub edp_spot_mhz: f64,
+    /// Energy saving at the sweet spot vs the highest swept frequency
+    /// (fraction, e.g. 0.18). **Signed**: when the true minimum sits on
+    /// the nominal boundary, the best interior point costs energy and
+    /// this is negative — surfaced honestly instead of implying a
+    /// saving.
     pub saving_vs_nominal: f64,
 }
 
 impl EnergySweep {
     /// Build from reports carrying `freq_mhz` and `energy_j` metrics.
+    ///
+    /// Only reports recorded under `app` (first store-path segment equal
+    /// to `app` or extending it as `app.…`, e.g. the per-frequency
+    /// `app.f800` prefixes) contribute: a multi-application set used to
+    /// silently mix every application into one sweep. Reports without a
+    /// store path (injected sets) are trusted to be pre-selected.
     pub fn from_set(set: &ReportSet, app: &str) -> Option<EnergySweep> {
-        let mut points: Vec<(f64, f64)> = Vec::new();
-        for (_, r) in &set.reports {
+        let mut triples: Vec<(f64, f64, f64)> = Vec::new();
+        let dotted = format!("{app}.");
+        for (path, r) in &set.reports {
+            if !path.is_empty() {
+                let seg = path.split('/').next().unwrap_or("");
+                if seg != app && !seg.starts_with(&dotted) {
+                    continue;
+                }
+            }
             for e in &r.data {
                 if !e.success {
                     continue;
                 }
                 if let (Some(f), Some(en)) = (e.metric("freq_mhz"), e.metric("energy_j")) {
-                    points.push((f, en));
+                    if f.is_finite() && en.is_finite() {
+                        triples.push((f, en, e.runtime));
+                    }
                 }
             }
         }
-        if points.len() < 3 {
+        if triples.len() < 3 {
             return None;
         }
-        points.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        triples.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
         // collapse duplicate frequencies by median
-        let mut collapsed: Vec<(f64, f64)> = Vec::new();
+        let mut points: Vec<(f64, f64)> = Vec::new();
+        let mut runtimes: Vec<(f64, f64)> = Vec::new();
         let mut i = 0;
-        while i < points.len() {
-            let f = points[i].0;
-            let vals: Vec<f64> = points
+        while i < triples.len() {
+            let f = triples[i].0;
+            let group: Vec<&(f64, f64, f64)> = triples
                 .iter()
-                .filter(|(g, _)| (*g - f).abs() < 0.5)
-                .map(|(_, e)| *e)
+                .filter(|(g, _, _)| (*g - f).abs() < 0.5)
                 .collect();
-            collapsed.push((f, crate::util::stats::median(&vals)));
-            i += vals.len();
+            let es: Vec<f64> = group.iter().map(|(_, e, _)| *e).collect();
+            let ts: Vec<f64> = group.iter().map(|(_, _, t)| *t).collect();
+            points.push((f, crate::util::stats::median(&es)));
+            runtimes.push((f, crate::util::stats::median(&ts)));
+            i += group.len();
         }
-        let (spot, e_min) = collapsed
+        if points.len() < 3 {
+            // duplicate-frequency repetitions collapsed below a sweep
+            return None;
+        }
+        let edp: Vec<(f64, f64)> = points
+            .iter()
+            .zip(&runtimes)
+            .map(|(&(f, e), &(_, t))| (f, e * t))
+            .collect();
+        // sweet spot: best *interior* point (endpoints are un-bracketed)
+        let interior = &points[1..points.len() - 1];
+        let (spot, e_spot) = interior
             .iter()
             .cloned()
             .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())?;
-        let e_nominal = collapsed.last()?.1;
+        let (edp_spot, _) = edp
+            .iter()
+            .cloned()
+            .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())?;
+        let e_nominal = points.last()?.1;
         Some(EnergySweep {
             app: app.to_string(),
-            points: collapsed,
+            points,
+            runtimes,
+            edp,
             sweet_spot_mhz: spot,
-            saving_vs_nominal: 1.0 - e_min / e_nominal,
+            edp_spot_mhz: edp_spot,
+            saving_vs_nominal: 1.0 - e_spot / e_nominal.max(1e-300),
         })
+    }
+
+    /// Median energy at the sweet spot [J].
+    pub fn energy_at_spot_j(&self) -> f64 {
+        self.points
+            .iter()
+            .find(|(f, _)| (*f - self.sweet_spot_mhz).abs() < 0.5)
+            .map(|(_, e)| *e)
+            .unwrap_or(f64::NAN)
+    }
+
+    /// Median energy at the highest swept frequency [J].
+    pub fn energy_at_nominal_j(&self) -> f64 {
+        self.points.last().map(|(_, e)| *e).unwrap_or(f64::NAN)
+    }
+
+    /// Human-honest saving label: "12.3% saving" or "no saving (-1.2%)".
+    pub fn saving_label(&self) -> String {
+        if self.saving_vs_nominal > 0.0 {
+            format!("{:.1}% saving vs nominal", self.saving_vs_nominal * 100.0)
+        } else {
+            format!(
+                "no saving below nominal ({:+.1}%)",
+                self.saving_vs_nominal * 100.0
+            )
+        }
     }
 }
 
@@ -108,6 +185,14 @@ mod tests {
             s.sweet_spot_mhz
         );
         assert!(s.saving_vs_nominal > 0.1, "{}", s.saving_vs_nominal);
+        assert!(s.saving_label().contains("saving vs nominal"));
+        // EDP and runtime series align with the energy points
+        assert_eq!(s.edp.len(), s.points.len());
+        assert_eq!(s.runtimes.len(), s.points.len());
+        for ((f, e), (g, edp)) in s.points.iter().zip(&s.edp) {
+            assert_eq!(f, g);
+            assert!((edp - e * 100.0).abs() < 1e-9, "{edp} vs {}", e * 100.0);
+        }
     }
 
     #[test]
@@ -131,5 +216,89 @@ mod tests {
             &[("freq_mhz", 900.0), ("energy_j", 5.0)],
         )]);
         assert!(EnergySweep::from_set(&set, "x").is_none());
+    }
+
+    /// Regression: a set loaded across several applications must not mix
+    /// their points into one sweep — `from_set` filters by the store-path
+    /// prefix the `app` argument names.
+    #[test]
+    fn multi_app_set_is_filtered_by_prefix() {
+        let mut reports: Vec<(String, crate::protocol::Report)> = Vec::new();
+        for (app, bias) in [("jedi.alpha", 0.0), ("jedi.beta", 400.0)] {
+            for i in 0..8 {
+                let f = 400.0 + i as f64 * 200.0;
+                let e = 1000.0 + 0.002 * (f - (900.0 + bias)).powi(2);
+                let r = synthetic_report(
+                    "jedi",
+                    1,
+                    i as u64,
+                    &[(1, 50.0, true)],
+                    &[("freq_mhz", f), ("energy_j", e)],
+                );
+                reports.push((format!("{app}.f{f:.0}/{i}/report.json"), r));
+            }
+        }
+        let set = ReportSet { reports };
+        let a = EnergySweep::from_set(&set, "jedi.alpha").unwrap();
+        let b = EnergySweep::from_set(&set, "jedi.beta").unwrap();
+        // 8 distinct frequencies each — not 16 mixed points
+        assert_eq!(a.points.len(), 8, "{:?}", a.points);
+        assert_eq!(b.points.len(), 8, "{:?}", b.points);
+        assert!(
+            b.sweet_spot_mhz > a.sweet_spot_mhz,
+            "{} vs {}",
+            a.sweet_spot_mhz,
+            b.sweet_spot_mhz
+        );
+        // an app whose name is a proper prefix of another must not
+        // swallow the longer name's points ("jedi.alpha" vs "jedi.alphab")
+        assert!(EnergySweep::from_set(&set, "jedi.alph").is_none());
+        // unknown app: nothing survives the filter
+        assert!(EnergySweep::from_set(&set, "jedi.gamma").is_none());
+    }
+
+    /// Regression: when the energy minimum sits on the nominal boundary
+    /// the sweep has no bracketed bowl — the best interior point costs
+    /// energy and `saving_vs_nominal` goes negative, surfaced honestly
+    /// instead of reporting the boundary as a 0%-saving "sweet spot".
+    #[test]
+    fn boundary_minimum_reports_negative_saving() {
+        // energy strictly decreasing toward nominal (no interior bowl)
+        let reports = (0..8)
+            .map(|i| {
+                let f = 400.0 + i as f64 * 200.0;
+                let e = 3000.0 - f; // min at the top frequency
+                synthetic_report(
+                    "jedi",
+                    1,
+                    i as u64,
+                    &[(1, 60.0, true)],
+                    &[("freq_mhz", f), ("energy_j", e)],
+                )
+            })
+            .collect();
+        let s = EnergySweep::from_set(&ReportSet::from_reports(reports), "mono").unwrap();
+        assert!(
+            s.saving_vs_nominal < 0.0,
+            "boundary minimum must not imply a saving: {}",
+            s.saving_vs_nominal
+        );
+        assert!(s.saving_label().contains("no saving"), "{}", s.saving_label());
+        // the reported spot is the best interior candidate
+        let interior: Vec<f64> = s.points[1..s.points.len() - 1].iter().map(|p| p.0).collect();
+        assert!(interior.contains(&s.sweet_spot_mhz));
+    }
+
+    #[test]
+    fn edp_spot_sits_at_or_above_the_energy_spot() {
+        // EDP penalises slowdown, so its optimum is never below the
+        // energy optimum on a bowl
+        let s = EnergySweep::from_set(&sweep_set(0.0), "appA").unwrap();
+        assert!(
+            s.edp_spot_mhz >= s.sweet_spot_mhz,
+            "edp {} vs energy {}",
+            s.edp_spot_mhz,
+            s.sweet_spot_mhz
+        );
     }
 }

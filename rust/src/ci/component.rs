@@ -28,6 +28,21 @@ pub mod regression_check_defaults {
     pub const MIN_BASELINE: u64 = 4;
 }
 
+/// Canonical `energy-sweep@v1` policy defaults — the single source for
+/// the catalog schema below and for
+/// `energy::study::SweepPolicy::from_inputs` (direct, non-schema
+/// callers), so the two resolution paths can never drift apart.
+pub mod energy_sweep_defaults {
+    /// Grid size of the default sweep over the machine's settable
+    /// frequency range (the paper's Fig. 9 studies sample 8 clocks).
+    pub const POINTS: u64 = 8;
+    /// The metric the study optimises (recorded in the sidecar).
+    pub const METRIC: &str = "energy_j";
+    /// Interleave every frequency point on the shared batch timeline
+    /// (discrete-event dispatch); `false` = legacy sequential path.
+    pub const CONCURRENT: bool = true;
+}
+
 /// Canonical `maturity-check@v1` policy defaults — the single source for
 /// the catalog schema below and for
 /// `maturity::GatePolicy::from_inputs` / `maturity::CriteriaConfig`
@@ -52,7 +67,7 @@ pub mod maturity_check_defaults {
     /// (beyond the Table-I baseline): analysis extractions and the
     /// jpwr energy metrics.
     pub const INSTRUMENT_METRICS: &str =
-        "tts_file,kernel_time,app_time,energy_j,node_energy_j,avg_power_w";
+        "tts_file,kernel_time,app_time,energy_j,node_energy_j,avg_power_w,edp";
 }
 
 #[derive(Debug, Clone, PartialEq)]
@@ -353,6 +368,26 @@ impl ComponentRegistry {
                         v
                     },
                 },
+                // the concurrent energy sweep (DESIGN.md §11): like
+                // jureap/energy@v3 but every frequency point is a fresh
+                // task on the shared batch timeline, dispatched from the
+                // coordinator event loop like regression-check@v1
+                ComponentSpec {
+                    reference: "energy-sweep@v1".into(),
+                    inputs: {
+                        use energy_sweep_defaults as e;
+                        let mut v = execution_inputs2.clone();
+                        v.push(InputSpec::opt("frequencies", List, Json::arr()));
+                        v.push(InputSpec::opt("points", Int, Json::Num(e::POINTS as f64)));
+                        v.push(InputSpec::opt("metric", Str, Json::Str(e::METRIC.into())));
+                        v.push(InputSpec::opt(
+                            "concurrent",
+                            Bool,
+                            Json::Bool(e::CONCURRENT),
+                        ));
+                        v
+                    },
+                },
             ],
         }
     }
@@ -455,9 +490,46 @@ mod tests {
             "example/jube@v3.2",
             "regression-check@v1",
             "maturity-check@v1",
+            "energy-sweep@v1",
         ] {
             assert!(reg.get(c).is_ok(), "{c}");
         }
+    }
+
+    #[test]
+    fn energy_sweep_resolves_defaults() {
+        let reg = ComponentRegistry::builtin();
+        let spec = reg.get("energy-sweep@v1").unwrap();
+        // execution-like: the sweep runs the benchmark per frequency
+        let err = spec
+            .resolve(&Json::obj().set("prefix", "jedi.app"))
+            .unwrap_err();
+        assert!(
+            matches!(err, ComponentError::MissingInput { ref input, .. } if input == "machine")
+        );
+        let resolved = spec
+            .resolve(
+                &Json::obj()
+                    .set("prefix", "jedi.app")
+                    .set("machine", "jedi")
+                    .set("jube_file", "b.yml"),
+            )
+            .unwrap();
+        assert_eq!(resolved.u64_of("points"), Some(8));
+        assert_eq!(resolved.str_of("metric"), Some("energy_j"));
+        assert_eq!(resolved.bool_of("concurrent"), Some(true));
+        assert!(resolved.get("frequencies").and_then(Json::as_arr).unwrap().is_empty());
+        // unknown inputs stay loud
+        let err = spec
+            .resolve(
+                &Json::obj()
+                    .set("prefix", "p")
+                    .set("machine", "jedi")
+                    .set("jube_file", "b.yml")
+                    .set("frequencys", Json::arr()),
+            )
+            .unwrap_err();
+        assert!(matches!(err, ComponentError::UnknownInput { .. }));
     }
 
     #[test]

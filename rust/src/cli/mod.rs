@@ -45,6 +45,14 @@ COMMANDS:
                 (--apps N --days D --machines M1,M2 --seed S; apps start
                 at declared levels and must re-earn them from evidence;
                 --expect-promotions fails when no level was ever earned)
+  energy        onboard the seeded energy portfolio, then sweep every
+                reproducibility-eligible app across GPU frequencies
+                through the jpwr launcher — all points concurrently on
+                the shared timeline — and render sweet-spot + projected
+                savings tables (--apps N --onboard-days D --points K
+                --machines M1,M2 --seed S --sequential true for the
+                legacy dispatch; --expect-savings fails when no swept
+                app shows a positive sweet-spot saving)
   figures       regenerate every paper table/figure (--days D --out DIR --only ID)
   ablation      run the §III integration-mode ablation (--benchmarks N)
   components    list the CI/CD component catalog
@@ -69,6 +77,7 @@ pub fn run(argv: Vec<String>) -> i32 {
         Some("collection") => cmd_collection(&args),
         Some("track") => cmd_track(&args),
         Some("jureap") => cmd_jureap(&args),
+        Some("energy") => cmd_energy(&args),
         Some("figures") => cmd_figures(&args),
         Some("ablation") => cmd_ablation(&args),
         Some("components") => cmd_components(),
@@ -391,6 +400,91 @@ fn cmd_jureap(args: &Args) -> i32 {
     0
 }
 
+/// Run the seeded system-wide energy study end to end (DESIGN.md §11):
+/// onboard the energy portfolio through the maturity gate so levels are
+/// *earned*, then sweep every reproducibility-eligible application
+/// across its machine's frequency range — every point of every app
+/// interleaved on the shared batch timeline — and render the per-app
+/// sweet-spot table plus the projected collection-wide savings.
+/// `--expect-savings` turns the outcome into a CI-friendly exit code.
+fn cmd_energy(args: &Args) -> i32 {
+    use crate::energy::study;
+    use crate::maturity::campaign;
+
+    let n = args.u64("apps", 24) as usize;
+    let onboard_days = args.i64("onboard-days", 8);
+    let points = args.u64("points", 8).clamp(2, 64) as usize;
+    let seed = args.u64("seed", 20260101);
+    let machines_arg = args.str("machines", "jupiter");
+    let sequential = args.str("sequential", "false") == "true";
+    let expect_savings = args.bool("expect-savings");
+    if onboard_days < 4 {
+        // the first replay-audit day is day 3: fewer onboarding days can
+        // never earn reproducibility, so the study would be vacuous
+        eprintln!("error: --onboard-days must be at least 4 (first replay audit is day 3)");
+        return 2;
+    }
+    let mut sc = study::energy_scenario(n, onboard_days, seed);
+    sc.machines = machines_arg
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect();
+    if sc.machines.is_empty() {
+        eprintln!("error: --machines needs at least one machine name (e.g. jupiter,jedi)");
+        return 2;
+    }
+    println!(
+        "onboarding {n} applications on {} for {onboard_days} day(s), then sweeping \
+         eligible apps over {points} frequencies{}…",
+        sc.machines.join(","),
+        if sequential { " [sequential]" } else { " [concurrent]" }
+    );
+    let mut world = World::new(seed);
+    let t0 = std::time::Instant::now();
+    let onboarding = campaign::run_onboarding(&mut world, &sc);
+    println!(
+        "onboarding: {}/{} pipelines succeeded; {} of {n} app(s) energy-eligible \
+         (reproducibility only)",
+        onboarding.pipelines_succeeded,
+        onboarding.pipelines_run,
+        campaign::energy_eligible(&sc, &world).len(),
+    );
+
+    let sweep_start = world.now();
+    let outcome = study::run_energy_campaign(&mut world, &sc, points, !sequential);
+    let sim_s = (world.now().0 - sweep_start.0).max(0);
+    for l in &outcome.log {
+        println!("  {l}");
+    }
+    println!(
+        "\nswept {} app(s) ({} excluded) in {sim_s} simulated s, {:.1} ms wall",
+        outcome.swept.len(),
+        outcome.excluded.len(),
+        t0.elapsed().as_secs_f64() * 1e3
+    );
+    println!("\nper-app sweet spots:");
+    print!("{}", outcome.sweet_spot_table().render());
+    println!("\nprojected collection-wide savings at the sweet spots:");
+    print!("{}", outcome.savings_table().render());
+    println!("\nrecorded-sweep view (exacb.data only):");
+    print!("{}", world.energy_table().render());
+
+    let saving = outcome.projected_saving_frac();
+    println!(
+        "\nprojected collection saving: {:.1}% of nominal energy ({} of {} swept app(s) \
+         with a positive sweet-spot saving)",
+        saving * 100.0,
+        outcome.apps_with_saving(),
+        outcome.swept.len()
+    );
+    if expect_savings && (outcome.swept.is_empty() || outcome.apps_with_saving() == 0) {
+        eprintln!("\nexpected at least one positive sweet-spot saving; none found");
+        return 1;
+    }
+    0
+}
+
 fn cmd_figures(args: &Args) -> i32 {
     let days = args.i64("days", 90);
     let seed = args.u64("seed", 2026);
@@ -596,6 +690,24 @@ mod tests {
     }
 
     #[test]
+    fn energy_small_study_finds_savings() {
+        // the pinned eligible third (energy_scenario) earns
+        // reproducibility on the day-3 audit, so a ≥4-day onboarding
+        // guarantees swept apps — and bowls on the standard machines
+        // have positive sweet-spot savings
+        assert_eq!(
+            run_str(
+                "energy --apps 5 --onboard-days 5 --points 4 --seed 20260101 \
+                 --expect-savings true"
+            ),
+            0
+        );
+        // too few onboarding days can never earn eligibility: loud exit 2
+        assert_eq!(run_str("energy --apps 2 --onboard-days 2"), 2);
+        assert_eq!(run_str("energy --apps 2 --onboard-days 5 --machines ,"), 2);
+    }
+
+    #[test]
     fn jureap_small_onboarding_earns_levels() {
         // small but long enough to pass the first audit day: levels are
         // earned, so --expect-promotions must exit 0
@@ -613,11 +725,12 @@ mod tests {
     fn help_lists_every_subcommand_with_a_description() {
         // keep in sync with the dispatcher match in `run` (that is the
         // point: this list fails loudly when the two drift apart)
-        const SUBCOMMANDS: [&str; 10] = [
+        const SUBCOMMANDS: [&str; 11] = [
             "quickstart",
             "collection",
             "track",
             "jureap",
+            "energy",
             "figures",
             "ablation",
             "components",

@@ -189,6 +189,16 @@ impl PipelineTask {
                 &resolved,
                 self.pipeline.id,
             )),
+            // the concurrent energy sweep (DESIGN.md §11): every
+            // frequency point is a fresh execution task interleaved on
+            // the shared batch timeline, cache stashed — measurement
+            // runs need fresh noise, like the regression gate
+            "energy-sweep@v1" => Started::Jobs(crate::energy::study::run_energy_sweep(
+                world,
+                &mut self.repo,
+                &resolved,
+                self.pipeline.id,
+            )),
             "machine-comparison@v3" => Started::Jobs(vec![
                 postproc::run_machine_comparison(world, &self.repo, &resolved),
             ]),

@@ -7,16 +7,13 @@
 //! ("without having to rerun the benchmarks themselves").
 
 use crate::analysis::{
-    analyse, energy_sweep_plot, machine_comparison_plot, weak_scaling_plot, EnergySweep,
-    ReportSet, StrongScaling, WeakScaling,
+    analyse, machine_comparison_plot, weak_scaling_plot, ReportSet, StrongScaling, WeakScaling,
 };
 use crate::ci::{CiJob, CiJobState};
 use crate::util::json::Json;
 use crate::util::table::Table;
 use crate::util::timeutil::SimTime;
 
-use super::execution::{run_execution, ExecutionParams};
-use super::executor::Launcher;
 use super::repo::BenchmarkRepo;
 use super::world::World;
 
@@ -368,87 +365,27 @@ pub fn run_scalability(world: &mut World, repo: &BenchmarkRepo, inputs: &Json) -
 /// `jureap/energy@v3` (paper §VI-B, Fig. 9): run the benchmark through
 /// the jpwr launcher at each requested frequency, then analyse the
 /// energy-vs-frequency sweep for its sweet spot.
+///
+/// Since the §11 energy subsystem landed this is a thin wrapper over
+/// [`crate::energy::study`], pinned to the legacy sequential dispatch
+/// (one point drains before the next submits) — the concurrent path is
+/// the `energy-sweep@v1` component. Validation is shared, so an unknown
+/// machine fails loudly with its name instead of producing an empty
+/// default sweep and a misleading "not enough energy points" failure.
 pub fn run_energy_study(
     world: &mut World,
     repo: &mut BenchmarkRepo,
     inputs: &Json,
     pipeline_id: u64,
 ) -> Vec<CiJob> {
-    let base = match ExecutionParams::from_inputs(inputs) {
-        Ok(p) => p,
-        Err(e) => {
-            let mut job = CiJob::new(world.ids.job_id(), "jureap/energy@v3.validate");
-            job.log_line(format!("input validation failed: {e}"));
-            job.state = CiJobState::Failed;
-            return vec![job];
-        }
-    };
-    let frequencies: Vec<f64> = inputs
-        .get("frequencies")
-        .and_then(Json::as_arr)
-        .map(|a| a.iter().filter_map(Json::as_f64).collect())
-        .unwrap_or_default();
-    let mut jobs = Vec::new();
-    let freqs = if frequencies.is_empty() {
-        // default sweep over the machine's settable range
-        let m = world.cluster.machine(&base.machine);
-        match m {
-            Some(m) => {
-                let (lo, hi) = (m.power.min_mhz, m.power.nominal_mhz);
-                (0..8)
-                    .map(|i| lo + (hi - lo) * i as f64 / 7.0)
-                    .collect()
-            }
-            None => vec![],
-        }
-    } else {
-        frequencies
-    };
-
-    for f in &freqs {
-        let mut params = base.clone();
-        params.launcher = Launcher::Jpwr;
-        params.freq_mhz = Some(*f);
-        params.prefix = format!("{}.f{:.0}", base.prefix, f);
-        let (js, _) = run_execution(world, repo, &params, pipeline_id);
-        jobs.extend(js);
-    }
-
-    // analysis job over everything recorded under the base prefix
-    let mut job = CiJob::new(
-        world.ids.job_id(),
-        &format!("{}.energy-analysis", base.prefix),
-    );
-    job.state = CiJobState::Running;
-    let (set, _) = ReportSet::load(&repo.store, "exacb.data", &format!("{}.f", base.prefix));
-    match EnergySweep::from_set(&set, &base.prefix) {
-        Some(sweep) => {
-            let mut csv = Table::new(&["freq_mhz", "energy_j"]);
-            for &(f, e) in &sweep.points {
-                csv.push_row(vec![format!("{f:.0}"), format!("{e:.1}")]);
-            }
-            job.add_artifact("energy.csv", &csv.to_csv());
-            job.add_artifact(
-                "energy.svg",
-                &energy_sweep_plot(std::slice::from_ref(&sweep)).render_svg(),
-            );
-            job.output = Json::obj()
-                .set("sweet_spot_mhz", sweep.sweet_spot_mhz)
-                .set("saving_vs_nominal", sweep.saving_vs_nominal);
-            job.log_line(format!(
-                "sweet spot at {:.0} MHz ({:.1}% saving vs nominal)",
-                sweep.sweet_spot_mhz,
-                sweep.saving_vs_nominal * 100.0
-            ));
-            job.state = CiJobState::Success;
-        }
-        None => {
-            job.log_line("not enough energy points for a sweep");
-            job.state = CiJobState::Failed;
-        }
-    }
-    jobs.push(job);
-    jobs
+    crate::energy::study::run_sweep(
+        world,
+        repo,
+        inputs,
+        pipeline_id,
+        "jureap/energy@v3",
+        Some(false),
+    )
 }
 
 #[cfg(test)]
@@ -582,5 +519,43 @@ mod tests {
             "interior sweet spot, got {spot}"
         );
         assert!(analysis.output.f64_of("saving_vs_nominal").unwrap() > 0.0);
+        // the §11 sidecar rides along on the legacy component too
+        let doc = Json::parse(analysis.artifact("energy.json").unwrap()).unwrap();
+        assert_eq!(doc.str_of("component"), Some("jureap/energy@v3"));
+        assert_eq!(doc.str_of("verdict"), Some("saving"));
+    }
+
+    /// Satellite regression: an unknown machine used to produce an empty
+    /// default sweep, zero execution jobs, and a misleading "not enough
+    /// energy points" failure — it must fail validation loudly with the
+    /// machine's name, mirroring `Launcher::parse`.
+    #[test]
+    fn energy_study_unknown_machine_fails_loudly() {
+        let mut world = World::new(9);
+        let mut repo = BenchmarkRepo::logmap_example("jedi", "all");
+        let inputs = Json::obj()
+            .set("prefix", "ghost.energy")
+            .set("machine", "ghost")
+            .set("queue", "all")
+            .set("project", "cjsc")
+            .set("budget", "zam")
+            .set("jube_file", "benchmark/jube/logmap.yml")
+            .set("frequencies", Json::arr());
+        let jobs = run_energy_study(&mut world, &mut repo, &inputs, 1);
+        assert_eq!(jobs.len(), 1, "one loud validation job, no execution jobs");
+        assert_eq!(jobs[0].state, CiJobState::Failed);
+        assert!(jobs[0].name.ends_with(".validate"), "{}", jobs[0].name);
+        assert!(
+            jobs[0].log.iter().any(|l| l.contains("unknown machine 'ghost'")),
+            "{:?}",
+            jobs[0].log
+        );
+        assert!(
+            !jobs[0].log.iter().any(|l| l.contains("not enough energy points")),
+            "{:?}",
+            jobs[0].log
+        );
+        // no batch submissions happened anywhere
+        assert!(world.batch.values().all(|b| b.records().is_empty()));
     }
 }

@@ -212,6 +212,13 @@ impl World {
     pub fn maturity_table(&self) -> crate::util::table::Table {
         crate::maturity::maturity_table(self, &crate::maturity::CriteriaConfig::default())
     }
+
+    /// Sweet-spot table over every recorded frequency sweep (the
+    /// `exacb energy` view; DESIGN.md §11). Reads only the `exacb.data`
+    /// branches — never executor state.
+    pub fn energy_table(&self) -> crate::util::table::Table {
+        crate::energy::study::energy_table(self)
+    }
 }
 
 #[cfg(test)]

@@ -63,16 +63,24 @@ pub fn wrap_with_jpwr(
     }
     let node_energy = energy; // one node's GPUs
     let total_energy = node_energy * nodes as f64;
-    let avg_power = power_sum / gpus as f64;
+    // a CPU-only machine (gpus_per_node == 0) samples no traces: the
+    // per-GPU averages are undefined, not 0/0 — dividing anyway used to
+    // poison the report JSON with NaN
+    let avg_power = if gpus > 0 { power_sum / gpus as f64 } else { 0.0 };
 
     output.metrics.insert("energy_j", total_energy);
     output.metrics.insert("node_energy_j", node_energy);
-    output.metrics.insert("avg_power_w", avg_power);
+    // energy-delay product [J·s]: the tracking-side figure of merit for
+    // frequency studies (lower is better at equal work) — recorded as a
+    // plain metric so `tracking::history` can gate on it like `energy_j`
+    output.metrics.insert("edp", total_energy * output.runtime_s);
     output.metrics.insert("freq_mhz", freq_mhz);
-    output.metrics.insert(
-        "energy_per_gpu_j",
-        node_energy / gpus as f64,
-    );
+    if gpus > 0 {
+        output.metrics.insert("avg_power_w", avg_power);
+        output
+            .metrics
+            .insert("energy_per_gpu_j", node_energy / gpus as f64);
+    }
     output
         .metrics
         .insert("launcher", Json::Str("jpwr".into()));
@@ -154,6 +162,41 @@ mod tests {
             min_idx > 0 && min_idx < sweep.len() - 1,
             "sweet spot must be interior: idx={min_idx} sweep={sweep:?}"
         );
+    }
+
+    /// Regression: a CPU-only machine (`gpus_per_node: 0`) must omit the
+    /// per-GPU metrics instead of recording NaN `avg_power_w` /
+    /// `energy_per_gpu_j` that poison the report JSON.
+    #[test]
+    fn cpu_only_machine_omits_per_gpu_metrics_without_nan() {
+        let mut m = jedi();
+        m.gpus_per_node = 0;
+        let mut rng = Prng::new(4);
+        let (out, report) =
+            wrap_with_jpwr(app_output(90.0, 0.5), &m, 2, m.power.nominal_mhz, &mut rng);
+        assert!(report.traces.is_empty());
+        assert_eq!(out.metrics.f64_of("energy_j"), Some(0.0));
+        assert_eq!(out.metrics.f64_of("node_energy_j"), Some(0.0));
+        assert_eq!(out.metrics.f64_of("edp"), Some(0.0));
+        assert_eq!(out.metrics.f64_of("avg_power_w"), None);
+        assert_eq!(out.metrics.f64_of("energy_per_gpu_j"), None);
+        assert!(!report.avg_power_w.is_nan());
+        // every recorded metric is finite — nothing NaN reaches the report
+        for (k, v) in out.metrics.as_obj().unwrap_or(&[]) {
+            if let Some(x) = v.as_f64() {
+                assert!(x.is_finite(), "{k} = {x}");
+            }
+        }
+    }
+
+    #[test]
+    fn edp_is_energy_times_delay() {
+        let m = jedi();
+        let mut rng = Prng::new(9);
+        let (out, _) = wrap_with_jpwr(app_output(120.0, 0.4), &m, 1, m.power.nominal_mhz, &mut rng);
+        let e = out.metrics.f64_of("energy_j").unwrap();
+        let edp = out.metrics.f64_of("edp").unwrap();
+        assert!((edp - e * 120.0).abs() < 1e-6 * edp, "{edp} vs {}", e * 120.0);
     }
 
     #[test]

@@ -1,5 +1,6 @@
-//! Energy measurement (paper §VI-B, Figs. 8–9; top layer in the
-//! DESIGN.md §1 module map): the jpwr-like energy-aware launcher.
+//! Energy measurement and system-wide energy studies (paper §VI-B,
+//! Figs. 8–9; DESIGN.md §11): the jpwr-like energy-aware launcher and
+//! the concurrent `energy-sweep@v1` subsystem built on it.
 //!
 //! "Energy measurements are obtained by running benchmarks through the
 //! energy-aware launcher jpwr. ... The JUBE platform configuration
@@ -12,12 +13,23 @@
 //! * [`scope`] — semi-automatic measurement-scope detection: the black
 //!   vertical bars of Fig. 8 excluding ramp phases.
 //! * [`launcher`] — the jpwr wrapper producing protocol-compliant
-//!   `energy_j` / `avg_power_w` metrics from an [`AppOutput`].
+//!   `energy_j` / `avg_power_w` / `edp` metrics from an [`AppOutput`].
+//! * [`study`] — the `energy-sweep@v1` CI component (all frequency
+//!   points interleaved on the shared batch timeline, cache stashed)
+//!   and the eligibility-coupled collection campaign behind
+//!   `exacb energy` (DESIGN.md §11).
+//!
+//! [`AppOutput`]: crate::workloads::AppOutput
 
 pub mod launcher;
 pub mod scope;
+pub mod study;
 pub mod trace;
 
 pub use launcher::{wrap_with_jpwr, EnergyReport};
 pub use scope::{detect_scope, integrate_energy, Scope};
+pub use study::{
+    energy_scenario, energy_table, onboard_declared, run_energy_campaign, run_energy_sweep,
+    AppSweep, EnergyCampaignOutcome, SweepPolicy, SweepSummary,
+};
 pub use trace::{sample_trace, PowerTrace};

@@ -43,9 +43,15 @@ impl Scope {
 ///
 /// `threshold` is the fraction of the idle→peak swing a sample must
 /// exceed to count as "in the run" (default 0.5 works for the standard
-/// phase shapes).
+/// phase shapes). `peak` is the p95 of the samples, not the single
+/// maximum: one sensor spike used to inflate the threshold far above
+/// steady power, shrinking the scope to the spike's neighbourhood — or
+/// destroying it entirely when only the spike cleared the cut.
 pub fn detect_scope(trace: &PowerTrace, idle_w: f64, threshold: f64) -> Option<Scope> {
-    let peak = trace.samples.iter().cloned().fold(f64::MIN, f64::max);
+    if trace.samples.is_empty() {
+        return None;
+    }
+    let peak = crate::util::stats::percentile(&trace.samples, 95.0);
     if peak <= idle_w {
         return None;
     }
@@ -140,6 +146,27 @@ mod tests {
         let clamped = scope.adjusted(-1000, 1000, t.samples.len());
         assert_eq!(clamped.start, 0);
         assert_eq!(clamped.end, t.samples.len() - 1);
+    }
+
+    /// Regression: a single sensor spike must not set the detection
+    /// threshold. With the max-based cut a 10× spike pushed the bar above
+    /// steady power, so only the spike itself cleared it and the scope
+    /// collapsed onto (or vanished around) one sample.
+    #[test]
+    fn sensor_spike_does_not_destroy_the_scope() {
+        let (mut t, p) = mk();
+        let clean = detect_scope(&t, p.idle_w, 0.5).unwrap();
+        // plant a one-sample telemetry glitch mid-run
+        let mid = t.samples.len() / 2;
+        t.samples[mid] = 10.0 * p.power_w(p.nominal_mhz, 0.9);
+        let spiked = detect_scope(&t, p.idle_w, 0.5).expect("scope must survive the spike");
+        // the scope still covers the bulk of the run, not just the spike
+        assert!(spiked.len() > clean.len() / 2, "{spiked:?} vs clean {clean:?}");
+        assert!(spiked.start <= clean.start + 2, "{spiked:?} vs {clean:?}");
+        assert!(spiked.end + 2 >= clean.end, "{spiked:?} vs {clean:?}");
+        // empty traces stay scope-less
+        let empty = PowerTrace { gpu: 0, dt_s: 1.0, samples: vec![] };
+        assert!(detect_scope(&empty, p.idle_w, 0.5).is_none());
     }
 
     #[test]

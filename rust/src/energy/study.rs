@@ -1,0 +1,907 @@
+//! Concurrent, collection-scale energy studies (paper §VI-B, Figs. 8–9;
+//! DESIGN.md §11): the `energy-sweep@v1` CI component and the
+//! system-wide campaign behind `exacb energy`.
+//!
+//! A frequency sweep is a *measurement* workload: every point runs the
+//! benchmark through the jpwr launcher at one GPU clock. Here all points
+//! of a sweep — and, in a campaign, all points of **every eligible
+//! application** — are resumable [`ExecutionTask`]s interleaved on the
+//! shared batch-system timeline (the same discrete-event dispatch the
+//! regression gate uses for its repetitions, §9): every point submits
+//! before any simulated time passes, so an 8-point sweep finishes in
+//! strictly less simulated time than sequential dispatch whenever the
+//! partition can run more than one point at once.
+//!
+//! Contracts (all tested):
+//!
+//! * **cache stash** — the execution cache is stashed for the duration
+//!   of a sweep: energy measurements need fresh noise, which a replay by
+//!   construction cannot provide. A warm re-run of an energy campaign
+//!   therefore schedules fresh measurement jobs.
+//! * **interleaving-independent noise** — each point draws from its own
+//!   PRNG stream (`seed ⊕ fnv1a("energy|pipeline|point-prefix")`), so
+//!   concurrent and sequential dispatch produce byte-identical analysis
+//!   artifacts (`energy.csv`, `energy.json`).
+//! * **eligibility** — campaigns sweep only applications holding the
+//!   **reproducibility** rung (the maturity subsystem's energy
+//!   eligibility, §10): frequency/energy comparisons are meaningless
+//!   without pinned environments and byte-level replayability. Excluded
+//!   applications are named in the campaign log.
+//! * **sidecar** — per-sweep results land in an `energy.json` CI
+//!   artifact (like `cache.json`/`regressions.json`/`maturity.json`),
+//!   never in `report.json`; `energy_j`/`edp` flow into
+//!   [`crate::tracking::history`] as ordinary recorded metrics, so the
+//!   regression gate can fail on energy regressions.
+
+use crate::analysis::{energy_sweep_plot, EnergySweep, ReportSet};
+use crate::ci::{CiJob, CiJobState, Pipeline, Trigger};
+use crate::coordinator::execution::{ExecPoll, ExecutionParams, ExecutionTask};
+use crate::coordinator::executor::Launcher;
+use crate::coordinator::repo::BenchmarkRepo;
+use crate::coordinator::world::World;
+use crate::util::json::Json;
+use crate::util::prng::Prng;
+use crate::util::table::Table;
+use crate::workloads::onboarding::OnboardingScenario;
+use crate::workloads::portfolio::Maturity;
+
+/// Resolved sweep policy (post component-schema validation).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SweepPolicy {
+    /// Explicit frequency list [MHz]; empty = the machine's settable
+    /// range sampled at `points` clocks.
+    pub frequencies: Vec<f64>,
+    /// Grid size of the default sweep.
+    pub points: usize,
+    /// Metric the study optimises (informational; recorded in the
+    /// sidecar so downstream gates know what the sweep was about).
+    pub metric: String,
+    /// Discrete-event interleaved dispatch (the default) vs the legacy
+    /// one-point-at-a-time path.
+    pub concurrent: bool,
+}
+
+impl SweepPolicy {
+    /// Resolve policy inputs, falling back to the canonical catalog
+    /// defaults ([`crate::ci::component::energy_sweep_defaults`]) so
+    /// schema-resolved and direct callers can never drift apart.
+    pub fn from_inputs(inputs: &Json) -> SweepPolicy {
+        use crate::ci::component::energy_sweep_defaults as d;
+        SweepPolicy {
+            frequencies: inputs
+                .get("frequencies")
+                .and_then(Json::as_arr)
+                .map(|a| a.iter().filter_map(Json::as_f64).collect())
+                .unwrap_or_default(),
+            points: inputs.u64_of("points").unwrap_or(d::POINTS).clamp(2, 64) as usize,
+            metric: inputs.str_of("metric").unwrap_or(d::METRIC).to_string(),
+            concurrent: inputs.bool_of("concurrent").unwrap_or(d::CONCURRENT)
+                && inputs.str_of("concurrent") != Some("false"),
+        }
+    }
+}
+
+/// The frequency grid of one sweep. An unknown machine is a loud
+/// validation error naming the machine (mirroring `Launcher::parse`) —
+/// it used to produce an empty default sweep, zero execution jobs, and
+/// a misleading "not enough energy points" failure.
+fn resolve_frequencies(
+    world: &World,
+    machine: &str,
+    policy: &SweepPolicy,
+) -> Result<Vec<f64>, String> {
+    let Some(m) = world.cluster.machine(machine) else {
+        return Err(format!(
+            "unknown machine '{machine}' (an energy sweep needs the machine's settable \
+             frequency range)"
+        ));
+    };
+    if !policy.frequencies.is_empty() {
+        let mut f: Vec<f64> = policy
+            .frequencies
+            .iter()
+            .cloned()
+            .filter(|f| f.is_finite() && *f > 0.0)
+            .collect();
+        f.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        f.dedup_by(|a, b| (*a - *b).abs() < 0.5);
+        if f.is_empty() {
+            return Err("input 'frequencies' contains no usable values".to_string());
+        }
+        return Ok(f);
+    }
+    let (lo, hi) = (m.power.min_mhz, m.power.nominal_mhz);
+    let n = policy.points.max(2);
+    Ok((0..n)
+        .map(|i| lo + (hi - lo) * i as f64 / (n - 1) as f64)
+        .collect())
+}
+
+/// The per-point execution parameters: jpwr launcher, pinned clock,
+/// per-frequency store prefix (`{base}.f{freq}`).
+fn point_params(base: &ExecutionParams, freq: f64) -> ExecutionParams {
+    let mut p = base.clone();
+    p.launcher = Launcher::Jpwr;
+    p.freq_mhz = Some(freq);
+    p.prefix = format!("{}.f{freq:.0}", base.prefix);
+    p
+}
+
+/// Per-point noise stream: independent of how the timeline interleaves
+/// the points (concurrent ≡ sequential, byte-identically) and fresh for
+/// every new owning pipeline (daily studies re-measure, §4).
+fn point_rng(world: &World, pipeline_id: u64, point_prefix: &str) -> Prng {
+    Prng::new(
+        world.seed
+            ^ crate::util::fnv1a(format!("energy|{pipeline_id}|{point_prefix}").as_bytes()),
+    )
+}
+
+/// One in-flight sweep point: the task plus its repository slot and
+/// noise stream.
+struct Flight {
+    repo_slot: usize,
+    task: ExecutionTask,
+    rng: Prng,
+}
+
+/// Advance one flight, routing it to its repository slot and private
+/// noise stream.
+fn poll_flight(
+    world: &mut World,
+    repos: &mut [BenchmarkRepo],
+    fl: &mut Flight,
+    completed: Option<u64>,
+) -> ExecPoll {
+    let slot = fl.repo_slot;
+    fl.task.poll(world, &mut repos[slot], Some(&mut fl.rng), completed)
+}
+
+/// Drive every flight concurrently: poll all to their first submission
+/// (so same-trigger points contend for nodes before any simulated time
+/// passes), then repeatedly complete the globally earliest batch event
+/// across all machines and resume whichever point was waiting on it —
+/// `run_campaign_concurrent`-style dispatch at sweep granularity.
+fn drive_concurrent(world: &mut World, repos: &mut [BenchmarkRepo], flights: &mut [Flight]) {
+    // (machine, jobid) → flight index; jobids are only unique per machine
+    let mut pending: std::collections::BTreeMap<(String, u64), usize> =
+        std::collections::BTreeMap::new();
+    for (i, fl) in flights.iter_mut().enumerate() {
+        match poll_flight(world, repos, fl, None) {
+            ExecPoll::Waiting { machine, jobid } => {
+                pending.insert((machine, jobid), i);
+            }
+            ExecPoll::Done => {}
+        }
+    }
+    while !pending.is_empty() {
+        let next = world
+            .batch
+            .iter()
+            .filter_map(|(name, bs)| bs.peek_next_event().map(|t| (t, name.clone())))
+            .min();
+        let Some((_, machine)) = next else {
+            // no running job anywhere, yet points are still waiting: the
+            // awaited jobs can never complete — fail loudly, don't spin
+            for &i in pending.values() {
+                flights[i].task.abort("energy sweep stalled: job never completes");
+            }
+            break;
+        };
+        let completed = world
+            .batch
+            .get_mut(&machine)
+            .and_then(|b| b.advance_next_event());
+        if let Some(jobid) = completed {
+            // a foreign pipeline's job may complete first; ignore it —
+            // its owner re-checks terminal states (like the §9 gate)
+            if let Some(i) = pending.remove(&(machine.clone(), jobid)) {
+                match poll_flight(world, repos, &mut flights[i], Some(jobid)) {
+                    ExecPoll::Waiting { machine, jobid } => {
+                        pending.insert((machine, jobid), i);
+                    }
+                    ExecPoll::Done => {}
+                }
+            }
+        }
+    }
+}
+
+/// Legacy dispatch: each point drains its machine before the next
+/// starts (the pre-§11 `run_energy_study` behaviour, kept so the
+/// concurrent-vs-sequential equivalence stays testable).
+fn drive_sequential(world: &mut World, repos: &mut [BenchmarkRepo], flights: &mut [Flight]) {
+    for fl in flights.iter_mut() {
+        let mut completed = None;
+        loop {
+            match poll_flight(world, repos, fl, completed.take()) {
+                ExecPoll::Done => break,
+                ExecPoll::Waiting { machine, jobid } => {
+                    if let Some(bs) = world.batch.get_mut(&machine) {
+                        bs.run_until_idle();
+                    }
+                    completed = Some(jobid);
+                }
+            }
+        }
+    }
+}
+
+/// Aggregate view of one completed sweep (what the campaign tables and
+/// `energy.json` sidecar are built from).
+#[derive(Debug, Clone)]
+pub struct SweepSummary {
+    pub prefix: String,
+    pub machine: String,
+    pub points: usize,
+    pub sweet_spot_mhz: f64,
+    pub edp_spot_mhz: f64,
+    pub energy_nominal_j: f64,
+    pub energy_spot_j: f64,
+    /// Signed (negative = no interior saving; stay at nominal).
+    pub saving_vs_nominal: f64,
+}
+
+/// Build the analysis job over everything recorded under the sweep's
+/// per-frequency prefixes: `energy.csv` + `energy.svg` artifacts, the
+/// `energy.json` sidecar, and the honest sweet-spot log line.
+fn analysis_job(
+    world: &mut World,
+    repo: &BenchmarkRepo,
+    component: &str,
+    base: &ExecutionParams,
+    pipeline_id: u64,
+    frequencies: &[f64],
+    metric: &str,
+) -> (CiJob, Option<SweepSummary>) {
+    let mut job = CiJob::new(
+        world.ids.job_id(),
+        &format!("{}.energy-analysis", base.prefix),
+    );
+    job.state = CiJobState::Running;
+    let (set, _) = ReportSet::load(&repo.store, "exacb.data", &format!("{}.f", base.prefix));
+    let Some(sweep) = EnergySweep::from_set(&set, &base.prefix) else {
+        job.log_line("not enough energy points for a sweep");
+        job.state = CiJobState::Failed;
+        return (job, None);
+    };
+    let mut csv = Table::new(&["freq_mhz", "energy_j", "runtime_s", "edp"]);
+    let mut pts = Json::arr();
+    for ((f, e), (_, t)) in sweep.points.iter().zip(&sweep.runtimes) {
+        csv.push_row(vec![
+            format!("{f:.0}"),
+            format!("{e:.1}"),
+            format!("{t:.3}"),
+            format!("{:.1}", e * t),
+        ]);
+        pts.push(
+            Json::obj()
+                .set("freq_mhz", *f)
+                .set("energy_j", *e)
+                .set("runtime_s", *t)
+                .set("edp", e * t),
+        );
+    }
+    job.add_artifact("energy.csv", &csv.to_csv());
+    job.add_artifact(
+        "energy.svg",
+        &energy_sweep_plot(std::slice::from_ref(&sweep)).render_svg(),
+    );
+    let mut freq_arr = Json::arr();
+    for f in frequencies {
+        freq_arr.push(*f);
+    }
+    let nominal_mhz = sweep.points.last().map(|(f, _)| *f).unwrap_or(0.0);
+    let summary = SweepSummary {
+        prefix: base.prefix.clone(),
+        machine: base.machine.clone(),
+        points: sweep.points.len(),
+        sweet_spot_mhz: sweep.sweet_spot_mhz,
+        edp_spot_mhz: sweep.edp_spot_mhz,
+        energy_nominal_j: sweep.energy_at_nominal_j(),
+        energy_spot_j: sweep.energy_at_spot_j(),
+        saving_vs_nominal: sweep.saving_vs_nominal,
+    };
+    let doc = Json::obj()
+        .set("component", component)
+        .set("prefix", base.prefix.as_str())
+        .set("machine", base.machine.as_str())
+        .set("pipeline_id", pipeline_id)
+        .set("commit", repo.commit.as_str())
+        .set("metric", metric)
+        .set("frequencies", freq_arr)
+        .set("points", pts)
+        .set("sweet_spot_mhz", sweep.sweet_spot_mhz)
+        .set("edp_sweet_spot_mhz", sweep.edp_spot_mhz)
+        .set("nominal_mhz", nominal_mhz)
+        .set("energy_nominal_j", summary.energy_nominal_j)
+        .set("energy_sweet_spot_j", summary.energy_spot_j)
+        .set("saving_vs_nominal", sweep.saving_vs_nominal)
+        .set(
+            "verdict",
+            if sweep.saving_vs_nominal > 0.0 {
+                "saving"
+            } else {
+                "no-saving"
+            },
+        );
+    job.add_artifact("energy.json", &doc.pretty());
+    job.output = Json::obj()
+        .set("sweet_spot_mhz", sweep.sweet_spot_mhz)
+        .set("edp_sweet_spot_mhz", sweep.edp_spot_mhz)
+        .set("saving_vs_nominal", sweep.saving_vs_nominal);
+    job.log_line(format!(
+        "sweet spot at {:.0} MHz ({}), EDP optimum at {:.0} MHz",
+        sweep.sweet_spot_mhz,
+        sweep.saving_label(),
+        sweep.edp_spot_mhz
+    ));
+    job.state = CiJobState::Success;
+    (job, Some(summary))
+}
+
+/// Run one application's frequency sweep for one pipeline. Returns the
+/// per-point execution CI jobs (in frequency order) followed by the
+/// analysis job. `component` names the invoking catalog entry in
+/// validation jobs and the sidecar; `concurrent_override` forces a
+/// dispatch mode regardless of the `concurrent` input (the legacy
+/// `jureap/energy@v3` wrapper pins sequential).
+pub(crate) fn run_sweep(
+    world: &mut World,
+    repo: &mut BenchmarkRepo,
+    inputs: &Json,
+    pipeline_id: u64,
+    component: &str,
+    concurrent_override: Option<bool>,
+) -> Vec<CiJob> {
+    let validate_failure = |world: &mut World, err: &str| {
+        let mut job = CiJob::new(world.ids.job_id(), &format!("{component}.validate"));
+        job.log_line(format!("input validation failed: {err}"));
+        job.state = CiJobState::Failed;
+        vec![job]
+    };
+    let mut policy = SweepPolicy::from_inputs(inputs);
+    if let Some(c) = concurrent_override {
+        policy.concurrent = c;
+    }
+    let base = match ExecutionParams::from_inputs(inputs) {
+        Ok(p) => p,
+        Err(e) => return validate_failure(world, &e),
+    };
+    let freqs = match resolve_frequencies(world, &base.machine, &policy) {
+        Ok(f) => f,
+        Err(e) => return validate_failure(world, &e),
+    };
+
+    // Energy points are measurement runs: stash the cache so every point
+    // draws a fresh noise sample instead of replaying a stale report.
+    let stashed_cache = world.cache.take();
+    let mut flights: Vec<Flight> = freqs
+        .iter()
+        .map(|&f| {
+            let params = point_params(&base, f);
+            let rng = point_rng(world, pipeline_id, &params.prefix);
+            Flight {
+                repo_slot: 0,
+                task: ExecutionTask::new(params, pipeline_id),
+                rng,
+            }
+        })
+        .collect();
+    {
+        let repos = std::slice::from_mut(repo);
+        if policy.concurrent {
+            drive_concurrent(world, repos, &mut flights);
+        } else {
+            drive_sequential(world, repos, &mut flights);
+        }
+    }
+    world.cache = stashed_cache;
+
+    let mut jobs: Vec<CiJob> = flights
+        .into_iter()
+        .flat_map(|fl| fl.task.into_result().0)
+        .collect();
+    let (job, _) =
+        analysis_job(world, repo, component, &base, pipeline_id, &freqs, &policy.metric);
+    jobs.push(job);
+    jobs
+}
+
+/// The `energy-sweep@v1` CI component (dispatched from the coordinator
+/// event loop like `regression-check@v1`): a concurrent frequency sweep
+/// through the jpwr launcher plus the sweet-spot analysis, honouring
+/// the `concurrent` input (default true).
+pub fn run_energy_sweep(
+    world: &mut World,
+    repo: &mut BenchmarkRepo,
+    inputs: &Json,
+    pipeline_id: u64,
+) -> Vec<CiJob> {
+    run_sweep(world, repo, inputs, pipeline_id, "energy-sweep@v1", None)
+}
+
+/// One application's slot in a campaign outcome.
+#[derive(Debug, Clone)]
+pub struct AppSweep {
+    pub app: String,
+    pub machine: String,
+    pub pipeline_id: u64,
+    /// Every stage of the sweep pipeline succeeded.
+    pub ok: bool,
+    /// `None` when the analysis could not form a sweep.
+    pub summary: Option<SweepSummary>,
+}
+
+/// What a collection-wide energy campaign produced.
+#[derive(Debug, Clone, Default)]
+pub struct EnergyCampaignOutcome {
+    pub swept: Vec<AppSweep>,
+    /// Applications skipped by the reproducibility-only eligibility
+    /// rule, with the rung they actually hold.
+    pub excluded: Vec<(String, Maturity)>,
+    pub log: Vec<String>,
+}
+
+impl EnergyCampaignOutcome {
+    /// Per-app sweet spots: the `exacb energy` headline table.
+    pub fn sweet_spot_table(&self) -> Table {
+        let mut t = Table::new(&[
+            "app",
+            "machine",
+            "points",
+            "sweet_spot_mhz",
+            "edp_spot_mhz",
+            "saving",
+        ]);
+        if self.swept.is_empty() {
+            t.push_placeholder("(no eligible applications swept)");
+            return t;
+        }
+        for s in &self.swept {
+            match &s.summary {
+                Some(sm) => t.push_row(vec![
+                    s.app.clone(),
+                    s.machine.clone(),
+                    sm.points.to_string(),
+                    format!("{:.0}", sm.sweet_spot_mhz),
+                    format!("{:.0}", sm.edp_spot_mhz),
+                    format!("{:+.1}%", sm.saving_vs_nominal * 100.0),
+                ]),
+                None => t.push_row(vec![
+                    s.app.clone(),
+                    s.machine.clone(),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                    "(no sweep)".into(),
+                ]),
+            }
+        }
+        t
+    }
+
+    /// Projected collection-wide savings: per-app energy at nominal vs
+    /// at the sweet spot, with a TOTAL row (apps whose sweep found no
+    /// interior saving project 0 — running them slower would *cost*
+    /// energy, which the signed per-app column states honestly).
+    pub fn savings_table(&self) -> Table {
+        let mut t = Table::new(&[
+            "app",
+            "energy_nominal_j",
+            "energy_spot_j",
+            "saving",
+            "projected_j",
+        ]);
+        if self.swept.is_empty() {
+            t.push_placeholder("(no eligible applications swept)");
+            return t;
+        }
+        let (mut tot_nom, mut tot_proj) = (0.0f64, 0.0f64);
+        for s in self.swept.iter() {
+            let Some(sm) = &s.summary else { continue };
+            let projected = (sm.energy_nominal_j - sm.energy_spot_j).max(0.0);
+            tot_nom += sm.energy_nominal_j;
+            tot_proj += projected;
+            t.push_row(vec![
+                s.app.clone(),
+                format!("{:.0}", sm.energy_nominal_j),
+                format!("{:.0}", sm.energy_spot_j),
+                format!("{:+.1}%", sm.saving_vs_nominal * 100.0),
+                format!("{projected:.0}"),
+            ]);
+        }
+        t.push_row(vec![
+            "TOTAL".into(),
+            format!("{tot_nom:.0}"),
+            format!("{:.0}", tot_nom - tot_proj),
+            format!(
+                "{:+.1}%",
+                if tot_nom > 0.0 { 100.0 * tot_proj / tot_nom } else { 0.0 }
+            ),
+            format!("{tot_proj:.0}"),
+        ]);
+        t
+    }
+
+    /// Projected collection saving as a fraction of nominal energy.
+    pub fn projected_saving_frac(&self) -> f64 {
+        let (mut nom, mut proj) = (0.0f64, 0.0f64);
+        for s in &self.swept {
+            if let Some(sm) = &s.summary {
+                nom += sm.energy_nominal_j;
+                proj += (sm.energy_nominal_j - sm.energy_spot_j).max(0.0);
+            }
+        }
+        if nom > 0.0 {
+            proj / nom
+        } else {
+            0.0
+        }
+    }
+
+    /// Applications whose sweep found a positive sweet-spot saving.
+    pub fn apps_with_saving(&self) -> usize {
+        self.swept
+            .iter()
+            .filter(|s| {
+                s.summary
+                    .as_ref()
+                    .map(|sm| sm.saving_vs_nominal > 0.0)
+                    .unwrap_or(false)
+            })
+            .count()
+    }
+}
+
+/// Run a collection-wide energy campaign: select applications by the
+/// maturity subsystem's reproducibility-only energy eligibility, sweep
+/// each on its target machine (**every point of every application** on
+/// the shared timeline when `concurrent`), and aggregate sweet spots,
+/// EDP optima, and the projected savings table. Each application's
+/// sweep lands in `world.pipelines` as its own pipeline record with the
+/// `energy.json` sidecar on the analysis job.
+pub fn run_energy_campaign(
+    world: &mut World,
+    sc: &OnboardingScenario,
+    points: usize,
+    concurrent: bool,
+) -> EnergyCampaignOutcome {
+    let mut out = EnergyCampaignOutcome::default();
+    let policy = SweepPolicy {
+        frequencies: Vec::new(),
+        points,
+        metric: "energy_j".to_string(),
+        concurrent,
+    };
+    // ---- eligibility: the maturity subsystem's reproducibility-only
+    // rule (§10), consumed rather than re-derived ----------------------
+    let eligible_names = crate::maturity::energy_eligible(sc, world);
+    out.excluded = crate::maturity::energy_excluded(sc, world);
+    for (name, level) in &out.excluded {
+        out.log.push(format!(
+            "excluded {name}: holds {level}, energy studies need reproducibility"
+        ));
+    }
+    let mut eligible: Vec<usize> = Vec::new();
+    for (i, oa) in sc.apps.iter().enumerate() {
+        if eligible_names.iter().any(|n| n == &oa.app.name) {
+            eligible.push(i);
+        } else if world.repo(&oa.app.name).is_none() {
+            out.log.push(format!("excluded {}: not onboarded", oa.app.name));
+        }
+    }
+    out.log.push(format!(
+        "{} of {} application(s) eligible ({} dispatch)",
+        eligible.len(),
+        sc.apps.len(),
+        if concurrent { "concurrent" } else { "sequential" }
+    ));
+
+    // ---- check out every eligible repository, build all points -------
+    let stashed_cache = world.cache.take();
+    let mut repos: Vec<BenchmarkRepo> = Vec::new();
+    // (scenario index, pipeline id, base params, frequencies) per slot
+    let mut metas: Vec<(usize, u64, ExecutionParams, Vec<f64>)> = Vec::new();
+    let mut flights: Vec<Flight> = Vec::new();
+    for &i in &eligible {
+        let name = sc.apps[i].app.name.clone();
+        let machine = sc.machine_for(i).to_string();
+        let freqs = match resolve_frequencies(world, &machine, &policy) {
+            Ok(f) => f,
+            Err(e) => {
+                out.log.push(format!("skipped {name}: {e}"));
+                continue;
+            }
+        };
+        let Some(repo) = world.repos.remove(&name) else {
+            continue;
+        };
+        let pipeline_id = world.ids.pipeline_id();
+        let base = ExecutionParams {
+            prefix: format!("{machine}.{name}"),
+            machine,
+            queue: sc.queue.clone(),
+            project: "cexalab".to_string(),
+            budget: "exalab".to_string(),
+            jube_file: "benchmark/jube/app.yml".to_string(),
+            variant: String::new(),
+            usecase: String::new(),
+            extra_tags: Vec::new(),
+            stage: "2026".to_string(),
+            launcher: Launcher::Jpwr,
+            record: true,
+            freq_mhz: None,
+            nodes_override: 0,
+            in_command: None,
+        };
+        let slot = repos.len();
+        repos.push(repo);
+        for &f in &freqs {
+            let params = point_params(&base, f);
+            let rng = point_rng(world, pipeline_id, &params.prefix);
+            flights.push(Flight {
+                repo_slot: slot,
+                task: ExecutionTask::new(params, pipeline_id),
+                rng,
+            });
+        }
+        metas.push((i, pipeline_id, base, freqs));
+    }
+
+    // ---- the shared timeline ----------------------------------------
+    if concurrent {
+        drive_concurrent(world, &mut repos, &mut flights);
+    } else {
+        drive_sequential(world, &mut repos, &mut flights);
+    }
+    world.cache = stashed_cache;
+
+    // ---- per-app analysis + pipeline records ------------------------
+    let mut jobs_per_slot: Vec<Vec<CiJob>> = repos.iter().map(|_| Vec::new()).collect();
+    for fl in flights {
+        jobs_per_slot[fl.repo_slot].extend(fl.task.into_result().0);
+    }
+    for (slot, (i, pipeline_id, base, freqs)) in metas.into_iter().enumerate() {
+        let repo = &repos[slot];
+        let (job, summary) = analysis_job(
+            world,
+            repo,
+            "energy-sweep@v1",
+            &base,
+            pipeline_id,
+            &freqs,
+            &policy.metric,
+        );
+        let mut jobs = std::mem::take(&mut jobs_per_slot[slot]);
+        jobs.push(job);
+        let pipeline = Pipeline {
+            id: pipeline_id,
+            repo: sc.apps[i].app.name.clone(),
+            trigger: Trigger::Scheduled,
+            created: world.now(),
+            jobs,
+        };
+        let ok = pipeline.succeeded();
+        world.pipelines.push(pipeline);
+        out.log.push(match &summary {
+            Some(sm) => format!(
+                "{}: sweet spot {:.0} MHz ({:+.1}% vs nominal), EDP optimum {:.0} MHz",
+                sc.apps[i].app.name,
+                sm.sweet_spot_mhz,
+                sm.saving_vs_nominal * 100.0,
+                sm.edp_spot_mhz
+            ),
+            None => format!("{}: sweep produced no analysable points", sc.apps[i].app.name),
+        });
+        out.swept.push(AppSweep {
+            app: sc.apps[i].app.name.clone(),
+            machine: sc.machine_for(i).to_string(),
+            pipeline_id,
+            ok,
+            summary,
+        });
+    }
+    for repo in repos {
+        world.repos.insert(repo.name.clone(), repo);
+    }
+    out
+}
+
+/// The seeded scenario behind `exacb energy` and the perf bench: the
+/// generated onboarding portfolio with a deterministic eligible third —
+/// every third application is pinned to the verified-reproducibility
+/// track (declared reproducibility, instrumented + replay-audited from
+/// day 0, never broken), so after `days ≥ 4` of onboarding the campaign
+/// is guaranteed a known eligible set while the remaining applications
+/// keep their generated levels and exercise the exclusion path.
+pub fn energy_scenario(n: usize, days: i64, seed: u64) -> OnboardingScenario {
+    let mut sc = OnboardingScenario::generate(n, days, seed);
+    for (i, oa) in sc.apps.iter_mut().enumerate() {
+        if i % 3 == 0 {
+            oa.declared = Maturity::Reproducibility;
+            oa.instrument_from = Some(0);
+            oa.verify_from = Some(0);
+            oa.break_day = None;
+            oa.fix_day = None;
+        }
+    }
+    sc
+}
+
+/// Onboard the scenario's repositories at their *declared* levels
+/// without running a campaign — for benches and tests that want a
+/// known eligible set without simulating the onboarding days. (The CLI
+/// path earns levels the honest way via `maturity::run_onboarding`.)
+pub fn onboard_declared(world: &mut World, sc: &OnboardingScenario) {
+    for oa in &sc.apps {
+        world.add_repo(
+            BenchmarkRepo::new(&oa.app.name)
+                .with_file("benchmark/jube/app.yml", &oa.jube_file(0))
+                .with_maturity(oa.declared),
+        );
+    }
+}
+
+/// Base prefix of a per-frequency sweep segment: `jedi.app.f800` →
+/// `jedi.app`; anything else → `None`.
+fn sweep_base(segment: &str) -> Option<&str> {
+    let i = segment.rfind(".f")?;
+    let digits = &segment[i + 2..];
+    if !digits.is_empty() && digits.bytes().all(|b| b.is_ascii_digit()) {
+        Some(&segment[..i])
+    } else {
+        None
+    }
+}
+
+/// A-posteriori sweet-spot table over every recorded sweep in the world
+/// (the `exacb energy` view; DESIGN.md §11). Reads only the
+/// `exacb.data` branches — never executor state.
+pub fn energy_table(world: &World) -> Table {
+    let mut t = Table::new(&[
+        "benchmark",
+        "system",
+        "points",
+        "sweet_spot_mhz",
+        "edp_spot_mhz",
+        "saving",
+    ]);
+    let mut rows: Vec<Vec<String>> = Vec::new();
+    for repo in world.repos.values() {
+        let mut bases: Vec<String> = repo
+            .store
+            .list("exacb.data", "")
+            .into_iter()
+            .filter_map(|p| {
+                sweep_base(p.split('/').next().unwrap_or("")).map(str::to_string)
+            })
+            .collect();
+        bases.sort();
+        bases.dedup();
+        for base in bases {
+            let (set, _) = ReportSet::load(&repo.store, "exacb.data", &format!("{base}.f"));
+            if let Some(s) = EnergySweep::from_set(&set, &base) {
+                let system = set
+                    .reports
+                    .first()
+                    .map(|(_, r)| r.experiment.system.clone())
+                    .unwrap_or_default();
+                rows.push(vec![
+                    base,
+                    system,
+                    s.points.len().to_string(),
+                    format!("{:.0}", s.sweet_spot_mhz),
+                    format!("{:.0}", s.edp_spot_mhz),
+                    format!("{:+.1}%", s.saving_vs_nominal * 100.0),
+                ]);
+            }
+        }
+    }
+    rows.sort();
+    rows.dedup();
+    if rows.is_empty() {
+        t.push_placeholder("(no energy sweeps recorded)");
+        return t;
+    }
+    for r in rows {
+        t.push_row(r);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn policy_resolves_defaults_and_bounds() {
+        let p = SweepPolicy::from_inputs(&Json::obj());
+        assert!(p.frequencies.is_empty());
+        assert_eq!(p.points, 8);
+        assert_eq!(p.metric, "energy_j");
+        assert!(p.concurrent);
+
+        let p = SweepPolicy::from_inputs(
+            &Json::obj()
+                .set("points", 1u64)
+                .set("metric", "edp")
+                .set("concurrent", "false"),
+        );
+        assert_eq!(p.points, 2); // clamped up
+        assert_eq!(p.metric, "edp");
+        assert!(!p.concurrent);
+    }
+
+    #[test]
+    fn unknown_machine_is_a_loud_error() {
+        let world = World::new(1);
+        let err = resolve_frequencies(&world, "ghost", &SweepPolicy::from_inputs(&Json::obj()))
+            .unwrap_err();
+        assert!(err.contains("unknown machine 'ghost'"), "{err}");
+    }
+
+    #[test]
+    fn default_grid_spans_the_settable_range() {
+        let world = World::new(1);
+        let f =
+            resolve_frequencies(&world, "jedi", &SweepPolicy::from_inputs(&Json::obj())).unwrap();
+        let m = world.cluster.machine("jedi").unwrap();
+        assert_eq!(f.len(), 8);
+        assert!((f[0] - m.power.min_mhz).abs() < 1e-9);
+        assert!((f[7] - m.power.nominal_mhz).abs() < 1e-9);
+        // explicit lists are sorted, deduped, and filtered
+        let p = SweepPolicy {
+            frequencies: vec![900.0, 600.0, 900.2, -5.0, f64::NAN],
+            ..SweepPolicy::from_inputs(&Json::obj())
+        };
+        let f = resolve_frequencies(&world, "jedi", &p).unwrap();
+        assert_eq!(f, vec![600.0, 900.0]);
+    }
+
+    #[test]
+    fn sweep_base_parses_frequency_suffixes() {
+        assert_eq!(sweep_base("jedi.app.f800"), Some("jedi.app"));
+        assert_eq!(sweep_base("jedi.app.f1980"), Some("jedi.app"));
+        assert_eq!(sweep_base("jedi.app"), None);
+        assert_eq!(sweep_base("jedi.app.fast"), None);
+        assert_eq!(sweep_base("jedi.app.f"), None);
+    }
+
+    #[test]
+    fn energy_table_labels_empty_world() {
+        let world = World::new(1);
+        let t = energy_table(&world);
+        assert_eq!(t.rows.len(), 1);
+        assert!(t.rows[0][0].contains("no energy sweeps"), "{:?}", t.rows);
+    }
+
+    #[test]
+    fn energy_scenario_pins_a_deterministic_eligible_third() {
+        let sc = energy_scenario(9, 6, 7);
+        for (i, oa) in sc.apps.iter().enumerate() {
+            if i % 3 == 0 {
+                assert_eq!(oa.declared, Maturity::Reproducibility, "app {i}");
+                assert_eq!(oa.instrument_from, Some(0));
+                assert_eq!(oa.verify_from, Some(0));
+                assert_eq!(oa.break_day, None);
+            }
+        }
+        // onboarding at declared levels makes exactly those eligible at
+        // day zero (plus any generated reproducibility apps)
+        let mut world = World::new(7);
+        onboard_declared(&mut world, &sc);
+        let eligible: Vec<&str> = sc
+            .apps
+            .iter()
+            .filter(|oa| {
+                world
+                    .repo(&oa.app.name)
+                    .map(|r| r.maturity == Maturity::Reproducibility)
+                    .unwrap_or(false)
+            })
+            .map(|oa| oa.app.name.as_str())
+            .collect();
+        assert!(eligible.len() >= 3, "{eligible:?}");
+    }
+}

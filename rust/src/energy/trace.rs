@@ -33,10 +33,17 @@ impl PowerTrace {
 }
 
 pub(crate) fn trapezoid(samples: &[f64], dt: f64, start: usize, end: usize) -> f64 {
-    if samples.is_empty() || end <= start || end >= samples.len() + 1 {
+    if samples.is_empty() {
         return 0.0;
     }
+    // clamp uniformly: any out-of-range `end` means "to the last sample".
+    // The old guard returned 0.0 for `end >= len + 1` while clamping
+    // `end == len`, so a caller asking for the tail energy past the end
+    // silently lost the whole integral instead of the overhang.
     let end = end.min(samples.len() - 1);
+    if end <= start {
+        return 0.0;
+    }
     let mut e = 0.0;
     for i in start..end {
         e += 0.5 * (samples[i] + samples[i + 1]) * dt;
@@ -145,6 +152,26 @@ mod tests {
         assert!((trapezoid(&samples, 1.0, 0, 10) - 1000.0).abs() < 1e-9);
         assert_eq!(trapezoid(&samples, 1.0, 5, 5), 0.0);
         assert_eq!(trapezoid(&[], 1.0, 0, 10), 0.0);
+    }
+
+    /// Regression: an `end` past the last sample clamps to it instead of
+    /// silently dropping the whole tail energy. `end == len` already
+    /// clamped; `end >= len + 1` used to return 0.0.
+    #[test]
+    fn trapezoid_clamps_out_of_range_end_uniformly() {
+        let samples = vec![100.0; 11];
+        let full = trapezoid(&samples, 1.0, 0, 10);
+        assert_eq!(trapezoid(&samples, 1.0, 0, 11), full);
+        assert_eq!(trapezoid(&samples, 1.0, 0, 12), full);
+        assert_eq!(trapezoid(&samples, 1.0, 0, usize::MAX), full);
+        // the same contract through the public tail-energy entry point
+        let t = mk_trace(60.0);
+        let n = t.samples.len();
+        let tail = t.energy_between_j(n / 2, n - 1);
+        assert!(tail > 0.0);
+        assert_eq!(t.energy_between_j(n / 2, n + 3), tail);
+        // a start past the end is still empty, never negative
+        assert_eq!(t.energy_between_j(n + 1, n + 5), 0.0);
     }
 
     #[test]

@@ -558,7 +558,10 @@ include:
         world.run_pipeline(name, Trigger::Manual).unwrap();
         let repo = world.repo(name).unwrap();
         let (set, _) = ReportSet::load(&repo.store, "exacb.data", "");
-        let sweep = EnergySweep::from_set(&set, name).expect("sweep has points");
+        // reports live under the execution prefix "jedi.{name}", which is
+        // what from_set filters on (DESIGN.md §11)
+        let sweep =
+            EnergySweep::from_set(&set, &format!("jedi.{name}")).expect("sweep has points");
         for &(f, e) in &sweep.points {
             table.push_row(vec![
                 name.to_string(),

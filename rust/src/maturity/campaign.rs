@@ -309,6 +309,20 @@ pub fn energy_eligible(sc: &OnboardingScenario, world: &World) -> Vec<String> {
         .collect()
 }
 
+/// The complement of [`energy_eligible`]: onboarded applications the
+/// reproducibility-only rule skips, with the rung each currently holds
+/// — so energy campaigns (DESIGN.md §11) can name every exclusion in
+/// their log instead of silently shrinking the study.
+pub fn energy_excluded(sc: &OnboardingScenario, world: &World) -> Vec<(String, Maturity)> {
+    sc.apps
+        .iter()
+        .filter_map(|oa| {
+            let level = world.repo(&oa.app.name)?.maturity;
+            (level != Maturity::Reproducibility).then(|| (oa.app.name.clone(), level))
+        })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

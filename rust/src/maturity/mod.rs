@@ -33,7 +33,7 @@ pub use assess::{
     assess_repo, assess_world, csv_honours_contract, Assessment, Evidence, MaturityState,
 };
 pub use campaign::{
-    domain_distribution, energy_eligible, promotion_timeline, run_onboarding,
+    domain_distribution, energy_eligible, energy_excluded, promotion_timeline, run_onboarding,
     MaturityRecord, OnboardingOutcome, Transition,
 };
 pub use criteria::{

@@ -207,6 +207,42 @@ mod tests {
         assert!(t.rows[0][0].contains("no recorded reports"), "{:?}", t.rows);
     }
 
+    /// §11 wiring: the jpwr launcher's `energy_j`/`edp` metrics land in
+    /// recorded reports like any other metric, so longitudinal tracking
+    /// — and therefore the regression gate — can run on them unchanged.
+    #[test]
+    fn track_table_tracks_energy_metrics() {
+        let mut world = World::new(11);
+        let jube = "name: eapp\nparametersets:\n  - name: run\n    parameters:\n      - name: nodes\n        value: 1\nsteps:\n  - name: execute\n    use: [run]\n    remote: true\n    do:\n      - simapp --name eapp --flops 100000 --membound 0.4 --steps 30\n";
+        let ci = "include:\n  - component: execution@v3\n    inputs:\n      prefix: \"jedi.eapp\"\n      machine: \"jedi\"\n      queue: \"all\"\n      project: \"cjsc\"\n      budget: \"zam\"\n      jube_file: \"b.yml\"\n      launcher: \"jpwr\"\n";
+        world.add_repo(
+            BenchmarkRepo::new("eapp")
+                .with_file("b.yml", jube)
+                .with_file(".gitlab-ci.yml", ci),
+        );
+        for d in 0..3 {
+            world.advance_to(SimTime::from_days(d).add_secs(3 * 3600));
+            world.run_pipeline("eapp", Trigger::Scheduled).unwrap();
+        }
+        for metric in ["energy_j", "edp"] {
+            let t = world.track_table(metric);
+            assert_eq!(t.rows.len(), 1, "{metric}: {:?}", t.rows);
+            assert_eq!(t.rows[0][0], "jedi.eapp");
+            assert_eq!(t.rows[0][3], metric);
+            assert_eq!(t.rows[0][4], "3", "{metric}: {:?}", t.rows);
+        }
+        // and through History directly: finite, positive series
+        let repo = world.repo("eapp").unwrap();
+        let (h, _) =
+            History::from_store(&repo.store, "exacb.data", "", &["energy_j", "edp"]);
+        assert_eq!(h.total_points(), 6);
+        for s in h.series() {
+            for p in &s.points {
+                assert!(p.value.is_finite() && p.value > 0.0, "{:?}", s.key);
+            }
+        }
+    }
+
     #[test]
     fn track_table_over_recorded_history() {
         let mut world = World::new(7);

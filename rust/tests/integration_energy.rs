@@ -1,0 +1,359 @@
+//! End-to-end tests for the energy subsystem (DESIGN.md §11): the
+//! `energy-sweep@v1` component on the shared timeline, eligibility
+//! filtering, the cache-stash contract, sidecar hygiene, and the
+//! energy-metric path into the regression gate.
+
+use exacb::ci::{CiJobState, Trigger};
+use exacb::coordinator::{BenchmarkRepo, World};
+use exacb::energy::study;
+use exacb::util::json::Json;
+use exacb::util::timeutil::SimTime;
+use exacb::workloads::onboarding::{OnboardingApp, OnboardingScenario};
+use exacb::workloads::portfolio::{Maturity, PortfolioApp};
+use exacb::workloads::scalable::AppModel;
+
+fn sweep_jube(name: &str, flops: u64) -> String {
+    format!(
+        "name: {name}\nparametersets:\n  - name: run\n    parameters:\n      - name: nodes\n        value: 1\nsteps:\n  - name: execute\n    use: [run]\n    remote: true\n    do:\n      - simapp --name {name} --flops {flops} --membound 0.5 --comm-mb 0 --steps 20\n"
+    )
+}
+
+fn sweep_repo(concurrent: bool) -> BenchmarkRepo {
+    let ci = format!(
+        "include:\n  - component: energy-sweep@v1\n    inputs:\n      prefix: \"jedi.eapp\"\n      machine: \"jedi\"\n      queue: \"all\"\n      project: \"cjsc\"\n      budget: \"zam\"\n      jube_file: \"b.yml\"\n      points: 6\n      concurrent: \"{concurrent}\"\n"
+    );
+    BenchmarkRepo::new("eapp")
+        .with_file("b.yml", &sweep_jube("eapp", 150_000))
+        .with_file(".gitlab-ci.yml", &ci)
+}
+
+fn run_sweep_pipeline(concurrent: bool) -> (World, String, String) {
+    let mut world = World::new(77);
+    world.add_repo(sweep_repo(concurrent));
+    let pid = world.run_pipeline("eapp", Trigger::Manual).unwrap();
+    let p = world.pipeline(pid).unwrap();
+    assert!(
+        p.succeeded(),
+        "jobs: {:?}",
+        p.jobs.iter().map(|j| (&j.name, j.state)).collect::<Vec<_>>()
+    );
+    let analysis = p
+        .jobs
+        .iter()
+        .find(|j| j.name.ends_with(".energy-analysis"))
+        .expect("analysis job");
+    let csv = analysis.artifact("energy.csv").unwrap().to_string();
+    let sidecar = analysis.artifact("energy.json").unwrap().to_string();
+    (world, csv, sidecar)
+}
+
+/// Drive one sweep through the public component entry point on a
+/// byte-identical repository, toggling only the dispatch mode.
+fn direct_sweep(concurrent: bool) -> (World, String, String) {
+    let mut world = World::new(77);
+    let mut repo = BenchmarkRepo::new("eapp").with_file("b.yml", &sweep_jube("eapp", 150_000));
+    let inputs = Json::obj()
+        .set("prefix", "jedi.eapp")
+        .set("machine", "jedi")
+        .set("queue", "all")
+        .set("project", "cjsc")
+        .set("budget", "zam")
+        .set("jube_file", "b.yml")
+        .set("points", 6u64)
+        .set("concurrent", Json::Bool(concurrent));
+    let jobs = study::run_energy_sweep(&mut world, &mut repo, &inputs, 1);
+    let analysis = jobs.last().unwrap();
+    assert_eq!(analysis.state, CiJobState::Success, "{:?}", analysis.log);
+    let csv = analysis.artifact("energy.csv").unwrap().to_string();
+    let sidecar = analysis.artifact("energy.json").unwrap().to_string();
+    (world, csv, sidecar)
+}
+
+/// The core §11 equivalence: interleaved dispatch changes *when* points
+/// run, never *what* they measure — byte-identical analysis artifacts —
+/// and the concurrent sweep finishes in strictly less simulated time.
+#[test]
+fn concurrent_sweep_matches_sequential_and_is_faster() {
+    let (con_world, con_csv, con_json) = direct_sweep(true);
+    let (seq_world, seq_csv, seq_json) = direct_sweep(false);
+    assert_eq!(con_csv, seq_csv, "energy.csv must be dispatch-independent");
+    assert_eq!(con_json, seq_json, "energy.json must be dispatch-independent");
+    assert!(
+        con_world.now() < seq_world.now(),
+        "concurrent {} vs sequential {} simulated s",
+        con_world.now().0,
+        seq_world.now().0
+    );
+    // all six points actually ran as batch jobs, in both modes
+    assert_eq!(con_world.batch.get("jedi").unwrap().records().len(), 6);
+    assert_eq!(seq_world.batch.get("jedi").unwrap().records().len(), 6);
+    // in concurrent mode every point submitted at the shared instant
+    let submits: Vec<i64> = con_world
+        .batch
+        .get("jedi")
+        .unwrap()
+        .records()
+        .iter()
+        .map(|r| r.submit_time.0)
+        .collect();
+    assert!(submits.windows(2).all(|w| w[0] == w[1]), "{submits:?}");
+}
+
+/// The sidecar is well-formed, NaN-free, and never leaks into
+/// report.json; `energy_j`/`edp` flow into the tracking history; the
+/// world-level sweet-spot table renders the recorded sweep.
+#[test]
+fn sweep_sidecar_and_tracking_wiring() {
+    let (world, csv, sidecar) = run_sweep_pipeline(true);
+    let doc = Json::parse(&sidecar).unwrap();
+    assert_eq!(doc.str_of("component"), Some("energy-sweep@v1"));
+    assert_eq!(doc.str_of("prefix"), Some("jedi.eapp"));
+    assert_eq!(doc.str_of("machine"), Some("jedi"));
+    assert_eq!(doc.str_of("metric"), Some("energy_j"));
+    assert_eq!(doc.get("points").and_then(Json::as_arr).unwrap().len(), 6);
+    for key in [
+        "sweet_spot_mhz",
+        "edp_sweet_spot_mhz",
+        "nominal_mhz",
+        "energy_nominal_j",
+        "energy_sweet_spot_j",
+        "saving_vs_nominal",
+    ] {
+        let v = doc.f64_of(key).unwrap_or(f64::NAN);
+        assert!(v.is_finite(), "{key} must be finite, got {v}");
+    }
+    assert!(!csv.contains("NaN"), "{csv}");
+    assert!(!sidecar.contains("NaN"), "{sidecar}");
+    // sidecar stays out of recorded history: no report.json carries it
+    let repo = world.repo("eapp").unwrap();
+    for (path, content) in repo.store.read_all("exacb.data", "") {
+        if path.ends_with("report.json") {
+            assert!(!content.contains("sweet_spot_mhz"), "{path} leaked analysis");
+        }
+    }
+    // recorded energy metrics are trackable series (→ regression gate)
+    let energy = world.track_table("energy_j");
+    assert_eq!(energy.rows.len(), 6, "one series per frequency: {:?}", energy.rows);
+    let edp = world.track_table("edp");
+    assert_eq!(edp.rows.len(), 6, "{:?}", edp.rows);
+    // the a-posteriori sweet-spot view
+    let t = world.energy_table();
+    assert_eq!(t.rows.len(), 1, "{:?}", t.rows);
+    assert_eq!(t.rows[0][0], "jedi.eapp");
+    assert_eq!(t.rows[0][1], "jedi");
+    assert_eq!(t.rows[0][2], "6");
+}
+
+fn tiny_app(name: &str, declared: Maturity) -> OnboardingApp {
+    OnboardingApp {
+        app: PortfolioApp {
+            name: name.to_string(),
+            domain: "materials".to_string(),
+            maturity: declared,
+            model: AppModel {
+                name: name.to_string(),
+                gflops_total: 60_000.0,
+                serial_frac: 0.01,
+                mem_bound: 0.5,
+                comm_mb: 0.0,
+                steps: 10,
+                weak: false,
+            },
+            failure_rate: 0.0,
+            nodes: 1,
+        },
+        declared,
+        instrument_from: None,
+        verify_from: None,
+        break_day: None,
+        fix_day: None,
+    }
+}
+
+fn tiny_scenario(apps: Vec<OnboardingApp>) -> OnboardingScenario {
+    OnboardingScenario {
+        apps,
+        days: 1,
+        machines: vec!["jedi".to_string()],
+        queue: "all".to_string(),
+        seed: 55,
+        verify_every: 4,
+        min_runs: 3,
+        min_instrumented: 3,
+        window_days: 6,
+    }
+}
+
+/// Eligibility: the campaign consumes the maturity subsystem's
+/// reproducibility-only rule — a non-reproducible application is
+/// excluded with its name and held rung in the log.
+#[test]
+fn campaign_excludes_non_reproducible_apps_by_name() {
+    let sc = tiny_scenario(vec![
+        tiny_app("golden", Maturity::Reproducibility),
+        tiny_app("novice", Maturity::Runnability),
+    ]);
+    let mut world = World::new(sc.seed);
+    study::onboard_declared(&mut world, &sc);
+    let out = study::run_energy_campaign(&mut world, &sc, 4, true);
+
+    let swept: Vec<&str> = out.swept.iter().map(|s| s.app.as_str()).collect();
+    assert_eq!(swept, vec!["golden"]);
+    assert_eq!(
+        out.excluded,
+        vec![("novice".to_string(), Maturity::Runnability)]
+    );
+    assert!(
+        out.log.iter().any(|l| l.contains("novice") && l.contains("reproducibility")),
+        "exclusion must name the app: {:?}",
+        out.log
+    );
+    // the sweep landed as a pipeline record with the sidecar attached
+    let sweep = &out.swept[0];
+    assert!(sweep.ok);
+    let p = world.pipeline(sweep.pipeline_id).unwrap();
+    let analysis = p
+        .jobs
+        .iter()
+        .find(|j| j.name.ends_with(".energy-analysis"))
+        .unwrap();
+    assert_eq!(analysis.state, CiJobState::Success, "{:?}", analysis.log);
+    assert!(analysis.artifact("energy.json").is_some());
+    // both repositories were restored to the world
+    assert!(world.repo("golden").is_some());
+    assert!(world.repo("novice").is_some());
+    // the excluded app recorded nothing
+    assert!(world
+        .repo("novice")
+        .unwrap()
+        .store
+        .list("exacb.data", "")
+        .is_empty());
+}
+
+/// The cache-stash contract: energy points are measurement runs, so a
+/// warm re-run of the campaign schedules fresh batch jobs instead of
+/// replaying — and the world's cache comes back untouched.
+#[test]
+fn warm_energy_campaign_schedules_fresh_measurements() {
+    let sc = tiny_scenario(vec![tiny_app("golden", Maturity::Reproducibility)]);
+    let mut world = World::new(sc.seed);
+    world.enable_cache();
+    study::onboard_declared(&mut world, &sc);
+
+    let first = study::run_energy_campaign(&mut world, &sc, 4, true);
+    assert_eq!(first.swept.len(), 1);
+    let jobs_cold = world.batch.get("jedi").unwrap().records().len();
+    assert_eq!(jobs_cold, 4, "one batch job per frequency point");
+
+    let second = study::run_energy_campaign(&mut world, &sc, 4, true);
+    assert_eq!(second.swept.len(), 1);
+    assert_eq!(
+        world.batch.get("jedi").unwrap().records().len(),
+        2 * jobs_cold,
+        "a warm energy campaign must re-measure, never replay"
+    );
+    // the stash restored the cache and kept it out of the loop entirely
+    assert!(world.cache.is_some(), "stashed cache must be restored");
+    assert_eq!(world.cache_stats(), exacb::store::CacheStats::default());
+}
+
+/// Input-schema validation through the real pipeline path: unknown
+/// inputs and unknown machines fail the validate job loudly.
+#[test]
+fn energy_sweep_schema_validation_is_loud() {
+    // unknown input
+    let mut world = World::new(3);
+    world.add_repo(
+        BenchmarkRepo::new("typo")
+            .with_file("b.yml", &sweep_jube("typo", 50_000))
+            .with_file(
+                ".gitlab-ci.yml",
+                "include:\n  - component: energy-sweep@v1\n    inputs:\n      prefix: \"jedi.typo\"\n      machine: \"jedi\"\n      jube_file: \"b.yml\"\n      frequencys: []\n",
+            ),
+    );
+    let pid = world.run_pipeline("typo", Trigger::Manual).unwrap();
+    let p = world.pipeline(pid).unwrap();
+    assert!(!p.succeeded());
+    assert!(
+        p.jobs[0].log[0].contains("unknown input 'frequencys'"),
+        "{:?}",
+        p.jobs[0].log
+    );
+
+    // unknown machine: loud name, no execution jobs, no misleading
+    // "not enough energy points"
+    let mut world = World::new(3);
+    world.add_repo(
+        BenchmarkRepo::new("ghosted")
+            .with_file("b.yml", &sweep_jube("ghosted", 50_000))
+            .with_file(
+                ".gitlab-ci.yml",
+                "include:\n  - component: energy-sweep@v1\n    inputs:\n      prefix: \"ghost.app\"\n      machine: \"ghost\"\n      jube_file: \"b.yml\"\n",
+            ),
+    );
+    let pid = world.run_pipeline("ghosted", Trigger::Manual).unwrap();
+    let p = world.pipeline(pid).unwrap().clone();
+    assert!(!p.succeeded());
+    assert_eq!(p.jobs.len(), 1);
+    assert!(
+        p.jobs[0].log.iter().any(|l| l.contains("unknown machine 'ghost'")),
+        "{:?}",
+        p.jobs[0].log
+    );
+    assert!(world.batch.values().all(|b| b.records().is_empty()));
+}
+
+/// The energy metrics close the loop with the tracking gate: a planted
+/// source change that inflates energy fails `regression-check@v1` on
+/// `energy_j` on the inject day, and not before.
+#[test]
+fn regression_gate_fails_on_planted_energy_regression() {
+    const INJECT: i64 = 5;
+    let jube = |flops: u64| sweep_jube("egate", flops);
+    let ci = "include:\n  - component: execution@v3\n    inputs:\n      prefix: \"jedi.egate\"\n      machine: \"jedi\"\n      queue: \"all\"\n      project: \"cjsc\"\n      budget: \"zam\"\n      jube_file: \"b.yml\"\n      launcher: \"jpwr\"\n  - component: regression-check@v1\n    inputs:\n      prefix: \"jedi.egate\"\n      machine: \"jedi\"\n      queue: \"all\"\n      project: \"cjsc\"\n      budget: \"zam\"\n      jube_file: \"b.yml\"\n      launcher: \"jpwr\"\n      metric: \"energy_j\"\n      threshold_pct: 10\n";
+    let mut world = World::new(20260617);
+    world.add_repo(
+        BenchmarkRepo::new("egate")
+            .with_file("b.yml", &jube(100_000))
+            .with_file(".gitlab-ci.yml", ci),
+    );
+    for day in 0..=INJECT {
+        world.advance_to(SimTime::from_days(day).add_secs(3 * 3600));
+        if day == INJECT {
+            // a 40% larger problem is a merge that costs 40% more energy
+            let repo = world.repos.get_mut("egate").unwrap();
+            for (path, content) in repo.files.iter_mut() {
+                if path == "b.yml" {
+                    *content = jube(140_000);
+                }
+            }
+            repo.commit = exacb::util::short_hash(b"energy-regression-day");
+        }
+        let pid = world.run_pipeline("egate", Trigger::Scheduled).unwrap();
+        let p = world.pipeline(pid).unwrap();
+        let gate = p
+            .jobs
+            .iter()
+            .find(|j| j.name.ends_with(".regression-check"))
+            .expect("gate ran");
+        let doc = Json::parse(gate.artifact("regressions.json").unwrap()).unwrap();
+        assert_eq!(doc.str_of("metric"), Some("energy_j"));
+        if day < INJECT {
+            assert!(
+                p.succeeded(),
+                "day {day} must stay green: verdict {:?}, log {:?}",
+                doc.str_of("verdict"),
+                gate.log
+            );
+        } else {
+            assert!(!p.succeeded(), "inject day must fail the pipeline");
+            assert_eq!(
+                doc.str_of("verdict"),
+                Some("regression"),
+                "log: {:?}",
+                gate.log
+            );
+        }
+    }
+}
