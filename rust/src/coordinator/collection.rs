@@ -7,7 +7,7 @@
 //! highlights: uniform protocol capture regardless of maturity, success
 //! tracking, maturity histograms, per-domain aggregation.
 
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
 
 use crate::analysis::ReportSet;
 use crate::ci::Trigger;
@@ -313,12 +313,13 @@ pub fn run_campaign_queued(
 ) -> CollectionSummary {
     let assignments = assign(apps, machines);
     let queue = WorkQueue::build(&assignments, days, world.seed);
+    let by_name: HashMap<&str, &PortfolioApp> =
+        apps.iter().map(|a| (a.name.as_str(), a)).collect();
     let mut pipelines_run = 0;
     let mut pipelines_succeeded = 0;
     for item in &queue.items {
-        let app = apps
-            .iter()
-            .find(|a| a.name == item.app)
+        let app = by_name
+            .get(item.app.as_str())
             .expect("queue items come from the app list");
         pipelines_run += 1;
         if dispatch_item(world, app, item.day) {
@@ -348,18 +349,40 @@ pub fn run_campaign_concurrent(
     machines: &[&str],
     days: i64,
 ) -> CollectionSummary {
+    run_campaign_concurrent_with(world, apps, machines, days, super::event_loop::drive)
+}
+
+/// [`run_campaign_concurrent`] with a pluggable event loop, so the
+/// differential dispatch tests can replay the *same* campaign through
+/// [`super::event_loop::drive`] and [`super::event_loop::drive_reference`]
+/// and require byte-identical worlds.
+pub fn run_campaign_concurrent_with(
+    world: &mut World,
+    apps: &[PortfolioApp],
+    machines: &[&str],
+    days: i64,
+    drive: fn(&mut World, Vec<super::event_loop::PipelineTask>) -> Vec<u64>,
+) -> CollectionSummary {
     let assignments = assign(apps, machines);
     let queue = WorkQueue::build(&assignments, days, world.seed);
+    let by_name: HashMap<&str, &PortfolioApp> =
+        apps.iter().map(|a| (a.name.as_str(), a)).collect();
     let mut pipelines_run = 0;
     let mut pipelines_succeeded = 0;
+    let mut item_cursor = 0;
     for day in 0..days {
         world.advance_to(SimTime::from_days(day).add_secs(3 * 3600));
         let mut tasks = Vec::new();
         let mut patched: Vec<&PortfolioApp> = Vec::new();
-        for item in queue.items.iter().filter(|i| i.day == day) {
-            let app = apps
-                .iter()
-                .find(|a| a.name == item.app)
+        // queue items are built day by day, so each day's slice is
+        // contiguous — walk a cursor instead of re-filtering all items
+        let day_start = item_cursor;
+        while item_cursor < queue.items.len() && queue.items[item_cursor].day == day {
+            item_cursor += 1;
+        }
+        for item in &queue.items[day_start..item_cursor] {
+            let app = *by_name
+                .get(item.app.as_str())
                 .expect("queue items come from the app list");
             // the same per-item stream dispatch_item uses: the flaky-
             // software draw comes first, the pipeline's noise follows
@@ -382,7 +405,7 @@ pub fn run_campaign_concurrent(
                 Err(_) => {} // counted as run, never as succeeded
             }
         }
-        let pids = super::event_loop::drive(world, tasks);
+        let pids = drive(world, tasks);
         for pid in pids {
             if world.pipeline(pid).map(|p| p.succeeded()).unwrap_or(false) {
                 pipelines_succeeded += 1;

@@ -15,14 +15,27 @@
 //! and account-budget contention therefore emerge from the shared
 //! timeline instead of being serialized away.
 //!
+//! Fleet-scale dispatch (DESIGN.md §5): [`drive`] is indexed, not
+//! scanned. Waiting tasks live in a `(machine, jobid) → slot` map, the
+//! next completion per machine sits in one lazily-validated min-heap,
+//! and completions are observed through each batch system's event log —
+//! so one event costs O(log n) bookkeeping instead of a rescan of every
+//! task and every machine. The pre-index implementation is retained
+//! verbatim as [`drive_reference`]: it is the executable specification
+//! that the differential property tests replay campaigns against.
+//!
 //! Determinism: tasks are polled in creation order, machines are visited
 //! in `BTreeMap` (name) order with event time as the primary key, and
 //! each task carries its own PRNG stream (seeded per campaign item by
 //! the caller), so a campaign's results are bit-reproducible and
 //! independent of how the interleaving happens to schedule.
 
+use std::cmp::Reverse;
+use std::collections::{BTreeMap, BinaryHeap, HashMap};
+
 use crate::ci::{CiJob, CiJobState, ComponentInvocation, Pipeline, Trigger};
 use crate::util::prng::Prng;
+use crate::util::timeutil::SimTime;
 
 use super::execution::{ExecPoll, ExecutionParams, ExecutionTask};
 use super::postproc;
@@ -254,19 +267,100 @@ impl PipelineTask {
     /// Return the finished pipeline to the world: the pipeline record is
     /// appended and the repository restored.
     pub fn finish_into(self, world: &mut World) {
-        world.pipelines.push(self.pipeline);
+        world.record_pipeline(self.pipeline);
         world.repos.insert(self.repo.name.clone(), self.repo);
     }
 }
 
-/// Retire every finished task into the world.
-fn finalize_done(world: &mut World, tasks: &mut Vec<PipelineTask>) {
-    let mut i = 0;
-    while i < tasks.len() {
-        if tasks[i].is_done() {
-            tasks.remove(i).finish_into(world);
-        } else {
-            i += 1;
+/// Indexed dispatch state for [`drive`]. Tasks sit in fixed slots (their
+/// creation order — the polling priority); everything else is an index
+/// over those slots.
+struct Dispatcher {
+    /// Machine names in `world.batch` (BTreeMap) order; the index into
+    /// this Vec is the machine id used by every other structure. Name
+    /// order makes index order reproduce the old `(time, name)` min —
+    /// no per-candidate `String` clones on the hot path.
+    machine_names: Vec<String>,
+    machine_index: HashMap<String, usize>,
+    /// `None` = retired. Retirement keeps slots stable (no shifting
+    /// `Vec::remove`), and retiring a task the moment it finishes keeps
+    /// `world.pipelines` in the same order the reference scan produces.
+    slots: Vec<Option<PipelineTask>>,
+    live: usize,
+    /// `(machine id, jobid) → slot` for every blocked task: completion →
+    /// waiter in O(1) instead of a scan over all tasks.
+    waiters: HashMap<(usize, u64), usize>,
+    /// Slots ready to resume, keyed by slot so one pass polls them in
+    /// task order (the reference's sweep order).
+    wakes: BTreeMap<usize, u64>,
+    /// Next-completion candidates per machine, min-first. Entries are
+    /// validated lazily against `peek_next_event` when popped, so stale
+    /// times (the machine advanced, or a shorter job arrived) cost one
+    /// re-push instead of an eager rebuild.
+    events: BinaryHeap<Reverse<(SimTime, usize)>>,
+}
+
+impl Dispatcher {
+    /// Poll one slot (optionally delivering a completed jobid), index
+    /// the resulting wait or retire the finished task, then absorb any
+    /// completions the poll itself triggered (gates run jobs on other
+    /// machines inside a poll).
+    fn poll_slot(&mut self, world: &mut World, slot: usize, completed: Option<u64>) {
+        let Some(mut task) = self.slots[slot].take() else {
+            return;
+        };
+        match task.poll(world, completed) {
+            TaskPoll::Done => {
+                task.finish_into(world);
+                self.live -= 1;
+            }
+            TaskPoll::Waiting { machine, jobid } => {
+                let terminal = world
+                    .batch
+                    .get(&machine)
+                    .and_then(|b| b.job_state(jobid))
+                    .map(|s| s.is_terminal())
+                    // an unknown job can never complete; waking the task
+                    // collects a failed outcome instead of hanging
+                    .unwrap_or(true);
+                if terminal {
+                    self.wakes.insert(slot, jobid);
+                } else {
+                    let mi = self.machine_index[&machine];
+                    self.waiters.insert((mi, jobid), slot);
+                    // the submission may have become this machine's next
+                    // event — record the current candidate
+                    if let Some(t) = world.batch[&machine].peek_next_event() {
+                        self.events.push(Reverse((t, mi)));
+                    }
+                }
+                self.slots[slot] = Some(task);
+            }
+        }
+        self.drain_logs(world);
+    }
+
+    /// Drain every machine's completion log into wakes. Completions with
+    /// no registered waiter are jobs a gate drove to completion inside
+    /// its own poll — no pipeline blocks on those, so they are dropped.
+    fn drain_logs(&mut self, world: &mut World) {
+        for (mi, name) in self.machine_names.iter().enumerate() {
+            let Some(bs) = world.batch.get_mut(name) else {
+                continue;
+            };
+            let done = bs.drain_event_log();
+            if done.is_empty() {
+                continue;
+            }
+            // the machine's timeline moved; record its new candidate
+            if let Some(t) = bs.peek_next_event() {
+                self.events.push(Reverse((t, mi)));
+            }
+            for jobid in done {
+                if let Some(slot) = self.waiters.remove(&(mi, jobid)) {
+                    self.wakes.insert(slot, jobid);
+                }
+            }
         }
     }
 }
@@ -281,7 +375,174 @@ fn finalize_done(world: &mut World, tasks: &mut Vec<PipelineTask>) {
 /// Returns the pipeline ids in task order; the finished pipelines land
 /// in `world.pipelines` and every repository is restored to
 /// `world.repos`.
-pub fn drive(world: &mut World, mut tasks: Vec<PipelineTask>) -> Vec<u64> {
+///
+/// Dispatch is indexed end to end — waiter map, per-machine event heap,
+/// per-machine completion logs — so cost per event is O(log n), and a
+/// no-gate campaign replays byte-identical to [`drive_reference`] (the
+/// `integration_dispatch_diff` differential property test holds this
+/// contract).
+pub fn drive(world: &mut World, tasks: Vec<PipelineTask>) -> Vec<u64> {
+    let pids: Vec<u64> = tasks.iter().map(|t| t.pipeline_id()).collect();
+    if tasks.is_empty() {
+        return pids;
+    }
+    let machine_names: Vec<String> = world.batch.keys().cloned().collect();
+    let machine_index: HashMap<String, usize> = machine_names
+        .iter()
+        .enumerate()
+        .map(|(i, n)| (n.clone(), i))
+        .collect();
+    // observe completions wherever they happen (including inside gate
+    // polls); remember each machine's prior log state to restore at exit
+    let prior_log: Vec<bool> = machine_names
+        .iter()
+        .map(|n| world.batch.get_mut(n).expect("listed machine").set_event_log(true))
+        .collect();
+    let live = tasks.len();
+    let mut d = Dispatcher {
+        machine_names,
+        machine_index,
+        slots: tasks.into_iter().map(Some).collect(),
+        live,
+        waiters: HashMap::new(),
+        wakes: BTreeMap::new(),
+        events: BinaryHeap::new(),
+    };
+    for slot in 0..d.slots.len() {
+        d.poll_slot(world, slot, None);
+    }
+    'outer: while d.live > 0 {
+        // Wake pass: resume ready tasks in slot order. A wake landing at
+        // or below the cursor (triggered by a poll later in the pass)
+        // defers to the next pass — exactly the reference scan's
+        // restart-the-sweep semantics.
+        while !d.wakes.is_empty() {
+            let mut cursor = 0;
+            loop {
+                let Some((&slot, &jobid)) = d.wakes.range(cursor..).next() else {
+                    break;
+                };
+                d.wakes.remove(&slot);
+                cursor = slot + 1;
+                d.poll_slot(world, slot, Some(jobid));
+            }
+        }
+        if d.live == 0 {
+            break;
+        }
+        // Advance the globally earliest completion event. Heap entries
+        // are validated against the machine's actual next event: stale
+        // entries re-queue the truth, idle machines drop out, and an
+        // empty heap earns one rebuild from scratch before giving up.
+        let mut advanced = false;
+        let mut rebuilt = false;
+        loop {
+            let Some(&Reverse((t, mi))) = d.events.peek() else {
+                if rebuilt {
+                    break;
+                }
+                rebuilt = true;
+                for (mi, name) in d.machine_names.iter().enumerate() {
+                    if let Some(t) = world.batch[name].peek_next_event() {
+                        d.events.push(Reverse((t, mi)));
+                    }
+                }
+                continue;
+            };
+            d.events.pop();
+            let name = &d.machine_names[mi];
+            match world.batch[name].peek_next_event() {
+                Some(actual) if actual == t => {
+                    world
+                        .batch
+                        .get_mut(name)
+                        .and_then(|b| b.advance_next_event());
+                    if let Some(nt) = world.batch[name].peek_next_event() {
+                        d.events.push(Reverse((nt, mi)));
+                    }
+                    d.drain_logs(world);
+                    advanced = true;
+                    break;
+                }
+                Some(actual) => {
+                    // the machine's timeline moved under this entry (it
+                    // advanced, or a shorter job arrived) — requeue the
+                    // current candidate and try again
+                    d.events.push(Reverse((actual, mi)));
+                }
+                None => {} // machine went idle; drop the entry
+            }
+        }
+        if advanced {
+            continue 'outer;
+        }
+        // No validatable event anywhere. Resume any task whose awaited
+        // job is already terminal (e.g. completed incidentally by a
+        // clock advance outside our logs) before declaring a stall.
+        let mut woke = false;
+        for slot in 0..d.slots.len() {
+            let Some(task) = d.slots[slot].as_ref() else {
+                continue;
+            };
+            let Some((machine, jobid)) = task.waiting_on() else {
+                continue;
+            };
+            let terminal = world
+                .batch
+                .get(machine)
+                .and_then(|b| b.job_state(jobid))
+                .map(|s| s.is_terminal())
+                .unwrap_or(true);
+            if terminal {
+                if let Some(&mi) = d.machine_index.get(machine) {
+                    d.waiters.remove(&(mi, jobid));
+                }
+                d.wakes.insert(slot, jobid);
+                woke = true;
+            }
+        }
+        if woke {
+            continue 'outer;
+        }
+        // no running job anywhere, yet tasks are still waiting: the
+        // awaited jobs can never complete — fail loudly, don't spin
+        for slot in 0..d.slots.len() {
+            if let Some(mut task) = d.slots[slot].take() {
+                task.give_up("event loop stalled: awaited job never completes");
+                task.finish_into(world);
+                d.live -= 1;
+            }
+        }
+        break;
+    }
+    for (name, was) in d.machine_names.iter().zip(prior_log) {
+        if let Some(bs) = world.batch.get_mut(name) {
+            bs.set_event_log(was);
+        }
+    }
+    pids
+}
+
+/// Retire every finished task into the world.
+fn finalize_done(world: &mut World, tasks: &mut Vec<PipelineTask>) {
+    let mut i = 0;
+    while i < tasks.len() {
+        if tasks[i].is_done() {
+            tasks.remove(i).finish_into(world);
+        } else {
+            i += 1;
+        }
+    }
+}
+
+/// The pre-index event loop, retained verbatim as the executable
+/// specification of dispatch semantics: full task rescans, min-over-
+/// machines with name clones, linear waiter search. O(tasks × machines)
+/// per event — fine at 24 apps, quadratic at fleet scale — but obviously
+/// correct, which is its job: the `integration_dispatch_diff` property
+/// test replays campaigns through both loops and requires byte-identical
+/// worlds. Do not "optimize" this function; that is what [`drive`] is for.
+pub fn drive_reference(world: &mut World, mut tasks: Vec<PipelineTask>) -> Vec<u64> {
     let pids: Vec<u64> = tasks.iter().map(|t| t.pipeline_id()).collect();
     for task in tasks.iter_mut() {
         if !task.is_done() && task.waiting.is_none() {
@@ -419,6 +680,7 @@ mod tests {
     fn drive_on_empty_task_list_is_a_noop() {
         let mut world = World::new(1);
         assert!(drive(&mut world, Vec::new()).is_empty());
+        assert!(drive_reference(&mut world, Vec::new()).is_empty());
     }
 
     #[test]
@@ -427,5 +689,44 @@ mod tests {
         world.add_repo(BenchmarkRepo::new("broken").with_file(".gitlab-ci.yml", "stages: [x]\n"));
         assert!(world.begin_pipeline("broken", Trigger::Manual).is_err());
         assert!(world.repo("broken").is_some());
+    }
+
+    /// The indexed loop and the reference scan must build identical
+    /// worlds from an identical contended campaign (the full differential
+    /// property lives in `tests/integration_dispatch_diff.rs`).
+    #[test]
+    fn indexed_drive_matches_reference_scan() {
+        let run = |f: fn(&mut World, Vec<PipelineTask>) -> Vec<u64>| {
+            let mut world = World::new(7);
+            world.advance_to(SimTime::from_days(1));
+            let names = ["app-a", "app-b", "app-c", "app-d"];
+            for n in &names {
+                world.add_repo(app_repo(n, "jedi", 16));
+            }
+            let mut tasks = Vec::new();
+            for n in &names {
+                tasks.push(world.begin_pipeline(n, Trigger::Scheduled).unwrap());
+            }
+            let pids = f(&mut world, tasks);
+            let sacct: Vec<String> = world
+                .batch
+                .get("jedi")
+                .unwrap()
+                .records_iter()
+                .map(|r| {
+                    format!(
+                        "{} {} {:?} {:?} {:?}",
+                        r.jobid,
+                        r.state.name(),
+                        r.submit_time,
+                        r.start_time,
+                        r.end_time
+                    )
+                })
+                .collect();
+            let order: Vec<u64> = world.pipelines.iter().map(|p| p.id).collect();
+            (pids, sacct, order)
+        };
+        assert_eq!(run(drive), run(drive_reference));
     }
 }

@@ -27,9 +27,10 @@ pub mod world;
 
 pub use collection::{
     assign, dispatch_item, onboard, onboard_multi, repo_for_app, run_campaign,
-    run_campaign_concurrent, run_campaign_queued, CollectionSummary, WorkItem, WorkQueue,
+    run_campaign_concurrent, run_campaign_concurrent_with, run_campaign_queued,
+    CollectionSummary, WorkItem, WorkQueue,
 };
-pub use event_loop::{drive, PipelineTask, TaskPoll};
+pub use event_loop::{drive, drive_reference, PipelineTask, TaskPoll};
 pub use execution::{run_execution, ExecPoll, ExecutionParams, ExecutionTask};
 pub use executor::{env_fingerprint, BatchStepExecutor, Launcher, LauncherError, PendingStep};
 pub use repo::BenchmarkRepo;

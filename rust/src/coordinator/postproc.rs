@@ -115,28 +115,38 @@ pub fn collection_results_table(world: &World, metric: &str) -> Table {
 pub fn queue_stats(world: &World) -> Table {
     let mut t = Table::new(&["machine", "jobs", "p50_wait_s", "p95_wait_s", "backfilled"]);
     for (name, bs) in &world.batch {
-        let records = bs.records();
-        let waits: Vec<f64> = records
-            .iter()
+        let waits: Vec<f64> = bs
+            .records_iter()
             .filter_map(|r| r.queue_wait_s())
             .map(|w| w as f64)
             .collect();
         if waits.is_empty() {
             continue;
         }
+        // One pass in jobid (= submission) order: a started job jumped
+        // the queue iff some earlier submission of its partition started
+        // *later* than it, or is still pending unstarted. Tracking the
+        // running max start and a pending flag per partition gives the
+        // same count as the old all-pairs scan in O(records).
+        let mut per_partition: std::collections::HashMap<&str, (Option<SimTime>, bool)> =
+            std::collections::HashMap::new();
         let mut backfilled = 0usize;
-        for r in &records {
-            let Some(start) = r.start_time else { continue };
-            let jumped_queue = records.iter().any(|earlier| {
-                earlier.jobid < r.jobid
-                    && earlier.spec.partition == r.spec.partition
-                    && earlier
-                        .start_time
-                        .map(|s| s > start)
-                        .unwrap_or(earlier.state == crate::scheduler::JobState::Pending)
-            });
-            if jumped_queue {
-                backfilled += 1;
+        for r in bs.records_iter() {
+            let entry = per_partition
+                .entry(r.spec.partition.as_str())
+                .or_insert((None, false));
+            match r.start_time {
+                Some(start) => {
+                    if entry.1 || entry.0.map(|s| s > start).unwrap_or(false) {
+                        backfilled += 1;
+                    }
+                    entry.0 = Some(entry.0.map_or(start, |s| s.max(start)));
+                }
+                None => {
+                    if r.state == crate::scheduler::JobState::Pending {
+                        entry.1 = true;
+                    }
+                }
             }
         }
         t.push_row(vec![

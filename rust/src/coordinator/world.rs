@@ -4,7 +4,7 @@
 //! pipeline to completion, [`World::begin_pipeline`] starts a resumable
 //! task so many pipelines can share the timeline.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, HashMap};
 
 use crate::ci::{ComponentRegistry, IdAllocator, Pipeline, Trigger};
 use crate::cluster::Cluster;
@@ -32,6 +32,10 @@ pub struct World {
     pub object_store: ObjectStore,
     /// All executed pipelines (the GitLab pipeline list).
     pub pipelines: Vec<Pipeline>,
+    /// id → position in `pipelines` for pipelines appended through
+    /// [`World::record_pipeline`]. Lookup stays correct for pipelines
+    /// pushed directly onto the (public) Vec via the linear fallback.
+    pipeline_index: HashMap<u64, usize>,
     /// Incremental-execution cache. `None` (the default) preserves the
     /// always-re-execute behaviour; [`World::enable_cache`] turns repeat
     /// pipelines with unchanged inputs into zero-submission replays.
@@ -82,6 +86,7 @@ impl World {
             calibration: HostCalibration::default(),
             object_store: ObjectStore::new(),
             pipelines: Vec::new(),
+            pipeline_index: HashMap::new(),
             cache: None,
         }
     }
@@ -188,8 +193,25 @@ impl World {
         }
     }
 
-    /// Find an executed pipeline by id.
+    /// Append an executed pipeline, keeping the id index current. The
+    /// event loop retires every finished pipeline through here; a fleet
+    /// campaign then resolves ids in O(1) instead of scanning the list.
+    pub fn record_pipeline(&mut self, pipeline: Pipeline) {
+        self.pipeline_index.insert(pipeline.id, self.pipelines.len());
+        self.pipelines.push(pipeline);
+    }
+
+    /// Find an executed pipeline by id. Indexed for pipelines recorded
+    /// via [`World::record_pipeline`]; falls back to a scan for anything
+    /// pushed directly onto the public Vec.
     pub fn pipeline(&self, id: u64) -> Option<&Pipeline> {
+        if let Some(&i) = self.pipeline_index.get(&id) {
+            if let Some(p) = self.pipelines.get(i) {
+                if p.id == id {
+                    return Some(p);
+                }
+            }
+        }
         self.pipelines.iter().find(|p| p.id == id)
     }
 

@@ -683,7 +683,7 @@ pub fn run_energy_campaign(
             jobs,
         };
         let ok = pipeline.succeeded();
-        world.pipelines.push(pipeline);
+        world.record_pipeline(pipeline);
         out.log.push(match &summary {
             Some(sm) => format!(
                 "{}: sweet spot {:.0} MHz ({:+.1}% vs nominal), EDP optimum {:.0} MHz",

@@ -2,15 +2,24 @@
 //!
 //! Substitutes Slurm on the simulated machines (DESIGN.md §2). Jobs are
 //! submitted against partitions with finite node counts; scheduling is
-//! FIFO with simple backfill (a later job may start if it fits while the
-//! queue head waits). The simulated clock advances only through job
+//! FIFO with EASY backfill: the queue head reserves nodes at the
+//! earliest time enough of them free up (its *shadow time*), and a later
+//! job may only jump the queue if it fits right now without pushing that
+//! reservation. The simulated clock advances only through job
 //! completions — wall-clock of the *host* process is irrelevant, which
 //! is what makes 90-day daily-pipeline studies (Figs. 3/4) tractable.
+//!
+//! Fleet-scale costs (DESIGN.md §8): the running set is a min-heap on
+//! `(end_time, jobid)`, pending jobs queue per partition, and completing
+//! one job reschedules only its own partition — O(log n) per event plus
+//! the (short) backfill scan of that partition's queue, instead of the
+//! former global restart-at-zero rescans.
 
-use std::collections::HashMap;
+use std::collections::{BinaryHeap, HashMap, VecDeque};
 
 use super::accounts::{AccountError, AccountManager};
 use super::job::{JobCtx, JobPayload, JobRecord, JobResult, JobSpec, JobState};
+use crate::util::json::Json;
 use crate::util::timeutil::SimTime;
 
 #[derive(Debug, Clone, PartialEq)]
@@ -51,17 +60,52 @@ impl From<AccountError> for SubmitError {
 
 struct PendingJob {
     jobid: u64,
+    nodes: u64,
+    walltime_limit_s: u64,
     payload: JobPayload,
 }
 
+/// One running job on the completion heap. The terminal state is decided
+/// once, when the job starts (walltime vs payload outcome), and carried
+/// here until completion publishes it — `complete_next` never re-derives
+/// it, so a mutated launch overhead or a future fault model cannot make
+/// start and completion disagree.
 struct RunningJob {
-    jobid: u64,
     end_time: SimTime,
+    jobid: u64,
+    nodes: u64,
+    partition: String,
+    terminal: JobState,
 }
+
+// Reversed ordering on (end_time, jobid) turns std's max-heap into the
+// min-heap we need; the jobid tiebreak preserves the deterministic
+// earliest-submitted-first completion order of the old linear scan.
+impl Ord for RunningJob {
+    fn cmp(&self, other: &RunningJob) -> std::cmp::Ordering {
+        (other.end_time, other.jobid).cmp(&(self.end_time, self.jobid))
+    }
+}
+
+impl PartialOrd for RunningJob {
+    fn partial_cmp(&self, other: &RunningJob) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl PartialEq for RunningJob {
+    fn eq(&self, other: &RunningJob) -> bool {
+        self.end_time == other.end_time && self.jobid == other.jobid
+    }
+}
+
+impl Eq for RunningJob {}
 
 struct PartitionState {
     total_nodes: u64,
     free_nodes: u64,
+    /// FIFO queue of jobs waiting for this partition's nodes.
+    queue: VecDeque<PendingJob>,
 }
 
 /// One machine's batch scheduler.
@@ -76,9 +120,15 @@ pub struct BatchSystem {
     clock: SimTime,
     next_jobid: u64,
     partitions: HashMap<String, PartitionState>,
-    pending: Vec<PendingJob>,
-    running: Vec<RunningJob>,
+    running: BinaryHeap<RunningJob>,
     records: HashMap<u64, JobRecord>,
+    /// Jobids in submission order. Jobids are allocated monotonically, so
+    /// this doubles as the sorted `sacct` order with no per-call sort.
+    record_order: Vec<u64>,
+    /// Completed jobids since the last drain, oldest first. `None` (the
+    /// default) disables logging; the coordinator event loop enables it
+    /// so completions triggered *inside* a task poll still wake waiters.
+    event_log: Option<Vec<u64>>,
 }
 
 impl BatchSystem {
@@ -92,9 +142,10 @@ impl BatchSystem {
             clock: SimTime(0),
             next_jobid: 7_700_000, // JSC-flavoured job ids
             partitions: HashMap::new(),
-            pending: Vec::new(),
-            running: Vec::new(),
+            running: BinaryHeap::new(),
             records: HashMap::new(),
+            record_order: Vec::new(),
+            event_log: None,
         }
     }
 
@@ -104,6 +155,7 @@ impl BatchSystem {
             PartitionState {
                 total_nodes: nodes,
                 free_nodes: nodes,
+                queue: VecDeque::new(),
             },
         );
     }
@@ -124,7 +176,7 @@ impl BatchSystem {
         }
         assert!(t >= self.clock, "clock cannot move backwards");
         self.clock = t;
-        self.try_schedule();
+        self.schedule_all();
     }
 
     /// Submit a job; validation failures produce a `Rejected` record and
@@ -147,11 +199,23 @@ impl BatchSystem {
             record.state = JobState::Rejected;
             record.result = Some(JobResult::failure(&e.to_string()));
             self.records.insert(jobid, record);
+            self.record_order.push(jobid);
             return Err(e);
         }
         self.records.insert(jobid, record);
-        self.pending.push(PendingJob { jobid, payload });
-        self.try_schedule();
+        self.record_order.push(jobid);
+        let partition = spec.partition.clone();
+        self.partitions
+            .get_mut(&partition)
+            .expect("validated partition exists")
+            .queue
+            .push_back(PendingJob {
+                jobid,
+                nodes: spec.nodes,
+                walltime_limit_s: spec.walltime_limit_s,
+                payload,
+            });
+        self.schedule_partition(&partition);
         Ok(jobid)
     }
 
@@ -172,29 +236,100 @@ impl BatchSystem {
         Ok(())
     }
 
-    /// FIFO + backfill: start every pending job that currently fits.
-    fn try_schedule(&mut self) {
-        let mut i = 0;
-        while i < self.pending.len() {
-            let jobid = self.pending[i].jobid;
-            let spec = self.records[&jobid].spec.clone();
-            let fits = self
-                .partitions
-                .get(&spec.partition)
-                .map(|p| p.free_nodes >= spec.nodes)
-                .unwrap_or(false);
-            if fits {
-                let PendingJob { payload, .. } = self.pending.remove(i);
-                self.start_job(jobid, spec, payload);
-                // restart the scan: records/partitions changed
-                i = 0;
-            } else {
-                i += 1;
-            }
+    /// Schedule every partition (sorted by name for determinism). Only
+    /// needed when the whole machine's state may have changed — submit
+    /// and completion reschedule just the affected partition.
+    fn schedule_all(&mut self) {
+        let mut names: Vec<String> = self.partitions.keys().cloned().collect();
+        names.sort_unstable();
+        for name in names {
+            self.schedule_partition(&name);
         }
     }
 
-    fn start_job(&mut self, jobid: u64, spec: JobSpec, payload: JobPayload) {
+    /// FIFO + EASY backfill over one partition's queue.
+    ///
+    /// Phase 1 starts queue heads while they fit. If the head is blocked,
+    /// phase 2 computes its reservation — the shadow time when enough
+    /// nodes will have freed, and the spare nodes beyond its need at that
+    /// moment — and backfills only later jobs that fit *now* and either
+    /// project (by their walltime limit) to finish before the shadow or
+    /// fit inside the spare. The head can therefore wait at most until
+    /// its shadow: a stream of small later submissions can no longer
+    /// starve it.
+    fn schedule_partition(&mut self, pname: &str) {
+        let Some(part) = self.partitions.get_mut(pname) else {
+            return;
+        };
+        let mut queue = std::mem::take(&mut part.queue);
+        // Phase 1: strict FIFO while the head fits.
+        while let Some(head) = queue.front() {
+            if head.nodes <= self.partitions[pname].free_nodes {
+                let job = queue.pop_front().expect("nonempty");
+                self.start_job(job.jobid, job.payload);
+            } else {
+                break;
+            }
+        }
+        // Phase 2: head blocked — backfill under its reservation.
+        if let Some(head) = queue.front() {
+            let free = self.partitions[pname].free_nodes;
+            let (shadow, mut spare) = self.head_reservation(pname, head.nodes, free);
+            let mut i = 1;
+            while i < queue.len() {
+                let cand = &queue[i];
+                if cand.nodes > self.partitions[pname].free_nodes {
+                    i += 1;
+                    continue;
+                }
+                let projected_end = self
+                    .clock
+                    .add_secs(self.sched_latency_s + cand.walltime_limit_s as i64);
+                let before_shadow = projected_end <= shadow;
+                if before_shadow || cand.nodes <= spare {
+                    if !before_shadow {
+                        spare -= cand.nodes;
+                    }
+                    let job = queue.remove(i).expect("index in bounds");
+                    self.start_job(job.jobid, job.payload);
+                    // the next candidate shifted into position i
+                } else {
+                    i += 1;
+                }
+            }
+        }
+        self.partitions
+            .get_mut(pname)
+            .expect("partition still exists")
+            .queue = queue;
+    }
+
+    /// The blocked head's reservation: walk this partition's running
+    /// jobs in completion order until enough nodes have freed for `need`.
+    /// Returns (shadow time, spare nodes beyond `need` at the shadow).
+    fn head_reservation(&self, pname: &str, need: u64, free_now: u64) -> (SimTime, u64) {
+        let mut ends: Vec<(SimTime, u64)> = self
+            .running
+            .iter()
+            .filter(|r| r.partition == pname)
+            .map(|r| (r.end_time, r.nodes))
+            .collect();
+        ends.sort_unstable();
+        let mut avail = free_now;
+        for (end, nodes) in ends {
+            avail += nodes;
+            if avail >= need {
+                return (end, avail - need);
+            }
+        }
+        // Unreachable when validation holds (need <= total and every
+        // running job eventually frees its nodes); reserve forever so
+        // nothing backfills against an impossible head.
+        (SimTime(i64::MAX), 0)
+    }
+
+    fn start_job(&mut self, jobid: u64, payload: JobPayload) {
+        let spec = self.records[&jobid].spec.clone();
         let part = self.partitions.get_mut(&spec.partition).unwrap();
         part.free_nodes -= spec.nodes;
         let start = self.clock.add_secs(self.sched_latency_s);
@@ -217,71 +352,71 @@ impl BatchSystem {
         };
         let end = start.add_secs(duration.ceil() as i64);
         let rec = self.records.get_mut(&jobid).unwrap();
-        rec.state = JobState::Running; // terminal state set at completion
+        rec.state = JobState::Running; // terminal state published at completion
         rec.start_time = Some(start);
         rec.end_time = Some(end);
         rec.result = Some(if state == JobState::Timeout {
+            // A killed job reports nothing past the wall: the recorded
+            // duration is truncated to the limit and the metrics/files
+            // the payload "produced" after its death are dropped, so a
+            // timed-out run can never feed fictional measurements into
+            // tracking history or energy series. The replacement metrics
+            // flag the truncation for the analysis layer.
             JobResult {
+                duration_s: result.duration_s.min(spec.walltime_limit_s as f64),
                 success: false,
-                ..result
+                metrics: Json::obj()
+                    .set("timeout", true)
+                    .set("walltime_limit_s", spec.walltime_limit_s),
+                files: Vec::new(),
             }
         } else {
             result
         });
-        self.running.push(RunningJob { jobid, end_time: end });
-        // stash terminal state in the record via a parallel map-free trick:
-        // we re-derive it at completion from result.success + walltime.
-        let _ = state;
+        self.running.push(RunningJob {
+            end_time: end,
+            jobid,
+            nodes: spec.nodes,
+            partition: spec.partition,
+            terminal: state,
+        });
     }
 
     fn earliest_end(&self) -> Option<SimTime> {
-        self.running.iter().map(|r| r.end_time).min()
+        self.running.peek().map(|r| r.end_time)
     }
 
     /// Complete the earliest-finishing running job; advances the clock.
     fn complete_next(&mut self) -> Option<u64> {
-        let idx = self
-            .running
-            .iter()
-            .enumerate()
-            .min_by_key(|(_, r)| r.end_time)
-            .map(|(i, _)| i)?;
-        let RunningJob { jobid, end_time } = self.running.remove(idx);
+        let RunningJob {
+            end_time,
+            jobid,
+            nodes,
+            partition,
+            terminal,
+        } = self.running.pop()?;
         self.clock = self.clock.max(end_time);
         let cores = self.cores_per_node;
         let rec = self.records.get_mut(&jobid).unwrap();
-        let spec = rec.spec.clone();
-        // derive terminal state
-        let app_ok = rec.result.as_ref().map(|r| r.success).unwrap_or(false);
-        let hit_wall = rec
-            .result
-            .as_ref()
-            .map(|r| r.duration_s + self.launch_overhead_s > spec.walltime_limit_s as f64)
-            .unwrap_or(false);
-        rec.state = if hit_wall {
-            JobState::Timeout
-        } else if app_ok {
-            JobState::Completed
-        } else {
-            JobState::Failed
-        };
+        // publish the terminal state decided at start — no re-derivation
+        rec.state = terminal;
+        let account = rec.spec.account.clone();
         let ch = rec.core_hours(cores);
-        self.accounts.charge(&spec.account, ch);
-        if let Some(p) = self.partitions.get_mut(&spec.partition) {
-            p.free_nodes += spec.nodes;
+        self.accounts.charge(&account, ch);
+        if let Some(p) = self.partitions.get_mut(&partition) {
+            p.free_nodes += nodes;
         }
-        self.try_schedule();
+        if let Some(log) = self.event_log.as_mut() {
+            log.push(jobid);
+        }
+        self.schedule_partition(&partition);
         Some(jobid)
     }
 
     /// Run the event loop until no job is pending or running.
     pub fn run_until_idle(&mut self) {
-        loop {
-            self.try_schedule();
-            if self.complete_next().is_none() {
-                break;
-            }
-        }
+        self.schedule_all();
+        while self.complete_next().is_some() {}
         debug_assert!(self.running.is_empty());
     }
 
@@ -295,8 +430,8 @@ impl BatchSystem {
 
     /// Simulated time of this machine's next completion event, if any
     /// job is running. Pending jobs never stall silently: a submission
-    /// that fits starts immediately (`try_schedule` runs on submit and
-    /// on every completion), so `None` means the machine is idle.
+    /// that fits starts immediately (scheduling runs on submit and on
+    /// every completion), so `None` means the machine is idle.
     pub fn peek_next_event(&self) -> Option<SimTime> {
         self.earliest_end()
     }
@@ -309,6 +444,30 @@ impl BatchSystem {
         self.complete_next()
     }
 
+    /// Turn completion logging on or off, returning the previous state
+    /// so a driver can restore whatever it found (nest-safe). While on,
+    /// every completed jobid is appended for [`BatchSystem::drain_event_log`].
+    pub fn set_event_log(&mut self, on: bool) -> bool {
+        let was = self.event_log.is_some();
+        if on {
+            if self.event_log.is_none() {
+                self.event_log = Some(Vec::new());
+            }
+        } else {
+            self.event_log = None;
+        }
+        was
+    }
+
+    /// Take all completions logged since the last drain, oldest first.
+    /// Empty when logging is off.
+    pub fn drain_event_log(&mut self) -> Vec<u64> {
+        match self.event_log.as_mut() {
+            Some(log) if !log.is_empty() => std::mem::take(log),
+            _ => Vec::new(),
+        }
+    }
+
     /// Current lifecycle state of a job (`None` for unknown ids).
     pub fn job_state(&self, jobid: u64) -> Option<JobState> {
         self.records.get(&jobid).map(|r| r.state)
@@ -318,11 +477,21 @@ impl BatchSystem {
         self.records.get(&jobid)
     }
 
-    /// All records, sorted by job id (the `sacct` dump).
+    /// All records, sorted by job id (the `sacct` dump). Jobids are
+    /// allocated monotonically at submit, so submission order *is*
+    /// sorted order — no per-call sort, one Vec of refs.
     pub fn records(&self) -> Vec<&JobRecord> {
-        let mut v: Vec<&JobRecord> = self.records.values().collect();
-        v.sort_by_key(|r| r.jobid);
-        v
+        self.record_order.iter().map(|id| &self.records[id]).collect()
+    }
+
+    /// Iterate records in job-id order without allocating (the hot-path
+    /// variant of [`BatchSystem::records`] for stats and benches).
+    pub fn records_iter(&self) -> impl Iterator<Item = &JobRecord> + '_ {
+        self.record_order.iter().map(move |id| &self.records[id])
+    }
+
+    pub fn record_count(&self) -> usize {
+        self.record_order.len()
     }
 
     pub fn free_nodes(&self, partition: &str) -> Option<u64> {
@@ -334,7 +503,7 @@ impl BatchSystem {
     }
 
     pub fn pending_count(&self) -> usize {
-        self.pending.len()
+        self.partitions.values().map(|p| p.queue.len()).sum()
     }
 
     pub fn running_count(&self) -> usize {
@@ -438,6 +607,90 @@ mod tests {
         assert_eq!(rec.end_time.unwrap().0 - rec.start_time.unwrap().0, 60);
     }
 
+    /// Regression (bugfix 1): a timed-out job used to keep the payload's
+    /// full result — a duration past the wall plus metrics and files from
+    /// the part of the run that never happened. The record must be
+    /// truncated to the limit with the fictional measurements dropped.
+    #[test]
+    fn timeout_truncates_recorded_result() {
+        let mut bs = sys();
+        let id = bs
+            .submit(
+                JobSpec {
+                    account: "p".into(),
+                    budget: "b".into(),
+                    walltime_limit_s: 60,
+                    ..Default::default()
+                },
+                Box::new(|_ctx| JobResult {
+                    duration_s: 3600.0,
+                    success: true,
+                    metrics: Json::obj().set("tts", 3600.0).set("energy_j", 1.0e7),
+                    files: vec![("app.out".into(), "time: 3600".into())],
+                }),
+            )
+            .unwrap();
+        bs.run_until_idle();
+        let result = bs.record(id).unwrap().result.clone().unwrap();
+        assert!(!result.success);
+        assert!(
+            result.duration_s <= 60.0,
+            "recorded duration {} exceeds the 60s wall",
+            result.duration_s
+        );
+        // the killed run's measurements are gone; only the flag remains
+        assert!(result.metrics.f64_of("tts").is_none());
+        assert!(result.metrics.f64_of("energy_j").is_none());
+        assert_eq!(result.metrics.bool_of("timeout"), Some(true));
+        assert!(result.files.is_empty(), "files survived the kill");
+    }
+
+    /// Regression (bugfix 2): the terminal state is decided exactly once,
+    /// at start. Completion used to re-derive it from
+    /// `result.duration_s + launch_overhead_s`, so mutating the overhead
+    /// while a job ran flipped an exact-walltime job from Completed to
+    /// Timeout between the two derivations.
+    #[test]
+    fn terminal_state_decided_once_at_start() {
+        let mut bs = sys();
+        // exact boundary: 58.5s payload + 1.5s overhead == the 60s wall;
+        // "exceeds" is strict, so this completes
+        let id = bs
+            .submit(
+                JobSpec {
+                    account: "p".into(),
+                    budget: "b".into(),
+                    walltime_limit_s: 60,
+                    ..Default::default()
+                },
+                quick_payload(58.5, true),
+            )
+            .unwrap();
+        assert_eq!(bs.job_state(id), Some(JobState::Running));
+        // a mid-flight overhead change must not rewrite history
+        bs.launch_overhead_s = 100.0;
+        bs.run_until_idle();
+        let rec = bs.record(id).unwrap();
+        assert_eq!(rec.state, JobState::Completed);
+        assert_eq!(rec.end_time.unwrap().0 - rec.start_time.unwrap().0, 60);
+        // and one second past the wall is a timeout, decided at start
+        bs.launch_overhead_s = 1.5;
+        let over = bs
+            .submit(
+                JobSpec {
+                    account: "p".into(),
+                    budget: "b".into(),
+                    walltime_limit_s: 60,
+                    ..Default::default()
+                },
+                quick_payload(59.5, true),
+            )
+            .unwrap();
+        bs.launch_overhead_s = 0.0;
+        bs.run_until_idle();
+        assert_eq!(bs.record(over).unwrap().state, JobState::Timeout);
+    }
+
     #[test]
     fn contention_queues_jobs() {
         let mut bs = sys(); // 8 nodes
@@ -501,6 +754,10 @@ mod tests {
                     nodes: 2,
                     account: "p".into(),
                     budget: "b".into(),
+                    // a tight walltime keeps the projected end inside the
+                    // blocked head's reservation — that's what makes this
+                    // a legal backfill under EASY
+                    walltime_limit_s: 30,
                     ..Default::default()
                 },
                 quick_payload(10.0, true),
@@ -511,6 +768,61 @@ mod tests {
         let s = bs.record(small).unwrap().start_time.unwrap();
         let blk = bs.record(blocked).unwrap().start_time.unwrap();
         assert!(s < blk, "small={:?} blocked={:?}", s, blk);
+    }
+
+    /// Regression (bugfix 3): pure backfill used to start *any* pending
+    /// job that fit, so a 48-node job behind a stream of 16-node jobs
+    /// never saw 48 nodes free at once. Under the head-of-line
+    /// reservation the big job starts at its shadow time — when the
+    /// initial wave drains — and every later small job waits behind it.
+    #[test]
+    fn head_of_line_job_is_not_starved_by_backfill() {
+        let mut bs = BatchSystem::new("jedi", 288, AccountManager::open("p", "b", 1e9));
+        bs.add_partition("all", 48);
+        let small = || JobSpec {
+            nodes: 16,
+            account: "p".into(),
+            budget: "b".into(),
+            walltime_limit_s: 1100,
+            ..Default::default()
+        };
+        // staggered initial wave filling the partition: nodes never all
+        // free at the same instant until the queue drains
+        let mut wave = Vec::new();
+        for secs in [300.0, 600.0, 900.0] {
+            wave.push(bs.submit(small(), quick_payload(secs, true)).unwrap());
+        }
+        let big = bs
+            .submit(
+                JobSpec {
+                    nodes: 48,
+                    account: "p".into(),
+                    budget: "b".into(),
+                    walltime_limit_s: 500,
+                    ..Default::default()
+                },
+                quick_payload(100.0, true),
+            )
+            .unwrap();
+        let mut stream = Vec::new();
+        for _ in 0..10 {
+            stream.push(bs.submit(small(), quick_payload(1000.0, true)).unwrap());
+        }
+        bs.run_until_idle();
+        let rec = bs.record(big).unwrap();
+        assert_eq!(rec.state, JobState::Completed);
+        let big_start = rec.start_time.unwrap();
+        // the big job starts when the initial wave has drained (~914s),
+        // not after the whole 10-job stream
+        let wave_end = bs.record(wave[2]).unwrap().end_time.unwrap();
+        assert_eq!(big_start, wave_end.add_secs(bs.sched_latency_s));
+        for id in &stream {
+            let s = bs.record(*id).unwrap().start_time.unwrap();
+            assert!(
+                s >= big_start,
+                "stream job {id} started at {s:?}, starving the 48-node head (started {big_start:?})"
+            );
+        }
     }
 
     #[test]
@@ -662,6 +974,78 @@ mod tests {
         assert!(
             bs.record(b).unwrap().start_time.unwrap() >= bs.record(a).unwrap().end_time.unwrap()
         );
+    }
+
+    #[test]
+    fn event_log_captures_completions_in_order() {
+        let mut bs = sys();
+        // off by default: completions are not buffered
+        bs.submit(
+            JobSpec {
+                nodes: 1,
+                account: "p".into(),
+                budget: "b".into(),
+                ..Default::default()
+            },
+            quick_payload(10.0, true),
+        )
+        .unwrap();
+        bs.run_until_idle();
+        assert!(bs.drain_event_log().is_empty());
+        assert!(!bs.set_event_log(true));
+        let a = bs
+            .submit(
+                JobSpec {
+                    nodes: 1,
+                    account: "p".into(),
+                    budget: "b".into(),
+                    ..Default::default()
+                },
+                quick_payload(100.0, true),
+            )
+            .unwrap();
+        let b = bs
+            .submit(
+                JobSpec {
+                    nodes: 1,
+                    account: "p".into(),
+                    budget: "b".into(),
+                    ..Default::default()
+                },
+                quick_payload(50.0, true),
+            )
+            .unwrap();
+        bs.run_until_idle();
+        // completion order (b is shorter), drained once
+        assert_eq!(bs.drain_event_log(), vec![b, a]);
+        assert!(bs.drain_event_log().is_empty());
+        assert!(bs.set_event_log(false));
+    }
+
+    #[test]
+    fn records_are_jobid_sorted_without_resorting() {
+        let mut bs = sys();
+        let mut ids = Vec::new();
+        for i in 0..5u64 {
+            ids.push(
+                bs.submit(
+                    JobSpec {
+                        nodes: 1,
+                        account: "p".into(),
+                        budget: "b".into(),
+                        ..Default::default()
+                    },
+                    quick_payload(10.0 * (5 - i) as f64, true),
+                )
+                .unwrap(),
+            );
+        }
+        bs.run_until_idle();
+        let listed: Vec<u64> = bs.records().iter().map(|r| r.jobid).collect();
+        assert_eq!(listed, ids);
+        let iterated: Vec<u64> = bs.records_iter().map(|r| r.jobid).collect();
+        assert_eq!(iterated, ids);
+        assert_eq!(bs.record_count(), 5);
     }
 
     #[test]
