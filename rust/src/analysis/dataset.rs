@@ -6,7 +6,7 @@
 //! (x, metric) series. All figures' data flows through this module.
 
 use crate::protocol::Report;
-use crate::store::DataStore;
+use crate::store::{DataStore, Snapshot};
 use crate::util::timeutil::SimTime;
 
 /// A set of reports with their store paths.
@@ -20,19 +20,44 @@ impl ReportSet {
     /// branch. Only `.json` documents are considered (the branch also
     /// carries `results.csv` artifacts); unparseable documents are
     /// skipped (robustness against partial generation) but counted.
+    ///
+    /// This is the legacy full-walk path, retained as the executable
+    /// differential reference for [`ReportSet::from_snapshot`] — hot
+    /// consumers (post-processing tables, energy scans) read via the
+    /// snapshot.
     pub fn load(store: &DataStore, branch: &str, prefix: &str) -> (ReportSet, usize) {
         let mut set = ReportSet::default();
         let mut skipped = 0;
-        for (path, content) in store.read_all(branch, prefix) {
+        for (path, content) in store.read_all_iter(branch, prefix) {
             if !path.ends_with(".json") {
                 continue;
             }
-            match Report::parse(&content) {
-                Ok(r) => set.reports.push((path, r)),
+            match Report::parse(content) {
+                Ok(r) => set.reports.push((path.to_string(), r)),
                 Err(_) => skipped += 1,
             }
         }
         set.reports.sort_by(|a, b| a.0.cmp(&b.0));
+        (set, skipped)
+    }
+
+    /// Load every parseable report under `prefix` from a [`Snapshot`] —
+    /// same paths, same order, same skip count as [`ReportSet::load`]
+    /// (differentially tested byte-identical), but each document was
+    /// parsed exactly once, at snapshot build time.
+    pub fn from_snapshot(snap: &Snapshot, prefix: &str) -> (ReportSet, usize) {
+        let mut set = ReportSet::default();
+        let mut skipped = 0;
+        // paths_under iterates in path order, so no sort is needed
+        for (path, digest) in snap.paths_under(prefix) {
+            if !path.ends_with(".json") {
+                continue;
+            }
+            match snap.doc(digest).and_then(|d| d.report.as_ref()) {
+                Some(r) => set.reports.push((path.to_string(), r.clone())),
+                None => skipped += 1,
+            }
+        }
         (set, skipped)
     }
 

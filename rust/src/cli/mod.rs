@@ -4,6 +4,8 @@
 //! exacb quickstart  [--machine jedi] [--queue all]
 //! exacb collection  [--apps 72] [--days 14] [--machine jupiter]
 //! exacb track       [--days 20] [--inject-day 12] [--shift-pct 15]
+//! exacb cmp         [--by machine] [--machines jupiter,jedi]
+//! exacb rank        [--machines jupiter,jedi,jureca]
 //! exacb jureap      [--apps 72] [--days 12] [--machines jupiter]
 //! exacb figures     [--days 90] [--out out/] [--only fig3]
 //! exacb ablation    [--benchmarks 70]
@@ -40,6 +42,20 @@ COMMANDS:
                 (--days D --inject-day K --shift-pct P --machine M
                 --metric NAME; --shift-pct 0 is the unchanged control;
                 --expect regression|clean sets the exit code for CI)
+  cmp           compare two machines — or two source commits — over the
+                same workload portfolio from recorded reports: a Welch
+                interval and speedup per (workload, metric, nodes) group
+                plus the collection geomean (--by machine|commit
+                --machines M1,M2 --apps N --days D --confidence C
+                --shards K --export-json F --export-csv F; commit mode
+                reuses the track scenario flags and --expect
+                regression|clean sets the exit code for CI)
+  rank          rank machines across every shared workload group from
+                recorded reports, rebar-style: per-group competition
+                ranks flattened to mean rank + geomean ratio-to-best
+                (--machines M1,M2,M3 --apps N --days D --shards K
+                --groups true for the per-group table; --export-json F
+                --export-csv F)
   jureap        run the seeded onboarding campaign through the maturity
                 gate and render the cross-application readiness report
                 (--apps N --days D --machines M1,M2 --seed S; apps start
@@ -76,6 +92,8 @@ pub fn run(argv: Vec<String>) -> i32 {
         Some("quickstart") => cmd_quickstart(&args),
         Some("collection") => cmd_collection(&args),
         Some("track") => cmd_track(&args),
+        Some("cmp") => cmd_cmp(&args),
+        Some("rank") => cmd_rank(&args),
         Some("jureap") => cmd_jureap(&args),
         Some("energy") => cmd_energy(&args),
         Some("figures") => cmd_figures(&args),
@@ -324,6 +342,257 @@ fn cmd_track(args: &Args) -> i32 {
         // "" (validated up front): informational run, no expectation
         _ => 0,
     }
+}
+
+/// Parse a `--machines a,b,c` flag into a cleaned list.
+fn machine_list(args: &Args, default: &str) -> Vec<String> {
+    args.str("machines", default)
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect()
+}
+
+/// Run the same generated portfolio on each machine separately (same
+/// seed, whole portfolio per machine — `onboard_multi` would round-robin
+/// apps so no workload would be shared) and return every recorded
+/// observation in canonical order.
+fn campaign_rows(machines: &[String], n: usize, days: i64, seed: u64) -> Vec<crate::store::Row> {
+    let apps = portfolio::generate(n, seed);
+    let mut rows = Vec::new();
+    for machine in machines {
+        let mut world = World::new(seed);
+        collection::onboard_multi(&mut world, &apps, &[machine.as_str()], "all");
+        collection::run_campaign_concurrent(&mut world, &apps, &[machine.as_str()], days);
+        rows.extend(crate::query::world_rows(&world));
+    }
+    crate::store::sort_rows(&mut rows);
+    rows
+}
+
+/// Honour `--export-json F` / `--export-csv F`: dump the exact row set
+/// a query ran over. Returns false on an unwritable path.
+fn export_rows(args: &Args, rows: &[crate::store::Row]) -> bool {
+    let mut ok = true;
+    if let Some(path) = args.flags.get("export-json") {
+        match std::fs::write(path, crate::query::rows_to_json(rows).pretty()) {
+            Ok(()) => println!("exported {} row(s) to {path} (JSON)", rows.len()),
+            Err(e) => {
+                eprintln!("error: writing {path}: {e}");
+                ok = false;
+            }
+        }
+    }
+    if let Some(path) = args.flags.get("export-csv") {
+        match std::fs::write(path, crate::query::rows_to_csv(rows)) {
+            Ok(()) => println!("exported {} row(s) to {path} (CSV)", rows.len()),
+            Err(e) => {
+                eprintln!("error: writing {path}: {e}");
+                ok = false;
+            }
+        }
+    }
+    ok
+}
+
+/// Turn a comparison into a CI exit code under `--expect`.
+fn cmp_expectation(report: &crate::query::CmpReport, expect: &str) -> i32 {
+    match expect {
+        "regression" => {
+            if report.count("slower") > 0 {
+                println!("\nexpected regression: {} group(s) slower", report.count("slower"));
+                0
+            } else {
+                eprintln!("\nexpected at least one 'slower' group; none found");
+                1
+            }
+        }
+        "clean" => {
+            let moved = report.count("slower") + report.count("faster");
+            if moved == 0 {
+                println!("\nexpected clean: no group moved at this confidence");
+                0
+            } else {
+                eprintln!("\nexpected clean; {moved} group(s) moved");
+                1
+            }
+        }
+        _ => 0,
+    }
+}
+
+/// Compare two machines (or the pre-/post-change commits of a planted
+/// regression scenario) from recorded reports via the snapshot query
+/// layer (DESIGN.md §12): per-(workload, metric, nodes) Welch intervals
+/// and speedups, a collection geomean, optional portable export, and a
+/// CI exit code under `--expect`.
+fn cmd_cmp(args: &Args) -> i32 {
+    use crate::query::{self, Engine};
+
+    let by = args.str("by", "machine");
+    let confidence_arg = args.str("confidence", "0.95");
+    let confidence: f64 = match confidence_arg.parse() {
+        Ok(c) if (0.5..1.0).contains(&c) => c,
+        _ => {
+            eprintln!("error: --confidence must be in [0.5, 1.0), got '{confidence_arg}'");
+            return 2;
+        }
+    };
+    let shards = args.u64("shards", 4).clamp(1, 64) as usize;
+    let expect = args.str("expect", "");
+    if !matches!(expect.as_str(), "" | "regression" | "clean") {
+        eprintln!("error: --expect must be 'regression' or 'clean', got '{expect}'");
+        return 2;
+    }
+
+    let (rows, report) = match by.as_str() {
+        "machine" => {
+            let machines = machine_list(args, "jupiter,jedi");
+            if machines.len() != 2 || machines[0] == machines[1] {
+                eprintln!(
+                    "error: --by machine needs exactly two distinct machines \
+                     (--machines baseline,candidate), got {machines:?}"
+                );
+                return 2;
+            }
+            let n = args.u64("apps", 6) as usize;
+            let days = args.i64("days", 3);
+            let seed = args.u64("seed", 20260101);
+            println!(
+                "comparing {} (candidate) against {} (baseline): {n} app(s) x {days} day(s), \
+                 seed {seed}, {shards} shard(s)…",
+                machines[1], machines[0]
+            );
+            let rows = campaign_rows(&machines, n, days, seed);
+            let report = query::compare(
+                &rows,
+                Engine::Machine,
+                &machines[0],
+                &machines[1],
+                confidence,
+                shards,
+            );
+            (rows, report)
+        }
+        "commit" => {
+            use crate::workloads::regression::RegressionScenario;
+            let days = args.i64("days", 12);
+            let inject = args.i64("inject-day", 7);
+            let shift_arg = args.str("shift-pct", "10");
+            let Ok(shift) = shift_arg.parse::<f64>() else {
+                eprintln!("error: --shift-pct must be a number, got '{shift_arg}'");
+                return 2;
+            };
+            let machine = args.str("machine", "jedi");
+            let metric = args.str("metric", "runtime");
+            let seed = args.u64("seed", 20260301);
+            let planted = shift > 0.0 && (0..days).contains(&inject);
+            let sc = if planted {
+                RegressionScenario::planted(&machine, days, inject, shift, seed)
+            } else {
+                RegressionScenario::control(&machine, days, seed)
+            };
+            println!(
+                "comparing the commits of a {} scenario: {days} day(s) on {machine}, \
+                 seed {seed}…",
+                if planted {
+                    format!("{shift}% slowdown (day {inject})")
+                } else {
+                    "control".to_string()
+                }
+            );
+            let mut world = World::new(seed);
+            crate::tracking::run_scenario(&mut world, &sc);
+            let mut rows = query::world_rows(&world);
+            rows.retain(|r| r.metric == metric);
+            let commits = query::commits_by_first_seen(&rows);
+            if commits.len() < 2 {
+                // a control scenario records a single commit: nothing to
+                // compare, which is exactly what a clean history claims
+                println!("only {} distinct commit(s) recorded — nothing moved", commits.len());
+                return match expect.as_str() {
+                    "regression" => {
+                        eprintln!("expected a regression but the history has one commit");
+                        1
+                    }
+                    _ => 0,
+                };
+            }
+            let (baseline, candidate) =
+                (commits[0].clone(), commits[commits.len() - 1].clone());
+            println!(
+                "baseline commit {baseline} (first seen), candidate {candidate} (last seen)"
+            );
+            let report =
+                query::compare(&rows, Engine::Commit, &baseline, &candidate, confidence, shards);
+            (rows, report)
+        }
+        other => {
+            eprintln!("error: --by must be 'machine' or 'commit', got '{other}'");
+            return 2;
+        }
+    };
+
+    print!("{}", report.table().render());
+    println!(
+        "\n{} group(s) compared ({} baseline-only, {} candidate-only): \
+         {} faster, {} slower, {} indistinguishable at {:.0}% confidence",
+        report.rows.len(),
+        report.only_baseline,
+        report.only_candidate,
+        report.count("faster"),
+        report.count("slower"),
+        report.count("indistinguishable"),
+        confidence * 100.0
+    );
+    if let Some(g) = report.geomean_speedup() {
+        println!("geomean speedup (candidate vs baseline): {g:.3}x");
+    }
+    if !export_rows(args, &rows) {
+        return 1;
+    }
+    cmp_expectation(&report, &expect)
+}
+
+/// Rank machines across every shared workload group from recorded
+/// reports (DESIGN.md §12): rebar-style per-group competition ranks
+/// flattened to mean rank + geomean ratio-to-best per machine.
+fn cmd_rank(args: &Args) -> i32 {
+    use crate::query::{self, Engine};
+
+    let machines = machine_list(args, "jupiter,jedi,jureca");
+    if machines.len() < 2 {
+        eprintln!("error: ranking needs at least two machines (--machines a,b,…)");
+        return 2;
+    }
+    let n = args.u64("apps", 6) as usize;
+    let days = args.i64("days", 3);
+    let seed = args.u64("seed", 20260101);
+    let shards = args.u64("shards", 4).clamp(1, 64) as usize;
+    println!(
+        "ranking {} over {n} app(s) x {days} day(s), seed {seed}, {shards} shard(s)…",
+        machines.join(",")
+    );
+    let rows = campaign_rows(&machines, n, days, seed);
+    let report = query::rank(&rows, Engine::Machine, shards);
+    if args.str("groups", "false") == "true" {
+        print!("{}", report.groups_table().render());
+        println!();
+    }
+    print!("{}", report.table().render());
+    println!(
+        "\n{} workload group(s) ranked across {} machine(s)",
+        report.groups.len(),
+        report.aggregate.len()
+    );
+    if !export_rows(args, &rows) {
+        return 1;
+    }
+    if report.groups.is_empty() {
+        eprintln!("no shared workload groups — nothing was ranked");
+        return 1;
+    }
+    0
 }
 
 /// Run the seeded JUREAP-style onboarding campaign end to end through
@@ -680,6 +949,66 @@ mod tests {
     }
 
     #[test]
+    fn cmp_commit_mode_catches_the_planted_regression() {
+        assert_eq!(
+            run_str(
+                "cmp --by commit --days 10 --inject-day 6 --shift-pct 12 --seed 11 \
+                 --expect regression"
+            ),
+            0
+        );
+        // a control history has one commit: clean passes, regression fails
+        assert_eq!(
+            run_str("cmp --by commit --days 4 --shift-pct 0 --seed 12 --expect clean"),
+            0
+        );
+        assert_eq!(
+            run_str("cmp --by commit --days 4 --shift-pct 0 --seed 12 --expect regression"),
+            1
+        );
+    }
+
+    #[test]
+    fn cmp_machine_mode_compares_two_machines() {
+        assert_eq!(
+            run_str("cmp --machines jupiter,jedi --apps 2 --days 2 --seed 7 --shards 3"),
+            0
+        );
+    }
+
+    #[test]
+    fn cmp_validates_its_flags_before_running() {
+        assert_eq!(run_str("cmp --by flavour"), 2);
+        assert_eq!(run_str("cmp --machines jupiter"), 2);
+        assert_eq!(run_str("cmp --machines jupiter,jupiter"), 2);
+        assert_eq!(run_str("cmp --confidence 1.5"), 2);
+        assert_eq!(run_str("cmp --by commit --shift-pct 1O"), 2); // typo'd digit
+        assert_eq!(run_str("cmp --expect regressions"), 2);
+    }
+
+    #[test]
+    fn rank_ranks_machines_and_exports() {
+        let dir = std::env::temp_dir().join("exacb-rank-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let json = dir.join("rows.json");
+        let csv = dir.join("rows.csv");
+        assert_eq!(
+            run_str(&format!(
+                "rank --machines jupiter,jedi --apps 2 --days 2 --seed 7 --groups true \
+                 --export-json {} --export-csv {}",
+                json.display(),
+                csv.display()
+            )),
+            0
+        );
+        let doc = std::fs::read_to_string(&json).unwrap();
+        assert!(crate::util::json::Json::parse(&doc).unwrap().as_arr().unwrap().len() > 0);
+        let csv_text = std::fs::read_to_string(&csv).unwrap();
+        assert!(csv_text.starts_with("app,machine,metric,nodes,"));
+        assert_eq!(run_str("rank --machines jupiter"), 2);
+    }
+
+    #[test]
     fn concurrent_collection_runs() {
         assert_eq!(
             run_str(
@@ -725,10 +1054,12 @@ mod tests {
     fn help_lists_every_subcommand_with_a_description() {
         // keep in sync with the dispatcher match in `run` (that is the
         // point: this list fails loudly when the two drift apart)
-        const SUBCOMMANDS: [&str; 11] = [
+        const SUBCOMMANDS: [&str; 13] = [
             "quickstart",
             "collection",
             "track",
+            "cmp",
+            "rank",
             "jureap",
             "energy",
             "figures",

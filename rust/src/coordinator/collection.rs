@@ -453,7 +453,7 @@ fn summarize(
         for app in apps.iter().filter(|a| a.maturity == maturity) {
             n_apps += 1;
             if let Some(repo) = world.repo(&app.name) {
-                let (set, _) = ReportSet::load(&repo.store, "exacb.data", "");
+                let (set, _) = repo.with_snapshot(|snap| ReportSet::from_snapshot(snap, ""));
                 reports_recorded += set.len();
                 let (o, t) = set.success_counts();
                 ok += o;
@@ -478,7 +478,7 @@ fn summarize(
         for app in apps.iter().filter(|a| a.domain == domain) {
             n_apps += 1;
             if let Some(repo) = world.repo(&app.name) {
-                let (set, _) = ReportSet::load(&repo.store, "exacb.data", "");
+                let (set, _) = repo.with_snapshot(|snap| ReportSet::from_snapshot(snap, ""));
                 tts.extend(set.time_series("tts").iter().map(|(_, v)| *v));
             }
         }

@@ -38,7 +38,9 @@ fn u64_list(inputs: &Json, key: &str) -> Vec<u64> {
 }
 
 fn load_set(repo: &BenchmarkRepo, prefix: &str, inputs: &Json) -> (ReportSet, usize) {
-    let (set, skipped) = ReportSet::load(&repo.store, "exacb.data", prefix);
+    // read via the repo's shared snapshot (DESIGN.md §12): analysis
+    // jobs dispatched per pipeline stop re-walking the whole branch
+    let (set, skipped) = repo.with_snapshot(|snap| ReportSet::from_snapshot(snap, prefix));
     let set = set.filter_pipelines(&u64_list(inputs, "pipeline"));
     let span = str_list(inputs, "time_span");
     let from = span.first().and_then(|s| SimTime::parse(s));
@@ -55,7 +57,7 @@ fn load_set(repo: &BenchmarkRepo, prefix: &str, inputs: &Json) -> (ReportSet, us
 pub fn collection_results_table(world: &World, metric: &str) -> Table {
     let mut rows: Vec<Vec<String>> = Vec::new();
     for (name, repo) in &world.repos {
-        let (set, _) = ReportSet::load(&repo.store, "exacb.data", "");
+        let (set, _) = repo.with_snapshot(|snap| ReportSet::from_snapshot(snap, ""));
         for (_, r) in &set.reports {
             for e in &r.data {
                 if !e.success {

@@ -6,9 +6,11 @@
 //! its CI configuration, optional platform configuration (e.g. launcher
 //! selection for energy studies), and its own `exacb.data` branch.
 
+use std::cell::RefCell;
+
 use crate::ci::CiConfig;
 use crate::harness::BenchmarkSpec;
-use crate::store::DataStore;
+use crate::store::{DataStore, Snapshot};
 use crate::workloads::portfolio::Maturity;
 
 /// One benchmark repository.
@@ -24,6 +26,12 @@ pub struct BenchmarkRepo {
     pub maturity: Maturity,
     /// Current HEAD commit hash of the source tree (provenance).
     pub commit: String,
+    /// Lazily built, incrementally refreshed read-side view of the
+    /// `exacb.data` branch (DESIGN.md §12). Interior-mutable so every
+    /// reader — gates firing through the event loop, a-posteriori
+    /// tables, audits — shares one snapshot and pays O(delta), not a
+    /// full store re-walk, per access.
+    snapshot: RefCell<Option<Snapshot>>,
 }
 
 impl BenchmarkRepo {
@@ -34,7 +42,36 @@ impl BenchmarkRepo {
             store: DataStore::new(),
             maturity: Maturity::Runnability,
             commit: crate::util::short_hash(name.as_bytes()),
+            snapshot: RefCell::new(None),
         }
+    }
+
+    /// Run `f` against an up-to-date [`Snapshot`] of this repository's
+    /// `exacb.data` branch: built O(history) on first use, then
+    /// refreshed O(delta) (only commits newer than the snapshot's
+    /// recorded head are consumed). `f` must not re-enter the snapshot
+    /// of the same repository (interior mutability).
+    pub fn with_snapshot<R>(&self, f: impl FnOnce(&Snapshot) -> R) -> R {
+        let mut guard = self.snapshot.borrow_mut();
+        match guard.as_mut() {
+            Some(snap) => {
+                snap.refresh(&self.store);
+            }
+            None => *guard = Some(Snapshot::build(&self.store, "exacb.data")),
+        }
+        f(guard.as_ref().expect("snapshot populated above"))
+    }
+
+    /// Incrementality counters of the cached snapshot:
+    /// `(scratch builds, fresh commits consumed)`; `(0, 0)` before any
+    /// reader touched it. Over append-only histories the first
+    /// component stays 1 — the observable the O(delta) tests pin.
+    pub fn snapshot_stats(&self) -> (usize, usize) {
+        self.snapshot
+            .borrow()
+            .as_ref()
+            .map(|s| (s.rebuilds(), s.commits_consumed()))
+            .unwrap_or((0, 0))
     }
 
     pub fn with_file(mut self, path: &str, content: &str) -> BenchmarkRepo {
@@ -183,6 +220,30 @@ mod tests {
         let repo = BenchmarkRepo::new("empty");
         assert!(repo.ci_config().is_err());
         assert!(repo.benchmark_spec("nope.yml").is_err());
+    }
+
+    #[test]
+    fn with_snapshot_builds_once_then_refreshes_o_delta() {
+        use crate::util::timeutil::SimTime;
+        let mut repo = BenchmarkRepo::new("snap");
+        repo.store.commit(
+            "exacb.data",
+            &[("a/1/report.json".into(), "{}".into())],
+            "one",
+            SimTime(0),
+        );
+        assert_eq!(repo.snapshot_stats(), (0, 0));
+        assert_eq!(repo.with_snapshot(|s| s.path_count()), 1);
+        assert_eq!(repo.snapshot_stats(), (1, 0));
+        repo.store.commit(
+            "exacb.data",
+            &[("a/2/report.json".into(), "{}".into())],
+            "two",
+            SimTime(1),
+        );
+        assert_eq!(repo.with_snapshot(|s| s.path_count()), 2);
+        // one scratch build ever; the second read consumed one commit
+        assert_eq!(repo.snapshot_stats(), (1, 1));
     }
 
     #[test]

@@ -259,7 +259,10 @@ fn analysis_job(
         &format!("{}.energy-analysis", base.prefix),
     );
     job.state = CiJobState::Running;
-    let (set, _) = ReportSet::load(&repo.store, "exacb.data", &format!("{}.f", base.prefix));
+    // read via the repo's shared snapshot (DESIGN.md §12): per-sweep
+    // analysis jobs stop re-walking the whole branch
+    let (set, _) =
+        repo.with_snapshot(|snap| ReportSet::from_snapshot(snap, &format!("{}.f", base.prefix)));
     let Some(sweep) = EnergySweep::from_set(&set, &base.prefix) else {
         job.log_line("not enough energy points for a sweep");
         job.state = CiJobState::Failed;
@@ -769,18 +772,19 @@ pub fn energy_table(world: &World) -> Table {
     ]);
     let mut rows: Vec<Vec<String>> = Vec::new();
     for repo in world.repos.values() {
-        let mut bases: Vec<String> = repo
-            .store
-            .list("exacb.data", "")
-            .into_iter()
-            .filter_map(|p| {
-                sweep_base(p.split('/').next().unwrap_or("")).map(str::to_string)
-            })
-            .collect();
+        // eligibility scan through the snapshot: list + per-base loads
+        // share one O(delta)-refreshed view of the branch
+        let mut bases: Vec<String> = repo.with_snapshot(|snap| {
+            snap.list("")
+                .into_iter()
+                .filter_map(|p| sweep_base(p.split('/').next().unwrap_or("")).map(str::to_string))
+                .collect()
+        });
         bases.sort();
         bases.dedup();
         for base in bases {
-            let (set, _) = ReportSet::load(&repo.store, "exacb.data", &format!("{base}.f"));
+            let (set, _) =
+                repo.with_snapshot(|snap| ReportSet::from_snapshot(snap, &format!("{base}.f")));
             if let Some(s) = EnergySweep::from_set(&set, &base) {
                 let system = set
                     .reports

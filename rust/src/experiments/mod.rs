@@ -136,7 +136,7 @@ pub fn fig3(days: i64, seed: u64) -> ExperimentResult {
 
     let labels = ["copy", "mul", "add", "triad", "dot"];
     let repo = world.repo("stream").unwrap();
-    let (set, _) = ReportSet::load(&repo.store, "exacb.data", "jupiter.stream/");
+    let (set, _) = repo.with_snapshot(|snap| ReportSet::from_snapshot(snap, "jupiter.stream/"));
     let mut table = Table::new(&["date", "copy", "mul", "add", "triad", "dot"]);
     let series: Vec<Vec<(SimTime, f64)>> = labels
         .iter()
@@ -187,7 +187,8 @@ pub fn fig4(days: i64, seed: u64) -> ExperimentResult {
     run_daily(&mut world, "graph500", days);
 
     let repo = world.repo("graph500").unwrap();
-    let (set, _) = ReportSet::load(&repo.store, "exacb.data", "jupiter.graph500/");
+    let (set, _) =
+        repo.with_snapshot(|snap| ReportSet::from_snapshot(snap, "jupiter.graph500/"));
     let bfs = set.time_series("bfs_gteps");
     let sssp = set.time_series("sssp_gteps");
     let mut table = Table::new(&["date", "bfs_gteps", "sssp_gteps"]);
@@ -266,7 +267,7 @@ include:
     let mut merged = ReportSet::default();
     for machine in ["jedi", "juwels-booster", "jureca"] {
         let repo = world.repo(&format!("scaling-{machine}")).unwrap();
-        let (set, _) = ReportSet::load(&repo.store, "exacb.data", "");
+        let (set, _) = repo.with_snapshot(|snap| ReportSet::from_snapshot(snap, ""));
         merged.reports.extend(set.reports);
     }
     let systems = merged.systems();
@@ -347,7 +348,7 @@ include:
         world.add_repo(repo);
         world.run_pipeline(&name, Trigger::Manual).unwrap();
         let repo = world.repo(&name).unwrap();
-        let (set, _) = ReportSet::load(&repo.store, "exacb.data", "");
+        let (set, _) = repo.with_snapshot(|snap| ReportSet::from_snapshot(snap, ""));
         // the bw table is a nested metric: [[size, bw], ...]
         let mut curve = Vec::new();
         for (_, r) in &set.reports {
@@ -425,7 +426,7 @@ include:
         world.add_repo(repo);
         world.run_pipeline(&name, Trigger::Manual).unwrap();
         let repo = world.repo(&name).unwrap();
-        let (set, _) = ReportSet::load(&repo.store, "exacb.data", "");
+        let (set, _) = repo.with_snapshot(|snap| ReportSet::from_snapshot(snap, ""));
         let w = WeakScaling::from_set(&set, &format!("stage {stage}"), "runtime").unwrap();
         for (i, &(n, t)) in w.runtimes.iter().enumerate() {
             table.push_row(vec![
@@ -557,7 +558,7 @@ include:
         world.add_repo(repo);
         world.run_pipeline(name, Trigger::Manual).unwrap();
         let repo = world.repo(name).unwrap();
-        let (set, _) = ReportSet::load(&repo.store, "exacb.data", "");
+        let (set, _) = repo.with_snapshot(|snap| ReportSet::from_snapshot(snap, ""));
         // reports live under the execution prefix "jedi.{name}", which is
         // what from_set filters on (DESIGN.md §11)
         let sweep =

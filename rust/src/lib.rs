@@ -31,6 +31,7 @@ pub mod analysis;
 pub mod coordinator;
 pub mod tracking;
 pub mod maturity;
+pub mod query;
 pub mod experiments;
 pub mod bench;
 pub mod cli;

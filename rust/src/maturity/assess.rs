@@ -20,8 +20,8 @@
 use std::collections::{BTreeMap, BTreeSet};
 
 use crate::coordinator::BenchmarkRepo;
-use crate::protocol::{Report, BASE_COLUMNS};
-use crate::store::DataStore;
+use crate::protocol::Report;
+use crate::store::{DataStore, Snapshot};
 use crate::util::timeutil::SimTime;
 use crate::util::wide_hash;
 use crate::workloads::portfolio::Maturity;
@@ -80,16 +80,7 @@ pub struct Assessment {
     paths: BTreeMap<String, BTreeSet<String>>,
 }
 
-/// Does a `results.csv` text honour the Table-I contract (base columns
-/// present, in order, before any additional metric columns)?
-pub fn csv_honours_contract(csv: &str) -> bool {
-    let Some(header) = csv.lines().next() else {
-        return false;
-    };
-    let cols: Vec<&str> = header.split(',').collect();
-    cols.len() >= BASE_COLUMNS.len()
-        && cols[..BASE_COLUMNS.len()] == BASE_COLUMNS[..]
-}
+pub use crate::protocol::csv_honours_contract;
 
 impl Assessment {
     pub fn new(cfg: &CriteriaConfig) -> Assessment {
@@ -109,7 +100,16 @@ impl Assessment {
         };
         let digest = wide_hash(document.as_bytes());
         let csv_ok = csv.map(csv_honours_contract).unwrap_or(false);
-        let entry = self.facts.entry(digest.clone()).or_insert_with(|| {
+        self.ingest_parsed(path, &digest, &report, csv_ok);
+        true
+    }
+
+    /// Ingest one already-parsed report with its precomputed content
+    /// digest and sibling-CSV verdict — the [`Snapshot`] fast path.
+    /// Facts are derived exactly as in [`Assessment::ingest`], so both
+    /// paths fold to byte-identical evidence (differentially tested).
+    pub fn ingest_parsed(&mut self, path: &str, digest: &str, report: &Report, csv_ok: bool) {
+        let entry = self.facts.entry(digest.to_string()).or_insert_with(|| {
             let success =
                 !report.data.is_empty() && report.data.iter().all(|e| e.success);
             let instrumented = report.data.iter().any(|e| {
@@ -135,13 +135,19 @@ impl Assessment {
         // order-independent and monotone (a later sibling-less ingest
         // must not revoke already-earned csv evidence)
         entry.csv_ok |= csv_ok;
-        self.paths.entry(digest).or_default().insert(path.to_string());
-        true
+        self.paths
+            .entry(digest.to_string())
+            .or_default()
+            .insert(path.to_string());
     }
 
     /// Reconstruct evidence from every `report.json` under `prefix` on
     /// `branch`, pairing each with its sibling `results.csv`. Returns
     /// the assessment and the count of unparseable documents skipped.
+    ///
+    /// This is the legacy full-walk path, retained as the executable
+    /// differential reference for [`Assessment::from_snapshot`] — the
+    /// gate and audits read via the snapshot.
     pub fn from_store(
         store: &DataStore,
         branch: &str,
@@ -150,14 +156,39 @@ impl Assessment {
     ) -> (Assessment, usize) {
         let mut a = Assessment::new(cfg);
         let mut skipped = 0;
-        for (path, content) in store.read_all(branch, prefix) {
+        for (path, content) in store.read_all_iter(branch, prefix) {
             if !path.ends_with("report.json") {
                 continue;
             }
             let csv_path = format!("{}results.csv", path.trim_end_matches("report.json"));
             let csv = store.read(branch, &csv_path).ok();
-            if !a.ingest(&path, &content, csv) {
+            if !a.ingest(path, content, csv) {
                 skipped += 1;
+            }
+        }
+        (a, skipped)
+    }
+
+    /// Reconstruct evidence from a [`Snapshot`] — same read discipline
+    /// and same evidence as [`Assessment::from_store`] (differentially
+    /// tested), with every document parsed and every CSV judged exactly
+    /// once, at snapshot build time.
+    pub fn from_snapshot(
+        snap: &Snapshot,
+        prefix: &str,
+        cfg: &CriteriaConfig,
+    ) -> (Assessment, usize) {
+        let mut a = Assessment::new(cfg);
+        let mut skipped = 0;
+        for (path, digest) in snap.paths_under(prefix) {
+            if !path.ends_with("report.json") {
+                continue;
+            }
+            let csv_path = format!("{}results.csv", path.trim_end_matches("report.json"));
+            let csv_ok = snap.csv_ok_at(&csv_path);
+            match snap.doc(digest).and_then(|d| d.report.as_ref()) {
+                Some(report) => a.ingest_parsed(path, digest, report, csv_ok),
+                None => skipped += 1,
             }
         }
         (a, skipped)
@@ -236,7 +267,7 @@ impl MaturityState {
 
 /// Assess one repository's whole recorded history (no recency window).
 pub fn assess_repo(repo: &BenchmarkRepo, cfg: &CriteriaConfig) -> MaturityState {
-    let (a, skipped) = Assessment::from_store(&repo.store, "exacb.data", "", cfg);
+    let (a, skipped) = repo.with_snapshot(|snap| Assessment::from_snapshot(snap, "", cfg));
     let evidence = a.evidence(None);
     MaturityState {
         app: repo.name.clone(),

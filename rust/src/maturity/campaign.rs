@@ -434,19 +434,45 @@ mod tests {
             out.transitions
         );
         assert_eq!(energy_eligible(&sc, &world), vec!["golden".to_string()]);
-        // the audit wave replayed: cache evidence exists in the store
+        // the audit wave replayed: cache evidence exists in the store.
+        // Read through the shared snapshot — a byte-identical replay is
+        // two store paths mapping to one content digest.
         let repo = world.repo("golden").unwrap();
-        let docs: Vec<String> = repo
-            .store
-            .read_all("exacb.data", "")
-            .into_iter()
-            .filter(|(p, _)| p.ends_with("report.json"))
-            .map(|(_, c)| c)
-            .collect();
-        let mut sorted = docs.clone();
+        let digests: Vec<String> = repo.with_snapshot(|snap| {
+            snap.paths_under("")
+                .filter(|(p, _)| p.ends_with("report.json"))
+                .map(|(_, d)| d.to_string())
+                .collect()
+        });
+        let mut sorted = digests.clone();
         sorted.sort();
         sorted.dedup();
-        assert!(sorted.len() < docs.len(), "a byte-identical replay was committed");
+        assert!(sorted.len() < digests.len(), "a byte-identical replay was committed");
+    }
+
+    /// Pinning test for the gate's snapshot read path: on a real
+    /// onboarding store the legacy full walk and the snapshot fold to
+    /// the same evidence and the same skip count.
+    #[test]
+    fn snapshot_and_full_walk_assessments_agree() {
+        use crate::maturity::assess::Assessment;
+        use crate::maturity::criteria::CriteriaConfig;
+        let mut sc = tiny_scenario(6);
+        let mut app = tiny_app("golden", Maturity::Reproducibility);
+        app.instrument_from = Some(0);
+        app.verify_from = Some(0);
+        sc.apps.push(app);
+        let mut world = World::new(sc.seed);
+        run_onboarding(&mut world, &sc);
+        let repo = world.repo("golden").unwrap();
+        let cfg = CriteriaConfig::default();
+        let (walk, walk_skipped) =
+            Assessment::from_store(&repo.store, "exacb.data", "", &cfg);
+        let (snap_a, snap_skipped) =
+            repo.with_snapshot(|snap| Assessment::from_snapshot(snap, "", &cfg));
+        assert!(walk.evidence(None).reports > 0, "campaign recorded nothing");
+        assert_eq!(walk.evidence(None), snap_a.evidence(None));
+        assert_eq!(walk_skipped, snap_skipped);
     }
 
     #[test]

@@ -121,12 +121,12 @@ pub fn run_maturity_gate(
     } else {
         None
     };
-    let (assessment, skipped) = Assessment::from_store(
-        &repo.store,
-        "exacb.data",
-        &format!("{prefix}/"),
-        &policy.cfg,
-    );
+    // read via the shared snapshot (DESIGN.md §12): a gate firing
+    // through the event loop pays O(delta since last reader), not a
+    // full store re-walk per firing
+    let (assessment, skipped) = repo.with_snapshot(|snap| {
+        Assessment::from_snapshot(snap, &format!("{prefix}/"), &policy.cfg)
+    });
     let evidence = assessment.evidence(since_day);
     let earned = earned_level(&evidence, &policy.cfg);
     let declared = repo.maturity;

@@ -26,6 +26,18 @@ pub const BASE_COLUMNS: [&str; 10] = [
     "success",
 ];
 
+/// Does a `results.csv` text honour the Table-I contract (base columns
+/// present, in order, before any additional metric columns)? Both the
+/// maturity assessor and the store snapshot judge CSV artifacts through
+/// this one predicate, so they can never disagree.
+pub fn csv_honours_contract(csv: &str) -> bool {
+    let Some(header) = csv.lines().next() else {
+        return false;
+    };
+    let cols: Vec<&str> = header.split(',').collect();
+    cols.len() >= BASE_COLUMNS.len() && cols[..BASE_COLUMNS.len()] == BASE_COLUMNS[..]
+}
+
 /// Render one or more protocol reports as a Table-I `results.csv` table.
 pub fn results_table(reports: &[&Report]) -> Table {
     // Collect the union of metric names across all entries.

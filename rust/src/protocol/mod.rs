@@ -21,7 +21,7 @@ pub mod migrate;
 pub mod provenance;
 pub mod report;
 
-pub use csv::{results_csv, results_table, BASE_COLUMNS};
+pub use csv::{csv_honours_contract, results_csv, results_table, BASE_COLUMNS};
 pub use provenance::{
     parse_provenance, provenance_document, CacheOutcome, StepProvenance,
 };

@@ -1,0 +1,282 @@
+//! Pairwise engine comparison with Welch confidence intervals
+//! (`exacb cmp`, DESIGN.md §12).
+//!
+//! Given a canonical row set, a baseline and a candidate engine label
+//! (two machines, or two source commits), every shared
+//! (workload, metric, nodes) group gets a speedup ratio and a Welch
+//! interval on the difference of means ([`crate::tracking::stats`]);
+//! the report's verdict per group is `faster` / `slower` /
+//! `indistinguishable` / `insufficient`, lower-is-better. Grouping
+//! fans out across shards ([`super::group_values`]), so comparing a
+//! large collection parallelises while staying bit-identical to the
+//! sequential fold.
+
+use super::{base_app, group_values, Engine};
+use crate::store::{fan_shards, Row};
+use crate::tracking::stats::{welch_interval, ConfInterval};
+use crate::util::table::Table;
+
+/// One compared (workload, metric, nodes) group.
+#[derive(Debug, Clone)]
+pub struct CmpRow {
+    /// Workload label (store app with the machine prefix stripped).
+    pub app: String,
+    /// Metric name (lower-is-better convention).
+    pub metric: String,
+    /// Node count.
+    pub nodes: u64,
+    /// Sample counts on each side.
+    pub n_baseline: usize,
+    pub n_candidate: usize,
+    /// Mean metric value on each side.
+    pub mean_baseline: f64,
+    pub mean_candidate: f64,
+    /// `mean_baseline / mean_candidate` — > 1 means the candidate is
+    /// faster (lower-is-better).
+    pub speedup: f64,
+    /// Welch interval on `mean(candidate) − mean(baseline)`; `None`
+    /// when either side has fewer than two samples.
+    pub interval: Option<ConfInterval>,
+    /// `faster` / `slower` / `indistinguishable` / `insufficient`.
+    pub verdict: &'static str,
+}
+
+/// The full comparison: per-group rows plus collection-wide summary.
+#[derive(Debug, Clone)]
+pub struct CmpReport {
+    /// Engine axis the labels come from.
+    pub engine: Engine,
+    pub baseline: String,
+    pub candidate: String,
+    pub confidence: f64,
+    /// One row per (workload, metric, nodes) group present on *both*
+    /// sides, in group order.
+    pub rows: Vec<CmpRow>,
+    /// Groups observed on only one side (coverage gaps are findings,
+    /// not silent drops).
+    pub only_baseline: usize,
+    pub only_candidate: usize,
+}
+
+impl CmpReport {
+    pub fn count(&self, verdict: &str) -> usize {
+        self.rows.iter().filter(|r| r.verdict == verdict).count()
+    }
+
+    /// Geometric mean of the finite positive per-group speedups — the
+    /// collection-wide headline number (> 1: candidate faster overall).
+    pub fn geomean_speedup(&self) -> Option<f64> {
+        let lns: Vec<f64> = self
+            .rows
+            .iter()
+            .map(|r| r.speedup)
+            .filter(|s| s.is_finite() && *s > 0.0)
+            .map(f64::ln)
+            .collect();
+        if lns.is_empty() {
+            return None;
+        }
+        Some((lns.iter().sum::<f64>() / lns.len() as f64).exp())
+    }
+
+    /// Render the per-group comparison as a table.
+    pub fn table(&self) -> Table {
+        let mut t = Table::new(&[
+            "workload", "metric", "nodes", "n", "baseline", "candidate", "speedup", "ci_lo",
+            "ci_hi", "verdict",
+        ]);
+        if self.rows.is_empty() {
+            t.push_placeholder("(no shared workload groups)");
+            return t;
+        }
+        for r in &self.rows {
+            t.push_row(vec![
+                r.app.clone(),
+                r.metric.clone(),
+                r.nodes.to_string(),
+                format!("{}/{}", r.n_baseline, r.n_candidate),
+                format!("{:.4}", r.mean_baseline),
+                format!("{:.4}", r.mean_candidate),
+                format!("{:.3}", r.speedup),
+                r.interval
+                    .as_ref()
+                    .map(|i| format!("{:+.4}", i.lo))
+                    .unwrap_or_else(|| "-".to_string()),
+                r.interval
+                    .as_ref()
+                    .map(|i| format!("{:+.4}", i.hi))
+                    .unwrap_or_else(|| "-".to_string()),
+                r.verdict.to_string(),
+            ]);
+        }
+        t
+    }
+}
+
+/// Compare `candidate` against `baseline` along the `engine` axis over
+/// a canonical row set. Groups are keyed by (workload, metric, nodes);
+/// `shards` bounds the fan-out (1 = sequential; results are identical
+/// either way, property-tested).
+pub fn compare(
+    rows: &[Row],
+    engine: Engine,
+    baseline: &str,
+    candidate: &str,
+    confidence: f64,
+    shards: usize,
+) -> CmpReport {
+    // one sharded grouping pass; the side tag is part of the key so a
+    // single merge yields both sides in group order
+    let grouped = group_values(rows, shards, |r| {
+        let label = engine.of(r);
+        let side = if label == baseline {
+            false
+        } else if label == candidate {
+            true
+        } else {
+            return None;
+        };
+        let app = match engine {
+            Engine::Machine => base_app(&r.app, &r.machine).to_string(),
+            Engine::Commit => r.app.clone(),
+        };
+        Some(((app, r.metric.clone(), r.nodes), side))
+    });
+    // pair the sides back up per (app, metric, nodes)
+    let mut pairs: std::collections::BTreeMap<(String, String, u64), (Vec<f64>, Vec<f64>)> =
+        std::collections::BTreeMap::new();
+    for ((key, side), vs) in grouped {
+        let slot = pairs.entry(key).or_default();
+        if side {
+            slot.1 = vs;
+        } else {
+            slot.0 = vs;
+        }
+    }
+    let mut only_baseline = 0;
+    let mut only_candidate = 0;
+    let shared: Vec<((String, String, u64), (Vec<f64>, Vec<f64>))> = pairs
+        .into_iter()
+        .filter(|(_, (b, c))| {
+            if b.is_empty() {
+                only_candidate += 1;
+            }
+            if c.is_empty() {
+                only_baseline += 1;
+            }
+            !b.is_empty() && !c.is_empty()
+        })
+        .collect();
+    // per-group statistics fan out too; fan_shards preserves item order
+    let rows = fan_shards(&shared, shards, |((app, metric, nodes), (base, cand))| {
+        let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len() as f64;
+        let mb = mean(base);
+        let mc = mean(cand);
+        let interval = welch_interval(base, cand, confidence);
+        let verdict = match &interval {
+            // interval is on mean(candidate) − mean(baseline): entirely
+            // above zero = candidate takes longer = slower
+            Some(i) if i.entirely_above(0.0) => "slower",
+            Some(i) if i.entirely_below(0.0) => "faster",
+            Some(_) => "indistinguishable",
+            None => "insufficient",
+        };
+        CmpRow {
+            app: app.clone(),
+            metric: metric.clone(),
+            nodes: *nodes,
+            n_baseline: base.len(),
+            n_candidate: cand.len(),
+            mean_baseline: mb,
+            mean_candidate: mc,
+            speedup: mb / mc,
+            interval,
+            verdict,
+        }
+    });
+    CmpReport {
+        engine,
+        baseline: baseline.to_string(),
+        candidate: candidate.to_string(),
+        confidence,
+        rows,
+        only_baseline,
+        only_candidate,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::synthetic_row;
+    use super::*;
+
+    /// 8 repeats per side; candidate 20% faster on `a`, identical on
+    /// `b`, only-baseline on `c`.
+    fn fixture() -> Vec<Row> {
+        let mut rows = Vec::new();
+        for i in 0..8i64 {
+            let jitter = i as f64 * 0.003;
+            rows.push(synthetic_row("a", "base", "runtime", 1, i, "c0", 10.0 + jitter));
+            rows.push(synthetic_row("a", "cand", "runtime", 1, i, "c0", 8.0 + jitter));
+            rows.push(synthetic_row("b", "base", "runtime", 2, i, "c0", 5.0 + jitter));
+            rows.push(synthetic_row("b", "cand", "runtime", 2, i, "c0", 5.0 + jitter));
+            rows.push(synthetic_row("c", "base", "runtime", 1, i, "c0", 1.0));
+        }
+        rows
+    }
+
+    #[test]
+    fn detects_faster_and_indistinguishable_groups() {
+        let report = compare(&fixture(), Engine::Machine, "base", "cand", 0.95, 1);
+        assert_eq!(report.rows.len(), 2);
+        assert_eq!(report.only_baseline, 1);
+        assert_eq!(report.only_candidate, 0);
+        let a = &report.rows[0];
+        assert_eq!((a.app.as_str(), a.nodes), ("a", 1));
+        assert_eq!(a.verdict, "faster");
+        assert!(a.speedup > 1.2 && a.speedup < 1.3, "{}", a.speedup);
+        assert!(a.interval.as_ref().unwrap().entirely_below(0.0));
+        let b = &report.rows[1];
+        assert_eq!(b.verdict, "indistinguishable");
+        let g = report.geomean_speedup().unwrap();
+        assert!(g > 1.0 && g < a.speedup, "{g}");
+        assert!(report.table().render().contains("faster"));
+    }
+
+    #[test]
+    fn swapping_sides_inverts_the_verdicts() {
+        let fwd = compare(&fixture(), Engine::Machine, "base", "cand", 0.95, 1);
+        let rev = compare(&fixture(), Engine::Machine, "cand", "base", 0.95, 1);
+        assert_eq!(fwd.rows.len(), rev.rows.len());
+        for (f, r) in fwd.rows.iter().zip(&rev.rows) {
+            let inverted = match f.verdict {
+                "faster" => "slower",
+                "slower" => "faster",
+                v => v,
+            };
+            assert_eq!(r.verdict, inverted, "{}", f.app);
+            assert!((f.speedup * r.speedup - 1.0).abs() < 1e-12);
+        }
+        assert_eq!(rev.only_candidate, 1); // `c` flips sides
+    }
+
+    #[test]
+    fn shard_count_does_not_change_the_report() {
+        let seq = compare(&fixture(), Engine::Machine, "base", "cand", 0.95, 1);
+        for shards in [2, 4, 64] {
+            let par = compare(&fixture(), Engine::Machine, "base", "cand", 0.95, shards);
+            assert_eq!(seq.table().render(), par.table().render(), "shards={shards}");
+        }
+    }
+
+    #[test]
+    fn single_samples_are_insufficient_not_wrong() {
+        let rows = vec![
+            synthetic_row("a", "base", "runtime", 1, 0, "c0", 10.0),
+            synthetic_row("a", "cand", "runtime", 1, 0, "c0", 5.0),
+        ];
+        let report = compare(&rows, Engine::Machine, "base", "cand", 0.95, 1);
+        assert_eq!(report.rows[0].verdict, "insufficient");
+        assert!((report.rows[0].speedup - 2.0).abs() < 1e-12);
+    }
+}

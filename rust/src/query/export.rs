@@ -1,0 +1,131 @@
+//! Portable row export (DESIGN.md §12).
+//!
+//! `exacb cmp`/`exacb rank` can dump the exact row set a query ran
+//! over, so external dashboards reproduce the verdicts from the same
+//! data. JSON follows the github-action-benchmark convention — an
+//! array of `{name, unit, value, extra}` points where `extra` carries
+//! full provenance (machine, commit SHA, seed, pipeline, date,
+//! observation digest); CSV is one flat provenance-first table.
+
+use crate::store::Row;
+use crate::util::json::Json;
+
+/// Measurement unit for a metric name; empty when unknown (external
+/// consumers treat the value as dimensionless).
+pub fn unit_for(metric: &str) -> &'static str {
+    match metric {
+        "runtime" => "s",
+        "energy_j" => "J",
+        "edp" => "Js",
+        "power_w" => "W",
+        _ => "",
+    }
+}
+
+/// Export rows as a github-action-benchmark style JSON array. Rows are
+/// emitted in input order, so a canonical row set exports canonically.
+pub fn rows_to_json(rows: &[Row]) -> Json {
+    let mut arr = Json::arr();
+    for r in rows {
+        arr.push(
+            Json::obj()
+                .set(
+                    "name",
+                    format!("{}/{}@{}n/{}", r.app, r.metric, r.nodes, r.machine),
+                )
+                .set("unit", unit_for(&r.metric))
+                .set("value", r.value)
+                .set(
+                    "extra",
+                    Json::obj()
+                        .set("machine", r.machine.as_str())
+                        .set("commit", r.commit.as_str())
+                        .set("seed", r.seed)
+                        .set("pipeline", r.pipeline_id)
+                        .set("nodes", r.nodes)
+                        .set("date", r.time.date_string())
+                        .set("digest", r.digest.as_str()),
+                ),
+        );
+    }
+    arr
+}
+
+/// Header of the flat CSV export, provenance first.
+pub const EXPORT_COLUMNS: [&str; 9] = [
+    "app", "machine", "metric", "nodes", "pipeline", "commit", "seed", "date", "value",
+];
+
+/// Export rows as one flat CSV table (header + one line per row, input
+/// order). Values render with enough precision to round-trip f64.
+pub fn rows_to_csv(rows: &[Row]) -> String {
+    let mut out = EXPORT_COLUMNS.join(",");
+    out.push('\n');
+    for r in rows {
+        out.push_str(&format!(
+            "{},{},{},{},{},{},{},{},{:?}\n",
+            r.app,
+            r.machine,
+            r.metric,
+            r.nodes,
+            r.pipeline_id,
+            r.commit,
+            r.seed,
+            r.time.date_string(),
+            r.value
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::synthetic_row;
+    use super::*;
+
+    #[test]
+    fn json_round_trips_with_full_provenance() {
+        let rows = vec![
+            synthetic_row("stream", "jedi", "runtime", 4, 3, "abc123", 1.5),
+            synthetic_row("stream", "jedi", "energy_j", 4, 3, "abc123", 250.0),
+        ];
+        let doc = rows_to_json(&rows);
+        let parsed = Json::parse(&doc.pretty()).unwrap();
+        let pts = parsed.as_arr().unwrap();
+        assert_eq!(pts.len(), 2);
+        assert_eq!(
+            pts[0].str_of("name").unwrap(),
+            "jedi.stream/runtime@4n/jedi"
+        );
+        assert_eq!(pts[0].str_of("unit"), Some("s"));
+        assert_eq!(pts[1].str_of("unit"), Some("J"));
+        let extra = pts[0].get("extra").unwrap();
+        assert_eq!(extra.str_of("commit"), Some("abc123"));
+        assert_eq!(extra.u64_of("seed"), Some(7));
+        assert_eq!(extra.u64_of("nodes"), Some(4));
+        assert_eq!(extra.str_of("date"), Some("2026-01-04"));
+        assert_eq!(extra.str_of("digest").map(str::len), Some(32));
+    }
+
+    #[test]
+    fn csv_has_the_documented_header_and_roundtrip_values() {
+        let rows = vec![synthetic_row("a", "m", "bw", 1, 0, "c0", 0.1 + 0.2)];
+        let csv = rows_to_csv(&rows);
+        let mut lines = csv.lines();
+        assert_eq!(lines.next().unwrap(), EXPORT_COLUMNS.join(","));
+        let data = lines.next().unwrap();
+        let cols: Vec<&str> = data.split(',').collect();
+        assert_eq!(cols.len(), EXPORT_COLUMNS.len());
+        assert_eq!(cols[0], "m.a");
+        // {:?} prints the shortest representation that parses back to
+        // the same f64 — exports never lose precision
+        assert_eq!(cols[8].parse::<f64>().unwrap(), 0.1 + 0.2);
+        assert!(lines.next().is_none());
+    }
+
+    #[test]
+    fn unknown_metrics_export_dimensionless() {
+        assert_eq!(unit_for("bananas_per_joule"), "");
+        assert_eq!(unit_for("edp"), "Js");
+    }
+}

@@ -1,0 +1,198 @@
+//! The a-posteriori query layer over digest-indexed snapshots
+//! (DESIGN.md §12).
+//!
+//! The paper's benchmark collections exist to be *queried*: "is this
+//! commit slower than that one?", "which machine wins on this workload
+//! portfolio?". This module answers those questions from
+//! [`crate::store::Snapshot`] row sets — reports were parsed once at
+//! snapshot build time, refreshes pay O(delta), and the snapshot is
+//! immutable while readers hold it, so the aggregation itself fans out
+//! across threads ([`crate::store::fan_chunks`]):
+//!
+//! * [`cmp`] — pairwise engine comparison with Welch confidence
+//!   intervals on the difference of means ([`crate::tracking::stats`])
+//!   and a geometric-mean speedup, behind `exacb cmp`;
+//! * [`rank`] — rebar-style rank aggregation: per-workload competition
+//!   ranks flattened into mean rank + geomean ratio-to-best, behind
+//!   `exacb rank`;
+//! * [`export`] — portable JSON/CSV row export carrying full
+//!   provenance (commit SHA, machine, seed, pipeline, date), in the
+//!   github-action-benchmark convention.
+//!
+//! Everything here is a pure function of a `&[Row]` slice in the
+//! canonical [`crate::store::sort_rows`] order, so results are
+//! independent of ingestion order and of the shard count
+//! (property-tested): shard-local partial aggregates are merged in
+//! shard order, which reproduces the sequential fold bit-for-bit —
+//! including floating-point sums.
+
+pub mod cmp;
+pub mod export;
+pub mod rank;
+
+pub use cmp::{compare, CmpReport, CmpRow};
+pub use export::{rows_to_csv, rows_to_json};
+pub use rank::{rank, AggregateRank, RankReport, RankedEngine, WorkloadRanking};
+
+use crate::coordinator::World;
+use crate::store::{sort_rows, Row};
+use std::collections::BTreeMap;
+
+/// What a comparison or ranking treats as the competing unit.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Engine {
+    /// Compare recording machines (cross-system queries).
+    Machine,
+    /// Compare source-commit SHAs (longitudinal queries).
+    Commit,
+}
+
+impl Engine {
+    /// The row field this engine axis reads.
+    pub fn of<'a>(&self, row: &'a Row) -> &'a str {
+        match self {
+            Engine::Machine => &row.machine,
+            Engine::Commit => &row.commit,
+        }
+    }
+}
+
+/// Strip the execution component's `{machine}.` store-prefix from an
+/// app label so the *same workload* recorded on different machines
+/// groups together (`jedi.stream` and `jupiter.stream` → `stream`).
+pub fn base_app<'a>(app: &'a str, machine: &str) -> &'a str {
+    app.strip_prefix(machine)
+        .and_then(|rest| rest.strip_prefix('.'))
+        .unwrap_or(app)
+}
+
+/// Every recorded observation across every repository in the world, in
+/// canonical order. Each repo is read through its shared snapshot, so
+/// repeated queries pay O(delta since the last reader).
+pub fn world_rows(world: &World) -> Vec<Row> {
+    let mut rows = Vec::new();
+    for repo in world.repos.values() {
+        rows.extend(repo.with_snapshot(|snap| snap.rows()));
+    }
+    sort_rows(&mut rows);
+    rows
+}
+
+/// Distinct commit SHAs ordered by the earliest time each was observed
+/// (ties broken by SHA). `exacb cmp --by commit` uses first/last as
+/// the baseline/candidate pair; the integration tests use it to name
+/// the pre-/post-injection commits of a planted regression.
+pub fn commits_by_first_seen(rows: &[Row]) -> Vec<String> {
+    let mut first: BTreeMap<&str, crate::util::timeutil::SimTime> = BTreeMap::new();
+    for r in rows {
+        let e = first.entry(&r.commit).or_insert(r.time);
+        if r.time < *e {
+            *e = r.time;
+        }
+    }
+    let mut order: Vec<(crate::util::timeutil::SimTime, &str)> =
+        first.into_iter().map(|(c, t)| (t, c)).collect();
+    order.sort();
+    order.into_iter().map(|(_, c)| c.to_string()).collect()
+}
+
+/// Shard-parallel grouping: fold `rows` into per-key `Vec<f64>` groups
+/// on every shard, then merge the shard-local maps **in shard order**.
+/// Chunks partition the slice in order, so per-key concatenation
+/// reproduces the sequential push order exactly — grouped values (and
+/// therefore every downstream floating-point fold) are bit-identical
+/// for any shard count.
+pub(crate) fn group_values<K: Ord + Send>(
+    rows: &[Row],
+    shards: usize,
+    key_of: impl Fn(&Row) -> Option<K> + Sync,
+) -> BTreeMap<K, Vec<f64>> {
+    let partials = crate::store::fan_chunks(rows, shards, |chunk| {
+        let mut m: BTreeMap<K, Vec<f64>> = BTreeMap::new();
+        for r in chunk {
+            if let Some(k) = key_of(r) {
+                m.entry(k).or_default().push(r.value);
+            }
+        }
+        m
+    });
+    let mut merged: BTreeMap<K, Vec<f64>> = BTreeMap::new();
+    for part in partials {
+        for (k, vs) in part {
+            merged.entry(k).or_default().extend(vs);
+        }
+    }
+    merged
+}
+
+#[cfg(test)]
+pub(crate) fn synthetic_row(
+    app: &str,
+    machine: &str,
+    metric: &str,
+    nodes: u64,
+    day: i64,
+    commit: &str,
+    value: f64,
+) -> Row {
+    Row {
+        app: format!("{machine}.{app}"),
+        machine: machine.to_string(),
+        metric: metric.to_string(),
+        nodes,
+        time: crate::util::timeutil::SimTime::from_days(day),
+        pipeline_id: 1,
+        commit: commit.to_string(),
+        seed: 7,
+        digest: crate::util::wide_hash(
+            format!("{app}|{machine}|{metric}|{nodes}|{day}|{commit}|{value}").as_bytes(),
+        ),
+        value,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn base_app_strips_only_its_own_machine_prefix() {
+        assert_eq!(base_app("jedi.stream", "jedi"), "stream");
+        assert_eq!(base_app("jedi.stream", "jupiter"), "jedi.stream");
+        assert_eq!(base_app("stream", "jedi"), "stream");
+        // a machine name that is a plain prefix (no dot) must not match
+        assert_eq!(base_app("jediXstream", "jedi"), "jediXstream");
+    }
+
+    #[test]
+    fn commits_ordered_by_first_observation() {
+        let rows = vec![
+            synthetic_row("a", "m", "runtime", 1, 5, "ccc", 1.0),
+            synthetic_row("a", "m", "runtime", 1, 1, "bbb", 1.0),
+            synthetic_row("a", "m", "runtime", 1, 3, "bbb", 1.0),
+            synthetic_row("a", "m", "runtime", 1, 2, "aaa", 1.0),
+        ];
+        assert_eq!(commits_by_first_seen(&rows), vec!["bbb", "aaa", "ccc"]);
+    }
+
+    #[test]
+    fn grouping_is_shard_count_independent() {
+        let mut rows = Vec::new();
+        for i in 0..97i64 {
+            rows.push(synthetic_row(
+                if i % 3 == 0 { "a" } else { "b" },
+                "m",
+                "runtime",
+                1 + (i % 4) as u64,
+                i,
+                "c0",
+                0.1 + i as f64 * 0.01,
+            ));
+        }
+        let seq = group_values(&rows, 1, |r| Some((r.app.clone(), r.nodes)));
+        for shards in [2, 3, 8, 200] {
+            let par = group_values(&rows, shards, |r| Some((r.app.clone(), r.nodes)));
+            assert_eq!(seq, par, "shards={shards}");
+        }
+    }
+}

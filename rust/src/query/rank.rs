@@ -1,0 +1,319 @@
+//! Rank aggregation across engines (`exacb rank`, DESIGN.md §12).
+//!
+//! The rebar-style answer to "which machine wins overall?": every
+//! (workload, metric, nodes) group ranks its engines by mean metric
+//! value (lower is better, competition ranking — ties share a rank),
+//! then the per-group ranks flatten into an aggregate per engine: mean
+//! rank, win count, and the geometric mean of each engine's
+//! ratio-to-best. Aggregating ratios instead of raw means keeps
+//! incomparable workloads (seconds vs joules, 10 s apps vs 10 000 s
+//! apps) from drowning each other out.
+
+use super::{base_app, group_values, Engine};
+use crate::store::Row;
+use crate::util::table::Table;
+use std::collections::BTreeMap;
+
+/// One engine's standing inside a single (workload, metric, nodes)
+/// group.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RankedEngine {
+    pub engine: String,
+    /// Samples behind the mean.
+    pub n: usize,
+    pub mean: f64,
+    /// Competition rank (1 = best; ties share the smaller rank).
+    pub rank: usize,
+    /// `mean / best_mean` in this group (1.0 for the winner).
+    pub ratio_to_best: f64,
+}
+
+/// One fully-ranked (workload, metric, nodes) group.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkloadRanking {
+    pub app: String,
+    pub metric: String,
+    pub nodes: u64,
+    /// Engines in rank order (ties in mean broken by engine label).
+    pub entries: Vec<RankedEngine>,
+}
+
+/// The aggregate standing of one engine across all groups it appears
+/// in.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AggregateRank {
+    pub engine: String,
+    /// Groups this engine was ranked in.
+    pub groups: usize,
+    /// Groups it won (rank 1, including shared wins).
+    pub wins: usize,
+    pub mean_rank: f64,
+    /// Geometric mean of its per-group ratio-to-best.
+    pub geomean_ratio: f64,
+}
+
+/// Per-group rankings plus the flattened aggregate.
+#[derive(Debug, Clone)]
+pub struct RankReport {
+    pub engine: Engine,
+    pub groups: Vec<WorkloadRanking>,
+    /// Aggregates sorted best-first by (mean rank, geomean ratio,
+    /// engine label).
+    pub aggregate: Vec<AggregateRank>,
+}
+
+impl RankReport {
+    /// Render the flattened aggregate as a table, best engine first.
+    pub fn table(&self) -> Table {
+        let mut t = Table::new(&[
+            "engine", "groups", "wins", "mean_rank", "geomean_ratio_to_best",
+        ]);
+        if self.aggregate.is_empty() {
+            t.push_placeholder("(no ranked groups)");
+            return t;
+        }
+        for a in &self.aggregate {
+            t.push_row(vec![
+                a.engine.clone(),
+                a.groups.to_string(),
+                a.wins.to_string(),
+                format!("{:.3}", a.mean_rank),
+                format!("{:.4}", a.geomean_ratio),
+            ]);
+        }
+        t
+    }
+
+    /// Render every per-group ranking as one long table.
+    pub fn groups_table(&self) -> Table {
+        let mut t = Table::new(&[
+            "workload", "metric", "nodes", "engine", "rank", "n", "mean", "ratio_to_best",
+        ]);
+        if self.groups.is_empty() {
+            t.push_placeholder("(no ranked groups)");
+            return t;
+        }
+        for g in &self.groups {
+            for e in &g.entries {
+                t.push_row(vec![
+                    g.app.clone(),
+                    g.metric.clone(),
+                    g.nodes.to_string(),
+                    e.engine.clone(),
+                    e.rank.to_string(),
+                    e.n.to_string(),
+                    format!("{:.4}", e.mean),
+                    format!("{:.4}", e.ratio_to_best),
+                ]);
+            }
+        }
+        t
+    }
+}
+
+/// Rank every engine along the `engine` axis over a canonical row set.
+/// Groups with a single engine are dropped (a walkover is not a win).
+/// `shards` bounds the grouping fan-out; the report is identical for
+/// any shard count (property-tested).
+pub fn rank(rows: &[Row], engine: Engine, shards: usize) -> RankReport {
+    let grouped = group_values(rows, shards, |r| {
+        let app = match engine {
+            Engine::Machine => base_app(&r.app, &r.machine).to_string(),
+            Engine::Commit => r.app.clone(),
+        };
+        Some(((app, r.metric.clone(), r.nodes), engine.of(r).to_string()))
+    });
+    // (workload key → engine → values); BTreeMap iteration keeps both
+    // levels deterministically ordered
+    let mut by_group: BTreeMap<(String, String, u64), BTreeMap<String, Vec<f64>>> =
+        BTreeMap::new();
+    for ((key, eng), vs) in grouped {
+        by_group.entry(key).or_default().insert(eng, vs);
+    }
+    let mut groups = Vec::new();
+    let mut agg: BTreeMap<String, (usize, usize, usize, f64)> = BTreeMap::new();
+    for ((app, metric, nodes), engines) in by_group {
+        if engines.len() < 2 {
+            continue;
+        }
+        let mut ranked: Vec<RankedEngine> = engines
+            .into_iter()
+            .map(|(engine, vs)| RankedEngine {
+                engine,
+                n: vs.len(),
+                mean: vs.iter().sum::<f64>() / vs.len() as f64,
+                rank: 0,
+                ratio_to_best: 0.0,
+            })
+            .collect();
+        ranked.sort_by(|a, b| {
+            a.mean
+                .partial_cmp(&b.mean)
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then_with(|| a.engine.cmp(&b.engine))
+        });
+        let best = ranked[0].mean;
+        for i in 0..ranked.len() {
+            // competition ranking: a tie shares the earlier rank
+            let rank = if i > 0 && ranked[i].mean == ranked[i - 1].mean {
+                ranked[i - 1].rank
+            } else {
+                i + 1
+            };
+            ranked[i].rank = rank;
+            ranked[i].ratio_to_best = if best > 0.0 {
+                ranked[i].mean / best
+            } else {
+                1.0
+            };
+        }
+        for e in &ranked {
+            let slot = agg.entry(e.engine.clone()).or_insert((0, 0, 0, 0.0));
+            slot.0 += 1;
+            if e.rank == 1 {
+                slot.1 += 1;
+            }
+            slot.2 += e.rank;
+            slot.3 += e.ratio_to_best.max(f64::MIN_POSITIVE).ln();
+        }
+        groups.push(WorkloadRanking { app, metric, nodes, entries: ranked });
+    }
+    let mut aggregate: Vec<AggregateRank> = agg
+        .into_iter()
+        .map(|(engine, (groups, wins, rank_sum, ln_sum))| AggregateRank {
+            engine,
+            groups,
+            wins,
+            mean_rank: rank_sum as f64 / groups as f64,
+            geomean_ratio: (ln_sum / groups as f64).exp(),
+        })
+        .collect();
+    aggregate.sort_by(|a, b| {
+        a.mean_rank
+            .partial_cmp(&b.mean_rank)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then_with(|| {
+                a.geomean_ratio
+                    .partial_cmp(&b.geomean_ratio)
+                    .unwrap_or(std::cmp::Ordering::Equal)
+            })
+            .then_with(|| a.engine.cmp(&b.engine))
+    });
+    RankReport { engine, groups, aggregate }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::synthetic_row;
+    use super::*;
+
+    /// Three machines over two workloads: `fast` wins both, `mid` and
+    /// `slow` split second place; workload `solo` has one engine only.
+    fn fixture() -> Vec<Row> {
+        let mut rows = Vec::new();
+        for i in 0..4i64 {
+            for (machine, a_val, b_val) in
+                [("fast", 1.0, 2.0), ("mid", 2.0, 6.0), ("slow", 4.0, 4.0)]
+            {
+                rows.push(synthetic_row("a", machine, "runtime", 1, i, "c0", a_val));
+                rows.push(synthetic_row("b", machine, "runtime", 1, i, "c0", b_val));
+            }
+            rows.push(synthetic_row("solo", "fast", "runtime", 1, i, "c0", 1.0));
+        }
+        rows
+    }
+
+    #[test]
+    fn ranks_engines_and_flattens() {
+        let report = rank(&fixture(), Engine::Machine, 1);
+        assert_eq!(report.groups.len(), 2, "walkover group must be dropped");
+        let a = &report.groups[0];
+        assert_eq!(a.app, "a");
+        assert_eq!(
+            a.entries.iter().map(|e| e.engine.as_str()).collect::<Vec<_>>(),
+            vec!["fast", "mid", "slow"]
+        );
+        assert_eq!(a.entries[2].rank, 3);
+        assert!((a.entries[2].ratio_to_best - 4.0).abs() < 1e-12);
+        let agg = &report.aggregate;
+        assert_eq!(agg[0].engine, "fast");
+        assert_eq!(agg[0].wins, 2);
+        assert!((agg[0].mean_rank - 1.0).abs() < 1e-12);
+        assert!((agg[0].geomean_ratio - 1.0).abs() < 1e-12);
+        // mid: ranks 2 and 3 → 2.5; slow: ranks 3 and 2 → 2.5; the
+        // geomean ratio breaks the tie in mid's favour (2·3 < 4·2)
+        assert_eq!(agg[1].engine, "mid");
+        assert_eq!(agg[2].engine, "slow");
+        assert!((agg[1].mean_rank - 2.5).abs() < 1e-12);
+        assert!((agg[2].mean_rank - 2.5).abs() < 1e-12);
+        assert!(agg[1].geomean_ratio < agg[2].geomean_ratio);
+        assert!(report.table().render().contains("fast"));
+        assert!(report.groups_table().render().contains("ratio_to_best"));
+    }
+
+    #[test]
+    fn ties_share_the_earlier_rank() {
+        let rows = vec![
+            synthetic_row("a", "x", "runtime", 1, 0, "c0", 3.0),
+            synthetic_row("a", "y", "runtime", 1, 0, "c0", 3.0),
+            synthetic_row("a", "z", "runtime", 1, 0, "c0", 5.0),
+        ];
+        let report = rank(&rows, Engine::Machine, 1);
+        let ranks: Vec<(String, usize)> = report.groups[0]
+            .entries
+            .iter()
+            .map(|e| (e.engine.clone(), e.rank))
+            .collect();
+        assert_eq!(
+            ranks,
+            vec![("x".to_string(), 1), ("y".to_string(), 1), ("z".to_string(), 3)]
+        );
+        // both tied winners count as wins
+        assert_eq!(report.aggregate.iter().filter(|a| a.wins == 1).count(), 2);
+    }
+
+    #[test]
+    fn relabeling_engines_permutes_but_preserves_standings() {
+        // antisymmetry under label swap: swapping two machines' labels
+        // must swap their aggregate rows and change nothing else
+        let rows = fixture();
+        let swapped: Vec<Row> = rows
+            .iter()
+            .map(|r| {
+                let workload = super::super::base_app(&r.app, &r.machine).to_string();
+                let mut r = r.clone();
+                r.machine = match r.machine.as_str() {
+                    "fast" => "slow".to_string(),
+                    "slow" => "fast".to_string(),
+                    m => m.to_string(),
+                };
+                // keep the store prefix coherent with the new label
+                r.app = format!("{}.{workload}", r.machine);
+                r
+            })
+            .collect();
+        let orig = rank(&rows, Engine::Machine, 1);
+        let swap = rank(&swapped, Engine::Machine, 1);
+        let find = |rep: &RankReport, e: &str| {
+            rep.aggregate.iter().find(|a| a.engine == e).cloned().unwrap()
+        };
+        let f_orig = find(&orig, "fast");
+        let s_swap = find(&swap, "slow");
+        assert_eq!(f_orig.mean_rank, s_swap.mean_rank);
+        assert_eq!(f_orig.wins, s_swap.wins);
+        assert_eq!(f_orig.geomean_ratio, s_swap.geomean_ratio);
+        let m_orig = find(&orig, "mid");
+        let m_swap = find(&swap, "mid");
+        assert_eq!(m_orig.mean_rank, m_swap.mean_rank);
+    }
+
+    #[test]
+    fn shard_count_does_not_change_the_report() {
+        let seq = rank(&fixture(), Engine::Machine, 1);
+        for shards in [2, 5, 32] {
+            let par = rank(&fixture(), Engine::Machine, shards);
+            assert_eq!(seq.groups, par.groups, "shards={shards}");
+            assert_eq!(seq.aggregate, par.aggregate, "shards={shards}");
+        }
+    }
+}

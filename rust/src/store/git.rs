@@ -5,8 +5,11 @@
 //! full tree is materialized only at each branch head. Appending a
 //! report is therefore O(delta), not O(tree) — the property the daily
 //! campaign workload needs (EXPERIMENTS.md §Perf, store iterations).
-//! Historic trees are reconstructed on demand by replaying deltas from
-//! the orphan root (a-posteriori analyses are rare; appends are not).
+//! Historic trees are reconstructed on demand by replaying deltas —
+//! from the nearest memoized ancestor tree when one is cached, falling
+//! back to the orphan root (a-posteriori analyses are rare; appends are
+//! not). Long replays leave checkpoint trees behind, so near-head
+//! history stays O(checkpoint distance) after the first walk.
 //!
 //! Retrieval is by branch + path prefix, which is exactly how the
 //! post-processing orchestrators pull "results from the exacb.data
@@ -50,6 +53,14 @@ pub struct Commit {
     pub delta: BTreeMap<String, String>,
 }
 
+/// Capacity of the materialized-tree memo in [`DataStore::tree_at`].
+const TREE_CACHE_CAP: usize = 8;
+
+/// During a long replay, memoize a checkpoint tree every this many
+/// applied commits so later [`DataStore::tree_at`] calls near the head
+/// never walk back to the orphan root.
+const TREE_CHECKPOINT_EVERY: usize = 64;
+
 /// The data store: blobs + branches of commit chains with materialized
 /// head trees.
 #[derive(Debug, Clone, Default)]
@@ -58,6 +69,10 @@ pub struct DataStore {
     commits: BTreeMap<String, Commit>,
     /// branch -> (head commit id, materialized tree path -> blob id)
     heads: BTreeMap<String, (String, BTreeMap<String, String>)>,
+    /// Memoized materialized trees for [`DataStore::tree_at`], keyed by
+    /// commit id, most-recently-used at the back. Commits are immutable
+    /// and content-addressed, so a cached tree never goes stale.
+    tree_cache: std::cell::RefCell<Vec<(String, BTreeMap<String, String>)>>,
 }
 
 impl DataStore {
@@ -130,23 +145,63 @@ impl DataStore {
     }
 
     /// Reconstruct the full tree at an arbitrary commit by replaying
-    /// deltas from the orphan root (O(history); for a-posteriori use).
+    /// deltas from the nearest memoized ancestor tree (the orphan root
+    /// on a cold cache). The first long walk leaves checkpoints behind,
+    /// so subsequent near-head queries are O(checkpoint distance), not
+    /// O(full history).
     pub fn tree_at(&self, commit_id: &str) -> Option<BTreeMap<String, String>> {
-        // collect the chain root..=commit
+        self.tree_at_traced(commit_id).map(|(tree, _)| tree)
+    }
+
+    /// [`DataStore::tree_at`] plus the number of commits actually
+    /// replayed — the observable the memoization tests pin down.
+    fn tree_at_traced(&self, commit_id: &str) -> Option<(BTreeMap<String, String>, usize)> {
+        // walk back until a memoized ancestor (or the orphan root)
         let mut chain = Vec::new();
+        let mut base: Option<BTreeMap<String, String>> = None;
         let mut cur = Some(commit_id.to_string());
         while let Some(id) = cur {
+            if let Some(tree) = self.cached_tree(&id) {
+                base = Some(tree);
+                break;
+            }
             let c = self.commits.get(&id)?;
             cur = c.parent.clone();
             chain.push(c);
         }
-        let mut tree = BTreeMap::new();
-        for c in chain.into_iter().rev() {
+        let replayed = chain.len();
+        let mut tree = base.unwrap_or_default();
+        for (i, c) in chain.iter().rev().enumerate() {
             for (p, b) in &c.delta {
                 tree.insert(p.clone(), b.clone());
             }
+            if (i + 1) % TREE_CHECKPOINT_EVERY == 0 {
+                self.cache_tree(&c.id, &tree);
+            }
         }
+        self.cache_tree(commit_id, &tree);
+        Some((tree, replayed))
+    }
+
+    /// LRU lookup: a hit moves the entry to the most-recent slot.
+    fn cached_tree(&self, id: &str) -> Option<BTreeMap<String, String>> {
+        let mut cache = self.tree_cache.borrow_mut();
+        let pos = cache.iter().position(|(cid, _)| cid == id)?;
+        let hit = cache.remove(pos);
+        let tree = hit.1.clone();
+        cache.push(hit);
         Some(tree)
+    }
+
+    fn cache_tree(&self, id: &str, tree: &BTreeMap<String, String>) {
+        let mut cache = self.tree_cache.borrow_mut();
+        if let Some(pos) = cache.iter().position(|(cid, _)| cid == id) {
+            cache.remove(pos);
+        }
+        cache.push((id.to_string(), tree.clone()));
+        if cache.len() > TREE_CACHE_CAP {
+            cache.remove(0);
+        }
     }
 
     pub fn branch_exists(&self, branch: &str) -> bool {
@@ -189,15 +244,27 @@ impl DataStore {
             .unwrap_or_default()
     }
 
-    /// Read every prefix-matching file at the head.
-    pub fn read_all(&self, branch: &str, prefix: &str) -> Vec<(String, String)> {
-        self.list(branch, prefix)
+    /// Borrowing walk over every prefix-matching `(path, content)` pair
+    /// at the branch head. Unlike [`DataStore::read_all`] this clones
+    /// nothing — the snapshot builder and other whole-store readers pay
+    /// O(tree) in references, not copies.
+    pub fn read_all_iter<'a>(
+        &'a self,
+        branch: &str,
+        prefix: &'a str,
+    ) -> impl Iterator<Item = (&'a str, &'a str)> + 'a {
+        self.head_tree(branch)
             .into_iter()
-            .filter_map(|p| {
-                self.read(branch, &p)
-                    .ok()
-                    .map(|c| (p.clone(), c.to_string()))
-            })
+            .flat_map(|t| t.iter())
+            .filter(move |(p, _)| p.starts_with(prefix))
+            .filter_map(|(p, b)| self.blobs.get(b).map(|c| (p.as_str(), c.as_str())))
+    }
+
+    /// Read every prefix-matching file at the head (owned; a thin
+    /// collect over [`DataStore::read_all_iter`]).
+    pub fn read_all(&self, branch: &str, prefix: &str) -> Vec<(String, String)> {
+        self.read_all_iter(branch, prefix)
+            .map(|(p, c)| (p.to_string(), c.to_string()))
             .collect()
     }
 
@@ -225,8 +292,13 @@ impl DataStore {
         use crate::util::json::Json;
         std::fs::create_dir_all(dir.join("blobs")).map_err(|e| StoreError::Io(e.to_string()))?;
         for (id, content) in &self.blobs {
-            std::fs::write(dir.join("blobs").join(id), content)
-                .map_err(|e| StoreError::Io(e.to_string()))?;
+            let path = dir.join("blobs").join(id);
+            // blobs are content-addressed: a file that already exists
+            // holds the right bytes, so an incremental persist skips it
+            if path.exists() {
+                continue;
+            }
+            std::fs::write(path, content).map_err(|e| StoreError::Io(e.to_string()))?;
         }
         let mut commits = Json::arr();
         for c in self.commits.values() {
@@ -395,6 +467,95 @@ mod tests {
         assert_eq!(loaded.read("exacb.data", "p/r.json").unwrap(), "content");
         assert_eq!(loaded.read("exacb.data", "p/s.json").unwrap(), "more");
         assert_eq!(loaded.history("exacb.data").len(), 2);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn read_all_iter_matches_owned_read_all() {
+        let mut s = DataStore::new();
+        s.commit(
+            "b",
+            &[
+                ("jedi.a/1/report.json".into(), "{\"a\":1}".into()),
+                ("jedi.a/1/results.csv".into(), "status\nsuccess".into()),
+                ("jedi.b/1/report.json".into(), "{\"b\":2}".into()),
+            ],
+            "m",
+            SimTime(0),
+        );
+        let borrowed: Vec<(String, String)> = s
+            .read_all_iter("b", "jedi.a/")
+            .map(|(p, c)| (p.to_string(), c.to_string()))
+            .collect();
+        assert_eq!(borrowed, s.read_all("b", "jedi.a/"));
+        assert_eq!(borrowed.len(), 2);
+        assert_eq!(s.read_all_iter("b", "").count(), 3);
+        assert_eq!(s.read_all_iter("nobranch", "").count(), 0);
+    }
+
+    #[test]
+    fn tree_cache_resolves_near_head_without_root_replay() {
+        let mut s = DataStore::new();
+        let mut ids = Vec::new();
+        for i in 0..1000i64 {
+            ids.push(s.commit(
+                "b",
+                &[(format!("f{}", i % 7), format!("v{i}"))],
+                &format!("c{i}"),
+                SimTime(i),
+            ));
+        }
+        // cold: resolving the head replays the full chain once, leaving
+        // checkpoint trees behind
+        let (head_tree, replayed_cold) = s.tree_at_traced(ids.last().unwrap()).unwrap();
+        assert_eq!(replayed_cold, 1000);
+        assert_eq!(&head_tree, s.head_tree("b").unwrap());
+        // warm: a near-head commit resolves from the nearest checkpoint
+        // without ever touching the orphan root
+        let near = &ids[997];
+        let (near_tree, replayed_warm) = s.tree_at_traced(near).unwrap();
+        assert!(
+            replayed_warm <= TREE_CHECKPOINT_EVERY,
+            "near-head resolve replayed {replayed_warm} commits"
+        );
+        // and the memoized answer is byte-identical to a cold replay
+        s.tree_cache.borrow_mut().clear();
+        let (reference, replayed_ref) = s.tree_at_traced(near).unwrap();
+        assert_eq!(replayed_ref, 998);
+        assert_eq!(near_tree, reference);
+    }
+
+    #[test]
+    fn second_persist_skips_existing_blobs() {
+        let mut s = DataStore::new();
+        s.commit(
+            "b",
+            &[("p/r.json".into(), "payload-a".into())],
+            "m",
+            SimTime(1),
+        );
+        let dir = std::env::temp_dir().join(format!("exacb-persist-skip-{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        s.persist(&dir).unwrap();
+        // clobber the blob on disk: a second persist of an unchanged
+        // store must write zero new blob bytes, so the sentinel survives
+        let blob_id = s.blobs.keys().next().unwrap().clone();
+        let blob_path = dir.join("blobs").join(&blob_id);
+        std::fs::write(&blob_path, "SENTINEL").unwrap();
+        s.persist(&dir).unwrap();
+        assert_eq!(std::fs::read_to_string(&blob_path).unwrap(), "SENTINEL");
+        // a genuinely new blob still lands on disk
+        s.commit(
+            "b",
+            &[("p/s.json".into(), "payload-b".into())],
+            "n",
+            SimTime(2),
+        );
+        s.persist(&dir).unwrap();
+        assert_eq!(s.blobs.len(), 2);
+        for id in s.blobs.keys() {
+            assert!(dir.join("blobs").join(id).exists());
+        }
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -10,6 +10,10 @@
 //! * [`cache`] — the content-addressed execution cache layered on the
 //!   object store: digest-keyed step outcomes + whole-run reports that
 //!   make repeat collection sweeps incremental.
+//! * [`snapshot`] — the read side (DESIGN.md §12): a compacted,
+//!   digest-indexed view of the `exacb.data` head, built O(history)
+//!   once, refreshed O(delta) from commit deltas, fanned across threads
+//!   by the query layer.
 //!
 //! All are deterministic and in-memory with optional directory
 //! persistence; immutability of committed history is a tested invariant
@@ -18,7 +22,9 @@
 pub mod cache;
 pub mod git;
 pub mod object;
+pub mod snapshot;
 
 pub use cache::{CacheKey, CacheKeyBuilder, CacheStats, ExecutionCache};
 pub use git::{Commit, DataStore, StoreError};
 pub use object::ObjectStore;
+pub use snapshot::{fan_chunks, fan_shards, sort_rows, ParsedDoc, Row, Snapshot};

@@ -1,0 +1,766 @@
+//! Incremental digest-indexed snapshots over the report store
+//! (DESIGN.md §12).
+//!
+//! Every analysis consumer used to rebuild its view by re-walking and
+//! re-parsing the whole `exacb.data` branch per invocation — with PR 6's
+//! O(log n) dispatch core, that full-store walk became the fleet-scale
+//! bottleneck (a gate firing through the event loop paid O(history) per
+//! firing). A [`Snapshot`] is the read-side answer:
+//!
+//! * **parsed once** — every `.json` blob is parsed into a
+//!   [`Report`](crate::protocol::Report) exactly once, keyed by its
+//!   content digest; `.csv` blobs get their Table-I verdict
+//!   ([`crate::protocol::csv_honours_contract`]) once;
+//! * **interned** — app, machine, metric, and commit strings are
+//!   deduplicated into small ids, so the observation index stays
+//!   compact at fleet scale;
+//! * **indexed** — successful data entries land in a
+//!   (app, machine, metric, nodes) index with per-commit provenance,
+//!   each observation keyed by the same digest scheme as
+//!   [`crate::tracking::History`] (so warm-cache replays dedupe
+//!   identically);
+//! * **incremental** — [`Snapshot::build`] is O(history) once;
+//!   [`Snapshot::refresh`] consumes only commits newer than the
+//!   snapshot's recorded head id, mirroring the crate's
+//!   incremental-cache discipline. *Refreshed == rebuilt-from-scratch*
+//!   is the core property test, pinned via [`Snapshot::fingerprint`].
+//!
+//! The snapshot is immutable-after-build, which makes it safe to fan
+//! query aggregation across OS threads: [`fan_shards`] / [`fan_chunks`]
+//! are the `std::thread::scope`-based evaluators the
+//! [`crate::query`] layer (`exacb cmp` / `exacb rank`) shards its
+//! grouping and interval work with — deterministically, so sharded and
+//! sequential runs are byte-identical.
+//!
+//! Exactly one escape hatch exists: `exacb.data` paths are keyed by
+//! pipeline id and therefore append-only in practice. If a delta ever
+//! *overwrites* an existing path with different content, `refresh`
+//! falls back to a full rebuild (counted in [`Snapshot::rebuilds`])
+//! instead of attempting incremental retraction — the fallback is the
+//! scratch build, so the equivalence property holds unconditionally.
+
+use std::collections::BTreeMap;
+
+use crate::protocol::{csv_honours_contract, Report};
+use crate::store::DataStore;
+use crate::util::timeutil::SimTime;
+use crate::util::wide_hash;
+
+/// String interner: app / machine / metric / commit names occur once
+/// per *name*, not once per observation.
+#[derive(Debug, Clone, Default)]
+struct Interner {
+    ids: BTreeMap<String, u32>,
+    strings: Vec<String>,
+}
+
+impl Interner {
+    fn intern(&mut self, s: &str) -> u32 {
+        if let Some(id) = self.ids.get(s) {
+            return *id;
+        }
+        let id = self.strings.len() as u32;
+        self.ids.insert(s.to_string(), id);
+        self.strings.push(s.to_string());
+        id
+    }
+
+    fn resolve(&self, id: u32) -> &str {
+        &self.strings[id as usize]
+    }
+}
+
+/// Index key of one observation series. Intern ids are assignment-order
+/// dependent, so equality across snapshots is always judged on
+/// *resolved* strings ([`Snapshot::rows`] / [`Snapshot::fingerprint`]),
+/// never on raw ids.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+struct EntryKey {
+    app: u32,
+    machine: u32,
+    metric: u32,
+    nodes: u64,
+}
+
+/// One indexed observation (digest-keyed under its [`EntryKey`]).
+#[derive(Debug, Clone, Copy)]
+struct Obs {
+    time: SimTime,
+    pipeline_id: u64,
+    commit: u32,
+    seed: u64,
+    value: f64,
+}
+
+/// A parsed `.json` document, keyed in [`Snapshot`] by content digest.
+/// `report` is `None` when the blob did not parse as a protocol report
+/// (consumers count those as skipped, exactly like the legacy walk).
+#[derive(Debug, Clone)]
+pub struct ParsedDoc {
+    /// The parse result, computed once per distinct document.
+    pub report: Option<Report>,
+}
+
+/// One fully-resolved observation — the row type the [`crate::query`]
+/// layer aggregates and exports.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Row {
+    /// Store prefix first segment (`machine.app` by the execution
+    /// component's convention).
+    pub app: String,
+    /// Recording system (`experiment.system`).
+    pub machine: String,
+    /// Metric name (`runtime` or an additional-metrics key).
+    pub metric: String,
+    /// Node count of the data entry.
+    pub nodes: u64,
+    /// Experiment timestamp.
+    pub time: SimTime,
+    /// Recording pipeline id.
+    pub pipeline_id: u64,
+    /// Source-commit SHA provenance (`reporter.commit`).
+    pub commit: String,
+    /// Reproduction seed (`reporter.seed`).
+    pub seed: u64,
+    /// Observation digest — `wide_hash(doc_digest|entry_idx|metric)`,
+    /// identical to the [`crate::tracking::History`] point digest, so
+    /// byte-identical replays dedupe the same way everywhere.
+    pub digest: String,
+    /// The measured value.
+    pub value: f64,
+}
+
+/// Compacted, digest-indexed view of one branch head of a [`DataStore`].
+#[derive(Debug, Clone)]
+pub struct Snapshot {
+    branch: String,
+    head: Option<String>,
+    /// path → content digest (wide).
+    paths: BTreeMap<String, String>,
+    /// content digest → parsed document (every `.json` path).
+    docs: BTreeMap<String, ParsedDoc>,
+    /// content digest → Table-I verdict (every `.csv` path).
+    csv: BTreeMap<String, bool>,
+    intern: Interner,
+    /// (app, machine, metric, nodes) → observation digest → observation.
+    entries: BTreeMap<EntryKey, BTreeMap<String, Obs>>,
+    rebuilds: usize,
+    commits_consumed: usize,
+}
+
+impl Snapshot {
+    /// Build a snapshot of `branch`'s head from scratch: O(history) —
+    /// one walk over the materialized head tree, one parse per distinct
+    /// blob.
+    pub fn build(store: &DataStore, branch: &str) -> Snapshot {
+        let mut snap = Snapshot {
+            branch: branch.to_string(),
+            head: store.head(branch).map(|c| c.id.clone()),
+            paths: BTreeMap::new(),
+            docs: BTreeMap::new(),
+            csv: BTreeMap::new(),
+            intern: Interner::default(),
+            entries: BTreeMap::new(),
+            rebuilds: 1,
+            commits_consumed: 0,
+        };
+        for (path, content) in store.read_all_iter(branch, "") {
+            snap.add_path(path, content);
+        }
+        snap
+    }
+
+    /// Catch up with commits newer than the snapshot's recorded head.
+    /// Returns the number of fresh commits consumed (0 when the head is
+    /// unchanged). O(delta): only the fresh commits' blobs are hashed,
+    /// parsed, and indexed. A delta that overwrites an existing path
+    /// with different content — or a head the recorded anchor cannot
+    /// reach — degrades to a full rebuild (see module docs).
+    pub fn refresh(&mut self, store: &DataStore) -> usize {
+        let head_now = store.head(&self.branch).map(|c| c.id.clone());
+        if head_now == self.head {
+            return 0;
+        }
+        // walk the new head's ancestry back to the recorded anchor
+        let mut fresh = Vec::new();
+        let mut cur = head_now.clone();
+        let mut anchored = false;
+        while let Some(id) = cur {
+            if Some(&id) == self.head.as_ref() {
+                anchored = true;
+                break;
+            }
+            match store.commit_by_id(&id) {
+                Some(c) => {
+                    cur = c.parent.clone();
+                    fresh.push(c);
+                }
+                None => break,
+            }
+        }
+        if cur.is_none() {
+            // reached the orphan root: only anchored if the snapshot
+            // was built on an empty branch
+            anchored = self.head.is_none();
+        }
+        let consumed = fresh.len();
+        if !anchored {
+            return self.rebuild(store, consumed);
+        }
+        for c in fresh.iter().rev() {
+            for (path, blob_id) in &c.delta {
+                let Some(content) = store.blob(blob_id) else {
+                    continue;
+                };
+                if !self.add_path(path, content) {
+                    // overwrite with different content: fall back
+                    return self.rebuild(store, consumed);
+                }
+            }
+        }
+        self.head = head_now;
+        self.commits_consumed += consumed;
+        consumed
+    }
+
+    /// Full rebuild preserving the incrementality counters — the
+    /// overwrite / unreachable-anchor fallback of [`Snapshot::refresh`].
+    fn rebuild(&mut self, store: &DataStore, consumed: usize) -> usize {
+        let rebuilds = self.rebuilds;
+        let commits = self.commits_consumed;
+        *self = Snapshot::build(store, &self.branch);
+        self.rebuilds += rebuilds;
+        self.commits_consumed = commits + consumed;
+        consumed
+    }
+
+    /// Ingest one `(path, content)` pair. Returns `false` — leaving the
+    /// snapshot untouched — when `path` already exists with *different*
+    /// content (the overwrite case refresh must escalate on); a
+    /// byte-identical re-commit is a `true` no-op.
+    fn add_path(&mut self, path: &str, content: &str) -> bool {
+        let digest = wide_hash(content.as_bytes());
+        if let Some(old) = self.paths.get(path) {
+            return *old == digest;
+        }
+        self.paths.insert(path.to_string(), digest.clone());
+        if path.ends_with(".json") && !self.docs.contains_key(&digest) {
+            self.docs.insert(
+                digest.clone(),
+                ParsedDoc {
+                    report: Report::parse(content).ok(),
+                },
+            );
+        }
+        if path.ends_with(".csv") && !self.csv.contains_key(&digest) {
+            self.csv.insert(digest.clone(), csv_honours_contract(content));
+        }
+        if path.ends_with("report.json") {
+            let app = path.split('/').next().unwrap_or("").to_string();
+            if let Some(report) = self.docs.get(&digest).and_then(|d| d.report.as_ref()) {
+                index_report(&app, &digest, report, &mut self.intern, &mut self.entries);
+            }
+        }
+        true
+    }
+
+    /// The branch this snapshot views.
+    pub fn branch(&self) -> &str {
+        &self.branch
+    }
+
+    /// The head commit id the snapshot is current with.
+    pub fn head_id(&self) -> Option<&str> {
+        self.head.as_deref()
+    }
+
+    /// How many times the snapshot was built from scratch (1 after
+    /// [`Snapshot::build`]; each refresh fallback adds one). The
+    /// O(delta) assertions pin this at 1 over append-only histories.
+    pub fn rebuilds(&self) -> usize {
+        self.rebuilds
+    }
+
+    /// Total fresh commits consumed by [`Snapshot::refresh`] calls.
+    pub fn commits_consumed(&self) -> usize {
+        self.commits_consumed
+    }
+
+    /// Number of paths at the snapshotted head.
+    pub fn path_count(&self) -> usize {
+        self.paths.len()
+    }
+
+    /// Number of distinct parsed `.json` documents.
+    pub fn doc_count(&self) -> usize {
+        self.docs.len()
+    }
+
+    /// Number of distinct interned strings.
+    pub fn interned_strings(&self) -> usize {
+        self.intern.strings.len()
+    }
+
+    /// Number of indexed observations (digest-deduped).
+    pub fn obs_count(&self) -> usize {
+        self.entries.values().map(|m| m.len()).sum()
+    }
+
+    /// All `(path, content digest)` pairs under `prefix`, in path order
+    /// (an O(log n + matches) range scan, not a full-tree filter).
+    pub fn paths_under<'a>(
+        &'a self,
+        prefix: &'a str,
+    ) -> impl Iterator<Item = (&'a str, &'a str)> + 'a {
+        self.paths
+            .range(prefix.to_string()..)
+            .take_while(move |(p, _)| p.starts_with(prefix))
+            .map(|(p, d)| (p.as_str(), d.as_str()))
+    }
+
+    /// Paths under `prefix` (the [`DataStore::list`] shape).
+    pub fn list(&self, prefix: &str) -> Vec<String> {
+        self.paths_under(prefix).map(|(p, _)| p.to_string()).collect()
+    }
+
+    /// The parsed document for a content digest, if any `.json` path
+    /// carries it.
+    pub fn doc(&self, digest: &str) -> Option<&ParsedDoc> {
+        self.docs.get(digest)
+    }
+
+    /// The content digest recorded for `path`.
+    pub fn digest_at(&self, path: &str) -> Option<&str> {
+        self.paths.get(path).map(String::as_str)
+    }
+
+    /// The parsed report at `path` (`None` for absent paths and
+    /// unparseable documents alike).
+    pub fn report_at(&self, path: &str) -> Option<&Report> {
+        self.paths
+            .get(path)
+            .and_then(|d| self.docs.get(d))
+            .and_then(|d| d.report.as_ref())
+    }
+
+    /// Table-I verdict of the `.csv` file at `path`; `false` when the
+    /// path is absent (matching the legacy walk, which treats a missing
+    /// sibling CSV as not honouring the contract).
+    pub fn csv_ok_at(&self, path: &str) -> bool {
+        self.paths
+            .get(path)
+            .and_then(|d| self.csv.get(d))
+            .copied()
+            .unwrap_or(false)
+    }
+
+    /// Every indexed observation, fully resolved and canonically sorted
+    /// by (app, machine, metric, nodes, time, pipeline, digest) — the
+    /// order is a pure function of content, never of ingestion order or
+    /// intern-id assignment.
+    pub fn rows(&self) -> Vec<Row> {
+        let mut out = Vec::new();
+        for (key, obs) in &self.entries {
+            for (digest, o) in obs {
+                out.push(Row {
+                    app: self.intern.resolve(key.app).to_string(),
+                    machine: self.intern.resolve(key.machine).to_string(),
+                    metric: self.intern.resolve(key.metric).to_string(),
+                    nodes: key.nodes,
+                    time: o.time,
+                    pipeline_id: o.pipeline_id,
+                    commit: self.intern.resolve(o.commit).to_string(),
+                    seed: o.seed,
+                    digest: digest.clone(),
+                    value: o.value,
+                });
+            }
+        }
+        sort_rows(&mut out);
+        out
+    }
+
+    /// Canonical content hash of the whole snapshot — resolved strings
+    /// only, so two snapshots of the same head hash identically no
+    /// matter how they got there (scratch build, any refresh
+    /// interleaving, any intern order). The refreshed == rebuilt
+    /// property tests compare exactly this.
+    pub fn fingerprint(&self) -> String {
+        let mut text = String::new();
+        text.push_str(&format!("branch={}|head={:?}\n", self.branch, self.head));
+        for (p, d) in &self.paths {
+            text.push_str(&format!("P|{p}|{d}\n"));
+        }
+        for (d, doc) in &self.docs {
+            text.push_str(&format!("D|{d}|{}\n", doc.report.is_some()));
+        }
+        for (d, ok) in &self.csv {
+            text.push_str(&format!("C|{d}|{ok}\n"));
+        }
+        for r in self.rows() {
+            text.push_str(&format!(
+                "R|{}|{}|{}|{}|{}|{}|{}|{}|{}|{:?}\n",
+                r.app,
+                r.machine,
+                r.metric,
+                r.nodes,
+                r.time.0,
+                r.pipeline_id,
+                r.commit,
+                r.seed,
+                r.digest,
+                r.value
+            ));
+        }
+        wide_hash(text.as_bytes())
+    }
+}
+
+/// Canonical row order (see [`Snapshot::rows`]).
+pub fn sort_rows(rows: &mut [Row]) {
+    rows.sort_by(|a, b| {
+        (&a.app, &a.machine, &a.metric, a.nodes, a.time, a.pipeline_id, &a.digest).cmp(&(
+            &b.app,
+            &b.machine,
+            &b.metric,
+            b.nodes,
+            b.time,
+            b.pipeline_id,
+            &b.digest,
+        ))
+    });
+}
+
+/// Index every successful, finite observation of one parsed report.
+/// Free function so the docs borrow and the intern/entries borrows stay
+/// disjoint.
+fn index_report(
+    app: &str,
+    doc_digest: &str,
+    report: &Report,
+    intern: &mut Interner,
+    entries: &mut BTreeMap<EntryKey, BTreeMap<String, Obs>>,
+) {
+    let time = report.experiment.time().unwrap_or_default();
+    let app_id = intern.intern(app);
+    let machine_id = intern.intern(&report.experiment.system);
+    let commit_id = intern.intern(&report.reporter.commit);
+    for (idx, e) in report.data.iter().enumerate() {
+        if !e.success {
+            continue;
+        }
+        let mut metrics: Vec<(&str, f64)> = vec![("runtime", e.runtime)];
+        if let Some(obj) = e.metrics.as_obj() {
+            for (name, v) in obj {
+                // "runtime" always means the entry field, never an
+                // additional-metrics key (History's precedence rule)
+                if name == "runtime" {
+                    continue;
+                }
+                if let Some(v) = v.as_f64() {
+                    metrics.push((name.as_str(), v));
+                }
+            }
+        }
+        for (metric, value) in metrics {
+            if !value.is_finite() {
+                continue;
+            }
+            let key = EntryKey {
+                app: app_id,
+                machine: machine_id,
+                metric: intern.intern(metric),
+                nodes: e.nodes,
+            };
+            let obs_digest = wide_hash(format!("{doc_digest}|{idx}|{metric}").as_bytes());
+            entries.entry(key).or_default().insert(
+                obs_digest,
+                Obs {
+                    time,
+                    pipeline_id: report.reporter.pipeline_id,
+                    commit: commit_id,
+                    seed: report.reporter.seed,
+                    value,
+                },
+            );
+        }
+    }
+}
+
+/// Fan `f` over contiguous chunks of `items` across up to `shards` OS
+/// threads (`std::thread::scope`; the crate stays dependency-free).
+/// Results come back in chunk order, so the output is identical to a
+/// sequential run — parallelism never changes bytes.
+pub fn fan_chunks<T: Sync, R: Send>(
+    items: &[T],
+    shards: usize,
+    f: impl Fn(&[T]) -> R + Sync,
+) -> Vec<R> {
+    let shards = shards.clamp(1, items.len().max(1));
+    if shards == 1 {
+        return if items.is_empty() {
+            Vec::new()
+        } else {
+            vec![f(items)]
+        };
+    }
+    let chunk = items.len().div_ceil(shards);
+    let fref = &f;
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = items
+            .chunks(chunk)
+            .map(|slice| scope.spawn(move || fref(slice)))
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("query shard panicked"))
+            .collect()
+    })
+}
+
+/// Fan a per-item map over up to `shards` OS threads; results keep item
+/// order (deterministic, byte-identical to `items.iter().map(f)`).
+pub fn fan_shards<T: Sync, R: Send>(
+    items: &[T],
+    shards: usize,
+    f: impl Fn(&T) -> R + Sync,
+) -> Vec<R> {
+    let fref = &f;
+    fan_chunks(items, shards, move |slice| {
+        slice.iter().map(fref).collect::<Vec<R>>()
+    })
+    .into_iter()
+    .flatten()
+    .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::protocol::{DataEntry, Experiment, Report, Reporter};
+    use crate::util::json::Json;
+    use crate::util::prng::Prng;
+
+    /// A minimal but fully-formed protocol report document.
+    fn doc(app_seed: u64, day: i64, pipeline: u64, value: f64) -> String {
+        Report {
+            reporter: Reporter {
+                tool: "exacb".into(),
+                tool_version: "1".into(),
+                pipeline_id: pipeline,
+                ci_job_id: pipeline * 10,
+                commit: format!("c{:08x}", app_seed ^ (day as u64)),
+                user: "exa".into(),
+                system: "jedi".into(),
+                system_version: "v1".into(),
+                timestamp: SimTime::from_days(day).iso8601(),
+                seed: app_seed,
+            },
+            parameter: Json::obj(),
+            experiment: Experiment {
+                system: "jedi".into(),
+                software_version: "v1".into(),
+                variant: "base".into(),
+                usecase: "bench".into(),
+                timestamp: SimTime::from_days(day).iso8601(),
+            },
+            data: vec![DataEntry {
+                success: true,
+                runtime: value,
+                nodes: 4,
+                taskspernode: 4,
+                threadspertask: 8,
+                jobid: pipeline,
+                queue: "all".into(),
+                metrics: Json::obj().set("tts", value * 2.0),
+            }],
+        }
+        .to_document()
+    }
+
+    fn commit_report(store: &mut DataStore, app: &str, day: i64, pipeline: u64, value: f64) {
+        let path = format!("{app}/{pipeline}/report.json");
+        store.commit(
+            "exacb.data",
+            &[(path, doc(7, day, pipeline, value))],
+            &format!("record {app} day {day}"),
+            SimTime::from_days(day),
+        );
+    }
+
+    #[test]
+    fn build_indexes_reports_and_dedupes_replays() {
+        let mut store = DataStore::new();
+        commit_report(&mut store, "jedi.app", 0, 1, 10.0);
+        commit_report(&mut store, "jedi.app", 1, 2, 11.0);
+        // byte-identical replay under a new path: new path, same digest,
+        // no new observation
+        let replay = store.read("exacb.data", "jedi.app/1/report.json").unwrap().to_string();
+        store.commit(
+            "exacb.data",
+            &[("jedi.app/3/report.json".into(), replay)],
+            "replay",
+            SimTime::from_days(2),
+        );
+        let snap = Snapshot::build(&store, "exacb.data");
+        assert_eq!(snap.path_count(), 3);
+        assert_eq!(snap.doc_count(), 2);
+        // runtime + tts per report, replay deduped
+        assert_eq!(snap.obs_count(), 4);
+        let rows = snap.rows();
+        assert_eq!(rows.len(), 4);
+        assert!(rows.iter().all(|r| r.app == "jedi.app" && r.machine == "jedi"));
+        assert!(rows.windows(2).all(|w| w[0] != w[1]));
+        assert_eq!(snap.head_id(), store.head("exacb.data").map(|c| c.id.as_str()));
+    }
+
+    #[test]
+    fn refresh_consumes_only_the_delta() {
+        let mut store = DataStore::new();
+        for day in 0..5 {
+            commit_report(&mut store, "jedi.app", day, day as u64 + 1, 10.0 + day as f64);
+        }
+        let mut snap = Snapshot::build(&store, "exacb.data");
+        assert_eq!(snap.refresh(&store), 0, "unchanged head refreshes for free");
+        commit_report(&mut store, "jedi.app", 5, 6, 15.0);
+        commit_report(&mut store, "jedi.app", 6, 7, 16.0);
+        assert_eq!(snap.refresh(&store), 2);
+        assert_eq!(snap.rebuilds(), 1, "append-only history never rebuilds");
+        assert_eq!(snap.commits_consumed(), 2);
+        assert_eq!(snap.fingerprint(), Snapshot::build(&store, "exacb.data").fingerprint());
+    }
+
+    #[test]
+    fn refresh_from_empty_branch_matches_scratch() {
+        let mut store = DataStore::new();
+        let mut snap = Snapshot::build(&store, "exacb.data");
+        assert!(snap.head_id().is_none());
+        commit_report(&mut store, "jedi.app", 0, 1, 10.0);
+        snap.refresh(&store);
+        assert_eq!(snap.rebuilds(), 1);
+        assert_eq!(snap.fingerprint(), Snapshot::build(&store, "exacb.data").fingerprint());
+    }
+
+    #[test]
+    fn overwrite_falls_back_to_rebuild_and_stays_identical() {
+        let mut store = DataStore::new();
+        commit_report(&mut store, "jedi.app", 0, 1, 10.0);
+        let mut snap = Snapshot::build(&store, "exacb.data");
+        // overwrite an existing path with different content
+        store.commit(
+            "exacb.data",
+            &[("jedi.app/1/report.json".into(), doc(7, 3, 1, 99.0))],
+            "amend",
+            SimTime::from_days(3),
+        );
+        snap.refresh(&store);
+        assert_eq!(snap.rebuilds(), 2, "overwrite must escalate to rebuild");
+        assert_eq!(snap.fingerprint(), Snapshot::build(&store, "exacb.data").fingerprint());
+    }
+
+    #[test]
+    fn interleaved_commit_refresh_is_byte_identical_to_scratch() {
+        use crate::prop_assert;
+        use crate::util::prop::check;
+        check("snapshot refresh == scratch build", 25, |g| {
+            let mut store = DataStore::new();
+            let mut snap = Snapshot::build(&store, "exacb.data");
+            let steps = g.usize(1, 12);
+            let mut pipeline = 0u64;
+            for day in 0..steps as i64 {
+                let burst = g.usize(1, 3);
+                for _ in 0..burst {
+                    pipeline += 1;
+                    let app = format!("jedi.app-{}", g.usize(0, 2));
+                    if g.usize(0, 9) == 0 && pipeline > 1 {
+                        // occasional overwrite of an old path: must
+                        // trigger the rebuild fallback, not corruption
+                        let path = format!("{app}/1/report.json");
+                        store.commit(
+                            "exacb.data",
+                            &[(path, doc(g.u64(0, 50), day, pipeline, g.f64(1.0, 9.0)))],
+                            "amend",
+                            SimTime::from_days(day),
+                        );
+                    } else {
+                        commit_report(&mut store, &app, day, pipeline, g.f64(1.0, 9.0));
+                    }
+                }
+                if g.usize(0, 1) == 0 {
+                    snap.refresh(&store);
+                }
+            }
+            snap.refresh(&store);
+            let scratch = Snapshot::build(&store, "exacb.data");
+            prop_assert!(
+                snap.fingerprint() == scratch.fingerprint(),
+                "refreshed snapshot diverged from scratch build"
+            );
+            prop_assert!(
+                snap.rows() == scratch.rows(),
+                "refreshed rows diverged from scratch rows"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn rows_are_ingestion_order_independent() {
+        let mut fwd = DataStore::new();
+        let mut rev = DataStore::new();
+        let mut specs = Vec::new();
+        let mut g = Prng::new(42);
+        for day in 0..6i64 {
+            specs.push(("jedi.a", day, day as u64 + 1, g.range_f64(1.0, 5.0)));
+            specs.push(("jedi.b", day, day as u64 + 100, g.range_f64(1.0, 5.0)));
+        }
+        for (app, day, pipeline, v) in &specs {
+            commit_report(&mut fwd, app, *day, *pipeline, *v);
+        }
+        for (app, day, pipeline, v) in specs.iter().rev() {
+            commit_report(&mut rev, app, *day, *pipeline, *v);
+        }
+        assert_eq!(
+            Snapshot::build(&fwd, "exacb.data").rows(),
+            Snapshot::build(&rev, "exacb.data").rows()
+        );
+    }
+
+    #[test]
+    fn fan_helpers_match_sequential_for_any_shard_count() {
+        let items: Vec<u64> = (0..103).collect();
+        let expect: Vec<u64> = items.iter().map(|x| x * 3 + 1).collect();
+        for shards in [0, 1, 2, 4, 7, 64, 1000] {
+            assert_eq!(fan_shards(&items, shards, |x| x * 3 + 1), expect);
+        }
+        let sums: Vec<u64> = fan_chunks(&items, 4, |slice| slice.iter().sum());
+        assert_eq!(sums.iter().sum::<u64>(), items.iter().sum::<u64>());
+        assert_eq!(fan_shards(&[] as &[u64], 4, |x| *x), Vec::<u64>::new());
+    }
+
+    #[test]
+    fn csv_and_parse_failures_are_visible() {
+        let mut store = DataStore::new();
+        store.commit(
+            "exacb.data",
+            &[
+                (
+                    "jedi.app/1/results.csv".into(),
+                    format!("{}\n", crate::protocol::BASE_COLUMNS.join(",")),
+                ),
+                ("jedi.app/2/results.csv".into(), "not,a,contract\n".into()),
+                ("jedi.app/2/report.json".into(), "{broken".into()),
+            ],
+            "mixed",
+            SimTime(0),
+        );
+        let snap = Snapshot::build(&store, "exacb.data");
+        assert!(snap.csv_ok_at("jedi.app/1/results.csv"));
+        assert!(!snap.csv_ok_at("jedi.app/2/results.csv"));
+        assert!(!snap.csv_ok_at("jedi.app/absent.csv"));
+        assert!(snap.report_at("jedi.app/2/report.json").is_none());
+        let digest = snap.digest_at("jedi.app/2/report.json").unwrap();
+        assert!(snap.doc(digest).unwrap().report.is_none());
+        assert_eq!(snap.obs_count(), 0);
+    }
+}

@@ -22,7 +22,7 @@
 use std::collections::BTreeMap;
 
 use crate::protocol::Report;
-use crate::store::DataStore;
+use crate::store::{DataStore, Snapshot};
 use crate::util::timeutil::SimTime;
 use crate::util::wide_hash;
 
@@ -90,7 +90,16 @@ impl History {
         let Ok(report) = Report::parse(document) else {
             return false;
         };
-        let doc_digest = wide_hash(document.as_bytes());
+        self.ingest_parsed(benchmark, &wide_hash(document.as_bytes()), &report);
+        true
+    }
+
+    /// Ingest one already-parsed report whose content digest was
+    /// computed upstream — the [`Snapshot`] fast path (parse once at
+    /// snapshot build, reuse everywhere). Point digests are derived from
+    /// `doc_digest` exactly as [`History::ingest`] derives them, so both
+    /// paths reconstruct byte-identical series (differentially tested).
+    pub fn ingest_parsed(&mut self, benchmark: &str, doc_digest: &str, report: &Report) {
         let time = report.experiment.time().unwrap_or_default();
         for (idx, e) in report.data.iter().enumerate() {
             if !e.success {
@@ -125,13 +134,17 @@ impl History {
                 );
             }
         }
-        true
     }
 
     /// Reconstruct history from every `report.json` under `prefix` on
     /// `branch` (the `exacb.data` read-side discipline). The benchmark
     /// name of each series is the first store-path segment. Returns the
     /// history and the count of unparseable documents skipped.
+    ///
+    /// This is the legacy full-walk path, retained as the executable
+    /// differential reference for [`History::from_snapshot`] (like
+    /// `drive_reference` in the event loop) — hot consumers read via
+    /// the snapshot.
     pub fn from_store(
         store: &DataStore,
         branch: &str,
@@ -140,13 +153,33 @@ impl History {
     ) -> (History, usize) {
         let mut h = History::new(metrics);
         let mut skipped = 0;
-        for (path, content) in store.read_all(branch, prefix) {
+        for (path, content) in store.read_all_iter(branch, prefix) {
             if !path.ends_with("report.json") {
                 continue;
             }
-            let benchmark = path.split('/').next().unwrap_or("").to_string();
-            if !h.ingest(&benchmark, &content) {
+            let benchmark = path.split('/').next().unwrap_or("");
+            if !h.ingest(benchmark, content) {
                 skipped += 1;
+            }
+        }
+        (h, skipped)
+    }
+
+    /// Reconstruct history from a [`Snapshot`] — same read discipline
+    /// and same results as [`History::from_store`] (differentially
+    /// tested byte-identical), but each document was parsed exactly
+    /// once, at snapshot build time, instead of once per reader.
+    pub fn from_snapshot(snap: &Snapshot, prefix: &str, metrics: &[&str]) -> (History, usize) {
+        let mut h = History::new(metrics);
+        let mut skipped = 0;
+        for (path, digest) in snap.paths_under(prefix) {
+            if !path.ends_with("report.json") {
+                continue;
+            }
+            let benchmark = path.split('/').next().unwrap_or("");
+            match snap.doc(digest).and_then(|d| d.report.as_ref()) {
+                Some(report) => h.ingest_parsed(benchmark, digest, report),
+                None => skipped += 1,
             }
         }
         (h, skipped)
@@ -342,5 +375,16 @@ mod tests {
         assert_eq!(h.total_points(), 1);
         assert_eq!(skipped, 1);
         assert_eq!(h.series()[0].key.benchmark, "jedi.app");
+        // the snapshot path reconstructs the identical history,
+        // including the skipped-document count
+        let snap = Snapshot::build(&store, "exacb.data");
+        let (hs, skipped_s) = History::from_snapshot(&snap, "jedi.app/", &["runtime"]);
+        assert_eq!(skipped_s, skipped);
+        let (a, b) = (h.series(), hs.series());
+        assert_eq!(a.len(), b.len());
+        for (sa, sb) in a.iter().zip(&b) {
+            assert_eq!(sa.key, sb.key);
+            assert_eq!(sa.points, sb.points);
+        }
     }
 }

@@ -58,7 +58,9 @@ pub fn track_table(world: &World, metric: &str, det: &Detector) -> Table {
     // as 1, 2, 4, 8, 16 — not lexicographically
     let mut rows: Vec<(String, String, u64, String, usize, String, usize)> = Vec::new();
     for repo in world.repos.values() {
-        let (hist, _) = History::from_store(&repo.store, "exacb.data", "", &[metric]);
+        // read via the repo's shared snapshot (DESIGN.md §12): the
+        // table pays O(delta since last reader), not a full re-walk
+        let (hist, _) = repo.with_snapshot(|snap| History::from_snapshot(snap, "", &[metric]));
         for s in hist.series() {
             let values = s.values();
             let verdicts = det.annotate(&values, 10);

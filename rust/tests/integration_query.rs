@@ -1,0 +1,185 @@
+//! Integration: the digest-indexed snapshot + query layer across the
+//! whole stack (DESIGN.md §12) — campaign → store → snapshot →
+//! cmp/rank — pinned against the legacy full-walk readers, which
+//! survive exactly as the executable differential reference.
+
+use exacb::analysis::ReportSet;
+use exacb::coordinator::{collection, World};
+use exacb::maturity::{Assessment, CriteriaConfig};
+use exacb::query::{self, Engine};
+use exacb::store::{sort_rows, Row, Snapshot};
+use exacb::tracking::{run_scenario, History};
+use exacb::workloads::portfolio;
+use exacb::workloads::regression::RegressionScenario;
+
+/// A small but real two-machine campaign world with recorded reports.
+fn campaign_world() -> World {
+    let apps = portfolio::generate(4, 77);
+    let mut world = World::new(77);
+    let machines = ["jupiter", "jedi"];
+    collection::onboard_multi(&mut world, &apps, &machines, "all");
+    collection::run_campaign_concurrent(&mut world, &apps, &machines, 3);
+    world
+}
+
+/// Every snapshot consumer reproduces its legacy full-walk reference
+/// byte-for-byte on a real campaign store: History series, ReportSet
+/// contents, maturity Evidence, and the skip counts.
+#[test]
+fn snapshot_consumers_match_the_legacy_walk() {
+    let world = campaign_world();
+    let cfg = CriteriaConfig::default();
+    let mut repos_with_data = 0;
+    for repo in world.repos.values() {
+        let (walk_h, walk_h_skip) =
+            History::from_store(&repo.store, "exacb.data", "", &["runtime"]);
+        let (snap_h, snap_h_skip) =
+            repo.with_snapshot(|snap| History::from_snapshot(snap, "", &["runtime"]));
+        let flat = |h: &History| -> Vec<_> {
+            h.series()
+                .into_iter()
+                .map(|s| (s.key.clone(), s.points.clone()))
+                .collect()
+        };
+        assert_eq!(flat(&walk_h), flat(&snap_h), "{}", repo.name);
+        assert_eq!(walk_h_skip, snap_h_skip);
+        if walk_h.total_points() > 0 {
+            repos_with_data += 1;
+        }
+
+        let (walk_set, walk_set_skip) = ReportSet::load(&repo.store, "exacb.data", "");
+        let (snap_set, snap_set_skip) =
+            repo.with_snapshot(|snap| ReportSet::from_snapshot(snap, ""));
+        assert_eq!(walk_set.reports, snap_set.reports, "{}", repo.name);
+        assert_eq!(walk_set_skip, snap_set_skip);
+
+        let (walk_a, walk_a_skip) = Assessment::from_store(&repo.store, "exacb.data", "", &cfg);
+        let (snap_a, snap_a_skip) =
+            repo.with_snapshot(|snap| Assessment::from_snapshot(snap, "", &cfg));
+        assert_eq!(walk_a.evidence(None), snap_a.evidence(None), "{}", repo.name);
+        assert_eq!(walk_a_skip, snap_a_skip);
+    }
+    assert!(repos_with_data > 0, "campaign recorded nothing — vacuous test");
+}
+
+/// A snapshot refreshed mid-campaign is byte-identical to one built
+/// from scratch at the end, and the shared repo snapshot is built
+/// exactly once (every later read pays O(delta)).
+#[test]
+fn mid_campaign_refresh_matches_a_fresh_build() {
+    let apps = portfolio::generate(3, 5);
+    let mut world = World::new(5);
+    collection::onboard_multi(&mut world, &apps, &["jupiter"], "all");
+    collection::run_campaign_concurrent(&mut world, &apps, &["jupiter"], 2);
+    // touch every repo's snapshot mid-campaign so the final read is a
+    // refresh over the second half of the history
+    for repo in world.repos.values() {
+        repo.with_snapshot(|snap| assert_eq!(snap.rebuilds(), 1));
+    }
+    collection::run_campaign_concurrent(&mut world, &apps, &["jupiter"], 2);
+    for repo in world.repos.values() {
+        let refreshed = repo.with_snapshot(|snap| snap.fingerprint());
+        let scratch = Snapshot::build(&repo.store, "exacb.data").fingerprint();
+        assert_eq!(refreshed, scratch, "{}", repo.name);
+        let (rebuilds, consumed) = repo.snapshot_stats();
+        assert_eq!(rebuilds, 1, "{}: refresh escalated to a rebuild", repo.name);
+        assert!(consumed > 0, "{}: no commits consumed", repo.name);
+    }
+}
+
+/// `cmp --by commit` on a planted regression: the runtime group of the
+/// post-injection commit is `slower`, with a Welch interval entirely
+/// above zero naming the shift.
+#[test]
+fn cmp_names_the_interval_on_a_planted_regression() {
+    let sc = RegressionScenario::planted("jedi", 12, 7, 10.0, 20260301);
+    let mut world = World::new(20260301);
+    run_scenario(&mut world, &sc);
+    let mut rows = query::world_rows(&world);
+    rows.retain(|r| r.metric == "runtime");
+    let commits = query::commits_by_first_seen(&rows);
+    assert_eq!(commits.len(), 2, "planted scenario must record exactly two commits");
+    let report = query::compare(&rows, Engine::Commit, &commits[0], &commits[1], 0.95, 4);
+    assert!(!report.rows.is_empty());
+    let slower: Vec<_> = report.rows.iter().filter(|r| r.verdict == "slower").collect();
+    assert!(!slower.is_empty(), "10% planted shift not flagged: {:?}", report.rows);
+    for r in &slower {
+        let i = r.interval.as_ref().expect("slower verdict requires an interval");
+        assert!(i.entirely_above(0.0), "{:?}", i);
+        assert!(r.speedup < 1.0, "candidate is the slow side: {}", r.speedup);
+    }
+    // the reverse comparison is the mirror image
+    let rev = query::compare(&rows, Engine::Commit, &commits[1], &commits[0], 0.95, 4);
+    assert_eq!(report.count("slower"), rev.count("faster"));
+}
+
+/// The whole portfolio on *each* machine (a multi-machine onboarding
+/// would round-robin apps, leaving no workload shared), canonical order
+/// — the row set `exacb cmp`/`exacb rank` query in machine mode.
+fn portfolio_rows(machines: &[&str], n: usize, days: i64, seed: u64) -> Vec<Row> {
+    let apps = portfolio::generate(n, seed);
+    let mut rows = Vec::new();
+    for m in machines {
+        let mut world = World::new(seed);
+        collection::onboard_multi(&mut world, &apps, &[m], "all");
+        collection::run_campaign_concurrent(&mut world, &apps, &[m], days);
+        rows.extend(query::world_rows(&world));
+    }
+    sort_rows(&mut rows);
+    rows
+}
+
+/// Satellite property: cmp and rank results are independent of both the
+/// shard count and the ingestion order of the row set (any permutation
+/// canonicalises to the same query input).
+#[test]
+fn queries_are_shard_and_ingestion_order_independent() {
+    let rows = portfolio_rows(&["jupiter", "jedi"], 3, 2, 7);
+    assert!(!rows.is_empty());
+    // a hostile permutation: reverse, then re-canonicalise
+    let mut permuted: Vec<_> = rows.iter().rev().cloned().collect();
+    sort_rows(&mut permuted);
+    assert_eq!(rows, permuted, "sort_rows is not a canonical order");
+
+    let cmp_base = query::compare(&rows, Engine::Machine, "jupiter", "jedi", 0.95, 1);
+    assert!(!cmp_base.rows.is_empty(), "no shared workload groups — vacuous test");
+    let cmp_ref = cmp_base.table().render();
+    let rank_ref = query::rank(&rows, Engine::Machine, 1);
+    assert!(!rank_ref.groups.is_empty());
+    for (shards, input) in [(1, &permuted), (8, &rows), (64, &permuted)] {
+        let c = query::compare(input, Engine::Machine, "jupiter", "jedi", 0.95, shards);
+        assert_eq!(c.table().render(), cmp_ref, "cmp diverged at shards={shards}");
+        let r = query::rank(input, Engine::Machine, shards);
+        assert_eq!(r.groups, rank_ref.groups, "rank diverged at shards={shards}");
+        assert_eq!(r.aggregate, rank_ref.aggregate);
+    }
+    // exports are a pure function of the canonical row set
+    assert_eq!(
+        query::rows_to_csv(&rows),
+        query::rows_to_csv(&permuted),
+        "CSV export is ingestion-order dependent"
+    );
+    assert_eq!(
+        query::rows_to_json(&rows).pretty(),
+        query::rows_to_json(&permuted).pretty()
+    );
+}
+
+/// The gate-facing read path is O(delta): interleaving campaign days
+/// with longitudinal reads never rebuilds the snapshot after its first
+/// construction.
+#[test]
+fn interleaved_reads_never_rebuild() {
+    let sc = RegressionScenario::control("jedi", 6, 9);
+    let mut world = World::new(9);
+    run_scenario(&mut world, &sc);
+    // several distinct readers over the same shared snapshot
+    let t1 = world.track_table("runtime").render();
+    let _ = world.track_table("runtime");
+    let repo = world.repo(&sc.app).unwrap();
+    let (hist, _) = repo.with_snapshot(|snap| History::from_snapshot(snap, "", &["runtime"]));
+    assert!(hist.total_points() > 0);
+    assert!(t1.contains("jedi"));
+    let (rebuilds, _) = repo.snapshot_stats();
+    assert_eq!(rebuilds, 1, "a reader forced a full rebuild");
+}
