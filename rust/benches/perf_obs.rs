@@ -1,0 +1,223 @@
+//! Perf: observability overhead budgets (DESIGN.md §8, §13).
+//!
+//! The deterministic observability layer is off by default; these are
+//! the budgets that keep it honest:
+//!
+//! * **disarmed emission is allocation-free** — a tight loop of
+//!   disarmed counter/histogram/span/instant emissions allocates
+//!   exactly zero bytes, so wiring the event core with emission sites
+//!   added nothing to the tracing-off dispatch path;
+//! * **armed overhead** — driving the 5 000-app fleet slice with the
+//!   tracer and metrics registry fully armed costs at most **15%**
+//!   events/s against the disarmed run of the identical campaign;
+//! * **armed determinism** — the rendered Chrome trace of an armed
+//!   campaign is byte-identical across two replays (the cheap
+//!   bench-side echo of the `integration_obs` contract).
+//!
+//! Like `perf_fleet`, campaign shots are far too heavy for a re-running
+//! harness window, so this bench times single shots with `Instant`.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::time::Instant;
+
+use exacb::cluster::{Cluster, EventLog};
+use exacb::coordinator::{collection, World};
+use exacb::util::timeutil::SimTime;
+use exacb::workloads::portfolio::{self, PortfolioApp};
+
+// ---- counting allocator (same pattern as perf_fleet) -------------------
+
+struct CountingAlloc;
+
+static CURRENT: AtomicUsize = AtomicUsize::new(0);
+static TOTAL: AtomicUsize = AtomicUsize::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        let p = System.alloc(layout);
+        if !p.is_null() {
+            CURRENT.fetch_add(layout.size(), Ordering::Relaxed);
+            TOTAL.fetch_add(layout.size(), Ordering::Relaxed);
+        }
+        p
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout);
+        CURRENT.fetch_sub(layout.size(), Ordering::Relaxed);
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        let p = System.realloc(ptr, layout, new_size);
+        if !p.is_null() {
+            if new_size >= layout.size() {
+                let grow = new_size - layout.size();
+                CURRENT.fetch_add(grow, Ordering::Relaxed);
+                TOTAL.fetch_add(grow, Ordering::Relaxed);
+            } else {
+                CURRENT.fetch_sub(layout.size() - new_size, Ordering::Relaxed);
+            }
+        }
+        p
+    }
+}
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+/// Total bytes allocated (cumulative, not peak) while `f` runs — the
+/// zero-allocation budget cares about *any* allocation, including ones
+/// that are immediately freed and never move the high-water mark.
+fn allocated_during<T>(f: impl FnOnce() -> T) -> (T, usize) {
+    let before = TOTAL.load(Ordering::Relaxed);
+    let out = f();
+    (out, TOTAL.load(Ordering::Relaxed) - before)
+}
+
+// ---- fleet construction (perf_fleet's uniform fleet, gates off) --------
+
+const SEED: u64 = 20260808;
+const MACHINES: usize = 20;
+const FLEET_APPS: usize = 5_000;
+
+fn fleet_cluster() -> Cluster {
+    let standard = Cluster::standard();
+    let base = standard.machine("jedi").expect("jedi exists").clone();
+    let mut machines = Vec::with_capacity(MACHINES);
+    for i in 0..MACHINES {
+        let mut m = base.clone();
+        m.name = format!("fleet-{i:02}");
+        m.nodes = 64;
+        m.queues = vec!["all".into()];
+        machines.push(m);
+    }
+    Cluster {
+        machines,
+        events: EventLog::new(),
+    }
+}
+
+fn fleet_apps(n: usize) -> Vec<PortfolioApp> {
+    let mut apps = portfolio::generate(n, SEED);
+    for app in &mut apps {
+        app.failure_rate = 0.0;
+    }
+    apps
+}
+
+struct Shot {
+    wall: std::time::Duration,
+    events: usize,
+    pipelines_ok: usize,
+}
+
+/// One cold campaign day over `n` apps with the recorders armed or not.
+/// Drains both recorders afterwards so shots are independent.
+fn campaign_shot(n: usize, armed: bool) -> (Shot, Vec<exacb::obs::TraceEvent>, String) {
+    let apps = fleet_apps(n);
+    let machine_names: Vec<String> = (0..MACHINES).map(|i| format!("fleet-{i:02}")).collect();
+    let machines: Vec<&str> = machine_names.iter().map(|s| s.as_str()).collect();
+    let mut world = World::with_cluster(fleet_cluster(), SEED);
+    collection::onboard_multi(&mut world, &apps, &machines, "all");
+    exacb::obs::trace::drain();
+    exacb::obs::metrics::drain();
+    let prior_t = exacb::obs::set_tracing(armed);
+    let prior_m = exacb::obs::set_metrics(armed);
+    let t0 = Instant::now();
+    let summary = collection::run_campaign_concurrent(&mut world, &apps, &machines, 1);
+    let wall = t0.elapsed();
+    exacb::obs::set_tracing(prior_t);
+    exacb::obs::set_metrics(prior_m);
+    let events: usize = world.batch.values().map(|b| b.record_count()).sum();
+    let trace = exacb::obs::trace::drain();
+    let metrics = exacb::obs::metrics::drain();
+    (
+        Shot {
+            wall,
+            events,
+            pipelines_ok: summary.pipelines_succeeded,
+        },
+        trace,
+        metrics.to_json().pretty(),
+    )
+}
+
+fn main() {
+    println!("perf_obs: observability budgets over the {MACHINES}-machine fleet\n");
+
+    // ---- budget 1: disarmed emission allocates zero bytes --------------
+    const DISARMED_CALLS: usize = 1_000_000;
+    assert!(!exacb::obs::tracing() && !exacb::obs::metrics_on());
+    let (_, disarmed_bytes) = allocated_during(|| {
+        for i in 0..DISARMED_CALLS {
+            exacb::obs::count(exacb::obs::Ctr::JobsStarted, 1);
+            exacb::obs::count_machine("fleet-00", exacb::obs::Ctr::JobsCompleted, 1);
+            exacb::obs::observe(exacb::obs::Hist::QueueWaitS, i as i64);
+            exacb::obs::trace::span(
+                "fleet-00",
+                "run",
+                SimTime(i as i64),
+                SimTime(i as i64 + 5),
+                Vec::new(),
+            );
+            exacb::obs::trace::instant("fleet-00", "tick", SimTime(i as i64), Vec::new());
+        }
+    });
+    println!(
+        "  disarmed emission   : {DISARMED_CALLS} x 5 calls, {disarmed_bytes} bytes   budget: 0"
+    );
+
+    // ---- budget 2: armed overhead on the 5k-app fleet slice ------------
+    let (off, off_trace, _) = campaign_shot(FLEET_APPS, false);
+    let off_eps = off.events as f64 / off.wall.as_secs_f64();
+    println!(
+        "  5000 apps disarmed  : {:>8.2?}  {} events  ({:.0} events/s)",
+        off.wall, off.events, off_eps
+    );
+    let (on, on_trace, _) = campaign_shot(FLEET_APPS, true);
+    let on_eps = on.events as f64 / on.wall.as_secs_f64();
+    println!(
+        "  5000 apps armed     : {:>8.2?}  {} events  ({:.0} events/s)  {} trace events",
+        on.wall,
+        on.events,
+        on_eps,
+        on_trace.len()
+    );
+    let overhead_pct = (off_eps / on_eps.max(1e-9) - 1.0) * 100.0;
+    println!("  armed overhead      = {overhead_pct:>9.1}%   budget: <= 15%");
+
+    // ---- budget 3: armed trace bytes reproduce -------------------------
+    let (_, rep_a, met_a) = campaign_shot(500, true);
+    let (_, rep_b, met_b) = campaign_shot(500, true);
+    let json_a = exacb::obs::trace::chrome_trace_json(&rep_a);
+    let json_b = exacb::obs::trace::chrome_trace_json(&rep_b);
+    println!(
+        "  500-app armed replay: {} trace bytes, {} metric bytes, twice\n",
+        json_a.len(),
+        met_a.len()
+    );
+
+    assert_eq!(
+        disarmed_bytes, 0,
+        "disarmed emission allocated {disarmed_bytes} bytes over {DISARMED_CALLS} iterations"
+    );
+    assert!(off_trace.is_empty(), "disarmed campaign recorded events");
+    assert!(
+        !on_trace.is_empty() && on.events > 0 && on.pipelines_ok > 0,
+        "armed campaign recorded nothing"
+    );
+    assert_eq!(
+        off.events, on.events,
+        "arming changed the number of scheduler events"
+    );
+    assert!(
+        on_eps >= off_eps * 0.85,
+        "armed dispatch overhead {overhead_pct:.1}% exceeds the 15% budget \
+         ({off_eps:.0} -> {on_eps:.0} events/s)"
+    );
+    assert_eq!(json_a, json_b, "armed trace bytes diverged across replays");
+    assert_eq!(met_a, met_b, "armed metrics bytes diverged across replays");
+
+    println!("perf_obs: all budgets green");
+}

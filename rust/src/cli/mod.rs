@@ -7,6 +7,7 @@
 //! exacb cmp         [--by machine] [--machines jupiter,jedi]
 //! exacb rank        [--machines jupiter,jedi,jureca]
 //! exacb jureap      [--apps 72] [--days 12] [--machines jupiter]
+//! exacb trace       [--apps 24] [--days 3] [--export-trace trace.json]
 //! exacb figures     [--days 90] [--out out/] [--only fig3]
 //! exacb ablation    [--benchmarks 70]
 //! exacb components
@@ -69,6 +70,13 @@ COMMANDS:
                 --machines M1,M2 --seed S --sequential true for the
                 legacy dispatch; --expect-savings fails when no swept
                 app shows a positive sweet-spot saving)
+  trace         run a concurrent campaign with deterministic sim-time
+                tracing + metrics armed and render the critical-path
+                views: top-N longest queue waits, slowest execute
+                stages, and gate-scheduled repetitions per app
+                (--apps N --days D --machines M1,M2 --seed S --top N
+                --export-trace trace.json --export-metrics obs.json;
+                exports are sidecars, never part of report.json)
   figures       regenerate every paper table/figure (--days D --out DIR --only ID)
   ablation      run the §III integration-mode ablation (--benchmarks N)
   components    list the CI/CD component catalog
@@ -88,6 +96,11 @@ pub fn run(argv: Vec<String>) -> i32 {
             return 2;
         }
     };
+    // narration verbosity: `--quiet` silences the obs::log facade for
+    // every subcommand; result tables still go to stdout untouched
+    if args.bool("quiet") {
+        crate::obs::log::set_quiet();
+    }
     match args.subcommand.as_deref() {
         Some("quickstart") => cmd_quickstart(&args),
         Some("collection") => cmd_collection(&args),
@@ -96,6 +109,7 @@ pub fn run(argv: Vec<String>) -> i32 {
         Some("rank") => cmd_rank(&args),
         Some("jureap") => cmd_jureap(&args),
         Some("energy") => cmd_energy(&args),
+        Some("trace") => cmd_trace(&args),
         Some("figures") => cmd_figures(&args),
         Some("ablation") => cmd_ablation(&args),
         Some("components") => cmd_components(),
@@ -754,6 +768,108 @@ fn cmd_energy(args: &Args) -> i32 {
     0
 }
 
+/// Run a concurrent campaign with the deterministic observability layer
+/// armed (DESIGN.md §13) and render the critical-path views over the
+/// drained trace: top-N longest queue waits, slowest execute stages, and
+/// gate-scheduled repetitions per app. `--export-trace` writes Chrome
+/// trace-event JSON (Perfetto-loadable, sim-time µs); `--export-metrics`
+/// writes the `obs.json` counters sidecar. Arming never changes what the
+/// campaign produces — reports, sacct records, and store bytes are
+/// byte-identical armed or disarmed (pinned by `tests/integration_obs.rs`).
+fn cmd_trace(args: &Args) -> i32 {
+    let n = args.u64("apps", 24) as usize;
+    let days = args.i64("days", 3);
+    let seed = args.u64("seed", 20260101);
+    let top_n = args.u64("top", 10).max(1) as usize;
+    let queue = args.str("queue", "all");
+    let machines = machine_list(args, "jupiter,jedi,jureca");
+    if machines.is_empty() {
+        eprintln!("error: --machines needs at least one machine name (e.g. jupiter,jedi)");
+        return 2;
+    }
+    let machine_refs: Vec<&str> = machines.iter().map(String::as_str).collect();
+
+    let mut world = World::new(seed);
+    let apps = portfolio::generate(n, seed);
+    collection::onboard_multi(&mut world, &apps, &machine_refs, &queue);
+    println!(
+        "tracing {n} application(s) on {} over {days} simulated day(s) (seed {seed})…",
+        machines.join(",")
+    );
+
+    // arm both recorders for exactly the campaign; drop anything a prior
+    // caller left behind so the exports cover only this run
+    crate::obs::trace::drain();
+    crate::obs::metrics::drain();
+    let prior_tracing = crate::obs::set_tracing(true);
+    let prior_metrics = crate::obs::set_metrics(true);
+    let summary = collection::run_campaign_concurrent(&mut world, &apps, &machine_refs, days);
+    crate::obs::set_tracing(prior_tracing);
+    crate::obs::set_metrics(prior_metrics);
+    let events = crate::obs::trace::drain();
+    let metrics = crate::obs::metrics::drain();
+
+    println!(
+        "pipelines: {}/{} succeeded; {} trace event(s), {} task wake(s), {} job(s) started \
+         ({} backfilled)",
+        summary.pipelines_succeeded,
+        summary.pipelines_run,
+        events.len(),
+        metrics.counter(crate::obs::Ctr::TaskWakes),
+        metrics.counter(crate::obs::Ctr::JobsStarted),
+        metrics.counter(crate::obs::Ctr::JobsBackfilled),
+    );
+
+    let (waits, steps, gates) =
+        crate::coordinator::postproc::critical_path_tables(&events, &metrics, top_n);
+    println!("\ntop-{top_n} longest queue waits:");
+    print!("{}", waits.render());
+    println!("\ntop-{top_n} slowest job runs:");
+    print!("{}", steps.render());
+    println!("\ngate-scheduled repetitions per app:");
+    print!("{}", gates.render());
+
+    // exports may name not-yet-existing directories (e.g. out/trace.json)
+    fn write_export(path: &str, content: String) -> std::io::Result<()> {
+        if let Some(parent) = std::path::Path::new(path).parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)?;
+            }
+        }
+        std::fs::write(path, content)
+    }
+
+    let mut ok = true;
+    if let Some(path) = args.flags.get("export-trace") {
+        match write_export(path, crate::obs::trace::chrome_trace_json(&events)) {
+            Ok(()) => {
+                println!(
+                    "\nexported {} event(s) to {path} (Chrome trace JSON)",
+                    events.len()
+                )
+            }
+            Err(e) => {
+                eprintln!("error: writing {path}: {e}");
+                ok = false;
+            }
+        }
+    }
+    if let Some(path) = args.flags.get("export-metrics") {
+        match write_export(path, metrics.to_json().pretty()) {
+            Ok(()) => println!("exported metrics to {path} (obs.json sidecar)"),
+            Err(e) => {
+                eprintln!("error: writing {path}: {e}");
+                ok = false;
+            }
+        }
+    }
+    if ok {
+        0
+    } else {
+        1
+    }
+}
+
 fn cmd_figures(args: &Args) -> i32 {
     let days = args.i64("days", 90);
     let seed = args.u64("seed", 2026);
@@ -1009,6 +1125,38 @@ mod tests {
     }
 
     #[test]
+    fn trace_small_campaign_renders_and_exports() {
+        let dir = std::env::temp_dir().join("exacb-trace-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let trace = dir.join("trace.json");
+        let obs = dir.join("obs.json");
+        assert_eq!(
+            run_str(&format!(
+                "trace --apps 3 --days 1 --seed 8 --machines jedi --top 5 \
+                 --export-trace {} --export-metrics {}",
+                trace.display(),
+                obs.display()
+            )),
+            0
+        );
+        let doc = crate::util::json::Json::parse(&std::fs::read_to_string(&trace).unwrap())
+            .unwrap();
+        assert!(
+            doc.get("traceEvents")
+                .and_then(crate::util::json::Json::as_arr)
+                .map(|a| !a.is_empty())
+                .unwrap_or(false),
+            "trace export should carry events"
+        );
+        let m = crate::util::json::Json::parse(&std::fs::read_to_string(&obs).unwrap()).unwrap();
+        assert_eq!(m.str_of("component"), Some("obs"));
+        assert!(m.get("counters").unwrap().u64_of("jobs_started").unwrap_or(0) > 0);
+        // arming is scoped to the campaign: nothing left armed afterwards
+        assert!(!crate::obs::tracing());
+        assert!(!crate::obs::metrics_on());
+    }
+
+    #[test]
     fn concurrent_collection_runs() {
         assert_eq!(
             run_str(
@@ -1054,7 +1202,7 @@ mod tests {
     fn help_lists_every_subcommand_with_a_description() {
         // keep in sync with the dispatcher match in `run` (that is the
         // point: this list fails loudly when the two drift apart)
-        const SUBCOMMANDS: [&str; 13] = [
+        const SUBCOMMANDS: [&str; 14] = [
             "quickstart",
             "collection",
             "track",
@@ -1062,6 +1210,7 @@ mod tests {
             "rank",
             "jureap",
             "energy",
+            "trace",
             "figures",
             "ablation",
             "components",

@@ -371,7 +371,18 @@ pub fn run_campaign_concurrent_with(
     let mut pipelines_succeeded = 0;
     let mut item_cursor = 0;
     for day in 0..days {
-        world.advance_to(SimTime::from_days(day).add_secs(3 * 3600));
+        let trigger = SimTime::from_days(day).add_secs(3 * 3600);
+        world.advance_to(trigger);
+        if crate::obs::tracing() {
+            // the trigger instant is campaign input (day schedule), not
+            // dispatch state — safe to stamp directly
+            crate::obs::trace::instant(
+                "campaign",
+                "day-trigger",
+                trigger,
+                crate::obs::trace::args(&[("day", day.to_string())]),
+            );
+        }
         let mut tasks = Vec::new();
         let mut patched: Vec<&PortfolioApp> = Vec::new();
         // queue items are built day by day, so each day's slice is

@@ -128,7 +128,36 @@ impl PipelineTask {
 
     /// Advance through invocations until the task blocks on a batch job
     /// or finishes. Pass the completed awaited jobid when resuming.
+    ///
+    /// The wake is the observability seam shared by [`drive`] and
+    /// [`drive_reference`]: both drivers deliver each completed awaited
+    /// job exactly once, so emitting here (stamped with the completed
+    /// job's recorded end time — content, not dispatch order) keeps the
+    /// trace identical across them.
     pub fn poll(&mut self, world: &mut World, mut completed: Option<u64>) -> TaskPoll {
+        if let Some(jobid) = completed {
+            crate::obs::count(crate::obs::Ctr::TaskWakes, 1);
+            if crate::obs::tracing() {
+                if let Some((machine, _)) = self.waiting.clone() {
+                    let end = world
+                        .batch
+                        .get(&machine)
+                        .and_then(|b| b.record(jobid))
+                        .and_then(|r| r.end_time);
+                    if let Some(ts) = end {
+                        crate::obs::trace::instant(
+                            &machine,
+                            "wake",
+                            ts,
+                            crate::obs::trace::args(&[
+                                ("pipeline", self.pipeline.id.to_string()),
+                                ("jobid", jobid.to_string()),
+                            ]),
+                        );
+                    }
+                }
+            }
+        }
         loop {
             if let Some(exec) = self.exec.as_mut() {
                 match exec.poll(world, &mut self.repo, self.rng.as_mut(), completed.take()) {

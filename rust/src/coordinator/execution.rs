@@ -456,6 +456,18 @@ impl ExecutionTask {
                             .set("cache", "hit");
                         execute.provenance = prov;
                         execute.state = CiJobState::Success;
+                        if crate::obs::tracing() {
+                            crate::obs::trace::instant(
+                                &params.machine,
+                                "cache-replay",
+                                self.start_time,
+                                crate::obs::trace::args(&[
+                                    ("pipeline", self.pipeline_id.to_string()),
+                                    ("prefix", params.prefix.clone()),
+                                    ("points", report.data.len().to_string()),
+                                ]),
+                            );
+                        }
                         self.jobs.push(execute);
                         if params.record {
                             let end_time = world
@@ -602,6 +614,24 @@ impl ExecutionTask {
         };
         execute.provenance = step_provenance;
         let execute_ok = execute.state == CiJobState::Success;
+        // machine-local clocks at the execute stage's start and finish:
+        // both are functions of that machine's own job sequence (pinned
+        // byte-identical across drivers by the sacct contract), unlike
+        // the max-over-machines `world.now()`
+        if crate::obs::tracing() {
+            crate::obs::trace::span(
+                &params.machine,
+                "execute",
+                self.start_time,
+                end_time,
+                crate::obs::trace::args(&[
+                    ("pipeline", self.pipeline_id.to_string()),
+                    ("prefix", params.prefix.clone()),
+                    ("points", outcomes.len().to_string()),
+                    ("ok", execute_ok.to_string()),
+                ]),
+            );
+        }
         self.jobs.push(execute);
 
         // Only fully-successful runs enter the run-level cache: a failure

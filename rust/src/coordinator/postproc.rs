@@ -167,6 +167,82 @@ pub fn queue_stats(world: &World) -> Table {
     t
 }
 
+fn ev_arg<'a>(e: &'a crate::obs::TraceEvent, key: &str) -> &'a str {
+    e.args
+        .iter()
+        .find(|(k, _)| k == key)
+        .map(|(_, v)| v.as_str())
+        .unwrap_or("")
+}
+
+fn top_by_duration<'a>(
+    events: &'a [crate::obs::TraceEvent],
+    name: &str,
+    top_n: usize,
+) -> Vec<&'a crate::obs::TraceEvent> {
+    let mut picked: Vec<&crate::obs::TraceEvent> =
+        events.iter().filter(|e| e.name == name && e.dur >= 0).collect();
+    // longest first; ties broken by the canonical content order so the
+    // table is as replay-stable as the trace it summarizes
+    picked.sort_by(|a, b| b.dur.cmp(&a.dur).then_with(|| a.cmp(b)));
+    picked.truncate(top_n);
+    picked
+}
+
+/// The `exacb trace` critical-path views over a drained trace + metrics
+/// snapshot: (longest queue waits, slowest execute stages, gate-scheduled
+/// repetitions per app). Pure functions of the canonical trace content,
+/// so the tables are byte-identical across replays and drivers.
+pub fn critical_path_tables(
+    events: &[crate::obs::TraceEvent],
+    metrics: &crate::obs::MetricsSnapshot,
+    top_n: usize,
+) -> (Table, Table, Table) {
+    let mut waits = Table::new(&["machine", "jobid", "job", "wait_s", "backfilled"]);
+    for e in top_by_duration(events, "queue-wait", top_n) {
+        waits.push_row(vec![
+            e.track.clone(),
+            ev_arg(e, "jobid").to_string(),
+            ev_arg(e, "job").to_string(),
+            e.dur.to_string(),
+            ev_arg(e, "backfilled").to_string(),
+        ]);
+    }
+    if waits.rows.is_empty() {
+        waits.push_placeholder("(no queue waits recorded)");
+    }
+
+    let mut steps = Table::new(&["machine", "jobid", "job", "run_s", "state"]);
+    for e in top_by_duration(events, "run", top_n) {
+        steps.push_row(vec![
+            e.track.clone(),
+            ev_arg(e, "jobid").to_string(),
+            ev_arg(e, "job").to_string(),
+            e.dur.to_string(),
+            ev_arg(e, "state").to_string(),
+        ]);
+    }
+    if steps.rows.is_empty() {
+        steps.push_placeholder("(no job runs recorded)");
+    }
+
+    let mut gates = Table::new(&["app", "pipelines", "gate_rounds", "extra_reps"]);
+    use crate::obs::Ctr;
+    for app in metrics.apps() {
+        gates.push_row(vec![
+            app.to_string(),
+            metrics.app_counter(app, Ctr::PipelinesRun).to_string(),
+            metrics.app_counter(app, Ctr::GateRounds).to_string(),
+            metrics.app_counter(app, Ctr::GateReps).to_string(),
+        ]);
+    }
+    if gates.rows.is_empty() {
+        gates.push_placeholder("(no app activity recorded)");
+    }
+
+    (waits, steps, gates)
+}
+
 /// `time-series@v3` (paper §V-A.2): continuous visualisation of selected
 /// performance metrics with regression detection (Figs. 3–4).
 pub fn run_time_series(world: &mut World, repo: &BenchmarkRepo, inputs: &Json) -> CiJob {

@@ -197,6 +197,31 @@ impl World {
     /// event loop retires every finished pipeline through here; a fleet
     /// campaign then resolves ids in O(1) instead of scanning the list.
     pub fn record_pipeline(&mut self, pipeline: Pipeline) {
+        if crate::obs::metrics_on() {
+            use crate::obs::Ctr;
+            crate::obs::count_app(&pipeline.repo, Ctr::PipelinesRun, 1);
+            if pipeline.succeeded() {
+                crate::obs::count_app(&pipeline.repo, Ctr::PipelinesSucceeded, 1);
+            } else {
+                crate::obs::count_app(&pipeline.repo, Ctr::PipelinesFailed, 1);
+            }
+        }
+        if crate::obs::tracing() {
+            // stamped with the pipeline's creation time (content carried
+            // in the record), not `self.now()` — the max-over-machines
+            // clock at retirement is dispatch-order sensitive
+            crate::obs::trace::instant(
+                "pipeline",
+                "retire",
+                pipeline.created,
+                crate::obs::trace::args(&[
+                    ("pipeline", pipeline.id.to_string()),
+                    ("repo", pipeline.repo.clone()),
+                    ("jobs", pipeline.jobs.len().to_string()),
+                    ("ok", pipeline.succeeded().to_string()),
+                ]),
+            );
+        }
         self.pipeline_index.insert(pipeline.id, self.pipelines.len());
         self.pipelines.push(pipeline);
     }

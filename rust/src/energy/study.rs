@@ -391,12 +391,33 @@ pub(crate) fn run_sweep(
             }
         })
         .collect();
+    if crate::obs::metrics_on() {
+        crate::obs::count_app(&repo.name, crate::obs::Ctr::EnergySweeps, 1);
+        crate::obs::count_app(&repo.name, crate::obs::Ctr::EnergyPoints, flights.len() as u64);
+    }
+    let sweep_start = world.batch.get(&base.machine).map(|b| b.now());
     {
         let repos = std::slice::from_mut(repo);
         if policy.concurrent {
             drive_concurrent(world, repos, &mut flights);
         } else {
             drive_sequential(world, repos, &mut flights);
+        }
+    }
+    if crate::obs::tracing() {
+        let sweep_end = world.batch.get(&base.machine).map(|b| b.now());
+        if let (Some(s), Some(e)) = (sweep_start, sweep_end) {
+            crate::obs::trace::span(
+                &base.machine,
+                "energy-sweep",
+                s,
+                e,
+                crate::obs::trace::args(&[
+                    ("pipeline", pipeline_id.to_string()),
+                    ("repo", repo.name.clone()),
+                    ("points", freqs.len().to_string()),
+                ]),
+            );
         }
     }
     world.cache = stashed_cache;

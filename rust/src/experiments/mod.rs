@@ -27,12 +27,14 @@ pub struct ExperimentResult {
 }
 
 impl ExperimentResult {
-    /// Print the paper-style series to stdout.
+    /// Print the paper-style series to stdout. The table itself is CLI
+    /// output and always lands on stdout; the header and notes are
+    /// narration and honor the log threshold (`--quiet` / `EXACB_LOG`).
     pub fn print(&self) {
-        println!("\n=== {} — {} ===", self.id, self.title);
+        crate::obs_info!("=== {} — {} ===", self.id, self.title);
         print!("{}", self.table.render());
         for n in &self.notes {
-            println!("note: {n}");
+            crate::obs_info!("note: {n}");
         }
     }
 

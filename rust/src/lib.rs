@@ -19,6 +19,7 @@
 //! runs on the benchmarking path.
 
 pub mod util;
+pub mod obs;
 pub mod protocol;
 pub mod cluster;
 pub mod scheduler;

@@ -170,6 +170,14 @@ pub fn run_maturity_gate(
     if relevel {
         repo.maturity = written_level;
     }
+    if crate::obs::metrics_on() {
+        crate::obs::count_app(&repo.name, crate::obs::Ctr::MaturityChecks, 1);
+        if verdict == "promoted" {
+            crate::obs::count_app(&repo.name, crate::obs::Ctr::MaturityPromotions, 1);
+        } else if verdict == "demoted" {
+            crate::obs::count_app(&repo.name, crate::obs::Ctr::MaturityDemotions, 1);
+        }
+    }
 
     // ---- maturity.json sidecar ---------------------------------------
     let judge_through = policy.target.unwrap_or(Maturity::Reproducibility);

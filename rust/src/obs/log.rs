@@ -1,0 +1,162 @@
+//! Leveled narration facade (DESIGN.md §13).
+//!
+//! All ad-hoc `println!`/`eprintln!` narration in the crate routes
+//! through here so one switch governs it: the `EXACB_LOG` environment
+//! variable (`off`, `error`, `warn`, `info`, `debug`) or the CLI's
+//! `--quiet` flag. Narration always goes to **stderr**; CLI result
+//! tables stay on stdout untouched, so piping `exacb ... | tool` keeps
+//! working however chatty the run is.
+//!
+//! The level is resolved once (lazily) and cached in an atomic, so the
+//! disabled path is a single relaxed load — cheap enough for test
+//! helpers and workload narration alike. The [`crate::obs_info!`]-style
+//! macros check [`enabled`] *before* formatting, so a suppressed line
+//! never allocates its message.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Narration severity, most severe first.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    /// Something went wrong and the run's output may be incomplete.
+    Error = 1,
+    /// Something was skipped or degraded (e.g. a missing backend).
+    Warn = 2,
+    /// Progress narration (the default verbosity).
+    Info = 3,
+    /// Tracing-adjacent detail, off by default.
+    Debug = 4,
+}
+
+impl Level {
+    /// The stderr line prefix.
+    pub fn tag(self) -> &'static str {
+        match self {
+            Level::Error => "error",
+            Level::Warn => "warn",
+            Level::Info => "info",
+            Level::Debug => "debug",
+        }
+    }
+}
+
+/// Verbosity threshold: 0 = off, 1..=4 = show levels up to that
+/// severity rank. `UNSET` defers to `EXACB_LOG` on first use.
+static THRESHOLD: AtomicU8 = AtomicU8::new(UNSET);
+const UNSET: u8 = u8::MAX;
+const DEFAULT: u8 = Level::Info as u8;
+
+fn parse_level(s: &str) -> u8 {
+    match s.trim().to_ascii_lowercase().as_str() {
+        "off" | "none" | "quiet" | "0" => 0,
+        "error" => Level::Error as u8,
+        "warn" | "warning" => Level::Warn as u8,
+        "info" => Level::Info as u8,
+        "debug" | "trace" => Level::Debug as u8,
+        _ => DEFAULT,
+    }
+}
+
+fn threshold() -> u8 {
+    let v = THRESHOLD.load(Ordering::Relaxed);
+    if v != UNSET {
+        return v;
+    }
+    let v = std::env::var("EXACB_LOG")
+        .map(|s| parse_level(&s))
+        .unwrap_or(DEFAULT);
+    THRESHOLD.store(v, Ordering::Relaxed);
+    v
+}
+
+/// Set the verbosity threshold explicitly (overrides `EXACB_LOG`).
+/// Returns the previous effective threshold rank.
+pub fn set_level(level: Level) -> u8 {
+    let prev = threshold();
+    THRESHOLD.store(level as u8, Ordering::Relaxed);
+    prev
+}
+
+/// Silence everything below [`Level::Error`] — the `--quiet` switch.
+pub fn set_quiet() {
+    THRESHOLD.store(Level::Error as u8, Ordering::Relaxed);
+}
+
+/// Restore a threshold rank previously returned by [`set_level`].
+pub fn restore_level(rank: u8) {
+    THRESHOLD.store(rank, Ordering::Relaxed);
+}
+
+/// Would a message at `level` be shown? Checked by the macros before
+/// the message is formatted.
+pub fn enabled(level: Level) -> bool {
+    (level as u8) <= threshold()
+}
+
+/// Emit one narration line to stderr. Call through the macros, which
+/// gate on [`enabled`] first.
+pub fn write_line(level: Level, msg: &str) {
+    eprintln!("{}: {msg}", level.tag());
+}
+
+/// Log at an explicit [`Level`]; the message is only formatted when the
+/// level is enabled.
+#[macro_export]
+macro_rules! obs_log {
+    ($lvl:expr, $($arg:tt)*) => {
+        if $crate::obs::log::enabled($lvl) {
+            $crate::obs::log::write_line($lvl, &format!($($arg)*));
+        }
+    };
+}
+
+/// Narrate an error (shown unless `EXACB_LOG=off`).
+#[macro_export]
+macro_rules! obs_error {
+    ($($arg:tt)*) => { $crate::obs_log!($crate::obs::log::Level::Error, $($arg)*) };
+}
+
+/// Narrate a degraded/skipped condition.
+#[macro_export]
+macro_rules! obs_warn {
+    ($($arg:tt)*) => { $crate::obs_log!($crate::obs::log::Level::Warn, $($arg)*) };
+}
+
+/// Narrate progress (default verbosity).
+#[macro_export]
+macro_rules! obs_info {
+    ($($arg:tt)*) => { $crate::obs_log!($crate::obs::log::Level::Info, $($arg)*) };
+}
+
+/// Narrate detail hidden by default (`EXACB_LOG=debug`).
+#[macro_export]
+macro_rules! obs_debug {
+    ($($arg:tt)*) => { $crate::obs_log!($crate::obs::log::Level::Debug, $($arg)*) };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn levels_order_and_gate() {
+        let prev = set_level(Level::Warn);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Info));
+        assert!(!enabled(Level::Debug));
+        set_quiet();
+        assert!(enabled(Level::Error));
+        assert!(!enabled(Level::Warn));
+        restore_level(prev);
+    }
+
+    #[test]
+    fn env_strings_parse() {
+        assert_eq!(parse_level("off"), 0);
+        assert_eq!(parse_level("ERROR"), Level::Error as u8);
+        assert_eq!(parse_level("warn"), Level::Warn as u8);
+        assert_eq!(parse_level("debug"), Level::Debug as u8);
+        assert_eq!(parse_level("unknown"), Level::Info as u8);
+    }
+}

@@ -1,0 +1,431 @@
+//! Preallocated, allocation-flat metrics registry (DESIGN.md §13).
+//!
+//! Counters are an enum indexing a fixed `u64` array — incrementing one
+//! is an array add, never a hash or an allocation. Three planes exist:
+//! the **global** plane, a **per-machine** plane, and a **per-app**
+//! plane; the named planes are linear-probed `Vec<(String, [u64; N])>`
+//! rows (machine and app cardinality is small — tens, not thousands),
+//! so after a plane row's first touch every further increment is
+//! allocation-free. Histograms use fixed bucket edges chosen for
+//! scheduler latencies (seconds → a simulated day), so observation is a
+//! scan over a dozen bounds.
+//!
+//! Like the tracer, the registry is thread-local and **off by default**
+//! ([`crate::obs::set_metrics`]); the disarmed path is one `Cell<bool>`
+//! read. [`drain`] snapshots and resets; [`MetricsSnapshot::to_json`]
+//! renders the `obs.json` sidecar — planes sorted by name and
+//! zero-valued counters skipped, so the document is a pure function of
+//! what was counted, not of arming or interleaving incidentals.
+
+use std::cell::RefCell;
+
+use crate::util::json::Json;
+
+/// Every counter the instrumented subsystems bump. Declaration order is
+/// the export order of `obs.json`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Ctr {
+    // scheduler (per machine)
+    JobsSubmitted,
+    JobsRejected,
+    JobsStarted,
+    JobsBackfilled,
+    JobsCompleted,
+    JobsFailed,
+    JobsTimeout,
+    HeadHolds,
+    // event loop
+    TaskWakes,
+    PipelinesRun,
+    PipelinesSucceeded,
+    PipelinesFailed,
+    // execution cache
+    CacheHits,
+    CacheMisses,
+    CacheInvalidated,
+    CacheInserts,
+    // store snapshots
+    SnapshotRefreshes,
+    SnapshotRebuilds,
+    SnapshotCommitsConsumed,
+    // gates
+    GateRounds,
+    GateReps,
+    MaturityChecks,
+    MaturityPromotions,
+    MaturityDemotions,
+    EnergySweeps,
+    EnergyPoints,
+}
+
+impl Ctr {
+    /// All counters, in declaration (= export) order.
+    pub const ALL: [Ctr; CTR_COUNT] = [
+        Ctr::JobsSubmitted,
+        Ctr::JobsRejected,
+        Ctr::JobsStarted,
+        Ctr::JobsBackfilled,
+        Ctr::JobsCompleted,
+        Ctr::JobsFailed,
+        Ctr::JobsTimeout,
+        Ctr::HeadHolds,
+        Ctr::TaskWakes,
+        Ctr::PipelinesRun,
+        Ctr::PipelinesSucceeded,
+        Ctr::PipelinesFailed,
+        Ctr::CacheHits,
+        Ctr::CacheMisses,
+        Ctr::CacheInvalidated,
+        Ctr::CacheInserts,
+        Ctr::SnapshotRefreshes,
+        Ctr::SnapshotRebuilds,
+        Ctr::SnapshotCommitsConsumed,
+        Ctr::GateRounds,
+        Ctr::GateReps,
+        Ctr::MaturityChecks,
+        Ctr::MaturityPromotions,
+        Ctr::MaturityDemotions,
+        Ctr::EnergySweeps,
+        Ctr::EnergyPoints,
+    ];
+
+    /// Stable export name (snake_case).
+    pub fn name(self) -> &'static str {
+        match self {
+            Ctr::JobsSubmitted => "jobs_submitted",
+            Ctr::JobsRejected => "jobs_rejected",
+            Ctr::JobsStarted => "jobs_started",
+            Ctr::JobsBackfilled => "jobs_backfilled",
+            Ctr::JobsCompleted => "jobs_completed",
+            Ctr::JobsFailed => "jobs_failed",
+            Ctr::JobsTimeout => "jobs_timeout",
+            Ctr::HeadHolds => "head_holds",
+            Ctr::TaskWakes => "task_wakes",
+            Ctr::PipelinesRun => "pipelines_run",
+            Ctr::PipelinesSucceeded => "pipelines_succeeded",
+            Ctr::PipelinesFailed => "pipelines_failed",
+            Ctr::CacheHits => "cache_hits",
+            Ctr::CacheMisses => "cache_misses",
+            Ctr::CacheInvalidated => "cache_invalidated",
+            Ctr::CacheInserts => "cache_inserts",
+            Ctr::SnapshotRefreshes => "snapshot_refreshes",
+            Ctr::SnapshotRebuilds => "snapshot_rebuilds",
+            Ctr::SnapshotCommitsConsumed => "snapshot_commits_consumed",
+            Ctr::GateRounds => "gate_rounds",
+            Ctr::GateReps => "gate_reps",
+            Ctr::MaturityChecks => "maturity_checks",
+            Ctr::MaturityPromotions => "maturity_promotions",
+            Ctr::MaturityDemotions => "maturity_demotions",
+            Ctr::EnergySweeps => "energy_sweeps",
+            Ctr::EnergyPoints => "energy_points",
+        }
+    }
+}
+
+/// Number of counters (array size of every plane row).
+pub const CTR_COUNT: usize = 26;
+
+/// Fixed-bucket histograms over sim-time seconds.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Hist {
+    /// Queue wait (submit → start), per started job.
+    QueueWaitS,
+    /// Run time (start → end), per started job.
+    RunTimeS,
+}
+
+impl Hist {
+    pub const ALL: [Hist; HIST_COUNT] = [Hist::QueueWaitS, Hist::RunTimeS];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Hist::QueueWaitS => "queue_wait_s",
+            Hist::RunTimeS => "run_time_s",
+        }
+    }
+}
+
+/// Number of histograms.
+pub const HIST_COUNT: usize = 2;
+
+/// Inclusive upper bucket edges [s]; the last bucket is unbounded.
+pub const BUCKET_EDGES: [i64; 12] = [
+    1, 5, 15, 60, 300, 900, 3600, 7200, 14_400, 28_800, 57_600, 86_400,
+];
+
+/// Buckets per histogram (edges + one overflow bucket).
+pub const BUCKET_COUNT: usize = BUCKET_EDGES.len() + 1;
+
+fn bucket_of(value_s: i64) -> usize {
+    BUCKET_EDGES
+        .iter()
+        .position(|&edge| value_s <= edge)
+        .unwrap_or(BUCKET_EDGES.len())
+}
+
+/// One counter plane row: all counters of one named entity.
+type Plane = [u64; CTR_COUNT];
+
+/// The registry: global counters + named planes + histograms. The
+/// dispatch-path cost of an increment is an array add plus (for named
+/// planes) a short linear probe — no hashing, no allocation after the
+/// row's first touch.
+#[derive(Debug, Clone)]
+struct Registry {
+    global: Plane,
+    machines: Vec<(String, Plane)>,
+    apps: Vec<(String, Plane)>,
+    hists: [[u64; BUCKET_COUNT]; HIST_COUNT],
+}
+
+impl Registry {
+    const fn new() -> Registry {
+        Registry {
+            global: [0; CTR_COUNT],
+            machines: Vec::new(),
+            apps: Vec::new(),
+            hists: [[0; BUCKET_COUNT]; HIST_COUNT],
+        }
+    }
+}
+
+thread_local! {
+    static REGISTRY: RefCell<Registry> = const { RefCell::new(Registry::new()) };
+}
+
+fn plane_add(rows: &mut Vec<(String, Plane)>, name: &str, c: Ctr, n: u64) {
+    if let Some(row) = rows.iter_mut().find(|(k, _)| k == name) {
+        row.1[c as usize] += n;
+        return;
+    }
+    let mut fresh: Plane = [0; CTR_COUNT];
+    fresh[c as usize] = n;
+    rows.push((name.to_string(), fresh));
+}
+
+/// Bump a global counter. No-op when metrics are disarmed.
+pub fn count(c: Ctr, n: u64) {
+    if !crate::obs::metrics_on() {
+        return;
+    }
+    REGISTRY.with(|r| r.borrow_mut().global[c as usize] += n);
+}
+
+/// Bump a counter on the global plane **and** the named machine plane.
+pub fn count_machine(machine: &str, c: Ctr, n: u64) {
+    if !crate::obs::metrics_on() {
+        return;
+    }
+    REGISTRY.with(|r| {
+        let mut reg = r.borrow_mut();
+        reg.global[c as usize] += n;
+        plane_add(&mut reg.machines, machine, c, n);
+    });
+}
+
+/// Bump a counter on the global plane **and** the named app plane.
+pub fn count_app(app: &str, c: Ctr, n: u64) {
+    if !crate::obs::metrics_on() {
+        return;
+    }
+    REGISTRY.with(|r| {
+        let mut reg = r.borrow_mut();
+        reg.global[c as usize] += n;
+        plane_add(&mut reg.apps, app, c, n);
+    });
+}
+
+/// Record one observation [s] into a fixed-bucket histogram.
+pub fn observe(h: Hist, value_s: i64) {
+    if !crate::obs::metrics_on() {
+        return;
+    }
+    REGISTRY.with(|r| r.borrow_mut().hists[h as usize][bucket_of(value_s)] += 1);
+}
+
+/// Immutable snapshot of the registry, planes sorted by name.
+#[derive(Debug, Clone)]
+pub struct MetricsSnapshot {
+    global: Plane,
+    machines: Vec<(String, Plane)>,
+    apps: Vec<(String, Plane)>,
+    hists: [[u64; BUCKET_COUNT]; HIST_COUNT],
+}
+
+impl MetricsSnapshot {
+    /// A global counter's value.
+    pub fn counter(&self, c: Ctr) -> u64 {
+        self.global[c as usize]
+    }
+
+    /// A machine-plane counter's value (0 for unknown machines).
+    pub fn machine_counter(&self, machine: &str, c: Ctr) -> u64 {
+        self.machines
+            .iter()
+            .find(|(k, _)| k == machine)
+            .map(|(_, p)| p[c as usize])
+            .unwrap_or(0)
+    }
+
+    /// An app-plane counter's value (0 for unknown apps).
+    pub fn app_counter(&self, app: &str, c: Ctr) -> u64 {
+        self.apps
+            .iter()
+            .find(|(k, _)| k == app)
+            .map(|(_, p)| p[c as usize])
+            .unwrap_or(0)
+    }
+
+    /// App names present on the app plane (sorted).
+    pub fn apps(&self) -> Vec<&str> {
+        self.apps.iter().map(|(k, _)| k.as_str()).collect()
+    }
+
+    /// Total observations recorded in a histogram.
+    pub fn hist_total(&self, h: Hist) -> u64 {
+        self.hists[h as usize].iter().sum()
+    }
+
+    fn plane_json(plane: &Plane) -> Json {
+        let mut o = Json::obj();
+        for c in Ctr::ALL {
+            let v = plane[c as usize];
+            if v > 0 {
+                o.insert(c.name(), v);
+            }
+        }
+        o
+    }
+
+    /// The `obs.json` sidecar document: counters (zero values skipped),
+    /// per-machine and per-app planes sorted by name, and histograms
+    /// with their bucket edges.
+    pub fn to_json(&self) -> Json {
+        let mut machines = Json::obj();
+        for (name, plane) in &self.machines {
+            machines.insert(name, Self::plane_json(plane));
+        }
+        let mut apps = Json::obj();
+        for (name, plane) in &self.apps {
+            apps.insert(name, Self::plane_json(plane));
+        }
+        let mut hists = Json::obj();
+        for h in Hist::ALL {
+            let mut edges = Json::arr();
+            for e in BUCKET_EDGES {
+                edges.push(e as u64);
+            }
+            let mut counts = Json::arr();
+            for b in self.hists[h as usize] {
+                counts.push(b);
+            }
+            hists.insert(
+                h.name(),
+                Json::obj().set("le_edges_s", edges).set("counts", counts),
+            );
+        }
+        Json::obj()
+            .set("component", "obs")
+            .set("counters", Self::plane_json(&self.global))
+            .set("machines", machines)
+            .set("apps", apps)
+            .set("histograms", hists)
+    }
+}
+
+fn snapshot_of(reg: &Registry) -> MetricsSnapshot {
+    let mut machines = reg.machines.clone();
+    machines.sort_by(|a, b| a.0.cmp(&b.0));
+    let mut apps = reg.apps.clone();
+    apps.sort_by(|a, b| a.0.cmp(&b.0));
+    MetricsSnapshot {
+        global: reg.global,
+        machines,
+        apps,
+        hists: reg.hists,
+    }
+}
+
+/// Snapshot the registry without resetting it.
+pub fn snapshot() -> MetricsSnapshot {
+    REGISTRY.with(|r| snapshot_of(&r.borrow()))
+}
+
+/// Snapshot the registry and reset every counter and histogram.
+pub fn drain() -> MetricsSnapshot {
+    REGISTRY.with(|r| {
+        let mut reg = r.borrow_mut();
+        let snap = snapshot_of(&reg);
+        *reg = Registry::new();
+        snap
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ctr_table_is_consistent() {
+        assert_eq!(Ctr::ALL.len(), CTR_COUNT);
+        for (i, c) in Ctr::ALL.iter().enumerate() {
+            assert_eq!(*c as usize, i, "{}", c.name());
+        }
+        let mut names: Vec<&str> = Ctr::ALL.iter().map(|c| c.name()).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), CTR_COUNT, "duplicate counter name");
+    }
+
+    #[test]
+    fn disarmed_counts_are_dropped() {
+        drain();
+        count(Ctr::JobsSubmitted, 3);
+        observe(Hist::QueueWaitS, 10);
+        let snap = drain();
+        assert_eq!(snap.counter(Ctr::JobsSubmitted), 0);
+        assert_eq!(snap.hist_total(Hist::QueueWaitS), 0);
+    }
+
+    #[test]
+    fn armed_planes_and_histograms_accumulate() {
+        drain();
+        let prior = crate::obs::set_metrics(true);
+        count(Ctr::TaskWakes, 2);
+        count_machine("jedi", Ctr::JobsSubmitted, 1);
+        count_machine("jedi", Ctr::JobsSubmitted, 1);
+        count_machine("jupiter", Ctr::JobsSubmitted, 1);
+        count_app("logmap", Ctr::GateReps, 5);
+        observe(Hist::QueueWaitS, 0);
+        observe(Hist::QueueWaitS, 100);
+        observe(Hist::QueueWaitS, 1_000_000); // overflow bucket
+        let snap = drain();
+        crate::obs::set_metrics(prior);
+        assert_eq!(snap.counter(Ctr::TaskWakes), 2);
+        assert_eq!(snap.counter(Ctr::JobsSubmitted), 3, "planes add to global");
+        assert_eq!(snap.machine_counter("jedi", Ctr::JobsSubmitted), 2);
+        assert_eq!(snap.machine_counter("jupiter", Ctr::JobsSubmitted), 1);
+        assert_eq!(snap.app_counter("logmap", Ctr::GateReps), 5);
+        assert_eq!(snap.hist_total(Hist::QueueWaitS), 3);
+        let doc = snap.to_json();
+        assert_eq!(doc.str_of("component"), Some("obs"));
+        assert_eq!(
+            doc.get("counters").unwrap().u64_of("jobs_submitted"),
+            Some(3)
+        );
+        assert!(doc.get("counters").unwrap().get("jobs_rejected").is_none());
+        let hist = doc.get("histograms").unwrap().get("queue_wait_s").unwrap();
+        let counts = hist.get("counts").and_then(Json::as_arr).unwrap();
+        assert_eq!(counts.len(), BUCKET_COUNT);
+        assert_eq!(counts.last().unwrap().as_u64(), Some(1));
+    }
+
+    #[test]
+    fn buckets_cover_the_range() {
+        assert_eq!(bucket_of(0), 0);
+        assert_eq!(bucket_of(1), 0);
+        assert_eq!(bucket_of(2), 1);
+        assert_eq!(bucket_of(86_400), BUCKET_EDGES.len() - 1);
+        assert_eq!(bucket_of(86_401), BUCKET_EDGES.len());
+    }
+}

@@ -1,0 +1,92 @@
+//! Deterministic observability: sim-time span tracing, an
+//! allocation-flat metrics registry, and a leveled narration facade
+//! (DESIGN.md §13).
+//!
+//! The layer answers *why* a campaign behaved the way it did — queue
+//! contention, backfill decisions, cache-hit timing, gate
+//! re-measurement storms — without perturbing *what* it produced:
+//!
+//! * **Sim-time only.** Every span and instant is stamped from
+//!   content-derived simulated clocks ([`crate::util::timeutil::SimTime`]):
+//!   job records' submit/start/end times, machine-local `BatchSystem`
+//!   clocks at deterministic wake points, pipeline creation times.
+//!   Never wall clock, never `World::now()` mid-drive (the
+//!   max-over-machines clock is dispatch-order sensitive). Subsystems
+//!   without a clock of their own (cache, snapshots, maturity) emit
+//!   counters, not spans.
+//! * **Off by default, nest-safe arming.** [`set_tracing`] /
+//!   [`set_metrics`] mirror `BatchSystem::set_event_log`: they return
+//!   the prior state so instrumented scopes can restore it. Disarmed,
+//!   every emission site is a single thread-local flag read and the
+//!   span-argument `format!`s are skipped at the call site — the
+//!   dispatch hot path gains zero allocations (asserted by
+//!   `benches/perf_obs.rs`).
+//! * **Byte-reproducible.** Traces drain in canonical content order, so
+//!   a campaign's trace is identical across replays and across the
+//!   indexed dispatcher / reference scan (pinned by
+//!   `tests/integration_obs.rs`).
+//! * **Sidecars only.** Exports land in `trace.json` (Chrome
+//!   trace-event JSON) and `obs.json` — the same contract as
+//!   `cache.json` / `energy.json`: never inside `report.json`, sacct
+//!   records, or the data store.
+
+pub mod log;
+pub mod metrics;
+pub mod trace;
+
+pub use metrics::{count, count_app, count_machine, observe, Ctr, Hist, MetricsSnapshot};
+pub use trace::TraceEvent;
+
+use std::cell::Cell;
+
+thread_local! {
+    static TRACING: Cell<bool> = const { Cell::new(false) };
+    static METRICS: Cell<bool> = const { Cell::new(false) };
+}
+
+/// Is span tracing armed on this thread? Call sites use this to guard
+/// span-argument construction so the disarmed path never allocates.
+#[inline]
+pub fn tracing() -> bool {
+    TRACING.with(|c| c.get())
+}
+
+/// Is the metrics registry armed on this thread?
+#[inline]
+pub fn metrics_on() -> bool {
+    METRICS.with(|c| c.get())
+}
+
+/// Arm or disarm span tracing; returns the prior state (nest-safe, like
+/// `BatchSystem::set_event_log`).
+pub fn set_tracing(on: bool) -> bool {
+    TRACING.with(|c| c.replace(on))
+}
+
+/// Arm or disarm the metrics registry; returns the prior state.
+pub fn set_metrics(on: bool) -> bool {
+    METRICS.with(|c| c.replace(on))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arming_is_nest_safe() {
+        assert!(!tracing());
+        assert!(!metrics_on());
+        let outer = set_tracing(true);
+        assert!(!outer);
+        let inner = set_tracing(true);
+        assert!(inner, "inner scope sees the outer arming");
+        set_tracing(inner);
+        assert!(tracing(), "restoring the inner state keeps the outer scope armed");
+        set_tracing(outer);
+        assert!(!tracing());
+        let m = set_metrics(true);
+        assert!(metrics_on());
+        set_metrics(m);
+        assert!(!metrics_on());
+    }
+}

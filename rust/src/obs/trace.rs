@@ -1,0 +1,226 @@
+//! Deterministic sim-time span tracer (DESIGN.md §13).
+//!
+//! Every event is stamped with **simulated** time ([`SimTime`] seconds)
+//! and content-derived identifiers (jobids, pipeline ids, app names) —
+//! never wall clock, never memory addresses — so a trace of a campaign
+//! is a pure function of the campaign's inputs: byte-identical across
+//! replays and identical whether the indexed dispatcher
+//! (`event_loop::drive`) or the reference scan (`drive_reference`)
+//! drove it.
+//!
+//! Recording is thread-local and **off by default** (the
+//! [`crate::obs::set_tracing`] arming switch, mirroring
+//! `BatchSystem::set_event_log`): the disarmed emission path is a
+//! single `Cell<bool>` read, adding zero allocations to the dispatch
+//! hot path. Call sites guard span-argument construction behind
+//! [`crate::obs::tracing`] so even the `format!` never runs disarmed.
+//!
+//! [`drain`] returns the recorded events in **canonical content order**
+//! (ts, track, name, dur, args) rather than emission order — cross-track
+//! emission interleaving is an implementation detail of the dispatcher,
+//! and sorting by content is what makes the byte-identity contract hold
+//! unconditionally. [`chrome_trace_json`] renders the canonical list as
+//! Chrome trace-event JSON (`trace.json`), loadable in Perfetto or
+//! `chrome://tracing`, with one synthetic thread per track and
+//! timestamps in sim-time microseconds.
+
+use std::cell::RefCell;
+
+use crate::util::json::Json;
+use crate::util::timeutil::SimTime;
+
+/// One recorded span (`dur >= 0`, seconds) or instant (`dur == -1`).
+/// Field order is the canonical sort order — the derived `Ord` is the
+/// content order [`drain`] returns.
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
+pub struct TraceEvent {
+    /// Sim-time start, seconds since the epoch.
+    pub ts: i64,
+    /// Rendering lane: a machine name or a subsystem name.
+    pub track: String,
+    /// Event name (e.g. `queue-wait`, `run`, `pipeline`).
+    pub name: String,
+    /// Duration in sim-time seconds; `-1` marks an instant event.
+    pub dur: i64,
+    /// Content-derived key/value labels (jobid, pipeline, state, ...).
+    pub args: Vec<(String, String)>,
+}
+
+/// Marker duration of an instant event.
+pub const INSTANT: i64 = -1;
+
+thread_local! {
+    static EVENTS: RefCell<Vec<TraceEvent>> = const { RefCell::new(Vec::new()) };
+}
+
+/// Record a completed span `[start, end]` on `track`. No-op when
+/// tracing is disarmed; callers should still guard argument
+/// construction with [`crate::obs::tracing`].
+pub fn span(track: &str, name: &str, start: SimTime, end: SimTime, args: Vec<(String, String)>) {
+    if !crate::obs::tracing() {
+        return;
+    }
+    EVENTS.with(|e| {
+        e.borrow_mut().push(TraceEvent {
+            ts: start.0,
+            track: track.to_string(),
+            name: name.to_string(),
+            dur: (end.0 - start.0).max(0),
+            args,
+        })
+    });
+}
+
+/// Record an instant event at `ts` on `track`. No-op when disarmed.
+pub fn instant(track: &str, name: &str, ts: SimTime, args: Vec<(String, String)>) {
+    if !crate::obs::tracing() {
+        return;
+    }
+    EVENTS.with(|e| {
+        e.borrow_mut().push(TraceEvent {
+            ts: ts.0,
+            track: track.to_string(),
+            name: name.to_string(),
+            dur: INSTANT,
+            args,
+        })
+    });
+}
+
+/// Number of events recorded so far on this thread.
+pub fn event_count() -> usize {
+    EVENTS.with(|e| e.borrow().len())
+}
+
+/// Take every recorded event, leaving the recorder empty, in canonical
+/// content order (see module docs).
+pub fn drain() -> Vec<TraceEvent> {
+    let mut out = EVENTS.with(|e| std::mem::take(&mut *e.borrow_mut()));
+    out.sort();
+    out
+}
+
+/// Helper for call sites: build the owned `args` vector from borrowed
+/// keys. Only call under a [`crate::obs::tracing`] guard — this is the
+/// allocating half the guard exists to skip.
+pub fn args(pairs: &[(&str, String)]) -> Vec<(String, String)> {
+    pairs
+        .iter()
+        .map(|(k, v)| (k.to_string(), v.clone()))
+        .collect()
+}
+
+/// Render events (already canonically ordered) as Chrome trace-event
+/// JSON: pid 1, one tid per distinct track (in sorted track order, so
+/// the lane layout is content-stable), `ph: "X"` complete events for
+/// spans and `ph: "i"` instants, timestamps and durations in sim-time
+/// **microseconds**.
+pub fn chrome_trace_json(events: &[TraceEvent]) -> String {
+    let mut tracks: Vec<&str> = events.iter().map(|e| e.track.as_str()).collect();
+    tracks.sort();
+    tracks.dedup();
+    let mut arr = Json::arr();
+    for (i, t) in tracks.iter().enumerate() {
+        arr.push(
+            Json::obj()
+                .set("ph", "M")
+                .set("name", "thread_name")
+                .set("pid", 1u64)
+                .set("tid", (i + 1) as u64)
+                .set("args", Json::obj().set("name", *t)),
+        );
+    }
+    for e in events {
+        let tid = tracks
+            .binary_search(&e.track.as_str())
+            .map(|i| i + 1)
+            .unwrap_or(0);
+        let mut o = Json::obj()
+            .set("name", e.name.as_str())
+            .set("pid", 1u64)
+            .set("tid", tid as u64)
+            .set("ts", (e.ts as f64) * 1e6);
+        if e.dur >= 0 {
+            o.insert("ph", "X");
+            o.insert("dur", (e.dur as f64) * 1e6);
+        } else {
+            o.insert("ph", "i");
+            o.insert("s", "t");
+        }
+        if !e.args.is_empty() {
+            let mut a = Json::obj();
+            for (k, v) in &e.args {
+                a.insert(k, v.as_str());
+            }
+            o.insert("args", a);
+        }
+        arr.push(o);
+    }
+    Json::obj()
+        .set("traceEvents", arr)
+        .set("displayTimeUnit", "ms")
+        .pretty()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disarmed_recorder_stays_empty() {
+        drain();
+        span("jedi", "run", SimTime(0), SimTime(10), Vec::new());
+        instant("jedi", "tick", SimTime(5), Vec::new());
+        assert_eq!(event_count(), 0);
+    }
+
+    #[test]
+    fn armed_events_drain_in_canonical_order() {
+        drain();
+        let prior = crate::obs::set_tracing(true);
+        // emitted out of content order on purpose
+        span("zeta", "run", SimTime(20), SimTime(25), Vec::new());
+        instant("alpha", "run", SimTime(5), args(&[("k", "v".to_string())]));
+        span("alpha", "run", SimTime(5), SimTime(9), Vec::new());
+        let evs = drain();
+        crate::obs::set_tracing(prior);
+        assert_eq!(evs.len(), 3);
+        assert_eq!((evs[0].ts, evs[0].track.as_str()), (5, "alpha"));
+        // same ts: instants (dur -1) sort before spans via the dur key
+        assert_eq!(evs[0].dur, INSTANT);
+        assert_eq!(evs[1].dur, 4);
+        assert_eq!(evs[2].track, "zeta");
+        assert_eq!(event_count(), 0, "drain empties the recorder");
+    }
+
+    #[test]
+    fn chrome_json_shape() {
+        let evs = vec![
+            TraceEvent {
+                ts: 3,
+                track: "jedi".into(),
+                name: "run".into(),
+                dur: 7,
+                args: vec![("jobid".into(), "7700001".into())],
+            },
+            TraceEvent {
+                ts: 4,
+                track: "jupiter".into(),
+                name: "tick".into(),
+                dur: INSTANT,
+                args: Vec::new(),
+            },
+        ];
+        let doc = Json::parse(&chrome_trace_json(&evs)).unwrap();
+        let events = doc.get("traceEvents").and_then(Json::as_arr).unwrap();
+        // 2 thread_name metadata + 2 events
+        assert_eq!(events.len(), 4);
+        assert_eq!(events[0].str_of("ph"), Some("M"));
+        let run = events.iter().find(|e| e.str_of("ph") == Some("X")).unwrap();
+        assert_eq!(run.f64_of("ts"), Some(3e6));
+        assert_eq!(run.f64_of("dur"), Some(7e6));
+        assert_eq!(run.get("args").unwrap().str_of("jobid"), Some("7700001"));
+        let tick = events.iter().find(|e| e.str_of("ph") == Some("i")).unwrap();
+        assert_eq!(tick.str_of("s"), Some("t"));
+    }
+}

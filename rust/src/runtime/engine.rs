@@ -247,12 +247,12 @@ mod tests {
             match Engine::load_default() {
                 Ok(e) => Some(e),
                 Err(e) => {
-                    eprintln!("skipping PJRT test: {e}");
+                    crate::obs_warn!("skipping PJRT test: {e}");
                     None
                 }
             }
         } else {
-            eprintln!("skipping PJRT test: artifacts not built");
+            crate::obs_warn!("skipping PJRT test: artifacts not built");
             None
         }
     }

@@ -200,10 +200,23 @@ impl BatchSystem {
             record.result = Some(JobResult::failure(&e.to_string()));
             self.records.insert(jobid, record);
             self.record_order.push(jobid);
+            crate::obs::count_machine(&self.machine, crate::obs::Ctr::JobsRejected, 1);
+            if crate::obs::tracing() {
+                crate::obs::trace::instant(
+                    &self.machine,
+                    "reject",
+                    self.clock,
+                    crate::obs::trace::args(&[
+                        ("jobid", jobid.to_string()),
+                        ("job", spec.name.clone()),
+                    ]),
+                );
+            }
             return Err(e);
         }
         self.records.insert(jobid, record);
         self.record_order.push(jobid);
+        crate::obs::count_machine(&self.machine, crate::obs::Ctr::JobsSubmitted, 1);
         let partition = spec.partition.clone();
         self.partitions
             .get_mut(&partition)
@@ -266,7 +279,7 @@ impl BatchSystem {
         while let Some(head) = queue.front() {
             if head.nodes <= self.partitions[pname].free_nodes {
                 let job = queue.pop_front().expect("nonempty");
-                self.start_job(job.jobid, job.payload);
+                self.start_job(job.jobid, job.payload, false);
             } else {
                 break;
             }
@@ -275,6 +288,20 @@ impl BatchSystem {
         if let Some(head) = queue.front() {
             let free = self.partitions[pname].free_nodes;
             let (shadow, mut spare) = self.head_reservation(pname, head.nodes, free);
+            crate::obs::count_machine(&self.machine, crate::obs::Ctr::HeadHolds, 1);
+            if crate::obs::tracing() {
+                crate::obs::trace::instant(
+                    &self.machine,
+                    "head-hold",
+                    self.clock,
+                    crate::obs::trace::args(&[
+                        ("jobid", head.jobid.to_string()),
+                        ("need_nodes", head.nodes.to_string()),
+                        ("free_nodes", free.to_string()),
+                        ("shadow", shadow.0.to_string()),
+                    ]),
+                );
+            }
             let mut i = 1;
             while i < queue.len() {
                 let cand = &queue[i];
@@ -291,7 +318,7 @@ impl BatchSystem {
                         spare -= cand.nodes;
                     }
                     let job = queue.remove(i).expect("index in bounds");
-                    self.start_job(job.jobid, job.payload);
+                    self.start_job(job.jobid, job.payload, true);
                     // the next candidate shifted into position i
                 } else {
                     i += 1;
@@ -328,7 +355,7 @@ impl BatchSystem {
         (SimTime(i64::MAX), 0)
     }
 
-    fn start_job(&mut self, jobid: u64, payload: JobPayload) {
+    fn start_job(&mut self, jobid: u64, payload: JobPayload, backfilled: bool) {
         let spec = self.records[&jobid].spec.clone();
         let part = self.partitions.get_mut(&spec.partition).unwrap();
         part.free_nodes -= spec.nodes;
@@ -373,6 +400,47 @@ impl BatchSystem {
         } else {
             result
         });
+        let submit = rec.submit_time;
+        if crate::obs::tracing() {
+            crate::obs::trace::span(
+                &self.machine,
+                "queue-wait",
+                submit,
+                start,
+                crate::obs::trace::args(&[
+                    ("jobid", jobid.to_string()),
+                    ("job", spec.name.clone()),
+                    ("backfilled", backfilled.to_string()),
+                ]),
+            );
+            crate::obs::trace::span(
+                &self.machine,
+                "run",
+                start,
+                end,
+                crate::obs::trace::args(&[
+                    ("jobid", jobid.to_string()),
+                    ("job", spec.name.clone()),
+                    ("nodes", spec.nodes.to_string()),
+                    ("state", state.name().to_string()),
+                    ("backfilled", backfilled.to_string()),
+                ]),
+            );
+        }
+        if crate::obs::metrics_on() {
+            use crate::obs::{Ctr, Hist};
+            crate::obs::count_machine(&self.machine, Ctr::JobsStarted, 1);
+            if backfilled {
+                crate::obs::count_machine(&self.machine, Ctr::JobsBackfilled, 1);
+            }
+            match state {
+                JobState::Timeout => crate::obs::count_machine(&self.machine, Ctr::JobsTimeout, 1),
+                JobState::Failed => crate::obs::count_machine(&self.machine, Ctr::JobsFailed, 1),
+                _ => {}
+            }
+            crate::obs::observe(Hist::QueueWaitS, start.0 - submit.0);
+            crate::obs::observe(Hist::RunTimeS, end.0 - start.0);
+        }
         self.running.push(RunningJob {
             end_time: end,
             jobid,
@@ -408,6 +476,18 @@ impl BatchSystem {
         }
         if let Some(log) = self.event_log.as_mut() {
             log.push(jobid);
+        }
+        crate::obs::count_machine(&self.machine, crate::obs::Ctr::JobsCompleted, 1);
+        if crate::obs::tracing() {
+            crate::obs::trace::instant(
+                &self.machine,
+                "complete",
+                end_time,
+                crate::obs::trace::args(&[
+                    ("jobid", jobid.to_string()),
+                    ("state", terminal.name().to_string()),
+                ]),
+            );
         }
         self.schedule_partition(&partition);
         Some(jobid)

@@ -129,15 +129,18 @@ impl ExecutionCache {
     pub fn lookup(&mut self, key: &CacheKey, kind: &str) -> (CacheOutcome, Option<String>) {
         if let Some(doc) = self.store.get(kind, &key.digest) {
             self.stats.hits += 1;
+            crate::obs::count(crate::obs::Ctr::CacheHits, 1);
             return (CacheOutcome::Hit, Some(doc.content.clone()));
         }
         match self.slots.get(&key.slot) {
             Some(live) if live != &key.digest => {
                 self.stats.invalidated += 1;
+                crate::obs::count(crate::obs::Ctr::CacheInvalidated, 1);
                 (CacheOutcome::Invalidated, None)
             }
             _ => {
                 self.stats.misses += 1;
+                crate::obs::count(crate::obs::Ctr::CacheMisses, 1);
                 (CacheOutcome::Miss, None)
             }
         }
@@ -148,6 +151,7 @@ impl ExecutionCache {
         self.store.put(kind, &key.digest, doc);
         self.slots.insert(key.slot.clone(), key.digest.clone());
         self.stats.inserts += 1;
+        crate::obs::count(crate::obs::Ctr::CacheInserts, 1);
     }
 
     /// Insert an auxiliary document sharing another entry's digest (e.g.

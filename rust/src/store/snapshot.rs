@@ -220,6 +220,8 @@ impl Snapshot {
         }
         self.head = head_now;
         self.commits_consumed += consumed;
+        crate::obs::count(crate::obs::Ctr::SnapshotRefreshes, 1);
+        crate::obs::count(crate::obs::Ctr::SnapshotCommitsConsumed, consumed as u64);
         consumed
     }
 
@@ -231,6 +233,8 @@ impl Snapshot {
         *self = Snapshot::build(store, &self.branch);
         self.rebuilds += rebuilds;
         self.commits_consumed = commits + consumed;
+        crate::obs::count(crate::obs::Ctr::SnapshotRebuilds, 1);
+        crate::obs::count(crate::obs::Ctr::SnapshotCommitsConsumed, consumed as u64);
         consumed
     }
 

@@ -334,7 +334,30 @@ pub fn run_regression_gate(
                 "interval inconclusive"
             }
         ));
+        if crate::obs::metrics_on() {
+            crate::obs::count_app(&repo.name, crate::obs::Ctr::GateRounds, 1);
+            crate::obs::count_app(&repo.name, crate::obs::Ctr::GateReps, batch as u64);
+        }
+        let round_start = world.batch.get(&params.machine).map(|b| b.now());
         rep_jobs.extend(run_repetitions(world, repo, &params, batch, rng.as_deref_mut()));
+        if crate::obs::tracing() {
+            // machine-local clock at the round's edges: deterministic
+            // because this machine's job sequence is pinned across drivers
+            let round_end = world.batch.get(&params.machine).map(|b| b.now());
+            if let (Some(s), Some(e)) = (round_start, round_end) {
+                crate::obs::trace::span(
+                    &params.machine,
+                    "gate-round",
+                    s,
+                    e,
+                    crate::obs::trace::args(&[
+                        ("pipeline", pipeline_id.to_string()),
+                        ("repo", repo.name.clone()),
+                        ("reps", batch.to_string()),
+                    ]),
+                );
+            }
+        }
         extra_used += batch;
         ingest_new_reports(&mut hist, &mut known, repo, &params.prefix);
     };

@@ -142,7 +142,17 @@ fn emit_csv_row(out: &mut String, cells: &[String]) {
         if i > 0 {
             out.push(',');
         }
-        if cell.contains(',') || cell.contains('"') || cell.contains('\n') {
+        // Quote `\r` as well as `\n`: the parser strips bare carriage
+        // returns, so an unquoted one would not survive a round-trip.
+        // A lone empty cell must be quoted too, or its row serializes
+        // to a blank line and the parser discards it.
+        let lone_empty = cells.len() == 1 && cell.is_empty();
+        if cell.contains(',')
+            || cell.contains('"')
+            || cell.contains('\n')
+            || cell.contains('\r')
+            || lone_empty
+        {
             out.push('"');
             out.push_str(&cell.replace('"', "\"\""));
             out.push('"');
@@ -158,6 +168,10 @@ fn parse_csv(text: &str) -> Vec<Vec<String>> {
     let mut row = Vec::new();
     let mut field = String::new();
     let mut in_quotes = false;
+    // True until the current line sees any syntax (quote, comma, or
+    // field character). Distinguishes a genuinely blank line (skipped)
+    // from a quoted empty cell `""` (a real one-cell row).
+    let mut blank_line = true;
     let mut chars = text.chars().peekable();
     while let Some(c) = chars.next() {
         if in_quotes {
@@ -171,24 +185,33 @@ fn parse_csv(text: &str) -> Vec<Vec<String>> {
             }
         } else {
             match c {
-                '"' => in_quotes = true,
+                '"' => {
+                    in_quotes = true;
+                    blank_line = false;
+                }
                 ',' => {
                     row.push(std::mem::take(&mut field));
+                    blank_line = false;
                 }
                 '\n' => {
-                    row.push(std::mem::take(&mut field));
-                    if !(row.len() == 1 && row[0].is_empty()) {
-                        rows.push(std::mem::take(&mut row));
-                    } else {
+                    if blank_line {
                         row.clear();
+                        field.clear();
+                    } else {
+                        row.push(std::mem::take(&mut field));
+                        rows.push(std::mem::take(&mut row));
                     }
+                    blank_line = true;
                 }
                 '\r' => {}
-                c => field.push(c),
+                c => {
+                    field.push(c);
+                    blank_line = false;
+                }
             }
         }
     }
-    if !field.is_empty() || !row.is_empty() {
+    if !blank_line {
         row.push(field);
         rows.push(row);
     }
@@ -220,6 +243,39 @@ mod tests {
         t.push_row(vec!["x,\"y\"\nz".into()]);
         let back = Table::from_csv(&t.to_csv()).unwrap();
         assert_eq!(back.rows[0][0], "x,\"y\"\nz");
+    }
+
+    #[test]
+    fn csv_roundtrip_quote_comma_space() {
+        // The hostile case from harness output: a cell holding `", "`.
+        let mut t = Table::new(&["a", "b"]);
+        t.push_row(vec!["x\", \"y".into(), "plain".into()]);
+        let back = Table::from_csv(&t.to_csv()).unwrap();
+        assert_eq!(back.rows, t.rows);
+    }
+
+    #[test]
+    fn csv_roundtrip_carriage_return() {
+        let mut t = Table::new(&["a"]);
+        t.push_row(vec!["line1\r\nline2".into()]);
+        t.push_row(vec!["bare\rcr".into()]);
+        let back = Table::from_csv(&t.to_csv()).unwrap();
+        assert_eq!(back.rows, t.rows);
+    }
+
+    #[test]
+    fn csv_roundtrip_lone_empty_cell() {
+        let mut t = Table::new(&["only"]);
+        t.push_row(vec!["".into()]);
+        t.push_row(vec!["x".into()]);
+        let back = Table::from_csv(&t.to_csv()).unwrap();
+        assert_eq!(back.rows, t.rows);
+    }
+
+    #[test]
+    fn from_csv_still_skips_blank_lines() {
+        let t = Table::from_csv("a,b\n1,2\n\n3,4\n").unwrap();
+        assert_eq!(t.rows.len(), 2);
     }
 
     #[test]

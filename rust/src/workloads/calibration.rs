@@ -114,7 +114,7 @@ mod tests {
             return;
         }
         let Ok(mut eng) = crate::runtime::Engine::load_default() else {
-            eprintln!("skipped: engine backend unavailable");
+            crate::obs_warn!("skipped: engine backend unavailable");
             return;
         };
         let c = HostCalibration::measure(&mut eng).unwrap();

@@ -199,7 +199,7 @@ mod tests {
             return;
         }
         let Ok(mut engine) = crate::runtime::Engine::load_default() else {
-            eprintln!("skipped: engine backend unavailable");
+            crate::obs_warn!("skipped: engine backend unavailable");
             return;
         };
         super::super::testutil::with_ctx_engine("jupiter", 1, Some(&mut engine), |ctx| {

@@ -1,0 +1,170 @@
+//! Determinism contract of the observability layer (DESIGN.md §13).
+//!
+//! Three properties over a 24-app × 3-machine concurrent campaign:
+//!
+//! 1. An armed trace is **byte-identical** across two replays of the
+//!    same seed — every event is stamped with sim-time and
+//!    content-derived ids, never wall clock.
+//! 2. The trace and metrics are identical whether the indexed
+//!    dispatcher (`event_loop::drive`) or the frozen reference scan
+//!    (`drive_reference`) drove the campaign — emission interleaving is
+//!    normalized away by canonical content ordering.
+//! 3. Arming the recorders is **invisible to the simulation**: the
+//!    recorded reports, `sacct` records, and store bytes of an armed
+//!    run match a disarmed run bit for bit.
+
+use exacb::coordinator::{collection, event_loop, World};
+use exacb::workloads::portfolio;
+
+/// Every `sacct` field of every job on every machine, in jobid order.
+fn sacct_dump(world: &World) -> String {
+    let mut out = String::new();
+    for (name, bs) in &world.batch {
+        for r in bs.records_iter() {
+            out.push_str(&format!(
+                "{name} {} {} {:?} {:?} {:?} {} {} {:?}\n",
+                r.jobid,
+                r.state.name(),
+                r.submit_time,
+                r.start_time,
+                r.end_time,
+                r.spec.partition,
+                r.spec.nodes,
+                r.result
+                    .as_ref()
+                    .map(|res| (res.success, res.duration_s)),
+            ));
+        }
+    }
+    out
+}
+
+/// Every file on every branch of every repository store.
+fn store_dump(world: &World) -> String {
+    let mut out = String::new();
+    for (name, repo) in &world.repos {
+        let mut branches = repo.store.branches();
+        branches.sort_unstable();
+        for branch in branches {
+            for (path, content) in repo.store.read_all(branch, "") {
+                out.push_str(&format!("{name} {branch} {path} {}\n", content.len()));
+                out.push_str(&content);
+                out.push('\n');
+            }
+        }
+    }
+    out
+}
+
+/// Run the campaign with the recorders armed (or not) and return the
+/// rendered trace JSON, the metrics sidecar JSON, and the simulation's
+/// own recorded state.
+fn run_observed(
+    seed: u64,
+    drive: fn(&mut World, Vec<event_loop::PipelineTask>) -> Vec<u64>,
+    armed: bool,
+) -> (String, String, String, String) {
+    let apps = portfolio::generate(24, seed);
+    let machines = ["jedi", "jupiter", "jureca"];
+    let mut world = World::new(seed);
+    collection::onboard_multi(&mut world, &apps, &machines, "all");
+    // discard anything a previous test on this thread left behind
+    exacb::obs::trace::drain();
+    exacb::obs::metrics::drain();
+    let prior_t = exacb::obs::set_tracing(armed);
+    let prior_m = exacb::obs::set_metrics(armed);
+    collection::run_campaign_concurrent_with(&mut world, &apps, &machines, 3, drive);
+    exacb::obs::set_tracing(prior_t);
+    exacb::obs::set_metrics(prior_m);
+    let events = exacb::obs::trace::drain();
+    let metrics = exacb::obs::metrics::drain();
+    (
+        exacb::obs::trace::chrome_trace_json(&events),
+        metrics.to_json().pretty(),
+        sacct_dump(&world),
+        store_dump(&world),
+    )
+}
+
+/// Property 1: replaying the same seed twice yields the same trace and
+/// metrics bytes.
+#[test]
+fn armed_trace_is_byte_identical_across_replays() {
+    let first = run_observed(2026, event_loop::drive, true);
+    let second = run_observed(2026, event_loop::drive, true);
+    assert!(!first.0.is_empty());
+    assert_eq!(first.0, second.0, "trace bytes diverged across replays");
+    assert_eq!(first.1, second.1, "metrics bytes diverged across replays");
+}
+
+/// Property 2: the trace is a pure function of the campaign, not of the
+/// dispatcher that drove it.
+#[test]
+fn trace_is_identical_under_reference_dispatch() {
+    let fast = run_observed(2026, event_loop::drive, true);
+    let reference = run_observed(2026, event_loop::drive_reference, true);
+    assert_eq!(
+        fast.0, reference.0,
+        "trace diverged between drive and drive_reference"
+    );
+    assert_eq!(
+        fast.1, reference.1,
+        "metrics diverged between drive and drive_reference"
+    );
+}
+
+/// Property 3: arming the recorders changes nothing the simulation
+/// records about itself — report.json and every other store byte, and
+/// the full sacct dump, match a disarmed run exactly.
+#[test]
+fn arming_does_not_change_simulation_state() {
+    let armed = run_observed(2026, event_loop::drive, true);
+    let disarmed = run_observed(2026, event_loop::drive, false);
+    assert!(
+        disarmed.0.contains("\"traceEvents\": []")
+            || !disarmed.0.contains("\"ph\": \"X\""),
+        "disarmed run recorded trace events"
+    );
+    assert_eq!(armed.2, disarmed.2, "sacct records changed under arming");
+    assert_eq!(armed.3, disarmed.3, "store bytes changed under arming");
+}
+
+/// Sanity: the armed campaign actually exercises the span vocabulary —
+/// queue waits, runs, wakes, pipeline retirements.
+#[test]
+fn armed_trace_covers_span_vocabulary() {
+    let apps = portfolio::generate(24, 2026);
+    let machines = ["jedi", "jupiter", "jureca"];
+    let mut world = World::new(2026);
+    collection::onboard_multi(&mut world, &apps, &machines, "all");
+    exacb::obs::trace::drain();
+    exacb::obs::metrics::drain();
+    let prior_t = exacb::obs::set_tracing(true);
+    let prior_m = exacb::obs::set_metrics(true);
+    collection::run_campaign_concurrent_with(
+        &mut world,
+        &apps,
+        &machines,
+        3,
+        event_loop::drive,
+    );
+    exacb::obs::set_tracing(prior_t);
+    exacb::obs::set_metrics(prior_m);
+    let events = exacb::obs::trace::drain();
+    let metrics = exacb::obs::metrics::drain();
+    for name in ["queue-wait", "run", "complete", "wake", "retire", "day-trigger"] {
+        assert!(
+            events.iter().any(|e| e.name == name),
+            "no `{name}` event in armed campaign trace"
+        );
+    }
+    assert!(metrics.counter(exacb::obs::Ctr::JobsStarted) > 0);
+    assert!(metrics.counter(exacb::obs::Ctr::PipelinesRun) > 0);
+    assert!(metrics.counter(exacb::obs::Ctr::TaskWakes) > 0);
+    assert_eq!(
+        metrics.counter(exacb::obs::Ctr::PipelinesRun),
+        metrics.counter(exacb::obs::Ctr::PipelinesSucceeded)
+            + metrics.counter(exacb::obs::Ctr::PipelinesFailed),
+        "pipeline outcome counters do not partition PipelinesRun"
+    );
+}
