@@ -1,0 +1,210 @@
+//! Perf: the 30-day chaos campaign (DESIGN.md §14).
+//!
+//! Runs the standard armed chaos scenario — seeded node failures and
+//! preemptions, a scheduler outage, a maintenance drain, a fleet-wide
+//! stack-update day, a forced-flaky week — and holds the fault model to
+//! hard budgets:
+//!
+//! * completed scheduler events per second of real wall time (the fault
+//!   machinery rides the same O(log n) heap as fault-free dispatch),
+//! * a peak-allocation budget for the full 30-day campaign,
+//! * the determinism budget: an immediate replay of the same scenario
+//!   must reproduce the `sacct` timeline **byte-identically**,
+//! * an overhead bound: chaos may not cost more than 15× the same
+//!   campaign with the inert (zero-rate) scenario.
+//!
+//! The standard `bench` harness re-runs case bodies to fill a measuring
+//! window; a 30-day campaign is too heavy for that, so this bench times
+//! single shots with `Instant` directly.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::time::Instant;
+
+use exacb::coordinator::World;
+use exacb::scheduler::JobState;
+use exacb::workloads::chaos::{self, ChaosScenario};
+
+// ---- counting allocator: peak-memory budget enforcement ---------------
+
+struct CountingAlloc;
+
+static CURRENT: AtomicUsize = AtomicUsize::new(0);
+static PEAK: AtomicUsize = AtomicUsize::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        let p = System.alloc(layout);
+        if !p.is_null() {
+            let cur = CURRENT.fetch_add(layout.size(), Ordering::Relaxed) + layout.size();
+            PEAK.fetch_max(cur, Ordering::Relaxed);
+        }
+        p
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout);
+        CURRENT.fetch_sub(layout.size(), Ordering::Relaxed);
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        let p = System.realloc(ptr, layout, new_size);
+        if !p.is_null() {
+            if new_size >= layout.size() {
+                let grow = new_size - layout.size();
+                let cur = CURRENT.fetch_add(grow, Ordering::Relaxed) + grow;
+                PEAK.fetch_max(cur, Ordering::Relaxed);
+            } else {
+                CURRENT.fetch_sub(layout.size() - new_size, Ordering::Relaxed);
+            }
+        }
+        p
+    }
+}
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+/// Reset the peak to the current live size and return bytes allocated
+/// beyond it by `f` at the high-water mark.
+fn peak_during<T>(f: impl FnOnce() -> T) -> (T, usize) {
+    let base = CURRENT.load(Ordering::Relaxed);
+    PEAK.store(base, Ordering::Relaxed);
+    let out = f();
+    (out, PEAK.load(Ordering::Relaxed).saturating_sub(base))
+}
+
+// ---- the campaign ------------------------------------------------------
+
+const SEED: u64 = 20260807;
+const APPS: usize = 12;
+const DAYS: i64 = 30;
+
+struct ChaosRun {
+    wall: std::time::Duration,
+    events: usize,
+    faults: usize,
+    pipelines_run: usize,
+    pipelines_succeeded: usize,
+    sacct: String,
+}
+
+/// The `sacct` timeline the determinism budget compares byte-for-byte.
+fn sacct_dump(world: &World) -> String {
+    let mut out = String::new();
+    for (name, bs) in &world.batch {
+        for r in bs.records_iter() {
+            out.push_str(&format!(
+                "{name} {} {} {:?} {:?} {:?} {:?}\n",
+                r.jobid,
+                r.state.name(),
+                r.submit_time,
+                r.start_time,
+                r.end_time,
+                r.result.as_ref().map(|res| (res.success, res.duration_s)),
+            ));
+        }
+    }
+    out
+}
+
+fn run(scenario: &ChaosScenario) -> ChaosRun {
+    let mut world = World::new(SEED);
+    let t0 = Instant::now();
+    let summary = chaos::run_chaos_campaign(&mut world, scenario);
+    let wall = t0.elapsed();
+    let events: usize = world.batch.values().map(|b| b.record_count()).sum();
+    let faults = world
+        .batch
+        .values()
+        .flat_map(|b| b.records_iter())
+        .filter(|r| matches!(r.state, JobState::NodeFail | JobState::Preempted))
+        .count();
+    ChaosRun {
+        wall,
+        events,
+        faults,
+        pipelines_run: summary.pipelines_run,
+        pipelines_succeeded: summary.pipelines_succeeded,
+        sacct: sacct_dump(&world),
+    }
+}
+
+fn main() {
+    println!("perf_chaos: {APPS} apps x {DAYS} days, armed fault model\n");
+
+    let armed_sc = ChaosScenario::generate(APPS, DAYS, SEED);
+    let (armed, peak) = peak_during(|| run(&armed_sc));
+    println!(
+        "  armed : {:>8.2?}  {} events  {} faults  {} pipelines ({} ok)  peak +{:.0} MiB",
+        armed.wall,
+        armed.events,
+        armed.faults,
+        armed.pipelines_run,
+        armed.pipelines_succeeded,
+        peak as f64 / (1024.0 * 1024.0)
+    );
+
+    let replay = run(&armed_sc);
+    println!("  replay: {:>8.2?}  {} events", replay.wall, replay.events);
+
+    let quiet_sc = ChaosScenario::quiet(APPS, DAYS, SEED);
+    let quiet = run(&quiet_sc);
+    println!(
+        "  quiet : {:>8.2?}  {} events  {} faults\n",
+        quiet.wall, quiet.events, quiet.faults
+    );
+
+    // ---- budgets (DESIGN.md §14 chaos contract) ------------------------
+    let events_per_s = armed.events as f64 / armed.wall.as_secs_f64();
+    let overhead = armed.wall.as_secs_f64() / quiet.wall.as_secs_f64().max(0.05);
+    println!("  events/s (armed)   = {events_per_s:>10.0}   budget: >= 50");
+    println!(
+        "  peak alloc (armed) = {:>8.0} MiB   budget: < 1024 MiB",
+        peak as f64 / (1024.0 * 1024.0)
+    );
+    println!("  armed / quiet wall = {overhead:>9.1}x   budget: < 15x");
+    println!(
+        "  replay determinism = {:>10}   budget: byte-identical",
+        if armed.sacct == replay.sacct { "ok" } else { "BROKEN" }
+    );
+
+    assert_eq!(
+        armed.pipelines_run,
+        APPS * DAYS as usize,
+        "one pipeline per app per day"
+    );
+    assert!(
+        armed.faults > 0,
+        "the armed campaign never faulted — the scenario is vacuous"
+    );
+    assert!(
+        armed.pipelines_succeeded < armed.pipelines_run,
+        "the forced-flaky week must fail some pipelines"
+    );
+    assert!(
+        armed.pipelines_succeeded * 2 > armed.pipelines_run,
+        "chaos degraded more than half the campaign: {}/{}",
+        armed.pipelines_succeeded,
+        armed.pipelines_run
+    );
+    assert_eq!(quiet.faults, 0, "the inert scenario must never fault");
+    assert!(
+        events_per_s >= 50.0,
+        "chaos dispatch below the events/s floor: {events_per_s:.0}/s"
+    );
+    assert!(
+        peak < 1024 * 1024 * 1024,
+        "30-day chaos campaign peaked at {peak} bytes (budget 1 GiB)"
+    );
+    assert!(
+        armed.sacct == replay.sacct,
+        "chaos replay is not byte-identical (determinism budget)"
+    );
+    assert!(
+        overhead < 15.0,
+        "fault model overhead {overhead:.1}x exceeds the 15x budget"
+    );
+
+    println!("\nperf_chaos: all budgets green");
+}

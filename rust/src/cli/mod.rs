@@ -8,6 +8,7 @@
 //! exacb rank        [--machines jupiter,jedi,jureca]
 //! exacb jureap      [--apps 72] [--days 12] [--machines jupiter]
 //! exacb trace       [--apps 24] [--days 3] [--export-trace trace.json]
+//! exacb chaos       [--apps 8] [--days 30] [--inert true]
 //! exacb figures     [--days 90] [--out out/] [--only fig3]
 //! exacb ablation    [--benchmarks 70]
 //! exacb components
@@ -77,6 +78,13 @@ COMMANDS:
                 (--apps N --days D --machines M1,M2 --seed S --top N
                 --export-trace trace.json --export-metrics obs.json;
                 exports are sidecars, never part of report.json)
+  chaos         run a collection campaign under the seeded fault model —
+                node failures, preemption + requeue, a scheduler outage,
+                a maintenance drain, and a fleet-wide stack-update day —
+                and render the fault-labelled summary, queue, and results
+                tables (--apps N --days D --machines M1,M2 --seed S;
+                --inert true arms the zero-rate plan that must change
+                nothing; --expect-faults fails when nothing faulted)
   figures       regenerate every paper table/figure (--days D --out DIR --only ID)
   ablation      run the §III integration-mode ablation (--benchmarks N)
   components    list the CI/CD component catalog
@@ -110,6 +118,7 @@ pub fn run(argv: Vec<String>) -> i32 {
         Some("jureap") => cmd_jureap(&args),
         Some("energy") => cmd_energy(&args),
         Some("trace") => cmd_trace(&args),
+        Some("chaos") => cmd_chaos(&args),
         Some("figures") => cmd_figures(&args),
         Some("ablation") => cmd_ablation(&args),
         Some("components") => cmd_components(),
@@ -870,6 +879,105 @@ fn cmd_trace(args: &Args) -> i32 {
     }
 }
 
+/// Run a collection campaign under the armed seeded fault model
+/// (DESIGN.md §14) and render how the fleet degraded: the campaign
+/// summary, the fault-labelled queue statistics, and the per-entry
+/// results table where failed repetitions are named, not dropped.
+/// `--inert true` arms the zero-rate plan whose timeline must be
+/// byte-identical to never arming anything (pinned by
+/// `tests/integration_chaos.rs`); `--expect-faults` turns "something
+/// actually faulted" into a CI-friendly exit code.
+fn cmd_chaos(args: &Args) -> i32 {
+    use crate::workloads::chaos::{self, ChaosScenario};
+
+    let n = args.u64("apps", 8) as usize;
+    let days = args.i64("days", 30);
+    let seed = args.u64("seed", 20260101);
+    let inert = args.str("inert", "false") == "true";
+    let expect_faults = args.bool("expect-faults");
+    if inert && expect_faults {
+        eprintln!("error: --inert arms the zero-rate plan; it cannot --expect-faults");
+        return 2;
+    }
+    let mut sc = if inert {
+        ChaosScenario::quiet(n, days, seed)
+    } else {
+        ChaosScenario::generate(n, days, seed)
+    };
+    let machines_arg = args.str("machines", "");
+    if !machines_arg.trim().is_empty() {
+        sc.machines = machines_arg
+            .split(',')
+            .map(|s| s.trim().to_string())
+            .filter(|s| !s.is_empty())
+            .collect();
+    }
+    if sc.machines.is_empty() {
+        eprintln!("error: --machines needs at least one machine name (e.g. jedi,jupiter)");
+        return 2;
+    }
+    println!(
+        "chaos campaign: {n} application(s) on {} over {days} simulated day(s) \
+         (seed {seed}){}…",
+        sc.machines.join(","),
+        if inert {
+            " [inert: zero-rate fault plan]".to_string()
+        } else {
+            format!(
+                " [node-fail {:.0}%, preempt {:.0}%, outage day {}, maintenance day {}, \
+                 stack update day {}, '{}' forced flaky days {}..{}]",
+                sc.node_fail_rate * 100.0,
+                sc.preempt_rate * 100.0,
+                sc.outage_day,
+                sc.maintenance_day,
+                sc.stack_update_day,
+                sc.flaky_app,
+                sc.flaky_from_day,
+                sc.flaky_from_day + sc.flaky_days
+            )
+        }
+    );
+
+    let mut world = World::new(seed);
+    let t0 = std::time::Instant::now();
+    let summary = chaos::run_chaos_campaign(&mut world, &sc);
+    println!(
+        "\npipelines: {}/{} succeeded in {:.1} ms wall; {} protocol reports recorded",
+        summary.pipelines_succeeded,
+        summary.pipelines_run,
+        t0.elapsed().as_secs_f64() * 1e3,
+        summary.reports_recorded
+    );
+    print!("{}", summary.table().render());
+
+    let (mut node_fail, mut preempted) = (0usize, 0usize);
+    for m in &sc.machines {
+        if let Some(bs) = world.batch.get(m) {
+            for r in bs.records_iter() {
+                match r.state {
+                    crate::scheduler::JobState::NodeFail => node_fail += 1,
+                    crate::scheduler::JobState::Preempted => preempted += 1,
+                    _ => {}
+                }
+            }
+        }
+    }
+    println!(
+        "\nfaults suffered: {node_fail} node failure(s), {preempted} preemption(s) \
+         (every preempted job was requeued)"
+    );
+    println!("\nqueue statistics with fault accounting (per machine):");
+    print!(
+        "{}",
+        crate::coordinator::postproc::queue_stats(&world).render()
+    );
+    if expect_faults && node_fail + preempted == 0 {
+        eprintln!("\nexpected the armed campaign to fault; nothing did");
+        return 1;
+    }
+    0
+}
+
 fn cmd_figures(args: &Args) -> i32 {
     let days = args.i64("days", 90);
     let seed = args.u64("seed", 2026);
@@ -1157,6 +1265,23 @@ mod tests {
     }
 
     #[test]
+    fn chaos_small_campaign_runs_and_validates_flags() {
+        // a short armed campaign with the standard forced-flaky window
+        // always faults, so --expect-faults exits 0
+        assert_eq!(
+            run_str("chaos --apps 3 --days 4 --seed 13 --expect-faults true"),
+            0
+        );
+        // the inert variant runs clean and cannot expect faults
+        assert_eq!(run_str("chaos --apps 2 --days 2 --seed 13 --inert true"), 0);
+        assert_eq!(
+            run_str("chaos --apps 2 --days 2 --inert true --expect-faults true"),
+            2
+        );
+        assert_eq!(run_str("chaos --apps 2 --days 2 --machines ,"), 2);
+    }
+
+    #[test]
     fn concurrent_collection_runs() {
         assert_eq!(
             run_str(
@@ -1202,7 +1327,7 @@ mod tests {
     fn help_lists_every_subcommand_with_a_description() {
         // keep in sync with the dispatcher match in `run` (that is the
         // point: this list fails loudly when the two drift apart)
-        const SUBCOMMANDS: [&str; 14] = [
+        const SUBCOMMANDS: [&str; 15] = [
             "quickstart",
             "collection",
             "track",
@@ -1211,6 +1336,7 @@ mod tests {
             "jureap",
             "energy",
             "trace",
+            "chaos",
             "figures",
             "ablation",
             "components",

@@ -71,6 +71,20 @@ impl NetworkLink {
         }
     }
 
+    /// A degraded copy of this link: bandwidth scaled by `factor` (in
+    /// `(0, 1]`) with the same protocol behaviour. This is what a
+    /// fabric-firmware regression or a post-maintenance misconfiguration
+    /// looks like at the link level — the network `SystemEvent` factors
+    /// in [`crate::cluster::stage`] are the timeline-aware counterpart.
+    pub fn degraded(&self, factor: f64) -> NetworkLink {
+        let factor = factor.clamp(f64::MIN_POSITIVE, 1.0);
+        NetworkLink {
+            name: format!("{} (degraded x{factor:.2})", self.name),
+            bw_gbs: self.bw_gbs * factor,
+            ..self.clone()
+        }
+    }
+
     /// Transfer time [µs] for `bytes` with a given rendezvous threshold.
     pub fn pt2pt_time_us(&self, bytes: u64, rndv_thresh: u64) -> f64 {
         let kb = bytes as f64 / 1024.0;
@@ -155,6 +169,17 @@ mod tests {
         let t8 = link.allreduce_time_us(1 << 20, 8);
         assert!(t8 > t2);
         assert_eq!(link.allreduce_time_us(1 << 20, 1), 0.0);
+    }
+
+    #[test]
+    fn degraded_link_is_strictly_slower_at_scale() {
+        let link = NetworkLink::ndr400();
+        let bad = link.degraded(0.5);
+        let msg = 4 << 20;
+        assert!(bad.pt2pt_bw_mbs(msg, 8192) < link.pt2pt_bw_mbs(msg, 8192));
+        assert!(bad.allreduce_time_us(msg, 8) > link.allreduce_time_us(msg, 8));
+        // degradation never *improves* a link
+        assert_eq!(link.degraded(2.0).bw_gbs, link.bw_gbs);
     }
 
     #[test]

@@ -127,6 +127,37 @@ impl EventLog {
         &self.events
     }
 
+    /// A coordinated stack-update day (DESIGN.md §14): the software
+    /// stack is redeployed fleet-wide on day `day`, shifting **every**
+    /// metric class on **every** listed machine to `factor` at once.
+    /// Because the effective per-class factors enter the machine
+    /// environment fingerprint (and through it every step- and
+    /// run-level cache key), a stack update invalidates every cached
+    /// execution on every affected machine simultaneously — and, when
+    /// `factor != 1.0`, plants a correlated fleet-wide baseline move
+    /// that regression gates must distinguish from per-app noise.
+    pub fn stack_update(machines: &[&str], day: i64, factor: f64) -> Vec<SystemEvent> {
+        let classes = [
+            MetricClass::Compute,
+            MetricClass::MemBw,
+            MetricClass::Network,
+            MetricClass::Io,
+        ];
+        let mut events = Vec::new();
+        for machine in machines {
+            for class in classes {
+                events.push(SystemEvent {
+                    machine: (*machine).to_string(),
+                    date: SimTime::from_days(day),
+                    class,
+                    factor,
+                    description: format!("stack update (day {day})"),
+                });
+            }
+        }
+        events
+    }
+
     /// The Fig. 4 scenario: an interconnect-firmware update regresses
     /// network performance on `machine` at day 30 and a fix restores it
     /// at day 60.
@@ -191,6 +222,32 @@ mod tests {
         );
         assert_eq!(
             log.factor_at("jupiter", MetricClass::MemBw, SimTime::from_days(40)),
+            1.0
+        );
+    }
+
+    #[test]
+    fn stack_update_shifts_every_class_fleet_wide() {
+        let mut log = EventLog::new();
+        for ev in EventLog::stack_update(&["jedi", "jupiter"], 12, 0.9) {
+            log.push(ev);
+        }
+        assert_eq!(log.events().len(), 8);
+        let classes = [
+            MetricClass::Compute,
+            MetricClass::MemBw,
+            MetricClass::Network,
+            MetricClass::Io,
+        ];
+        for m in ["jedi", "jupiter"] {
+            for c in classes {
+                assert_eq!(log.factor_at(m, c, SimTime::from_days(11)), 1.0);
+                assert!((log.factor_at(m, c, SimTime::from_days(12)) - 0.9).abs() < 1e-12);
+            }
+        }
+        // unlisted machines are untouched
+        assert_eq!(
+            log.factor_at("juwels", MetricClass::Compute, SimTime::from_days(20)),
             1.0
         );
     }

@@ -29,7 +29,9 @@ use crate::util::json::Json;
 use crate::util::prng::Prng;
 use crate::util::timeutil::SimTime;
 
-use super::executor::{env_fingerprint, BatchStepExecutor, Launcher, PendingStep};
+use super::executor::{
+    env_fingerprint, BatchStepExecutor, CollectTriage, Launcher, PendingStep,
+};
 use super::repo::BenchmarkRepo;
 use super::world::World;
 
@@ -290,7 +292,17 @@ impl ExecutionTask {
             };
             let cursor = self.cursor.as_mut().expect("cursor live while executing");
             let poll = match completed {
-                Some(jobid) => cursor.complete(jobid, &mut exec),
+                // Before collecting, triage the terminal state: a
+                // preempted job is followed to its requeued twin, a
+                // node-failed one is resubmitted with bounded backoff —
+                // in both cases the cursor retargets and keeps waiting.
+                Some(jobid) => match exec.triage(jobid) {
+                    CollectTriage::Resubmitted { jobid: next } => {
+                        cursor.retarget(jobid, next);
+                        CursorPoll::Waiting { jobid: next }
+                    }
+                    CollectTriage::Proceed => cursor.complete(jobid, &mut exec),
+                },
                 None => cursor.poll(&mut exec),
             };
             self.exec_state.injected_commands = exec.injected_commands;

@@ -15,7 +15,7 @@ use crate::energy::wrap_with_jpwr;
 use crate::harness::{ResolvedStep, StepDispatch, StepDriver, StepExecutor, StepOutcome};
 use crate::protocol::{CacheOutcome, StepProvenance};
 use crate::runtime::Engine;
-use crate::scheduler::{BatchSystem, JobResult, JobSpec, JobState};
+use crate::scheduler::{backoff_s, BatchSystem, JobResult, JobSpec, JobState, SubmitError};
 use crate::store::{CacheKey, CacheKeyBuilder, ExecutionCache};
 use crate::util::json::Json;
 use crate::util::prng::Prng;
@@ -109,6 +109,33 @@ pub struct PendingStep {
     /// Cache key + pre-classified outcome (miss/invalidated) to record
     /// once the job completes; `None` when caching is disabled.
     pub cache_ctx: Option<(CacheKey, CacheOutcome)>,
+    /// Retained submission (spec + precomputed payload result) so a
+    /// node-failed job can be resubmitted verbatim — no application
+    /// re-run, no PRNG re-consumption — plus the retry attempt count.
+    pub retry: Option<RetrySpec>,
+}
+
+/// The retained submission behind a pending step (DESIGN.md §14).
+#[derive(Debug, Clone)]
+pub struct RetrySpec {
+    pub spec: JobSpec,
+    pub result: JobResult,
+    pub attempts: u32,
+}
+
+/// Bounded retries per step after node failures; past this the step is
+/// collected honestly as failed.
+pub const FAULT_RETRY_LIMIT: u32 = 2;
+
+/// What an awaited job's completion means for the in-flight step.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CollectTriage {
+    /// Terminal in a state the step accepts: collect now.
+    Proceed,
+    /// The job was preempted-and-requeued by the scheduler, or
+    /// node-failed and resubmitted with backoff; the caller must keep
+    /// waiting on the new jobid (and retarget its cursor).
+    Resubmitted { jobid: u64 },
 }
 
 /// Digest of the resolved machine environment at a point in simulated
@@ -197,10 +224,12 @@ impl<'w> BatchStepExecutor<'w> {
     /// clock (events change on day granularity; queue waits are seconds,
     /// so this is a faithful approximation); the precomputed result
     /// becomes the job payload. Does **not** drain the batch system —
-    /// collection happens in [`Self::collect_step`] after the job's
-    /// completion event. Returns a ready failed outcome when nothing was
-    /// submitted.
-    fn submit_remote(&mut self, step: &ResolvedStep) -> Result<u64, StepOutcome> {
+    /// collection happens in [`StepDriver::collect`] after the job's
+    /// completion event. A scheduler-outage bounce retries as a deferred
+    /// submission with deterministic backoff past the window. Returns
+    /// the jobid plus the retained submission for fault retries, or a
+    /// ready failed outcome when nothing was submitted.
+    fn submit_remote(&mut self, step: &ResolvedStep) -> Result<(u64, RetrySpec), StepOutcome> {
         let nodes = self.remote_nodes(step);
         let m = match self.cluster.machine(&self.machine) {
             Some(m) => m,
@@ -299,9 +328,91 @@ impl<'w> BatchStepExecutor<'w> {
             metrics: metrics.clone(),
             files: files.clone(),
         };
+        let retained = RetrySpec {
+            spec: spec.clone(),
+            result: payload_result.clone(),
+            attempts: 0,
+        };
         match self.batch.submit(spec, Box::new(move |_| payload_result)) {
-            Ok(id) => Ok(id),
+            Ok(id) => Ok((id, retained)),
+            Err(SubmitError::Outage { until }) => {
+                // The scheduler bounces submissions during the outage
+                // window: retry as a deferred submission released a
+                // deterministic (content-hashed, bounded) backoff past
+                // the window's end instead of failing the step.
+                let release =
+                    until.add_secs(backoff_s(&self.machine, &retained.spec.name, 0));
+                let result = retained.result.clone();
+                match self.batch.submit_deferred(
+                    release,
+                    retained.spec.clone(),
+                    Box::new(move |_| result),
+                ) {
+                    Ok(id) => Ok((id, retained)),
+                    Err(e) => Err(StepOutcome::failed(&format!("submit: {e}"))),
+                }
+            }
             Err(e) => Err(StepOutcome::failed(&format!("submit: {e}"))),
+        }
+    }
+
+    /// Inspect the awaited job's terminal state before collecting.
+    /// Preempted jobs are followed to their requeued twin; node-failed
+    /// jobs are resubmitted verbatim (bounded attempts, deterministic
+    /// backoff). Anything else — including a node failure past the retry
+    /// limit — proceeds to an honest [`StepDriver::collect`].
+    pub fn triage(&mut self, jobid: u64) -> CollectTriage {
+        let Some(p) = self.pending.as_mut() else {
+            return CollectTriage::Proceed;
+        };
+        if p.jobid != jobid {
+            return CollectTriage::Proceed;
+        }
+        let Some(record) = self.batch.record(jobid) else {
+            return CollectTriage::Proceed;
+        };
+        match record.state {
+            JobState::Preempted => {
+                // the scheduler already requeued the job; follow its twin
+                let twin = record
+                    .result
+                    .as_ref()
+                    .and_then(|r| r.metrics.u64_of("requeued_as"));
+                match twin {
+                    Some(twin) => {
+                        p.jobid = twin;
+                        CollectTriage::Resubmitted { jobid: twin }
+                    }
+                    None => CollectTriage::Proceed,
+                }
+            }
+            JobState::NodeFail => {
+                let Some(retry) = p.retry.as_mut() else {
+                    return CollectTriage::Proceed;
+                };
+                if retry.attempts >= FAULT_RETRY_LIMIT {
+                    return CollectTriage::Proceed;
+                }
+                retry.attempts += 1;
+                let attempt = retry.attempts;
+                let spec = retry.spec.clone();
+                let result = retry.result.clone();
+                let release = self
+                    .batch
+                    .now()
+                    .add_secs(backoff_s(&self.machine, &spec.name, attempt));
+                match self
+                    .batch
+                    .submit_deferred(release, spec, Box::new(move |_| result))
+                {
+                    Ok(new_id) => {
+                        self.pending.as_mut().expect("pending checked above").jobid = new_id;
+                        CollectTriage::Resubmitted { jobid: new_id }
+                    }
+                    Err(_) => CollectTriage::Proceed,
+                }
+            }
+            _ => CollectTriage::Proceed,
         }
     }
 }
@@ -353,11 +464,12 @@ impl<'w> StepDriver for BatchStepExecutor<'w> {
             None
         };
         match self.submit_remote(step) {
-            Ok(jobid) => {
+            Ok((jobid, retained)) => {
                 self.pending = Some(PendingStep {
                     step_name: step.name.clone(),
                     jobid,
                     cache_ctx,
+                    retry: Some(retained),
                 });
                 StepDispatch::Submitted(jobid)
             }
@@ -425,7 +537,18 @@ impl<'w> StepExecutor for BatchStepExecutor<'w> {
         match self.dispatch(step) {
             StepDispatch::Done(out) => out,
             StepDispatch::Submitted(jobid) => {
-                self.batch.run_until_idle();
+                // Under an armed fault plan the awaited job may resolve
+                // into a requeued twin or a retried resubmission; follow
+                // the chain until a state collect() accepts. Bounded:
+                // requeued twins are immune and retries are capped.
+                let mut jobid = jobid;
+                loop {
+                    self.batch.run_until_idle();
+                    match self.triage(jobid) {
+                        CollectTriage::Resubmitted { jobid: next } => jobid = next,
+                        CollectTriage::Proceed => break,
+                    }
+                }
                 self.collect(jobid)
             }
         }
@@ -675,6 +798,58 @@ mod tests {
             assert_eq!((a.nodes, a.tasks_per_node, a.threads_per_task),
                        (b.nodes, b.tasks_per_node, b.threads_per_task));
         }
+    }
+
+    #[test]
+    fn preempted_step_follows_requeued_twin() {
+        let (cluster, mut batch, mut rng) = setup();
+        batch.set_fault_plan(Some(crate::scheduler::FaultPlan {
+            preempt_rate: 1.0,
+            ..crate::scheduler::FaultPlan::seeded("jedi", 5)
+        }));
+        let spec = logmap_spec();
+        let outcomes = {
+            let mut exec = executor(&cluster, &mut batch, &mut rng);
+            run_benchmark(&spec, &[], &mut exec).unwrap()
+        };
+        // the requeued twin carried the original measurement through
+        assert_eq!(outcomes.len(), 1);
+        assert!(outcomes[0].success);
+        assert!(outcomes[0].metrics.f64_of("app_time").is_some());
+        let preempted = batch
+            .records()
+            .iter()
+            .filter(|r| r.state == JobState::Preempted)
+            .count();
+        assert_eq!(preempted, 1);
+    }
+
+    #[test]
+    fn node_failed_step_exhausts_retries_honestly() {
+        let (cluster, mut batch, mut rng) = setup();
+        batch.set_fault_plan(Some(crate::scheduler::FaultPlan {
+            node_fail_rate: 1.0,
+            ..crate::scheduler::FaultPlan::seeded("jedi", 5)
+        }));
+        let spec = logmap_spec();
+        let mut cache = ExecutionCache::new();
+        let outcomes = {
+            let mut exec = executor(&cluster, &mut batch, &mut rng);
+            exec.cache = Some(&mut cache);
+            run_benchmark(&spec, &[], &mut exec).unwrap()
+        };
+        // recorded as failed — never dropped, never fabricated
+        assert!(!outcomes[0].success);
+        assert_eq!(outcomes[0].metrics.bool_of("node_fail"), Some(true));
+        // the original plus every bounded retry node-failed
+        let node_failed = batch
+            .records()
+            .iter()
+            .filter(|r| r.state == JobState::NodeFail)
+            .count();
+        assert_eq!(node_failed as u32, 1 + FAULT_RETRY_LIMIT);
+        // a failed repetition never warms the cache
+        assert_eq!(cache.stats.inserts, 0);
     }
 
     #[test]

@@ -48,50 +48,76 @@ fn load_set(repo: &BenchmarkRepo, prefix: &str, inputs: &Json) -> (ReportSet, us
     (set.filter_time_span(from, to), skipped)
 }
 
-/// Canonical cross-repo results table: every successful data entry of
-/// every report across the world's repositories, sorted by a total
-/// order independent of pipeline dispatch or store iteration order.
-/// Two campaigns over the same inputs yield byte-identical tables
-/// whatever the work-queue interleaving — the aggregation counterpart
-/// of the deterministic concurrent collection runner.
+/// How one data entry ended, for the results table's `status` column:
+/// failed repetitions are labelled by *why* they failed (the honesty
+/// flags of DESIGN.md §14) instead of being folded into — or silently
+/// dropped from — the completed counts.
+fn entry_status(e: &crate::protocol::DataEntry) -> &'static str {
+    if e.success {
+        "completed"
+    } else if e.metrics.bool_of("node_fail") == Some(true) {
+        "node_fail"
+    } else if e.metrics.bool_of("preempted") == Some(true) {
+        "preempted"
+    } else if e.metrics.bool_of("timeout") == Some(true) {
+        "timeout"
+    } else {
+        "failed"
+    }
+}
+
+/// Canonical cross-repo results table: every data entry of every report
+/// across the world's repositories, sorted by a total order independent
+/// of pipeline dispatch or store iteration order. Successful entries
+/// carry their metric value; failed entries are always listed — with a
+/// `status` naming the failure mode — never folded into the completed
+/// rows and never dropped. Two campaigns over the same inputs yield
+/// byte-identical tables whatever the work-queue interleaving — the
+/// aggregation counterpart of the deterministic concurrent collection
+/// runner.
 pub fn collection_results_table(world: &World, metric: &str) -> Table {
     let mut rows: Vec<Vec<String>> = Vec::new();
     for (name, repo) in &world.repos {
         let (set, _) = repo.with_snapshot(|snap| ReportSet::from_snapshot(snap, ""));
         for (_, r) in &set.reports {
             for e in &r.data {
-                if !e.success {
-                    continue;
-                }
                 let v = if metric == "runtime" {
                     Some(e.runtime)
                 } else {
                     e.metric(metric)
                 };
-                if let Some(v) = v {
-                    // date (not time-of-day): campaigns trigger daily,
-                    // and exact submit times depend on how the work
-                    // queue interleaved jobs on a shared batch system —
-                    // day granularity is the order-independent identity
-                    let date = r
-                        .experiment
-                        .time()
-                        .map(|t| t.date_string())
-                        .unwrap_or_default();
-                    rows.push(vec![
-                        name.clone(),
-                        r.experiment.system.clone(),
-                        date,
-                        e.nodes.to_string(),
-                        format!("{v:.6}"),
-                    ]);
-                }
+                // successful entries without the metric are skipped (an
+                // uninstrumented app has nothing to report here); failed
+                // entries always get a row so faults stay visible
+                let value = match (e.success, v) {
+                    (true, Some(v)) => format!("{v:.6}"),
+                    (true, None) => continue,
+                    (false, Some(v)) => format!("{v:.6}"),
+                    (false, None) => "-".to_string(),
+                };
+                // date (not time-of-day): campaigns trigger daily,
+                // and exact submit times depend on how the work
+                // queue interleaved jobs on a shared batch system —
+                // day granularity is the order-independent identity
+                let date = r
+                    .experiment
+                    .time()
+                    .map(|t| t.date_string())
+                    .unwrap_or_default();
+                rows.push(vec![
+                    name.clone(),
+                    r.experiment.system.clone(),
+                    date,
+                    e.nodes.to_string(),
+                    value,
+                    entry_status(e).to_string(),
+                ]);
             }
         }
     }
     rows.sort();
     rows.dedup();
-    let mut t = Table::new(&["benchmark", "system", "date", "nodes", metric]);
+    let mut t = Table::new(&["benchmark", "system", "date", "nodes", metric, "status"]);
     if rows.is_empty() {
         // a labelled empty table, not a bare header: a world with no
         // completed pipelines should read as such, not render as if the
@@ -115,7 +141,16 @@ pub fn collection_results_table(world: &World, metric: &str) -> Table {
 /// event loop — on the sequential dispatch path every pipeline drains
 /// before the next starts, so waits never exceed the latency floor.
 pub fn queue_stats(world: &World) -> Table {
-    let mut t = Table::new(&["machine", "jobs", "p50_wait_s", "p95_wait_s", "backfilled"]);
+    let mut t = Table::new(&[
+        "machine",
+        "jobs",
+        "p50_wait_s",
+        "p95_wait_s",
+        "backfilled",
+        "node_fail",
+        "preempted",
+        "requeued",
+    ]);
     for (name, bs) in &world.batch {
         let waits: Vec<f64> = bs
             .records_iter()
@@ -133,7 +168,26 @@ pub fn queue_stats(world: &World) -> Table {
         let mut per_partition: std::collections::HashMap<&str, (Option<SimTime>, bool)> =
             std::collections::HashMap::new();
         let mut backfilled = 0usize;
+        // fault accounting (DESIGN.md §14): node-failed and preempted
+        // jobs by terminal state, requeued twins by the scheduler's
+        // `requeued_as` breadcrumb — kept separate from the completed
+        // counts instead of being folded into them
+        let mut node_fail = 0usize;
+        let mut preempted = 0usize;
+        let mut requeued = 0usize;
         for r in bs.records_iter() {
+            match r.state {
+                crate::scheduler::JobState::NodeFail => node_fail += 1,
+                crate::scheduler::JobState::Preempted => preempted += 1,
+                _ => {}
+            }
+            if r.result
+                .as_ref()
+                .map(|res| res.metrics.u64_of("requeued_as").is_some())
+                .unwrap_or(false)
+            {
+                requeued += 1;
+            }
             let entry = per_partition
                 .entry(r.spec.partition.as_str())
                 .or_insert((None, false));
@@ -157,6 +211,9 @@ pub fn queue_stats(world: &World) -> Table {
             format!("{:.0}", crate::util::stats::percentile(&waits, 50.0)),
             format!("{:.0}", crate::util::stats::percentile(&waits, 95.0)),
             backfilled.to_string(),
+            node_fail.to_string(),
+            preempted.to_string(),
+            requeued.to_string(),
         ]);
     }
     if t.rows.is_empty() {
@@ -546,6 +603,57 @@ mod tests {
         assert_eq!(t.rows[0][2], format!("{latency}"));
         assert_eq!(t.rows[0][3], format!("{latency}"));
         assert_eq!(t.rows[0][4], "0");
+        // a fault-free history reports zero faults, not blank cells
+        assert_eq!(&t.rows[0][5..8], ["0", "0", "0"]);
+    }
+
+    /// Satellite regression (§14): a planted node-failure day must show
+    /// up as distinct `node_fail` accounting in both postproc surfaces —
+    /// never folded into the completed counts, never dropped.
+    #[test]
+    fn planted_fault_day_is_labelled_not_folded() {
+        let mut world = World::new(7);
+        world.add_repo(BenchmarkRepo::logmap_example("jedi", "all"));
+        // day 0 is clean; day 1 runs under a node-fail-everything plan
+        world.advance_to(SimTime::from_days(0).add_secs(3 * 3600));
+        world.run_pipeline("logmap", Trigger::Scheduled).unwrap();
+        let plan = crate::scheduler::FaultPlan {
+            node_fail_rate: 1.0,
+            ..crate::scheduler::FaultPlan::seeded("jedi", 7)
+        };
+        world
+            .batch
+            .get_mut("jedi")
+            .unwrap()
+            .set_fault_plan(Some(plan));
+        world.advance_to(SimTime::from_days(1).add_secs(3 * 3600));
+        world.run_pipeline("logmap", Trigger::Scheduled).unwrap();
+
+        let t = queue_stats(&world);
+        assert_eq!(t.rows.len(), 1, "{:?}", t.rows);
+        let node_fail: usize = t.rows[0][5].parse().unwrap();
+        // the faulted step node-fails once plus once per bounded retry
+        assert_eq!(
+            node_fail as u32,
+            1 + crate::coordinator::executor::FAULT_RETRY_LIMIT
+        );
+        assert_eq!(t.rows[0][6], "0");
+        assert_eq!(t.rows[0][7], "0");
+
+        let results = collection_results_table(&world, "app_time");
+        let statuses: Vec<&str> = results
+            .rows
+            .iter()
+            .map(|r| r.last().unwrap().as_str())
+            .collect();
+        assert!(
+            statuses.contains(&"completed"),
+            "clean day still completed: {statuses:?}"
+        );
+        assert!(
+            statuses.contains(&"node_fail"),
+            "faulted day labelled node_fail: {statuses:?}"
+        );
     }
 
     #[test]

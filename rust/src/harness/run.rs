@@ -387,6 +387,20 @@ impl RunCursor {
         self.poll(exec)
     }
 
+    /// Swap the awaited job id: the executor followed a scheduler
+    /// requeue (preemption) or resubmitted after a node failure, so the
+    /// step's completion now arrives under `new`. Returns `false` — and
+    /// changes nothing — when the cursor is not waiting on `old`.
+    pub fn retarget(&mut self, old: u64, new: u64) -> bool {
+        match &mut self.awaiting {
+            Some(w) if w.jobid == old => {
+                w.jobid = new;
+                true
+            }
+            _ => false,
+        }
+    }
+
     fn apply(&mut self, step: &ResolvedStep, out: StepOutcome) {
         self.acc.step_status.push((step.name.clone(), out.success));
         self.acc.success &= out.success;
@@ -736,6 +750,36 @@ mod tests {
         let outs = cursor.into_outcomes();
         assert_eq!(outs.len(), 2);
         assert!(outs.iter().all(|o| o.success));
+    }
+
+    #[test]
+    fn cursor_retargets_awaited_job_after_requeue() {
+        let spec = BenchmarkSpec::parse(LOGMAP_SPEC).unwrap();
+        let mut driver = YieldingDriver::new(exec_with_output());
+        let mut cursor = RunCursor::new(&spec, &[]).unwrap();
+        let CursorPoll::Waiting { jobid } = cursor.poll(&mut driver) else {
+            panic!("expected a remote submission");
+        };
+        // retargeting a jobid we are not waiting on is a no-op
+        assert!(!cursor.retarget(jobid + 1, jobid + 2));
+        assert_eq!(cursor.poll(&mut driver), CursorPoll::Waiting { jobid });
+        // the executor followed a requeue: the step completes under twin
+        let twin = jobid + 100;
+        assert!(cursor.retarget(jobid, twin));
+        assert_eq!(cursor.poll(&mut driver), CursorPoll::Waiting { jobid: twin });
+        // the old id is now foreign and must not advance the cursor
+        assert_eq!(
+            cursor.complete(jobid, &mut driver),
+            CursorPoll::Waiting { jobid: twin }
+        );
+        let (_, parked) = driver.parked.take().expect("step still parked");
+        driver.parked = Some((twin, parked));
+        let mut poll = cursor.complete(twin, &mut driver);
+        while let CursorPoll::Waiting { jobid } = poll {
+            poll = cursor.complete(jobid, &mut driver);
+        }
+        assert_eq!(poll, CursorPoll::Finished);
+        assert!(cursor.into_outcomes().iter().all(|o| o.success));
     }
 
     #[test]

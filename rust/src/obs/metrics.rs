@@ -56,6 +56,10 @@ pub enum Ctr {
     MaturityDemotions,
     EnergySweeps,
     EnergyPoints,
+    // fault model (per machine; DESIGN.md §14)
+    JobsNodeFailed,
+    JobsPreempted,
+    JobsRequeued,
 }
 
 impl Ctr {
@@ -87,6 +91,9 @@ impl Ctr {
         Ctr::MaturityDemotions,
         Ctr::EnergySweeps,
         Ctr::EnergyPoints,
+        Ctr::JobsNodeFailed,
+        Ctr::JobsPreempted,
+        Ctr::JobsRequeued,
     ];
 
     /// Stable export name (snake_case).
@@ -118,12 +125,15 @@ impl Ctr {
             Ctr::MaturityDemotions => "maturity_demotions",
             Ctr::EnergySweeps => "energy_sweeps",
             Ctr::EnergyPoints => "energy_points",
+            Ctr::JobsNodeFailed => "jobs_node_failed",
+            Ctr::JobsPreempted => "jobs_preempted",
+            Ctr::JobsRequeued => "jobs_requeued",
         }
     }
 }
 
 /// Number of counters (array size of every plane row).
-pub const CTR_COUNT: usize = 26;
+pub const CTR_COUNT: usize = 29;
 
 /// Fixed-bucket histograms over sim-time seconds.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]

@@ -1,0 +1,283 @@
+//! Seeded fault model for the batch system (DESIGN.md §14).
+//!
+//! A [`FaultPlan`] is configured per machine and decides — as a *pure
+//! function* of `(seed, machine, jobid)` — whether a starting job is
+//! struck by a node failure or a preemption, and which fraction of its
+//! runtime it completes before the strike. Outage and maintenance
+//! windows are plain half-open time intervals; their boundaries are
+//! timeline events dispatched through the scheduler's event heap so
+//! `drive`/`drive_reference` replay byte-identically.
+//!
+//! Zero-rate plans with no windows are contractually inert: arming one
+//! changes no byte of any timeline (asserted by
+//! `tests/integration_chaos.rs` and the fault-model properties).
+
+use crate::util::fnv1a;
+use crate::util::prng::Prng;
+use crate::util::timeutil::SimTime;
+
+/// Half-open time window `[start, end)`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Window {
+    pub start: SimTime,
+    pub end: SimTime,
+}
+
+impl Window {
+    pub fn new(start: SimTime, end: SimTime) -> Window {
+        Window { start, end }
+    }
+
+    /// Convenience: `[day D at h0:00, day D at h1:00)`.
+    pub fn on_day(day: i64, from_hour: i64, to_hour: i64) -> Window {
+        Window {
+            start: SimTime::from_days(day).add_secs(from_hour * 3600),
+            end: SimTime::from_days(day).add_secs(to_hour * 3600),
+        }
+    }
+
+    pub fn contains(&self, t: SimTime) -> bool {
+        t >= self.start && t < self.end
+    }
+}
+
+/// What kind of fault strikes a running job.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// The hosting node dies: the job ends early in
+    /// [`crate::scheduler::job::JobState::NodeFail`] and its application
+    /// metrics are discarded (honesty contract).
+    NodeFail,
+    /// The scheduler preempts the job and requeues it automatically
+    /// under a fresh jobid carrying the *original* payload result, so a
+    /// requeued measurement is byte-identical to an unpreempted one.
+    Preempt,
+}
+
+/// A deterministic targeted fault: jobs whose name contains
+/// `name_contains` and that start inside `window` are struck with
+/// `kind`. Evaluated before the rate-based draw — this is how chaos
+/// scenarios make one specific app flaky on an exact schedule.
+#[derive(Debug, Clone)]
+pub struct ForcedFault {
+    pub name_contains: String,
+    pub window: Window,
+    pub kind: FaultKind,
+}
+
+/// The decision for one starting job.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultDecision {
+    pub kind: FaultKind,
+    /// Fraction of the job's nominal duration completed before the
+    /// strike, in `[0.1, 0.9]`.
+    pub strike_frac: f64,
+}
+
+/// Per-machine seeded fault schedule.
+#[derive(Debug, Clone)]
+pub struct FaultPlan {
+    pub seed: u64,
+    pub machine: String,
+    /// Probability a starting job is struck by a node failure.
+    pub node_fail_rate: f64,
+    /// Probability a starting job is preempted (drawn after node-fail).
+    pub preempt_rate: f64,
+    /// Scheduler outages: submissions are rejected and the pending
+    /// queues are frozen while the clock is inside one of these.
+    pub outages: Vec<Window>,
+    /// Maintenance windows: partitions drain — running jobs finish but
+    /// no new job starts until the window closes.
+    pub maintenance: Vec<Window>,
+    pub forced: Vec<ForcedFault>,
+}
+
+impl FaultPlan {
+    /// The inert plan: zero rates, no windows. Arming it is
+    /// byte-identical to not arming any plan at all.
+    pub fn quiet(machine: &str) -> FaultPlan {
+        FaultPlan {
+            seed: 0,
+            machine: machine.to_string(),
+            node_fail_rate: 0.0,
+            preempt_rate: 0.0,
+            outages: Vec::new(),
+            maintenance: Vec::new(),
+            forced: Vec::new(),
+        }
+    }
+
+    pub fn seeded(machine: &str, seed: u64) -> FaultPlan {
+        FaultPlan {
+            seed,
+            ..FaultPlan::quiet(machine)
+        }
+    }
+
+    /// Decide the fate of a job starting at `start`. Pure in
+    /// `(self.seed, self.machine, jobid)` — no shared PRNG state is
+    /// consumed, so submission-order permutations cannot change any
+    /// job's fate.
+    pub fn decide(&self, jobid: u64, job_name: &str, start: SimTime) -> Option<FaultDecision> {
+        for f in &self.forced {
+            if f.window.contains(start) && job_name.contains(&f.name_contains) {
+                // Deterministic mid-run strike for targeted faults.
+                return Some(FaultDecision {
+                    kind: f.kind,
+                    strike_frac: 0.5,
+                });
+            }
+        }
+        if self.node_fail_rate <= 0.0 && self.preempt_rate <= 0.0 {
+            return None;
+        }
+        let key = format!("{}|{jobid}", self.machine);
+        let mut rng = Prng::new(self.seed ^ fnv1a(key.as_bytes()));
+        // Fixed draw order keeps the schedule stable as rates vary.
+        let node_fail = rng.bool_with(self.node_fail_rate);
+        let preempt = rng.bool_with(self.preempt_rate);
+        let strike_frac = rng.range_f64(0.1, 0.9);
+        let kind = if node_fail {
+            FaultKind::NodeFail
+        } else if preempt {
+            FaultKind::Preempt
+        } else {
+            return None;
+        };
+        Some(FaultDecision { kind, strike_frac })
+    }
+
+    pub fn in_outage(&self, t: SimTime) -> bool {
+        self.outages.iter().any(|w| w.contains(t))
+    }
+
+    /// End of the outage covering `t`, if any (for deferred resubmit).
+    pub fn outage_until(&self, t: SimTime) -> Option<SimTime> {
+        self.outages.iter().find(|w| w.contains(t)).map(|w| w.end)
+    }
+
+    pub fn in_maintenance(&self, t: SimTime) -> bool {
+        self.maintenance.iter().any(|w| w.contains(t))
+    }
+
+    /// Scheduling is frozen at `t` (outage or maintenance drain).
+    pub fn frozen(&self, t: SimTime) -> bool {
+        self.in_outage(t) || self.in_maintenance(t)
+    }
+
+    /// Earliest window boundary strictly after `t`: these are the
+    /// timeline instants where scheduling eligibility flips, dispatched
+    /// as events through the batch system's heap.
+    pub fn next_boundary_after(&self, t: SimTime) -> Option<SimTime> {
+        self.outages
+            .iter()
+            .chain(self.maintenance.iter())
+            .flat_map(|w| [w.start, w.end])
+            .filter(|b| *b > t)
+            .min()
+    }
+}
+
+/// Deterministic bounded backoff for retry-after-fault resubmissions:
+/// a pure content hash of the retry context, mapped into
+/// `[30 s, 300 s]`. No PRNG stream is consumed, so retries cannot
+/// perturb measurement streams.
+pub fn backoff_s(machine: &str, tag: &str, attempt: u32) -> i64 {
+    let key = format!("backoff|{machine}|{tag}|{attempt}");
+    30 + (fnv1a(key.as_bytes()) % 271) as i64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn plan() -> FaultPlan {
+        FaultPlan {
+            seed: 42,
+            node_fail_rate: 0.2,
+            preempt_rate: 0.2,
+            ..FaultPlan::quiet("jedi")
+        }
+    }
+
+    #[test]
+    fn decisions_are_pure_per_jobid() {
+        let p = plan();
+        for jobid in 7_700_000..7_700_200 {
+            let a = p.decide(jobid, "app", SimTime(0));
+            let b = p.decide(jobid, "app", SimTime(86_400));
+            assert_eq!(a, b, "rate-based decision must not depend on time");
+        }
+    }
+
+    #[test]
+    fn decisions_vary_with_seed_and_machine() {
+        let a = plan();
+        let b = FaultPlan { seed: 43, ..plan() };
+        let c = FaultPlan {
+            machine: "ant".into(),
+            ..plan()
+        };
+        let differs = |x: &FaultPlan, y: &FaultPlan| {
+            (7_700_000..7_700_400).any(|j| x.decide(j, "app", SimTime(0)) != y.decide(j, "app", SimTime(0)))
+        };
+        assert!(differs(&a, &b), "seed must reshape the schedule");
+        assert!(differs(&a, &c), "machine must reshape the schedule");
+    }
+
+    #[test]
+    fn quiet_plan_never_strikes() {
+        let p = FaultPlan::quiet("jedi");
+        assert!((0..500).all(|j| p.decide(7_700_000 + j, "app", SimTime(0)).is_none()));
+        assert!(!p.frozen(SimTime(0)));
+        assert_eq!(p.next_boundary_after(SimTime(0)), None);
+    }
+
+    #[test]
+    fn forced_faults_match_name_and_window() {
+        let mut p = FaultPlan::quiet("jedi");
+        p.forced.push(ForcedFault {
+            name_contains: "lmp".into(),
+            window: Window::on_day(3, 0, 24),
+            kind: FaultKind::NodeFail,
+        });
+        let inside = SimTime::from_days(3).add_secs(3600);
+        let outside = SimTime::from_days(4).add_secs(3600);
+        assert_eq!(
+            p.decide(1, "exacb-lmp-execute", inside).map(|d| d.kind),
+            Some(FaultKind::NodeFail)
+        );
+        assert!(p.decide(1, "exacb-gromacs-execute", inside).is_none());
+        assert!(p.decide(1, "exacb-lmp-execute", outside).is_none());
+    }
+
+    #[test]
+    fn windows_are_half_open() {
+        let w = Window::on_day(2, 1, 4);
+        assert!(!w.contains(SimTime::from_days(2)));
+        assert!(w.contains(w.start));
+        assert!(!w.contains(w.end));
+    }
+
+    #[test]
+    fn boundary_scan_finds_next_flip() {
+        let mut p = FaultPlan::quiet("jedi");
+        p.outages.push(Window::on_day(1, 2, 5));
+        p.maintenance.push(Window::on_day(1, 4, 6));
+        let t0 = SimTime::from_days(1);
+        let b1 = p.next_boundary_after(t0).unwrap();
+        assert_eq!(b1, SimTime::from_days(1).add_secs(2 * 3600));
+        let b2 = p.next_boundary_after(b1).unwrap();
+        assert_eq!(b2, SimTime::from_days(1).add_secs(4 * 3600));
+        assert!(p.frozen(SimTime::from_days(1).add_secs(3 * 3600)));
+        assert!(!p.frozen(SimTime::from_days(1).add_secs(7 * 3600)));
+    }
+
+    #[test]
+    fn backoff_is_bounded_and_deterministic() {
+        let a = backoff_s("jedi", "step", 0);
+        assert_eq!(a, backoff_s("jedi", "step", 0));
+        assert!((30..=300).contains(&a));
+        assert_ne!(a, backoff_s("jedi", "step", 1));
+    }
+}

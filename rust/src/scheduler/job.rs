@@ -44,6 +44,13 @@ pub enum JobState {
     Timeout,
     /// Rejected at submission (bad partition, disabled account, …).
     Rejected,
+    /// A node hosting the job failed mid-run; the job ends early and no
+    /// application metrics are recorded (DESIGN.md §14 honesty contract).
+    NodeFail,
+    /// Preempted by the scheduler; the batch system requeues the job
+    /// automatically under a fresh jobid (`requeued_as` in the result
+    /// metrics points at it).
+    Preempted,
 }
 
 impl JobState {
@@ -59,6 +66,8 @@ impl JobState {
             JobState::Failed => "FAILED",
             JobState::Timeout => "TIMEOUT",
             JobState::Rejected => "REJECTED",
+            JobState::NodeFail => "NODE_FAIL",
+            JobState::Preempted => "PREEMPTED",
         }
     }
 }
@@ -142,6 +151,8 @@ mod tests {
             JobState::Failed,
             JobState::Timeout,
             JobState::Rejected,
+            JobState::NodeFail,
+            JobState::Preempted,
         ] {
             assert!(s.is_terminal());
         }

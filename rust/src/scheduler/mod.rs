@@ -4,11 +4,15 @@
 //! * [`job`] — specs, states, payloads, accounting records.
 //! * [`accounts`] — compute projects and core-hour budgets.
 //! * [`slurm`] — the discrete-event FIFO+backfill scheduler.
+//! * [`fault`] — seeded fault plans: node failures, preemption,
+//!   outage and maintenance windows (DESIGN.md §14).
 
 pub mod accounts;
+pub mod fault;
 pub mod job;
 pub mod slurm;
 
 pub use accounts::{Account, AccountError, AccountManager, Budget};
+pub use fault::{backoff_s, FaultDecision, FaultKind, FaultPlan, ForcedFault, Window};
 pub use job::{JobCtx, JobPayload, JobRecord, JobResult, JobSpec, JobState};
 pub use slurm::{for_machine, BatchSystem, SubmitError};

@@ -18,6 +18,7 @@
 use std::collections::{BinaryHeap, HashMap, VecDeque};
 
 use super::accounts::{AccountError, AccountManager};
+use super::fault::{FaultKind, FaultPlan};
 use super::job::{JobCtx, JobPayload, JobRecord, JobResult, JobSpec, JobState};
 use crate::util::json::Json;
 use crate::util::timeutil::SimTime;
@@ -31,6 +32,10 @@ pub enum SubmitError {
         partition: String,
         total: u64,
     },
+    /// The scheduler is inside an outage window (DESIGN.md §14):
+    /// submissions bounce until `until`; callers retry with
+    /// [`BatchSystem::submit_deferred`] past that instant.
+    Outage { until: SimTime },
 }
 
 impl std::fmt::Display for SubmitError {
@@ -46,6 +51,9 @@ impl std::fmt::Display for SubmitError {
                 f,
                 "job requests {requested} nodes but partition '{partition}' has {total}"
             ),
+            SubmitError::Outage { until } => {
+                write!(f, "scheduler outage: submissions rejected until {}", until.0)
+            }
         }
     }
 }
@@ -63,6 +71,29 @@ struct PendingJob {
     nodes: u64,
     walltime_limit_s: u64,
     payload: JobPayload,
+    /// Requeued-after-preemption jobs are immune to further faults, so a
+    /// requeue cannot cascade and the requeued measurement stays
+    /// byte-identical to an unpreempted replay of the same stream.
+    immune: bool,
+}
+
+/// A submission accepted for a future release instant (retry-after-fault
+/// with deterministic backoff). The spec lives in the job's record.
+struct DeferredJob {
+    release: SimTime,
+    jobid: u64,
+    payload: JobPayload,
+}
+
+/// The kinds of timeline events a machine can advance through. Ordered
+/// by dispatch priority at equal instants: completions publish state and
+/// free nodes first, deferred releases join the queue next, window
+/// boundaries merely re-run the scheduler.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum EventKind {
+    Completion,
+    Release,
+    Boundary,
 }
 
 /// One running job on the completion heap. The terminal state is decided
@@ -129,6 +160,15 @@ pub struct BatchSystem {
     /// default) disables logging; the coordinator event loop enables it
     /// so completions triggered *inside* a task poll still wake waiters.
     event_log: Option<Vec<u64>>,
+    /// Armed fault schedule (DESIGN.md §14). `None` — and equally a
+    /// zero-rate plan with no windows — leaves every timeline byte
+    /// untouched.
+    fault: Option<FaultPlan>,
+    /// Submissions waiting for their release instant.
+    deferred: Vec<DeferredJob>,
+    /// Preempted jobid → (requeued twin's jobid, original payload
+    /// result). Released into the queue when the preemption publishes.
+    requeues: HashMap<u64, (u64, JobResult)>,
 }
 
 impl BatchSystem {
@@ -146,7 +186,19 @@ impl BatchSystem {
             records: HashMap::new(),
             record_order: Vec::new(),
             event_log: None,
+            fault: None,
+            deferred: Vec::new(),
+            requeues: HashMap::new(),
         }
+    }
+
+    /// Arm (or disarm, with `None`) the seeded fault schedule.
+    pub fn set_fault_plan(&mut self, plan: Option<FaultPlan>) {
+        self.fault = plan;
+    }
+
+    pub fn fault_plan(&self) -> Option<&FaultPlan> {
+        self.fault.as_ref()
     }
 
     pub fn add_partition(&mut self, name: &str, nodes: u64) {
@@ -167,12 +219,13 @@ impl BatchSystem {
     /// Move the clock forward (e.g. to the next daily pipeline trigger).
     /// Panics if moving backwards.
     pub fn advance_clock_to(&mut self, t: SimTime) {
-        // Finish any job that completes before t first.
-        while let Some(next_end) = self.earliest_end() {
-            if next_end > t {
+        // Process every timeline event at or before t first: completions,
+        // deferred releases, and fault-window boundaries.
+        while let Some((et, _)) = self.next_event() {
+            if et > t {
                 break;
             }
-            self.complete_next();
+            self.advance_next_event();
         }
         assert!(t >= self.clock, "clock cannot move backwards");
         self.clock = t;
@@ -202,9 +255,16 @@ impl BatchSystem {
             self.record_order.push(jobid);
             crate::obs::count_machine(&self.machine, crate::obs::Ctr::JobsRejected, 1);
             if crate::obs::tracing() {
+                // outage bounces get their own instant so a chaos trace
+                // separates window rejections from validation failures
+                let what = if matches!(e, SubmitError::Outage { .. }) {
+                    "outage"
+                } else {
+                    "reject"
+                };
                 crate::obs::trace::instant(
                     &self.machine,
-                    "reject",
+                    what,
                     self.clock,
                     crate::obs::trace::args(&[
                         ("jobid", jobid.to_string()),
@@ -227,12 +287,77 @@ impl BatchSystem {
                 nodes: spec.nodes,
                 walltime_limit_s: spec.walltime_limit_s,
                 payload,
+                immune: false,
             });
         self.schedule_partition(&partition);
         Ok(jobid)
     }
 
+    /// Submit a job that joins the queue only at `release` (clamped to
+    /// now). This is the retry path around outage windows: validation
+    /// runs against resources and accounts but deliberately skips the
+    /// outage gate — the release instant is chosen to land past it.
+    pub fn submit_deferred(
+        &mut self,
+        release: SimTime,
+        spec: JobSpec,
+        payload: JobPayload,
+    ) -> Result<u64, SubmitError> {
+        let release = release.max(self.clock);
+        let jobid = self.next_jobid;
+        self.next_jobid += 1;
+        let mut record = JobRecord {
+            jobid,
+            spec: spec.clone(),
+            state: JobState::Pending,
+            submit_time: release,
+            start_time: None,
+            end_time: None,
+            result: None,
+        };
+        if let Err(e) = self.validate_resources(&spec) {
+            record.state = JobState::Rejected;
+            record.result = Some(JobResult::failure(&e.to_string()));
+            self.records.insert(jobid, record);
+            self.record_order.push(jobid);
+            crate::obs::count_machine(&self.machine, crate::obs::Ctr::JobsRejected, 1);
+            return Err(e);
+        }
+        self.records.insert(jobid, record);
+        self.record_order.push(jobid);
+        crate::obs::count_machine(&self.machine, crate::obs::Ctr::JobsSubmitted, 1);
+        if release <= self.clock {
+            let partition = spec.partition.clone();
+            self.partitions
+                .get_mut(&partition)
+                .expect("validated partition exists")
+                .queue
+                .push_back(PendingJob {
+                    jobid,
+                    nodes: spec.nodes,
+                    walltime_limit_s: spec.walltime_limit_s,
+                    payload,
+                    immune: false,
+                });
+            self.schedule_partition(&partition);
+        } else {
+            self.deferred.push(DeferredJob {
+                release,
+                jobid,
+                payload,
+            });
+        }
+        Ok(jobid)
+    }
+
     fn validate(&self, spec: &JobSpec) -> Result<(), SubmitError> {
+        if let Some(until) = self.fault.as_ref().and_then(|p| p.outage_until(self.clock)) {
+            return Err(SubmitError::Outage { until });
+        }
+        self.validate_resources(spec)
+    }
+
+    fn validate_resources(&self, spec: &JobSpec) -> Result<(), SubmitError> {
         self.accounts
             .authorize(&spec.account, &spec.budget, &spec.partition)?;
         let part = self
@@ -247,6 +372,35 @@ impl BatchSystem {
             });
         }
         Ok(())
+    }
+
+    /// Move deferred submissions whose release instant has arrived into
+    /// their partition queues (jobid order for determinism).
+    fn release_due_deferred(&mut self) {
+        let mut due = Vec::new();
+        let mut i = 0;
+        while i < self.deferred.len() {
+            if self.deferred[i].release <= self.clock {
+                due.push(self.deferred.swap_remove(i));
+            } else {
+                i += 1;
+            }
+        }
+        due.sort_by_key(|d| d.jobid);
+        for d in due {
+            let spec = self.records[&d.jobid].spec.clone();
+            self.partitions
+                .get_mut(&spec.partition)
+                .expect("validated partition exists")
+                .queue
+                .push_back(PendingJob {
+                    jobid: d.jobid,
+                    nodes: spec.nodes,
+                    walltime_limit_s: spec.walltime_limit_s,
+                    payload: d.payload,
+                    immune: false,
+                });
+        }
     }
 
     /// Schedule every partition (sorted by name for determinism). Only
@@ -271,6 +425,13 @@ impl BatchSystem {
     /// its shadow: a stream of small later submissions can no longer
     /// starve it.
     fn schedule_partition(&mut self, pname: &str) {
+        // Frozen scheduler: during an outage the pending queues hold
+        // still; during maintenance the partitions drain — running jobs
+        // finish (complete_next stays live) but nothing new starts until
+        // the window boundary re-runs the scheduler.
+        if self.fault.as_ref().is_some_and(|p| p.frozen(self.clock)) {
+            return;
+        }
         let Some(part) = self.partitions.get_mut(pname) else {
             return;
         };
@@ -279,7 +440,7 @@ impl BatchSystem {
         while let Some(head) = queue.front() {
             if head.nodes <= self.partitions[pname].free_nodes {
                 let job = queue.pop_front().expect("nonempty");
-                self.start_job(job.jobid, job.payload, false);
+                self.start_job(job.jobid, job.payload, false, job.immune);
             } else {
                 break;
             }
@@ -318,7 +479,7 @@ impl BatchSystem {
                         spare -= cand.nodes;
                     }
                     let job = queue.remove(i).expect("index in bounds");
-                    self.start_job(job.jobid, job.payload, true);
+                    self.start_job(job.jobid, job.payload, true, job.immune);
                     // the next candidate shifted into position i
                 } else {
                     i += 1;
@@ -355,7 +516,7 @@ impl BatchSystem {
         (SimTime(i64::MAX), 0)
     }
 
-    fn start_job(&mut self, jobid: u64, payload: JobPayload, backfilled: bool) {
+    fn start_job(&mut self, jobid: u64, payload: JobPayload, backfilled: bool, immune: bool) {
         let spec = self.records[&jobid].spec.clone();
         let part = self.partitions.get_mut(&spec.partition).unwrap();
         part.free_nodes -= spec.nodes;
@@ -370,35 +531,100 @@ impl BatchSystem {
         };
         let result = payload(&ctx);
         let app_duration = result.duration_s + self.launch_overhead_s;
-        let (state, duration) = if app_duration > spec.walltime_limit_s as f64 {
+        let (mut state, duration) = if app_duration > spec.walltime_limit_s as f64 {
             (JobState::Timeout, spec.walltime_limit_s as f64)
         } else if result.success {
             (JobState::Completed, app_duration)
         } else {
             (JobState::Failed, app_duration)
         };
-        let end = start.add_secs(duration.ceil() as i64);
+        let mut end_secs = duration.ceil() as i64;
+        // Seeded fault injection (DESIGN.md §14): a job that would have
+        // completed may be struck mid-run. The decision is a pure
+        // function of (plan seed, machine, jobid), so submission-order
+        // permutations cannot reshape anyone's fate; requeued twins are
+        // immune so preemption cannot cascade.
+        let mut requeued_as: Option<u64> = None;
+        if state == JobState::Completed && !immune {
+            if let Some(d) = self
+                .fault
+                .as_ref()
+                .and_then(|p| p.decide(jobid, &spec.name, start))
+            {
+                end_secs = ((end_secs as f64) * d.strike_frac).ceil().max(1.0) as i64;
+                state = match d.kind {
+                    FaultKind::NodeFail => JobState::NodeFail,
+                    FaultKind::Preempt => JobState::Preempted,
+                };
+            }
+        }
+        let end = start.add_secs(end_secs);
+        if state == JobState::Preempted {
+            // Allocate the requeued twin now (keeping jobids monotone in
+            // allocation order, so the sacct dump stays sorted) but
+            // release it into the queue only when the preemption
+            // publishes at `end` — a requeued job can never start before
+            // the preemption instant. The twin carries the *original*
+            // payload result, so its measurement is byte-identical to an
+            // unpreempted replay of the same stream.
+            let twin = self.next_jobid;
+            self.next_jobid += 1;
+            self.records.insert(
+                twin,
+                JobRecord {
+                    jobid: twin,
+                    spec: spec.clone(),
+                    state: JobState::Pending,
+                    submit_time: end,
+                    start_time: None,
+                    end_time: None,
+                    result: None,
+                },
+            );
+            self.record_order.push(twin);
+            self.requeues.insert(jobid, (twin, result.clone()));
+            requeued_as = Some(twin);
+        }
         let rec = self.records.get_mut(&jobid).unwrap();
         rec.state = JobState::Running; // terminal state published at completion
         rec.start_time = Some(start);
         rec.end_time = Some(end);
-        rec.result = Some(if state == JobState::Timeout {
-            // A killed job reports nothing past the wall: the recorded
-            // duration is truncated to the limit and the metrics/files
-            // the payload "produced" after its death are dropped, so a
-            // timed-out run can never feed fictional measurements into
-            // tracking history or energy series. The replacement metrics
-            // flag the truncation for the analysis layer.
-            JobResult {
-                duration_s: result.duration_s.min(spec.walltime_limit_s as f64),
+        rec.result = Some(match state {
+            JobState::Timeout => {
+                // A killed job reports nothing past the wall: the recorded
+                // duration is truncated to the limit and the metrics/files
+                // the payload "produced" after its death are dropped, so a
+                // timed-out run can never feed fictional measurements into
+                // tracking history or energy series. The replacement metrics
+                // flag the truncation for the analysis layer.
+                JobResult {
+                    duration_s: result.duration_s.min(spec.walltime_limit_s as f64),
+                    success: false,
+                    metrics: Json::obj()
+                        .set("timeout", true)
+                        .set("walltime_limit_s", spec.walltime_limit_s),
+                    files: Vec::new(),
+                }
+            }
+            // Same honesty contract for faults: the struck run records
+            // only the truncated duration and the fault flag — the
+            // application metrics/files of the run that never finished
+            // are dropped and can never warm a cache or feed a gate.
+            JobState::NodeFail => JobResult {
+                duration_s: end_secs as f64,
+                success: false,
+                metrics: Json::obj().set("node_fail", true),
+                files: Vec::new(),
+            },
+            JobState::Preempted => JobResult {
+                duration_s: end_secs as f64,
                 success: false,
                 metrics: Json::obj()
-                    .set("timeout", true)
-                    .set("walltime_limit_s", spec.walltime_limit_s),
+                    .set("preempted", true)
+                    .set("requeued_as", requeued_as.expect("twin allocated above")),
                 files: Vec::new(),
-            }
-        } else {
-            result
+            },
+            _ => result,
         });
         let submit = rec.submit_time;
         if crate::obs::tracing() {
@@ -426,6 +652,31 @@ impl BatchSystem {
                     ("backfilled", backfilled.to_string()),
                 ]),
             );
+            match state {
+                JobState::NodeFail => crate::obs::trace::instant(
+                    &self.machine,
+                    "node-fail",
+                    end,
+                    crate::obs::trace::args(&[
+                        ("jobid", jobid.to_string()),
+                        ("job", spec.name.clone()),
+                    ]),
+                ),
+                JobState::Preempted => crate::obs::trace::instant(
+                    &self.machine,
+                    "preempt",
+                    end,
+                    crate::obs::trace::args(&[
+                        ("jobid", jobid.to_string()),
+                        ("job", spec.name.clone()),
+                        (
+                            "requeued_as",
+                            requeued_as.expect("twin allocated above").to_string(),
+                        ),
+                    ]),
+                ),
+                _ => {}
+            }
         }
         if crate::obs::metrics_on() {
             use crate::obs::{Ctr, Hist};
@@ -436,6 +687,12 @@ impl BatchSystem {
             match state {
                 JobState::Timeout => crate::obs::count_machine(&self.machine, Ctr::JobsTimeout, 1),
                 JobState::Failed => crate::obs::count_machine(&self.machine, Ctr::JobsFailed, 1),
+                JobState::NodeFail => {
+                    crate::obs::count_machine(&self.machine, Ctr::JobsNodeFailed, 1)
+                }
+                JobState::Preempted => {
+                    crate::obs::count_machine(&self.machine, Ctr::JobsPreempted, 1)
+                }
                 _ => {}
             }
             crate::obs::observe(Hist::QueueWaitS, start.0 - submit.0);
@@ -474,6 +731,37 @@ impl BatchSystem {
         if let Some(p) = self.partitions.get_mut(&partition) {
             p.free_nodes += nodes;
         }
+        if terminal == JobState::Preempted {
+            // The preemption just published (clock == preemption
+            // instant): release the requeued twin into the queue now.
+            // The trailing schedule_partition starts it causally.
+            if let Some((twin, result)) = self.requeues.remove(&jobid) {
+                let spec = self.records[&twin].spec.clone();
+                self.partitions
+                    .get_mut(&partition)
+                    .expect("partition still exists")
+                    .queue
+                    .push_back(PendingJob {
+                        jobid: twin,
+                        nodes: spec.nodes,
+                        walltime_limit_s: spec.walltime_limit_s,
+                        payload: Box::new(move |_| result),
+                        immune: true,
+                    });
+                crate::obs::count_machine(&self.machine, crate::obs::Ctr::JobsRequeued, 1);
+                if crate::obs::tracing() {
+                    crate::obs::trace::instant(
+                        &self.machine,
+                        "requeue",
+                        end_time,
+                        crate::obs::trace::args(&[
+                            ("jobid", twin.to_string()),
+                            ("preempted", jobid.to_string()),
+                        ]),
+                    );
+                }
+            }
+        }
         if let Some(log) = self.event_log.as_mut() {
             log.push(jobid);
         }
@@ -493,10 +781,15 @@ impl BatchSystem {
         Some(jobid)
     }
 
-    /// Run the event loop until no job is pending or running.
+    /// Run the event loop until no job is pending or running. Fault
+    /// aware: deferred releases and window boundaries are events too, so
+    /// a frozen queue thaws and a deferred retry launches before the
+    /// machine is declared idle.
     pub fn run_until_idle(&mut self) {
         self.schedule_all();
-        while self.complete_next().is_some() {}
+        while self.next_event().is_some() {
+            self.advance_next_event();
+        }
         debug_assert!(self.running.is_empty());
     }
 
@@ -508,20 +801,67 @@ impl BatchSystem {
     // earliest machine, advance it by exactly one event, and wake the
     // pipeline that was waiting on the completed job.
 
-    /// Simulated time of this machine's next completion event, if any
-    /// job is running. Pending jobs never stall silently: a submission
-    /// that fits starts immediately (scheduling runs on submit and on
-    /// every completion), so `None` means the machine is idle.
-    pub fn peek_next_event(&self) -> Option<SimTime> {
-        self.earliest_end()
+    /// The machine's next timeline event: the earliest of (a) a running
+    /// job's completion, (b) a deferred submission's release, (c) a
+    /// fault-window boundary that could thaw or freeze scheduling.
+    /// Boundaries only count while something is pending or deferred —
+    /// an idle machine inside a window has no event. Ties dispatch
+    /// completions first, then releases, then boundaries.
+    fn next_event(&self) -> Option<(SimTime, EventKind)> {
+        let mut best: Option<(SimTime, EventKind)> = None;
+        if let Some(t) = self.earliest_end() {
+            best = Some((t, EventKind::Completion));
+        }
+        if let Some(t) = self.deferred.iter().map(|d| d.release).min() {
+            if best.map_or(true, |(bt, _)| t < bt) {
+                best = Some((t, EventKind::Release));
+            }
+        }
+        if self.pending_count() > 0 || !self.deferred.is_empty() {
+            if let Some(t) = self
+                .fault
+                .as_ref()
+                .and_then(|p| p.next_boundary_after(self.clock))
+            {
+                if best.map_or(true, |(bt, _)| t < bt) {
+                    best = Some((t, EventKind::Boundary));
+                }
+            }
+        }
+        best
     }
 
-    /// Complete the single earliest-finishing running job, advancing
-    /// this machine's clock to its end time, charging accounting, and
-    /// starting any pending jobs that now fit. Returns the completed
-    /// job id, or `None` when the machine is idle.
+    /// Simulated time of this machine's next event, if any. Without an
+    /// armed fault plan, pending jobs never stall silently: a submission
+    /// that fits starts immediately (scheduling runs on submit and on
+    /// every completion), so `None` means the machine is idle. With one,
+    /// deferred releases and window boundaries are events too.
+    pub fn peek_next_event(&self) -> Option<SimTime> {
+        self.next_event().map(|(t, _)| t)
+    }
+
+    /// Advance this machine by exactly one timeline event. For a
+    /// completion: publish the terminal state, charge accounting, start
+    /// pending jobs that now fit, and return the completed jobid. For a
+    /// deferred release or a window boundary: move the clock, re-run the
+    /// scheduler, and return `None` — both drivers treat a `None` with a
+    /// changed clock as a boundary event, observing any resulting
+    /// completions through later events.
     pub fn advance_next_event(&mut self) -> Option<u64> {
-        self.complete_next()
+        match self.next_event()? {
+            (_, EventKind::Completion) => self.complete_next(),
+            (t, EventKind::Release) => {
+                self.clock = self.clock.max(t);
+                self.release_due_deferred();
+                self.schedule_all();
+                None
+            }
+            (t, EventKind::Boundary) => {
+                self.clock = self.clock.max(t);
+                self.schedule_all();
+                None
+            }
+        }
     }
 
     /// Turn completion logging on or off, returning the previous state
@@ -1135,5 +1475,182 @@ mod tests {
         let bs = for_machine(jedi, AccountManager::open("a", "b", 1.0));
         assert_eq!(bs.total_nodes("all"), Some(48));
         assert!(bs.total_nodes("devel").unwrap() < 48);
+    }
+
+    // ---- fault model (DESIGN.md §14) ---------------------------------
+
+    use super::super::fault::{FaultPlan, ForcedFault, Window};
+
+    fn spec1() -> JobSpec {
+        JobSpec {
+            nodes: 1,
+            account: "p".into(),
+            budget: "b".into(),
+            partition: "all".into(),
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn node_fail_truncates_and_drops_metrics() {
+        let mut bs = sys();
+        bs.set_fault_plan(Some(FaultPlan {
+            node_fail_rate: 1.0,
+            ..FaultPlan::seeded("jedi", 7)
+        }));
+        let id = bs
+            .submit(
+                spec1(),
+                Box::new(|_ctx| JobResult {
+                    duration_s: 100.0,
+                    success: true,
+                    metrics: Json::obj().set("tts", 100.0),
+                    files: vec![("app.out".into(), "time: 100".into())],
+                }),
+            )
+            .unwrap();
+        bs.run_until_idle();
+        let rec = bs.record(id).unwrap();
+        assert_eq!(rec.state, JobState::NodeFail);
+        let dur = rec.end_time.unwrap().0 - rec.start_time.unwrap().0;
+        assert!((1..102).contains(&dur), "struck mid-run, got {dur}");
+        let result = rec.result.as_ref().unwrap();
+        assert!(!result.success);
+        // honesty contract: the dead run's measurements are gone
+        assert!(result.metrics.f64_of("tts").is_none());
+        assert_eq!(result.metrics.bool_of("node_fail"), Some(true));
+        assert!(result.files.is_empty());
+    }
+
+    #[test]
+    fn preempted_job_requeues_with_original_result() {
+        let mut bs = sys();
+        bs.set_fault_plan(Some(FaultPlan {
+            preempt_rate: 1.0,
+            ..FaultPlan::seeded("jedi", 7)
+        }));
+        let id = bs
+            .submit(
+                spec1(),
+                Box::new(|_ctx| JobResult {
+                    duration_s: 100.0,
+                    success: true,
+                    metrics: Json::obj().set("tts", 100.0),
+                    files: vec![("app.out".into(), "time: 100".into())],
+                }),
+            )
+            .unwrap();
+        bs.run_until_idle();
+        let rec = bs.record(id).unwrap();
+        assert_eq!(rec.state, JobState::Preempted);
+        let result = rec.result.as_ref().unwrap();
+        assert!(!result.success);
+        let twin = result.metrics.u64_of("requeued_as").unwrap();
+        assert!(twin > id);
+        // the requeued twin is immune, starts after the preemption
+        // instant, and carries the original (unclipped) measurement
+        let trec = bs.record(twin).unwrap();
+        assert_eq!(trec.state, JobState::Completed);
+        assert!(trec.submit_time >= rec.end_time.unwrap());
+        assert!(trec.start_time.unwrap() >= rec.end_time.unwrap());
+        let tres = trec.result.as_ref().unwrap();
+        assert_eq!(tres.metrics.f64_of("tts"), Some(100.0));
+        assert_eq!(tres.files.len(), 1);
+        // sacct dump stays jobid-sorted with the twin appended
+        let listed: Vec<u64> = bs.records().iter().map(|r| r.jobid).collect();
+        let mut sorted = listed.clone();
+        sorted.sort_unstable();
+        assert_eq!(listed, sorted);
+    }
+
+    #[test]
+    fn outage_rejects_then_deferred_retry_lands() {
+        let mut bs = sys();
+        bs.set_fault_plan(Some(FaultPlan {
+            outages: vec![Window::new(SimTime(100), SimTime(200))],
+            ..FaultPlan::quiet("jedi")
+        }));
+        bs.advance_clock_to(SimTime(150));
+        let err = bs.submit(spec1(), quick_payload(10.0, true)).unwrap_err();
+        assert!(matches!(err, SubmitError::Outage { until } if until == SimTime(200)));
+        // the bounce leaves an honest Rejected record
+        assert_eq!(
+            bs.records()
+                .iter()
+                .filter(|r| r.state == JobState::Rejected)
+                .count(),
+            1
+        );
+        // deferred retry past the window runs to completion
+        let id = bs
+            .submit_deferred(SimTime(230), spec1(), quick_payload(10.0, true))
+            .unwrap();
+        assert_eq!(bs.job_state(id), Some(JobState::Pending));
+        bs.run_until_idle();
+        let rec = bs.record(id).unwrap();
+        assert_eq!(rec.state, JobState::Completed);
+        assert_eq!(rec.submit_time, SimTime(230));
+        assert!(rec.start_time.unwrap() >= SimTime(230));
+    }
+
+    #[test]
+    fn maintenance_drains_partition_until_boundary() {
+        let mut bs = sys();
+        let maint = Window::new(SimTime(50), SimTime(500));
+        bs.set_fault_plan(Some(FaultPlan {
+            maintenance: vec![maint],
+            ..FaultPlan::quiet("jedi")
+        }));
+        // started before the window: runs to completion (drain)
+        let running = bs.submit(spec1(), quick_payload(100.0, true)).unwrap();
+        bs.advance_clock_to(SimTime(60));
+        // submitted during the window: accepted but frozen
+        let frozen = bs.submit(spec1(), quick_payload(10.0, true)).unwrap();
+        assert_eq!(bs.pending_count(), 1);
+        bs.run_until_idle();
+        assert_eq!(bs.record(running).unwrap().state, JobState::Completed);
+        let rec = bs.record(frozen).unwrap();
+        assert_eq!(rec.state, JobState::Completed);
+        assert!(
+            rec.start_time.unwrap() >= maint.end,
+            "job started {:?}, inside the maintenance window",
+            rec.start_time.unwrap()
+        );
+    }
+
+    #[test]
+    fn quiet_plan_is_byte_inert() {
+        let run = |armed: bool| -> Vec<(u64, JobState, i64, i64)> {
+            let mut bs = sys();
+            if armed {
+                bs.set_fault_plan(Some(FaultPlan::quiet("jedi")));
+            }
+            for secs in [100.0, 50.0, 900.0, 20.0] {
+                bs.submit(
+                    JobSpec {
+                        nodes: 3,
+                        account: "p".into(),
+                        budget: "b".into(),
+                        partition: "all".into(),
+                        ..Default::default()
+                    },
+                    quick_payload(secs, true),
+                )
+                .unwrap();
+            }
+            bs.run_until_idle();
+            bs.records()
+                .iter()
+                .map(|r| {
+                    (
+                        r.jobid,
+                        r.state,
+                        r.start_time.unwrap().0,
+                        r.end_time.unwrap().0,
+                    )
+                })
+                .collect()
+        };
+        assert_eq!(run(false), run(true));
     }
 }

@@ -1,0 +1,257 @@
+//! The chaos-fleet scenario (DESIGN.md §14): a multi-day collection
+//! campaign under an armed seeded fault model.
+//!
+//! One [`ChaosScenario`] value describes everything adversarial about a
+//! campaign — per-machine node-failure and preemption rates, a scheduler
+//! outage, a maintenance drain, a fleet-wide stack-update day with a
+//! correlated performance shift, and a forced-flaky window for one app —
+//! all derived purely from `(seed, machine, day)`. Arming the scenario
+//! on a [`World`] installs per-machine [`FaultPlan`]s on the batch
+//! systems and plants the stack-update [`SystemEvent`]s in the cluster
+//! event log; the campaign itself is the ordinary concurrent collection
+//! runner, so every fault flows through the same O(log n) event heap
+//! that fault-free campaigns use and replays byte-identically under
+//! `drive` and `drive_reference`.
+//!
+//! The inert variant ([`ChaosScenario::quiet`]) arms zero rates and no
+//! windows: contractually byte-identical to never arming anything
+//! (asserted by `tests/integration_chaos.rs`).
+
+use crate::cluster::{EventLog, SystemEvent};
+use crate::coordinator::event_loop::PipelineTask;
+use crate::coordinator::{collection, CollectionSummary, World};
+use crate::scheduler::{FaultKind, FaultPlan, ForcedFault, Window};
+use crate::util::fnv1a;
+use crate::workloads::portfolio::{self, PortfolioApp};
+
+/// A fully-specified chaos campaign: which apps run where for how long,
+/// and every fault the fleet suffers along the way.
+#[derive(Debug, Clone)]
+pub struct ChaosScenario {
+    pub apps: Vec<PortfolioApp>,
+    pub machines: Vec<String>,
+    pub days: i64,
+    pub seed: u64,
+    /// Per-start node-failure probability on every machine.
+    pub node_fail_rate: f64,
+    /// Per-start preemption probability on every machine.
+    pub preempt_rate: f64,
+    /// Day of the scheduler outage on `machines[0]` (02:00–04:00);
+    /// negative = no outage.
+    pub outage_day: i64,
+    /// Day `machines[0]` drains for maintenance (02:00–08:00);
+    /// negative = no maintenance.
+    pub maintenance_day: i64,
+    /// Fleet-wide stack-update day (negative = none): every metric
+    /// class on every machine shifts to `stack_update_factor`, changing
+    /// the environment fingerprint — and with it every cache key —
+    /// everywhere at once.
+    pub stack_update_day: i64,
+    pub stack_update_factor: f64,
+    /// App made flaky on a forced schedule: every start inside
+    /// `[flaky_from_day, flaky_from_day + flaky_days)` node-fails.
+    /// Empty app name or non-positive `flaky_days` = no forced window.
+    pub flaky_app: String,
+    pub flaky_from_day: i64,
+    pub flaky_days: i64,
+}
+
+impl ChaosScenario {
+    /// The standard 30-day chaos campaign: `n` portfolio apps spread
+    /// over two machines, moderate fault rates, one outage, one
+    /// maintenance drain, one fleet-wide stack-update day, and one app
+    /// forced flaky for a week. App-level `failure_rate` is zeroed so
+    /// every failure in the campaign is attributable to the fault plan.
+    pub fn generate(n: usize, days: i64, seed: u64) -> ChaosScenario {
+        let mut apps = portfolio::generate(n, seed);
+        for a in &mut apps {
+            a.failure_rate = 0.0;
+        }
+        let flaky_app = apps.first().map(|a| a.name.clone()).unwrap_or_default();
+        ChaosScenario {
+            apps,
+            machines: vec!["jedi".into(), "jupiter".into()],
+            days,
+            seed,
+            node_fail_rate: 0.08,
+            preempt_rate: 0.05,
+            outage_day: days / 3,
+            maintenance_day: 2 * days / 3,
+            stack_update_day: days / 2,
+            stack_update_factor: 0.85,
+            flaky_app,
+            flaky_from_day: days / 4,
+            flaky_days: 7,
+        }
+    }
+
+    /// The inert scenario: same apps and schedule, zero rates, no
+    /// windows, no events. Arming it must change no byte of anything.
+    pub fn quiet(n: usize, days: i64, seed: u64) -> ChaosScenario {
+        ChaosScenario {
+            node_fail_rate: 0.0,
+            preempt_rate: 0.0,
+            outage_day: -1,
+            maintenance_day: -1,
+            stack_update_day: -1,
+            flaky_app: String::new(),
+            flaky_days: 0,
+            ..ChaosScenario::generate(n, days, seed)
+        }
+    }
+
+    /// The fault plan this scenario arms on `machine` — a pure function
+    /// of the scenario, so re-arming a replay reproduces it exactly.
+    pub fn fault_plan(&self, machine: &str) -> FaultPlan {
+        let mut plan = FaultPlan::seeded(machine, self.seed ^ fnv1a(b"chaos"));
+        plan.node_fail_rate = self.node_fail_rate;
+        plan.preempt_rate = self.preempt_rate;
+        // outage + maintenance strike the first machine only: the rest
+        // of the fleet keeps running, which is what makes the campaign's
+        // degradation graceful rather than total
+        if Some(machine) == self.machines.first().map(String::as_str) {
+            if self.outage_day >= 0 {
+                plan.outages.push(Window::on_day(self.outage_day, 2, 4));
+            }
+            if self.maintenance_day >= 0 {
+                plan.maintenance
+                    .push(Window::on_day(self.maintenance_day, 2, 8));
+            }
+        }
+        if !self.flaky_app.is_empty() && self.flaky_days > 0 {
+            plan.forced.push(ForcedFault {
+                name_contains: self.flaky_app.clone(),
+                window: Window::new(
+                    crate::util::timeutil::SimTime::from_days(self.flaky_from_day),
+                    crate::util::timeutil::SimTime::from_days(
+                        self.flaky_from_day + self.flaky_days,
+                    ),
+                ),
+                kind: FaultKind::NodeFail,
+            });
+        }
+        plan
+    }
+
+    /// The stack-update events this scenario plants (possibly none).
+    pub fn system_events(&self) -> Vec<SystemEvent> {
+        if self.stack_update_day < 0 {
+            return Vec::new();
+        }
+        let machines: Vec<&str> = self.machines.iter().map(String::as_str).collect();
+        EventLog::stack_update(&machines, self.stack_update_day, self.stack_update_factor)
+    }
+
+    /// Arm the scenario on a world: install each machine's fault plan
+    /// and plant the stack-update events. Idempotent per world.
+    pub fn arm(&self, world: &mut World) {
+        for machine in &self.machines {
+            if let Some(bs) = world.batch.get_mut(machine) {
+                bs.set_fault_plan(Some(self.fault_plan(machine)));
+            }
+        }
+        for ev in self.system_events() {
+            world.cluster.events.push(ev);
+        }
+    }
+}
+
+/// Onboard the scenario's apps, arm its faults, and run the campaign
+/// through the concurrent event-loop core.
+pub fn run_chaos_campaign(world: &mut World, scenario: &ChaosScenario) -> CollectionSummary {
+    run_chaos_campaign_with(world, scenario, crate::coordinator::event_loop::drive)
+}
+
+/// [`run_chaos_campaign`] with a pluggable event loop, so the headline
+/// chaos harness can replay the same campaign through `drive` and
+/// `drive_reference` and require byte-identical worlds.
+pub fn run_chaos_campaign_with(
+    world: &mut World,
+    scenario: &ChaosScenario,
+    drive: fn(&mut World, Vec<PipelineTask>) -> Vec<u64>,
+) -> CollectionSummary {
+    let machines: Vec<&str> = scenario.machines.iter().map(String::as_str).collect();
+    collection::onboard_multi(world, &scenario.apps, &machines, "all");
+    scenario.arm(world);
+    collection::run_campaign_concurrent_with(world, &scenario.apps, &machines, scenario.days, drive)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scheduler::JobState;
+
+    #[test]
+    fn scenario_is_deterministic() {
+        let a = ChaosScenario::generate(6, 30, 77);
+        let b = ChaosScenario::generate(6, 30, 77);
+        assert_eq!(a.apps.len(), b.apps.len());
+        for (m, n) in a.machines.iter().zip(&b.machines) {
+            assert_eq!(m, n);
+            assert_eq!(format!("{:?}", a.fault_plan(m)), format!("{:?}", b.fault_plan(n)));
+        }
+        assert_eq!(a.system_events(), b.system_events());
+        // every app failure is attributable to the fault plan
+        assert!(a.apps.iter().all(|app| app.failure_rate == 0.0));
+    }
+
+    #[test]
+    fn windows_land_on_the_first_machine_only() {
+        let s = ChaosScenario::generate(4, 30, 5);
+        let first = s.fault_plan(&s.machines[0]);
+        let other = s.fault_plan(&s.machines[1]);
+        assert_eq!(first.outages.len(), 1);
+        assert_eq!(first.maintenance.len(), 1);
+        assert!(other.outages.is_empty());
+        assert!(other.maintenance.is_empty());
+        // rates and the forced-flaky window are fleet-wide
+        assert_eq!(other.node_fail_rate, s.node_fail_rate);
+        assert_eq!(other.forced.len(), 1);
+    }
+
+    #[test]
+    fn quiet_scenario_arms_nothing() {
+        let s = ChaosScenario::quiet(4, 30, 5);
+        for m in &s.machines {
+            let p = s.fault_plan(m);
+            assert_eq!(p.node_fail_rate, 0.0);
+            assert_eq!(p.preempt_rate, 0.0);
+            assert!(p.outages.is_empty() && p.maintenance.is_empty() && p.forced.is_empty());
+        }
+        assert!(s.system_events().is_empty());
+    }
+
+    #[test]
+    fn short_armed_campaign_faults_and_degrades_gracefully() {
+        let mut s = ChaosScenario::generate(4, 4, 13);
+        s.node_fail_rate = 0.2;
+        s.preempt_rate = 0.1;
+        s.outage_day = -1;
+        s.maintenance_day = -1;
+        s.stack_update_day = -1;
+        // force the flaky app to node-fail on every start, all 4 days:
+        // its pipelines fail *deterministically* (retries are struck too)
+        s.flaky_from_day = 0;
+        s.flaky_days = 4;
+        let mut world = World::new(13);
+        let summary = run_chaos_campaign(&mut world, &s);
+        // every pipeline ran to a recorded verdict — failed runs are
+        // recorded as failed, never dropped
+        assert_eq!(summary.pipelines_run, 16);
+        assert!(summary.pipelines_succeeded >= 1);
+        assert!(
+            summary.pipelines_succeeded <= summary.pipelines_run - s.days as usize,
+            "the forced-flaky app's daily pipelines must all fail"
+        );
+        let faults: usize = s
+            .machines
+            .iter()
+            .filter_map(|m| world.batch.get(m))
+            .flat_map(|b| b.records())
+            .filter(|r| {
+                matches!(r.state, JobState::NodeFail | JobState::Preempted)
+            })
+            .count();
+        assert!(faults > 0, "armed campaign must actually fault");
+    }
+}

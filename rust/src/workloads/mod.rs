@@ -10,6 +10,7 @@
 //! portfolio ([`portfolio`]).
 
 pub mod calibration;
+pub mod chaos;
 pub mod graph500;
 pub mod logmap;
 pub mod onboarding;

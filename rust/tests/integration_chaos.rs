@@ -1,0 +1,423 @@
+//! Campaign-scale adversarial harness for the seeded fault model
+//! (DESIGN.md §14). Four headline properties:
+//!
+//! 1. **Cache soundness under partial failure** — a run interrupted
+//!    mid-pipeline never leaves state a later identical run could warm-hit
+//!    from, and a fleet-wide stack-update day invalidates every cached
+//!    execution on every affected machine at once.
+//! 2. **Gates under correlated shifts** — the regression gate flags a
+//!    planted fleet-wide stack regression on its exact day on every
+//!    machine, while the unchanged control stays green (per-app noise is
+//!    not enough to trip it).
+//! 3. **Maturity under flakiness** — an app the fault plan makes flaky
+//!    (forced node-failure window, source untouched) demotes on the exact
+//!    day its windowed evidence decays, and re-earns its level on
+//!    schedule once the window closes.
+//! 4. **Determinism under chaos** — a 30-day armed chaos campaign (node
+//!    failures, preemption + requeue, a scheduler outage, a maintenance
+//!    drain, a stack-update day) replays byte-identically across replays,
+//!    under `drive` vs `drive_reference`, and under seeded
+//!    submission-order permutations; and the all-zero-rate plan is
+//!    byte-identical to never arming anything.
+
+use exacb::ci::Trigger;
+use exacb::cluster::EventLog;
+use exacb::coordinator::{collection, event_loop, BenchmarkRepo, World};
+use exacb::scheduler::{FaultKind, FaultPlan, ForcedFault, JobState, Window};
+use exacb::tracking;
+use exacb::util::timeutil::SimTime;
+use exacb::workloads::chaos::{self, ChaosScenario};
+use exacb::workloads::portfolio;
+use exacb::workloads::regression::RegressionScenario;
+
+/// Every `sacct` field of every job on every machine, in jobid order.
+fn sacct_dump(world: &World) -> String {
+    let mut out = String::new();
+    for (name, bs) in &world.batch {
+        for r in bs.records_iter() {
+            out.push_str(&format!(
+                "{name} {} {} {:?} {:?} {:?} {} {} {:?}\n",
+                r.jobid,
+                r.state.name(),
+                r.submit_time,
+                r.start_time,
+                r.end_time,
+                r.spec.partition,
+                r.spec.nodes,
+                r.result
+                    .as_ref()
+                    .map(|res| (res.success, res.duration_s)),
+            ));
+        }
+    }
+    out
+}
+
+/// Every file on every branch of every repository store.
+fn store_dump(world: &World) -> String {
+    let mut out = String::new();
+    for (name, repo) in &world.repos {
+        let mut branches = repo.store.branches();
+        branches.sort_unstable();
+        for branch in branches {
+            for (path, content) in repo.store.read_all(branch, "") {
+                out.push_str(&format!("{name} {branch} {path} {}\n", content.len()));
+                out.push_str(&content);
+                out.push('\n');
+            }
+        }
+    }
+    out
+}
+
+fn fault_records(world: &World) -> usize {
+    world
+        .batch
+        .values()
+        .flat_map(|b| b.records_iter())
+        .filter(|r| matches!(r.state, JobState::NodeFail | JobState::Preempted))
+        .count()
+}
+
+// ---- 1. cache soundness under partial failure -------------------------
+
+/// Satellite pin: a pipeline interrupted while its execute job is still
+/// in flight must leave nothing a later identical run could warm-hit
+/// from — run- and step-level cache entries are written only after a
+/// successful collect, never at submission.
+#[test]
+fn interrupted_execution_never_warm_hits() {
+    let mut world = World::new(41);
+    world.enable_cache();
+    world.add_repo(BenchmarkRepo::logmap_example("jedi", "all"));
+    world.advance_to(SimTime::from_days(0).add_secs(3 * 3600));
+
+    // start a pipeline and abandon it at its first await: the execute
+    // job is submitted (and will even complete inside the scheduler),
+    // but the step is never collected
+    let mut task = world.begin_pipeline("logmap", Trigger::Manual).unwrap();
+    match task.poll(&mut world, None) {
+        event_loop::TaskPoll::Waiting { .. } => {}
+        other => panic!("expected the pipeline to block on its execute job, got {other:?}"),
+    }
+    drop(task); // interruption: the run dies mid-pipeline
+    world.batch.get_mut("jedi").unwrap().run_until_idle();
+    let stats = world.cache_stats();
+    assert_eq!(
+        stats.inserts, 0,
+        "an uncollected execution must not have written cache entries"
+    );
+    let jobs_before = world.batch.get("jedi").unwrap().records().len();
+    assert!(jobs_before > 0, "the interrupted run submitted its job");
+
+    // an identical fresh run must be a cold miss — it re-executes
+    world.add_repo(BenchmarkRepo::logmap_example("jedi", "all"));
+    let pid = world.run_pipeline("logmap", Trigger::Manual).unwrap();
+    assert!(world.pipeline(pid).unwrap().succeeded());
+    let stats = world.cache_stats();
+    assert_eq!(
+        stats.hits, 0,
+        "fresh run warm-hit state recorded by an interrupted pipeline"
+    );
+    assert!(
+        world.batch.get("jedi").unwrap().records().len() > jobs_before,
+        "fresh run must re-submit, not replay"
+    );
+
+    // sanity: caching itself works — a *completed* run is replayable
+    let pid = world.run_pipeline("logmap", Trigger::Manual).unwrap();
+    assert!(world.pipeline(pid).unwrap().succeeded());
+    assert!(
+        world.cache_stats().hits > 0,
+        "completed runs must warm-hit (otherwise the miss above proves nothing)"
+    );
+}
+
+/// A stack-update day shifts the environment fingerprint of every
+/// machine at once: every cached execution on every affected app is
+/// invalidated in the same campaign day — no stale replay against the
+/// new stack.
+#[test]
+fn stack_update_invalidates_caches_fleet_wide() {
+    let machines = ["jedi", "jupiter"];
+    let apps = portfolio::generate(2, 51);
+    let mut world = World::new(51);
+    world.enable_cache();
+    let assignments = collection::onboard_multi(&mut world, &apps, &machines, "all");
+    assert_eq!(assignments.len(), 2);
+
+    let run_day = |world: &mut World, day: i64| {
+        world.advance_to(SimTime::from_days(day).add_secs(3 * 3600));
+        for (app, _) in &assignments {
+            let pid = world.run_pipeline(app, Trigger::Scheduled).unwrap();
+            assert!(world.pipeline(pid).unwrap().succeeded(), "{app} day {day}");
+        }
+    };
+    let jobs_total =
+        |world: &World| -> usize { world.batch.values().map(|b| b.records().len()).sum() };
+
+    run_day(&mut world, 0); // cold
+    let cold_jobs = jobs_total(&world);
+    assert!(cold_jobs > 0);
+
+    run_day(&mut world, 1); // warm: unchanged inputs replay everywhere
+    let warm_hits = world.cache_stats().hits;
+    assert!(warm_hits > 0, "day 1 must replay from cache");
+    assert_eq!(jobs_total(&world), cold_jobs, "warm day must not submit");
+
+    // day 2: the stack updates fleet-wide — every machine, every class
+    for ev in EventLog::stack_update(&machines, 2, 0.85) {
+        world.cluster.events.push(ev);
+    }
+    run_day(&mut world, 2);
+    assert_eq!(
+        world.cache_stats().hits,
+        warm_hits,
+        "no execution may warm-hit across a stack update"
+    );
+    let jobs_after = jobs_total(&world);
+    assert!(
+        jobs_after > cold_jobs,
+        "the updated stack must re-execute, not replay"
+    );
+    // every machine re-executed: the invalidation is fleet-wide, not
+    // per-machine best-effort
+    for m in machines {
+        let count = world.batch.get(m).unwrap().records().len();
+        assert!(count > 0, "{m} never ran");
+    }
+    assert!(world.cache_stats().invalidated > 0, "keys must invalidate in place");
+}
+
+// ---- 2. gates vs a correlated fleet-wide shift ------------------------
+
+/// The regression gate must flag a planted fleet-wide stack regression
+/// on its exact day — on every machine the stack touched — while the
+/// same campaign without the event stays green. Per-app noise alone
+/// never trips the gate; the correlated baseline move does.
+#[test]
+fn gates_distinguish_stack_regression_from_noise() {
+    let days = 12;
+    let update_day = 6;
+    for machine in ["jedi", "jupiter"] {
+        let sc = RegressionScenario::control(machine, days, 271828);
+
+        // control: unchanged source, unchanged stack — must stay green
+        let mut clean_world = World::new(sc.seed);
+        let clean = tracking::run_scenario(&mut clean_world, &sc);
+        assert!(
+            clean.failed_days.is_empty(),
+            "{machine}: control campaign failed on {:?}",
+            clean.failed_days
+        );
+
+        // same campaign, but the fleet's stack shifts on day 6
+        let mut shifted_world = World::new(sc.seed);
+        for ev in EventLog::stack_update(&["jedi", "jupiter"], update_day, 0.85) {
+            shifted_world.cluster.events.push(ev);
+        }
+        let shifted = tracking::run_scenario(&mut shifted_world, &sc);
+        assert!(
+            shifted.failed_days.contains(&update_day),
+            "{machine}: stack regression not caught on day {update_day}: {:?}",
+            shifted.failed_days
+        );
+        assert!(
+            shifted.failed_days.iter().all(|d| *d >= update_day),
+            "{machine}: failure before the stack moved: {:?}",
+            shifted.failed_days
+        );
+        assert_eq!(
+            shifted.verdict_on(update_day),
+            Some("regression"),
+            "{machine}: gate verdict on the update day"
+        );
+    }
+}
+
+// ---- 3. maturity under fault-plan flakiness ---------------------------
+
+/// An app whose *source never changes* but which the fault plan strikes
+/// with a forced node-failure window demotes exactly when its windowed
+/// evidence decays (`break + window_days - min_runs`), and re-earns its
+/// level on schedule once the window closes — the same arithmetic as a
+/// source-level breakage, driven entirely by the scheduler fault model.
+#[test]
+fn fault_flaky_app_demotes_on_the_maturity_schedule() {
+    use exacb::workloads::onboarding::{OnboardingApp, OnboardingScenario};
+    use exacb::workloads::portfolio::{Maturity, PortfolioApp};
+    use exacb::workloads::scalable::AppModel;
+
+    let fault_from = 5;
+    let fault_until = 9; // window [5, 9): struck on days 5..=8
+    let sc = OnboardingScenario {
+        apps: vec![OnboardingApp {
+            app: PortfolioApp {
+                name: "fault-flaky".to_string(),
+                domain: "cfd".to_string(),
+                maturity: Maturity::Instrumentability,
+                model: AppModel {
+                    name: "fault-flaky".to_string(),
+                    gflops_total: 20_000.0,
+                    steps: 10,
+                    ..AppModel::default()
+                },
+                failure_rate: 0.0,
+                nodes: 1,
+            },
+            declared: Maturity::Instrumentability,
+            instrument_from: Some(0),
+            verify_from: None,
+            break_day: None, // the source is never touched
+            fix_day: None,
+        }],
+        days: 13,
+        machines: vec!["jupiter".to_string()],
+        queue: "all".to_string(),
+        seed: 314,
+        verify_every: 4,
+        min_runs: 3,
+        min_instrumented: 3,
+        window_days: 6,
+    };
+    let mut world = World::new(sc.seed);
+    let mut plan = FaultPlan::quiet("jupiter");
+    plan.forced.push(ForcedFault {
+        name_contains: "fault-flaky".to_string(),
+        window: Window::new(
+            SimTime::from_days(fault_from),
+            SimTime::from_days(fault_until),
+        ),
+        kind: FaultKind::NodeFail,
+    });
+    world
+        .batch
+        .get_mut("jupiter")
+        .unwrap()
+        .set_fault_plan(Some(plan));
+
+    let out = exacb::maturity::run_onboarding(&mut world, &sc);
+
+    // before the window the app is healthy: no pipeline fails
+    assert!(
+        out.records
+            .iter()
+            .filter(|r| r.day < fault_from)
+            .all(|r| r.pipeline_ok),
+        "pipeline failed before the fault window opened"
+    );
+    // inside the window every run node-fails (retries are struck too)
+    assert!(
+        out.records
+            .iter()
+            .filter(|r| (fault_from..fault_until).contains(&r.day))
+            .all(|r| !r.pipeline_ok),
+        "a struck day still passed"
+    );
+    let node_fails = world
+        .batch
+        .get("jupiter")
+        .unwrap()
+        .records_iter()
+        .filter(|r| r.state == JobState::NodeFail)
+        .count();
+    assert!(
+        node_fails >= (fault_until - fault_from) as usize,
+        "forced window produced only {node_fails} node failures"
+    );
+
+    // demotion lands exactly when windowed evidence decays: day
+    // 5 + 6 - 3 = 8 — the same schedule a source breakage follows
+    let demote_day = fault_from + sc.window_days as i64 - sc.min_runs as i64;
+    assert_eq!(
+        out.transition_day("fault-flaky", Maturity::Runnability),
+        Some(demote_day),
+        "{:?}",
+        out.transitions_of("fault-flaky")
+    );
+    // and the level is re-earned on schedule after the window closes:
+    // day 9 + 3 - 1 = 11
+    let reearn_day = fault_until + sc.min_runs as i64 - 1;
+    let transitions = out.transitions_of("fault-flaky");
+    let reearn = transitions
+        .iter()
+        .find(|t| t.day > demote_day && t.to == Maturity::Instrumentability)
+        .unwrap_or_else(|| panic!("no re-promotion: {transitions:?}"));
+    assert_eq!(reearn.day, reearn_day);
+}
+
+// ---- 4. determinism under chaos ---------------------------------------
+
+fn run_chaos(
+    scenario: &ChaosScenario,
+    world_seed: u64,
+    drive: fn(&mut World, Vec<event_loop::PipelineTask>) -> Vec<u64>,
+) -> (String, String, usize, usize, usize) {
+    let mut world = World::new(world_seed);
+    let summary = chaos::run_chaos_campaign_with(&mut world, scenario, drive);
+    (
+        sacct_dump(&world),
+        store_dump(&world),
+        summary.pipelines_run,
+        summary.pipelines_succeeded,
+        fault_records(&world),
+    )
+}
+
+/// Headline: the 30-day armed chaos campaign — node failures,
+/// preemption + requeue, one scheduler outage, one maintenance drain,
+/// one fleet-wide stack-update day, one forced-flaky week — replays
+/// byte-identically across replays, across `drive` vs `drive_reference`,
+/// and across seeded submission-order permutations.
+#[test]
+fn chaos_campaign_replays_byte_identical() {
+    for seed in [11u64, 97] {
+        let sc = ChaosScenario::generate(3, 30, seed);
+        let fast = run_chaos(&sc, seed, event_loop::drive);
+        let replay = run_chaos(&sc, seed, event_loop::drive);
+        let reference = run_chaos(&sc, seed, event_loop::drive_reference);
+
+        // the campaign actually suffered: pipelines ran daily, some
+        // faults struck, every pipeline was recorded (never dropped)
+        assert_eq!(fast.2, 90, "3 apps x 30 days (seed {seed})");
+        assert!(fast.4 > 0, "armed campaign never faulted (seed {seed})");
+        assert!(
+            fast.3 < fast.2,
+            "the forced-flaky week must fail some pipelines (seed {seed})"
+        );
+
+        assert_eq!(fast, replay, "chaos replay diverged (seed {seed})");
+        assert_eq!(
+            fast, reference,
+            "drive vs drive_reference diverged under chaos (seed {seed})"
+        );
+    }
+}
+
+/// Acceptance contract: arming the all-zero-rate fault plan (and its
+/// empty event set) is byte-identical to never arming anything — the
+/// fault model is pay-for-what-you-plant.
+#[test]
+fn zero_rate_fault_plan_is_byte_inert() {
+    let seed = 2026;
+    let sc = ChaosScenario::quiet(3, 10, seed);
+
+    let armed = run_chaos(&sc, seed, event_loop::drive);
+
+    // baseline: identical campaign, fault model never armed at all
+    let machines: Vec<&str> = sc.machines.iter().map(String::as_str).collect();
+    let mut world = World::new(seed);
+    collection::onboard_multi(&mut world, &sc.apps, &machines, "all");
+    let summary =
+        collection::run_campaign_concurrent_with(&mut world, &sc.apps, &machines, sc.days, event_loop::drive);
+    let baseline = (
+        sacct_dump(&world),
+        store_dump(&world),
+        summary.pipelines_run,
+        summary.pipelines_succeeded,
+        fault_records(&world),
+    );
+
+    assert_eq!(armed.4, 0, "a zero-rate plan must never fault");
+    assert_eq!(armed, baseline, "arming the quiet plan changed recorded bytes");
+}

@@ -168,3 +168,97 @@ fn armed_trace_covers_span_vocabulary() {
         "pipeline outcome counters do not partition PipelinesRun"
     );
 }
+
+// ---- chaos campaigns under observation (DESIGN.md §14) ----------------
+
+/// The armed chaos campaign this file observes: 4 apps for 8 days with
+/// the forced-flaky window, an outage on the 03:00 trigger, a
+/// maintenance drain, a stack-update day, and a preemption rate high
+/// enough that requeues occur. Everything is seeded, so each assertion
+/// is deterministic.
+fn chaos_scenario(seed: u64) -> exacb::workloads::chaos::ChaosScenario {
+    let mut sc = exacb::workloads::chaos::ChaosScenario::generate(4, 8, seed);
+    sc.preempt_rate = 0.5;
+    sc
+}
+
+fn run_chaos_observed(
+    seed: u64,
+    drive: fn(&mut World, Vec<event_loop::PipelineTask>) -> Vec<u64>,
+    armed: bool,
+) -> (String, String, String, String) {
+    let sc = chaos_scenario(seed);
+    let mut world = World::new(seed);
+    exacb::obs::trace::drain();
+    exacb::obs::metrics::drain();
+    let prior_t = exacb::obs::set_tracing(armed);
+    let prior_m = exacb::obs::set_metrics(armed);
+    exacb::workloads::chaos::run_chaos_campaign_with(&mut world, &sc, drive);
+    exacb::obs::set_tracing(prior_t);
+    exacb::obs::set_metrics(prior_m);
+    let events = exacb::obs::trace::drain();
+    let metrics = exacb::obs::metrics::drain();
+    (
+        exacb::obs::trace::chrome_trace_json(&events),
+        metrics.to_json().pretty(),
+        sacct_dump(&world),
+        store_dump(&world),
+    )
+}
+
+/// The armed chaos campaign emits the full fault vocabulary as
+/// canonical instants — node failures, preemptions, requeues, the
+/// outage rejection — and the fault counters agree that they happened.
+#[test]
+fn chaos_trace_covers_fault_vocabulary() {
+    let sc = chaos_scenario(2026);
+    let mut world = World::new(2026);
+    exacb::obs::trace::drain();
+    exacb::obs::metrics::drain();
+    let prior_t = exacb::obs::set_tracing(true);
+    let prior_m = exacb::obs::set_metrics(true);
+    exacb::workloads::chaos::run_chaos_campaign_with(&mut world, &sc, event_loop::drive);
+    exacb::obs::set_tracing(prior_t);
+    exacb::obs::set_metrics(prior_m);
+    let events = exacb::obs::trace::drain();
+    let metrics = exacb::obs::metrics::drain();
+    for name in ["node-fail", "preempt", "requeue", "outage"] {
+        assert!(
+            events.iter().any(|e| e.name == name),
+            "no `{name}` instant in the armed chaos trace"
+        );
+    }
+    assert!(metrics.counter(exacb::obs::Ctr::JobsNodeFailed) > 0);
+    assert!(metrics.counter(exacb::obs::Ctr::JobsPreempted) > 0);
+    assert_eq!(
+        metrics.counter(exacb::obs::Ctr::JobsPreempted),
+        metrics.counter(exacb::obs::Ctr::JobsRequeued),
+        "every preemption must requeue exactly one twin"
+    );
+}
+
+/// Chaos does not loosen the determinism contract: the armed trace and
+/// metrics are byte-identical across replays and across `drive` vs
+/// `drive_reference` — the maintenance drain and outage deferrals
+/// included.
+#[test]
+fn chaos_trace_is_byte_identical_across_replays() {
+    let first = run_chaos_observed(2026, event_loop::drive, true);
+    let second = run_chaos_observed(2026, event_loop::drive, true);
+    let reference = run_chaos_observed(2026, event_loop::drive_reference, true);
+    assert!(!first.0.is_empty());
+    assert_eq!(first.0, second.0, "chaos trace diverged across replays");
+    assert_eq!(first.1, second.1, "chaos metrics diverged across replays");
+    assert_eq!(first.0, reference.0, "chaos trace diverged under drive_reference");
+    assert_eq!(first.1, reference.1, "chaos metrics diverged under drive_reference");
+}
+
+/// Arming the recorders changes no byte of a chaos campaign's recorded
+/// state — faults, retries, deferrals and all.
+#[test]
+fn arming_does_not_change_chaos_simulation_state() {
+    let armed = run_chaos_observed(2026, event_loop::drive, true);
+    let disarmed = run_chaos_observed(2026, event_loop::drive, false);
+    assert_eq!(armed.2, disarmed.2, "chaos sacct records changed under arming");
+    assert_eq!(armed.3, disarmed.3, "chaos store bytes changed under arming");
+}

@@ -383,3 +383,201 @@ include:
         Ok(())
     });
 }
+
+/// The fault schedule is a pure function of `(seed, machine, jobid)`:
+/// deciding the same jobids in any order, at any wall-clock instant,
+/// yields identical fates — submission-order permutations cannot move a
+/// fault from one job to another. The retry backoff is equally pure and
+/// stays inside its documented `[30 s, 300 s]` bound.
+#[test]
+fn prop_fault_schedule_is_pure() {
+    use exacb::scheduler::{backoff_s, FaultPlan};
+    check("fault schedule is pure and order-free", 60, |g: &mut Gen| {
+        let machine = *g.pick(&["jedi", "jupiter", "jureca"]);
+        let plan = FaultPlan {
+            node_fail_rate: g.f64(0.0, 0.5),
+            preempt_rate: g.f64(0.0, 0.5),
+            ..FaultPlan::seeded(machine, g.u64(0, 1 << 40))
+        };
+        let jobids: Vec<u64> = (0..g.usize(5, 40))
+            .map(|_| g.u64(7_700_000, 7_900_000))
+            .collect();
+        let t1 = SimTime(g.i64(0, 10_000_000));
+        let t2 = SimTime(g.i64(0, 10_000_000));
+        let forward: Vec<_> = jobids.iter().map(|&j| plan.decide(j, "app", t1)).collect();
+        let mut backward: Vec<_> = jobids
+            .iter()
+            .rev()
+            .map(|&j| plan.decide(j, "app", t2))
+            .collect();
+        backward.reverse();
+        for ((j, a), b) in jobids.iter().zip(&forward).zip(&backward) {
+            prop_assert!(
+                a == b,
+                "job {j}: fate depends on decision order or time ({a:?} vs {b:?})"
+            );
+        }
+        let attempt = g.u64(0, 5) as u32;
+        let b = backoff_s(machine, "execute", attempt);
+        prop_assert!(
+            b == backoff_s(machine, "execute", attempt),
+            "backoff is not pure"
+        );
+        prop_assert!((30..=300).contains(&b), "backoff {b} outside [30, 300]");
+        Ok(())
+    });
+}
+
+/// Preemption + requeue preserves measurement streams: the payload runs
+/// exactly once, and the requeued twin publishes a result byte-equal to
+/// what an unpreempted run of the same job would have published — the
+/// fault model never re-rolls an application measurement.
+#[test]
+fn prop_requeue_preserves_payload_streams() {
+    use exacb::scheduler::{FaultKind, FaultPlan, ForcedFault, JobState, Window};
+    use std::cell::Cell;
+    use std::rc::Rc;
+    check("requeue preserves payload streams", 30, |g: &mut Gen| {
+        let dur = g.u64(50, 5000) as f64;
+        let metric = g.u64(0, 1_000_000);
+        let name = format!("exacb-{}-execute", g.ident(6));
+        let run = |forced: bool| {
+            let calls = Rc::new(Cell::new(0u32));
+            let calls_in = Rc::clone(&calls);
+            let mut bs = BatchSystem::new("m", 64, AccountManager::open("a", "b", 1e12));
+            bs.add_partition("p", 4);
+            if forced {
+                let mut plan = FaultPlan::quiet("m");
+                plan.forced.push(ForcedFault {
+                    name_contains: name.clone(),
+                    window: Window::new(SimTime(0), SimTime::from_days(10_000)),
+                    kind: FaultKind::Preempt,
+                });
+                bs.set_fault_plan(Some(plan));
+            }
+            let id = bs
+                .submit(
+                    JobSpec {
+                        name: name.clone(),
+                        nodes: 1,
+                        account: "a".into(),
+                        budget: "b".into(),
+                        partition: "p".into(),
+                        walltime_limit_s: 100_000,
+                        ..Default::default()
+                    },
+                    Box::new(move |_| {
+                        calls_in.set(calls_in.get() + 1);
+                        JobResult {
+                            duration_s: dur,
+                            success: true,
+                            metrics: Json::obj().set("val", metric),
+                            files: vec![],
+                        }
+                    }),
+                )
+                .unwrap();
+            bs.run_until_idle();
+            (calls.get(), id, bs)
+        };
+
+        let (quiet_calls, quiet_id, quiet_bs) = run(false);
+        let quiet_rec = quiet_bs.record(quiet_id).unwrap();
+        prop_assert!(quiet_calls == 1, "unfaulted payload ran {quiet_calls}x");
+        prop_assert!(quiet_rec.state == JobState::Completed, "{:?}", quiet_rec.state);
+
+        let (calls, id, bs) = run(true);
+        prop_assert!(calls == 1, "requeue re-ran the payload ({calls}x)");
+        let original = bs.record(id).unwrap();
+        prop_assert!(
+            original.state == JobState::Preempted,
+            "forced preemption missed: {:?}",
+            original.state
+        );
+        let twin_id = original
+            .result
+            .as_ref()
+            .and_then(|r| r.metrics.u64_of("requeued_as"))
+            .ok_or(exacb::util::prop::PropFail {
+                msg: "preempted record has no requeued_as".into(),
+            })?;
+        let twin = bs.record(twin_id).ok_or(exacb::util::prop::PropFail {
+            msg: format!("twin {twin_id} has no record"),
+        })?;
+        prop_assert!(twin.state == JobState::Completed, "{:?}", twin.state);
+        let twin_res = twin.result.as_ref().unwrap();
+        let quiet_res = quiet_rec.result.as_ref().unwrap();
+        prop_assert!(
+            twin_res.success
+                && twin_res.duration_s == quiet_res.duration_s
+                && twin_res.metrics.u64_of("val") == Some(metric),
+            "requeued result diverged from the unpreempted run: {twin_res:?} vs {quiet_res:?}"
+        );
+        Ok(())
+    });
+}
+
+/// Arming the all-zero-rate fault plan is byte-identical to never
+/// installing a plan at all, across whole multi-day campaigns: same
+/// `sacct` records, same recorded store bytes.
+#[test]
+fn prop_zero_rate_fault_plan_is_inert() {
+    use exacb::ci::Trigger;
+    use exacb::coordinator::{BenchmarkRepo, World};
+    use exacb::scheduler::FaultPlan;
+
+    fn dump(world: &World) -> String {
+        let mut out = String::new();
+        for (name, bs) in &world.batch {
+            for r in bs.records_iter() {
+                out.push_str(&format!(
+                    "{name} {} {} {:?} {:?} {:?} {:?}\n",
+                    r.jobid,
+                    r.state.name(),
+                    r.submit_time,
+                    r.start_time,
+                    r.end_time,
+                    r.result.as_ref().map(|res| (res.success, res.duration_s)),
+                ));
+            }
+        }
+        for (name, repo) in &world.repos {
+            let mut branches = repo.store.branches();
+            branches.sort_unstable();
+            for branch in branches {
+                for (path, content) in repo.store.read_all(branch, "") {
+                    out.push_str(&format!("{name} {branch} {path}\n{content}\n"));
+                }
+            }
+        }
+        out
+    }
+
+    check("zero-rate fault plan is byte-inert", 6, |g: &mut Gen| {
+        let seed = g.u64(0, 1 << 30);
+        let days = g.usize(1, 3) as i64;
+        let run = |armed: bool| -> Result<String, exacb::util::prop::PropFail> {
+            let mut world = World::new(seed);
+            world.add_repo(BenchmarkRepo::logmap_example("jedi", "all"));
+            if armed {
+                world
+                    .batch
+                    .get_mut("jedi")
+                    .unwrap()
+                    .set_fault_plan(Some(FaultPlan::quiet("jedi")));
+            }
+            for day in 0..days {
+                world.advance_to(SimTime::from_days(day).add_secs(3 * 3600));
+                world
+                    .run_pipeline("logmap", Trigger::Scheduled)
+                    .map_err(|e| exacb::util::prop::PropFail { msg: e })?;
+            }
+            Ok(dump(&world))
+        };
+        prop_assert!(
+            run(true)? == run(false)?,
+            "arming the quiet plan changed recorded bytes (seed {seed}, {days} days)"
+        );
+        Ok(())
+    });
+}
