@@ -1,0 +1,121 @@
+//! BYOB: bring your own benchmark collection (DESIGN.md §15).
+//!
+//! Builds a small definition set **as data** — two apps, one machine,
+//! one engine, written in the tomlite TOML subset — loads it through
+//! the same loud parse/validate path as `exacb measure -d`, runs a
+//! seeded three-day campaign over it, and prints the results table.
+//! Also demonstrates what validation errors look like: every error
+//! names its file, table, and key.
+//!
+//! Run with: `cargo run --example byob_collection`
+
+use exacb::coordinator::postproc;
+use exacb::defs::{self, MeasurePlan};
+
+const COLLECTION: &str = r#"# A minimal BYOB collection: one file, one team.
+
+[[engine]]
+name = "simapp"
+command = "simapp"
+description = "parameterised scalable application"
+
+[[machine]]
+name = "toy-cluster"
+version = "2026.1"
+gpu = "gh200"
+nodes = 16
+gpus_per_node = 4
+cores_per_node = 288
+partitions = ["batch"]
+stream_efficiency = 0.85
+noise_sigma = 0.01
+perf_factor = 1.2
+network = "ndr400"
+power = "gh200"
+
+[[app]]
+name = "ocean-sim"
+domain = "climate"
+maturity = "instrumentability"
+engine = "simapp"
+nodes = 4
+
+[app.parameters]
+gflops_total = 120000.0
+serial_frac = 0.02
+mem_bound = 0.6
+comm_mb = 96.0
+steps = 120
+weak = false
+
+[app.behavior]
+failure_rate = 0.05
+
+[app.metrics]
+primary = "tts"
+record = ["tts", "gflops_rate"]
+
+[[app]]
+name = "galaxy-merge"
+domain = "astrophysics"
+maturity = "reproducibility"
+engine = "simapp"
+nodes = 8
+
+[app.parameters]
+gflops_total = 340000.0
+serial_frac = 0.01
+mem_bound = 0.4
+comm_mb = 48.0
+steps = 200
+weak = false
+
+[app.behavior]
+failure_rate = 0.01
+
+[app.metrics]
+primary = "tts"
+record = ["tts"]
+"#;
+
+fn main() {
+    // --- parse + validate the collection --------------------------------
+    let files = vec![("collection.toml".to_string(), COLLECTION.to_string())];
+    let set = defs::parse_files(&files).expect("collection must validate");
+    println!(
+        "loaded {} app(s), {} machine(s), {} engine(s)",
+        set.apps.len(),
+        set.machines.len(),
+        set.engines.len()
+    );
+    for a in &set.apps {
+        println!("  app {:<14} {:<14} {} nodes, {} steps", a.name, a.domain, a.nodes, a.steps);
+    }
+
+    // --- what a broken definition looks like -----------------------------
+    let broken = vec![(
+        "collection.toml".to_string(),
+        COLLECTION.replace("steps = 120", "steps = 0"),
+    )];
+    let err = defs::parse_files(&broken).expect_err("steps = 0 must not validate");
+    println!("\na broken collection fails loudly:\n  {err}");
+
+    // --- run it: 2 apps x 3 days on the toy cluster ----------------------
+    let plan = MeasurePlan {
+        days: 3,
+        queue: "batch".to_string(),
+        seed: 7,
+        ..MeasurePlan::default()
+    };
+    let (world, summaries) = defs::run_measure(&set, &plan).expect("campaign runs");
+    let s = summaries.last().unwrap();
+    println!(
+        "\ncampaign: {} pipelines, {} succeeded, {} reports, {:.1} core-hours",
+        s.pipelines_run, s.pipelines_succeeded, s.reports_recorded, s.core_hours
+    );
+    print!("\n{}", postproc::collection_results_table(&world, "tts").render());
+
+    assert_eq!(set.apps.len(), 2);
+    assert!(s.pipelines_run > 0);
+    println!("\nbyob_collection OK");
+}

@@ -1,0 +1,159 @@
+//! Perf: the BYOB definition layer (DESIGN.md §15).
+//!
+//! Contract under test, with hard assertions:
+//!
+//! * a 500-definition directory (500 apps across 10 files + machines +
+//!   engines) **loads and validates** under a wall budget — discovery,
+//!   tomlite parse, typed conversion, and full semantic validation;
+//! * definitions are parsed **once at load**: a warm multi-sweep
+//!   campaign over the loaded set performs zero additional tomlite
+//!   parses (`tomlite::parse_count` is the witness) — campaign days
+//!   never re-read the definition tree;
+//! * rendering the built-in set is cheap enough to regenerate on every
+//!   `--validate-only` CI lint.
+//!
+//! Single-shot `Instant` timings (the standard harness would re-run the
+//! heavy bodies).
+
+use std::time::{Duration, Instant};
+
+use exacb::coordinator::event_loop;
+use exacb::defs::{self, AppDef, MeasurePlan};
+use exacb::util::tomlite;
+use exacb::workloads::portfolio;
+
+const APPS: usize = 500;
+const FILES: usize = 10; // app definitions spread over this many files
+
+/// A 500-app definition set: the deterministic portfolio generator's
+/// output as data, on the built-in machines and engine.
+fn big_set() -> defs::DefSet {
+    let mut set = defs::builtin();
+    set.apps = portfolio::generate(APPS, 777)
+        .iter()
+        .map(|a| AppDef {
+            name: a.name.clone(),
+            domain: a.domain.clone(),
+            maturity: a.maturity,
+            engine: "simapp".to_string(),
+            nodes: a.nodes,
+            gflops_total: a.model.gflops_total,
+            serial_frac: a.model.serial_frac,
+            mem_bound: a.model.mem_bound,
+            comm_mb: a.model.comm_mb,
+            steps: a.model.steps,
+            weak: a.model.weak,
+            failure_rate: a.failure_rate,
+            primary_metric: "tts".to_string(),
+            record_metrics: vec!["tts".to_string(), "gflops_rate".to_string()],
+            file: defs::BUILTIN_FILE.to_string(),
+        })
+        .collect();
+    set
+}
+
+/// Write `set` into `dir` with the apps split across [`FILES`] files —
+/// the shape of a real multi-team definition tree.
+fn write_tree(dir: &std::path::Path, set: &defs::DefSet) -> usize {
+    std::fs::create_dir_all(dir).unwrap();
+    let rendered = defs::render(set);
+    let mut files = 0;
+    for (name, text) in &rendered {
+        if name == "jureap.toml" {
+            // split the app file on [[app]] boundaries into FILES chunks
+            let blocks: Vec<&str> = text.split("\n[[app]]").collect();
+            let header = blocks[0];
+            let apps = &blocks[1..];
+            let per = apps.len().div_ceil(FILES);
+            for (i, chunk) in apps.chunks(per).enumerate() {
+                let mut out = String::from(header);
+                for b in chunk {
+                    out.push_str("\n[[app]]");
+                    out.push_str(b);
+                }
+                std::fs::write(dir.join(format!("apps-{i:03}.toml")), out).unwrap();
+                files += 1;
+            }
+        } else {
+            std::fs::write(dir.join(name), text).unwrap();
+            files += 1;
+        }
+    }
+    files
+}
+
+fn main() {
+    println!("perf_defs: BYOB definition directory load + validate\n");
+
+    let dir = std::env::temp_dir().join("exacb_perf_defs");
+    let _ = std::fs::remove_dir_all(&dir);
+    let set = big_set();
+    let n_files = write_tree(&dir, &set);
+    println!("  wrote {APPS} apps + {} machines across {n_files} files", set.machines.len());
+
+    // ---- load + validate wall budget -----------------------------------
+    let mut load_wall = Duration::MAX;
+    let mut loaded = None;
+    for _ in 0..3 {
+        let t0 = Instant::now();
+        let l = defs::load_dir(dir.to_str().unwrap()).expect("tree must load clean");
+        load_wall = load_wall.min(t0.elapsed());
+        loaded = Some(l);
+    }
+    let loaded = loaded.unwrap();
+    assert_eq!(loaded.apps.len(), APPS);
+    assert_eq!(loaded, set, "loaded tree must equal the rendered set bit-for-bit");
+    println!("  load+validate        : {load_wall:>9.2?}  ({APPS} apps, {n_files} files)");
+
+    // ---- render cost (the --validate-only lint regenerates nothing, but
+    //      the generator pipeline renders; keep it cheap) ----------------
+    let t0 = Instant::now();
+    let rendered = defs::render(&set);
+    let render_wall = t0.elapsed();
+    let bytes: usize = rendered.iter().map(|(_, t)| t.len()).sum();
+    println!("  render 500 apps      : {render_wall:>9.2?}  ({bytes} bytes)");
+
+    // ---- zero re-parse on warm campaign days ---------------------------
+    let plan = MeasurePlan {
+        apps: 16,
+        days: 2,
+        sweeps: 3, // sweep 1 cold, 2..3 warm replays
+        ..MeasurePlan::default()
+    };
+    let parses_before = tomlite::parse_count();
+    let t0 = Instant::now();
+    let (_, summaries) =
+        defs::run_measure_with(&loaded, &plan, event_loop::drive).expect("plan must run");
+    let campaign_wall = t0.elapsed();
+    let parse_delta = tomlite::parse_count() - parses_before;
+    let warm = &summaries[summaries.len() - 1].cache;
+    println!(
+        "  16-app x 2d x 3 sweeps: {campaign_wall:>8.2?}  cache {warm:?}, {parse_delta} re-parses"
+    );
+
+    let _ = std::fs::remove_dir_all(&dir);
+
+    // ---- budgets (DESIGN.md §15 definition-layer contract) -------------
+    println!("\n  load+validate 500    budget: < 2 s         actual: {load_wall:.2?}");
+    println!("  render 500           budget: < 1 s         actual: {render_wall:.2?}");
+    println!("  warm-campaign parses budget: 0             actual: {parse_delta}");
+
+    assert!(
+        load_wall < Duration::from_secs(2),
+        "500-definition load+validate blew the wall budget: {load_wall:?}"
+    );
+    assert!(
+        render_wall < Duration::from_secs(1),
+        "rendering 500 definitions blew the wall budget: {render_wall:?}"
+    );
+    assert_eq!(
+        parse_delta, 0,
+        "campaign days re-parsed definitions: parse once at load is the contract"
+    );
+    assert!(
+        warm.hits > 0,
+        "warm sweeps must replay from cache, or the zero-re-parse claim is untested: {warm:?}"
+    );
+
+    println!("\nperf_defs: all budgets green");
+}

@@ -29,6 +29,26 @@ impl std::fmt::Display for ArgsError {
 
 impl std::error::Error for ArgsError {}
 
+/// Single-letter short flag: `-d` or `-d=value` (no bundling). Returns
+/// the flag name and, for the `=` form, the inline value. `-5` and the
+/// like are not flags (second byte must be alphabetic).
+fn short_name(arg: &str) -> Option<(String, Option<String>)> {
+    let rest = arg.strip_prefix('-')?;
+    if rest.starts_with('-') {
+        return None; // long flag, handled elsewhere
+    }
+    let mut chars = rest.chars();
+    let c = chars.next()?;
+    if !c.is_ascii_alphabetic() {
+        return None;
+    }
+    match chars.next() {
+        None => Some((c.to_string(), None)),
+        Some('=') => Some((c.to_string(), Some(chars.collect()))),
+        _ => None,
+    }
+}
+
 impl Args {
     pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Args, ArgsError> {
         let mut it = argv.into_iter().peekable();
@@ -36,7 +56,18 @@ impl Args {
         let mut flags = BTreeMap::new();
         let mut positional = Vec::new();
         while let Some(arg) = it.next() {
-            if let Some(name) = arg.strip_prefix("--") {
+            if let Some((name, inline)) = short_name(&arg) {
+                let value = match inline {
+                    Some(v) => v,
+                    None => match it.peek() {
+                        Some(next) if !next.starts_with('-') => it.next().unwrap(),
+                        _ => "true".to_string(),
+                    },
+                };
+                if flags.insert(name.clone(), value).is_some() {
+                    return Err(ArgsError::Duplicate(name));
+                }
+            } else if let Some(name) = arg.strip_prefix("--") {
                 if let Some((k, v)) = name.split_once('=') {
                     if flags.insert(k.to_string(), v.to_string()).is_some() {
                         return Err(ArgsError::Duplicate(k.to_string()));
@@ -123,6 +154,26 @@ mod tests {
             "x --a 1 --a 2".split_whitespace().map(str::to_string),
         )
         .unwrap_err();
+        assert!(matches!(e, ArgsError::Duplicate(_)));
+    }
+
+    #[test]
+    fn short_flags() {
+        let a = parse("measure -d benchmarks --days 2");
+        assert_eq!(a.subcommand.as_deref(), Some("measure"));
+        assert_eq!(a.str("d", ""), "benchmarks");
+        assert_eq!(a.i64("days", 0), 2);
+        let a = parse("measure -d=bench/dir -v");
+        assert_eq!(a.str("d", ""), "bench/dir");
+        assert!(a.bool("v")); // trailing short switch takes "true"
+        // a negative number is a value, not a short flag
+        let a = parse("rank --shift -5");
+        assert_eq!(a.i64("shift", 0), -5);
+        // bundles like -xvf are not flags and stay positional
+        let a = parse("run -xvf");
+        assert_eq!(a.positional, vec!["-xvf"]);
+        let e = Args::parse("x -d a -d b".split_whitespace().map(str::to_string))
+            .unwrap_err();
         assert!(matches!(e, ArgsError::Duplicate(_)));
     }
 

@@ -9,6 +9,7 @@
 //! exacb jureap      [--apps 72] [--days 12] [--machines jupiter]
 //! exacb trace       [--apps 24] [--days 3] [--export-trace trace.json]
 //! exacb chaos       [--apps 8] [--days 30] [--inert true]
+//! exacb measure     -d benchmarks [--validate-only] [--apps 24] [--days 3]
 //! exacb figures     [--days 90] [--out out/] [--only fig3]
 //! exacb ablation    [--benchmarks 70]
 //! exacb components
@@ -85,6 +86,13 @@ COMMANDS:
                 tables (--apps N --days D --machines M1,M2 --seed S;
                 --inert true arms the zero-rate plan that must change
                 nothing; --expect-faults fails when nothing faulted)
+  measure       load a BYOB definition directory (apps, machines, engines
+                as *.toml data — DESIGN.md §15) and run it through the
+                concurrent campaign core (-d DIR --apps N --days D
+                --machines M1,M2 --queue Q --seed S --sweeps K
+                --cache true|false --metric NAME; --validate-only lints
+                the definitions and exits — the CI gate for collections;
+                unknown or empty directories exit 2 naming the path)
   figures       regenerate every paper table/figure (--days D --out DIR --only ID)
   ablation      run the §III integration-mode ablation (--benchmarks N)
   components    list the CI/CD component catalog
@@ -119,6 +127,7 @@ pub fn run(argv: Vec<String>) -> i32 {
         Some("energy") => cmd_energy(&args),
         Some("trace") => cmd_trace(&args),
         Some("chaos") => cmd_chaos(&args),
+        Some("measure") => cmd_measure(&args),
         Some("figures") => cmd_figures(&args),
         Some("ablation") => cmd_ablation(&args),
         Some("components") => cmd_components(),
@@ -978,6 +987,91 @@ fn cmd_chaos(args: &Args) -> i32 {
     0
 }
 
+/// Load a BYOB definition directory (DESIGN.md §15) and run it through
+/// the concurrent campaign core. `-d`/`--dir` names the directory;
+/// unknown or empty paths exit 2 naming the path, invalid definitions
+/// print every file/table/key-named error and exit 1, and
+/// `--validate-only` stops after the lint — the CI gate for community
+/// collection directories.
+fn cmd_measure(args: &Args) -> i32 {
+    use crate::defs::{self, DefsError, MeasurePlan};
+
+    let dir = {
+        let short = args.str("d", "");
+        if short.is_empty() {
+            args.str("dir", "")
+        } else {
+            short
+        }
+    };
+    if dir.is_empty() {
+        eprintln!("error: exacb measure needs a definition directory: -d <dir>\n\n{USAGE}");
+        return 2;
+    }
+    let set = match defs::load_dir(&dir) {
+        Ok(set) => set,
+        Err(e @ (DefsError::Io { .. } | DefsError::Empty { .. })) => {
+            eprintln!("error: {e}");
+            return 2;
+        }
+        Err(e) => {
+            eprintln!("error: invalid definitions in '{dir}':\n{e}");
+            return 1;
+        }
+    };
+    println!(
+        "loaded {} app(s), {} machine(s), {} engine(s) from {dir}",
+        set.apps.len(),
+        set.machines.len(),
+        set.engines.len()
+    );
+    if args.bool("validate-only") {
+        println!("definitions valid");
+        return 0;
+    }
+    let plan = MeasurePlan {
+        apps: args.u64("apps", 0) as usize,
+        days: args.i64("days", 3),
+        machines: machine_list(args, ""),
+        queue: args.str("queue", "all"),
+        seed: args.u64("seed", 20260101),
+        cache: args.str("cache", "true") == "true",
+        sweeps: args.u64("sweeps", 1).max(1) as u32,
+    };
+    let t0 = std::time::Instant::now();
+    let (world, summaries) = match defs::run_measure(&set, &plan) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 2;
+        }
+    };
+    let summary = summaries.last().expect("sweeps >= 1");
+    println!(
+        "pipelines: {}/{} succeeded over {} sweep(s) in {:.1} ms wall; \
+         {} protocol reports recorded; {} cumulative cache hits",
+        summary.pipelines_succeeded,
+        summary.pipelines_run,
+        summaries.len(),
+        t0.elapsed().as_secs_f64() * 1e3,
+        summary.reports_recorded,
+        summary.cache.hits
+    );
+    print!("{}", summary.table().render());
+    println!("\nqueue-wait statistics (per machine):");
+    print!(
+        "{}",
+        crate::coordinator::postproc::queue_stats(&world).render()
+    );
+    let metric = args.str("metric", "tts");
+    println!("\nper-entry results ({metric}):");
+    print!(
+        "{}",
+        crate::coordinator::postproc::collection_results_table(&world, &metric).render()
+    );
+    0
+}
+
 fn cmd_figures(args: &Args) -> i32 {
     let days = args.i64("days", 90);
     let seed = args.u64("seed", 2026);
@@ -1320,6 +1414,48 @@ mod tests {
         assert_eq!(run_str("jureap --apps 2 --days 1 --machines ,"), 2);
     }
 
+    #[test]
+    fn measure_fails_loudly_without_a_usable_directory() {
+        // no -d flag at all
+        assert_eq!(run_str("measure"), 2);
+        // unknown path: exit 2, naming the path (stderr)
+        assert_eq!(run_str("measure -d /no/such/definition/dir"), 2);
+        assert_eq!(run_str("measure --dir /no/such/definition/dir"), 2);
+        // empty directory: exit 2 too
+        let dir = std::env::temp_dir().join("exacb-measure-empty-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        assert_eq!(run_str(&format!("measure -d {}", dir.display())), 2);
+    }
+
+    #[test]
+    fn measure_runs_a_rendered_definition_directory() {
+        // render the built-in set to a temp dir and measure it: the
+        // full loader → validator → campaign path under the CLI
+        let dir = std::env::temp_dir().join("exacb-measure-run-test");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        for (name, text) in crate::defs::render(&crate::defs::builtin()) {
+            std::fs::write(dir.join(name), text).unwrap();
+        }
+        let d = dir.display();
+        assert_eq!(run_str(&format!("measure -d {d} --validate-only true")), 0);
+        assert_eq!(
+            run_str(&format!("measure -d {d} --apps 2 --days 1 --seed 6 --sweeps 2")),
+            0
+        );
+        // bad campaign flags over valid definitions: loud exit 2
+        assert_eq!(
+            run_str(&format!("measure -d {d} --apps 1 --days 1 --machines frontier")),
+            2
+        );
+        // corrupt one definition: every error names file/table/key, exit 1
+        let jureap = dir.join("jureap.toml");
+        let text = std::fs::read_to_string(&jureap).unwrap();
+        std::fs::write(&jureap, text.replace("steps = ", "steps = -")).unwrap();
+        assert_eq!(run_str(&format!("measure -d {d} --validate-only true")), 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
     /// Satellite contract: every dispatched subcommand is listed in
     /// `exacb help` with a one-line description — a new subcommand
     /// cannot silently stay undocumented.
@@ -1327,7 +1463,7 @@ mod tests {
     fn help_lists_every_subcommand_with_a_description() {
         // keep in sync with the dispatcher match in `run` (that is the
         // point: this list fails loudly when the two drift apart)
-        const SUBCOMMANDS: [&str; 15] = [
+        const SUBCOMMANDS: [&str; 16] = [
             "quickstart",
             "collection",
             "track",
@@ -1337,6 +1473,7 @@ mod tests {
             "energy",
             "trace",
             "chaos",
+            "measure",
             "figures",
             "ablation",
             "components",

@@ -22,6 +22,18 @@ pub enum GpuGen {
 }
 
 impl GpuGen {
+    /// Parse a generation name from a machine definition file
+    /// (case-insensitive; accepts the [`GpuGen::name`] spellings plus
+    /// the common aliases "a100"/"h100"/"gracehopper").
+    pub fn parse(s: &str) -> Option<GpuGen> {
+        match s.to_ascii_lowercase().as_str() {
+            "ampere" | "a100" => Some(GpuGen::Ampere),
+            "hopper" | "h100" => Some(GpuGen::Hopper),
+            "gh200" | "gracehopper" | "grace-hopper" => Some(GpuGen::GraceHopper),
+            _ => None,
+        }
+    }
+
     pub fn name(&self) -> &'static str {
         match self {
             GpuGen::Ampere => "Ampere",
@@ -59,7 +71,7 @@ impl GpuGen {
 }
 
 /// A simulated HPC system.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct Machine {
     /// System name as used in CI inputs (`machine: "jedi"`).
     pub name: String,
@@ -84,6 +96,25 @@ pub struct Machine {
 }
 
 impl Machine {
+    /// Build a machine from a loaded definition (DESIGN.md §15).
+    /// Infallible: `defs::validate` has already checked the ranges.
+    pub fn from_def(def: &crate::defs::MachineDef) -> Machine {
+        Machine {
+            name: def.name.clone(),
+            version: def.version.clone(),
+            gpu_gen: def.gpu,
+            nodes: def.nodes,
+            gpus_per_node: def.gpus_per_node,
+            cores_per_node: def.cores_per_node,
+            queues: def.partitions.clone(),
+            network: def.network.clone(),
+            power: def.power.clone(),
+            stream_efficiency: def.stream_efficiency,
+            noise_sigma: def.noise_sigma,
+            perf_factor: def.perf_factor,
+        }
+    }
+
     /// Attainable memory bandwidth per GPU [MB/s] — BabelStream's metric.
     pub fn stream_bw_mbs(&self) -> f64 {
         self.gpu_gen.hbm_bw_gbs() * self.stream_efficiency * 1000.0

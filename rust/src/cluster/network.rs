@@ -32,6 +32,19 @@ pub struct NetworkLink {
 }
 
 impl NetworkLink {
+    /// Look up a shipped link fingerprint by name — machine definition
+    /// files may write `network = "ndr400"` instead of the full table
+    /// (DESIGN.md §15). Accepts both the preset short name and the
+    /// rendered `name` field.
+    pub fn preset(s: &str) -> Option<NetworkLink> {
+        match s.to_ascii_lowercase().as_str() {
+            "ndr400" | "ib-ndr400" => Some(NetworkLink::ndr400()),
+            "hdr200" | "ib-hdr200" => Some(NetworkLink::hdr200()),
+            "hdr100" | "ib-hdr100" => Some(NetworkLink::hdr100()),
+            _ => None,
+        }
+    }
+
     /// InfiniBand NDR (400 Gb/s class — JEDI/JUPITER).
     pub fn ndr400() -> NetworkLink {
         NetworkLink {

@@ -25,6 +25,16 @@ pub struct PowerModel {
 }
 
 impl PowerModel {
+    /// Look up a shipped power fingerprint by name — machine definition
+    /// files may write `power = "a100"` instead of the full table.
+    pub fn preset(s: &str) -> Option<PowerModel> {
+        match s.to_ascii_lowercase().as_str() {
+            "a100" => Some(PowerModel::a100()),
+            "gh200" => Some(PowerModel::gh200()),
+            _ => None,
+        }
+    }
+
     pub fn a100() -> PowerModel {
         PowerModel {
             idle_w: 55.0,

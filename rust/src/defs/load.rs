@@ -1,0 +1,560 @@
+//! Definition discovery and parsing (DESIGN.md §15).
+//!
+//! `load_dir` walks a directory tree for `*.toml` files (sorted by path,
+//! so collection layout is deterministic), parses each with
+//! [`crate::util::tomlite`], converts the `[[app]]` / `[[machine]]` /
+//! `[[engine]]` tables into the typed model, and finishes with
+//! [`super::validate::validate`]. Every failure — I/O, TOML syntax,
+//! missing or mistyped key, semantic rule — names the file it came from.
+
+use super::model::{AppDef, DefSet, EngineDef, MachineDef};
+use super::validate::{validate, verr, ValidationError};
+use crate::cluster::{GpuGen, NetworkLink, PowerModel};
+use crate::util::json::Json;
+use crate::util::tomlite;
+use crate::workloads::portfolio::Maturity;
+use std::fmt;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+/// Why a definition directory failed to load.
+#[derive(Debug, Clone, PartialEq)]
+pub enum DefsError {
+    /// The directory (or a file in it) could not be read.
+    Io { path: String, msg: String },
+    /// The directory exists but contains no `*.toml` files.
+    Empty { path: String },
+    /// A file failed TOML parsing.
+    Toml { file: String, err: tomlite::TomlError },
+    /// Files parsed but the definitions are wrong; every error names its
+    /// file, table, and key.
+    Invalid(Vec<ValidationError>),
+}
+
+impl fmt::Display for DefsError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            DefsError::Io { path, msg } => write!(f, "cannot read '{path}': {msg}"),
+            DefsError::Empty { path } => {
+                write!(f, "definition directory '{path}' contains no *.toml files")
+            }
+            DefsError::Toml { file, err } => write!(f, "{file}: {err}"),
+            DefsError::Invalid(errs) => {
+                for (i, e) in errs.iter().enumerate() {
+                    if i > 0 {
+                        writeln!(f)?;
+                    }
+                    write!(f, "{e}")?;
+                }
+                Ok(())
+            }
+        }
+    }
+}
+
+impl std::error::Error for DefsError {}
+
+/// Discover and load a definition directory from disk.
+pub fn load_dir(dir: &str) -> Result<DefSet, DefsError> {
+    let root = Path::new(dir);
+    if !root.is_dir() {
+        return Err(DefsError::Io {
+            path: dir.to_string(),
+            msg: "not a directory".to_string(),
+        });
+    }
+    let mut paths = Vec::new();
+    discover(root, &mut paths)?;
+    paths.sort();
+    if paths.is_empty() {
+        return Err(DefsError::Empty {
+            path: dir.to_string(),
+        });
+    }
+    let mut files = Vec::with_capacity(paths.len());
+    for p in paths {
+        let text = fs::read_to_string(&p).map_err(|e| DefsError::Io {
+            path: p.display().to_string(),
+            msg: e.to_string(),
+        })?;
+        files.push((p.display().to_string(), text));
+    }
+    parse_files(&files)
+}
+
+fn discover(dir: &Path, out: &mut Vec<PathBuf>) -> Result<(), DefsError> {
+    let io = |e: std::io::Error| DefsError::Io {
+        path: dir.display().to_string(),
+        msg: e.to_string(),
+    };
+    for entry in fs::read_dir(dir).map_err(io)? {
+        let path = entry.map_err(io)?.path();
+        if path.is_dir() {
+            discover(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "toml") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// Parse already-read `(file name, contents)` pairs into a validated
+/// [`DefSet`]. This is the filesystem-free core of [`load_dir`], shared
+/// with the differential tests and the `perf_defs` bench.
+pub fn parse_files(files: &[(String, String)]) -> Result<DefSet, DefsError> {
+    let mut set = DefSet::default();
+    let mut errs = Vec::new();
+    for (file, text) in files {
+        let doc = tomlite::parse(text).map_err(|err| DefsError::Toml {
+            file: file.clone(),
+            err,
+        })?;
+        let Some(pairs) = doc.as_obj() else {
+            continue;
+        };
+        for (key, value) in pairs {
+            match key.as_str() {
+                "app" => each_table(file, key, value, &mut errs, |t, e| {
+                    set.apps.push(app_from(file, t, e));
+                }),
+                "machine" => each_table(file, key, value, &mut errs, |t, e| {
+                    set.machines.push(machine_from(file, t, e));
+                }),
+                "engine" => each_table(file, key, value, &mut errs, |t, e| {
+                    set.engines.push(engine_from(file, t, e));
+                }),
+                other => errs.push(verr(
+                    file,
+                    &format!("[{other}]"),
+                    "",
+                    "unknown top-level table (expected [[app]], [[machine]], [[engine]])",
+                )),
+            }
+        }
+    }
+    if !errs.is_empty() {
+        return Err(DefsError::Invalid(errs));
+    }
+    validate(&set).map_err(DefsError::Invalid)?;
+    Ok(set)
+}
+
+fn each_table(
+    file: &str,
+    key: &str,
+    value: &Json,
+    errs: &mut Vec<ValidationError>,
+    mut f: impl FnMut(&Json, &mut Vec<ValidationError>),
+) {
+    match value.as_arr() {
+        Some(items) => {
+            for item in items {
+                if item.as_obj().is_some() {
+                    f(item, errs);
+                } else {
+                    errs.push(verr(file, &format!("[[{key}]]"), "", "entry is not a table"));
+                }
+            }
+        }
+        None => errs.push(verr(
+            file,
+            &format!("[{key}]"),
+            "",
+            format!("must be an array of tables ([[{key}]])"),
+        )),
+    }
+}
+
+/// Error-accumulating field reader: missing or mistyped keys push a
+/// named [`ValidationError`] and yield a placeholder, so one pass over a
+/// broken file reports *every* problem.
+struct Fields<'a> {
+    file: &'a str,
+    table: String,
+    errs: &'a mut Vec<ValidationError>,
+}
+
+impl<'a> Fields<'a> {
+    fn err(&mut self, key: &str, msg: impl Into<String>) {
+        // pointer paths ("/parameters/steps") display dotted, TOML-style
+        let key = key.trim_start_matches('/').replace('/', ".");
+        self.errs.push(verr(self.file, &self.table, &key, msg));
+    }
+
+    fn req_str(&mut self, t: &Json, key: &str) -> String {
+        match t.pointer(key).and_then(Json::as_str) {
+            Some(s) => s.to_string(),
+            None => {
+                self.err(key, "missing or not a string");
+                String::new()
+            }
+        }
+    }
+
+    fn req_f64(&mut self, t: &Json, key: &str) -> f64 {
+        match t.pointer(key).and_then(Json::as_f64) {
+            Some(v) => v,
+            None => {
+                self.err(key, "missing or not a number");
+                f64::NAN
+            }
+        }
+    }
+
+    fn req_u64(&mut self, t: &Json, key: &str) -> u64 {
+        match t.pointer(key).and_then(Json::as_u64) {
+            Some(v) => v,
+            None => {
+                self.err(key, "missing or not a non-negative integer");
+                0
+            }
+        }
+    }
+
+    fn opt_bool(&mut self, t: &Json, key: &str, default: bool) -> bool {
+        match t.pointer(key) {
+            None => default,
+            Some(v) => match v.as_bool() {
+                Some(b) => b,
+                None => {
+                    self.err(key, "not a boolean");
+                    default
+                }
+            },
+        }
+    }
+
+    fn str_arr(&mut self, t: &Json, key: &str) -> Vec<String> {
+        let Some(items) = t.pointer(key).and_then(Json::as_arr) else {
+            self.err(key, "missing or not an array of strings");
+            return Vec::new();
+        };
+        let mut out = Vec::with_capacity(items.len());
+        for item in items {
+            match item.as_str() {
+                Some(s) => out.push(s.to_string()),
+                None => self.err(key, "array element is not a string"),
+            }
+        }
+        out
+    }
+}
+
+fn app_from(file: &str, t: &Json, errs: &mut Vec<ValidationError>) -> AppDef {
+    let name = t.get("name").and_then(Json::as_str).unwrap_or("?").to_string();
+    let mut f = Fields {
+        file,
+        table: format!("[[app]] '{name}'"),
+        errs,
+    };
+    if t.get("name").and_then(Json::as_str).is_none() {
+        f.err("name", "missing or not a string");
+    }
+    let rung = f.req_str(t, "maturity");
+    let maturity = match Maturity::parse(&rung) {
+        Ok(m) => m,
+        Err(_) => {
+            if !rung.is_empty() {
+                f.err(
+                    "maturity",
+                    format!(
+                        "'{rung}' is not a maturity rung \
+                         (runnability|instrumentability|reproducibility)"
+                    ),
+                );
+            }
+            Maturity::Runnability
+        }
+    };
+    AppDef {
+        domain: f.req_str(t, "domain"),
+        maturity,
+        engine: f.req_str(t, "engine"),
+        nodes: f.req_u64(t, "nodes"),
+        gflops_total: f.req_f64(t, "/parameters/gflops_total"),
+        serial_frac: f.req_f64(t, "/parameters/serial_frac"),
+        mem_bound: f.req_f64(t, "/parameters/mem_bound"),
+        comm_mb: f.req_f64(t, "/parameters/comm_mb"),
+        steps: f.req_u64(t, "/parameters/steps"),
+        weak: f.opt_bool(t, "/parameters/weak", false),
+        failure_rate: f.req_f64(t, "/behavior/failure_rate"),
+        primary_metric: f.req_str(t, "/metrics/primary"),
+        record_metrics: f.str_arr(t, "/metrics/record"),
+        name,
+        file: file.to_string(),
+    }
+}
+
+fn machine_from(file: &str, t: &Json, errs: &mut Vec<ValidationError>) -> MachineDef {
+    let name = t.get("name").and_then(Json::as_str).unwrap_or("?").to_string();
+    let mut f = Fields {
+        file,
+        table: format!("[[machine]] '{name}'"),
+        errs,
+    };
+    if t.get("name").and_then(Json::as_str).is_none() {
+        f.err("name", "missing or not a string");
+    }
+    let gpu = {
+        let s = f.req_str(t, "gpu");
+        match GpuGen::parse(&s) {
+            Some(g) => g,
+            None => {
+                if !s.is_empty() {
+                    f.err("gpu", format!("unknown GPU generation '{s}'"));
+                }
+                GpuGen::Ampere
+            }
+        }
+    };
+    let network = network_from(t, &mut f);
+    let power = power_from(t, &mut f);
+    MachineDef {
+        version: f.req_str(t, "version"),
+        gpu,
+        nodes: f.req_u64(t, "nodes"),
+        gpus_per_node: f.req_u64(t, "gpus_per_node"),
+        cores_per_node: f.req_u64(t, "cores_per_node"),
+        partitions: f.str_arr(t, "partitions"),
+        network,
+        power,
+        stream_efficiency: f.req_f64(t, "stream_efficiency"),
+        noise_sigma: f.req_f64(t, "noise_sigma"),
+        perf_factor: f.req_f64(t, "perf_factor"),
+        name,
+        file: file.to_string(),
+    }
+}
+
+fn network_from(t: &Json, f: &mut Fields) -> NetworkLink {
+    match t.get("network") {
+        Some(Json::Str(s)) => NetworkLink::preset(s).unwrap_or_else(|| {
+            f.err("network", format!("unknown network preset '{s}'"));
+            NetworkLink::ndr400()
+        }),
+        Some(sub) if sub.as_obj().is_some() => NetworkLink {
+            name: f.req_str(t, "/network/name"),
+            latency_us: f.req_f64(t, "/network/latency_us"),
+            bw_gbs: f.req_f64(t, "/network/bw_gbs"),
+            rndv_handshake_us: f.req_f64(t, "/network/rndv_handshake_us"),
+            eager_bw_fraction: f.req_f64(t, "/network/eager_bw_fraction"),
+            eager_per_kb_us: f.req_f64(t, "/network/eager_per_kb_us"),
+            default_rndv_thresh: f.req_u64(t, "/network/default_rndv_thresh"),
+        },
+        _ => {
+            f.err("network", "missing/invalid; give a preset name or a [machine.network] table");
+            NetworkLink::ndr400()
+        }
+    }
+}
+
+fn power_from(t: &Json, f: &mut Fields) -> PowerModel {
+    match t.get("power") {
+        Some(Json::Str(s)) => PowerModel::preset(s).unwrap_or_else(|| {
+            f.err("power", format!("unknown power preset '{s}'"));
+            PowerModel::a100()
+        }),
+        Some(sub) if sub.as_obj().is_some() => PowerModel {
+            idle_w: f.req_f64(t, "/power/idle_w"),
+            tdp_w: f.req_f64(t, "/power/tdp_w"),
+            nominal_mhz: f.req_f64(t, "/power/nominal_mhz"),
+            min_mhz: f.req_f64(t, "/power/min_mhz"),
+            sensor_noise_w: f.req_f64(t, "/power/sensor_noise_w"),
+        },
+        _ => {
+            f.err("power", "missing/invalid; give a preset name or a [machine.power] table");
+            PowerModel::a100()
+        }
+    }
+}
+
+fn engine_from(file: &str, t: &Json, errs: &mut Vec<ValidationError>) -> EngineDef {
+    let name = t.get("name").and_then(Json::as_str).unwrap_or("?").to_string();
+    let mut f = Fields {
+        file,
+        table: format!("[[engine]] '{name}'"),
+        errs,
+    };
+    if t.get("name").and_then(Json::as_str).is_none() {
+        f.err("name", "missing or not a string");
+    }
+    EngineDef {
+        command: f.req_str(t, "command"),
+        description: f.req_str(t, "description"),
+        name,
+        file: file.to_string(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const GOOD: &str = r#"
+[[engine]]
+name = "simapp"
+command = "simapp"
+description = "parameterised scalable app"
+
+[[machine]]
+name = "toy"
+version = "2026.1"
+gpu = "gh200"
+nodes = 8
+gpus_per_node = 4
+cores_per_node = 72
+partitions = ["all", "devel"]
+network = "ndr400"
+power = "gh200"
+stream_efficiency = 0.85
+noise_sigma = 0.006
+perf_factor = 1.0
+
+[[app]]
+name = "toy-01"
+domain = "cfd"
+maturity = "runnability"
+engine = "simapp"
+nodes = 2
+
+[app.parameters]
+gflops_total = 10000.0
+serial_frac = 0.01
+mem_bound = 0.4
+comm_mb = 32.0
+steps = 50
+
+[app.behavior]
+failure_rate = 0.02
+
+[app.metrics]
+primary = "tts"
+record = ["tts", "gflops_rate"]
+"#;
+
+    fn files(text: &str) -> Vec<(String, String)> {
+        vec![("dir/defs.toml".to_string(), text.to_string())]
+    }
+
+    #[test]
+    fn good_file_parses() {
+        let set = parse_files(&files(GOOD)).unwrap();
+        assert_eq!(set.apps.len(), 1);
+        assert_eq!(set.machines.len(), 1);
+        assert_eq!(set.engines.len(), 1);
+        let a = &set.apps[0];
+        assert_eq!(a.name, "toy-01");
+        assert_eq!(a.maturity, Maturity::Runnability);
+        assert_eq!(a.steps, 50);
+        assert!(!a.weak);
+        assert_eq!(a.file, "dir/defs.toml");
+        let m = &set.machines[0];
+        assert_eq!(m.network, NetworkLink::ndr400());
+        assert_eq!(m.power, PowerModel::gh200());
+        assert_eq!(m.partitions, vec!["all".to_string(), "devel".to_string()]);
+    }
+
+    #[test]
+    fn full_network_and_power_tables_accepted() {
+        // a [machine.network] header ends the flat key run, so it goes
+        // after the machine's last flat key; inline power stays flat
+        let text = GOOD
+            .replace("network = \"ndr400\"\n", "")
+            .replace(
+                "power = \"gh200\"",
+                "power = { idle_w = 75.0, tdp_w = 700.0, nominal_mhz = 1980.0, \
+                 min_mhz = 345.0, sensor_noise_w = 6.0 }",
+            )
+            .replace(
+                "perf_factor = 1.0",
+                "perf_factor = 1.0\n\n[machine.network]\nname = \"IB-NDR400\"\n\
+                 latency_us = 0.9\nbw_gbs = 48.0\nrndv_handshake_us = 2.2\n\
+                 eager_bw_fraction = 0.55\neager_per_kb_us = 0.012\n\
+                 default_rndv_thresh = 8192",
+            );
+        let set = parse_files(&files(&text)).unwrap();
+        assert_eq!(set.machines[0].network, NetworkLink::ndr400());
+        assert_eq!(set.machines[0].power, PowerModel::gh200());
+    }
+
+    #[test]
+    fn missing_keys_named_with_file_table_key() {
+        let text = GOOD.replace("gflops_total = 10000.0\n", "");
+        let err = parse_files(&files(&text)).unwrap_err();
+        let DefsError::Invalid(errs) = err else {
+            panic!("want Invalid, got {err:?}");
+        };
+        let shown: Vec<String> = errs.iter().map(|e| e.to_string()).collect();
+        assert!(
+            shown.iter().any(|s| s.contains("dir/defs.toml")
+                && s.contains("[[app]] 'toy-01'")
+                && s.contains("gflops_total")),
+            "{shown:?}"
+        );
+    }
+
+    #[test]
+    fn toml_syntax_error_names_file_and_line() {
+        let err = parse_files(&files("[[app]\nname = 3")).unwrap_err();
+        let DefsError::Toml { file, err } = err else {
+            panic!("want Toml");
+        };
+        assert_eq!(file, "dir/defs.toml");
+        assert!(err.to_string().contains("line 1"), "{err}");
+    }
+
+    #[test]
+    fn unknown_top_level_table_rejected() {
+        let err = parse_files(&files(&format!("{GOOD}\n[[application]]\nname = \"x\"\n")))
+            .unwrap_err();
+        let DefsError::Invalid(errs) = err else {
+            panic!("want Invalid");
+        };
+        assert!(errs.iter().any(|e| e.table == "[application]"), "{errs:?}");
+    }
+
+    #[test]
+    fn bad_preset_and_maturity_named() {
+        let text = GOOD
+            .replace("network = \"ndr400\"", "network = \"token-ring\"")
+            .replace("maturity = \"runnability\"", "maturity = \"perfection\"");
+        let DefsError::Invalid(errs) = parse_files(&files(&text)).unwrap_err() else {
+            panic!("want Invalid");
+        };
+        assert!(errs.iter().any(|e| e.key == "network" && e.msg.contains("token-ring")));
+        assert!(errs.iter().any(|e| e.key == "maturity" && e.msg.contains("perfection")));
+    }
+
+    #[test]
+    fn load_dir_unknown_path_is_io_error() {
+        let err = load_dir("/definitely/not/a/dir").unwrap_err();
+        assert!(matches!(err, DefsError::Io { .. }));
+        assert!(err.to_string().contains("/definitely/not/a/dir"));
+    }
+
+    #[test]
+    fn load_dir_empty_dir_is_loud() {
+        let dir = std::env::temp_dir().join("exacb_defs_empty_test");
+        fs::create_dir_all(&dir).unwrap();
+        let err = load_dir(dir.to_str().unwrap()).unwrap_err();
+        assert!(matches!(err, DefsError::Empty { .. }), "{err:?}");
+        assert!(err.to_string().contains("no *.toml files"));
+    }
+
+    #[test]
+    fn load_dir_reads_nested_tree_sorted() {
+        let dir = std::env::temp_dir().join("exacb_defs_tree_test");
+        let _ = fs::remove_dir_all(&dir);
+        fs::create_dir_all(dir.join("sub")).unwrap();
+        // split GOOD: engines+machines at top level, app in a subdir
+        let split = GOOD.find("[[app]]").unwrap();
+        fs::write(dir.join("base.toml"), &GOOD[..split]).unwrap();
+        fs::write(dir.join("sub").join("apps.toml"), &GOOD[split..]).unwrap();
+        fs::write(dir.join("notes.txt"), "ignored").unwrap();
+        let set = load_dir(dir.to_str().unwrap()).unwrap();
+        assert_eq!(set.apps.len(), 1);
+        assert_eq!(set.machines.len(), 1);
+        assert!(set.apps[0].file.ends_with("apps.toml"), "{}", set.apps[0].file);
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,401 @@
+//! BYOB definition layer: benchmarks, machines, and planted behaviors
+//! as data, not code (DESIGN.md §15).
+//!
+//! Everything a collection campaign needs — which apps to run, on which
+//! machines, with which planted-behavior profile — can be expressed as a
+//! directory of `*.toml` files and loaded at runtime:
+//!
+//! * [`model`] — the typed definition model ([`AppDef`], [`MachineDef`],
+//!   [`EngineDef`], [`DefSet`]).
+//! * [`load`] — `*.toml` tree discovery + parsing via
+//!   [`crate::util::tomlite`].
+//! * [`validate`] — loud semantic validation; every error names file,
+//!   table, and key.
+//!
+//! The built-in 72-app JUREAP portfolio and the four standard machines
+//! are themselves re-expressed as the first shipped definition set
+//! ([`builtin`] / [`render`], checked byte-identical to the code path by
+//! `tests/integration_defs.rs`): the code constructors are now just one
+//! producer of the same [`DefSet`] the loader yields. [`run_measure`]
+//! drives a loaded set through the existing concurrent campaign core —
+//! this is what `exacb measure -d <dir>` calls.
+
+pub mod load;
+pub mod model;
+pub mod validate;
+
+pub use load::{load_dir, parse_files, DefsError};
+pub use model::{AppDef, DefSet, EngineDef, MachineDef, BUILTIN_FILE};
+pub use validate::{validate, ValidationError};
+
+use crate::cluster::{Cluster, EventLog, GpuGen, Machine};
+use crate::coordinator::{
+    onboard_multi, run_campaign_concurrent_with, CollectionSummary, PipelineTask, World,
+};
+use crate::workloads::portfolio::{jureap, PortfolioApp};
+
+/// The built-in JUREAP-like collection as a definition set: the 72-app
+/// portfolio, the four standard machines, and the `simapp` engine.
+pub fn builtin() -> DefSet {
+    let apps = jureap()
+        .iter()
+        .map(|a| AppDef {
+            name: a.name.clone(),
+            domain: a.domain.clone(),
+            maturity: a.maturity,
+            engine: "simapp".to_string(),
+            nodes: a.nodes,
+            gflops_total: a.model.gflops_total,
+            serial_frac: a.model.serial_frac,
+            mem_bound: a.model.mem_bound,
+            comm_mb: a.model.comm_mb,
+            steps: a.model.steps,
+            weak: a.model.weak,
+            failure_rate: a.failure_rate,
+            primary_metric: "tts".to_string(),
+            record_metrics: vec!["tts".to_string(), "gflops_rate".to_string()],
+            file: BUILTIN_FILE.to_string(),
+        })
+        .collect();
+    let machines = crate::cluster::standard_machines()
+        .iter()
+        .map(|m| MachineDef {
+            name: m.name.clone(),
+            version: m.version.clone(),
+            gpu: m.gpu_gen,
+            nodes: m.nodes,
+            gpus_per_node: m.gpus_per_node,
+            cores_per_node: m.cores_per_node,
+            partitions: m.queues.clone(),
+            network: m.network.clone(),
+            power: m.power.clone(),
+            stream_efficiency: m.stream_efficiency,
+            noise_sigma: m.noise_sigma,
+            perf_factor: m.perf_factor,
+            file: BUILTIN_FILE.to_string(),
+        })
+        .collect();
+    let engines = vec![EngineDef {
+        name: "simapp".to_string(),
+        command: "simapp".to_string(),
+        description: "parameterised scalable application (workloads::scalable)".to_string(),
+        file: BUILTIN_FILE.to_string(),
+    }];
+    DefSet {
+        apps,
+        machines,
+        engines,
+    }
+}
+
+fn toml_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            _ => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+/// Render an `f64` so [`crate::util::tomlite`] parses it back to the
+/// same bits: `{:?}` emits the shortest round-tripping decimal and
+/// always keeps a `.` or exponent, so the token stays a float.
+fn toml_f64(v: f64) -> String {
+    format!("{v:?}")
+}
+
+fn gpu_slug(g: GpuGen) -> &'static str {
+    match g {
+        GpuGen::Ampere => "ampere",
+        GpuGen::Hopper => "hopper",
+        GpuGen::GraceHopper => "gh200",
+    }
+}
+
+fn str_list(items: &[String]) -> String {
+    let quoted: Vec<String> = items.iter().map(|s| toml_str(s)).collect();
+    format!("[{}]", quoted.join(", "))
+}
+
+/// Render a definition set as `(file name, contents)` pairs — the exact
+/// shipped `benchmarks/` layout. `parse_files(&render(set))` must
+/// reproduce `set` bit-for-bit (property-tested), which is how the
+/// shipped definition directory was generated and how it is proven to
+/// replay the built-in portfolio.
+pub fn render(set: &DefSet) -> Vec<(String, String)> {
+    let mut engines = String::from(
+        "# Engines: labelled harness commands (generated from the built-in set).\n",
+    );
+    for e in &set.engines {
+        engines.push_str(&format!(
+            "\n[[engine]]\nname = {}\ncommand = {}\ndescription = {}\n",
+            toml_str(&e.name),
+            toml_str(&e.command),
+            toml_str(&e.description),
+        ));
+    }
+
+    let mut apps = String::from(
+        "# The JUREAP-like 72-app portfolio as data. App order is semantic:\n\
+         # it drives machine assignment and the seeded daily shuffle, so\n\
+         # this file lists apps in exactly the built-in portfolio order.\n",
+    );
+    for a in &set.apps {
+        apps.push_str(&format!(
+            "\n[[app]]\nname = {name}\ndomain = {domain}\nmaturity = {mat}\n\
+             engine = {engine}\nnodes = {nodes}\n\n\
+             [app.parameters]\ngflops_total = {gf}\nserial_frac = {sf}\n\
+             mem_bound = {mb}\ncomm_mb = {cm}\nsteps = {steps}\nweak = {weak}\n\n\
+             [app.behavior]\nfailure_rate = {fr}\n\n\
+             [app.metrics]\nprimary = {prim}\nrecord = {rec}\n",
+            name = toml_str(&a.name),
+            domain = toml_str(&a.domain),
+            mat = toml_str(a.maturity.name()),
+            engine = toml_str(&a.engine),
+            nodes = a.nodes,
+            gf = toml_f64(a.gflops_total),
+            sf = toml_f64(a.serial_frac),
+            mb = toml_f64(a.mem_bound),
+            cm = toml_f64(a.comm_mb),
+            steps = a.steps,
+            weak = a.weak,
+            fr = toml_f64(a.failure_rate),
+            prim = toml_str(&a.primary_metric),
+            rec = str_list(&a.record_metrics),
+        ));
+    }
+
+    let mut machines = String::from(
+        "# The four standard JSC-like systems with full network and power\n\
+         # fingerprints (presets like network = \"ndr400\" also work).\n",
+    );
+    for m in &set.machines {
+        machines.push_str(&format!(
+            "\n[[machine]]\nname = {name}\nversion = {version}\ngpu = {gpu}\n\
+             nodes = {nodes}\ngpus_per_node = {gpn}\ncores_per_node = {cpn}\n\
+             partitions = {parts}\nstream_efficiency = {se}\nnoise_sigma = {ns}\n\
+             perf_factor = {pf}\n\n\
+             [machine.network]\nname = {nname}\nlatency_us = {lat}\nbw_gbs = {bw}\n\
+             rndv_handshake_us = {hs}\neager_bw_fraction = {ebf}\n\
+             eager_per_kb_us = {ekb}\ndefault_rndv_thresh = {thresh}\n\n\
+             [machine.power]\nidle_w = {idle}\ntdp_w = {tdp}\nnominal_mhz = {nom}\n\
+             min_mhz = {min}\nsensor_noise_w = {snw}\n",
+            name = toml_str(&m.name),
+            version = toml_str(&m.version),
+            gpu = toml_str(gpu_slug(m.gpu)),
+            nodes = m.nodes,
+            gpn = m.gpus_per_node,
+            cpn = m.cores_per_node,
+            parts = str_list(&m.partitions),
+            se = toml_f64(m.stream_efficiency),
+            ns = toml_f64(m.noise_sigma),
+            pf = toml_f64(m.perf_factor),
+            nname = toml_str(&m.network.name),
+            lat = toml_f64(m.network.latency_us),
+            bw = toml_f64(m.network.bw_gbs),
+            hs = toml_f64(m.network.rndv_handshake_us),
+            ebf = toml_f64(m.network.eager_bw_fraction),
+            ekb = toml_f64(m.network.eager_per_kb_us),
+            thresh = m.network.default_rndv_thresh,
+            idle = toml_f64(m.power.idle_w),
+            tdp = toml_f64(m.power.tdp_w),
+            nom = toml_f64(m.power.nominal_mhz),
+            min = toml_f64(m.power.min_mhz),
+            snw = toml_f64(m.power.sensor_noise_w),
+        ));
+    }
+
+    vec![
+        ("engines.toml".to_string(), engines),
+        ("jureap.toml".to_string(), apps),
+        ("machines.toml".to_string(), machines),
+    ]
+}
+
+/// The definition set as campaign apps, in definition order.
+pub fn to_portfolio(set: &DefSet) -> Vec<PortfolioApp> {
+    set.apps.iter().map(PortfolioApp::from_def).collect()
+}
+
+/// The definition set as a simulated computing centre.
+pub fn to_cluster(set: &DefSet) -> Cluster {
+    Cluster {
+        machines: set.machines.iter().map(Machine::from_def).collect(),
+        events: EventLog::new(),
+    }
+}
+
+/// How to run a definition set as a campaign (`exacb measure` flags).
+#[derive(Debug, Clone)]
+pub struct MeasurePlan {
+    /// Limit to the first N apps (0 = all).
+    pub apps: usize,
+    /// Simulated campaign days per sweep.
+    pub days: i64,
+    /// Machines to run on; empty = every machine exposing `queue`.
+    pub machines: Vec<String>,
+    /// Batch partition campaigns submit to.
+    pub queue: String,
+    pub seed: u64,
+    /// Enable the execution cache (warm sweeps replay from it).
+    pub cache: bool,
+    /// Number of campaign sweeps over the same days (>1 exercises warm
+    /// replay).
+    pub sweeps: u32,
+}
+
+impl Default for MeasurePlan {
+    fn default() -> Self {
+        MeasurePlan {
+            apps: 0,
+            days: 3,
+            machines: Vec::new(),
+            queue: "all".to_string(),
+            seed: 20260101,
+            cache: true,
+            sweeps: 1,
+        }
+    }
+}
+
+/// Run a validated definition set through the concurrent campaign core
+/// with a pluggable event loop (the differential tests drive the same
+/// set through `drive` and `drive_reference`).
+pub fn run_measure_with(
+    set: &DefSet,
+    plan: &MeasurePlan,
+    drive: fn(&mut World, Vec<PipelineTask>) -> Vec<u64>,
+) -> Result<(World, Vec<CollectionSummary>), String> {
+    let mut apps = to_portfolio(set);
+    if plan.apps > 0 && plan.apps < apps.len() {
+        apps.truncate(plan.apps);
+    }
+    let machine_names: Vec<String> = if plan.machines.is_empty() {
+        set.machines_with_partition(&plan.queue)
+            .iter()
+            .map(|m| m.name.clone())
+            .collect()
+    } else {
+        for name in &plan.machines {
+            let Some(m) = set.machine(name) else {
+                return Err(format!("unknown machine '{name}' in definition set"));
+            };
+            if !m.partitions.iter().any(|p| p == &plan.queue) {
+                return Err(format!(
+                    "machine '{name}' does not expose partition '{}'",
+                    plan.queue
+                ));
+            }
+        }
+        plan.machines.clone()
+    };
+    if machine_names.is_empty() {
+        return Err(format!("no machine exposes partition '{}'", plan.queue));
+    }
+    let mut world = World::with_cluster(to_cluster(set), plan.seed);
+    if plan.cache {
+        world.enable_cache();
+    }
+    let machine_refs: Vec<&str> = machine_names.iter().map(String::as_str).collect();
+    onboard_multi(&mut world, &apps, &machine_refs, &plan.queue);
+    let mut summaries = Vec::new();
+    for _ in 0..plan.sweeps.max(1) {
+        summaries.push(run_campaign_concurrent_with(
+            &mut world,
+            &apps,
+            &machine_refs,
+            plan.days,
+            drive,
+        ));
+    }
+    Ok((world, summaries))
+}
+
+/// [`run_measure_with`] under the production event loop.
+pub fn run_measure(
+    set: &DefSet,
+    plan: &MeasurePlan,
+) -> Result<(World, Vec<CollectionSummary>), String> {
+    run_measure_with(set, plan, crate::coordinator::event_loop::drive)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtin_matches_code_constructors() {
+        let set = builtin();
+        assert_eq!(set.apps.len(), 72);
+        assert_eq!(set.machines.len(), 4);
+        assert_eq!(to_portfolio(&set), jureap());
+        let cluster = to_cluster(&set);
+        assert_eq!(cluster.machines, Cluster::standard().machines);
+    }
+
+    #[test]
+    fn render_round_trips_bit_exact() {
+        let set = builtin();
+        let rendered = render(&set);
+        assert_eq!(rendered.len(), 3);
+        let loaded = parse_files(&rendered).expect("rendered builtin must parse clean");
+        // f64 fields compare by == (bit-exact for non-NaN), and PartialEq
+        // ignores provenance — this is the whole round-trip contract
+        assert_eq!(loaded, set);
+    }
+
+    #[test]
+    fn rendered_floats_never_use_uppercase_or_lose_the_point() {
+        // guard the render contract toml_f64 relies on
+        for (_, text) in render(&builtin()) {
+            for line in text.lines() {
+                assert!(!line.contains('E'), "uppercase exponent in {line}");
+            }
+        }
+    }
+
+    #[test]
+    fn measure_plan_resolves_machines_by_partition() {
+        let set = builtin();
+        let plan = MeasurePlan {
+            apps: 2,
+            days: 1,
+            queue: "booster".to_string(),
+            ..MeasurePlan::default()
+        };
+        let (world, summaries) = run_measure(&set, &plan).unwrap();
+        // jupiter + juwels-booster expose "booster"
+        assert_eq!(summaries.len(), 1);
+        assert_eq!(summaries[0].apps, 2);
+        assert_eq!(summaries[0].pipelines_run, 2);
+        assert!(world.repos.len() == 2);
+    }
+
+    #[test]
+    fn measure_plan_rejects_bad_machines_loudly() {
+        let set = builtin();
+        let mut plan = MeasurePlan {
+            apps: 1,
+            days: 1,
+            ..MeasurePlan::default()
+        };
+        plan.machines = vec!["frontier".to_string()];
+        let err = run_measure(&set, &plan).unwrap_err();
+        assert!(err.contains("unknown machine 'frontier'"), "{err}");
+        plan.machines = vec!["juwels-booster".to_string()];
+        plan.queue = "all".to_string();
+        let err = run_measure(&set, &plan).unwrap_err();
+        assert!(err.contains("does not expose partition 'all'"), "{err}");
+        plan.machines = Vec::new();
+        plan.queue = "no-such-queue".to_string();
+        let err = run_measure(&set, &plan).unwrap_err();
+        assert!(err.contains("no machine exposes partition"), "{err}");
+    }
+}

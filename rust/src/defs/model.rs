@@ -1,0 +1,153 @@
+//! Typed definition model (DESIGN.md §15).
+//!
+//! The parsed, validated form of a `*.toml` definition tree: apps
+//! (command parameter space + metric contract + planted-behavior
+//! profile), machines (partitions, node shape, power/stage fingerprint),
+//! and engines (labelled commands). Each definition remembers the file
+//! it came from for error naming; equality deliberately ignores that
+//! provenance, so a definition set rendered from the built-ins compares
+//! equal to the same set loaded back from disk.
+
+use crate::cluster::{GpuGen, NetworkLink, PowerModel};
+use crate::workloads::portfolio::Maturity;
+
+/// Provenance marker for definitions constructed in code.
+pub const BUILTIN_FILE: &str = "<builtin>";
+
+/// One benchmark application definition (`[[app]]`).
+#[derive(Debug, Clone)]
+pub struct AppDef {
+    pub name: String,
+    pub domain: String,
+    pub maturity: Maturity,
+    /// Name of the engine (`[[engine]]`) whose command runs this app.
+    pub engine: String,
+    /// Default node count of the standard use case.
+    pub nodes: u64,
+    // -- parameter space (`[app.parameters]`) --
+    pub gflops_total: f64,
+    pub serial_frac: f64,
+    pub mem_bound: f64,
+    pub comm_mb: f64,
+    pub steps: u64,
+    pub weak: bool,
+    // -- planted-behavior profile (`[app.behavior]`) --
+    pub failure_rate: f64,
+    // -- metric contract (`[app.metrics]`) --
+    pub primary_metric: String,
+    pub record_metrics: Vec<String>,
+    /// Source file (error naming only; ignored by equality).
+    pub file: String,
+}
+
+impl PartialEq for AppDef {
+    fn eq(&self, other: &AppDef) -> bool {
+        self.name == other.name
+            && self.domain == other.domain
+            && self.maturity == other.maturity
+            && self.engine == other.engine
+            && self.nodes == other.nodes
+            && self.gflops_total == other.gflops_total
+            && self.serial_frac == other.serial_frac
+            && self.mem_bound == other.mem_bound
+            && self.comm_mb == other.comm_mb
+            && self.steps == other.steps
+            && self.weak == other.weak
+            && self.failure_rate == other.failure_rate
+            && self.primary_metric == other.primary_metric
+            && self.record_metrics == other.record_metrics
+    }
+}
+
+/// One machine definition (`[[machine]]`).
+#[derive(Debug, Clone)]
+pub struct MachineDef {
+    pub name: String,
+    pub version: String,
+    pub gpu: GpuGen,
+    pub nodes: u64,
+    pub gpus_per_node: u64,
+    pub cores_per_node: u64,
+    /// Batch partitions (queues) this system exposes.
+    pub partitions: Vec<String>,
+    /// Network fingerprint (`[machine.network]` or a preset name).
+    pub network: NetworkLink,
+    /// Power fingerprint (`[machine.power]` or a preset name).
+    pub power: PowerModel,
+    pub stream_efficiency: f64,
+    pub noise_sigma: f64,
+    pub perf_factor: f64,
+    /// Source file (error naming only; ignored by equality).
+    pub file: String,
+}
+
+impl PartialEq for MachineDef {
+    fn eq(&self, other: &MachineDef) -> bool {
+        self.name == other.name
+            && self.version == other.version
+            && self.gpu == other.gpu
+            && self.nodes == other.nodes
+            && self.gpus_per_node == other.gpus_per_node
+            && self.cores_per_node == other.cores_per_node
+            && self.partitions == other.partitions
+            && self.network == other.network
+            && self.power == other.power
+            && self.stream_efficiency == other.stream_efficiency
+            && self.noise_sigma == other.noise_sigma
+            && self.perf_factor == other.perf_factor
+    }
+}
+
+/// One engine definition (`[[engine]]`): a labelled command.
+#[derive(Debug, Clone)]
+pub struct EngineDef {
+    pub name: String,
+    /// Binary (first word) must pass `workloads::known_binary`.
+    pub command: String,
+    pub description: String,
+    /// Source file (error naming only; ignored by equality).
+    pub file: String,
+}
+
+impl PartialEq for EngineDef {
+    fn eq(&self, other: &EngineDef) -> bool {
+        self.name == other.name
+            && self.command == other.command
+            && self.description == other.description
+    }
+}
+
+/// A complete definition set, in file-then-declaration order.
+///
+/// Order is semantic, not cosmetic: app order drives the round-robin
+/// machine assignment and the seeded daily shuffle of the campaign work
+/// queue, so the shipped `benchmarks/` set lists apps in exactly the
+/// built-in portfolio order to replay it byte-identically.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct DefSet {
+    pub apps: Vec<AppDef>,
+    pub machines: Vec<MachineDef>,
+    pub engines: Vec<EngineDef>,
+}
+
+impl DefSet {
+    pub fn app(&self, name: &str) -> Option<&AppDef> {
+        self.apps.iter().find(|a| a.name == name)
+    }
+
+    pub fn machine(&self, name: &str) -> Option<&MachineDef> {
+        self.machines.iter().find(|m| m.name == name)
+    }
+
+    pub fn engine(&self, name: &str) -> Option<&EngineDef> {
+        self.engines.iter().find(|e| e.name == name)
+    }
+
+    /// Machines exposing a given partition (queue) name.
+    pub fn machines_with_partition(&self, queue: &str) -> Vec<&MachineDef> {
+        self.machines
+            .iter()
+            .filter(|m| m.partitions.iter().any(|p| p == queue))
+            .collect()
+    }
+}

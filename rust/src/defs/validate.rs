@@ -1,0 +1,275 @@
+//! Load-time validation of definition sets (DESIGN.md §15).
+//!
+//! Validation is **loud and total**: every error names the file, the
+//! table, and the key it concerns, and all errors are collected in one
+//! pass — a contributor fixing a 500-definition directory gets the full
+//! list, not a fix-one-rerun loop. `exacb measure --validate-only`
+//! exposes this as a CI lint.
+
+use super::model::DefSet;
+use crate::workloads::known_binary;
+use std::fmt;
+
+/// One named validation failure.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ValidationError {
+    /// Source file (or `<builtin>`).
+    pub file: String,
+    /// Table context, e.g. `[[app]] 'climate-01'`.
+    pub table: String,
+    /// Offending key within the table (may be empty for table-level
+    /// problems such as duplicate names).
+    pub key: String,
+    pub msg: String,
+}
+
+impl fmt::Display for ValidationError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.key.is_empty() {
+            write!(f, "{}: {}: {}", self.file, self.table, self.msg)
+        } else {
+            write!(f, "{}: {}: key '{}': {}", self.file, self.table, self.key, self.msg)
+        }
+    }
+}
+
+impl std::error::Error for ValidationError {}
+
+pub(crate) fn verr(
+    file: &str,
+    table: &str,
+    key: &str,
+    msg: impl Into<String>,
+) -> ValidationError {
+    ValidationError {
+        file: file.to_string(),
+        table: table.to_string(),
+        key: key.to_string(),
+        msg: msg.into(),
+    }
+}
+
+fn name_ok(name: &str) -> bool {
+    !name.is_empty()
+        && name
+            .chars()
+            .all(|c| c.is_ascii_alphanumeric() || matches!(c, '.' | '_' | '-'))
+}
+
+/// Validate a parsed definition set; collects **all** errors.
+pub fn validate(set: &DefSet) -> Result<(), Vec<ValidationError>> {
+    let mut errs = Vec::new();
+
+    if set.apps.is_empty() {
+        errs.push(verr("<set>", "[[app]]", "", "definition set contains no apps"));
+    }
+    if set.machines.is_empty() {
+        errs.push(verr("<set>", "[[machine]]", "", "definition set contains no machines"));
+    }
+
+    for (i, a) in set.apps.iter().enumerate() {
+        let table = format!("[[app]] '{}'", a.name);
+        let e = |key: &str, msg: String| verr(&a.file, &table, key, msg);
+        if !name_ok(&a.name) {
+            errs.push(e(
+                "name",
+                format!("'{}' is not a valid app name ([A-Za-z0-9._-]+)", a.name),
+            ));
+        }
+        if let Some(prev) = set.apps[..i].iter().find(|p| p.name == a.name) {
+            errs.push(e("", format!("duplicate app name (also defined in {})", prev.file)));
+        }
+        match set.engine(&a.engine) {
+            None => errs.push(e(
+                "engine",
+                format!("references undefined engine '{}'", a.engine),
+            )),
+            Some(eng) => {
+                let bin = eng.command.split_whitespace().next().unwrap_or("");
+                if !known_binary(bin) {
+                    errs.push(verr(
+                        &eng.file,
+                        &format!("[[engine]] '{}'", eng.name),
+                        "command",
+                        format!("'{bin}' is not an executable the harness knows"),
+                    ));
+                }
+            }
+        }
+        if a.nodes < 1 {
+            errs.push(e("nodes", "must be >= 1".into()));
+        }
+        if !(a.gflops_total > 0.0) {
+            errs.push(e("gflops_total", "must be > 0".into()));
+        }
+        if !(0.0..=1.0).contains(&a.serial_frac) {
+            errs.push(e("serial_frac", "must be within [0, 1]".into()));
+        }
+        if !(0.0..=1.0).contains(&a.mem_bound) {
+            errs.push(e("mem_bound", "must be within [0, 1]".into()));
+        }
+        if !(a.comm_mb >= 0.0) {
+            errs.push(e("comm_mb", "must be >= 0".into()));
+        }
+        if a.steps < 1 {
+            errs.push(e("steps", "must be >= 1".into()));
+        }
+        if !(0.0..=1.0).contains(&a.failure_rate) {
+            errs.push(e("failure_rate", "must be within [0, 1]".into()));
+        }
+        if a.record_metrics.is_empty() {
+            errs.push(e("record", "must list at least one metric".into()));
+        } else if !a.record_metrics.contains(&a.primary_metric) {
+            errs.push(e(
+                "primary",
+                format!("primary metric '{}' is not in 'record'", a.primary_metric),
+            ));
+        }
+    }
+
+    for (i, m) in set.machines.iter().enumerate() {
+        let table = format!("[[machine]] '{}'", m.name);
+        let e = |key: &str, msg: String| verr(&m.file, &table, key, msg);
+        if !name_ok(&m.name) {
+            errs.push(e(
+                "name",
+                format!("'{}' is not a valid machine name ([A-Za-z0-9._-]+)", m.name),
+            ));
+        }
+        if let Some(prev) = set.machines[..i].iter().find(|p| p.name == m.name) {
+            errs.push(e(
+                "",
+                format!("duplicate machine name (also defined in {})", prev.file),
+            ));
+        }
+        if m.nodes < 1 {
+            errs.push(e("nodes", "must be >= 1".into()));
+        }
+        if m.gpus_per_node < 1 {
+            errs.push(e("gpus_per_node", "must be >= 1".into()));
+        }
+        if m.cores_per_node < 1 {
+            errs.push(e("cores_per_node", "must be >= 1".into()));
+        }
+        if m.partitions.is_empty() {
+            errs.push(e("partitions", "must list at least one partition".into()));
+        }
+        if !(m.stream_efficiency > 0.0 && m.stream_efficiency <= 1.0) {
+            errs.push(e("stream_efficiency", "must be within (0, 1]".into()));
+        }
+        if !(0.0..1.0).contains(&m.noise_sigma) {
+            errs.push(e("noise_sigma", "must be within [0, 1)".into()));
+        }
+        if !(m.perf_factor > 0.0) {
+            errs.push(e("perf_factor", "must be > 0".into()));
+        }
+        if !(m.network.bw_gbs > 0.0) {
+            errs.push(e("network.bw_gbs", "must be > 0".into()));
+        }
+        if !(m.network.latency_us >= 0.0) {
+            errs.push(e("network.latency_us", "must be >= 0".into()));
+        }
+        if !(m.power.tdp_w > m.power.idle_w && m.power.idle_w >= 0.0) {
+            errs.push(e("power.tdp_w", "need tdp_w > idle_w >= 0".into()));
+        }
+        if !(m.power.nominal_mhz >= m.power.min_mhz && m.power.min_mhz > 0.0) {
+            errs.push(e("power.nominal_mhz", "need nominal_mhz >= min_mhz > 0".into()));
+        }
+    }
+
+    for (i, eng) in set.engines.iter().enumerate() {
+        let table = format!("[[engine]] '{}'", eng.name);
+        if let Some(prev) = set.engines[..i].iter().find(|p| p.name == eng.name) {
+            errs.push(verr(
+                &eng.file,
+                &table,
+                "",
+                format!("duplicate engine name (also defined in {})", prev.file),
+            ));
+        }
+        if eng.command.trim().is_empty() {
+            errs.push(verr(&eng.file, &table, "command", "must not be empty"));
+        }
+    }
+
+    if errs.is_empty() {
+        Ok(())
+    } else {
+        Err(errs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::builtin;
+    use super::*;
+
+    #[test]
+    fn builtin_set_validates_clean() {
+        validate(&builtin()).unwrap();
+    }
+
+    #[test]
+    fn errors_name_file_table_and_key() {
+        let mut set = builtin();
+        set.apps[3].steps = 0;
+        set.apps[3].failure_rate = 1.5;
+        set.machines[1].stream_efficiency = 0.0;
+        let errs = validate(&set).unwrap_err();
+        assert_eq!(errs.len(), 3);
+        let app_name = set.apps[3].name.clone();
+        let shown: Vec<String> = errs.iter().map(|e| e.to_string()).collect();
+        assert!(shown[0].contains("<builtin>"), "{}", shown[0]);
+        assert!(shown[0].contains(&format!("[[app]] '{app_name}'")), "{}", shown[0]);
+        assert!(shown[0].contains("key 'steps'"), "{}", shown[0]);
+        assert!(shown[1].contains("key 'failure_rate'"), "{}", shown[1]);
+        assert!(shown[2].contains("[[machine]] 'jupiter'"), "{}", shown[2]);
+        assert!(shown[2].contains("stream_efficiency"), "{}", shown[2]);
+    }
+
+    #[test]
+    fn unknown_engine_and_unknown_binary_flagged() {
+        let mut set = builtin();
+        set.apps[0].engine = "mystery".into();
+        let errs = validate(&set).unwrap_err();
+        assert!(errs.iter().any(|e| e.msg.contains("undefined engine 'mystery'")));
+
+        let mut set = builtin();
+        set.engines[0].command = "definitely-not-a-binary --x".into();
+        let errs = validate(&set).unwrap_err();
+        assert!(
+            errs.iter().any(|e| e.key == "command" && e.msg.contains("definitely-not-a-binary")),
+            "{errs:?}"
+        );
+    }
+
+    #[test]
+    fn duplicate_names_flagged_across_files() {
+        let mut set = builtin();
+        let mut dup = set.apps[0].clone();
+        dup.file = "community/extra.toml".into();
+        set.apps.push(dup);
+        let errs = validate(&set).unwrap_err();
+        let e = errs.iter().find(|e| e.msg.contains("duplicate app name")).unwrap();
+        assert_eq!(e.file, "community/extra.toml");
+        assert!(e.msg.contains("<builtin>"), "{e}");
+    }
+
+    #[test]
+    fn empty_set_is_invalid() {
+        let errs = validate(&DefSet::default()).unwrap_err();
+        assert_eq!(errs.len(), 2);
+    }
+
+    #[test]
+    fn metric_contract_enforced() {
+        let mut set = builtin();
+        set.apps[0].primary_metric = "latency".into();
+        let errs = validate(&set).unwrap_err();
+        assert!(errs.iter().any(|e| e.key == "primary"), "{errs:?}");
+        let mut set = builtin();
+        set.apps[0].record_metrics.clear();
+        let errs = validate(&set).unwrap_err();
+        assert!(errs.iter().any(|e| e.key == "record"), "{errs:?}");
+    }
+}

@@ -30,6 +30,7 @@ pub mod workloads;
 pub mod energy;
 pub mod analysis;
 pub mod coordinator;
+pub mod defs;
 pub mod tracking;
 pub mod maturity;
 pub mod query;

@@ -10,6 +10,7 @@ pub mod rex;
 pub mod stats;
 pub mod table;
 pub mod timeutil;
+pub mod tomlite;
 pub mod yamlite;
 
 /// fnv1a-64 content hash — stable IDs for store objects and job names.

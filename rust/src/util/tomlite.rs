@@ -1,0 +1,652 @@
+//! TOML-subset parser (substrate; DESIGN.md §15).
+//!
+//! The BYOB definition layer (`crate::defs`) stores benchmarks,
+//! machines, and engines as `*.toml` files. No TOML crate is vendored
+//! (the build is offline and dependency-free), so — mirroring
+//! [`super::yamlite`] and [`super::rex`] — we parse the subset those
+//! definition files actually use into the [`Json`] value model:
+//!
+//! * `[table]` headers with dotted paths, `[[array.of.tables]]`
+//!   headers (a later `[a.b]` descends into the *last* `[[a]]` element,
+//!   standard TOML semantics),
+//! * `key = value` pairs with bare or quoted keys,
+//! * values: basic `"…"` strings (with `\" \\ \n \t \r` escapes),
+//!   literal `'…'` strings, integers (with `_` separators), floats
+//!   (correctly-rounded via `f64::from_str`, so shortest-round-trip
+//!   decimals re-parse to identical bits), booleans, arrays (including
+//!   multi-line), and inline tables `{k = v, …}`,
+//! * `#` comments and blank lines.
+//!
+//! Not supported (by design): dates, multi-line strings, dotted keys in
+//! key position, and table re-opening. Duplicate keys and duplicate
+//! table headers are **rejected with a line-numbered error** — a
+//! silently shadowed key in a benchmark definition is a
+//! wrong-measurement bug, not a convenience.
+
+use super::json::Json;
+use std::cell::Cell;
+use std::fmt;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct TomlError {
+    pub msg: String,
+    pub line: usize,
+}
+
+impl fmt::Display for TomlError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "toml error at line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for TomlError {}
+
+thread_local! {
+    /// Total successful `parse` calls on this thread — the observable
+    /// `benches/perf_defs.rs` pins to prove warm campaign days never
+    /// re-parse definition files.
+    static PARSE_CALLS: Cell<u64> = const { Cell::new(0) };
+}
+
+/// Number of completed `parse` calls on this thread since start.
+pub fn parse_count() -> u64 {
+    PARSE_CALLS.with(|c| c.get())
+}
+
+fn err(msg: impl Into<String>, line: usize) -> TomlError {
+    TomlError {
+        msg: msg.into(),
+        line,
+    }
+}
+
+/// One logical line: physical lines joined until brackets balance.
+struct Logical {
+    text: String,
+    no: usize, // 1-based number of the first physical line
+}
+
+pub fn parse(src: &str) -> Result<Json, TomlError> {
+    let logicals = preprocess(src)?;
+    let mut root = Json::obj();
+    // current table path; empty = root
+    let mut path: Vec<String> = Vec::new();
+    for l in &logicals {
+        let t = l.text.trim();
+        if let Some(body) = t.strip_prefix("[[") {
+            let body = body
+                .strip_suffix("]]")
+                .ok_or_else(|| err("array-of-tables header must end with ']]'", l.no))?;
+            path = split_path(body, l.no)?;
+            open_array_element(&mut root, &path, l.no)?;
+        } else if let Some(body) = t.strip_prefix('[') {
+            let body = body
+                .strip_suffix(']')
+                .ok_or_else(|| err("table header must end with ']'", l.no))?;
+            path = split_path(body, l.no)?;
+            open_table(&mut root, &path, l.no)?;
+        } else {
+            let (key, rest) = parse_key(t, l.no)?;
+            let rest = rest.trim_start();
+            let rest = rest
+                .strip_prefix('=')
+                .ok_or_else(|| err(format!("expected '=' after key '{key}'"), l.no))?;
+            let mut p = Cursor::new(rest, l.no);
+            let value = p.value()?;
+            p.expect_end()?;
+            let table = navigate(&mut root, &path, l.no)?;
+            insert_unique(table, key, value, l.no)?;
+        }
+    }
+    PARSE_CALLS.with(|c| c.set(c.get() + 1));
+    Ok(root)
+}
+
+/// Strip comments, drop blanks, and join physical lines until `[`/`{`
+/// brackets balance (multi-line arrays and inline tables).
+fn preprocess(src: &str) -> Result<Vec<Logical>, TomlError> {
+    let mut out: Vec<Logical> = Vec::new();
+    let mut pending: Option<Logical> = None;
+    let mut depth = 0i32;
+    for (i, raw) in src.lines().enumerate() {
+        let no = i + 1;
+        let stripped = strip_comment(raw, no)?;
+        let t = stripped.trim();
+        if t.is_empty() && pending.is_none() {
+            continue;
+        }
+        let header = pending.is_none() && t.starts_with('[');
+        if let Some(l) = pending.as_mut() {
+            l.text.push(' ');
+            l.text.push_str(t);
+        } else {
+            pending = Some(Logical {
+                text: t.to_string(),
+                no,
+            });
+        }
+        // table headers balance on their own line; everything else
+        // contributes bracket depth (multi-line arrays/inline tables)
+        if !header {
+            depth += bracket_delta(t, no)?;
+        }
+        if depth < 0 {
+            return Err(err("unbalanced ']' or '}'", no));
+        }
+        if depth == 0 {
+            out.push(pending.take().expect("set above"));
+        }
+    }
+    if let Some(l) = pending {
+        return Err(err("unterminated array or inline table", l.no));
+    }
+    Ok(out)
+}
+
+/// Net bracket depth change of a line, ignoring brackets inside strings.
+fn bracket_delta(t: &str, no: usize) -> Result<i32, TomlError> {
+    let mut depth = 0i32;
+    let mut chars = t.chars().peekable();
+    while let Some(c) = chars.next() {
+        match c {
+            '"' => {
+                loop {
+                    match chars.next() {
+                        Some('\\') => {
+                            chars.next();
+                        }
+                        Some('"') => break,
+                        Some(_) => {}
+                        None => return Err(err("unterminated string", no)),
+                    }
+                }
+            }
+            '\'' => loop {
+                match chars.next() {
+                    Some('\'') => break,
+                    Some(_) => {}
+                    None => return Err(err("unterminated literal string", no)),
+                }
+            },
+            '[' | '{' => depth += 1,
+            ']' | '}' => depth -= 1,
+            _ => {}
+        }
+    }
+    Ok(depth)
+}
+
+/// Strip a `#` comment, respecting both string syntaxes.
+fn strip_comment(line: &str, no: usize) -> Result<String, TomlError> {
+    let mut out = String::new();
+    let mut chars = line.chars().peekable();
+    while let Some(c) = chars.next() {
+        match c {
+            '#' => break,
+            '"' => {
+                out.push(c);
+                loop {
+                    match chars.next() {
+                        Some('\\') => {
+                            out.push('\\');
+                            match chars.next() {
+                                Some(e) => out.push(e),
+                                None => return Err(err("unterminated string", no)),
+                            }
+                        }
+                        Some('"') => {
+                            out.push('"');
+                            break;
+                        }
+                        Some(x) => out.push(x),
+                        None => return Err(err("unterminated string", no)),
+                    }
+                }
+            }
+            '\'' => {
+                out.push(c);
+                loop {
+                    match chars.next() {
+                        Some('\'') => {
+                            out.push('\'');
+                            break;
+                        }
+                        Some(x) => out.push(x),
+                        None => return Err(err("unterminated literal string", no)),
+                    }
+                }
+            }
+            _ => out.push(c),
+        }
+    }
+    Ok(out)
+}
+
+fn is_bare_key_char(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_' || c == '-'
+}
+
+/// Split a dotted header path `a.b.c` into segments (bare keys only).
+fn split_path(body: &str, no: usize) -> Result<Vec<String>, TomlError> {
+    let mut segs = Vec::new();
+    for seg in body.split('.') {
+        let seg = seg.trim();
+        if seg.is_empty() || !seg.chars().all(is_bare_key_char) {
+            return Err(err(format!("invalid table path '{body}'"), no));
+        }
+        segs.push(seg.to_string());
+    }
+    Ok(segs)
+}
+
+/// Parse a (bare or quoted) key; returns (key, remainder).
+fn parse_key(t: &str, no: usize) -> Result<(String, &str), TomlError> {
+    if let Some(rest) = t.strip_prefix('"') {
+        let end = rest
+            .find('"')
+            .ok_or_else(|| err("unterminated quoted key", no))?;
+        return Ok((rest[..end].to_string(), &rest[end + 1..]));
+    }
+    let end = t
+        .find(|c: char| !is_bare_key_char(c))
+        .unwrap_or(t.len());
+    if end == 0 {
+        return Err(err(format!("expected a key, got '{t}'"), no));
+    }
+    Ok((t[..end].to_string(), &t[end..]))
+}
+
+fn child_mut<'a>(obj: &'a mut Json, key: &str) -> Option<&'a mut Json> {
+    match obj {
+        Json::Obj(pairs) => pairs
+            .iter_mut()
+            .find(|(k, _)| k == key)
+            .map(|(_, v)| v),
+        _ => None,
+    }
+}
+
+fn insert_unique(obj: &mut Json, key: String, value: Json, no: usize) -> Result<(), TomlError> {
+    match obj {
+        Json::Obj(pairs) => {
+            if pairs.iter().any(|(k, _)| *k == key) {
+                return Err(err(format!("duplicate key '{key}'"), no));
+            }
+            pairs.push((key, value));
+            Ok(())
+        }
+        _ => Err(err(format!("cannot insert key '{key}' into a non-table"), no)),
+    }
+}
+
+/// Walk `path` from the root, descending into the last element of any
+/// array-of-tables on the way; intermediate tables are created.
+fn navigate<'a>(root: &'a mut Json, path: &[String], no: usize) -> Result<&'a mut Json, TomlError> {
+    let mut cur = root;
+    for seg in path {
+        if child_mut(cur, seg).is_none() {
+            insert_unique(cur, seg.clone(), Json::obj(), no)?;
+        }
+        let next = child_mut(cur, seg).expect("inserted above");
+        cur = match next {
+            Json::Arr(items) => items
+                .last_mut()
+                .ok_or_else(|| err(format!("'{seg}' is an empty array of tables"), no))?,
+            Json::Obj(_) => next,
+            _ => return Err(err(format!("'{seg}' is not a table"), no)),
+        };
+    }
+    Ok(cur)
+}
+
+/// `[a.b.c]`: create the table at the end of the path; redefining an
+/// existing table is rejected (duplicate-table error).
+fn open_table(root: &mut Json, path: &[String], no: usize) -> Result<(), TomlError> {
+    let (last, parents) = path.split_last().ok_or_else(|| err("empty table path", no))?;
+    let parent = navigate(root, parents, no)?;
+    if child_mut(parent, last).is_some() {
+        return Err(err(format!("duplicate table [{}]", path.join(".")), no));
+    }
+    insert_unique(parent, last.clone(), Json::obj(), no)
+}
+
+/// `[[a.b]]`: append a fresh element to the array of tables at the path.
+fn open_array_element(root: &mut Json, path: &[String], no: usize) -> Result<(), TomlError> {
+    let (last, parents) = path.split_last().ok_or_else(|| err("empty table path", no))?;
+    let parent = navigate(root, parents, no)?;
+    if child_mut(parent, last).is_none() {
+        insert_unique(parent, last.clone(), Json::Arr(Vec::new()), no)?;
+    }
+    match child_mut(parent, last).expect("inserted above") {
+        Json::Arr(items) => {
+            items.push(Json::obj());
+            Ok(())
+        }
+        _ => Err(err(format!("[[{}]] conflicts with an existing key", path.join(".")), no)),
+    }
+}
+
+/// Recursive-descent value parser over one logical line.
+struct Cursor<'a> {
+    rest: &'a str,
+    no: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn new(rest: &'a str, no: usize) -> Cursor<'a> {
+        Cursor { rest, no }
+    }
+
+    fn skip_ws(&mut self) {
+        self.rest = self.rest.trim_start();
+    }
+
+    fn expect_end(&mut self) -> Result<(), TomlError> {
+        self.skip_ws();
+        if self.rest.is_empty() {
+            Ok(())
+        } else {
+            Err(err(format!("trailing content '{}'", self.rest), self.no))
+        }
+    }
+
+    fn eat(&mut self, c: char) -> bool {
+        if self.rest.starts_with(c) {
+            self.rest = &self.rest[c.len_utf8()..];
+            true
+        } else {
+            false
+        }
+    }
+
+    fn value(&mut self) -> Result<Json, TomlError> {
+        self.skip_ws();
+        if self.rest.starts_with('"') {
+            return self.basic_string();
+        }
+        if self.rest.starts_with('\'') {
+            return self.literal_string();
+        }
+        if self.rest.starts_with('[') {
+            return self.array();
+        }
+        if self.rest.starts_with('{') {
+            return self.inline_table();
+        }
+        self.scalar()
+    }
+
+    fn basic_string(&mut self) -> Result<Json, TomlError> {
+        self.eat('"');
+        let mut out = String::new();
+        let mut chars = self.rest.char_indices();
+        loop {
+            match chars.next() {
+                Some((i, '"')) => {
+                    self.rest = &self.rest[i + 1..];
+                    return Ok(Json::Str(out));
+                }
+                Some((_, '\\')) => match chars.next() {
+                    Some((_, '"')) => out.push('"'),
+                    Some((_, '\\')) => out.push('\\'),
+                    Some((_, 'n')) => out.push('\n'),
+                    Some((_, 't')) => out.push('\t'),
+                    Some((_, 'r')) => out.push('\r'),
+                    Some((_, e)) => return Err(err(format!("bad escape '\\{e}'"), self.no)),
+                    None => return Err(err("unterminated string", self.no)),
+                },
+                Some((_, c)) => out.push(c),
+                None => return Err(err("unterminated string", self.no)),
+            }
+        }
+    }
+
+    fn literal_string(&mut self) -> Result<Json, TomlError> {
+        self.eat('\'');
+        match self.rest.find('\'') {
+            Some(end) => {
+                let s = self.rest[..end].to_string();
+                self.rest = &self.rest[end + 1..];
+                Ok(Json::Str(s))
+            }
+            None => Err(err("unterminated literal string", self.no)),
+        }
+    }
+
+    fn array(&mut self) -> Result<Json, TomlError> {
+        self.eat('[');
+        let mut items = Vec::new();
+        loop {
+            self.skip_ws();
+            if self.eat(']') {
+                return Ok(Json::Arr(items));
+            }
+            items.push(self.value()?);
+            self.skip_ws();
+            if !self.eat(',') && !self.rest.starts_with(']') {
+                return Err(err("expected ',' or ']' in array", self.no));
+            }
+        }
+    }
+
+    fn inline_table(&mut self) -> Result<Json, TomlError> {
+        self.eat('{');
+        let mut obj = Json::obj();
+        loop {
+            self.skip_ws();
+            if self.eat('}') {
+                return Ok(obj);
+            }
+            let (key, rest) = parse_key(self.rest, self.no)?;
+            self.rest = rest;
+            self.skip_ws();
+            if !self.eat('=') {
+                return Err(err(format!("expected '=' after key '{key}'"), self.no));
+            }
+            let value = self.value()?;
+            insert_unique(&mut obj, key, value, self.no)?;
+            self.skip_ws();
+            if !self.eat(',') && !self.rest.starts_with('}') {
+                return Err(err("expected ',' or '}' in inline table", self.no));
+            }
+        }
+    }
+
+    fn scalar(&mut self) -> Result<Json, TomlError> {
+        let end = self
+            .rest
+            .find(|c: char| matches!(c, ',' | ']' | '}') || c.is_whitespace())
+            .unwrap_or(self.rest.len());
+        let tok = &self.rest[..end];
+        self.rest = &self.rest[end..];
+        match tok {
+            "true" => return Ok(Json::Bool(true)),
+            "false" => return Ok(Json::Bool(false)),
+            "" => return Err(err("expected a value", self.no)),
+            _ => {}
+        }
+        let digits: String = tok.chars().filter(|c| *c != '_').collect();
+        let looks_float = digits.contains(['.', 'e', 'E']);
+        if looks_float {
+            if let Ok(f) = digits.parse::<f64>() {
+                if f.is_finite() {
+                    return Ok(Json::Num(f));
+                }
+            }
+        } else if let Ok(n) = digits.parse::<i64>() {
+            return Ok(Json::Num(n as f64));
+        }
+        Err(err(format!("unsupported value '{tok}'"), self.no))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalars_tables_and_arrays() {
+        let src = r#"
+# a benchmark definition
+title = "exaCB defs"
+count = 42
+big = 5_888
+ratio = 2.5
+tiny = 1.5e-3
+on = true
+off = false
+
+[owner]
+name = 'JSC'
+queues = ["all", "devel"]
+
+[owner.nested]
+depth = 2
+"#;
+        let v = parse(src).unwrap();
+        assert_eq!(v.str_of("title"), Some("exaCB defs"));
+        assert_eq!(v.u64_of("count"), Some(42));
+        assert_eq!(v.u64_of("big"), Some(5888));
+        assert_eq!(v.f64_of("ratio"), Some(2.5));
+        assert_eq!(v.f64_of("tiny"), Some(1.5e-3));
+        assert_eq!(v.bool_of("on"), Some(true));
+        assert_eq!(v.bool_of("off"), Some(false));
+        assert_eq!(v.pointer("/owner/name").unwrap().as_str(), Some("JSC"));
+        assert_eq!(v.pointer("/owner/queues/1").unwrap().as_str(), Some("devel"));
+        assert_eq!(v.pointer("/owner/nested/depth").unwrap().as_u64(), Some(2));
+    }
+
+    #[test]
+    fn arrays_of_tables_with_subtables() {
+        // the exact shape benchmarks/*.toml uses: a later [app.x] header
+        // attaches to the *last* [[app]] element
+        let src = r#"
+[[app]]
+name = "climate-01"
+
+[app.parameters]
+steps = 100
+
+[[app]]
+name = "cfd-02"
+
+[app.parameters]
+steps = 250
+"#;
+        let v = parse(src).unwrap();
+        let apps = v.get("app").unwrap().as_arr().unwrap();
+        assert_eq!(apps.len(), 2);
+        assert_eq!(apps[0].str_of("name"), Some("climate-01"));
+        assert_eq!(
+            apps[0].pointer("/parameters/steps").unwrap().as_u64(),
+            Some(100)
+        );
+        assert_eq!(
+            apps[1].pointer("/parameters/steps").unwrap().as_u64(),
+            Some(250)
+        );
+    }
+
+    #[test]
+    fn inline_tables_and_multiline_arrays() {
+        let src = "
+link = { name = \"IB-NDR400\", bw_gbs = 48.0 }
+record = [
+  \"tts\",      # primary
+  \"gflops_rate\",
+]
+grid = [
+  [1, 2],
+  [3, 4],
+]
+";
+        let v = parse(src).unwrap();
+        assert_eq!(v.pointer("/link/name").unwrap().as_str(), Some("IB-NDR400"));
+        assert_eq!(v.pointer("/link/bw_gbs").unwrap().as_f64(), Some(48.0));
+        assert_eq!(v.pointer("/record/1").unwrap().as_str(), Some("gflops_rate"));
+        assert_eq!(v.pointer("/grid/1/0").unwrap().as_u64(), Some(3));
+    }
+
+    #[test]
+    fn floats_round_trip_bit_exact() {
+        // shortest round-trip decimals (what both render() and the
+        // Python generator emit) must re-parse to identical bits
+        for x in [0.855f64, 254164.60293018, 0.0523, 1.0 / 3.0, 5e-5] {
+            let src = format!("x = {x:?}\n");
+            let v = parse(&src).unwrap();
+            assert_eq!(v.f64_of("x").unwrap().to_bits(), x.to_bits(), "{src}");
+        }
+    }
+
+    #[test]
+    fn duplicate_keys_rejected_with_line_numbers() {
+        let e = parse("a = 1\nb = 2\na = 3\n").unwrap_err();
+        assert_eq!(e.line, 3);
+        assert!(e.msg.contains("duplicate key 'a'"), "{e}");
+        // in a named table
+        let e = parse("[t]\nx = 1\nx = 2\n").unwrap_err();
+        assert_eq!(e.line, 3);
+        // in an inline table
+        let e = parse("a = 1\nt = { x = 1, x = 2 }\n").unwrap_err();
+        assert_eq!(e.line, 2);
+        assert!(e.msg.contains("duplicate key 'x'"), "{e}");
+    }
+
+    #[test]
+    fn duplicate_tables_rejected() {
+        let e = parse("[t]\na = 1\n[t]\nb = 2\n").unwrap_err();
+        assert_eq!(e.line, 3);
+        assert!(e.msg.contains("duplicate table [t]"), "{e}");
+    }
+
+    #[test]
+    fn comments_respect_strings() {
+        let v = parse("a = \"x # kept\" # dropped\nb = '# kept too'\n").unwrap();
+        assert_eq!(v.str_of("a"), Some("x # kept"));
+        assert_eq!(v.str_of("b"), Some("# kept too"));
+    }
+
+    #[test]
+    fn string_escapes() {
+        let v = parse(r#"s = "a\"b\\c\nd""#).unwrap();
+        assert_eq!(v.str_of("s"), Some("a\"b\\c\nd"));
+        assert!(parse(r#"s = "\q""#).is_err()); // unknown escape
+    }
+
+    #[test]
+    fn quoted_keys() {
+        let v = parse("\"dotted.key\" = 1\n").unwrap();
+        assert_eq!(v.u64_of("dotted.key"), Some(1));
+    }
+
+    #[test]
+    fn negative_numbers() {
+        let v = parse("a = -4\nb = -0.5\n").unwrap();
+        assert_eq!(v.f64_of("a"), Some(-4.0));
+        assert_eq!(v.f64_of("b"), Some(-0.5));
+    }
+
+    #[test]
+    fn malformed_input_is_loud() {
+        assert!(parse("a\n").is_err()); // no '='
+        assert!(parse("a = \n").is_err()); // no value
+        assert!(parse("a = [1, 2\n").is_err()); // unterminated array
+        assert!(parse("[t\n").is_err()); // bad header
+        assert!(parse("a = 2026-01-01\n").is_err()); // dates unsupported
+        assert!(parse("a = \"unterminated\n").is_err());
+    }
+
+    #[test]
+    fn parse_counter_increments_per_successful_parse() {
+        let before = parse_count();
+        parse("a = 1\n").unwrap();
+        parse("b = 2\n").unwrap();
+        let _ = parse("broken =\n");
+        assert_eq!(parse_count(), before + 2);
+    }
+
+    #[test]
+    fn empty_doc_is_empty_table() {
+        assert_eq!(parse("\n# only a comment\n").unwrap(), Json::obj());
+    }
+}

@@ -204,6 +204,14 @@ fn push_mapping_entry(
     } else {
         scalar(&val, no)?
     };
+    if pairs.iter().any(|(k, _)| *k == key) {
+        // a silently shadowed key in a benchmark definition is a
+        // wrong-measurement bug, not a convenience (DESIGN.md §15)
+        return Err(YamlError {
+            msg: format!("duplicate mapping key '{key}'"),
+            line: no,
+        });
+    }
     pairs.push((key, value));
     Ok(())
 }
@@ -378,6 +386,12 @@ fn flow_map(t: &str, line: usize) -> Result<Json, YamlError> {
             msg: format!("expected 'key: value' in flow mapping, got '{part}'"),
             line,
         })?;
+        if pairs.iter().any(|(seen, _)| *seen == k) {
+            return Err(YamlError {
+                msg: format!("duplicate mapping key '{k}'"),
+                line,
+            });
+        }
         pairs.push((k, scalar(&v, line)?));
     }
     Ok(Json::Obj(pairs))
@@ -530,6 +544,25 @@ c: plain  # stripped
     #[test]
     fn empty_doc_is_null() {
         assert_eq!(parse("\n# only a comment\n").unwrap(), Json::Null);
+    }
+
+    #[test]
+    fn duplicate_mapping_keys_rejected_with_line_number() {
+        let e = parse("a: 1\nb: 2\na: 3\n").unwrap_err();
+        assert_eq!(e.line, 3);
+        assert!(e.msg.contains("duplicate mapping key 'a'"), "{e}");
+        // nested mapping
+        let e = parse("top:\n  x: 1\n  y: 2\n  x: 3\n").unwrap_err();
+        assert_eq!(e.line, 4);
+        // inline "- key: value" sequence items
+        let e = parse("seq:\n  - name: a\n    name: b\n").unwrap_err();
+        assert_eq!(e.line, 3);
+        // flow mapping
+        let e = parse("env: {A: 1, A: 2}\n").unwrap_err();
+        assert!(e.msg.contains("duplicate mapping key 'A'"), "{e}");
+        // same key in *different* mappings is fine (sequence items)
+        let v = parse("seq:\n  - name: a\n  - name: b\n").unwrap();
+        assert_eq!(v.pointer("/seq/1/name").unwrap().as_str(), Some("b"));
     }
 
     #[test]

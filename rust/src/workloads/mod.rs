@@ -205,6 +205,33 @@ pub fn run_command(line: &str, ctx: &mut ExecCtx) -> AppOutput {
     }
 }
 
+/// Whether `name` is a binary the dispatch table above can execute.
+/// Engine definitions (DESIGN.md §15) are validated against this at load
+/// time so a typo'd command fails `exacb measure --validate-only`, not a
+/// campaign three days in.
+pub fn known_binary(name: &str) -> bool {
+    matches!(
+        name,
+        "logmap"
+            | "babelstream"
+            | "stream"
+            | "graph500"
+            | "osu_bw"
+            | "osu_latency"
+            | "simapp"
+            | "cmake"
+            | "make"
+            | "module"
+            | "export"
+            | "mkdir"
+            | "cp"
+            | "echo"
+            | "cd"
+            | "source"
+            | "true"
+    )
+}
+
 /// Extract an environment variable that may be injected as an
 /// `export`-style command (feature injection, §V-A.3). Supports both the
 /// plain form `UCX_RNDV_THRESH=65536` and the scoped UCX form

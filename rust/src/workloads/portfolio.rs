@@ -87,7 +87,7 @@ pub const DOMAINS: [&str; 8] = [
 ];
 
 /// One portfolio application.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct PortfolioApp {
     pub name: String,
     pub domain: String,
@@ -100,6 +100,20 @@ pub struct PortfolioApp {
 }
 
 impl PortfolioApp {
+    /// Build a portfolio app from a loaded definition (DESIGN.md §15).
+    /// Infallible: `defs::validate` has already checked ranges and names,
+    /// and the maturity string was typed at parse time.
+    pub fn from_def(def: &crate::defs::AppDef) -> PortfolioApp {
+        PortfolioApp {
+            name: def.name.clone(),
+            domain: def.domain.clone(),
+            maturity: def.maturity,
+            model: AppModel::from_def(def),
+            failure_rate: def.failure_rate,
+            nodes: def.nodes,
+        }
+    }
+
     /// The harness command line of this app's standard benchmark.
     pub fn command(&self) -> String {
         format!(

@@ -53,6 +53,20 @@ impl Default for AppModel {
 }
 
 impl AppModel {
+    /// Build the performance model from a loaded app definition's
+    /// parameter table (DESIGN.md §15).
+    pub fn from_def(def: &crate::defs::AppDef) -> AppModel {
+        AppModel {
+            name: def.name.clone(),
+            gflops_total: def.gflops_total,
+            serial_frac: def.serial_frac,
+            mem_bound: def.mem_bound,
+            comm_mb: def.comm_mb,
+            steps: def.steps,
+            weak: def.weak,
+        }
+    }
+
     pub fn from_cmd(cmd: &CmdLine) -> AppModel {
         AppModel {
             name: cmd

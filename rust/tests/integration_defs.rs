@@ -1,0 +1,295 @@
+//! BYOB definition layer, end to end (DESIGN.md §15).
+//!
+//! The keystone property: the shipped `benchmarks/` directory is the
+//! built-in JUREAP portfolio **as data**, and running it through
+//! `exacb measure`'s core (`defs::run_measure_with`) replays the code
+//! path byte-identically — same `sacct` records, same recorded stores,
+//! same queue statistics and results tables — cold and warm, under both
+//! the indexed event loop and the frozen reference scan. Three paths
+//! are compared per driver:
+//!
+//! 1. **code** — `portfolio::jureap()` + `World::new` + the campaign
+//!    core, the way every pre-BYOB caller runs it;
+//! 2. **builtin defs** — `defs::builtin()` through `run_measure_with`;
+//! 3. **shipped** — `defs::load_dir("benchmarks/")` through the same.
+//!
+//! Any divergence means definitions are *not* just data (a conversion
+//! bug, a float that didn't round-trip, machine state leaking), which
+//! is exactly the regression this suite exists to catch.
+
+use exacb::coordinator::{collection, event_loop, postproc, World};
+use exacb::defs::{self, MeasurePlan};
+use exacb::util::prng::Prng;
+use exacb::util::tomlite;
+use exacb::workloads::portfolio;
+
+fn shipped_dir() -> String {
+    format!("{}/../benchmarks", env!("CARGO_MANIFEST_DIR"))
+}
+
+const APPS: usize = 24;
+const DAYS: i64 = 2;
+const SWEEPS: u32 = 2; // sweep 1 cold, sweep 2 warm (cache replay)
+const MACHINES: [&str; 3] = ["jedi", "jupiter", "jureca"];
+const SEED: u64 = 20260101;
+
+/// Every `sacct` field of every job on every machine, in jobid order.
+fn sacct_dump(world: &World) -> String {
+    let mut out = String::new();
+    for (name, bs) in &world.batch {
+        for r in bs.records_iter() {
+            out.push_str(&format!(
+                "{name} {} {} {:?} {:?} {:?} {} {} {:?}\n",
+                r.jobid,
+                r.state.name(),
+                r.submit_time,
+                r.start_time,
+                r.end_time,
+                r.spec.partition,
+                r.spec.nodes,
+                r.result
+                    .as_ref()
+                    .map(|res| (res.success, res.duration_s)),
+            ));
+        }
+    }
+    out
+}
+
+/// Every file on every branch of every repository store.
+fn store_dump(world: &World) -> String {
+    let mut out = String::new();
+    for (name, repo) in &world.repos {
+        let mut branches = repo.store.branches();
+        branches.sort_unstable();
+        for branch in branches {
+            for (path, content) in repo.store.read_all(branch, "") {
+                out.push_str(&format!("{name} {branch} {path} {}\n", content.len()));
+                out.push_str(&content);
+                out.push('\n');
+            }
+        }
+    }
+    out
+}
+
+/// The full observable outcome of a campaign, as comparable strings.
+struct Outcome {
+    sacct: String,
+    stores: String,
+    queue_stats: String,
+    results: Vec<String>,
+    summaries: String,
+}
+
+fn outcome(world: &World, summaries: &[collection::CollectionSummary]) -> Outcome {
+    Outcome {
+        sacct: sacct_dump(world),
+        stores: store_dump(world),
+        queue_stats: postproc::queue_stats(world).to_csv(),
+        results: ["runtime", "tts"]
+            .iter()
+            .map(|m| postproc::collection_results_table(world, m).to_csv())
+            .collect(),
+        summaries: format!("{summaries:?}"),
+    }
+}
+
+/// Path 1: the pre-BYOB code path, replicating `run_measure_with`'s
+/// loop by hand over the built-in constructors.
+fn campaign_via_code(
+    drive: fn(&mut World, Vec<event_loop::PipelineTask>) -> Vec<u64>,
+) -> Outcome {
+    let mut apps = portfolio::jureap();
+    apps.truncate(APPS);
+    let mut world = World::new(SEED);
+    world.enable_cache();
+    collection::onboard_multi(&mut world, &apps, &MACHINES, "all");
+    let mut summaries = Vec::new();
+    for _ in 0..SWEEPS {
+        summaries.push(collection::run_campaign_concurrent_with(
+            &mut world, &apps, &MACHINES, DAYS, drive,
+        ));
+    }
+    outcome(&world, &summaries)
+}
+
+fn measure_plan() -> MeasurePlan {
+    MeasurePlan {
+        apps: APPS,
+        days: DAYS,
+        machines: MACHINES.iter().map(|m| m.to_string()).collect(),
+        queue: "all".to_string(),
+        seed: SEED,
+        cache: true,
+        sweeps: SWEEPS,
+    }
+}
+
+/// Paths 2 and 3: a definition set through the `exacb measure` core.
+fn campaign_via_defs(
+    set: &defs::DefSet,
+    drive: fn(&mut World, Vec<event_loop::PipelineTask>) -> Vec<u64>,
+) -> Outcome {
+    let (world, summaries) =
+        defs::run_measure_with(set, &measure_plan(), drive).expect("measure plan must run");
+    outcome(&world, &summaries)
+}
+
+fn assert_same(label: &str, a: &Outcome, b: &Outcome) {
+    assert_eq!(a.summaries, b.summaries, "{label}: campaign summaries diverged");
+    assert_eq!(a.queue_stats, b.queue_stats, "{label}: queue stats diverged");
+    assert_eq!(a.results, b.results, "{label}: results tables diverged");
+    assert_eq!(a.sacct, b.sacct, "{label}: sacct records diverged");
+    assert_eq!(a.stores, b.stores, "{label}: recorded stores diverged");
+}
+
+/// The shipped `benchmarks/` directory parses to exactly the built-in
+/// definition set — every f64 bit-identical (the generator and the
+/// loud-parse round trip are both on trial here).
+#[test]
+fn shipped_benchmarks_equal_builtin_bit_for_bit() {
+    let shipped = defs::load_dir(&shipped_dir()).expect("shipped benchmarks/ must load clean");
+    let builtin = defs::builtin();
+    assert_eq!(shipped.apps.len(), 72);
+    assert_eq!(shipped.machines.len(), 4);
+    assert_eq!(shipped.engines.len(), 1);
+    // DefSet equality ignores file provenance but compares every f64 by
+    // bits (non-NaN ==), every name, every partition list, in order.
+    assert_eq!(shipped, builtin);
+}
+
+/// The differential property, indexed event loop: code path, built-in
+/// defs, and the shipped directory replay the same campaign
+/// byte-identically, cold sweep and warm (cached) sweep alike.
+#[test]
+fn shipped_defs_replay_code_path_byte_identical_under_drive() {
+    let code = campaign_via_code(event_loop::drive);
+    let via_builtin = campaign_via_defs(&defs::builtin(), event_loop::drive);
+    let shipped = defs::load_dir(&shipped_dir()).unwrap();
+    let via_shipped = campaign_via_defs(&shipped, event_loop::drive);
+    assert_same("builtin defs vs code", &via_builtin, &code);
+    assert_same("shipped dir vs code", &via_shipped, &code);
+    // the warm sweep must actually have replayed from cache, or the
+    // "cold + warm" half of the claim is vacuous
+    assert!(
+        code.summaries.contains("hits"),
+        "summary Debug lost cache stats: {}",
+        code.summaries
+    );
+}
+
+/// Same property under the frozen reference scan — proves the defs
+/// layer is driver-agnostic (it only hands tasks to the loop).
+#[test]
+fn shipped_defs_replay_code_path_byte_identical_under_reference() {
+    let code = campaign_via_code(event_loop::drive_reference);
+    let via_shipped = campaign_via_defs(
+        &defs::load_dir(&shipped_dir()).unwrap(),
+        event_loop::drive_reference,
+    );
+    assert_same("shipped dir vs code (reference)", &via_shipped, &code);
+}
+
+/// The warm sweep replays from the execution cache. Summary cache
+/// stats are cumulative world totals, so the warm sweep must add hits
+/// and add no misses beyond the cold sweep's population.
+#[test]
+fn warm_sweep_hits_the_execution_cache() {
+    let shipped = defs::load_dir(&shipped_dir()).unwrap();
+    let (_, summaries) =
+        defs::run_measure_with(&shipped, &measure_plan(), event_loop::drive).unwrap();
+    assert_eq!(summaries.len(), SWEEPS as usize);
+    let (cold, warm) = (&summaries[0].cache, &summaries[1].cache);
+    assert!(cold.misses > 0, "cold sweep must populate the cache");
+    assert!(
+        warm.hits > cold.hits,
+        "warm sweep must replay from cache: cold {cold:?} warm {warm:?}"
+    );
+    assert_eq!(
+        warm.misses, cold.misses,
+        "warm sweep over unchanged inputs must not miss"
+    );
+}
+
+/// Property: tomlite round-trips seeded f64s bit-exactly through the
+/// `{v:?}` rendering `defs::render` uses — including subnormal-adjacent
+/// tiny values and exponent forms the portfolio can produce.
+#[test]
+fn prop_tomlite_round_trips_rendered_floats_bit_exact() {
+    let mut rng = Prng::new(0xBEEF);
+    let mut values: Vec<f64> = vec![0.0, 1.0, 0.1, 8.7e-5, 1e-12, 5e15, 0.010, 499999.9999999999];
+    for _ in 0..500 {
+        values.push(rng.range_f64(0.0, 1.0));
+        values.push(rng.range_f64(5_000.0, 500_000.0));
+        values.push(rng.range_f64(0.0, 1e-3)); // exponent-form territory
+    }
+    for v in values {
+        let doc = tomlite::parse(&format!("v = {v:?}\n")).expect("rendered float must parse");
+        let back = doc.pointer("v").and_then(|j| j.as_f64()).expect("float key");
+        assert_eq!(
+            back.to_bits(),
+            v.to_bits(),
+            "{v:?} reparsed as {back:?}"
+        );
+    }
+}
+
+/// Property: every validation error names its file, table, and key, so
+/// a CI lint failure on a 500-file directory is actionable. Seeded
+/// corruptions of the rendered built-in set must each produce an error
+/// mentioning the corrupted file and its `[[table]]`.
+#[test]
+fn prop_validation_errors_name_file_table_and_key() {
+    let rendered = defs::render(&defs::builtin());
+    // corrupt jureap.toml: negate every steps value -> one named error
+    // per app, each pointing at the right file and table
+    let corrupted: Vec<(String, String)> = rendered
+        .iter()
+        .map(|(name, text)| {
+            let text = if name == "jureap.toml" {
+                text.replace("steps = ", "steps = -")
+            } else {
+                text.clone()
+            };
+            (name.clone(), text)
+        })
+        .collect();
+    let err = defs::parse_files(&corrupted).expect_err("negative steps must not validate");
+    let msg = err.to_string();
+    assert!(msg.contains("jureap.toml"), "no file name in: {msg}");
+    assert!(msg.contains("[[app]]"), "no table in: {msg}");
+    assert!(msg.contains("steps"), "no key in: {msg}");
+    assert!(msg.contains("climate-01"), "table should name the app: {msg}");
+
+    // corrupt machines.toml: break one machine's power fingerprint
+    let corrupted: Vec<(String, String)> = rendered
+        .iter()
+        .map(|(name, text)| {
+            let text = if name == "machines.toml" {
+                text.replacen("tdp_w = 700.0", "tdp_w = 0.0", 1)
+            } else {
+                text.clone()
+            };
+            (name.clone(), text)
+        })
+        .collect();
+    let err = defs::parse_files(&corrupted).expect_err("tdp <= idle must not validate");
+    let msg = err.to_string();
+    assert!(msg.contains("machines.toml"), "no file name in: {msg}");
+    assert!(msg.contains("jedi"), "no machine name in: {msg}");
+    assert!(msg.contains("tdp_w"), "no key in: {msg}");
+}
+
+/// Duplicate keys are load-time errors with line numbers in both
+/// in-repo config dialects (satellite: yamlite and tomlite agree).
+#[test]
+fn duplicate_keys_rejected_with_line_numbers() {
+    let err = tomlite::parse("a = 1\na = 2\n").expect_err("dup key");
+    assert_eq!(err.line, 2, "{err}");
+    assert!(err.to_string().contains("duplicate"), "{err}");
+
+    let err = exacb::util::yamlite::parse("a: 1\na: 2\n").expect_err("dup key");
+    assert!(err.to_string().contains("duplicate"), "{err}");
+    assert!(err.to_string().contains("line 2"), "{err}");
+}

@@ -1,0 +1,289 @@
+#!/usr/bin/env python3
+"""Regenerate the shipped `benchmarks/` definition directory.
+
+This is a bit-exact Python port of the crate's built-in definition set
+(`exacb::defs::builtin()` rendered through `exacb::defs::render()`):
+
+- `rust/src/util/prng.rs` — splitmix64 seeding + xoshiro256** + Lemire
+  bounded draw, reproduced with explicit 64-bit wrapping arithmetic.
+- `rust/src/workloads/portfolio.rs::generate(72, 20260101)` — the
+  JUREAP-like portfolio, drawn in exactly the same order.
+- `rust/src/cluster/{machine,network,power}.rs` — the four standard
+  machines with full network and power fingerprints.
+
+The Rust test-suite proves equivalence from the other side:
+`tests/integration_defs.rs` loads `benchmarks/` and asserts the parsed
+`DefSet` equals `defs::builtin()` (f64 bit equality), then replays a
+campaign and compares sacct records, stores, and result tables against
+the code path. If you edit the built-in set, rerun
+
+    python3 tools/gen_benchmarks.py
+
+from the repository root and commit the regenerated files.
+
+Float formatting note: Python's repr() and Rust's `{:?}` both emit the
+shortest decimal that round-trips, so digits agree; only the exponent
+spelling differs (`8.7e-05` vs `8.7e-5`), which `fmt_f64` normalises.
+"""
+
+import os
+import sys
+
+MASK = (1 << 64) - 1
+GOLDEN = 0x9E37_79B9_7F4A_7C15
+
+
+class Prng:
+    """xoshiro256** seeded via splitmix64 (port of util::prng::Prng)."""
+
+    def __init__(self, seed):
+        s = seed & MASK
+        self.s = []
+        for _ in range(4):
+            s = (s + GOLDEN) & MASK
+            z = s
+            z = ((z ^ (z >> 30)) * 0xBF58_476D_1CE4_E5B9) & MASK
+            z = ((z ^ (z >> 27)) * 0x94D0_49BB_1331_11EB) & MASK
+            self.s.append(z ^ (z >> 31))
+
+    @staticmethod
+    def _rotl(x, k):
+        return ((x << k) | (x >> (64 - k))) & MASK
+
+    def next_u64(self):
+        s = self.s
+        result = (self._rotl((s[1] * 5) & MASK, 7) * 9) & MASK
+        t = (s[1] << 17) & MASK
+        s[2] ^= s[0]
+        s[3] ^= s[1]
+        s[1] ^= s[2]
+        s[0] ^= s[3]
+        s[2] ^= t
+        s[3] = self._rotl(s[3], 45)
+        return result
+
+    def fork(self, tag):
+        return Prng(self.next_u64() ^ ((tag * GOLDEN) & MASK))
+
+    def f64(self):
+        # (x >> 11) as f64 * (1 / 2^53): both factors exact in binary64.
+        return (self.next_u64() >> 11) * (1.0 / (1 << 53))
+
+    def range_f64(self, lo, hi):
+        return lo + (hi - lo) * self.f64()
+
+    def below(self, n):
+        assert n > 0
+        x = self.next_u64()
+        m = x * n
+        l = m & MASK
+        if l < n:
+            t = ((1 << 64) - n) % n
+            while l < t:
+                x = self.next_u64()
+                m = x * n
+                l = m & MASK
+        return m >> 64
+
+    def range_u64(self, lo, hi):
+        return lo + self.below(hi - lo + 1)
+
+
+DOMAINS = [
+    "climate",
+    "molecular-dynamics",
+    "lattice-qcd",
+    "cfd",
+    "neuroscience",
+    "materials",
+    "astrophysics",
+    "ai-training",
+]
+
+
+def generate(n, seed):
+    """Port of workloads::portfolio::generate — same draw order."""
+    rng = Prng(seed)
+    apps = []
+    for i in range(n):
+        domain = DOMAINS[i % len(DOMAINS)]
+        app_rng = rng.fork(i)
+        p = app_rng.f64()
+        if p < 0.40:
+            maturity = "runnability"
+        elif p < 0.80:
+            maturity = "instrumentability"
+        else:
+            maturity = "reproducibility"
+        mem_bound = app_rng.range_f64(0.15, 0.9)
+        gflops_total = app_rng.range_f64(5_000.0, 500_000.0)
+        serial_frac = app_rng.range_f64(0.002, 0.08)
+        comm_mb = app_rng.range_f64(4.0, 256.0)
+        steps = app_rng.range_u64(20, 400)
+        if maturity == "runnability":
+            failure_rate = app_rng.range_f64(0.05, 0.20)
+        elif maturity == "instrumentability":
+            failure_rate = app_rng.range_f64(0.02, 0.08)
+        else:
+            failure_rate = app_rng.range_f64(0.0, 0.03)
+        nodes = 1 << app_rng.range_u64(0, 4)
+        apps.append(
+            {
+                "name": "%s-%02d" % (domain, i + 1),
+                "domain": domain,
+                "maturity": maturity,
+                "nodes": nodes,
+                "gflops_total": gflops_total,
+                "serial_frac": serial_frac,
+                "mem_bound": mem_bound,
+                "comm_mb": comm_mb,
+                "steps": steps,
+                "failure_rate": failure_rate,
+            }
+        )
+    return apps
+
+
+def fmt_f64(v):
+    """Shortest round-trip decimal, Rust `{:?}` exponent spelling."""
+    s = repr(float(v))
+    if "e" in s:
+        mant, exp = s.split("e")
+        s = "%se%d" % (mant, int(exp))
+    return s
+
+
+def toml_str(s):
+    out = s.replace("\\", "\\\\").replace('"', '\\"')
+    out = out.replace("\n", "\\n").replace("\t", "\\t")
+    return '"%s"' % out
+
+
+def str_list(items):
+    return "[%s]" % ", ".join(toml_str(s) for s in items)
+
+
+NETWORKS = {
+    "ndr400": ("IB-NDR400", 0.9, 48.0, 2.2, 0.55, 0.012, 8192),
+    "hdr200": ("IB-HDR200", 1.1, 24.0, 2.6, 0.55, 0.02, 8192),
+    "hdr100": ("IB-HDR100", 1.2, 12.0, 2.8, 0.55, 0.03, 8192),
+}
+
+POWER = {
+    "a100": (55.0, 400.0, 1410.0, 210.0, 4.0),
+    "gh200": (75.0, 700.0, 1980.0, 345.0, 6.0),
+}
+
+# (name, version, gpu, nodes, gpus/node, cores/node, partitions,
+#  network preset, power preset, stream_eff, noise_sigma, perf_factor)
+MACHINES = [
+    ("jedi", "2026.1", "gh200", 48, 4, 288, ["all", "devel"],
+     "ndr400", "gh200", 0.855, 0.006, 3.35),
+    ("jupiter", "2026.1", "gh200", 5888, 4, 288, ["booster", "devel", "all"],
+     "ndr400", "gh200", 0.855, 0.006, 3.35),
+    ("juwels-booster", "2024.3", "ampere", 936, 4, 96,
+     ["booster", "develbooster"], "hdr200", "a100", 0.87, 0.008, 1.0),
+    ("jureca", "2024.3", "ampere", 192, 4, 128,
+     ["dc-gpu", "dc-gpu-devel", "all"], "hdr100", "a100", 0.86, 0.010, 0.97),
+]
+
+
+def render_engines():
+    out = ["# Engines: labelled harness commands "
+           "(generated from the built-in set).\n"]
+    out.append(
+        "\n[[engine]]\nname = %s\ncommand = %s\ndescription = %s\n"
+        % (
+            toml_str("simapp"),
+            toml_str("simapp"),
+            toml_str("parameterised scalable application (workloads::scalable)"),
+        )
+    )
+    return "".join(out)
+
+
+def render_apps(apps):
+    out = [
+        "# The JUREAP-like 72-app portfolio as data. App order is semantic:\n"
+        "# it drives machine assignment and the seeded daily shuffle, so\n"
+        "# this file lists apps in exactly the built-in portfolio order.\n"
+    ]
+    for a in apps:
+        out.append(
+            "\n[[app]]\nname = %s\ndomain = %s\nmaturity = %s\n"
+            "engine = %s\nnodes = %d\n\n"
+            "[app.parameters]\ngflops_total = %s\nserial_frac = %s\n"
+            "mem_bound = %s\ncomm_mb = %s\nsteps = %d\nweak = false\n\n"
+            "[app.behavior]\nfailure_rate = %s\n\n"
+            "[app.metrics]\nprimary = %s\nrecord = %s\n"
+            % (
+                toml_str(a["name"]),
+                toml_str(a["domain"]),
+                toml_str(a["maturity"]),
+                toml_str("simapp"),
+                a["nodes"],
+                fmt_f64(a["gflops_total"]),
+                fmt_f64(a["serial_frac"]),
+                fmt_f64(a["mem_bound"]),
+                fmt_f64(a["comm_mb"]),
+                a["steps"],
+                fmt_f64(a["failure_rate"]),
+                toml_str("tts"),
+                str_list(["tts", "gflops_rate"]),
+            )
+        )
+    return "".join(out)
+
+
+def render_machines():
+    out = [
+        "# The four standard JSC-like systems with full network and power\n"
+        '# fingerprints (presets like network = "ndr400" also work).\n'
+    ]
+    for (name, version, gpu, nodes, gpn, cpn, parts,
+         net, pwr, se, ns, pf) in MACHINES:
+        nname, lat, bw, hs, ebf, ekb, thresh = NETWORKS[net]
+        idle, tdp, nom, mn, snw = POWER[pwr]
+        out.append(
+            "\n[[machine]]\nname = %s\nversion = %s\ngpu = %s\n"
+            "nodes = %d\ngpus_per_node = %d\ncores_per_node = %d\n"
+            "partitions = %s\nstream_efficiency = %s\nnoise_sigma = %s\n"
+            "perf_factor = %s\n\n"
+            "[machine.network]\nname = %s\nlatency_us = %s\nbw_gbs = %s\n"
+            "rndv_handshake_us = %s\neager_bw_fraction = %s\n"
+            "eager_per_kb_us = %s\ndefault_rndv_thresh = %d\n\n"
+            "[machine.power]\nidle_w = %s\ntdp_w = %s\nnominal_mhz = %s\n"
+            "min_mhz = %s\nsensor_noise_w = %s\n"
+            % (
+                toml_str(name), toml_str(version), toml_str(gpu),
+                nodes, gpn, cpn,
+                str_list(parts), fmt_f64(se), fmt_f64(ns), fmt_f64(pf),
+                toml_str(nname), fmt_f64(lat), fmt_f64(bw),
+                fmt_f64(hs), fmt_f64(ebf), fmt_f64(ekb), thresh,
+                fmt_f64(idle), fmt_f64(tdp), fmt_f64(nom),
+                fmt_f64(mn), fmt_f64(snw),
+            )
+        )
+    return "".join(out)
+
+
+def main():
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    out_dir = os.path.join(root, "benchmarks")
+    os.makedirs(out_dir, exist_ok=True)
+    apps = generate(72, 20260101)
+    files = {
+        "engines.toml": render_engines(),
+        "jureap.toml": render_apps(apps),
+        "machines.toml": render_machines(),
+    }
+    for name, contents in sorted(files.items()):
+        path = os.path.join(out_dir, name)
+        with open(path, "w") as f:
+            f.write(contents)
+        print("wrote %s (%d bytes)" % (path, len(contents)))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
